@@ -1,0 +1,60 @@
+//! Shared helpers for the paper-reproduction bench harness.
+//! Each bench target is `harness = false` and prints the rows/series of
+//! one paper table or figure (see DESIGN.md §5 for the index).
+
+#![allow(dead_code)]
+
+use optfuse::data::image_batch;
+use optfuse::exec::{ExecConfig, Executor};
+use optfuse::graph::{Graph, ScheduleKind};
+use optfuse::memsim::{self, spec::NetSpec, spec::OptSpec, Machine};
+use optfuse::optim::{self, Hyper};
+use optfuse::train::{self, RunReport};
+use optfuse::util::XorShiftRng;
+
+pub fn header(title: &str, paper_says: &str) {
+    println!("\n==================================================================");
+    println!("{title}");
+    println!("paper reference: {paper_says}");
+    println!("==================================================================");
+}
+
+/// Measured wallclock run of a small real model on this host.
+pub fn measure(
+    build: fn(u64) -> Graph,
+    kind: ScheduleKind,
+    opt: &str,
+    batch: usize,
+    steps: usize,
+    threads: usize,
+) -> RunReport {
+    let mut ex = Executor::new(
+        build(42),
+        optim::by_name(opt).unwrap(),
+        Hyper { lr: 1e-3, ..Hyper::default() },
+        ExecConfig { schedule: kind, threads, race_guard: true, ..Default::default() },
+    )
+    .unwrap();
+    let mut rng = XorShiftRng::new(9);
+    train::run(&mut ex, steps, 2, |_| image_batch(batch, 3, 16, 16, 10, &mut rng))
+}
+
+/// Simulated speedups (FF, BF) of `net` at `batch` on `machine`.
+pub fn sim_speedups(m: &Machine, net: &NetSpec, opt: &OptSpec, batch: usize) -> (f64, f64, f64) {
+    let base = memsim::simulate(m, net, opt, batch, ScheduleKind::Baseline);
+    let ff = memsim::simulate(m, net, opt, batch, ScheduleKind::ForwardFusion);
+    let bf = memsim::simulate(m, net, opt, batch, ScheduleKind::BackwardFusion);
+    (base.total_s, base.total_s / ff.total_s, base.total_s / bf.total_s)
+}
+
+/// Render a simple ASCII series for figure-style output.
+pub fn ascii_series(label: &str, xs: &[f64], ys: &[f64]) {
+    let ymax = ys.iter().cloned().fold(f64::MIN, f64::max);
+    let ymin = ys.iter().cloned().fold(f64::MAX, f64::min).min(1.0);
+    println!("  {label}:");
+    for (x, y) in xs.iter().zip(ys.iter()) {
+        let frac = if ymax > ymin { (y - ymin) / (ymax - ymin) } else { 0.0 };
+        let bar = "#".repeat(1 + (frac * 40.0) as usize);
+        println!("    x={x:>8.1}  y={y:>7.3}  {bar}");
+    }
+}

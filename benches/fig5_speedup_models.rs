@@ -1,0 +1,62 @@
+//! Fig. 5: training speedup vs mini-batch size across benchmarks
+//! (MobileNetV2, DenseNet121, ResNet, VGG19_BN, ...).
+//!
+//! Paper claims encoded as assertions:
+//!  * speedup decreases as mini-batch grows (relative saving shrinks);
+//!  * FF and BF converge at large batch;
+//!  * MobileNetV2 speeds up most, VGG19_BN barely at all.
+
+#[path = "common.rs"]
+mod common;
+
+use optfuse::memsim::{machines, spec::OptSpec, zoo};
+
+fn main() {
+    common::header(
+        "Fig. 5 — speedup vs mini-batch size, per model",
+        "speedup decays with batch; FF/BF converge at large batch; MobileNetV2 best, VGG19_BN ≈1",
+    );
+
+    let m = machines::titan_xp();
+    let opt = OptSpec::adam();
+    let batches = [16usize, 32, 64, 128, 256];
+
+    let mut mob_curve = Vec::new();
+    let mut vgg_curve = Vec::new();
+    for net in zoo::fig5_models() {
+        println!("\n{} ({:.1}M params):", net.name, net.total_params() as f64 / 1e6);
+        println!("  batch      FF speedup   BF speedup");
+        let mut prev_bf = f64::MAX;
+        for &b in &batches {
+            let (_, ff, bf) = common::sim_speedups(&m, &net, &opt, b);
+            println!("  {b:>5}      {ff:>8.3}     {bf:>8.3}");
+            assert!(
+                bf <= prev_bf + 0.02,
+                "{}: speedup must not grow with batch ({bf:.3} after {prev_bf:.3})",
+                net.name
+            );
+            prev_bf = bf;
+            if net.name == "mobilenet_v2" {
+                mob_curve.push(bf);
+            }
+            if net.name == "vgg19_bn" {
+                vgg_curve.push(bf);
+            }
+            if b == 256 {
+                assert!(
+                    (ff - bf).abs() < 0.06,
+                    "{}: FF and BF converge at large batch ({ff:.3} vs {bf:.3})",
+                    net.name
+                );
+            }
+        }
+    }
+
+    println!("\ncross-model check at bs=32:");
+    let mob = mob_curve[1];
+    let vgg = vgg_curve[1];
+    println!("  mobilenet_v2 BF x{mob:.3}  vs  vgg19_bn BF x{vgg:.3}");
+    assert!(mob > vgg, "MobileNetV2 must benefit more than VGG19_BN");
+    assert!(vgg < 1.06, "VGG19_BN is 'hardly accelerated' (paper Fig. 6)");
+    println!("\nFig. 5 reproduced (shape) ✓");
+}

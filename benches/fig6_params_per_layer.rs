@@ -1,0 +1,60 @@
+//! Fig. 6: speedup trend vs average parameters per layer, mini-batch 32.
+//!
+//! Paper claim: fewer parameters per layer → more locality to exploit →
+//! higher speedup (MobileNetV2 at one end, VGG19_BN at the other).
+
+#[path = "common.rs"]
+mod common;
+
+use optfuse::graph::ScheduleKind;
+use optfuse::memsim::{machines, spec::OptSpec, zoo};
+use optfuse::models;
+
+fn main() {
+    common::header(
+        "Fig. 6 — speedup vs avg params/layer (bs=32)",
+        "fewer params per layer ⇒ higher speedup; VGG19_BN ≈ 1, MobileNetV2 highest",
+    );
+
+    let m = machines::titan_xp();
+    let opt = OptSpec::adam();
+
+    println!("\nsimulated (memsim, TITAN Xp, BF):");
+    println!("  model            avg params/layer     BF speedup");
+    let mut pts: Vec<(f64, f64, String)> = Vec::new();
+    for net in zoo::fig5_models() {
+        let (_, _, bf) = common::sim_speedups(&m, &net, &opt, 32);
+        println!(
+            "  {:<16} {:>14.0}       {bf:>8.3}",
+            net.name,
+            net.avg_params_per_layer()
+        );
+        pts.push((net.avg_params_per_layer(), bf, net.name.clone()));
+    }
+    // trend: the sparsest-layer model must beat the densest by a clear margin
+    pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let (first, last) = (&pts[0], &pts[pts.len() - 1]);
+    println!(
+        "\n  {} ({:.0}/layer) x{:.3}  >  {} ({:.0}/layer) x{:.3}",
+        first.2, first.0, first.1, last.2, last.0, last.1
+    );
+    assert!(first.1 > last.1 + 0.05, "Fig. 6 trend must hold");
+
+    // measured: small real models on this host (ordering of measured
+    // optimizer-stage share follows the same params/layer trend)
+    println!("\nmeasured on this host (optimizer-stage share of iteration, baseline, bs=4):");
+    println!("  model              params/layer   opt share");
+    for (name, build) in [
+        ("mobilenet_v2_ish", models::mobilenet_v2_ish as fn(u64) -> optfuse::graph::Graph),
+        ("densenet_ish", models::densenet_ish),
+        ("resnet_ish", models::resnet_ish),
+        ("vgg_ish", models::vgg_ish),
+    ] {
+        let g = build(1);
+        let ppl = g.avg_params_per_layer();
+        let r = common::measure(build, ScheduleKind::Baseline, "adam", 4, 6, 0);
+        let (_, _, o) = r.breakdown_ms();
+        println!("  {name:<18} {ppl:>10.0}   {:>6.2}%", 100.0 * o / r.iter_ms());
+    }
+    println!("\nFig. 6 reproduced (shape) ✓");
+}

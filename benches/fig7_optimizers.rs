@@ -1,0 +1,56 @@
+//! Fig. 7: speedup vs the optimizer's share of iteration runtime, across
+//! optimizers (SGD … Adadelta) on MobileNetV2, bs=32.
+//!
+//! Paper claim: the more runtime-costly the optimizer, the higher the
+//! speedup (increasing trend in the ratio→speedup scatter).
+
+#[path = "common.rs"]
+mod common;
+
+use optfuse::graph::ScheduleKind;
+use optfuse::memsim::{self, machines, spec::OptSpec, zoo};
+use optfuse::models;
+
+fn main() {
+    common::header(
+        "Fig. 7 — speedup vs optimizer-runtime ratio (MobileNetV2 bs=32)",
+        "increasing trend: costlier optimizers benefit more; weight decay everywhere",
+    );
+
+    let m = machines::titan_xp();
+    let net = zoo::mobilenet_v2();
+
+    println!("\nsimulated (memsim, TITAN Xp):");
+    println!("  optimizer       opt/iter ratio    FF speedup   BF speedup");
+    let mut pts = Vec::new();
+    for name in OptSpec::ALL {
+        let opt = OptSpec::by_name(name).unwrap();
+        let base = memsim::simulate(&m, &net, &opt, 32, optfuse::graph::ScheduleKind::Baseline);
+        let ratio = base.optimizer_s / base.total_s;
+        let (_, ff, bf) = common::sim_speedups(&m, &net, &opt, 32);
+        println!("  {name:<14} {:>10.1}%     {ff:>8.3}     {bf:>8.3}", ratio * 100.0);
+        pts.push((ratio, bf));
+    }
+    // monotone-ish trend: Spearman-style check on (ratio, speedup)
+    pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let increasing = pts.windows(2).filter(|w| w[1].1 >= w[0].1 - 0.01).count();
+    println!(
+        "\n  trend: {increasing}/{} adjacent pairs non-decreasing (ratio ↑ ⇒ speedup ↑)",
+        pts.len() - 1
+    );
+    assert!(increasing >= pts.len() - 2, "Fig. 7 trend must hold");
+    assert!(
+        pts.last().unwrap().1 > pts.first().unwrap().1,
+        "costliest optimizer must gain most"
+    );
+
+    // measured: optimizer-stage cost ratio on this host in the
+    // parameter-heavy regime (wide_mlp, bs=2) — the measurable analogue
+    println!("\nmeasured on this host (wide_mlp bs=2, baseline opt-stage share):");
+    for name in ["sgd", "sgd_momentum", "adagrad", "rmsprop", "adam", "adamw", "adadelta"] {
+        let r = common::measure(models::wide_mlp, ScheduleKind::Baseline, name, 2, 8, 0);
+        let (_, _, o) = r.breakdown_ms();
+        println!("  {name:<14} opt {o:>6.2} ms  ({:>5.1}% of iter)", 100.0 * o / r.iter_ms());
+    }
+    println!("\nFig. 7 reproduced (shape) ✓");
+}

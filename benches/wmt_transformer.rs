@@ -1,0 +1,85 @@
+//! §C.4 (text): Transformer (base) on WMT En-De, mini-batch 256:
+//! forward-fusion 1.030×, backward-fusion 1.019×.
+//!
+//! Big batch + huge layers ⇒ tiny speedups, the other extreme from
+//! MobileNetV2 — the interesting part is reproducing *how small* the
+//! gain is.
+
+#[path = "common.rs"]
+mod common;
+
+use optfuse::exec::{ExecConfig, Executor};
+use optfuse::graph::ScheduleKind;
+use optfuse::memsim::{machines, spec::OptSpec, zoo};
+use optfuse::models::transformer::{token_batch, transformer_lm};
+use optfuse::models::TransformerCfg;
+use optfuse::optim::{AdamW, Hyper};
+use optfuse::util::XorShiftRng;
+
+fn main() {
+    common::header(
+        "§C.4 — Transformer base, WMT En-De, bs=256",
+        "FF 1.030x, BF 1.019x (small but real)",
+    );
+
+    let m = machines::titan_xp();
+    let net = zoo::transformer_base();
+    let opt = OptSpec::adam();
+    println!(
+        "\nsimulated (memsim, TITAN Xp, {:.0}M params):",
+        net.total_params() as f64 / 1e6
+    );
+    // bs=256 sentences ≈ 256*~27 tokens; our per-item unit is one token,
+    // so sweep the token-batch around the paper's effective size.
+    println!("  token-batch    FF speedup   BF speedup");
+    let mut at_paper_scale = (0.0, 0.0);
+    for &b in &[1024usize, 4096, 8192] {
+        let (_, ff, bf) = common::sim_speedups(&m, &net, &opt, b);
+        println!("  {b:>9}      {ff:>8.3}     {bf:>8.3}");
+        if b == 8192 {
+            at_paper_scale = (ff, bf);
+        }
+    }
+    let (ff, bf) = at_paper_scale;
+    assert!(ff > 1.0 && ff < 1.08, "FF small-but-positive: {ff:.3}");
+    assert!(bf > 1.0 && bf < 1.08, "BF small-but-positive: {bf:.3}");
+    println!(
+        "\n  at the paper's effective batch: FF x{ff:.3}, BF x{bf:.3} (paper: 1.030 / 1.019) — \
+         same 'few-percent' regime ✓"
+    );
+
+    // measured: the real small transformer trains identically under all
+    // schedules; report wallclock for the record
+    println!("\nmeasured on this host (transformer small, bs=4, 5 steps):");
+    let cfg = TransformerCfg { layers: 2, seq: 32, ..TransformerCfg::small() };
+    let corpus: Vec<u8> = (0..4096u32).map(|i| (i * 37 % 251) as u8).collect();
+    let mut base_losses = Vec::new();
+    for kind in ScheduleKind::ALL {
+        let mut ex = Executor::new(
+            transformer_lm(&cfg, 11),
+            Box::new(AdamW),
+            Hyper::default(),
+            ExecConfig { schedule: kind, threads: 0, race_guard: true, ..Default::default() },
+        )
+        .unwrap();
+        let mut rng = XorShiftRng::new(6);
+        let t0 = std::time::Instant::now();
+        let mut losses = Vec::new();
+        for _ in 0..5 {
+            let b = token_batch(&cfg, 4, &corpus, &mut rng);
+            losses.push(ex.train_step(&b).loss);
+        }
+        println!(
+            "  {:<16} {:.2} ms/iter  final loss {:.4}",
+            kind.label(),
+            t0.elapsed().as_secs_f64() * 1e3 / 5.0,
+            losses.last().unwrap()
+        );
+        if kind == ScheduleKind::Baseline {
+            base_losses = losses;
+        } else {
+            assert_eq!(losses, base_losses, "schedules must agree");
+        }
+    }
+    println!("\n§C.4 reproduced (shape) ✓");
+}

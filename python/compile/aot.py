@@ -1,0 +1,72 @@
+"""AOT lowering: jax -> HLO *text* artifacts + manifest.json.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the rust `xla`
+crate's XLA (xla_extension 0.5.1) rejects; the text parser reassigns ids
+and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .manifest_spec import ENTRIES, example_args
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side always unwraps a tuple, even for single outputs)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(name: str) -> tuple[str, int]:
+    """Lower one manifest entry; returns (hlo_text, n_outputs)."""
+    fn, specs = ENTRIES[name]
+    args = example_args(specs)
+    lowered = jax.jit(fn).lower(*args)
+    n_out = len(jax.eval_shape(fn, *args))
+    return to_hlo_text(lowered), n_out
+
+
+def build(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": 1, "artifacts": []}
+    for name in sorted(ENTRIES):
+        _, specs = ENTRIES[name]
+        text, n_out = lower_entry(name)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": [list(shape) for _, shape in specs],
+                "outputs": n_out,
+            }
+        )
+        print(f"lowered {name}: {len(text)} chars, {n_out} outputs")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    m = build(args.out)
+    print(f"wrote {len(m['artifacts'])} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Pallas L1 kernels (interpret mode) + pure-jnp oracles."""
+from . import ref  # noqa: F401
+from .fused_matmul import bwd_matmul_sgd, fwd_update_matmul  # noqa: F401
+from .fused_update import (  # noqa: F401
+    adagrad_update,
+    adamw_update,
+    rmsprop_update,
+    sgd_update,
+    sgdm_update,
+)

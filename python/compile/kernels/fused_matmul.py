@@ -1,0 +1,126 @@
+"""L1 Pallas kernels: optimizer updates fused with adjacent matmuls —
+the paper's two schedule rewrites expressed at kernel granularity.
+
+* `bwd_matmul_sgd` (backward-fusion, Fig. 1d): one kernel computes the
+  layer's input gradient dX = dY·Wᵀ, the weight gradient dW = Xᵀ·dY, and
+  applies the SGD update to W — dW never round-trips to HBM, and the
+  kernel reads W exactly once, *before* overwriting it (the §B.2 race
+  rule enforced by construction inside one kernel).
+
+* `fwd_update_matmul` (forward-fusion, Fig. 1c): one kernel applies the
+  pending momentum update to W and immediately uses the fresh tile for
+  the next forward matmul — the update's write merges with the forward's
+  read while the tile is still in VMEM (the purple frame of Fig. 2).
+
+TPU adaptation: the grid walks N-tiles of W; each step holds one
+(K × block_n) W-tile plus the full X in VMEM and drives the MXU with the
+f32 matmul. For the default block_n=128 and K≤512, VMEM per step is
+K·128·4·(#operands) ≈ 1 MiB — double-bufferable under the 16 MiB budget.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fused_update import INTERPRET, _block
+
+
+# ----------------------------------------------------------------------
+# backward-fusion kernel
+# ----------------------------------------------------------------------
+
+def _bwd_kernel(x_ref, dy_ref, w_ref, dx_ref, w_out, *, lr, wd):
+    j = pl.program_id(0)
+    # dX accumulates over N-tiles; initialize on the first tile.
+    @pl.when(j == 0)
+    def _init():
+        dx_ref[...] = jnp.zeros_like(dx_ref)
+
+    dy = dy_ref[...]          # [M, bn]
+    w = w_ref[...]            # [K, bn]  — read BEFORE the in-place update
+    dx_ref[...] += dy @ w.T   # [M, K]
+    dw = x_ref[...].T @ dy    # [K, bn]; stays in VMEM
+    w_out[...] = w - lr * (dw + wd * w)
+
+
+def bwd_matmul_sgd(x, dy, w, *, lr, wd):
+    """Fused backward + SGD for y = x@w. Returns (dx, w').
+
+    x: [M, K], dy: [M, N], w: [K, N].
+    """
+    m, k = x.shape
+    _, n = dy.shape
+    bn = _block(n)
+    grid = (n // bn,)
+    return pl.pallas_call(
+        functools.partial(_bwd_kernel, lr=lr, wd=wd),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, k), lambda j: (0, 0)),   # X: whole, resident
+            pl.BlockSpec((m, bn), lambda j: (0, j)),  # dY tile
+            pl.BlockSpec((k, bn), lambda j: (0, j)),  # W tile
+        ],
+        out_specs=[
+            pl.BlockSpec((m, k), lambda j: (0, 0)),   # dX accumulator
+            pl.BlockSpec((k, bn), lambda j: (0, j)),  # W' tile
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), x.dtype),
+            jax.ShapeDtypeStruct((k, n), w.dtype),
+        ],
+        interpret=INTERPRET,
+    )(x, dy, w)
+
+
+# ----------------------------------------------------------------------
+# forward-fusion kernel
+# ----------------------------------------------------------------------
+
+def _fwd_kernel(x_ref, w_ref, g_ref, m_ref, y_ref, w_out, g_out, m_out,
+                *, lr, mu, wd):
+    w = w_ref[...]
+    g = g_ref[...] + wd * w
+    m2 = mu * m_ref[...] + g
+    w2 = w - lr * m2
+    w_out[...] = w2
+    g_out[...] = jnp.zeros_like(g_ref[...])
+    m_out[...] = m2
+    # forward consumes the freshly-updated tile while it is in VMEM
+    y_ref[...] = x_ref[...] @ w2
+
+
+def fwd_update_matmul(x, w, grad, m, *, lr, mu, wd):
+    """Fused lazy update + forward matmul for y = x@w'.
+
+    x: [M, K]; w, grad, m: [K, N]. Returns (y, w', grad'=0, m').
+    """
+    mm, k = x.shape
+    _, n = w.shape
+    bn = _block(n)
+    grid = (n // bn,)
+    wspec = pl.BlockSpec((k, bn), lambda j: (0, j))
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, lr=lr, mu=mu, wd=wd),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((mm, k), lambda j: (0, 0)),
+            wspec,
+            wspec,
+            wspec,
+        ],
+        out_specs=[
+            pl.BlockSpec((mm, bn), lambda j: (0, j)),
+            wspec,
+            wspec,
+            wspec,
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mm, n), x.dtype),
+            jax.ShapeDtypeStruct((k, n), w.dtype),
+            jax.ShapeDtypeStruct((k, n), grad.dtype),
+            jax.ShapeDtypeStruct((k, n), m.dtype),
+        ],
+        interpret=INTERPRET,
+    )(x, w, grad, m)

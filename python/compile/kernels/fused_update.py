@@ -1,0 +1,197 @@
+"""L1 Pallas kernels: fused optimizer updates.
+
+The paper's eager baseline launches one elementwise kernel per primitive
+op of the update rule (PyTorch-style), re-streaming every operand from
+HBM each time. These kernels are the single-pass fused form the fusion
+schedules rely on: each operand tile is read once into VMEM, the whole
+update happens on-chip, and each operand is written once.
+
+TPU adaptation (DESIGN.md §3): the GPU cache-line locality argument
+becomes VMEM residency — BlockSpec tiles θ/g/m/v so one (block_r × block_c)
+tile of each operand is resident per grid step. VMEM footprint per step is
+`slots × block_r × block_c × 4` bytes; with the default 128×128 f32 blocks
+that is 256 KiB for AdamW (4 operands) — far under the ~16 MiB budget,
+leaving room for double-buffering.
+
+All kernels run with interpret=True: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute (see /opt/xla-example).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+def _block(dim, pref=128):
+    """Largest divisor of `dim` that is <= pref (keeps grids exact)."""
+    b = min(dim, pref)
+    while dim % b:
+        b -= 1
+    return b
+
+
+def _grid_2d(shape, pref=128):
+    r, c = shape
+    br, bc = _block(r, pref), _block(c, pref)
+    return (r // br, c // bc), (br, bc)
+
+
+def _tile_spec(br, bc):
+    return pl.BlockSpec((br, bc), lambda i, j: (i, j))
+
+
+# ----------------------------------------------------------------------
+# SGD
+# ----------------------------------------------------------------------
+
+def _sgd_kernel(t_ref, g_ref, t_out, g_out, *, lr, wd):
+    g = g_ref[...] + wd * t_ref[...]
+    t_out[...] = t_ref[...] - lr * g
+    g_out[...] = jnp.zeros_like(g_ref[...])
+
+
+def sgd_update(theta, grad, *, lr, wd):
+    """Single-pass fused SGD: returns (theta', grad'=0)."""
+    (gr, gc), (br, bc) = _grid_2d(theta.shape)
+    spec = _tile_spec(br, bc)
+    return pl.pallas_call(
+        functools.partial(_sgd_kernel, lr=lr, wd=wd),
+        grid=(gr, gc),
+        in_specs=[spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct(theta.shape, theta.dtype),
+            jax.ShapeDtypeStruct(grad.shape, grad.dtype),
+        ],
+        interpret=INTERPRET,
+    )(theta, grad)
+
+
+# ----------------------------------------------------------------------
+# SGD + momentum
+# ----------------------------------------------------------------------
+
+def _sgdm_kernel(t_ref, g_ref, m_ref, t_out, g_out, m_out, *, lr, mu, wd):
+    g = g_ref[...] + wd * t_ref[...]
+    m2 = mu * m_ref[...] + g
+    t_out[...] = t_ref[...] - lr * m2
+    g_out[...] = jnp.zeros_like(g_ref[...])
+    m_out[...] = m2
+
+
+def sgdm_update(theta, grad, m, *, lr, mu, wd):
+    """Fused heavy-ball momentum: returns (theta', grad'=0, m')."""
+    (gr, gc), (br, bc) = _grid_2d(theta.shape)
+    spec = _tile_spec(br, bc)
+    out = jax.ShapeDtypeStruct(theta.shape, theta.dtype)
+    return pl.pallas_call(
+        functools.partial(_sgdm_kernel, lr=lr, mu=mu, wd=wd),
+        grid=(gr, gc),
+        in_specs=[spec] * 3,
+        out_specs=[spec] * 3,
+        out_shape=[out, out, out],
+        interpret=INTERPRET,
+    )(theta, grad, m)
+
+
+# ----------------------------------------------------------------------
+# AdamW (decoupled weight decay); step is a runtime scalar for bias
+# correction.
+# ----------------------------------------------------------------------
+
+def _adamw_kernel(step_ref, t_ref, g_ref, m_ref, v_ref,
+                  t_out, g_out, m_out, v_out, *, lr, b1, b2, eps, wd):
+    step = step_ref[0, 0]
+    g = g_ref[...]
+    t = t_ref[...] * (1.0 - lr * wd)
+    m2 = b1 * m_ref[...] + (1.0 - b1) * g
+    v2 = b2 * v_ref[...] + (1.0 - b2) * g * g
+    bc1 = 1.0 - b1 ** step
+    bc2 = 1.0 - b2 ** step
+    mhat = m2 / bc1
+    vhat = v2 / bc2
+    t_out[...] = t - lr * mhat / (jnp.sqrt(vhat) + eps)
+    g_out[...] = jnp.zeros_like(g)
+    m_out[...] = m2
+    v_out[...] = v2
+
+
+def adamw_update(theta, grad, m, v, step, *, lr, b1, b2, eps, wd):
+    """Fused AdamW. `step` is a float32 scalar array (1-based).
+
+    Returns (theta', grad'=0, m', v'). One read + one write per operand —
+    vs. ~10 kernel launches and ~2.5× the traffic for the unfused eager
+    form (see memsim::spec::OptSpec::adamw).
+    """
+    (gr, gc), (br, bc) = _grid_2d(theta.shape)
+    spec = _tile_spec(br, bc)
+    # the step scalar is broadcast to every grid cell (SMEM-style operand)
+    sspec = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    out = jax.ShapeDtypeStruct(theta.shape, theta.dtype)
+    step_arr = jnp.asarray(step, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        functools.partial(_adamw_kernel, lr=lr, b1=b1, b2=b2, eps=eps, wd=wd),
+        grid=(gr, gc),
+        in_specs=[sspec] + [spec] * 4,
+        out_specs=[spec] * 4,
+        out_shape=[out, out, out, out],
+        interpret=INTERPRET,
+    )(step_arr, theta, grad, m, v)
+
+
+# ----------------------------------------------------------------------
+# Adagrad (Duchi et al. 2011)
+# ----------------------------------------------------------------------
+
+def _adagrad_kernel(t_ref, g_ref, h_ref, t_out, g_out, h_out, *, lr, eps, wd):
+    g = g_ref[...] + wd * t_ref[...]
+    h2 = h_ref[...] + g * g
+    t_out[...] = t_ref[...] - lr * g / (jnp.sqrt(h2) + eps)
+    g_out[...] = jnp.zeros_like(g_ref[...])
+    h_out[...] = h2
+
+
+def adagrad_update(theta, grad, h, *, lr, eps, wd):
+    """Fused Adagrad: returns (theta', grad'=0, h')."""
+    (gr, gc), (br, bc) = _grid_2d(theta.shape)
+    spec = _tile_spec(br, bc)
+    out = jax.ShapeDtypeStruct(theta.shape, theta.dtype)
+    return pl.pallas_call(
+        functools.partial(_adagrad_kernel, lr=lr, eps=eps, wd=wd),
+        grid=(gr, gc),
+        in_specs=[spec] * 3,
+        out_specs=[spec] * 3,
+        out_shape=[out, out, out],
+        interpret=INTERPRET,
+    )(theta, grad, h)
+
+
+# ----------------------------------------------------------------------
+# RMSprop
+# ----------------------------------------------------------------------
+
+def _rmsprop_kernel(t_ref, g_ref, v_ref, t_out, g_out, v_out, *, lr, rho, eps, wd):
+    g = g_ref[...] + wd * t_ref[...]
+    v2 = rho * v_ref[...] + (1.0 - rho) * g * g
+    t_out[...] = t_ref[...] - lr * g / (jnp.sqrt(v2) + eps)
+    g_out[...] = jnp.zeros_like(g_ref[...])
+    v_out[...] = v2
+
+
+def rmsprop_update(theta, grad, v, *, lr, rho, eps, wd):
+    """Fused RMSprop: returns (theta', grad'=0, v')."""
+    (gr, gc), (br, bc) = _grid_2d(theta.shape)
+    spec = _tile_spec(br, bc)
+    out = jax.ShapeDtypeStruct(theta.shape, theta.dtype)
+    return pl.pallas_call(
+        functools.partial(_rmsprop_kernel, lr=lr, rho=rho, eps=eps, wd=wd),
+        grid=(gr, gc),
+        in_specs=[spec] * 3,
+        out_specs=[spec] * 3,
+        out_shape=[out, out, out],
+        interpret=INTERPRET,
+    )(theta, grad, v)

@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These define the *semantics* the kernels must match (up to fp tolerance).
+pytest sweeps shapes/dtypes with hypothesis and asserts allclose(kernel, ref).
+"""
+
+import jax.numpy as jnp
+
+
+def sgd_ref(theta, grad, lr, wd):
+    """Plain SGD with (coupled) weight decay; returns (theta', grad'=0)."""
+    g = grad + wd * theta
+    return theta - lr * g, jnp.zeros_like(grad)
+
+
+def sgdm_ref(theta, grad, m, lr, mu, wd):
+    """Heavy-ball momentum: m' = mu*m + (g + wd*theta); theta' = theta - lr*m'."""
+    g = grad + wd * theta
+    m2 = mu * m + g
+    return theta - lr * m2, jnp.zeros_like(grad), m2
+
+
+def adamw_ref(theta, grad, m, v, step, lr, b1, b2, eps, wd):
+    """Decoupled-weight-decay Adam (Loshchilov & Hutter).
+
+    step is the 1-based iteration index used for bias correction.
+    Returns (theta', grad'=0, m', v').
+    """
+    theta = theta * (1.0 - lr * wd)
+    m2 = b1 * m + (1.0 - b1) * grad
+    v2 = b2 * v + (1.0 - b2) * grad * grad
+    mhat = m2 / (1.0 - b1**step)
+    vhat = v2 / (1.0 - b2**step)
+    theta2 = theta - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return theta2, jnp.zeros_like(grad), m2, v2
+
+
+def bwd_matmul_sgd_ref(x, dy, w, lr, wd):
+    """Backward-fusion hot spot: matmul backward + in-place SGD update.
+
+    Given the layer y = x @ w and upstream grad dy:
+      dx = dy @ w.T          (uses the OLD w — the §B.2 race rule)
+      dw = x.T @ dy
+      w' = w - lr*(dw + wd*w)
+    Returns (dx, w').
+    """
+    dx = dy @ w.T
+    dw = x.T @ dy
+    w2 = w - lr * (dw + wd * w)
+    return dx, w2
+
+
+def fwd_update_matmul_ref(x, w, grad, m, lr, mu, wd):
+    """Forward-fusion hot spot: lazy SGD-momentum update of w fused with
+    the next forward matmul.
+
+      m' = mu*m + (grad + wd*w)
+      w' = w - lr*m'
+      y  = x @ w'              (forward uses the UPDATED weight)
+    Returns (y, w', grad'=0, m').
+    """
+    g = grad + wd * w
+    m2 = mu * m + g
+    w2 = w - lr * m2
+    y = x @ w2
+    return y, w2, jnp.zeros_like(grad), m2
+
+
+def adagrad_ref(theta, grad, h, lr, eps, wd):
+    """Adagrad: h' = h + g²; θ' = θ − lr·g/(√h' + eps)."""
+    g = grad + wd * theta
+    h2 = h + g * g
+    return theta - lr * g / (jnp.sqrt(h2) + eps), jnp.zeros_like(grad), h2
+
+
+def rmsprop_ref(theta, grad, v, lr, rho, eps, wd):
+    """RMSprop: v' = ρv + (1−ρ)g²; θ' = θ − lr·g/(√v' + eps)."""
+    g = grad + wd * theta
+    v2 = rho * v + (1.0 - rho) * g * g
+    return theta - lr * g / (jnp.sqrt(v2) + eps), jnp.zeros_like(grad), v2

@@ -1,0 +1,79 @@
+"""The artifact manifest: every HLO module the rust runtime can load,
+with its entry function and example input shapes. Shared between aot.py
+(which lowers them) and the pytest suite (which checks them).
+
+The shapes here must match what rust/src/runtime callers use — HLO
+artifacts are shape-specialized.
+"""
+
+import functools
+
+import jax.numpy as jnp
+
+from . import model
+
+
+def f32(*shape):
+    return ("f32", tuple(shape))
+
+
+#: name -> (callable, [input specs]); scalar step inputs are f32[] arrays.
+ENTRIES = {
+    # fused whole-train-step module (the L2 flagship)
+    "mlp_train_step_8x64x32x10": (
+        model.mlp_train_step,
+        [f32(8, 64), f32(8, 10), f32(64, 32), f32(32, 10)],
+    ),
+    # fused optimizer updates at the rust transformer's layer shapes
+    "adamw_update_64x64": (
+        model.adamw_entry,
+        [f32(64, 64), f32(64, 64), f32(64, 64), f32(64, 64), f32()],
+    ),
+    "adamw_update_128x512": (
+        model.adamw_entry,
+        [f32(128, 512), f32(128, 512), f32(128, 512), f32(128, 512), f32()],
+    ),
+    "sgdm_update_64x256": (
+        model.sgdm_entry,
+        [f32(64, 256), f32(64, 256), f32(64, 256)],
+    ),
+    "adagrad_update_64x256": (
+        model.adagrad_entry,
+        [f32(64, 256), f32(64, 256), f32(64, 256)],
+    ),
+    "rmsprop_update_64x256": (
+        model.rmsprop_entry,
+        [f32(64, 256), f32(64, 256), f32(64, 256)],
+    ),
+    # schedule-rewrite kernels fused with their adjacent matmuls
+    "bwd_matmul_sgd_32x64x128": (
+        model.bwd_fused_entry,
+        [f32(32, 64), f32(32, 128), f32(64, 128)],
+    ),
+    "fwd_update_matmul_32x64x128": (
+        model.fwd_fused_entry,
+        [f32(32, 64), f32(64, 128), f32(64, 128), f32(64, 128)],
+    ),
+    # transformer FFN block forward
+    "ffn_block_64x128": (
+        model.ffn_block,
+        [f32(64, 128), f32(128), f32(128), f32(128, 512), f32(512),
+         f32(512, 128), f32(128)],
+    ),
+}
+
+
+def example_args(specs):
+    """ShapeDtypeStructs for jax.jit(...).lower(*args)."""
+    import jax
+
+    out = []
+    for dtype, shape in specs:
+        assert dtype == "f32"
+        out.append(jax.ShapeDtypeStruct(shape, jnp.float32))
+    return out
+
+
+@functools.lru_cache(None)
+def entry_names():
+    return sorted(ENTRIES)

@@ -1,0 +1,94 @@
+"""L2: JAX compute graphs that call the L1 Pallas kernels.
+
+These are the computations that get AOT-lowered to HLO text and executed
+from the rust coordinator (build-time only — python never runs on the
+training hot path).
+
+The flagship entry point is `mlp_train_step`: a *whole fused training
+iteration* (forward → backward → fused optimizer update) of a 2-layer MLP
+as one XLA module, numerically identical to the rust engine's native
+baseline — the integration tests in rust/tests/ verify exactly that.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    adagrad_update,
+    adamw_update,
+    bwd_matmul_sgd,
+    fwd_update_matmul,
+    rmsprop_update,
+    sgd_update,
+    sgdm_update,
+)
+
+
+# ----------------------------------------------------------------------
+# Fused MLP train step (SGD, MSE loss) — matches the rust engine's
+# mlp/MseLoss semantics for the cross-validation test.
+# ----------------------------------------------------------------------
+
+def mlp_train_step(x, y, w1, w2, *, lr=0.05):
+    """One training iteration of  y_hat = relu(x@w1)@w2  under MSE loss.
+
+    Returns (loss, w1', w2'). Gradients via jax.grad; the parameter
+    updates run through the fused Pallas SGD kernel.
+    """
+
+    def loss_fn(params):
+        w1_, w2_ = params
+        h = jnp.maximum(x @ w1_, 0.0)
+        pred = h @ w2_
+        return jnp.mean((pred - y) ** 2)
+
+    loss, (g1, g2) = jax.value_and_grad(loss_fn)((w1, w2))
+    w1n, _ = sgd_update(w1, g1, lr=lr, wd=0.0)
+    w2n, _ = sgd_update(w2, g2, lr=lr, wd=0.0)
+    return loss.reshape(1), w1n, w2n
+
+
+# ----------------------------------------------------------------------
+# Transformer FFN block forward (LayerNorm -> Linear -> GELU -> Linear ->
+# residual): the L2 building block a serving-side runtime would call.
+# ----------------------------------------------------------------------
+
+def ffn_block(x, gamma, beta, w1, b1, w2, b2):
+    """Pre-LN feed-forward block, [tokens, d] -> [tokens, d]."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    h = (x - mu) / jnp.sqrt(var + 1e-5) * gamma + beta
+    h = h @ w1 + b1
+    h = 0.5 * h * (1.0 + jnp.tanh(0.7978845608 * (h + 0.044715 * h**3)))
+    h = h @ w2 + b2
+    return (x + h,)
+
+
+# ----------------------------------------------------------------------
+# Thin wrappers so AOT entries are plain shape-to-shape functions.
+# ----------------------------------------------------------------------
+
+def adamw_entry(theta, grad, m, v, step, *, lr=1e-3, b1=0.9, b2=0.999,
+                eps=1e-8, wd=1e-2):
+    return adamw_update(theta, grad, m, v, step, lr=lr, b1=b1, b2=b2,
+                        eps=eps, wd=wd)
+
+
+def sgdm_entry(theta, grad, m, *, lr=1e-3, mu=0.9, wd=1e-2):
+    return sgdm_update(theta, grad, m, lr=lr, mu=mu, wd=wd)
+
+
+def bwd_fused_entry(x, dy, w, *, lr=1e-2, wd=0.0):
+    return bwd_matmul_sgd(x, dy, w, lr=lr, wd=wd)
+
+
+def fwd_fused_entry(x, w, grad, m, *, lr=1e-2, mu=0.9, wd=0.0):
+    return fwd_update_matmul(x, w, grad, m, lr=lr, mu=mu, wd=wd)
+
+
+def adagrad_entry(theta, grad, h, *, lr=1e-2, eps=1e-8, wd=1e-2):
+    return adagrad_update(theta, grad, h, lr=lr, eps=eps, wd=wd)
+
+
+def rmsprop_entry(theta, grad, v, *, lr=1e-3, rho=0.9, eps=1e-8, wd=1e-2):
+    return rmsprop_update(theta, grad, v, lr=lr, rho=rho, eps=eps, wd=wd)

@@ -1,0 +1,143 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle, swept over
+shapes and hyper-parameters with hypothesis (DESIGN.md invariant 5)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    adamw_update,
+    bwd_matmul_sgd,
+    fwd_update_matmul,
+    ref,
+    sgd_update,
+    sgdm_update,
+)
+
+DIMS = st.sampled_from([1, 2, 3, 5, 8, 16, 17, 32, 64, 96, 128, 130, 256])
+SMALL = st.sampled_from([1, 2, 4, 8, 16, 24, 32])
+LR = st.sampled_from([1e-3, 1e-2, 0.1])
+WD = st.sampled_from([0.0, 1e-2, 0.1])
+
+
+def arr(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype("float32"))
+
+
+@settings(max_examples=25, deadline=None)
+@given(r=DIMS, c=DIMS, lr=LR, wd=WD, seed=st.integers(0, 2**16))
+def test_sgd_matches_ref(r, c, lr, wd, seed):
+    rng = np.random.default_rng(seed)
+    t, g = arr(rng, r, c), arr(rng, r, c)
+    got = sgd_update(t, g, lr=lr, wd=wd)
+    want = ref.sgd_ref(t, g, lr, wd)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(r=DIMS, c=DIMS, lr=LR, wd=WD, mu=st.sampled_from([0.0, 0.5, 0.9]),
+       seed=st.integers(0, 2**16))
+def test_sgdm_matches_ref(r, c, lr, wd, mu, seed):
+    rng = np.random.default_rng(seed)
+    t, g, m = arr(rng, r, c), arr(rng, r, c), arr(rng, r, c)
+    got = sgdm_update(t, g, m, lr=lr, mu=mu, wd=wd)
+    want = ref.sgdm_ref(t, g, m, lr, mu, wd)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(r=DIMS, c=DIMS, step=st.integers(1, 100), seed=st.integers(0, 2**16))
+def test_adamw_matches_ref(r, c, step, seed):
+    rng = np.random.default_rng(seed)
+    t, g = arr(rng, r, c), arr(rng, r, c)
+    m, v = arr(rng, r, c) * 0.1, jnp.abs(arr(rng, r, c)) * 0.1
+    kw = dict(lr=1e-3, b1=0.9, b2=0.999, eps=1e-8, wd=1e-2)
+    got = adamw_update(t, g, m, v, float(step), **kw)
+    want = ref.adamw_ref(t, g, m, v, float(step), *kw.values())
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=SMALL, k=SMALL, n=DIMS, lr=LR, wd=WD, seed=st.integers(0, 2**16))
+def test_bwd_matmul_sgd_matches_ref(m, k, n, lr, wd, seed):
+    rng = np.random.default_rng(seed)
+    x, dy, w = arr(rng, m, k), arr(rng, m, n), arr(rng, k, n)
+    dx, w2 = bwd_matmul_sgd(x, dy, w, lr=lr, wd=wd)
+    rdx, rw2 = ref.bwd_matmul_sgd_ref(x, dy, w, lr, wd)
+    np.testing.assert_allclose(dx, rdx, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(w2, rw2, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=SMALL, k=SMALL, n=DIMS, lr=LR, seed=st.integers(0, 2**16))
+def test_fwd_update_matmul_matches_ref(m, k, n, lr, seed):
+    rng = np.random.default_rng(seed)
+    x, w = arr(rng, m, k), arr(rng, k, n)
+    g, mom = arr(rng, k, n), arr(rng, k, n)
+    got = fwd_update_matmul(x, w, g, mom, lr=lr, mu=0.9, wd=1e-2)
+    want = ref.fwd_update_matmul_ref(x, w, g, mom, lr, 0.9, 1e-2)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_bwd_fused_uses_old_weight():
+    """The §B.2 race rule holds *inside* the fused kernel: dx must be
+    computed from the pre-update weight."""
+    rng = np.random.default_rng(1)
+    x, dy, w = arr(rng, 4, 4), arr(rng, 4, 4), arr(rng, 4, 4)
+    dx, w2 = bwd_matmul_sgd(x, dy, w, lr=0.5, wd=0.0)  # big lr: w2 far from w
+    np.testing.assert_allclose(dx, dy @ w.T, rtol=1e-5, atol=1e-6)
+    with pytest.raises(AssertionError):
+        np.testing.assert_allclose(dx, dy @ w2.T, rtol=1e-3, atol=1e-3)
+
+
+def test_sgd_resets_grad():
+    rng = np.random.default_rng(2)
+    t, g = arr(rng, 8, 8), arr(rng, 8, 8)
+    _, g2 = sgd_update(t, g, lr=0.1, wd=0.0)
+    assert float(jnp.max(jnp.abs(g2))) == 0.0
+
+
+def test_adamw_step_dependence():
+    """Bias correction must make step 1 and step 10 differ."""
+    rng = np.random.default_rng(3)
+    t, g = arr(rng, 8, 8), arr(rng, 8, 8)
+    m = jnp.zeros_like(t)
+    v = jnp.zeros_like(t)
+    kw = dict(lr=1e-3, b1=0.9, b2=0.999, eps=1e-8, wd=0.0)
+    t1 = adamw_update(t, g, m, v, 1.0, **kw)[0]
+    t10 = adamw_update(t, g, m, v, 10.0, **kw)[0]
+    assert float(jnp.max(jnp.abs(t1 - t10))) > 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(r=DIMS, c=DIMS, lr=LR, wd=WD, seed=st.integers(0, 2**16))
+def test_adagrad_matches_ref(r, c, lr, wd, seed):
+    from compile.kernels import adagrad_update
+
+    rng = np.random.default_rng(seed)
+    t, g = arr(rng, r, c), arr(rng, r, c)
+    h = jnp.abs(arr(rng, r, c)) * 0.1
+    got = adagrad_update(t, g, h, lr=lr, eps=1e-8, wd=wd)
+    want = ref.adagrad_ref(t, g, h, lr, 1e-8, wd)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(r=DIMS, c=DIMS, lr=LR, rho=st.sampled_from([0.0, 0.9, 0.99]),
+       seed=st.integers(0, 2**16))
+def test_rmsprop_matches_ref(r, c, lr, rho, seed):
+    from compile.kernels import rmsprop_update
+
+    rng = np.random.default_rng(seed)
+    t, g = arr(rng, r, c), arr(rng, r, c)
+    v = jnp.abs(arr(rng, r, c)) * 0.1
+    got = rmsprop_update(t, g, v, lr=lr, rho=rho, eps=1e-8, wd=1e-2)
+    want = ref.rmsprop_ref(t, g, v, lr, rho, 1e-8, 1e-2)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,72 @@
+"""L2 correctness: the fused train-step module and the FFN block."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+
+def _data(seed=0, b=8, din=64, dh=32, dout=10):
+    rng = np.random.default_rng(seed)
+    a = lambda *s: jnp.asarray(rng.normal(size=s).astype("float32"))
+    return a(b, din), a(b, dout), a(din, dh) * 0.2, a(dh, dout) * 0.2
+
+
+def test_mlp_train_step_shapes():
+    x, y, w1, w2 = _data()
+    loss, w1n, w2n = model.mlp_train_step(x, y, w1, w2)
+    assert loss.shape == (1,)
+    assert w1n.shape == w1.shape and w2n.shape == w2.shape
+
+
+def test_mlp_train_step_decreases_loss():
+    x, y, w1, w2 = _data(1)
+    losses = []
+    for _ in range(20):
+        loss, w1, w2 = model.mlp_train_step(x, y, w1, w2, lr=0.05)
+        losses.append(float(loss[0]))
+    assert losses[-1] < losses[0] * 0.9, losses
+
+
+def test_mlp_train_step_matches_manual_sgd():
+    """Fused module == plain jax grad + manual SGD (the rust engine's
+    baseline semantics)."""
+    x, y, w1, w2 = _data(2)
+
+    def loss_fn(w1_, w2_):
+        pred = jnp.maximum(x @ w1_, 0.0) @ w2_
+        return jnp.mean((pred - y) ** 2)
+
+    l0, (g1, g2) = (
+        jax.value_and_grad(loss_fn, argnums=(0, 1))(w1, w2)[0],
+        jax.grad(loss_fn, argnums=(0, 1))(w1, w2),
+    )
+    loss, w1n, w2n = model.mlp_train_step(x, y, w1, w2, lr=0.05)
+    np.testing.assert_allclose(float(loss[0]), float(l0), rtol=1e-6)
+    np.testing.assert_allclose(w1n, w1 - 0.05 * g1, rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(w2n, w2 - 0.05 * g2, rtol=1e-5, atol=1e-7)
+
+
+def test_ffn_block_matches_reference():
+    rng = np.random.default_rng(3)
+    a = lambda *s: jnp.asarray(rng.normal(size=s).astype("float32"))
+    x, gamma, beta = a(16, 32), a(32) * 0.1 + 1.0, a(32) * 0.1
+    w1, b1, w2, b2 = a(32, 128) * 0.1, a(128) * 0.1, a(128, 32) * 0.1, a(32) * 0.1
+    (out,) = model.ffn_block(x, gamma, beta, w1, b1, w2, b2)
+    assert out.shape == x.shape
+    # residual: zero weights => identity
+    z = jnp.zeros
+    (ident,) = model.ffn_block(x, gamma, beta, z((32, 128)), z(128), z((128, 32)), z(32))
+    np.testing.assert_allclose(ident, x, rtol=1e-6)
+
+
+def test_ffn_block_layernorm_is_normalizing():
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(4, 64)).astype("float32")) * 10.0
+    gamma, beta = jnp.ones(64), jnp.zeros(64)
+    # tap the normalized value by using identity-ish ffn and subtracting x
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    h = (x - mu) / jnp.sqrt(var + 1e-5)
+    np.testing.assert_allclose(jnp.mean(h, axis=-1), 0.0, atol=1e-5)

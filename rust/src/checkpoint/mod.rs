@@ -1,0 +1,264 @@
+//! Checkpointing substrate: serialize/restore parameters, optimizer
+//! state, and the step counter, so training runs survive restarts and the
+//! fusion schedules can be flipped mid-run (the schedules share one state
+//! layout — another consequence of "the schedule never changes the math").
+//!
+//! Format (little-endian, versioned, self-describing; no external deps):
+//! ```text
+//! magic "OPTF" | u32 version | u64 step | u32 n_params
+//! per param: u32 name_len | name utf8 | u32 rank | u64 dims...
+//!            f32 values... | u32 n_state | per state: u32 rank | dims | f32s
+//! ```
+//! Gradients are deliberately *not* saved: every schedule's checkpoint
+//! boundary is after updates, where grads are zero by the Fig. 2 contract.
+
+use crate::exec::Executor;
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"OPTF";
+const VERSION: u32 = 1;
+
+fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn write_tensor(w: &mut impl Write, t: &Tensor) -> Result<()> {
+    write_u32(w, t.shape().len() as u32)?;
+    for d in t.shape() {
+        write_u64(w, *d as u64)?;
+    }
+    // bulk write of the f32 buffer
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.len() * 4)
+    };
+    w.write_all(bytes)?;
+    Ok(())
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_tensor(r: &mut impl Read) -> Result<Tensor> {
+    let rank = read_u32(r)? as usize;
+    if rank > 8 {
+        bail!("implausible tensor rank {rank} (corrupt checkpoint?)");
+    }
+    let mut dims = Vec::with_capacity(rank);
+    for _ in 0..rank {
+        dims.push(read_u64(r)? as usize);
+    }
+    let n: usize = dims.iter().product();
+    if n > (1 << 31) {
+        bail!("implausible tensor size {n}");
+    }
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    let data: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(Tensor::from_vec(&dims, data))
+}
+
+/// Save the executor's training state. FF pending updates are flushed
+/// first so the checkpoint is schedule-independent.
+pub fn save(ex: &mut Executor, path: impl AsRef<Path>) -> Result<()> {
+    ex.flush_pending();
+    let mut w = std::io::BufWriter::new(
+        std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating {:?}", path.as_ref()))?,
+    );
+    w.write_all(MAGIC)?;
+    write_u32(&mut w, VERSION)?;
+    write_u64(&mut w, ex.step_count())?;
+    write_u32(&mut w, ex.graph.store.len() as u32)?;
+    for p in &ex.graph.store.params {
+        let pd = p.data.read().unwrap();
+        let name = pd.name.as_bytes();
+        write_u32(&mut w, name.len() as u32)?;
+        w.write_all(name)?;
+        write_tensor(&mut w, &pd.value)?;
+        write_u32(&mut w, pd.state.len() as u32)?;
+        for s in &pd.state {
+            write_tensor(&mut w, s)?;
+        }
+    }
+    Ok(())
+}
+
+/// Restore a checkpoint into an executor holding the *same architecture*
+/// (names + shapes are verified). Returns the restored step count.
+pub fn load(ex: &mut Executor, path: impl AsRef<Path>) -> Result<u64> {
+    let mut r = std::io::BufReader::new(
+        std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening {:?}", path.as_ref()))?,
+    );
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not an optfuse checkpoint");
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version}");
+    }
+    let step = read_u64(&mut r)?;
+    let n = read_u32(&mut r)? as usize;
+    if n != ex.graph.store.len() {
+        bail!(
+            "checkpoint has {n} params, model has {}",
+            ex.graph.store.len()
+        );
+    }
+    for p in &ex.graph.store.params {
+        let mut pd = p.data.write().unwrap();
+        let name_len = read_u32(&mut r)? as usize;
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let name = String::from_utf8(name)?;
+        if name != pd.name {
+            bail!("param order mismatch: checkpoint '{name}' vs model '{}'", pd.name);
+        }
+        let value = read_tensor(&mut r)?;
+        if value.shape() != pd.value.shape() {
+            bail!("shape mismatch for '{name}'");
+        }
+        pd.value = value;
+        pd.grad.zero_();
+        let n_state = read_u32(&mut r)? as usize;
+        pd.state = (0..n_state).map(|_| read_tensor(&mut r)).collect::<Result<_>>()?;
+    }
+    ex.set_step(step);
+    Ok(step)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::image_batch;
+    use crate::exec::ExecConfig;
+    use crate::graph::ScheduleKind;
+    use crate::models::mlp;
+    use crate::optim::{Adam, Hyper};
+    use crate::util::XorShiftRng;
+
+    fn mk(kind: ScheduleKind) -> Executor {
+        Executor::new(
+            mlp(3),
+            Box::new(Adam),
+            Hyper::default(),
+            ExecConfig { schedule: kind, ..Default::default() },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn save_load_roundtrip_resumes_identically() {
+        let dir = std::env::temp_dir().join("optfuse_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.ckpt");
+
+        let mut rng = XorShiftRng::new(4);
+        let batches: Vec<_> = (0..8).map(|_| image_batch(4, 3, 16, 16, 10, &mut rng)).collect();
+
+        // reference: 8 uninterrupted steps
+        let mut full = mk(ScheduleKind::Baseline);
+        let mut ref_losses = Vec::new();
+        for b in &batches {
+            ref_losses.push(full.train_step(b).loss);
+        }
+
+        // interrupted: 4 steps, save, restore into a FRESH executor, 4 more
+        let mut first = mk(ScheduleKind::Baseline);
+        for b in &batches[..4] {
+            first.train_step(b);
+        }
+        save(&mut first, &path).unwrap();
+
+        let mut resumed = mk(ScheduleKind::Baseline);
+        let step = load(&mut resumed, &path).unwrap();
+        assert_eq!(step, 4, "step counter restored (Adam bias correction!)");
+        let mut tail = Vec::new();
+        for b in &batches[4..] {
+            tail.push(resumed.train_step(b).loss);
+        }
+        assert_eq!(&ref_losses[4..], tail.as_slice(), "resume must be bit-exact");
+    }
+
+    #[test]
+    fn checkpoint_is_schedule_portable() {
+        // train under BF, checkpoint, resume under FF — still equals an
+        // uninterrupted baseline run.
+        let dir = std::env::temp_dir().join("optfuse_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("b.ckpt");
+        let mut rng = XorShiftRng::new(5);
+        let batches: Vec<_> = (0..6).map(|_| image_batch(4, 3, 16, 16, 10, &mut rng)).collect();
+
+        let mut full = mk(ScheduleKind::Baseline);
+        let mut ref_losses = Vec::new();
+        for b in &batches {
+            ref_losses.push(full.train_step(b).loss);
+        }
+
+        let mut bf = mk(ScheduleKind::BackwardFusion);
+        for b in &batches[..3] {
+            bf.train_step(b);
+        }
+        save(&mut bf, &path).unwrap();
+
+        let mut ff = mk(ScheduleKind::ForwardFusion);
+        load(&mut ff, &path).unwrap();
+        let mut tail = Vec::new();
+        for b in &batches[3..] {
+            tail.push(ff.train_step(b).loss);
+        }
+        assert_eq!(&ref_losses[3..], tail.as_slice(), "BF→ckpt→FF == baseline");
+    }
+
+    #[test]
+    fn rejects_mismatched_model() {
+        let dir = std::env::temp_dir().join("optfuse_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.ckpt");
+        let mut a = mk(ScheduleKind::Baseline);
+        save(&mut a, &path).unwrap();
+        // different architecture
+        let mut other = Executor::new(
+            crate::models::wide_mlp(1),
+            Box::new(Adam),
+            Hyper::default(),
+            ExecConfig::default(),
+        )
+        .unwrap();
+        assert!(load(&mut other, &path).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let dir = std::env::temp_dir().join("optfuse_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("d.ckpt");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        let mut a = mk(ScheduleKind::Baseline);
+        assert!(load(&mut a, &path).is_err());
+    }
+}

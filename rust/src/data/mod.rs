@@ -1,0 +1,127 @@
+//! Synthetic data generators (DESIGN.md §4: training *time* never depends
+//! on pixel/token content, only shapes — so synthetic data preserves the
+//! paper's measurements) plus a tiny text corpus generator that gives the
+//! end-to-end example something learnable.
+
+use crate::tensor::Tensor;
+use crate::util::XorShiftRng;
+
+/// A batch of synthetic images [b, c, h, w] and integer labels [b].
+pub fn image_batch(
+    b: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    classes: usize,
+    rng: &mut XorShiftRng,
+) -> Vec<Tensor> {
+    let x = Tensor::randn(&[b, c, h, w], 1.0, rng);
+    let y = Tensor::from_vec(&[b], (0..b).map(|_| rng.below(classes) as f32).collect());
+    vec![x, y]
+}
+
+/// Deterministic synthetic corpus with heavy bigram structure — a Markov
+/// chain over bytes, so a language model has real signal to learn (loss
+/// drops well below the uniform-entropy floor).
+pub fn synthetic_corpus(len: usize, vocab: usize, seed: u64) -> Vec<u8> {
+    let mut rng = XorShiftRng::new(seed);
+    let v = vocab.min(256);
+    // random sparse transition table: each symbol has 4 likely successors
+    let succ: Vec<[u8; 4]> = (0..v)
+        .map(|_| {
+            [
+                rng.below(v) as u8,
+                rng.below(v) as u8,
+                rng.below(v) as u8,
+                rng.below(v) as u8,
+            ]
+        })
+        .collect();
+    let mut out = Vec::with_capacity(len);
+    let mut s = 0u8;
+    for _ in 0..len {
+        // 90% follow the chain, 10% jump
+        s = if rng.next_f32() < 0.9 {
+            succ[s as usize][rng.below(4)]
+        } else {
+            rng.below(v) as u8
+        };
+        out.push(s);
+    }
+    out
+}
+
+/// Regression data for MSE examples: x [b, d_in], y [b, d_out] from a
+/// fixed random linear map + noise (learnable ground truth).
+pub fn regression_batch(
+    b: usize,
+    d_in: usize,
+    d_out: usize,
+    rng: &mut XorShiftRng,
+) -> Vec<Tensor> {
+    // fixed teacher from a separate deterministic stream
+    let mut teacher_rng = XorShiftRng::new(0xBEEF);
+    let w = Tensor::randn(&[d_in, d_out], 1.0, &mut teacher_rng);
+    let x = Tensor::randn(&[b, d_in], 1.0, rng);
+    let mut y = vec![0.0f32; b * d_out];
+    crate::ops::linalg::matmul(x.data(), w.data(), &mut y, b, d_in, d_out);
+    for v in y.iter_mut() {
+        *v += 0.01 * rng.normal();
+    }
+    vec![x, Tensor::from_vec(&[b, d_out], y)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn image_batch_shapes() {
+        let mut rng = XorShiftRng::new(1);
+        let b = image_batch(4, 3, 8, 8, 10, &mut rng);
+        assert_eq!(b[0].shape(), &[4, 3, 8, 8]);
+        assert_eq!(b[1].shape(), &[4]);
+        assert!(b[1].data().iter().all(|y| *y >= 0.0 && *y < 10.0));
+    }
+
+    #[test]
+    fn corpus_has_structure() {
+        let c = synthetic_corpus(10_000, 64, 7);
+        assert_eq!(c.len(), 10_000);
+        assert!(c.iter().all(|x| (*x as usize) < 64));
+        // bigram structure: the most frequent successor of symbol 0 should
+        // be much more likely than uniform (1/64)
+        let mut counts = [0u32; 64];
+        let mut total = 0u32;
+        for w in c.windows(2) {
+            if w[0] == 0 {
+                counts[w[1] as usize] += 1;
+                total += 1;
+            }
+        }
+        if total > 20 {
+            let max = *counts.iter().max().unwrap();
+            assert!(
+                max as f32 / total as f32 > 3.0 / 64.0,
+                "markov chain should be predictable"
+            );
+        }
+    }
+
+    #[test]
+    fn corpus_deterministic() {
+        assert_eq!(synthetic_corpus(100, 32, 3), synthetic_corpus(100, 32, 3));
+        assert_ne!(synthetic_corpus(100, 32, 3), synthetic_corpus(100, 32, 4));
+    }
+
+    #[test]
+    fn regression_teacher_fixed() {
+        let mut r1 = XorShiftRng::new(1);
+        let mut r2 = XorShiftRng::new(2);
+        let b1 = regression_batch(2, 4, 3, &mut r1);
+        let b2 = regression_batch(2, 4, 3, &mut r2);
+        // different inputs but same teacher: columns correlate with same map
+        assert_eq!(b1[1].shape(), &[2, 3]);
+        assert_ne!(b1[0].data(), b2[0].data());
+    }
+}

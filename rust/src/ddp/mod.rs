@@ -1,0 +1,319 @@
+//! Distributed-data-parallel simulation (paper §C.5): W worker threads
+//! each hold a full replica and a shard of the batch; gradients are
+//! all-reduced; updates follow the configured schedule:
+//!
+//! * baseline — backward everywhere, then a bulk all-reduce, then a
+//!   separate optimizer stage on every replica;
+//! * backward-fusion-style — per-parameter all-reduce in backward
+//!   completion order, with the update fused right after each parameter's
+//!   reduce (the overlap PyTorch DDP gets from gradient bucketing).
+//!
+//! The all-reduce itself is a real shared-memory butterfly (write shard →
+//! barrier → average) with byte accounting, standing in for NCCL.
+
+use crate::exec::{ExecConfig, Executor};
+use crate::graph::{Graph, ScheduleKind};
+use crate::optim::{Hyper, Optimizer};
+use crate::tensor::Tensor;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::{Duration, Instant};
+
+/// Shared-memory all-reduce among `world` participants.
+pub struct AllReducer {
+    world: usize,
+    /// staging buffer per rank
+    stage: Vec<Mutex<Vec<f32>>>,
+    barrier: Barrier,
+    pub bytes_moved: AtomicU64,
+}
+
+impl AllReducer {
+    pub fn new(world: usize) -> Self {
+        Self {
+            world,
+            stage: (0..world).map(|_| Mutex::new(Vec::new())).collect(),
+            barrier: Barrier::new(world),
+            bytes_moved: AtomicU64::new(0),
+        }
+    }
+
+    /// Average `data` across all ranks in place. All ranks must call with
+    /// equal-length slices, in the same order of collectives.
+    pub fn allreduce_mean(&self, rank: usize, data: &mut [f32]) {
+        {
+            let mut s = self.stage[rank].lock().unwrap();
+            s.clear();
+            s.extend_from_slice(data);
+        }
+        self.bytes_moved
+            .fetch_add((data.len() * 4 * 2) as u64, Ordering::Relaxed);
+        self.barrier.wait();
+        let inv = 1.0 / self.world as f32;
+        for r in 0..self.world {
+            if r == rank {
+                continue;
+            }
+            let other = self.stage[r].lock().unwrap();
+            for (d, o) in data.iter_mut().zip(other.iter()) {
+                *d += *o;
+            }
+        }
+        for d in data.iter_mut() {
+            *d *= inv;
+        }
+        // second barrier: nobody may overwrite staging until all have read
+        self.barrier.wait();
+    }
+}
+
+/// DDP run outcome.
+#[derive(Debug, Clone)]
+pub struct DdpReport {
+    pub world: usize,
+    pub steps: usize,
+    pub losses: Vec<f32>,
+    pub iter_ms: f64,
+    pub comm_bytes: u64,
+}
+
+/// Configuration of a DDP run.
+pub struct DdpConfig {
+    pub world: usize,
+    pub schedule: ScheduleKind,
+    pub steps: usize,
+    pub local_batch_maker: Box<dyn Fn(usize, usize) -> Vec<Tensor> + Send + Sync>,
+}
+
+/// Run synchronous DDP training with `build(seed)` replicas (same seed →
+/// identical initialization, as real DDP broadcasts rank-0 weights).
+pub fn train_ddp(
+    build: impl Fn() -> Graph,
+    make_opt: impl Fn() -> Box<dyn Optimizer>,
+    hyper: Hyper,
+    cfg: DdpConfig,
+) -> DdpReport {
+    let world = cfg.world;
+    let reducer = Arc::new(AllReducer::new(world));
+    let start_barrier = Arc::new(Barrier::new(world));
+    let losses = Arc::new(Mutex::new(vec![Vec::new(); world]));
+    let batch_maker = Arc::new(cfg.local_batch_maker);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for rank in 0..world {
+            let reducer = Arc::clone(&reducer);
+            let start_barrier = Arc::clone(&start_barrier);
+            let losses = Arc::clone(&losses);
+            let batch_maker = Arc::clone(&batch_maker);
+            let graph = build();
+            let opt = make_opt();
+            let hyper = hyper.clone();
+            let schedule = cfg.schedule;
+            let steps = cfg.steps;
+            scope.spawn(move || {
+                // The executor's own schedule machinery is bypassed: DDP
+                // placement of reduce+update is driven below.
+                let mut ex = Executor::new(
+                    graph,
+                    opt,
+                    hyper,
+                    ExecConfig { schedule: ScheduleKind::Baseline, ..Default::default() },
+                )
+                .expect("executor");
+                let n_params = ex.graph.store.len();
+                start_barrier.wait();
+                for step in 0..steps {
+                    let batch = (batch_maker)(rank, step);
+                    let local_loss = ex.forward_backward(&batch);
+                    // global loss = mean over rank shards (what a single
+                    // process on the concatenated batch would report)
+                    let mut lbuf = [local_loss];
+                    reducer.allreduce_mean(rank, &mut lbuf);
+                    let loss = lbuf[0];
+                    match schedule {
+                        ScheduleKind::Baseline | ScheduleKind::ForwardFusion => {
+                            // bulk all-reduce, then separate optimizer stage
+                            for pid in 0..n_params {
+                                let p = Arc::clone(ex.graph.store.get(pid));
+                                let mut pd = p.data.write().unwrap();
+                                reducer.allreduce_mean(rank, pd.grad.data_mut());
+                            }
+                            ex.apply_all_updates();
+                        }
+                        ScheduleKind::BackwardFusion => {
+                            // per-parameter reduce in backward completion
+                            // order (reverse), update fused immediately
+                            for pid in (0..n_params).rev() {
+                                {
+                                    let p = Arc::clone(ex.graph.store.get(pid));
+                                    let mut pd = p.data.write().unwrap();
+                                    reducer.allreduce_mean(rank, pd.grad.data_mut());
+                                }
+                                ex.apply_update(pid);
+                            }
+                            ex.advance_step();
+                        }
+                    }
+                    if rank == 0 {
+                        losses.lock().unwrap()[0].push(loss);
+                    }
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+    let losses = Arc::try_unwrap(losses).unwrap().into_inner().unwrap();
+    DdpReport {
+        world,
+        steps: cfg.steps,
+        losses: losses.into_iter().next().unwrap(),
+        iter_ms: wall.as_secs_f64() * 1e3 / cfg.steps as f64,
+        comm_bytes: reducer.bytes_moved.load(Ordering::Relaxed),
+    }
+}
+
+/// Convenience: elapsed per-iteration of a single-process run with the
+/// same global batch, for scaling comparisons.
+pub fn single_process_iter_ms(
+    build: impl Fn() -> Graph,
+    make_opt: impl Fn() -> Box<dyn Optimizer>,
+    hyper: Hyper,
+    steps: usize,
+    batch: impl Fn(usize) -> Vec<Tensor>,
+) -> (f64, Vec<f32>) {
+    let mut ex = Executor::new(
+        build(),
+        make_opt(),
+        hyper,
+        ExecConfig { schedule: ScheduleKind::Baseline, ..Default::default() },
+    )
+    .expect("executor");
+    let t0 = Instant::now();
+    let mut losses = Vec::new();
+    for s in 0..steps {
+        losses.push(ex.train_step(&batch(s)).loss);
+    }
+    let d: Duration = t0.elapsed();
+    (d.as_secs_f64() * 1e3 / steps as f64, losses)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::image_batch;
+    use crate::models::mlp;
+    use crate::optim::SgdMomentum;
+    use crate::util::XorShiftRng;
+
+    #[test]
+    fn allreduce_averages() {
+        let world = 3;
+        let red = Arc::new(AllReducer::new(world));
+        let outs = Arc::new(Mutex::new(vec![Vec::new(); world]));
+        std::thread::scope(|s| {
+            for rank in 0..world {
+                let red = Arc::clone(&red);
+                let outs = Arc::clone(&outs);
+                s.spawn(move || {
+                    let mut data = vec![(rank + 1) as f32; 4];
+                    red.allreduce_mean(rank, &mut data);
+                    outs.lock().unwrap()[rank] = data;
+                });
+            }
+        });
+        let outs = outs.lock().unwrap();
+        for r in 0..world {
+            assert_eq!(outs[r], vec![2.0; 4], "mean of 1,2,3");
+        }
+        assert!(red.bytes_moved.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn allreduce_multiple_rounds_no_deadlock() {
+        let world = 2;
+        let red = Arc::new(AllReducer::new(world));
+        std::thread::scope(|s| {
+            for rank in 0..world {
+                let red = Arc::clone(&red);
+                s.spawn(move || {
+                    for round in 0..5 {
+                        let mut d = vec![rank as f32 + round as f32; 8];
+                        red.allreduce_mean(rank, &mut d);
+                        assert_eq!(d[0], 0.5 + round as f32);
+                    }
+                });
+            }
+        });
+    }
+
+    fn shard_batch(rank: usize, step: usize) -> Vec<Tensor> {
+        // deterministic per (rank, step)
+        let mut rng = XorShiftRng::new((rank as u64) << 32 | step as u64);
+        image_batch(2, 3, 16, 16, 10, &mut rng)
+    }
+
+    #[test]
+    fn ddp_schedules_agree_with_each_other() {
+        let run = |schedule| {
+            train_ddp(
+                || mlp(99),
+                || Box::new(SgdMomentum) as Box<dyn Optimizer>,
+                Hyper { lr: 0.05, ..Hyper::default() },
+                DdpConfig {
+                    world: 2,
+                    schedule,
+                    steps: 3,
+                    local_batch_maker: Box::new(shard_batch),
+                },
+            )
+        };
+        let base = run(ScheduleKind::Baseline);
+        let bf = run(ScheduleKind::BackwardFusion);
+        assert_eq!(base.losses, bf.losses, "schedule must not change DDP math");
+        assert_eq!(base.world, 2);
+        assert!(base.comm_bytes > 0);
+    }
+
+    #[test]
+    fn ddp_replicas_stay_in_sync() {
+        // identical seeds + mean-allreduce => rank losses identical; we
+        // verify indirectly: 2-worker run must equal a single-process run
+        // on the concatenated batch.
+        let ddp = train_ddp(
+            || mlp(7),
+            || Box::new(SgdMomentum) as Box<dyn Optimizer>,
+            Hyper { lr: 0.05, weight_decay: 0.0, ..Hyper::default() },
+            DdpConfig {
+                world: 2,
+                schedule: ScheduleKind::Baseline,
+                steps: 2,
+                local_batch_maker: Box::new(shard_batch),
+            },
+        );
+        // single process with global batch = concat of rank shards
+        let (_, single_losses) = single_process_iter_ms(
+            || mlp(7),
+            || Box::new(SgdMomentum) as Box<dyn Optimizer>,
+            Hyper { lr: 0.05, weight_decay: 0.0, ..Hyper::default() },
+            2,
+            |step| {
+                let b0 = shard_batch(0, step);
+                let b1 = shard_batch(1, step);
+                let mut x = b0[0].data().to_vec();
+                x.extend_from_slice(b1[0].data());
+                let mut y = b0[1].data().to_vec();
+                y.extend_from_slice(b1[1].data());
+                vec![
+                    Tensor::from_vec(&[4, 3, 16, 16], x),
+                    Tensor::from_vec(&[4], y),
+                ]
+            },
+        );
+        // mean-allreduced DDP loss must track the single-process loss on
+        // the concatenated batch (identical weights and identical global
+        // gradient each step; fp reduction order differs slightly).
+        for (s, (a, b)) in ddp.losses.iter().zip(single_losses.iter()).enumerate() {
+            assert!((a - b).abs() < 1e-3, "step {s}: ddp {a} vs single {b}");
+        }
+    }
+}

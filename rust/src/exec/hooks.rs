@@ -1,0 +1,343 @@
+//! Hook front-end (paper §C.1: "We implement the proposed methods in the
+//! PyTorch front-end using hooks").
+//!
+//! This module re-implements forward-fusion and backward-fusion as *user
+//! hooks over the baseline engine* — no scheduler support required —
+//! exactly the way the paper retrofits PyTorch. The built-in schedules in
+//! [`super::Executor`] remain the first-class implementation; the hook
+//! variant exists to demonstrate (and test) that the rewrites are pure
+//! front-end transformations, and to give downstream users an extension
+//! point for custom schedules.
+//!
+//! Hook points:
+//! * `pre_forward(node)`  — before a node's forward executes;
+//! * `post_backward(node)` — after a node's backward has produced and
+//!   accumulated its gradients (i.e. after the old θ value is dead for
+//!   this node — the §B.2-safe point).
+
+use crate::graph::{Graph, ParamId, Src};
+use crate::ops::OpCtx;
+use crate::optim::{Hyper, Optimizer};
+use crate::tensor::Tensor;
+use std::sync::Arc;
+
+/// Context passed to hooks: mutable access to parameters + the optimizer.
+pub struct HookCtx<'a> {
+    pub graph: &'a Graph,
+    pub opt: &'a dyn Optimizer,
+    pub hyper: &'a Hyper,
+    pub step: u64,
+}
+
+impl<'a> HookCtx<'a> {
+    /// Run the optimizer on one parameter now.
+    pub fn update_param(&self, pid: ParamId) {
+        let p = self.graph.store.get(pid);
+        let mut pd = p.data.write().unwrap();
+        self.opt.update(self.step, &mut pd, self.hyper, 1.0);
+    }
+}
+
+/// User hooks. Default: no-ops (plain baseline behaviour minus the
+/// optimizer stage — the driver decides when updates happen).
+pub trait Hooks {
+    fn pre_forward(&mut self, _node: usize, _ctx: &HookCtx) {}
+    fn post_backward(&mut self, _node: usize, _ctx: &HookCtx) {}
+    /// After the whole backward pass (the baseline hook point).
+    fn post_step(&mut self, _ctx: &HookCtx) {}
+}
+
+/// Baseline as hooks: one bulk update pass after backward.
+#[derive(Default)]
+pub struct BaselineHooks;
+
+impl Hooks for BaselineHooks {
+    fn post_step(&mut self, ctx: &HookCtx) {
+        for pid in 0..ctx.graph.store.len() {
+            ctx.update_param(pid);
+        }
+    }
+}
+
+/// Forward-fusion as hooks (paper Alg. 2): lazy update at first use in
+/// the next forward; `updated` flags dedupe shared parameters.
+pub struct ForwardFusionHooks {
+    updated: Vec<bool>,
+    has_pending: bool,
+}
+
+impl ForwardFusionHooks {
+    pub fn new(n_params: usize) -> Self {
+        Self { updated: vec![false; n_params], has_pending: false }
+    }
+}
+
+impl Hooks for ForwardFusionHooks {
+    fn pre_forward(&mut self, node: usize, ctx: &HookCtx) {
+        if !self.has_pending {
+            return;
+        }
+        for pid in &ctx.graph.nodes[node].params {
+            if !self.updated[*pid] {
+                ctx.update_param(*pid);
+                self.updated[*pid] = true;
+            }
+        }
+    }
+
+    fn post_step(&mut self, ctx: &HookCtx) {
+        if self.has_pending {
+            // flush parameters not touched by this forward
+            for pid in 0..ctx.graph.store.len() {
+                if !self.updated[pid] {
+                    ctx.update_param(pid);
+                }
+            }
+        }
+        self.updated.iter_mut().for_each(|f| *f = false);
+        self.has_pending = true;
+    }
+}
+
+/// Backward-fusion as hooks (paper Alg. 3): refcounted eager updates at
+/// the post-backward (§B.2-safe) hook point.
+pub struct BackwardFusionHooks {
+    count: Vec<u32>,
+}
+
+impl BackwardFusionHooks {
+    pub fn new(n_params: usize) -> Self {
+        Self { count: vec![0; n_params] }
+    }
+}
+
+impl Hooks for BackwardFusionHooks {
+    fn pre_forward(&mut self, node: usize, ctx: &HookCtx) {
+        for pid in &ctx.graph.nodes[node].params {
+            self.count[*pid] += 1;
+        }
+    }
+
+    fn post_backward(&mut self, node: usize, ctx: &HookCtx) {
+        for pid in &ctx.graph.nodes[node].params {
+            self.count[*pid] -= 1;
+            if self.count[*pid] == 0 {
+                ctx.update_param(*pid);
+            }
+        }
+    }
+}
+
+/// A minimal training driver that runs the baseline loop and fires hooks.
+/// (Deliberately simple: single-threaded; the production scheduler with
+/// the worker pool lives in [`super::Executor`].)
+pub struct HookedTrainer<H: Hooks> {
+    pub graph: Graph,
+    pub opt: Arc<dyn Optimizer>,
+    pub hyper: Hyper,
+    pub hooks: H,
+    step: u64,
+}
+
+impl<H: Hooks> HookedTrainer<H> {
+    pub fn new(graph: Graph, opt: Box<dyn Optimizer>, hyper: Hyper, hooks: H) -> Self {
+        Self { graph, opt: Arc::from(opt), hyper, hooks, step: 0 }
+    }
+
+    /// One training step with hook callbacks. FF hooks use the previous
+    /// step's index (their grads belong to it), matching the built-in
+    /// scheduler's step numbering.
+    pub fn train_step(&mut self, externals: &[Tensor]) -> f32 {
+        let n = self.graph.nodes.len();
+        let mut acts: Vec<Option<Tensor>> = (0..n).map(|_| None).collect();
+        let mut ctxs: Vec<OpCtx> = (0..n).map(|_| OpCtx::default()).collect();
+        // ---- forward with pre_forward hooks (pending step index) ----
+        for i in 0..n {
+            {
+                let hctx = HookCtx {
+                    graph: &self.graph,
+                    opt: self.opt.as_ref(),
+                    hyper: &self.hyper,
+                    step: self.step,
+                };
+                self.hooks.pre_forward(i, &hctx);
+            }
+            let node = &self.graph.nodes[i];
+            let inputs: Vec<&Tensor> = node
+                .inputs
+                .iter()
+                .map(|s| match s {
+                    Src::Node(id) => acts[*id].as_ref().unwrap(),
+                    Src::External(e) => &externals[*e],
+                })
+                .collect();
+            let guards: Vec<_> = node
+                .params
+                .iter()
+                .map(|p| self.graph.store.get(*p).data.read().unwrap())
+                .collect();
+            let prefs: Vec<&Tensor> = guards.iter().map(|g| &g.value).collect();
+            let out = node.op.forward(&inputs, &prefs, &mut ctxs[i]);
+            drop(guards);
+            acts[i] = Some(out);
+        }
+        let loss_node = self.graph.loss_node.expect("loss");
+        let loss = acts[loss_node].as_ref().unwrap().data()[0];
+
+        // ---- backward with post_backward hooks (this step's index) ----
+        let this_step = self.step + 1;
+        let mut grads: Vec<Option<Tensor>> = (0..n).map(|_| None).collect();
+        grads[loss_node] = Some(Tensor::from_vec(&[1], vec![1.0]));
+        for i in (0..n).rev() {
+            let Some(gout) = grads[i].take() else { continue };
+            let node = &self.graph.nodes[i];
+            let inputs: Vec<&Tensor> = node
+                .inputs
+                .iter()
+                .map(|s| match s {
+                    Src::Node(id) => acts[*id].as_ref().unwrap(),
+                    Src::External(e) => &externals[*e],
+                })
+                .collect();
+            let guards: Vec<_> = node
+                .params
+                .iter()
+                .map(|p| self.graph.store.get(*p).data.read().unwrap())
+                .collect();
+            let prefs: Vec<&Tensor> = guards.iter().map(|g| &g.value).collect();
+            let og = node.op.backward(&gout, &inputs, &prefs, &ctxs[i]);
+            drop(guards);
+            for (k, src) in self.graph.nodes[i].inputs.iter().enumerate() {
+                if let (Src::Node(dst), Some(g)) = (src, og.inputs.get(k).and_then(|x| x.as_ref()))
+                {
+                    match &mut grads[*dst] {
+                        Some(acc) => acc.axpy(1.0, g),
+                        slot @ None => *slot = Some(g.clone()),
+                    }
+                }
+            }
+            let pids = self.graph.nodes[i].params.clone();
+            for (k, pid) in pids.iter().enumerate() {
+                self.graph.store.get(*pid).data.write().unwrap().grad.axpy(1.0, &og.params[k]);
+            }
+            let hctx = HookCtx {
+                graph: &self.graph,
+                opt: self.opt.as_ref(),
+                hyper: &self.hyper,
+                step: this_step,
+            };
+            self.hooks.post_backward(i, &hctx);
+        }
+        let hctx = HookCtx {
+            graph: &self.graph,
+            opt: self.opt.as_ref(),
+            hyper: &self.hyper,
+            step: this_step,
+        };
+        self.hooks.post_step(&hctx);
+        self.step = this_step;
+        loss
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{ExecConfig, Executor};
+    use crate::graph::ScheduleKind;
+    use crate::models::mlp;
+    use crate::optim::Adam;
+    use crate::util::XorShiftRng;
+
+    fn data(seed: u64) -> Vec<Tensor> {
+        let mut rng = XorShiftRng::new(seed);
+        crate::data::image_batch(4, 3, 16, 16, 10, &mut rng)
+    }
+
+    fn builtin(kind: ScheduleKind, steps: usize) -> Vec<f32> {
+        let mut ex = Executor::new(
+            mlp(5),
+            Box::new(Adam),
+            Hyper::default(),
+            ExecConfig { schedule: kind, ..Default::default() },
+        )
+        .unwrap();
+        let d = data(9);
+        (0..steps).map(|_| ex.train_step(&d).loss).collect()
+    }
+
+    #[test]
+    fn baseline_hooks_match_builtin() {
+        let d = data(9);
+        let mut t = HookedTrainer::new(mlp(5), Box::new(Adam), Hyper::default(), BaselineHooks);
+        let got: Vec<f32> = (0..5).map(|_| t.train_step(&d)).collect();
+        assert_eq!(got, builtin(ScheduleKind::Baseline, 5));
+    }
+
+    #[test]
+    fn ff_hooks_match_builtin_schedule() {
+        let d = data(9);
+        let n = mlp(5).store.len();
+        let mut t = HookedTrainer::new(
+            mlp(5),
+            Box::new(Adam),
+            Hyper::default(),
+            ForwardFusionHooks::new(n),
+        );
+        let got: Vec<f32> = (0..5).map(|_| t.train_step(&d)).collect();
+        assert_eq!(got, builtin(ScheduleKind::ForwardFusion, 5));
+        assert_eq!(got, builtin(ScheduleKind::Baseline, 5), "and to baseline");
+    }
+
+    #[test]
+    fn bf_hooks_match_builtin_schedule() {
+        let d = data(9);
+        let n = mlp(5).store.len();
+        let mut t = HookedTrainer::new(
+            mlp(5),
+            Box::new(Adam),
+            Hyper::default(),
+            BackwardFusionHooks::new(n),
+        );
+        let got: Vec<f32> = (0..5).map(|_| t.train_step(&d)).collect();
+        assert_eq!(got, builtin(ScheduleKind::BackwardFusion, 5));
+    }
+
+    #[test]
+    fn custom_hook_can_observe_everything() {
+        struct Counting {
+            pre: usize,
+            post: usize,
+            steps: usize,
+        }
+        impl Hooks for Counting {
+            fn pre_forward(&mut self, _n: usize, _c: &HookCtx) {
+                self.pre += 1;
+            }
+            fn post_backward(&mut self, _n: usize, _c: &HookCtx) {
+                self.post += 1;
+            }
+            fn post_step(&mut self, c: &HookCtx) {
+                self.steps += 1;
+                // still must update or training would stall
+                for pid in 0..c.graph.store.len() {
+                    c.update_param(pid);
+                }
+            }
+        }
+        let d = data(1);
+        let g = mlp(5);
+        let n_nodes = g.nodes.len();
+        let mut t = HookedTrainer::new(
+            g,
+            Box::new(Adam),
+            Hyper::default(),
+            Counting { pre: 0, post: 0, steps: 0 },
+        );
+        t.train_step(&d);
+        t.train_step(&d);
+        assert_eq!(t.hooks.pre, 2 * n_nodes);
+        assert!(t.hooks.post >= 2 * 3, "at least the param-bearing nodes");
+        assert_eq!(t.hooks.steps, 2);
+    }
+}

@@ -1,0 +1,855 @@
+//! The execution engine: one eager training step under each of the
+//! paper's three schedules (Fig. 1 b/c/d).
+//!
+//! * `Baseline`   — forward, backward, then a separate optimizer stage.
+//! * `ForwardFusion` (Alg. 2) — each parameter is updated immediately
+//!   before its **first use in the next forward pass** (`updated` flags
+//!   dedupe shared/tied parameters).
+//! * `BackwardFusion` (Alg. 3) — each parameter is updated as soon as its
+//!   gradient is complete during backward (`count` refcounts over forward
+//!   uses), optionally on worker threads so updates overlap the rest of
+//!   back-propagation.
+//!
+//! §B.2 race rule: a parameter may be updated in place only after the
+//! backward of every node that reads it has run (condition 2: "no other
+//! dependency on the old value"). Setting `race_guard = false` reproduces
+//! the naive buggy ordering — updating as soon as the parameter gradient
+//! is computed but *before* the node finishes using the old value — which
+//! corrupts ∂L/∂x exactly as the paper warns.
+
+pub mod hooks;
+pub mod pool;
+
+use crate::graph::{Graph, ParamId, ScheduleKind, Src};
+use crate::ops::OpCtx;
+use crate::optim::{Hyper, Optimizer};
+use crate::tensor::Tensor;
+use pool::{Job, UpdatePool};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Engine configuration.
+#[derive(Clone)]
+pub struct ExecConfig {
+    pub schedule: ScheduleKind,
+    /// Worker threads for backward-fusion updates. 0 = update inline on
+    /// the main thread (locality only, no parallelism).
+    pub threads: usize,
+    /// §B.2 in-place hazard guard. `false` demonstrates the race bug.
+    pub race_guard: bool,
+    /// Gradient accumulation: updates fire only every `accum_steps`
+    /// micro-steps (grads keep accumulating in between). 1 = every step.
+    pub accum_steps: u64,
+}
+
+impl Default for ExecConfig {
+    fn default() -> Self {
+        Self {
+            schedule: ScheduleKind::Baseline,
+            threads: 0,
+            race_guard: true,
+            accum_steps: 1,
+        }
+    }
+}
+
+/// Per-step measurements (the paper's Fig. 3 breakdown).
+#[derive(Debug, Clone, Default)]
+pub struct StepStats {
+    pub loss: f32,
+    /// Wallclock of the forward stage (includes fused updates under FF).
+    pub forward: Duration,
+    /// Wallclock of the backward stage (includes dispatch + final wait
+    /// under BF).
+    pub backward: Duration,
+    /// Wallclock of the standalone optimizer stage (baseline only).
+    pub optimizer: Duration,
+    /// Update time that ran *inside* forward (FF) — subset of `forward`.
+    pub opt_in_forward: Duration,
+    /// Update worker busy time that overlapped backward (BF, threads>0),
+    /// or inline update time inside backward (BF, threads=0).
+    pub opt_in_backward: Duration,
+}
+
+impl StepStats {
+    pub fn total(&self) -> Duration {
+        self.forward + self.backward + self.optimizer
+    }
+}
+
+/// Scheduler bookkeeping counters (ablation: control-flow overhead that
+/// makes small batches slower, paper §C.2).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ControlCounters {
+    pub flag_checks: u64,
+    pub refcount_ops: u64,
+    pub updates_dispatched: u64,
+}
+
+/// The training executor. Owns the graph, the optimizer, and schedule
+/// state that persists across iterations (FF pending updates).
+pub struct Executor {
+    pub graph: Graph,
+    pub opt: Arc<dyn Optimizer>,
+    pub hyper: Hyper,
+    pub cfg: ExecConfig,
+    step: u64,
+    /// FF: per-param `updated` flag (Alg. 2).
+    updated: Vec<bool>,
+    /// BF: per-param forward-use refcount (Alg. 3).
+    count: Vec<u32>,
+    /// FF: whether grads from a previous backward are pending application.
+    has_pending: bool,
+    /// Global-info scale (grad clip factor) computed after backward, used
+    /// by the *next* FF updates or the baseline optimizer stage.
+    global_scale: f32,
+    pool: Option<UpdatePool>,
+    pub counters: ControlCounters,
+    /// Per-node forward activations of the last step (kept for tests).
+    last_loss: f32,
+    /// Optional LR schedule; evaluated at the *gradient's* step index so
+    /// forward-fusion's deferred updates stay equivalent to baseline.
+    lr_schedule: Option<Box<dyn crate::optim::sched::LrSchedule>>,
+}
+
+impl Executor {
+    pub fn new(
+        graph: Graph,
+        opt: Box<dyn Optimizer>,
+        hyper: Hyper,
+        cfg: ExecConfig,
+    ) -> anyhow::Result<Self> {
+        if cfg.schedule == ScheduleKind::BackwardFusion && opt.needs_global() {
+            // Paper Table 1: backward-fusion assumes θ_i updates are
+            // decoupled; global-information rules are unsupported.
+            anyhow::bail!(
+                "backward-fusion cannot run optimizer '{}': it needs global information \
+                 (paper Table 1)",
+                opt.name()
+            );
+        }
+        let n_params = graph.store.len();
+        let pool = if cfg.schedule == ScheduleKind::BackwardFusion && cfg.threads > 0 {
+            Some(UpdatePool::new(cfg.threads))
+        } else {
+            None
+        };
+        Ok(Self {
+            graph,
+            opt: Arc::from(opt),
+            hyper,
+            cfg,
+            step: 0,
+            updated: vec![false; n_params],
+            count: vec![0; n_params],
+            has_pending: false,
+            global_scale: 1.0,
+            pool,
+            counters: ControlCounters::default(),
+            last_loss: f32::NAN,
+            lr_schedule: None,
+        })
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.step
+    }
+
+    pub fn last_loss(&self) -> f32 {
+        self.last_loss
+    }
+
+    /// Restore the step counter (checkpoint load). Also clears pending FF
+    /// state — checkpoints are taken at flushed boundaries.
+    pub fn set_step(&mut self, step: u64) {
+        self.step = step;
+        self.has_pending = false;
+        self.updated.iter_mut().for_each(|f| *f = false);
+    }
+
+    /// Install an LR schedule (replaces `hyper.lr` per update step).
+    pub fn set_lr_schedule(&mut self, s: Box<dyn crate::optim::sched::LrSchedule>) {
+        self.lr_schedule = Some(s);
+    }
+
+    /// Effective hyper-parameters for an update at `step`.
+    fn hyper_at(&self, step: u64) -> Hyper {
+        let mut hp = self.hyper.clone();
+        if let Some(s) = &self.lr_schedule {
+            hp.lr = s.lr(step);
+        }
+        hp
+    }
+
+    /// Whether the micro-step with gradient index `step` is an update
+    /// boundary under gradient accumulation.
+    fn is_update_step(&self, step: u64) -> bool {
+        step % self.cfg.accum_steps.max(1) == 0
+    }
+
+    fn update_param_inline(&mut self, pid: ParamId, step: u64) -> Duration {
+        let t0 = Instant::now();
+        let hp = self.hyper_at(step);
+        let p = self.graph.store.get(pid);
+        let mut pd = p.data.write().unwrap();
+        self.opt.update(step, &mut pd, &hp, self.global_scale);
+        self.counters.updates_dispatched += 1;
+        t0.elapsed()
+    }
+
+    /// Run one forward pass, returning per-node activations and ctxs plus
+    /// update time spent inside forward (FF). `train` gates FF updates.
+    fn forward_pass(
+        &mut self,
+        externals: &[Tensor],
+        train: bool,
+    ) -> (Vec<Option<Tensor>>, Vec<OpCtx>, Duration) {
+        assert_eq!(externals.len(), self.graph.num_externals, "external count");
+        let n = self.graph.nodes.len();
+        let mut acts: Vec<Option<Tensor>> = (0..n).map(|_| None).collect();
+        let mut ctxs: Vec<OpCtx> = (0..n).map(|_| OpCtx::default()).collect();
+        let mut opt_in_fwd = Duration::ZERO;
+        let ff = self.cfg.schedule == ScheduleKind::ForwardFusion;
+        let bf = self.cfg.schedule == ScheduleKind::BackwardFusion;
+        // FF lazy updates apply the grads of the *previous* iteration's
+        // backward; they must use that iteration's step number so
+        // step-dependent rules (Adam bias correction) match baseline.
+        let pending_step = self.step;
+        for i in 0..n {
+            // Alg. 2: lazy update before first use this iteration.
+            if ff && train && self.has_pending {
+                let pids: Vec<ParamId> = self.graph.nodes[i].params.clone();
+                for pid in pids {
+                    self.counters.flag_checks += 1;
+                    if !self.updated[pid] {
+                        opt_in_fwd += self.update_param_inline(pid, pending_step);
+                        self.updated[pid] = true;
+                    }
+                }
+            }
+            // Alg. 3: count forward uses.
+            if bf && train {
+                for pid in &self.graph.nodes[i].params {
+                    self.count[*pid] += 1;
+                    self.counters.refcount_ops += 1;
+                }
+            }
+            let node = &self.graph.nodes[i];
+            let input_refs: Vec<&Tensor> = node
+                .inputs
+                .iter()
+                .map(|s| match s {
+                    Src::Node(id) => acts[*id].as_ref().expect("topo order"),
+                    Src::External(e) => &externals[*e],
+                })
+                .collect();
+            let guards: Vec<_> = node
+                .params
+                .iter()
+                .map(|p| self.graph.store.get(*p).data.read().unwrap())
+                .collect();
+            let param_refs: Vec<&Tensor> = guards.iter().map(|g| &g.value).collect();
+            let out = node.op.forward(&input_refs, &param_refs, &mut ctxs[i]);
+            drop(guards);
+            acts[i] = Some(out);
+        }
+        (acts, ctxs, opt_in_fwd)
+    }
+
+    /// One full training step under the configured schedule.
+    pub fn train_step(&mut self, externals: &[Tensor]) -> StepStats {
+        let mut stats = StepStats::default();
+        let bf = self.cfg.schedule == ScheduleKind::BackwardFusion;
+        let ff = self.cfg.schedule == ScheduleKind::ForwardFusion;
+
+        // ---- forward (with FF fused updates) ----
+        let t0 = Instant::now();
+        let (acts, ctxs, opt_in_fwd) = self.forward_pass(externals, true);
+        if ff && self.has_pending {
+            // Any parameter not touched by this forward still must update
+            // exactly once per iteration (Alg. 2 applies to the used ones;
+            // unused-but-gradful params are flushed here for equivalence).
+            let step = self.step;
+            for pid in 0..self.graph.store.len() {
+                if !self.updated[pid] {
+                    stats.opt_in_forward += self.update_param_inline(pid, step);
+                    self.updated[pid] = true;
+                }
+            }
+            self.has_pending = false;
+        }
+        stats.forward = t0.elapsed();
+        stats.opt_in_forward += opt_in_fwd;
+
+        let loss_node = self.graph.loss_node.expect("loss node set");
+        let loss = acts[loss_node].as_ref().unwrap().data()[0];
+        stats.loss = loss;
+        self.last_loss = loss;
+
+        // ---- backward ----
+        let t1 = Instant::now();
+        let this_step = self.step + 1;
+        let n = self.graph.nodes.len();
+        let mut grads: Vec<Option<Tensor>> = (0..n).map(|_| None).collect();
+        grads[loss_node] = Some(Tensor::from_vec(&[1], vec![1.0]));
+        let mut opt_in_bwd = Duration::ZERO;
+        for i in (0..n).rev() {
+            let Some(gout) = grads[i].take() else { continue };
+            // Buggy ordering for the §B.2 demonstration: update params
+            // whose grad will complete at this node BEFORE the node's
+            // backward consumes their old value.
+            if bf && !self.cfg.race_guard {
+                let pids: Vec<ParamId> = self.graph.nodes[i].params.clone();
+                for pid in pids {
+                    self.counters.refcount_ops += 1;
+                    self.count[pid] -= 1;
+                    if self.count[pid] == 0 && self.is_update_step(this_step) {
+                        // NOTE: grad not yet accumulated for this node —
+                        // the update consumes stale grads AND clobbers θ
+                        // before ∂L/∂x is computed. Deliberately wrong.
+                        opt_in_bwd += self.update_param_inline(pid, this_step);
+                    }
+                }
+            }
+
+            let node = &self.graph.nodes[i];
+            let input_refs: Vec<&Tensor> = node
+                .inputs
+                .iter()
+                .map(|s| match s {
+                    Src::Node(id) => acts[*id].as_ref().expect("alive"),
+                    Src::External(e) => &externals[*e],
+                })
+                .collect();
+            let guards: Vec<_> = node
+                .params
+                .iter()
+                .map(|p| self.graph.store.get(*p).data.read().unwrap())
+                .collect();
+            let param_refs: Vec<&Tensor> = guards.iter().map(|g| &g.value).collect();
+            let og = node.op.backward(&gout, &input_refs, &param_refs, &ctxs[i]);
+            drop(guards);
+
+            // scatter input grads
+            for (k, src) in self.graph.nodes[i].inputs.iter().enumerate() {
+                if let (Src::Node(dst), Some(g)) = (src, og.inputs.get(k).and_then(|x| x.as_ref()))
+                {
+                    match &mut grads[*dst] {
+                        Some(acc) => acc.axpy(1.0, g),
+                        slot @ None => *slot = Some(g.clone()),
+                    }
+                }
+            }
+            // accumulate param grads
+            let pids: Vec<ParamId> = self.graph.nodes[i].params.clone();
+            for (k, pid) in pids.iter().enumerate() {
+                let p = self.graph.store.get(*pid);
+                p.data.write().unwrap().grad.axpy(1.0, &og.params[k]);
+            }
+            // Alg. 3 (correct ordering): refcount after this node's
+            // backward has consumed the old value.
+            if bf && self.cfg.race_guard {
+                let boundary = self.is_update_step(this_step);
+                for pid in pids {
+                    self.counters.refcount_ops += 1;
+                    self.count[pid] -= 1;
+                    if self.count[pid] == 0 && boundary {
+                        if let Some(pool) = &self.pool {
+                            pool.submit(Job {
+                                param: Arc::clone(self.graph.store.get(pid)),
+                                opt: Arc::clone(&self.opt),
+                                hyper: self.hyper_at(this_step),
+                                step: this_step,
+                                scale: self.global_scale,
+                            });
+                            self.counters.updates_dispatched += 1;
+                        } else {
+                            opt_in_bwd += self.update_param_inline(pid, this_step);
+                        }
+                    }
+                }
+            }
+        }
+        if let Some(pool) = &self.pool {
+            pool.wait_all();
+            opt_in_bwd += pool.take_busy();
+        }
+        stats.backward = t1.elapsed();
+        stats.opt_in_backward = opt_in_bwd;
+
+        self.step = this_step;
+
+        // global-information transform: compute clip scale from the full
+        // gradient set (valid for baseline and FF; BF was rejected above).
+        if self.opt.needs_global() {
+            let norm = self.graph.store.global_grad_norm();
+            let max_norm = 1.0; // matches GlobalNormClip::max_norm default
+            self.global_scale = if norm > max_norm { max_norm / norm } else { 1.0 };
+        }
+
+        // ---- standalone optimizer stage (baseline only) ----
+        match self.cfg.schedule {
+            ScheduleKind::Baseline => {
+                if self.is_update_step(this_step) {
+                    let t2 = Instant::now();
+                    for pid in 0..self.graph.store.len() {
+                        self.update_param_inline(pid, this_step);
+                    }
+                    stats.optimizer = t2.elapsed();
+                }
+            }
+            ScheduleKind::ForwardFusion => {
+                if self.is_update_step(this_step) {
+                    self.has_pending = true;
+                }
+                // Alg. 2: reset flags during backward ("f_i.updated ← False").
+                self.updated.iter_mut().for_each(|f| *f = false);
+            }
+            ScheduleKind::BackwardFusion => {
+                debug_assert!(self.count.iter().all(|c| *c == 0), "all counts drained");
+            }
+        }
+        stats
+    }
+
+    /// Apply any pending (FF) updates so parameter values reflect all
+    /// completed steps — used before checkpointing / equivalence checks.
+    pub fn flush_pending(&mut self) {
+        if self.cfg.schedule == ScheduleKind::ForwardFusion && self.has_pending {
+            // grads belong to the already-counted step `self.step`
+            let step = self.step;
+            for pid in 0..self.graph.store.len() {
+                if !self.updated[pid] {
+                    self.update_param_inline(pid, step);
+                    self.updated[pid] = true;
+                }
+            }
+            // Updates applied here correspond to the *next* step's lazy
+            // work; keep the step counter consistent with baseline by not
+            // bumping it (baseline at step k has k updates applied —
+            // flush brings FF to the same state).
+            self.has_pending = false;
+            self.updated.iter_mut().for_each(|f| *f = false);
+        }
+    }
+
+    /// Forward + backward only: accumulate gradients without applying any
+    /// update and without bumping the step counter. Used by the DDP
+    /// coordinator (§C.5), where the schedule instead governs where the
+    /// all-reduce and the update land.
+    pub fn forward_backward(&mut self, externals: &[Tensor]) -> f32 {
+        let (acts, ctxs, _) = self.forward_pass(externals, false);
+        let loss_node = self.graph.loss_node.expect("loss node set");
+        let loss = acts[loss_node].as_ref().unwrap().data()[0];
+        self.last_loss = loss;
+        let n = self.graph.nodes.len();
+        let mut grads: Vec<Option<Tensor>> = (0..n).map(|_| None).collect();
+        grads[loss_node] = Some(Tensor::from_vec(&[1], vec![1.0]));
+        for i in (0..n).rev() {
+            let Some(gout) = grads[i].take() else { continue };
+            let node = &self.graph.nodes[i];
+            let input_refs: Vec<&Tensor> = node
+                .inputs
+                .iter()
+                .map(|s| match s {
+                    Src::Node(id) => acts[*id].as_ref().expect("alive"),
+                    Src::External(e) => &externals[*e],
+                })
+                .collect();
+            let guards: Vec<_> = node
+                .params
+                .iter()
+                .map(|p| self.graph.store.get(*p).data.read().unwrap())
+                .collect();
+            let param_refs: Vec<&Tensor> = guards.iter().map(|g| &g.value).collect();
+            let og = node.op.backward(&gout, &input_refs, &param_refs, &ctxs[i]);
+            drop(guards);
+            for (k, src) in self.graph.nodes[i].inputs.iter().enumerate() {
+                if let (Src::Node(dst), Some(g)) = (src, og.inputs.get(k).and_then(|x| x.as_ref()))
+                {
+                    match &mut grads[*dst] {
+                        Some(acc) => acc.axpy(1.0, g),
+                        slot @ None => *slot = Some(g.clone()),
+                    }
+                }
+            }
+            let pids: Vec<ParamId> = self.graph.nodes[i].params.clone();
+            for (k, pid) in pids.iter().enumerate() {
+                let p = self.graph.store.get(*pid);
+                p.data.write().unwrap().grad.axpy(1.0, &og.params[k]);
+            }
+        }
+        loss
+    }
+
+    /// Apply the optimizer to a single parameter at the *next* step index
+    /// (DDP backward-fusion path: update fused with its all-reduce).
+    pub fn apply_update(&mut self, pid: ParamId) {
+        let step = self.step + 1;
+        self.update_param_inline(pid, step);
+    }
+
+    /// Apply the optimizer to every parameter and advance the step
+    /// counter (DDP baseline path after the all-reduce).
+    pub fn apply_all_updates(&mut self) {
+        let step = self.step + 1;
+        if self.opt.needs_global() {
+            let norm = self.graph.store.global_grad_norm();
+            self.global_scale = if norm > 1.0 { 1.0 / norm } else { 1.0 };
+        }
+        for pid in 0..self.graph.store.len() {
+            self.update_param_inline(pid, step);
+        }
+        self.step = step;
+    }
+
+    /// Advance the step counter without updating (DDP backward-fusion,
+    /// where `apply_update` already ran per parameter).
+    pub fn advance_step(&mut self) {
+        self.step += 1;
+    }
+
+    /// Pure forward evaluation (no updates, no bookkeeping).
+    pub fn eval_loss(&mut self, externals: &[Tensor]) -> f32 {
+        let (acts, _, _) = self.forward_pass(externals, false);
+        acts[self.graph.loss_node.expect("loss node")]
+            .as_ref()
+            .unwrap()
+            .data()[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Graph, ScheduleKind, Src};
+    use crate::ops::activation::Relu;
+    use crate::ops::dense::Linear;
+    use crate::ops::loss::MseLoss;
+    use crate::optim::{Adam, GlobalNormClip, Sgd, SgdMomentum};
+    use crate::util::XorShiftRng;
+
+    fn mlp_graph(seed: u64, layers: usize) -> Graph {
+        let mut rng = XorShiftRng::new(seed);
+        let mut g = Graph::new("mlp", 2);
+        let mut prev = Src::External(0);
+        let dim = 8;
+        for l in 0..layers {
+            let w = g.param(&format!("w{l}"), &[dim, dim], &mut rng);
+            let lin = g.push(&format!("fc{l}"), Box::new(Linear::new(false)), vec![prev], vec![w]);
+            let act = g.push(&format!("relu{l}"), Box::new(Relu), vec![Src::Node(lin)], vec![]);
+            prev = Src::Node(act);
+        }
+        let loss = g.push("mse", Box::new(MseLoss), vec![prev, Src::External(1)], vec![]);
+        g.set_loss(loss);
+        g
+    }
+
+    fn data(seed: u64) -> Vec<Tensor> {
+        let mut rng = XorShiftRng::new(seed);
+        vec![
+            Tensor::randn(&[4, 8], 1.0, &mut rng),
+            Tensor::randn(&[4, 8], 1.0, &mut rng),
+        ]
+    }
+
+    fn run_schedule(kind: ScheduleKind, threads: usize, steps: usize) -> (Vec<f32>, Vec<Tensor>) {
+        let g = mlp_graph(77, 3);
+        let cfg = ExecConfig { schedule: kind, threads, race_guard: true, ..Default::default() };
+        let mut ex = Executor::new(g, Box::new(SgdMomentum), Hyper::default(), cfg).unwrap();
+        let d = data(5);
+        let mut losses = Vec::new();
+        for _ in 0..steps {
+            losses.push(ex.train_step(&d).loss);
+        }
+        ex.flush_pending();
+        (losses, ex.graph.store.snapshot())
+    }
+
+    /// DESIGN.md invariant 1: all three schedules produce identical
+    /// training trajectories ("do not alter the optimizer algorithm").
+    #[test]
+    fn schedules_equivalent() {
+        let (lb, pb) = run_schedule(ScheduleKind::Baseline, 0, 6);
+        let (lf, pf) = run_schedule(ScheduleKind::ForwardFusion, 0, 6);
+        let (lbf0, pbf0) = run_schedule(ScheduleKind::BackwardFusion, 0, 6);
+        let (lbf4, pbf4) = run_schedule(ScheduleKind::BackwardFusion, 4, 6);
+        assert_eq!(lb, lf, "FF losses must match baseline exactly");
+        assert_eq!(lb, lbf0, "BF(inline) losses must match baseline exactly");
+        assert_eq!(lb, lbf4, "BF(threads) losses must match baseline exactly");
+        for (i, (a, b)) in pb.iter().zip(pf.iter()).enumerate() {
+            assert!(a.max_abs_diff(b) < 1e-6, "FF param {i}");
+        }
+        for (i, (a, b)) in pb.iter().zip(pbf0.iter()).enumerate() {
+            assert!(a.max_abs_diff(b) < 1e-6, "BF0 param {i}");
+        }
+        for (i, (a, b)) in pb.iter().zip(pbf4.iter()).enumerate() {
+            assert!(a.max_abs_diff(b) < 1e-6, "BF4 param {i}");
+        }
+    }
+
+    #[test]
+    fn loss_decreases_under_all_schedules() {
+        for kind in ScheduleKind::ALL {
+            let (losses, _) = run_schedule(kind, 2, 10);
+            assert!(
+                losses.last().unwrap() < losses.first().unwrap(),
+                "{kind:?}: {losses:?}"
+            );
+        }
+    }
+
+    /// Paper Table 1: BF rejects global-information optimizers.
+    #[test]
+    fn bf_rejects_global_optimizer() {
+        let g = mlp_graph(1, 2);
+        let cfg = ExecConfig { schedule: ScheduleKind::BackwardFusion, ..Default::default() };
+        let r = Executor::new(
+            g,
+            Box::new(GlobalNormClip { inner: Sgd, max_norm: 1.0 }),
+            Hyper::default(),
+            cfg,
+        );
+        assert!(r.is_err());
+    }
+
+    /// FF supports global info (paper §B.1): clip factor is computed after
+    /// backward, lazily applied next forward, and must equal baseline.
+    #[test]
+    fn ff_supports_global_clip_and_matches_baseline() {
+        let run = |kind| {
+            let g = mlp_graph(42, 2);
+            let cfg = ExecConfig { schedule: kind, ..Default::default() };
+            let mut ex = Executor::new(
+                g,
+                Box::new(GlobalNormClip { inner: Sgd, max_norm: 1.0 }),
+                Hyper { lr: 0.05, weight_decay: 0.0, ..Hyper::default() },
+                cfg,
+            )
+            .unwrap();
+            let d = data(9);
+            for _ in 0..5 {
+                ex.train_step(&d);
+            }
+            ex.flush_pending();
+            ex.graph.store.snapshot()
+        };
+        let base = run(ScheduleKind::Baseline);
+        let ff = run(ScheduleKind::ForwardFusion);
+        for (a, b) in base.iter().zip(ff.iter()) {
+            assert!(a.max_abs_diff(b) < 1e-6);
+        }
+    }
+
+    /// §B.2: disabling the race guard must corrupt training relative to
+    /// baseline (the in-place update clobbers θ before ∂L/∂x uses it).
+    #[test]
+    fn race_guard_off_corrupts() {
+        let run = |guard: bool| {
+            let g = mlp_graph(33, 3);
+            let cfg = ExecConfig {
+                schedule: ScheduleKind::BackwardFusion,
+                threads: 0,
+                race_guard: guard, ..Default::default() };
+            let mut ex = Executor::new(
+                g,
+                Box::new(Sgd),
+                Hyper { lr: 0.1, weight_decay: 0.0, ..Hyper::default() },
+                cfg,
+            )
+            .unwrap();
+            let d = data(3);
+            for _ in 0..4 {
+                ex.train_step(&d);
+            }
+            ex.graph.store.snapshot()
+        };
+        let good = run(true);
+        let bad = run(false);
+        let max_diff = good
+            .iter()
+            .zip(bad.iter())
+            .map(|(a, b)| a.max_abs_diff(b))
+            .fold(0.0f32, f32::max);
+        assert!(max_diff > 1e-4, "naive ordering should diverge, diff {max_diff}");
+    }
+
+    /// Weight tying: a parameter used by two nodes updates exactly once
+    /// per iteration under every schedule (Alg. 2 `updated` flag /
+    /// Alg. 3 `count`), with gradients accumulated over both uses.
+    #[test]
+    fn weight_tying_updates_once() {
+        let build = || {
+            let mut rng = XorShiftRng::new(8);
+            let mut g = Graph::new("tied", 2);
+            let w = g.param("w_shared", &[8, 8], &mut rng);
+            let l1 = g.push("fc1", Box::new(Linear::new(false)), vec![Src::External(0)], vec![w]);
+            let r = g.push("relu", Box::new(Relu), vec![Src::Node(l1)], vec![]);
+            // same parameter used again
+            let l2 = g.push("fc2", Box::new(Linear::new(false)), vec![Src::Node(r)], vec![w]);
+            let loss =
+                g.push("mse", Box::new(MseLoss), vec![Src::Node(l2), Src::External(1)], vec![]);
+            g.set_loss(loss);
+            g
+        };
+        let d = data(4);
+        let mut outs = Vec::new();
+        for kind in ScheduleKind::ALL {
+            let cfg = ExecConfig { schedule: kind, threads: 2, race_guard: true, ..Default::default() };
+            let mut ex =
+                Executor::new(build(), Box::new(Adam), Hyper::default(), cfg).unwrap();
+            for _ in 0..4 {
+                ex.train_step(&d);
+            }
+            ex.flush_pending();
+            // one update per step: Adam step count visible via state being
+            // allocated exactly once and values matching across schedules
+            outs.push(ex.graph.store.snapshot());
+        }
+        for s in &outs[1..] {
+            assert!(outs[0][0].max_abs_diff(&s[0]) < 1e-6, "tied param equal across schedules");
+        }
+    }
+
+    #[test]
+    fn stats_phases_populated() {
+        let g = mlp_graph(2, 2);
+        let mut ex = Executor::new(
+            g,
+            Box::new(Adam),
+            Hyper::default(),
+            ExecConfig { schedule: ScheduleKind::Baseline, ..Default::default() },
+        )
+        .unwrap();
+        let d = data(6);
+        let s = ex.train_step(&d);
+        assert!(s.forward > Duration::ZERO);
+        assert!(s.backward > Duration::ZERO);
+        assert!(s.optimizer > Duration::ZERO);
+        assert_eq!(s.opt_in_forward, Duration::ZERO);
+        assert!(s.loss.is_finite());
+    }
+
+    #[test]
+    fn ff_first_step_has_no_fused_updates() {
+        let g = mlp_graph(2, 2);
+        let mut ex = Executor::new(
+            g,
+            Box::new(Sgd),
+            Hyper::default(),
+            ExecConfig { schedule: ScheduleKind::ForwardFusion, ..Default::default() },
+        )
+        .unwrap();
+        let d = data(6);
+        let s1 = ex.train_step(&d);
+        assert_eq!(s1.opt_in_forward, Duration::ZERO, "nothing pending on step 1");
+        let s2 = ex.train_step(&d);
+        assert!(s2.opt_in_forward > Duration::ZERO, "step 2 fuses step 1's updates");
+    }
+
+    #[test]
+    fn eval_loss_does_not_update() {
+        let g = mlp_graph(2, 2);
+        let mut ex = Executor::new(
+            g,
+            Box::new(Sgd),
+            Hyper::default(),
+            ExecConfig { schedule: ScheduleKind::ForwardFusion, ..Default::default() },
+        )
+        .unwrap();
+        let d = data(6);
+        ex.train_step(&d);
+        let before = ex.graph.store.snapshot();
+        let _ = ex.eval_loss(&d);
+        let after = ex.graph.store.snapshot();
+        for (a, b) in before.iter().zip(after.iter()) {
+            assert_eq!(a.max_abs_diff(b), 0.0);
+        }
+    }
+
+    /// LR schedules must be evaluated at the gradient's step index, so
+    /// FF's deferred updates still match baseline exactly.
+    #[test]
+    fn lr_schedule_equivalent_across_schedules() {
+        use crate::optim::sched::WarmupCosine;
+        let run = |kind| {
+            let g = mlp_graph(55, 3);
+            let mut ex = Executor::new(
+                g,
+                Box::new(Adam),
+                Hyper { weight_decay: 0.0, ..Hyper::default() },
+                ExecConfig { schedule: kind, threads: 2, ..Default::default() },
+            )
+            .unwrap();
+            ex.set_lr_schedule(Box::new(WarmupCosine {
+                peak: 0.01,
+                floor: 0.001,
+                warmup: 3,
+                total: 10,
+            }));
+            let d = data(8);
+            let losses: Vec<f32> = (0..8).map(|_| ex.train_step(&d).loss).collect();
+            ex.flush_pending();
+            (losses, ex.graph.store.snapshot())
+        };
+        let (lb, pb) = run(ScheduleKind::Baseline);
+        let (lf, pf) = run(ScheduleKind::ForwardFusion);
+        let (lbf, pbf) = run(ScheduleKind::BackwardFusion);
+        assert_eq!(lb, lf, "FF with LR schedule must match baseline");
+        assert_eq!(lb, lbf, "BF with LR schedule must match baseline");
+        for ((a, b), c) in pb.iter().zip(pf.iter()).zip(pbf.iter()) {
+            assert!(a.max_abs_diff(b) < 1e-6);
+            assert!(a.max_abs_diff(c) < 1e-6);
+        }
+    }
+
+    /// Gradient accumulation: updates fire only on boundary steps, grads
+    /// accumulate in between — and all three schedules still agree.
+    #[test]
+    fn grad_accumulation_equivalent_across_schedules() {
+        let run = |kind| {
+            let g = mlp_graph(66, 2);
+            let mut ex = Executor::new(
+                g,
+                Box::new(SgdMomentum),
+                Hyper { lr: 0.01, ..Hyper::default() },
+                ExecConfig { schedule: kind, threads: 2, accum_steps: 3, ..Default::default() },
+            )
+            .unwrap();
+            let d = data(4);
+            let losses: Vec<f32> = (0..9).map(|_| ex.train_step(&d).loss).collect();
+            ex.flush_pending();
+            (losses, ex.graph.store.snapshot())
+        };
+        let (lb, pb) = run(ScheduleKind::Baseline);
+        let (lf, pf) = run(ScheduleKind::ForwardFusion);
+        let (lbf, pbf) = run(ScheduleKind::BackwardFusion);
+        assert_eq!(lb, lf);
+        assert_eq!(lb, lbf);
+        for ((a, b), c) in pb.iter().zip(pf.iter()).zip(pbf.iter()) {
+            assert!(a.max_abs_diff(b) < 1e-6);
+            assert!(a.max_abs_diff(c) < 1e-6);
+        }
+        // micro-steps between boundaries must not change params: losses on
+        // steps 1-3 are identical (same weights, same data)
+        assert_eq!(lb[0], lb[1]);
+        assert_eq!(lb[1], lb[2]);
+        assert_ne!(lb[2], lb[3], "boundary update landed");
+    }
+
+    #[test]
+    fn counters_track_overhead() {
+        let g = mlp_graph(2, 3);
+        let mut ex = Executor::new(
+            g,
+            Box::new(Sgd),
+            Hyper::default(),
+            ExecConfig { schedule: ScheduleKind::BackwardFusion, ..Default::default() },
+        )
+        .unwrap();
+        let d = data(6);
+        ex.train_step(&d);
+        assert!(ex.counters.refcount_ops >= 6); // 3 params × (inc + dec)
+        assert_eq!(ex.counters.updates_dispatched, 3);
+    }
+}

@@ -1,0 +1,188 @@
+//! Worker pool for backward-fusion: parameter updates are dispatched to
+//! background threads so they overlap the remaining back-propagation —
+//! the paper's parallelism claim (§3, Fig. 1d).
+
+use crate::graph::ParamRef;
+use crate::optim::{Hyper, Optimizer};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// One optimizer-update job.
+pub struct Job {
+    pub param: ParamRef,
+    pub opt: Arc<dyn Optimizer>,
+    pub hyper: Hyper,
+    pub step: u64,
+    pub scale: f32,
+}
+
+enum Msg {
+    Run(Job),
+    Stop,
+}
+
+/// Tracks in-flight jobs and total busy time across workers.
+struct Shared {
+    pending: Mutex<usize>,
+    done: Condvar,
+    /// Sum of per-job wallclock across workers, in nanos (the "hidden"
+    /// optimizer time that overlapped backward).
+    busy_ns: Mutex<u64>,
+}
+
+/// A fixed pool of update workers fed from one shared queue.
+pub struct UpdatePool {
+    tx: Sender<Msg>,
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    pub workers: usize,
+}
+
+impl UpdatePool {
+    pub fn new(workers: usize) -> Self {
+        assert!(workers > 0);
+        let (tx, rx) = channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let shared = Arc::new(Shared {
+            pending: Mutex::new(0),
+            done: Condvar::new(),
+            busy_ns: Mutex::new(0),
+        });
+        let handles = (0..workers)
+            .map(|_| {
+                let rx: Arc<Mutex<Receiver<Msg>>> = Arc::clone(&rx);
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || loop {
+                    let msg = { rx.lock().unwrap().recv() };
+                    match msg {
+                        Ok(Msg::Run(job)) => {
+                            let t0 = Instant::now();
+                            {
+                                let mut pd = job.param.data.write().unwrap();
+                                job.opt.update(job.step, &mut pd, &job.hyper, job.scale);
+                            }
+                            let ns = t0.elapsed().as_nanos() as u64;
+                            *shared.busy_ns.lock().unwrap() += ns;
+                            let mut p = shared.pending.lock().unwrap();
+                            *p -= 1;
+                            if *p == 0 {
+                                shared.done.notify_all();
+                            }
+                        }
+                        Ok(Msg::Stop) | Err(_) => break,
+                    }
+                })
+            })
+            .collect();
+        Self { tx, shared, handles, workers }
+    }
+
+    /// Enqueue an update; returns immediately.
+    pub fn submit(&self, job: Job) {
+        {
+            let mut p = self.shared.pending.lock().unwrap();
+            *p += 1;
+        }
+        self.tx.send(Msg::Run(job)).expect("pool alive");
+    }
+
+    /// Block until every submitted job has completed.
+    pub fn wait_all(&self) {
+        let mut p = self.shared.pending.lock().unwrap();
+        while *p != 0 {
+            p = self.shared.done.wait(p).unwrap();
+        }
+    }
+
+    /// Drain and reset the accumulated busy time.
+    pub fn take_busy(&self) -> Duration {
+        let mut b = self.shared.busy_ns.lock().unwrap();
+        let d = Duration::from_nanos(*b);
+        *b = 0;
+        d
+    }
+}
+
+impl Drop for UpdatePool {
+    fn drop(&mut self) {
+        for _ in &self.handles {
+            let _ = self.tx.send(Msg::Stop);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Param, ParamData};
+    use crate::optim::Sgd;
+    use crate::tensor::Tensor;
+    use std::sync::RwLock;
+
+    fn mk_param(n: usize) -> ParamRef {
+        Arc::new(Param {
+            data: RwLock::new(ParamData {
+                name: "p".into(),
+                value: Tensor::full(&[n], 1.0),
+                grad: Tensor::full(&[n], 1.0),
+                state: Vec::new(),
+            }),
+        })
+    }
+
+    #[test]
+    fn updates_applied_and_waited() {
+        let pool = UpdatePool::new(4);
+        let params: Vec<ParamRef> = (0..16).map(|_| mk_param(128)).collect();
+        let opt: Arc<dyn Optimizer> = Arc::new(Sgd);
+        let hp = Hyper { lr: 1.0, weight_decay: 0.0, ..Hyper::default() };
+        for p in &params {
+            pool.submit(Job {
+                param: Arc::clone(p),
+                opt: Arc::clone(&opt),
+                hyper: hp.clone(),
+                step: 1,
+                scale: 1.0,
+            });
+        }
+        pool.wait_all();
+        for p in &params {
+            let pd = p.data.read().unwrap();
+            assert_eq!(pd.value.data()[0], 0.0); // 1 - 1*1
+            assert_eq!(pd.grad.data()[0], 0.0); // reset
+        }
+        assert!(pool.take_busy() > Duration::ZERO);
+        assert_eq!(pool.take_busy(), Duration::ZERO, "busy resets");
+    }
+
+    #[test]
+    fn wait_all_on_empty_is_instant() {
+        let pool = UpdatePool::new(2);
+        pool.wait_all();
+    }
+
+    #[test]
+    fn reusable_across_rounds() {
+        let pool = UpdatePool::new(2);
+        let p = mk_param(8);
+        let opt: Arc<dyn Optimizer> = Arc::new(Sgd);
+        let hp = Hyper { lr: 0.5, weight_decay: 0.0, ..Hyper::default() };
+        for round in 0..3 {
+            p.data.write().unwrap().grad = Tensor::full(&[8], 1.0);
+            pool.submit(Job {
+                param: Arc::clone(&p),
+                opt: Arc::clone(&opt),
+                hyper: hp.clone(),
+                step: round + 1,
+                scale: 1.0,
+            });
+            pool.wait_all();
+        }
+        assert!((p.data.read().unwrap().value.data()[0] - (1.0 - 1.5)).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,402 @@
+//! Dynamic computational graph. A model is a builder that appends nodes
+//! to a [`Graph`]; the executor walks nodes in insertion (topological)
+//! order for forward and in reverse for backward — exactly the eager-mode
+//! tape of PyTorch/TF2 the paper targets.
+//!
+//! Depth analysis ([`Graph::schedule_depth`]) reproduces the paper's §3
+//! observation: with per-layer nodes, baseline dependency depth is 3n
+//! (forward n + backward n + optimizer n serialized) while
+//! backward-fusion is 2n+1 (updates overlap the remaining backward).
+
+use crate::ops::Op;
+use crate::tensor::Tensor;
+use crate::util::XorShiftRng;
+use std::sync::{Arc, RwLock};
+
+/// Identifies a parameter in the [`ParamStore`].
+pub type ParamId = usize;
+
+/// Identifies a node (insertion index) in the [`Graph`].
+pub type NodeId = usize;
+
+/// Where a node input comes from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Src {
+    /// Output of an earlier node.
+    Node(NodeId),
+    /// External graph input (e.g. images, labels), by position.
+    External(usize),
+}
+
+/// One op application in the graph.
+pub struct Node {
+    pub op: Box<dyn Op>,
+    pub inputs: Vec<Src>,
+    pub params: Vec<ParamId>,
+    pub label: String,
+}
+
+/// Mutable per-parameter payload, shared with the update worker pool.
+pub struct ParamData {
+    pub name: String,
+    pub value: Tensor,
+    pub grad: Tensor,
+    /// Optimizer state slots (momentum, v, accumulators, ...), created
+    /// lazily by the optimizer on first update.
+    pub state: Vec<Tensor>,
+}
+
+/// A parameter cell: lock-protected so backward-fusion can update one
+/// parameter on a worker thread while the main thread keeps running
+/// backward for others (the paper's parallelism claim).
+pub struct Param {
+    pub data: RwLock<ParamData>,
+}
+
+pub type ParamRef = Arc<Param>;
+
+/// All trainable parameters of a model.
+#[derive(Default)]
+pub struct ParamStore {
+    pub params: Vec<ParamRef>,
+}
+
+impl ParamStore {
+    pub fn add(&mut self, name: &str, value: Tensor) -> ParamId {
+        let grad = Tensor::zeros(value.shape());
+        self.params.push(Arc::new(Param {
+            data: RwLock::new(ParamData {
+                name: name.to_string(),
+                value,
+                grad,
+                state: Vec::new(),
+            }),
+        }));
+        self.params.len() - 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.params.is_empty()
+    }
+
+    pub fn get(&self, id: ParamId) -> &ParamRef {
+        &self.params[id]
+    }
+
+    /// Total number of scalar parameters.
+    pub fn num_scalars(&self) -> usize {
+        self.params
+            .iter()
+            .map(|p| p.data.read().unwrap().value.len())
+            .sum()
+    }
+
+    /// Snapshot all values (for schedule-equivalence tests).
+    pub fn snapshot(&self) -> Vec<Tensor> {
+        self.params
+            .iter()
+            .map(|p| p.data.read().unwrap().value.clone())
+            .collect()
+    }
+
+    /// Global L2 norm over all grads (for global-norm clipping).
+    pub fn global_grad_norm(&self) -> f32 {
+        self.params
+            .iter()
+            .map(|p| {
+                let g = &p.data.read().unwrap().grad;
+                g.data().iter().map(|x| x * x).sum::<f32>()
+            })
+            .sum::<f32>()
+            .sqrt()
+    }
+
+    pub fn zero_grads(&self) {
+        for p in &self.params {
+            p.data.write().unwrap().grad.zero_();
+        }
+    }
+}
+
+/// A model: nodes in topological order + its parameters + which node is
+/// the scalar loss.
+pub struct Graph {
+    pub nodes: Vec<Node>,
+    pub store: ParamStore,
+    pub loss_node: Option<NodeId>,
+    /// Number of external inputs expected by `forward` (data, labels, ...).
+    pub num_externals: usize,
+    pub name: String,
+}
+
+impl Graph {
+    pub fn new(name: &str, num_externals: usize) -> Self {
+        Self {
+            nodes: Vec::new(),
+            store: ParamStore::default(),
+            loss_node: None,
+            num_externals,
+            name: name.to_string(),
+        }
+    }
+
+    /// Append a node; inputs must reference earlier nodes (or externals),
+    /// which keeps insertion order a valid topological order.
+    pub fn push(
+        &mut self,
+        label: &str,
+        op: Box<dyn Op>,
+        inputs: Vec<Src>,
+        params: Vec<ParamId>,
+    ) -> NodeId {
+        let id = self.nodes.len();
+        for src in &inputs {
+            if let Src::Node(n) = src {
+                assert!(*n < id, "graph not topologically ordered: {label}");
+            }
+        }
+        self.nodes.push(Node {
+            op,
+            inputs,
+            params,
+            label: label.to_string(),
+        });
+        id
+    }
+
+    /// Register a parameter with Kaiming init.
+    pub fn param(&mut self, name: &str, shape: &[usize], rng: &mut XorShiftRng) -> ParamId {
+        self.store.add(name, Tensor::kaiming(shape, rng))
+    }
+
+    /// Register a parameter with explicit init.
+    pub fn param_init(&mut self, name: &str, value: Tensor) -> ParamId {
+        self.store.add(name, value)
+    }
+
+    pub fn set_loss(&mut self, node: NodeId) {
+        self.loss_node = Some(node);
+    }
+
+    /// Layers = nodes that own at least one parameter (the paper's `n`).
+    pub fn num_layers(&self) -> usize {
+        self.nodes.iter().filter(|n| !n.params.is_empty()).count()
+    }
+
+    /// Average parameters per layer — the x-axis of the paper's Fig. 6.
+    pub fn avg_params_per_layer(&self) -> f64 {
+        let layers = self.num_layers().max(1);
+        self.store.num_scalars() as f64 / layers as f64
+    }
+
+    /// Dependency depth of one training iteration under a schedule, in
+    /// units of graph stages (paper §3: baseline 3n, backward-fusion 2n+1).
+    pub fn schedule_depth(&self, schedule: ScheduleKind) -> usize {
+        let n = self.num_layers();
+        match schedule {
+            ScheduleKind::Baseline => 3 * n,
+            // updates of θ_i overlap backward of f_{i-1}..f_1; only the
+            // last update extends the critical path by one stage.
+            ScheduleKind::BackwardFusion => 2 * n + 1,
+            // updates are serialized into the next forward: same critical
+            // path length as baseline within one iteration, but the write
+            // merges with the next read (locality, not depth).
+            ScheduleKind::ForwardFusion => 3 * n,
+        }
+    }
+
+    /// Which nodes reference each param (for refcounts / weight tying).
+    pub fn param_uses(&self) -> Vec<Vec<NodeId>> {
+        let mut uses = vec![Vec::new(); self.store.len()];
+        for (i, node) in self.nodes.iter().enumerate() {
+            for p in &node.params {
+                uses[*p].push(i);
+            }
+        }
+        uses
+    }
+
+    /// Consumers of each node's output (used for activation lifetime and
+    /// grad fan-in accumulation).
+    pub fn consumers(&self) -> Vec<Vec<NodeId>> {
+        let mut cons = vec![Vec::new(); self.nodes.len()];
+        for (i, node) in self.nodes.iter().enumerate() {
+            for src in &node.inputs {
+                if let Src::Node(n) = src {
+                    cons[*n].push(i);
+                }
+            }
+        }
+        cons
+    }
+
+    /// Total forward FLOPs for given external input shapes.
+    pub fn flops(&self, ext_shapes: &[Vec<usize>]) -> u64 {
+        let shapes = self.infer_shapes(ext_shapes);
+        let mut total = 0u64;
+        for (i, node) in self.nodes.iter().enumerate() {
+            let in_shapes: Vec<&[usize]> = node
+                .inputs
+                .iter()
+                .map(|s| match s {
+                    Src::Node(n) => shapes[*n].as_slice(),
+                    Src::External(e) => ext_shapes[*e].as_slice(),
+                })
+                .collect();
+            let p_shapes: Vec<Vec<usize>> = node
+                .params
+                .iter()
+                .map(|p| self.store.get(*p).data.read().unwrap().value.shape().to_vec())
+                .collect();
+            let p_refs: Vec<&[usize]> = p_shapes.iter().map(|v| v.as_slice()).collect();
+            total += node.op.flops(&in_shapes, &p_refs);
+            let _ = i;
+        }
+        total
+    }
+
+    /// Shape-infer every node output from external shapes.
+    pub fn infer_shapes(&self, ext_shapes: &[Vec<usize>]) -> Vec<Vec<usize>> {
+        let mut shapes: Vec<Vec<usize>> = Vec::with_capacity(self.nodes.len());
+        for node in &self.nodes {
+            let in_shapes: Vec<&[usize]> = node
+                .inputs
+                .iter()
+                .map(|s| match s {
+                    Src::Node(n) => shapes[*n].as_slice(),
+                    Src::External(e) => ext_shapes[*e].as_slice(),
+                })
+                .collect();
+            let p_shapes: Vec<Vec<usize>> = node
+                .params
+                .iter()
+                .map(|p| self.store.get(*p).data.read().unwrap().value.shape().to_vec())
+                .collect();
+            let p_refs: Vec<&[usize]> = p_shapes.iter().map(|v| v.as_slice()).collect();
+            shapes.push(node.op.out_shape(&in_shapes, &p_refs));
+        }
+        shapes
+    }
+}
+
+/// The three execution schedules of the paper (Fig. 1 b/c/d).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ScheduleKind {
+    Baseline,
+    ForwardFusion,
+    BackwardFusion,
+}
+
+impl ScheduleKind {
+    pub const ALL: [ScheduleKind; 3] = [
+        ScheduleKind::Baseline,
+        ScheduleKind::ForwardFusion,
+        ScheduleKind::BackwardFusion,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ScheduleKind::Baseline => "baseline",
+            ScheduleKind::ForwardFusion => "forward-fusion",
+            ScheduleKind::BackwardFusion => "backward-fusion",
+        }
+    }
+}
+
+impl std::str::FromStr for ScheduleKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "baseline" | "base" => Ok(ScheduleKind::Baseline),
+            "forward-fusion" | "ff" | "forward" => Ok(ScheduleKind::ForwardFusion),
+            "backward-fusion" | "bf" | "backward" => Ok(ScheduleKind::BackwardFusion),
+            _ => Err(format!("unknown schedule '{s}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::activation::Relu;
+    use crate::ops::dense::Linear;
+    use crate::ops::loss::MseLoss;
+
+    fn tiny_graph() -> Graph {
+        let mut rng = XorShiftRng::new(20);
+        let mut g = Graph::new("tiny", 2);
+        let w1 = g.param("w1", &[4, 8], &mut rng);
+        let w2 = g.param("w2", &[8, 2], &mut rng);
+        let l1 = g.push("fc1", Box::new(Linear::new(false)), vec![Src::External(0)], vec![w1]);
+        let r1 = g.push("relu", Box::new(Relu), vec![Src::Node(l1)], vec![]);
+        let l2 = g.push("fc2", Box::new(Linear::new(false)), vec![Src::Node(r1)], vec![w2]);
+        let loss = g.push(
+            "mse",
+            Box::new(MseLoss),
+            vec![Src::Node(l2), Src::External(1)],
+            vec![],
+        );
+        g.set_loss(loss);
+        g
+    }
+
+    #[test]
+    fn layers_and_depth() {
+        let g = tiny_graph();
+        assert_eq!(g.num_layers(), 2);
+        assert_eq!(g.schedule_depth(ScheduleKind::Baseline), 6);
+        assert_eq!(g.schedule_depth(ScheduleKind::BackwardFusion), 5);
+        assert_eq!(g.schedule_depth(ScheduleKind::ForwardFusion), 6);
+    }
+
+    #[test]
+    fn param_uses_and_consumers() {
+        let g = tiny_graph();
+        let uses = g.param_uses();
+        assert_eq!(uses[0], vec![0]);
+        assert_eq!(uses[1], vec![2]);
+        let cons = g.consumers();
+        assert_eq!(cons[0], vec![1]); // fc1 -> relu
+        assert_eq!(cons[2], vec![3]); // fc2 -> loss
+    }
+
+    #[test]
+    fn shape_inference() {
+        let g = tiny_graph();
+        let shapes = g.infer_shapes(&[vec![3, 4], vec![3, 2]]);
+        assert_eq!(shapes[0], vec![3, 8]);
+        assert_eq!(shapes[2], vec![3, 2]);
+        assert_eq!(shapes[3], vec![1]);
+    }
+
+    #[test]
+    fn flops_positive() {
+        let g = tiny_graph();
+        assert!(g.flops(&[vec![3, 4], vec![3, 2]]) > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "topologically ordered")]
+    fn rejects_forward_reference() {
+        let mut g = Graph::new("bad", 1);
+        g.push("x", Box::new(Relu), vec![Src::Node(5)], vec![]);
+    }
+
+    #[test]
+    fn avg_params_per_layer_counts_scalars() {
+        let g = tiny_graph();
+        assert_eq!(g.store.num_scalars(), 4 * 8 + 8 * 2);
+        assert!((g.avg_params_per_layer() - 24.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn schedule_parsing() {
+        assert_eq!("bf".parse::<ScheduleKind>().unwrap(), ScheduleKind::BackwardFusion);
+        assert_eq!("baseline".parse::<ScheduleKind>().unwrap(), ScheduleKind::Baseline);
+        assert!("nope".parse::<ScheduleKind>().is_err());
+    }
+}

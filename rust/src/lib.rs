@@ -1,0 +1,23 @@
+//! optfuse — reproduction of "Optimizer Fusion: Efficient Training with
+//! Better Locality and Parallelism" (Jiang et al., 2021).
+//!
+//! Three-layer architecture:
+//! * L3 (this crate): eager-execution training engine whose scheduler
+//!   implements the paper's baseline / forward-fusion / backward-fusion.
+//! * L2/L1 (python/, build-time only): JAX model + Pallas fused kernels,
+//!   AOT-lowered to HLO text and executed via PJRT in `runtime`.
+
+pub mod checkpoint;
+pub mod config;
+pub mod data;
+pub mod ddp;
+pub mod exec;
+pub mod graph;
+pub mod memsim;
+pub mod models;
+pub mod ops;
+pub mod optim;
+pub mod runtime;
+pub mod train;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,204 @@
+//! optfuse CLI — the L3 coordinator entrypoint.
+//!
+//! Subcommands:
+//!   info                         engine + artifact summary, Table-1 matrix
+//!   train       --model M --schedule S --optimizer O --batch B --steps N
+//!   simulate    --model M --machine X --batch B --optimizer O  (memsim)
+//!   ddp         --world W --schedule S --steps N
+//!   artifacts   list + smoke-execute the AOT artifacts via PJRT
+
+use optfuse::config::Args;
+use optfuse::data;
+use optfuse::ddp::{train_ddp, DdpConfig};
+use optfuse::exec::{ExecConfig, Executor};
+use optfuse::graph::ScheduleKind;
+use optfuse::memsim::{self, machines, spec::OptSpec, zoo};
+use optfuse::models;
+use optfuse::optim::{self, Hyper};
+use optfuse::runtime::{default_artifacts_dir, Runtime};
+use optfuse::tensor::Tensor;
+use optfuse::train;
+use optfuse::util::XorShiftRng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    match args.command.as_deref() {
+        Some("info") | None => info(&args),
+        Some("train") => cmd_train(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("ddp") => cmd_ddp(&args),
+        Some("artifacts") => cmd_artifacts(&args),
+        Some(other) => {
+            eprintln!("unknown command '{other}'; try: info, train, simulate, ddp, artifacts");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn info(_args: &Args) -> anyhow::Result<()> {
+    println!("optfuse — Optimizer Fusion (Jiang et al., 2021) reproduction");
+    println!();
+    println!("Table 1 (method properties):");
+    println!("  method            locality  parallelism  global-info");
+    println!("  baseline          no        no           yes");
+    println!("  forward-fusion    yes       no           yes");
+    println!("  backward-fusion   yes       yes          no");
+    println!();
+    println!("models: {}", models::image_zoo().iter().map(|m| m.name).collect::<Vec<_>>().join(", "));
+    println!("optimizers: {}", optim::LOCAL_OPTIMIZERS.join(", "));
+    match Runtime::load(default_artifacts_dir()) {
+        Ok(rt) => println!("artifacts ({}): {}", rt.platform(), rt.artifact_names().join(", ")),
+        Err(e) => println!("artifacts: not available ({e})"),
+    }
+    Ok(())
+}
+
+fn hyper_from(args: &Args) -> Hyper {
+    Hyper {
+        lr: args.f32_or("lr", 1e-3),
+        weight_decay: args.f32_or("wd", 1e-2),
+        momentum: args.f32_or("momentum", 0.9),
+        ..Hyper::default()
+    }
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let model = args.str_or("model", "mobilenet_v2_ish");
+    let schedule: ScheduleKind = args
+        .str_or("schedule", "backward-fusion")
+        .parse()
+        .map_err(|e: String| anyhow::anyhow!(e))?;
+    let opt_name = args.str_or("optimizer", "adam");
+    let batch = args.usize_or("batch", 32);
+    let steps = args.usize_or("steps", 20);
+    let threads = args.usize_or("threads", 4);
+    let seed = args.usize_or("seed", 1) as u64;
+
+    let graph = models::by_name(&model, seed)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
+    let opt = optim::by_name(&opt_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown optimizer '{opt_name}'"))?;
+    println!(
+        "training {model} ({} params, {} layers) schedule={} optimizer={opt_name} batch={batch}",
+        graph.store.num_scalars(),
+        graph.num_layers(),
+        schedule.label()
+    );
+    let mut ex = Executor::new(
+        graph,
+        opt,
+        hyper_from(args),
+        ExecConfig { schedule, threads, race_guard: true, ..Default::default() },
+    )?;
+    let mut rng = XorShiftRng::new(seed + 100);
+    let is_lm = model.starts_with("transformer");
+    let corpus = data::synthetic_corpus(1 << 15, 256, 11);
+    let cfg = models::TransformerCfg::small();
+    let report = train::run(&mut ex, steps, 2.min(steps), |_| {
+        if is_lm {
+            models::transformer::token_batch(&cfg, batch, &corpus, &mut rng)
+        } else {
+            data::image_batch(batch, 3, 16, 16, 10, &mut rng)
+        }
+    });
+    println!("{}", train::breakdown_row(schedule.label(), &report));
+    println!(
+        "loss {:.4} -> {:.4} | throughput {:.1} samples/s",
+        report.losses.first().unwrap_or(&f32::NAN),
+        report.final_loss(),
+        report.throughput(batch)
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let model = args.str_or("model", "mobilenet_v2");
+    let machine_name = args.str_or("machine", "titan_xp");
+    let batch = args.usize_or("batch", 32);
+    let opt_name = args.str_or("optimizer", "adam");
+    let net = match model.as_str() {
+        "mobilenet_v2" => zoo::mobilenet_v2(),
+        "resnet18" => zoo::resnet18(),
+        "resnet50" => zoo::resnet50(),
+        "vgg19_bn" => zoo::vgg19_bn(),
+        "densenet121" => zoo::densenet121(),
+        "transformer_base" => zoo::transformer_base(),
+        other => anyhow::bail!("unknown sim model '{other}'"),
+    };
+    let machine = match machine_name.as_str() {
+        "titan_xp" => machines::titan_xp(),
+        "gtx_1080" => machines::gtx_1080(),
+        "gtx_1070_maxq" => machines::gtx_1070_maxq(),
+        "cpu" => machines::cpu_host(),
+        other => anyhow::bail!("unknown machine '{other}'"),
+    };
+    let opt = OptSpec::by_name(&opt_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown optimizer '{opt_name}'"))?;
+    println!(
+        "simulating {model} ({:.1}M params) on {} | batch {batch} optimizer {opt_name}",
+        net.total_params() as f64 / 1e6,
+        machine.name
+    );
+    let base = memsim::simulate(&machine, &net, &opt, batch, ScheduleKind::Baseline);
+    for kind in ScheduleKind::ALL {
+        let r = memsim::simulate(&machine, &net, &opt, batch, kind);
+        let (f, b, o, t) = r.ms();
+        println!(
+            "  {:<16} fwd {f:8.2} bwd {b:8.2} opt {o:8.2} total {t:8.2} ms  speedup {:.3}",
+            kind.label(),
+            base.total_s / r.total_s
+        );
+    }
+    Ok(())
+}
+
+fn cmd_ddp(args: &Args) -> anyhow::Result<()> {
+    let world = args.usize_or("world", 2);
+    let steps = args.usize_or("steps", 5);
+    let schedule: ScheduleKind = args
+        .str_or("schedule", "backward-fusion")
+        .parse()
+        .map_err(|e: String| anyhow::anyhow!(e))?;
+    let batch = args.usize_or("batch", 8);
+    println!("DDP: world={world} schedule={} steps={steps}", schedule.label());
+    let report = train_ddp(
+        || models::mobilenet_v2_ish(3),
+        || optim::by_name("adam").unwrap(),
+        Hyper::default(),
+        DdpConfig {
+            world,
+            schedule,
+            steps,
+            local_batch_maker: Box::new(move |rank, step| {
+                let mut rng = XorShiftRng::new(((rank as u64) << 32) | step as u64);
+                data::image_batch(batch, 3, 16, 16, 10, &mut rng)
+            }),
+        },
+    );
+    println!(
+        "iter {:.2} ms | comm {:.2} MiB | final loss {:.4}",
+        report.iter_ms,
+        report.comm_bytes as f64 / (1 << 20) as f64,
+        report.losses.last().unwrap_or(&f32::NAN)
+    );
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> anyhow::Result<()> {
+    let dir = args.str_or("dir", default_artifacts_dir().to_str().unwrap());
+    let rt = Runtime::load(&dir)?;
+    println!("platform: {}", rt.platform());
+    for name in rt.artifact_names() {
+        let meta = rt.meta(name).unwrap();
+        print!("  {name}: {} inputs -> {} outputs ... ", meta.inputs.len(), meta.outputs);
+        // smoke-execute with zeros
+        let inputs: Vec<Tensor> = meta.inputs.iter().map(|s| {
+            if s.is_empty() { Tensor::from_vec(&[], vec![1.0]) } else { Tensor::zeros(s) }
+        }).collect();
+        match rt.execute(name, &inputs) {
+            Ok(out) => println!("ok ({} tensors)", out.len()),
+            Err(e) => println!("FAILED: {e}"),
+        }
+    }
+    Ok(())
+}

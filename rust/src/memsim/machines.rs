@@ -1,0 +1,96 @@
+//! Machine presets. The three GPU machines mirror the paper's Table 2
+//! testbeds (TITAN Xp / GTX 1080 / GTX 1070 maxQ) via their public spec
+//! sheets; host-side overheads reflect the paired CPUs' single-core speed.
+
+use super::Machine;
+
+const GB: f64 = 1e9;
+const TFLOP: f64 = 1e12;
+const MIB: u64 = 1 << 20;
+
+/// TITAN Xp + Core i9-7900X (paper Table 2 row 1).
+pub fn titan_xp() -> Machine {
+    Machine {
+        name: "TITAN Xp + i9-7900X".into(),
+        flops: 12.15 * TFLOP,
+        flops_efficiency: 0.11,
+        mem_bw: 547.6 * GB,
+        cache_bytes: 3 * MIB,
+        cache_bw_mult: 6.0,
+        launch_s: 10.0e-6,
+        overlap_efficiency: 0.85,
+        ctrl_s: 1.5e-6,
+    }
+}
+
+/// GTX 1080 + Core i7-3770 (paper Table 2 row 2). Older, slower host CPU
+/// → bigger launch overhead, so more to save by fusing.
+pub fn gtx_1080() -> Machine {
+    Machine {
+        name: "GTX 1080 + i7-3770".into(),
+        flops: 8.87 * TFLOP,
+        flops_efficiency: 0.11,
+        mem_bw: 320.0 * GB,
+        cache_bytes: 2 * MIB,
+        cache_bw_mult: 6.0,
+        launch_s: 14.0e-6,
+        overlap_efficiency: 0.85,
+        ctrl_s: 2.5e-6,
+    }
+}
+
+/// GTX 1070 maxQ + Core i7-8750H laptop (paper Table 2 row 3).
+pub fn gtx_1070_maxq() -> Machine {
+    Machine {
+        name: "GTX 1070 maxQ + i7-8750H".into(),
+        flops: 6.1 * TFLOP,
+        flops_efficiency: 0.11,
+        mem_bw: 256.0 * GB,
+        cache_bytes: 2 * MIB,
+        cache_bw_mult: 6.0,
+        launch_s: 12.0e-6,
+        overlap_efficiency: 0.75,
+        ctrl_s: 2.0e-6,
+    }
+}
+
+/// The machine this reproduction actually runs on (CPU PJRT): modest
+/// FLOPs, large LLC relative to bandwidth, negligible launch overhead.
+/// Used for sanity comparisons of simulated vs. measured wallclock shape.
+pub fn cpu_host() -> Machine {
+    Machine {
+        name: "CPU host (PJRT)".into(),
+        flops: 0.15 * TFLOP,
+        flops_efficiency: 0.5,
+        mem_bw: 20.0 * GB,
+        cache_bytes: 32 * MIB,
+        cache_bw_mult: 4.0,
+        launch_s: 0.3e-6,
+        overlap_efficiency: 0.0,
+        ctrl_s: 0.2e-6,
+    }
+}
+
+/// Table 2 rows in paper order.
+pub fn table2_machines() -> Vec<Machine> {
+    vec![titan_xp(), gtx_1080(), gtx_1070_maxq()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_ordered_by_compute() {
+        let t = titan_xp();
+        let g8 = gtx_1080();
+        let g7 = gtx_1070_maxq();
+        assert!(t.flops > g8.flops && g8.flops > g7.flops);
+        assert!(t.mem_bw > g8.mem_bw && g8.mem_bw > g7.mem_bw);
+    }
+
+    #[test]
+    fn table2_has_three_rows() {
+        assert_eq!(table2_machines().len(), 3);
+    }
+}

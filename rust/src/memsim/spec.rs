@@ -1,0 +1,308 @@
+//! Shape-level network + optimizer descriptions for the simulator.
+//! These carry *sizes only* — no weight data — so ImageNet-scale models
+//! and batch-256 sweeps cost nothing to build (DESIGN.md §4 substitution).
+
+use super::{Kernel, Phase, TensorId};
+
+/// One parameterized layer (or param-free stage) of a network.
+#[derive(Debug, Clone)]
+pub struct LayerSpec {
+    pub name: String,
+    /// Parameter tensors (element counts). Empty for param-free stages.
+    pub param_elems: Vec<u64>,
+    /// Input activation elements per batch item.
+    pub in_elems: u64,
+    /// Output activation elements per batch item.
+    pub out_elems: u64,
+    /// Forward FLOPs per batch item.
+    pub flops_per_item: f64,
+}
+
+impl LayerSpec {
+    pub fn params_total(&self) -> u64 {
+        self.param_elems.iter().sum()
+    }
+}
+
+/// A whole network as an ordered layer list.
+#[derive(Debug, Clone)]
+pub struct NetSpec {
+    pub name: String,
+    pub layers: Vec<LayerSpec>,
+}
+
+const F32: u64 = 4;
+
+impl NetSpec {
+    pub fn total_params(&self) -> u64 {
+        self.layers.iter().map(|l| l.params_total()).sum()
+    }
+
+    pub fn num_param_tensors(&self) -> usize {
+        self.layers.iter().map(|l| l.param_elems.len()).sum()
+    }
+
+    /// Layers owning parameters — the paper's `n`.
+    pub fn num_param_layers(&self) -> usize {
+        self.layers.iter().filter(|l| !l.param_elems.is_empty()).count()
+    }
+
+    /// Fig. 6 x-axis: average parameters per (parameterized) layer.
+    pub fn avg_params_per_layer(&self) -> f64 {
+        self.total_params() as f64 / self.num_param_layers().max(1) as f64
+    }
+
+    pub fn flops_per_item(&self) -> f64 {
+        self.layers.iter().map(|l| l.flops_per_item).sum()
+    }
+
+    /// Forward kernel per layer.
+    pub fn forward_kernels(&self, batch: usize) -> Vec<Kernel> {
+        let b = batch as u64;
+        self.layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                let mut reads = vec![(
+                    if i == 0 { TensorId::External(0) } else { TensorId::Act(i - 1) },
+                    l.in_elems * b * F32,
+                )];
+                for (k, pe) in l.param_elems.iter().enumerate() {
+                    reads.push((TensorId::Param(i, k), pe * F32));
+                }
+                Kernel {
+                    flops: l.flops_per_item * batch as f64,
+                    reads,
+                    writes: vec![(TensorId::Act(i), l.out_elems * b * F32)],
+                    launches: 1,
+                    phase: Phase::Forward,
+                }
+            })
+            .collect()
+    }
+
+    /// Backward kernel per layer (in forward order; caller reverses).
+    /// Cost model: 2× forward FLOPs; reads output-grad + saved input act +
+    /// params; writes input-grad + param grads.
+    pub fn backward_kernels(&self, batch: usize) -> Vec<Kernel> {
+        let b = batch as u64;
+        let n = self.layers.len();
+        self.layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                let mut reads = vec![
+                    (
+                        if i + 1 == n { TensorId::ActGrad(i) } else { TensorId::ActGrad(i) },
+                        l.out_elems * b * F32,
+                    ),
+                    (
+                        if i == 0 { TensorId::External(0) } else { TensorId::Act(i - 1) },
+                        l.in_elems * b * F32,
+                    ),
+                ];
+                let mut writes = vec![(
+                    if i == 0 { TensorId::ActGrad(usize::MAX) } else { TensorId::ActGrad(i - 1) },
+                    l.in_elems * b * F32,
+                )];
+                for (k, pe) in l.param_elems.iter().enumerate() {
+                    reads.push((TensorId::Param(i, k), pe * F32));
+                    writes.push((TensorId::Grad(i, k), pe * F32));
+                }
+                Kernel {
+                    flops: 2.0 * l.flops_per_item * batch as f64,
+                    reads,
+                    writes,
+                    launches: 1,
+                    phase: Phase::Backward,
+                }
+            })
+            .collect()
+    }
+
+    /// Optimizer kernels for layer `l`. `fused=true` models the
+    /// single-kernel update the fusion schedules use (our Pallas
+    /// `fused_adamw`); `fused=false` models the eager unfused update
+    /// (one elementwise launch per primitive op, PyTorch-style).
+    pub fn optimizer_kernels(&self, l: usize, opt: &OptSpec, fused: bool) -> Vec<Kernel> {
+        let layer = &self.layers[l];
+        layer
+            .param_elems
+            .iter()
+            .enumerate()
+            .map(|(k, pe)| {
+                let bytes = pe * F32;
+                let mut reads = vec![
+                    (TensorId::Param(l, k), bytes),
+                    (TensorId::Grad(l, k), bytes),
+                ];
+                let mut writes = vec![
+                    (TensorId::Param(l, k), bytes),
+                    (TensorId::Grad(l, k), bytes), // reset
+                ];
+                for s in 0..opt.state_slots {
+                    reads.push((TensorId::State(l, k, s as usize), bytes));
+                    writes.push((TensorId::State(l, k, s as usize), bytes));
+                }
+                // Unfused eager execution re-streams operands once per
+                // primitive kernel: amplify traffic accordingly.
+                let amp = if fused { 1.0 } else { opt.traffic_amplification };
+                let amp_r: Vec<_> = reads
+                    .iter()
+                    .map(|(id, b)| (*id, (*b as f64 * amp) as u64))
+                    .collect();
+                let amp_w: Vec<_> = writes
+                    .iter()
+                    .map(|(id, b)| (*id, (*b as f64 * amp) as u64))
+                    .collect();
+                reads = amp_r;
+                writes = amp_w;
+                Kernel {
+                    flops: opt.flops_per_elem as f64 * *pe as f64,
+                    reads,
+                    writes,
+                    launches: if fused { 1 } else { opt.kernels_per_param },
+                    phase: Phase::Optimizer,
+                }
+            })
+            .collect()
+    }
+}
+
+/// Optimizer footprint for the simulator (paper Fig. 7 sweeps these).
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub state_slots: u32,
+    pub flops_per_elem: u32,
+    /// Elementwise kernel launches per parameter tensor in unfused eager
+    /// execution (PyTorch-style op-by-op update).
+    pub kernels_per_param: u32,
+    /// Extra memory-traffic multiplier of the unfused update (operands
+    /// re-streamed once per primitive kernel).
+    pub traffic_amplification: f64,
+}
+
+impl OptSpec {
+    pub fn sgd() -> Self {
+        Self { name: "sgd", state_slots: 0, flops_per_elem: 4, kernels_per_param: 3, traffic_amplification: 1.5 }
+    }
+    pub fn sgd_momentum() -> Self {
+        Self { name: "sgd_momentum", state_slots: 1, flops_per_elem: 7, kernels_per_param: 5, traffic_amplification: 2.0 }
+    }
+    pub fn adam() -> Self {
+        Self { name: "adam", state_slots: 2, flops_per_elem: 13, kernels_per_param: 10, traffic_amplification: 2.5 }
+    }
+    pub fn adamw() -> Self {
+        Self { name: "adamw", state_slots: 2, flops_per_elem: 14, kernels_per_param: 11, traffic_amplification: 2.5 }
+    }
+    pub fn adagrad() -> Self {
+        Self { name: "adagrad", state_slots: 1, flops_per_elem: 8, kernels_per_param: 6, traffic_amplification: 2.0 }
+    }
+    pub fn adadelta() -> Self {
+        Self { name: "adadelta", state_slots: 2, flops_per_elem: 14, kernels_per_param: 12, traffic_amplification: 2.8 }
+    }
+    pub fn rmsprop() -> Self {
+        Self { name: "rmsprop", state_slots: 1, flops_per_elem: 9, kernels_per_param: 7, traffic_amplification: 2.2 }
+    }
+    pub fn by_name(name: &str) -> Option<Self> {
+        Some(match name {
+            "sgd" => Self::sgd(),
+            "sgd_momentum" => Self::sgd_momentum(),
+            "adam" => Self::adam(),
+            "adamw" => Self::adamw(),
+            "adagrad" => Self::adagrad(),
+            "adadelta" => Self::adadelta(),
+            "rmsprop" => Self::rmsprop(),
+            _ => return None,
+        })
+    }
+    pub const ALL: [&'static str; 7] = [
+        "sgd",
+        "sgd_momentum",
+        "adagrad",
+        "rmsprop",
+        "adam",
+        "adamw",
+        "adadelta",
+    ];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_net() -> NetSpec {
+        NetSpec {
+            name: "tiny".into(),
+            layers: vec![
+                LayerSpec {
+                    name: "fc1".into(),
+                    param_elems: vec![64, 8],
+                    in_elems: 8,
+                    out_elems: 8,
+                    flops_per_item: 128.0,
+                },
+                LayerSpec {
+                    name: "relu".into(),
+                    param_elems: vec![],
+                    in_elems: 8,
+                    out_elems: 8,
+                    flops_per_item: 8.0,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn totals() {
+        let n = tiny_net();
+        assert_eq!(n.total_params(), 72);
+        assert_eq!(n.num_param_tensors(), 2);
+        assert_eq!(n.num_param_layers(), 1);
+        assert_eq!(n.avg_params_per_layer(), 72.0);
+    }
+
+    #[test]
+    fn forward_kernels_scale_with_batch() {
+        let n = tiny_net();
+        let k1 = n.forward_kernels(1);
+        let k8 = n.forward_kernels(8);
+        assert_eq!(k1.len(), 2);
+        assert_eq!(k8[0].flops, 8.0 * k1[0].flops);
+        // param read bytes do NOT scale with batch
+        assert_eq!(k1[0].reads[1].1, k8[0].reads[1].1);
+        // act bytes do
+        assert_eq!(k8[0].writes[0].1, 8 * k1[0].writes[0].1);
+    }
+
+    #[test]
+    fn optimizer_kernels_fused_vs_unfused() {
+        let n = tiny_net();
+        let opt = OptSpec::adam();
+        let fused = n.optimizer_kernels(0, &opt, true);
+        let unfused = n.optimizer_kernels(0, &opt, false);
+        assert_eq!(fused.len(), 2); // two param tensors
+        assert_eq!(fused[0].launches, 1);
+        assert_eq!(unfused[0].launches, 10);
+        let fb: u64 = fused[0].reads.iter().map(|r| r.1).sum();
+        let ub: u64 = unfused[0].reads.iter().map(|r| r.1).sum();
+        assert!(ub > fb, "unfused streams more traffic");
+        // adam: θ,g + 2 state slots
+        assert_eq!(fused[0].reads.len(), 4);
+    }
+
+    #[test]
+    fn param_free_layer_has_no_opt_kernels() {
+        let n = tiny_net();
+        assert!(n.optimizer_kernels(1, &OptSpec::sgd(), true).is_empty());
+    }
+
+    #[test]
+    fn optspec_by_name_all() {
+        for n in OptSpec::ALL {
+            assert_eq!(OptSpec::by_name(n).unwrap().name, n);
+        }
+        assert!(OptSpec::by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,433 @@
+//! Small runnable CNN family builders over 16×16×3 inputs, 10 classes.
+//! Externals: [images NCHW, labels].
+
+use crate::graph::{Graph, ParamId, Src};
+use crate::ops::activation::{Relu, Relu6};
+use crate::ops::conv::{Conv2d, DepthwiseConv2d};
+use crate::ops::dense::Linear;
+use crate::ops::loss::SoftmaxCrossEntropy;
+use crate::ops::norm::BatchNorm2d;
+use crate::ops::shape::{Add, ConcatChannels, GlobalAvgPool};
+use crate::tensor::Tensor;
+use crate::util::XorShiftRng;
+
+struct Cnn {
+    g: Graph,
+    rng: XorShiftRng,
+    cur: Src,
+    c: usize,
+}
+
+impl Cnn {
+    fn new(name: &str, seed: u64) -> Self {
+        Self {
+            g: Graph::new(name, 2),
+            rng: XorShiftRng::new(seed),
+            cur: Src::External(0),
+            c: 3,
+        }
+    }
+
+    fn conv(&mut self, name: &str, c_out: usize, k: usize, stride: usize, pad: usize) {
+        let std = (2.0 / (self.c * k * k) as f32).sqrt();
+        let w = self.g.param_init(
+            &format!("{name}.w"),
+            Tensor::randn(&[c_out, self.c * k * k], std, &mut self.rng),
+        );
+        let n = self.g.push(
+            name,
+            Box::new(Conv2d::new(k, stride, pad, false)),
+            vec![self.cur],
+            vec![w],
+        );
+        self.cur = Src::Node(n);
+        self.c = c_out;
+    }
+
+    fn dwconv(&mut self, name: &str, stride: usize) {
+        let std = (2.0 / 9.0f32).sqrt();
+        let w = self.g.param_init(
+            &format!("{name}.w"),
+            Tensor::randn(&[self.c, 9], std, &mut self.rng),
+        );
+        let n = self.g.push(
+            name,
+            Box::new(DepthwiseConv2d::new(3, stride, 1)),
+            vec![self.cur],
+            vec![w],
+        );
+        self.cur = Src::Node(n);
+    }
+
+    fn bn(&mut self, name: &str) {
+        let gamma = self.g.param_init(&format!("{name}.g"), Tensor::full(&[self.c], 1.0));
+        let beta = self.g.param_init(&format!("{name}.b"), Tensor::zeros(&[self.c]));
+        let n = self.g.push(
+            name,
+            Box::new(BatchNorm2d::default()),
+            vec![self.cur],
+            vec![gamma, beta],
+        );
+        self.cur = Src::Node(n);
+    }
+
+    fn relu(&mut self, name: &str) {
+        let n = self.g.push(name, Box::new(Relu), vec![self.cur], vec![]);
+        self.cur = Src::Node(n);
+    }
+
+    fn relu6(&mut self, name: &str) {
+        let n = self.g.push(name, Box::new(Relu6), vec![self.cur], vec![]);
+        self.cur = Src::Node(n);
+    }
+
+    fn head(mut self, classes: usize) -> Graph {
+        let gap = self.g.push("gap", Box::new(GlobalAvgPool), vec![self.cur], vec![]);
+        let wfc: ParamId = self.g.param(&"fc.w".to_string(), &[self.c, classes], &mut self.rng);
+        let fc = self.g.push("fc", Box::new(Linear::new(false)), vec![Src::Node(gap)], vec![wfc]);
+        let loss = self.g.push(
+            "xent",
+            Box::new(SoftmaxCrossEntropy),
+            vec![Src::Node(fc), Src::External(1)],
+            vec![],
+        );
+        self.g.set_loss(loss);
+        self.g
+    }
+}
+
+/// MobileNetV2-style: inverted residual blocks — many layers, tiny params
+/// each (the paper's best case, Fig. 6 left end).
+pub fn mobilenet_v2_ish(seed: u64) -> Graph {
+    let mut m = Cnn::new("mobilenet_v2_ish", seed);
+    m.conv("stem", 16, 3, 1, 1);
+    m.bn("stem.bn");
+    m.relu6("stem.relu6");
+    // (expand factor, out channels, stride), reduced-depth V2 config
+    let cfg = [(1, 16, 1), (4, 24, 2), (4, 24, 1), (4, 32, 2), (4, 32, 1), (4, 48, 1)];
+    for (i, (t, c, s)) in cfg.iter().enumerate() {
+        let in_src = m.cur;
+        let in_c = m.c;
+        let hidden = in_c * t;
+        if *t != 1 {
+            m.conv(&format!("ir{i}.expand"), hidden, 1, 1, 0);
+            m.bn(&format!("ir{i}.expand.bn"));
+            m.relu6(&format!("ir{i}.expand.relu6"));
+        }
+        m.dwconv(&format!("ir{i}.dw"), *s);
+        m.bn(&format!("ir{i}.dw.bn"));
+        m.relu6(&format!("ir{i}.dw.relu6"));
+        m.conv(&format!("ir{i}.project"), *c, 1, 1, 0);
+        m.bn(&format!("ir{i}.project.bn"));
+        // residual when shapes match (stride 1, same channels)
+        if *s == 1 && in_c == *c {
+            let n = m.g.push(&format!("ir{i}.add"), Box::new(Add), vec![in_src, m.cur], vec![]);
+            m.cur = Src::Node(n);
+        }
+    }
+    m.conv("headconv", 64, 1, 1, 0);
+    m.bn("headconv.bn");
+    m.relu6("headconv.relu6");
+    m.head(10)
+}
+
+/// ResNet-style basic blocks with skip connections.
+pub fn resnet_ish(seed: u64) -> Graph {
+    let mut m = Cnn::new("resnet_ish", seed);
+    m.conv("stem", 16, 3, 1, 1);
+    m.bn("stem.bn");
+    m.relu("stem.relu");
+    let stages = [(16usize, 1usize), (32, 2), (64, 2)];
+    for (si, (c, s)) in stages.iter().enumerate() {
+        // projection shortcut when shape changes
+        let id_src = m.cur;
+        let in_c = m.c;
+        let needs_proj = *s != 1 || in_c != *c;
+        m.conv(&format!("s{si}.conv1"), *c, 3, *s, 1);
+        m.bn(&format!("s{si}.bn1"));
+        m.relu(&format!("s{si}.relu1"));
+        m.conv(&format!("s{si}.conv2"), *c, 3, 1, 1);
+        m.bn(&format!("s{si}.bn2"));
+        let main = m.cur;
+        let skip = if needs_proj {
+            let save_cur = m.cur;
+            m.cur = id_src;
+            m.c = in_c;
+            m.conv(&format!("s{si}.down"), *c, 1, *s, 0);
+            let sk = m.cur;
+            m.cur = save_cur;
+            m.c = *c;
+            sk
+        } else {
+            id_src
+        };
+        let add = m.g.push(&format!("s{si}.add"), Box::new(Add), vec![main, skip], vec![]);
+        m.cur = Src::Node(add);
+        m.relu(&format!("s{si}.relu2"));
+    }
+    m.head(10)
+}
+
+/// VGG-style: few layers, each with big kernels — the paper's worst case
+/// (Fig. 6 right end).
+pub fn vgg_ish(seed: u64) -> Graph {
+    let mut m = Cnn::new("vgg_ish", seed);
+    m.conv("c1", 32, 3, 1, 1);
+    m.bn("c1.bn");
+    m.relu("c1.relu");
+    m.conv("c2", 64, 3, 2, 1);
+    m.bn("c2.bn");
+    m.relu("c2.relu");
+    m.conv("c3", 128, 3, 2, 1);
+    m.bn("c3.bn");
+    m.relu("c3.relu");
+    // big dense head dominates the parameter count like VGG's fc layers
+    let gap_in_c = m.c;
+    let hw = 4; // 16 -> 8 -> 4
+    let flat = m.g.push(
+        "flatten",
+        Box::new(crate::ops::shape::GlobalAvgPool),
+        vec![m.cur],
+        vec![],
+    );
+    let _ = hw;
+    let w1 = m.g.param("fc1.w", &[gap_in_c, 512], &mut m.rng);
+    let fc1 = m.g.push("fc1", Box::new(Linear::new(false)), vec![Src::Node(flat)], vec![w1]);
+    let r = m.g.push("fc1.relu", Box::new(Relu), vec![Src::Node(fc1)], vec![]);
+    let w2 = m.g.param("fc2.w", &[512, 512], &mut m.rng);
+    let fc2 = m.g.push("fc2", Box::new(Linear::new(false)), vec![Src::Node(r)], vec![w2]);
+    let r2 = m.g.push("fc2.relu", Box::new(Relu), vec![Src::Node(fc2)], vec![]);
+    let w3 = m.g.param("fc3.w", &[512, 10], &mut m.rng);
+    let fc3 = m.g.push("fc3", Box::new(Linear::new(false)), vec![Src::Node(r2)], vec![w3]);
+    let loss = m.g.push(
+        "xent",
+        Box::new(SoftmaxCrossEntropy),
+        vec![Src::Node(fc3), Src::External(1)],
+        vec![],
+    );
+    m.g.set_loss(loss);
+    m.g
+}
+
+/// DenseNet-style: concat connectivity, growth rate 8.
+pub fn densenet_ish(seed: u64) -> Graph {
+    let mut m = Cnn::new("densenet_ish", seed);
+    m.conv("stem", 16, 3, 1, 1);
+    m.bn("stem.bn");
+    m.relu("stem.relu");
+    let growth = 8;
+    for blk in 0..2 {
+        for li in 0..3 {
+            let name = format!("d{blk}l{li}");
+            let cat_src = m.cur;
+            let cat_c = m.c;
+            m.bn(&format!("{name}.bn"));
+            m.relu(&format!("{name}.relu"));
+            m.conv(&format!("{name}.conv"), growth, 3, 1, 1);
+            let n = m.g.push(
+                &format!("{name}.cat"),
+                Box::new(ConcatChannels),
+                vec![cat_src, m.cur],
+                vec![],
+            );
+            m.cur = Src::Node(n);
+            m.c = cat_c + growth;
+        }
+        if blk == 0 {
+            let half = m.c / 2;
+            m.bn("t0.bn");
+            m.conv("t0.conv", half, 1, 2, 0);
+        }
+    }
+    m.head(10)
+}
+
+/// Wide MLP (~1.8M params in 3 layers): the *parameter-heavy / compute-
+/// light* regime where the optimizer stage is a large fraction of the
+/// iteration — the measured-wallclock analogue of the paper's high
+/// optimizer-time-ratio points in Fig. 7.
+pub fn wide_mlp(seed: u64) -> Graph {
+    let mut rng = XorShiftRng::new(seed);
+    let mut g = Graph::new("wide_mlp", 2);
+    let dims = [3 * 16 * 16, 1024, 1024, 10];
+    let flat = g.push(
+        "flatten",
+        Box::new(crate::ops::shape::Flatten),
+        vec![Src::External(0)],
+        vec![],
+    );
+    let mut cur = Src::Node(flat);
+    for i in 0..dims.len() - 1 {
+        let w = g.param(&format!("fc{i}.w"), &[dims[i], dims[i + 1]], &mut rng);
+        let lin = g.push(&format!("fc{i}"), Box::new(Linear::new(false)), vec![cur], vec![w]);
+        cur = Src::Node(lin);
+        if i + 2 < dims.len() {
+            let r = g.push(&format!("relu{i}"), Box::new(Relu), vec![cur], vec![]);
+            cur = Src::Node(r);
+        }
+    }
+    let loss = g.push(
+        "xent",
+        Box::new(SoftmaxCrossEntropy),
+        vec![cur, Src::External(1)],
+        vec![],
+    );
+    g.set_loss(loss);
+    g
+}
+
+/// Deep narrow MLP (24 layers of 256×256 ≈ 1.7M params): the *many small
+/// layers* regime where each backward-fusion update overlaps the long
+/// remaining backward — the measured-wallclock analogue of the paper's
+/// MobileNetV2 best case (many layers, modest params each).
+pub fn deep_mlp(seed: u64) -> Graph {
+    let mut rng = XorShiftRng::new(seed);
+    let mut g = Graph::new("deep_mlp", 2);
+    let d = 256;
+    let flat = g.push(
+        "flatten",
+        Box::new(crate::ops::shape::Flatten),
+        vec![Src::External(0)],
+        vec![],
+    );
+    let w_in = g.param("fc_in.w", &[3 * 16 * 16, d], &mut rng);
+    let lin = g.push("fc_in", Box::new(Linear::new(false)), vec![Src::Node(flat)], vec![w_in]);
+    let mut cur = Src::Node(lin);
+    for i in 0..24 {
+        let r = g.push(&format!("relu{i}"), Box::new(Relu), vec![cur], vec![]);
+        let w = g.param(&format!("fc{i}.w"), &[d, d], &mut rng);
+        // residual-free plain stack; small init keeps activations sane
+        let lin = g.push(&format!("fc{i}"), Box::new(Linear::new(false)), vec![Src::Node(r)], vec![w]);
+        cur = Src::Node(lin);
+    }
+    let w_out = g.param("fc_out.w", &[d, 10], &mut rng);
+    let out = g.push("fc_out", Box::new(Linear::new(false)), vec![cur], vec![w_out]);
+    let loss = g.push(
+        "xent",
+        Box::new(SoftmaxCrossEntropy),
+        vec![Src::Node(out), Src::External(1)],
+        vec![],
+    );
+    g.set_loss(loss);
+    g
+}
+
+/// Plain MLP over flattened pixels — the simplest sweep member. Accepts
+/// NCHW images like the CNNs (flattens internally).
+pub fn mlp(seed: u64) -> Graph {
+    let mut rng = XorShiftRng::new(seed);
+    let mut g = Graph::new("mlp", 2);
+    let dims = [3 * 16 * 16, 256, 128, 10];
+    let flat = g.push(
+        "flatten",
+        Box::new(crate::ops::shape::Flatten),
+        vec![Src::External(0)],
+        vec![],
+    );
+    let mut cur = Src::Node(flat);
+    for i in 0..dims.len() - 1 {
+        let w = g.param(&format!("fc{i}.w"), &[dims[i], dims[i + 1]], &mut rng);
+        let b = g.param_init(&format!("fc{i}.b"), Tensor::zeros(&[dims[i + 1]]));
+        let lin = g.push(&format!("fc{i}"), Box::new(Linear::new(true)), vec![cur], vec![w, b]);
+        cur = Src::Node(lin);
+        if i + 2 < dims.len() {
+            let r = g.push(&format!("relu{i}"), Box::new(Relu), vec![cur], vec![]);
+            cur = Src::Node(r);
+        }
+    }
+    let loss = g.push(
+        "xent",
+        Box::new(SoftmaxCrossEntropy),
+        vec![cur, Src::External(1)],
+        vec![],
+    );
+    g.set_loss(loss);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{ExecConfig, Executor};
+    use crate::graph::ScheduleKind;
+    use crate::optim::{Adam, Hyper};
+
+    fn img_data(b: usize, seed: u64) -> Vec<Tensor> {
+        let mut rng = XorShiftRng::new(seed);
+        let x = Tensor::randn(&[b, 3, 16, 16], 1.0, &mut rng);
+        let y = Tensor::from_vec(&[b], (0..b).map(|i| (i % 10) as f32).collect());
+        vec![x, y]
+    }
+
+    #[test]
+    fn all_models_run_one_step_under_all_schedules() {
+        for entry in image_zoo() {
+            for kind in ScheduleKind::ALL {
+                let g = (entry.build)(1);
+                let data = img_data(2, 3);
+                let mut ex = Executor::new(
+                    g,
+                    Box::new(Adam),
+                    Hyper::default(),
+                    ExecConfig { schedule: kind, threads: 2, race_guard: true, ..Default::default() },
+                )
+                .unwrap();
+                let s = ex.train_step(&data);
+                assert!(s.loss.is_finite(), "{} {kind:?} loss {}", entry.name, s.loss);
+                assert!(s.loss > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn params_per_layer_ordering_matches_families() {
+        let mob = mobilenet_v2_ish(1);
+        let vgg = vgg_ish(1);
+        let res = resnet_ish(1);
+        assert!(
+            mob.avg_params_per_layer() < res.avg_params_per_layer(),
+            "mobilenet {} < resnet {}",
+            mob.avg_params_per_layer(),
+            res.avg_params_per_layer()
+        );
+        assert!(res.avg_params_per_layer() < vgg.avg_params_per_layer());
+    }
+
+    #[test]
+    fn mobilenet_has_many_small_layers() {
+        let g = mobilenet_v2_ish(1);
+        assert!(g.num_layers() > 25, "{}", g.num_layers());
+    }
+
+    #[test]
+    fn losses_equal_across_schedules_cnn() {
+        // heavier-structure model exercising Add/Concat under fusion
+        let data = img_data(2, 9);
+        let mut outs = Vec::new();
+        for kind in ScheduleKind::ALL {
+            let mut ex = Executor::new(
+                densenet_ish(7),
+                Box::new(Adam),
+                Hyper::default(),
+                ExecConfig { schedule: kind, threads: 2, race_guard: true, ..Default::default() },
+            )
+            .unwrap();
+            let mut losses = Vec::new();
+            for _ in 0..3 {
+                losses.push(ex.train_step(&data).loss);
+            }
+            outs.push(losses);
+        }
+        assert_eq!(outs[0], outs[1], "FF == baseline");
+        assert_eq!(outs[0], outs[2], "BF == baseline");
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(by_name("mobilenet", 1).is_some());
+        assert!(by_name("transformer", 1).is_some());
+        assert!(by_name("unknown", 1).is_none());
+    }
+
+    use super::super::{by_name, image_zoo};
+}

@@ -1,0 +1,46 @@
+//! Runnable model zoo: small *real* graphs for wallclock experiments on
+//! this host (the full ImageNet-scale counterparts live in `memsim::zoo`
+//! as shape specs). Each builder preserves its family's structural
+//! signature — MobileNetV2's inverted residuals + many small layers,
+//! VGG's few huge layers, ResNet's skip adds, DenseNet's concats — so the
+//! measured params-per-layer ordering (Fig. 6) carries over.
+
+pub mod cnn;
+pub mod transformer;
+
+pub use cnn::{deep_mlp, densenet_ish, mlp, mobilenet_v2_ish, resnet_ish, vgg_ish, wide_mlp};
+pub use transformer::{transformer_lm, TransformerCfg};
+
+use crate::graph::Graph;
+
+/// A named model constructor for sweeps: (name, image-size, builder).
+pub struct ModelEntry {
+    pub name: &'static str,
+    pub build: fn(u64) -> Graph,
+}
+
+/// Image-classification zoo used by Fig. 5/6 wallclock sweeps
+/// (input: [b,3,16,16] images, 10 classes).
+pub fn image_zoo() -> Vec<ModelEntry> {
+    vec![
+        ModelEntry { name: "mobilenet_v2_ish", build: mobilenet_v2_ish },
+        ModelEntry { name: "densenet_ish", build: densenet_ish },
+        ModelEntry { name: "resnet_ish", build: resnet_ish },
+        ModelEntry { name: "mlp", build: mlp },
+        ModelEntry { name: "vgg_ish", build: vgg_ish },
+    ]
+}
+
+pub fn by_name(name: &str, seed: u64) -> Option<Graph> {
+    match name {
+        "mlp" => Some(mlp(seed)),
+        "mobilenet_v2_ish" | "mobilenet" => Some(mobilenet_v2_ish(seed)),
+        "resnet_ish" | "resnet" => Some(resnet_ish(seed)),
+        "vgg_ish" | "vgg" => Some(vgg_ish(seed)),
+        "densenet_ish" | "densenet" => Some(densenet_ish(seed)),
+        "wide_mlp" => Some(wide_mlp(seed)),
+        "deep_mlp" => Some(deep_mlp(seed)),
+        "transformer" => Some(transformer_lm(&TransformerCfg::small(), seed)),
+        _ => None,
+    }
+}

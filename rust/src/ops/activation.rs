@@ -1,0 +1,162 @@
+//! Elementwise activations: ReLU, ReLU6 (MobileNetV2's nonlinearity),
+//! GELU (transformer), and Sigmoid.
+
+use super::{Op, OpCtx, OpGrads};
+use crate::tensor::Tensor;
+
+macro_rules! elementwise_op {
+    ($name:ident, $label:literal, $fwd:expr, $bwd:expr) => {
+        /// See module docs. Saves the input for backward.
+        pub struct $name;
+
+        impl Op for $name {
+            fn name(&self) -> &'static str {
+                $label
+            }
+
+            fn out_shape(&self, inputs: &[&[usize]], _p: &[&[usize]]) -> Vec<usize> {
+                inputs[0].to_vec()
+            }
+
+            fn forward(&self, inputs: &[&Tensor], _p: &[&Tensor], _ctx: &mut OpCtx) -> Tensor {
+                let f: fn(f32) -> f32 = $fwd;
+                inputs[0].map(f)
+            }
+
+            fn backward(
+                &self,
+                grad_out: &Tensor,
+                inputs: &[&Tensor],
+                _p: &[&Tensor],
+                _ctx: &OpCtx,
+            ) -> OpGrads {
+                let g: fn(f32) -> f32 = $bwd;
+                let dx = grad_out.zip(inputs[0], |go, x| go * g(x));
+                OpGrads { inputs: vec![Some(dx)], params: vec![] }
+            }
+
+            fn flops(&self, inputs: &[&[usize]], _p: &[&[usize]]) -> u64 {
+                inputs[0].iter().product::<usize>() as u64
+            }
+        }
+    };
+}
+
+elementwise_op!(Relu, "relu", |x| x.max(0.0), |x| if x > 0.0 { 1.0 } else { 0.0 });
+elementwise_op!(
+    Relu6,
+    "relu6",
+    |x| x.clamp(0.0, 6.0),
+    |x| if x > 0.0 && x < 6.0 { 1.0 } else { 0.0 }
+);
+elementwise_op!(Sigmoid, "sigmoid", |x| 1.0 / (1.0 + (-x).exp()), |x| {
+    let s = 1.0 / (1.0 + (-x).exp());
+    s * (1.0 - s)
+});
+
+/// tanh-approximation GELU (as used by GPT-style transformers).
+pub struct Gelu;
+
+const SQRT_2_OVER_PI: f32 = 0.797_884_6;
+
+fn gelu_f(x: f32) -> f32 {
+    0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + 0.044715 * x * x * x)).tanh())
+}
+
+fn gelu_df(x: f32) -> f32 {
+    let u = SQRT_2_OVER_PI * (x + 0.044715 * x * x * x);
+    let t = u.tanh();
+    let du = SQRT_2_OVER_PI * (1.0 + 3.0 * 0.044715 * x * x);
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du
+}
+
+impl Op for Gelu {
+    fn name(&self) -> &'static str {
+        "gelu"
+    }
+    fn out_shape(&self, inputs: &[&[usize]], _p: &[&[usize]]) -> Vec<usize> {
+        inputs[0].to_vec()
+    }
+    fn forward(&self, inputs: &[&Tensor], _p: &[&Tensor], _ctx: &mut OpCtx) -> Tensor {
+        inputs[0].map(gelu_f)
+    }
+    fn backward(
+        &self,
+        grad_out: &Tensor,
+        inputs: &[&Tensor],
+        _p: &[&Tensor],
+        _ctx: &OpCtx,
+    ) -> OpGrads {
+        OpGrads {
+            inputs: vec![Some(grad_out.zip(inputs[0], |go, x| go * gelu_df(x)))],
+            params: vec![],
+        }
+    }
+    fn flops(&self, inputs: &[&[usize]], _p: &[&[usize]]) -> u64 {
+        8 * inputs[0].iter().product::<usize>() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::grad_check;
+    use crate::util::XorShiftRng;
+
+    fn check_op(op: &dyn Op, name: &str) {
+        let mut rng = XorShiftRng::new(3);
+        // keep away from kinks (0 and 6) for finite differences
+        let x = Tensor::from_vec(
+            &[8],
+            (0..8)
+                .map(|_| {
+                    let mut v = rng.uniform(-3.0, 8.0);
+                    while v.abs() < 0.15 || (v - 6.0).abs() < 0.15 {
+                        v = rng.uniform(-3.0, 8.0);
+                    }
+                    v
+                })
+                .collect(),
+        );
+        let mut ctx = OpCtx::default();
+        let y = op.forward(&[&x], &[], &mut ctx);
+        let ones = Tensor::full(y.shape(), 1.0);
+        let grads = op.backward(&ones, &[&x], &[], &ctx);
+        grad_check(&x, grads.inputs[0].as_ref().unwrap(), 1e-3, 2e-2, |xp| {
+            op.forward(&[xp], &[], &mut OpCtx::default()).sum()
+        }, name);
+    }
+
+    #[test]
+    fn relu_values_and_grad() {
+        let x = Tensor::from_vec(&[3], vec![-1.0, 0.5, 2.0]);
+        let y = Relu.forward(&[&x], &[], &mut OpCtx::default());
+        assert_eq!(y.data(), &[0.0, 0.5, 2.0]);
+        check_op(&Relu, "relu");
+    }
+
+    #[test]
+    fn relu6_clamps() {
+        let x = Tensor::from_vec(&[3], vec![-1.0, 3.0, 9.0]);
+        let y = Relu6.forward(&[&x], &[], &mut OpCtx::default());
+        assert_eq!(y.data(), &[0.0, 3.0, 6.0]);
+        check_op(&Relu6, "relu6");
+    }
+
+    #[test]
+    fn gelu_matches_known_values() {
+        let y = Gelu.forward(
+            &[&Tensor::from_vec(&[2], vec![0.0, 1.0])],
+            &[],
+            &mut OpCtx::default(),
+        );
+        assert!((y.data()[0]).abs() < 1e-6);
+        assert!((y.data()[1] - 0.8412).abs() < 1e-3);
+        check_op(&Gelu, "gelu");
+    }
+
+    #[test]
+    fn sigmoid_grad() {
+        check_op(&Sigmoid, "sigmoid");
+    }
+}

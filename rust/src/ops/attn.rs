@@ -1,0 +1,238 @@
+//! Scaled dot-product multi-head attention as a single fused op over
+//! activation inputs Q, K, V (the surrounding projections are separate
+//! Linear nodes, so attention itself carries no parameters).
+
+use super::linalg::softmax_rows;
+use super::{Op, OpCtx, OpGrads};
+use crate::tensor::Tensor;
+
+/// Multi-head attention. Inputs: [q, k, v], each [batch, seq, dim] with
+/// dim % heads == 0. Output [batch, seq, dim]. Optionally causal.
+pub struct MultiHeadAttention {
+    pub heads: usize,
+    pub causal: bool,
+}
+
+impl MultiHeadAttention {
+    pub fn new(heads: usize, causal: bool) -> Self {
+        Self { heads, causal }
+    }
+}
+
+impl Op for MultiHeadAttention {
+    fn name(&self) -> &'static str {
+        "mha"
+    }
+
+    fn out_shape(&self, inputs: &[&[usize]], _p: &[&[usize]]) -> Vec<usize> {
+        inputs[0].to_vec()
+    }
+
+    fn forward(&self, inputs: &[&Tensor], _p: &[&Tensor], ctx: &mut OpCtx) -> Tensor {
+        let (q, k, v) = (inputs[0], inputs[1], inputs[2]);
+        let s = q.shape();
+        let (b, t, d) = (s[0], s[1], s[2]);
+        let h = self.heads;
+        assert_eq!(d % h, 0, "dim {d} not divisible by heads {h}");
+        let dh = d / h;
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut y = vec![0.0f32; b * t * d];
+        // attention probabilities saved for backward: [b, h, t, t]
+        let mut probs = vec![0.0f32; b * h * t * t];
+        for bi in 0..b {
+            for hi in 0..h {
+                // scores[t,t] = Q_h K_hᵀ * scale
+                let att = &mut probs[(bi * h + hi) * t * t..(bi * h + hi + 1) * t * t];
+                for i in 0..t {
+                    let qrow = &q.data()[(bi * t + i) * d + hi * dh..(bi * t + i) * d + (hi + 1) * dh];
+                    for j in 0..t {
+                        if self.causal && j > i {
+                            att[i * t + j] = f32::NEG_INFINITY;
+                            continue;
+                        }
+                        let krow =
+                            &k.data()[(bi * t + j) * d + hi * dh..(bi * t + j) * d + (hi + 1) * dh];
+                        let mut acc = 0.0f32;
+                        for (a, c) in qrow.iter().zip(krow.iter()) {
+                            acc += a * c;
+                        }
+                        att[i * t + j] = acc * scale;
+                    }
+                }
+                softmax_rows(att, t, t);
+                // out = att · V_h
+                for i in 0..t {
+                    let orow =
+                        &mut y[(bi * t + i) * d + hi * dh..(bi * t + i) * d + (hi + 1) * dh];
+                    for j in 0..t {
+                        let p = att[i * t + j];
+                        if p == 0.0 {
+                            continue;
+                        }
+                        let vrow =
+                            &v.data()[(bi * t + j) * d + hi * dh..(bi * t + j) * d + (hi + 1) * dh];
+                        for (o, vv) in orow.iter_mut().zip(vrow.iter()) {
+                            *o += p * vv;
+                        }
+                    }
+                }
+            }
+        }
+        ctx.save(Tensor::from_vec(&[b, h, t, t], probs));
+        Tensor::from_vec(s, y)
+    }
+
+    fn backward(
+        &self,
+        grad_out: &Tensor,
+        inputs: &[&Tensor],
+        _p: &[&Tensor],
+        ctx: &OpCtx,
+    ) -> OpGrads {
+        let (q, k, v) = (inputs[0], inputs[1], inputs[2]);
+        let s = q.shape();
+        let (b, t, d) = (s[0], s[1], s[2]);
+        let h = self.heads;
+        let dh = d / h;
+        let scale = 1.0 / (dh as f32).sqrt();
+        let probs = ctx.get(0).data();
+        let go = grad_out.data();
+        let mut dq = vec![0.0f32; q.len()];
+        let mut dk = vec![0.0f32; k.len()];
+        let mut dv = vec![0.0f32; v.len()];
+        let mut datt = vec![0.0f32; t * t];
+        for bi in 0..b {
+            for hi in 0..h {
+                let att = &probs[(bi * h + hi) * t * t..(bi * h + hi + 1) * t * t];
+                // dV_h[j] += sum_i att[i,j] * dY_h[i] ; datt[i,j] = dY_h[i]·V_h[j]
+                datt.iter_mut().for_each(|x| *x = 0.0);
+                for i in 0..t {
+                    let gor = &go[(bi * t + i) * d + hi * dh..(bi * t + i) * d + (hi + 1) * dh];
+                    for j in 0..t {
+                        let p = att[i * t + j];
+                        let vrow =
+                            &v.data()[(bi * t + j) * d + hi * dh..(bi * t + j) * d + (hi + 1) * dh];
+                        let dvrow =
+                            &mut dv[(bi * t + j) * d + hi * dh..(bi * t + j) * d + (hi + 1) * dh];
+                        let mut dot = 0.0f32;
+                        for ((dvv, vv), gg) in dvrow.iter_mut().zip(vrow.iter()).zip(gor.iter()) {
+                            *dvv += p * gg;
+                            dot += vv * gg;
+                        }
+                        datt[i * t + j] = dot;
+                    }
+                }
+                // softmax backward per row: ds = p ⊙ (datt - Σ datt⊙p)
+                for i in 0..t {
+                    let prow = &att[i * t..(i + 1) * t];
+                    let drow = &mut datt[i * t..(i + 1) * t];
+                    let dot: f32 = prow.iter().zip(drow.iter()).map(|(p, g)| p * g).sum();
+                    for (g, p) in drow.iter_mut().zip(prow.iter()) {
+                        *g = p * (*g - dot) * scale;
+                    }
+                }
+                // dQ_h[i] += Σ_j ds[i,j] K_h[j];  dK_h[j] += Σ_i ds[i,j] Q_h[i]
+                for i in 0..t {
+                    let dqr = &mut dq[(bi * t + i) * d + hi * dh..(bi * t + i) * d + (hi + 1) * dh];
+                    for j in 0..t {
+                        let ds = datt[i * t + j];
+                        if ds == 0.0 {
+                            continue;
+                        }
+                        let krow =
+                            &k.data()[(bi * t + j) * d + hi * dh..(bi * t + j) * d + (hi + 1) * dh];
+                        for (dd, kk) in dqr.iter_mut().zip(krow.iter()) {
+                            *dd += ds * kk;
+                        }
+                    }
+                }
+                for j in 0..t {
+                    let dkr = &mut dk[(bi * t + j) * d + hi * dh..(bi * t + j) * d + (hi + 1) * dh];
+                    for i in 0..t {
+                        let ds = datt[i * t + j];
+                        if ds == 0.0 {
+                            continue;
+                        }
+                        let qrow =
+                            &q.data()[(bi * t + i) * d + hi * dh..(bi * t + i) * d + (hi + 1) * dh];
+                        for (dd, qq) in dkr.iter_mut().zip(qrow.iter()) {
+                            *dd += ds * qq;
+                        }
+                    }
+                }
+            }
+        }
+        OpGrads {
+            inputs: vec![
+                Some(Tensor::from_vec(s, dq)),
+                Some(Tensor::from_vec(s, dk)),
+                Some(Tensor::from_vec(s, dv)),
+            ],
+            params: vec![],
+        }
+    }
+
+    fn flops(&self, inputs: &[&[usize]], _p: &[&[usize]]) -> u64 {
+        let s = inputs[0];
+        let (b, t, d) = (s[0], s[1], s[2]);
+        (4 * b * t * t * d) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::grad_check;
+    use crate::util::XorShiftRng;
+
+    fn quad(t: &Tensor) -> f32 {
+        t.data().iter().map(|v| v * v).sum::<f32>() / 2.0
+    }
+
+    #[test]
+    fn causal_masks_future() {
+        let mut rng = XorShiftRng::new(14);
+        let q = Tensor::randn(&[1, 3, 4], 1.0, &mut rng);
+        let k = Tensor::randn(&[1, 3, 4], 1.0, &mut rng);
+        let v = Tensor::randn(&[1, 3, 4], 1.0, &mut rng);
+        let op = MultiHeadAttention::new(2, true);
+        let mut ctx = OpCtx::default();
+        let _ = op.forward(&[&q, &k, &v], &[], &mut ctx);
+        let probs = ctx.get(0);
+        // row 0 can only attend position 0
+        for hi in 0..2 {
+            let base = hi * 9;
+            assert!((probs.data()[base] - 1.0).abs() < 1e-5);
+            assert_eq!(probs.data()[base + 1], 0.0);
+            assert_eq!(probs.data()[base + 2], 0.0);
+        }
+    }
+
+    #[test]
+    fn uniform_attention_averages_values() {
+        // q=k=0 -> uniform probs -> output is mean of v rows
+        let q = Tensor::zeros(&[1, 2, 2]);
+        let k = Tensor::zeros(&[1, 2, 2]);
+        let v = Tensor::from_vec(&[1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let y = MultiHeadAttention::new(1, false).forward(&[&q, &k, &v], &[], &mut OpCtx::default());
+        assert_eq!(y.data(), &[2.0, 3.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn mha_gradcheck_all_inputs() {
+        let mut rng = XorShiftRng::new(15);
+        let q = Tensor::randn(&[1, 3, 4], 0.7, &mut rng);
+        let k = Tensor::randn(&[1, 3, 4], 0.7, &mut rng);
+        let v = Tensor::randn(&[1, 3, 4], 0.7, &mut rng);
+        let op = MultiHeadAttention::new(2, true);
+        let mut ctx = OpCtx::default();
+        let y = op.forward(&[&q, &k, &v], &[], &mut ctx);
+        let grads = op.backward(&y, &[&q, &k, &v], &[], &ctx);
+        let loss = |qq: &Tensor, kk: &Tensor, vv: &Tensor| {
+            quad(&op.forward(&[qq, kk, vv], &[], &mut OpCtx::default()))
+        };
+        grad_check(&q, grads.inputs[0].as_ref().unwrap(), 1e-2, 5e-2, |qp| loss(qp, &k, &v), "mha dQ");
+        grad_check(&k, grads.inputs[1].as_ref().unwrap(), 1e-2, 5e-2, |kp| loss(&q, kp, &v), "mha dK");
+        grad_check(&v, grads.inputs[2].as_ref().unwrap(), 1e-2, 5e-2, |vp| loss(&q, &k, vp), "mha dV");
+    }
+}

@@ -1,0 +1,352 @@
+//! Convolutions over NCHW: standard Conv2d (via im2col + matmul) and
+//! DepthwiseConv2d (MobileNetV2's workhorse).
+
+use super::linalg::{col2im, im2col, matmul_acc, matmul_at_acc, matmul_bt_acc};
+use super::{Op, OpCtx, OpGrads};
+use crate::tensor::Tensor;
+
+/// Standard conv. x: [n, c_in, h, w]; W: [c_out, c_in*kh*kw]; optional
+/// bias [c_out]. Output [n, c_out, oh, ow].
+pub struct Conv2d {
+    pub kernel: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub has_bias: bool,
+}
+
+impl Conv2d {
+    pub fn new(kernel: usize, stride: usize, pad: usize, has_bias: bool) -> Self {
+        Self { kernel, stride, pad, has_bias }
+    }
+
+    fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
+        (
+            (h + 2 * self.pad - self.kernel) / self.stride + 1,
+            (w + 2 * self.pad - self.kernel) / self.stride + 1,
+        )
+    }
+}
+
+impl Op for Conv2d {
+    fn name(&self) -> &'static str {
+        "conv2d"
+    }
+
+    fn out_shape(&self, inputs: &[&[usize]], params: &[&[usize]]) -> Vec<usize> {
+        let x = inputs[0];
+        let c_out = params[0][0];
+        let (oh, ow) = self.out_hw(x[2], x[3]);
+        vec![x[0], c_out, oh, ow]
+    }
+
+    fn forward(&self, inputs: &[&Tensor], params: &[&Tensor], ctx: &mut OpCtx) -> Tensor {
+        let x = inputs[0];
+        let s = x.shape();
+        let (n, c_in, h, w) = (s[0], s[1], s[2], s[3]);
+        let wmat = params[0];
+        let c_out = wmat.shape()[0];
+        let k = self.kernel;
+        assert_eq!(wmat.shape()[1], c_in * k * k, "conv2d weight shape");
+        let (oh, ow) = self.out_hw(h, w);
+        let cols = n * oh * ow;
+        let mut colbuf = vec![0.0f32; c_in * k * k * cols];
+        im2col(x.data(), n, c_in, h, w, k, k, self.stride, self.pad, &mut colbuf);
+        // y_mat[c_out, cols] = W[c_out, cikk] * colbuf[cikk, cols]
+        let mut ymat = vec![0.0f32; c_out * cols];
+        matmul_acc(wmat.data(), &colbuf, &mut ymat, c_out, c_in * k * k, cols);
+        if self.has_bias {
+            let b = params[1].data();
+            for co in 0..c_out {
+                let row = &mut ymat[co * cols..(co + 1) * cols];
+                let bv = b[co];
+                row.iter_mut().for_each(|v| *v += bv);
+            }
+        }
+        // reorder [c_out, n*oh*ow] -> [n, c_out, oh, ow]
+        let mut y = vec![0.0f32; n * c_out * oh * ow];
+        let ohw = oh * ow;
+        for co in 0..c_out {
+            for b in 0..n {
+                let src = &ymat[co * cols + b * ohw..co * cols + (b + 1) * ohw];
+                y[(b * c_out + co) * ohw..(b * c_out + co + 1) * ohw].copy_from_slice(src);
+            }
+        }
+        ctx.save(Tensor::from_vec(&[c_in * k * k, cols], colbuf));
+        Tensor::from_vec(&[n, c_out, oh, ow], y)
+    }
+
+    fn backward(
+        &self,
+        grad_out: &Tensor,
+        inputs: &[&Tensor],
+        params: &[&Tensor],
+        ctx: &OpCtx,
+    ) -> OpGrads {
+        let x = inputs[0];
+        let s = x.shape();
+        let (n, c_in, h, w) = (s[0], s[1], s[2], s[3]);
+        let wmat = params[0]; // LIVE value (hazard-relevant)
+        let c_out = wmat.shape()[0];
+        let k = self.kernel;
+        let (oh, ow) = self.out_hw(h, w);
+        let cols = n * oh * ow;
+        let ohw = oh * ow;
+        // reorder grad_out [n, c_out, oh, ow] -> gmat [c_out, cols]
+        let mut gmat = vec![0.0f32; c_out * cols];
+        for co in 0..c_out {
+            for b in 0..n {
+                let src = &grad_out.data()[(b * c_out + co) * ohw..(b * c_out + co + 1) * ohw];
+                gmat[co * cols + b * ohw..co * cols + (b + 1) * ohw].copy_from_slice(src);
+            }
+        }
+        let colbuf = ctx.get(0);
+        // dW[c_out, cikk] = gmat[c_out, cols] * colbuf^T[cols, cikk]
+        let cikk = c_in * k * k;
+        let mut dw = vec![0.0f32; c_out * cikk];
+        matmul_bt_acc(&gmat, colbuf.data(), &mut dw, c_out, cols, cikk);
+        // dcol[cikk, cols] = W^T[cikk, c_out] * gmat[c_out, cols]
+        let mut dcol = vec![0.0f32; cikk * cols];
+        matmul_at_acc(wmat.data(), &gmat, &mut dcol, c_out, cikk, cols);
+        let mut dx = vec![0.0f32; x.len()];
+        col2im(&dcol, n, c_in, h, w, k, k, self.stride, self.pad, &mut dx);
+        let mut pg = vec![Tensor::from_vec(wmat.shape(), dw)];
+        if self.has_bias {
+            let mut db = vec![0.0f32; c_out];
+            for co in 0..c_out {
+                db[co] = gmat[co * cols..(co + 1) * cols].iter().sum();
+            }
+            pg.push(Tensor::from_vec(&[c_out], db));
+        }
+        OpGrads { inputs: vec![Some(Tensor::from_vec(s, dx))], params: pg }
+    }
+
+    fn backward_reads_param(&self, k: usize) -> bool {
+        k == 0
+    }
+
+    fn flops(&self, inputs: &[&[usize]], params: &[&[usize]]) -> u64 {
+        let x = inputs[0];
+        let (oh, ow) = self.out_hw(x[2], x[3]);
+        let c_out = params[0][0];
+        (2 * x[0] * oh * ow * c_out * params[0][1]) as u64
+    }
+}
+
+/// Depthwise conv: one k×k filter per channel. W: [c, kh*kw].
+pub struct DepthwiseConv2d {
+    pub kernel: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl DepthwiseConv2d {
+    pub fn new(kernel: usize, stride: usize, pad: usize) -> Self {
+        Self { kernel, stride, pad }
+    }
+    fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
+        (
+            (h + 2 * self.pad - self.kernel) / self.stride + 1,
+            (w + 2 * self.pad - self.kernel) / self.stride + 1,
+        )
+    }
+}
+
+impl Op for DepthwiseConv2d {
+    fn name(&self) -> &'static str {
+        "dwconv2d"
+    }
+
+    fn out_shape(&self, inputs: &[&[usize]], _p: &[&[usize]]) -> Vec<usize> {
+        let x = inputs[0];
+        let (oh, ow) = self.out_hw(x[2], x[3]);
+        vec![x[0], x[1], oh, ow]
+    }
+
+    fn forward(&self, inputs: &[&Tensor], params: &[&Tensor], _ctx: &mut OpCtx) -> Tensor {
+        let x = inputs[0];
+        let s = x.shape();
+        let (n, c, h, w) = (s[0], s[1], s[2], s[3]);
+        let k = self.kernel;
+        let wk = params[0];
+        assert_eq!(wk.shape(), &[c, k * k]);
+        let (oh, ow) = self.out_hw(h, w);
+        let mut y = vec![0.0f32; n * c * oh * ow];
+        for b in 0..n {
+            for ch in 0..c {
+                let xin = &x.data()[(b * c + ch) * h * w..(b * c + ch + 1) * h * w];
+                let filt = &wk.data()[ch * k * k..(ch + 1) * k * k];
+                let yout = &mut y[(b * c + ch) * oh * ow..(b * c + ch + 1) * oh * ow];
+                for oi in 0..oh {
+                    for oj in 0..ow {
+                        let mut acc = 0.0f32;
+                        for ki in 0..k {
+                            let ii = (oi * self.stride + ki) as isize - self.pad as isize;
+                            if ii < 0 || ii as usize >= h {
+                                continue;
+                            }
+                            for kj in 0..k {
+                                let jj = (oj * self.stride + kj) as isize - self.pad as isize;
+                                if jj < 0 || jj as usize >= w {
+                                    continue;
+                                }
+                                acc += xin[ii as usize * w + jj as usize] * filt[ki * k + kj];
+                            }
+                        }
+                        yout[oi * ow + oj] = acc;
+                    }
+                }
+            }
+        }
+        Tensor::from_vec(&[n, c, oh, ow], y)
+    }
+
+    fn backward(
+        &self,
+        grad_out: &Tensor,
+        inputs: &[&Tensor],
+        params: &[&Tensor],
+        _ctx: &OpCtx,
+    ) -> OpGrads {
+        let x = inputs[0];
+        let s = x.shape();
+        let (n, c, h, w) = (s[0], s[1], s[2], s[3]);
+        let k = self.kernel;
+        let wk = params[0];
+        let (oh, ow) = self.out_hw(h, w);
+        let mut dx = vec![0.0f32; x.len()];
+        let mut dw = vec![0.0f32; c * k * k];
+        for b in 0..n {
+            for ch in 0..c {
+                let xin = &x.data()[(b * c + ch) * h * w..(b * c + ch + 1) * h * w];
+                let filt = &wk.data()[ch * k * k..(ch + 1) * k * k];
+                let g = &grad_out.data()[(b * c + ch) * oh * ow..(b * c + ch + 1) * oh * ow];
+                let dxc = &mut dx[(b * c + ch) * h * w..(b * c + ch + 1) * h * w];
+                let dwc = &mut dw[ch * k * k..(ch + 1) * k * k];
+                for oi in 0..oh {
+                    for oj in 0..ow {
+                        let gv = g[oi * ow + oj];
+                        if gv == 0.0 {
+                            continue;
+                        }
+                        for ki in 0..k {
+                            let ii = (oi * self.stride + ki) as isize - self.pad as isize;
+                            if ii < 0 || ii as usize >= h {
+                                continue;
+                            }
+                            for kj in 0..k {
+                                let jj = (oj * self.stride + kj) as isize - self.pad as isize;
+                                if jj < 0 || jj as usize >= w {
+                                    continue;
+                                }
+                                let xi = ii as usize * w + jj as usize;
+                                dxc[xi] += gv * filt[ki * k + kj];
+                                dwc[ki * k + kj] += gv * xin[xi];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        OpGrads {
+            inputs: vec![Some(Tensor::from_vec(s, dx))],
+            params: vec![Tensor::from_vec(&[c, k * k], dw)],
+        }
+    }
+
+    fn backward_reads_param(&self, _k: usize) -> bool {
+        true // dX reads the filter
+    }
+
+    fn flops(&self, inputs: &[&[usize]], _p: &[&[usize]]) -> u64 {
+        let x = inputs[0];
+        let (oh, ow) = self.out_hw(x[2], x[3]);
+        (2 * x[0] * x[1] * oh * ow * self.kernel * self.kernel) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::grad_check;
+    use crate::util::XorShiftRng;
+
+    fn quad(t: &Tensor) -> f32 {
+        t.data().iter().map(|v| v * v).sum::<f32>() / 2.0
+    }
+
+    #[test]
+    fn conv_1x1_equals_linear_per_pixel() {
+        let mut rng = XorShiftRng::new(8);
+        let x = Tensor::randn(&[2, 3, 4, 4], 1.0, &mut rng);
+        let w = Tensor::randn(&[5, 3], 1.0, &mut rng); // 1x1 conv
+        let op = Conv2d::new(1, 1, 0, false);
+        let y = op.forward(&[&x], &[&w], &mut OpCtx::default());
+        assert_eq!(y.shape(), &[2, 5, 4, 4]);
+        // spot check one output pixel
+        let (b, oi, oj) = (1, 2, 3);
+        for co in 0..5 {
+            let mut acc = 0.0;
+            for ci in 0..3 {
+                acc += w.data()[co * 3 + ci] * x.data()[((b * 3 + ci) * 4 + oi) * 4 + oj];
+            }
+            let got = y.data()[((b * 5 + co) * 4 + oi) * 4 + oj];
+            assert!((acc - got).abs() < 1e-4, "{acc} vs {got}");
+        }
+    }
+
+    #[test]
+    fn conv_gradcheck() {
+        let mut rng = XorShiftRng::new(9);
+        let x = Tensor::randn(&[1, 2, 4, 4], 1.0, &mut rng);
+        let w = Tensor::randn(&[3, 2 * 9], 0.5, &mut rng);
+        let b = Tensor::randn(&[3], 0.5, &mut rng);
+        let op = Conv2d::new(3, 1, 1, true);
+        let mut ctx = OpCtx::default();
+        let y = op.forward(&[&x], &[&w, &b], &mut ctx);
+        let grads = op.backward(&y, &[&x], &[&w, &b], &ctx);
+        grad_check(&x, grads.inputs[0].as_ref().unwrap(), 1e-2, 5e-2, |xp| {
+            quad(&op.forward(&[xp], &[&w, &b], &mut OpCtx::default()))
+        }, "conv dX");
+        grad_check(&w, &grads.params[0], 1e-2, 5e-2, |wp| {
+            quad(&op.forward(&[&x], &[wp, &b], &mut OpCtx::default()))
+        }, "conv dW");
+        grad_check(&b, &grads.params[1], 1e-2, 5e-2, |bp| {
+            quad(&op.forward(&[&x], &[&w, bp], &mut OpCtx::default()))
+        }, "conv db");
+    }
+
+    #[test]
+    fn conv_strided_shape() {
+        let op = Conv2d::new(3, 2, 1, false);
+        assert_eq!(op.out_shape(&[&[2, 3, 8, 8]], &[&[4, 27]]), vec![2, 4, 4, 4]);
+    }
+
+    #[test]
+    fn dwconv_gradcheck() {
+        let mut rng = XorShiftRng::new(10);
+        let x = Tensor::randn(&[1, 2, 4, 4], 1.0, &mut rng);
+        let w = Tensor::randn(&[2, 9], 0.5, &mut rng);
+        let op = DepthwiseConv2d::new(3, 1, 1);
+        let mut ctx = OpCtx::default();
+        let y = op.forward(&[&x], &[&w], &mut ctx);
+        assert_eq!(y.shape(), &[1, 2, 4, 4]);
+        let grads = op.backward(&y, &[&x], &[&w], &ctx);
+        grad_check(&x, grads.inputs[0].as_ref().unwrap(), 1e-2, 5e-2, |xp| {
+            quad(&op.forward(&[xp], &[&w], &mut OpCtx::default()))
+        }, "dw dX");
+        grad_check(&w, &grads.params[0], 1e-2, 5e-2, |wp| {
+            quad(&op.forward(&[&x], &[wp], &mut OpCtx::default()))
+        }, "dw dW");
+    }
+
+    #[test]
+    fn dwconv_identity_filter() {
+        // 3x3 filter with only center tap = 1 => identity
+        let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let mut w = vec![0.0f32; 9];
+        w[4] = 1.0;
+        let w = Tensor::from_vec(&[1, 9], w);
+        let y = DepthwiseConv2d::new(3, 1, 1).forward(&[&x], &[&w], &mut OpCtx::default());
+        assert_eq!(y.data(), x.data());
+    }
+}

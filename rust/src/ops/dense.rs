@@ -1,0 +1,166 @@
+//! Dense (fully connected) ops: Linear (x·W [+ b]) and standalone Bias.
+
+use super::linalg::{matmul, matmul_at_acc, matmul_bt_acc};
+use super::{Op, OpCtx, OpGrads};
+use crate::tensor::Tensor;
+
+/// y = x · W (+ b). x: [batch, in], W: [in, out], b: [out].
+/// Params: [W] or [W, b].
+pub struct Linear {
+    pub has_bias: bool,
+}
+
+impl Linear {
+    pub fn new(has_bias: bool) -> Self {
+        Self { has_bias }
+    }
+}
+
+impl Op for Linear {
+    fn name(&self) -> &'static str {
+        "linear"
+    }
+
+    fn out_shape(&self, inputs: &[&[usize]], params: &[&[usize]]) -> Vec<usize> {
+        let x = inputs[0];
+        let w = params[0];
+        assert_eq!(*x.last().unwrap(), w[0], "linear: in-dim mismatch");
+        let mut s = x.to_vec();
+        *s.last_mut().unwrap() = w[1];
+        s
+    }
+
+    fn forward(&self, inputs: &[&Tensor], params: &[&Tensor], _ctx: &mut OpCtx) -> Tensor {
+        let x = inputs[0];
+        let w = params[0];
+        let (rows, in_dim) = x.rows_cols();
+        let out_dim = w.shape()[1];
+        assert_eq!(w.shape()[0], in_dim);
+        let mut y = vec![0.0f32; rows * out_dim];
+        matmul(x.data(), w.data(), &mut y, rows, in_dim, out_dim);
+        if self.has_bias {
+            let b = params[1].data();
+            for r in 0..rows {
+                let row = &mut y[r * out_dim..(r + 1) * out_dim];
+                for (v, bb) in row.iter_mut().zip(b.iter()) {
+                    *v += *bb;
+                }
+            }
+        }
+        let mut shape = x.shape().to_vec();
+        *shape.last_mut().unwrap() = out_dim;
+        Tensor::from_vec(&shape, y)
+    }
+
+    fn backward(
+        &self,
+        grad_out: &Tensor,
+        inputs: &[&Tensor],
+        params: &[&Tensor],
+        _ctx: &OpCtx,
+    ) -> OpGrads {
+        let x = inputs[0];
+        let w = params[0]; // LIVE value — see §B.2 hazard discussion
+        let (rows, in_dim) = x.rows_cols();
+        let out_dim = w.shape()[1];
+        // dX = dY · Wᵀ
+        let mut dx = vec![0.0f32; rows * in_dim];
+        // w stored [in,out]; want dY[rows,out] · W^T[out,in]. With
+        // matmul_bt_acc semantics (B stored [n,k] used transposed,
+        // n=in_dim, k=out_dim) B must be [in,out] — exactly w's layout? No:
+        // matmul_bt_acc computes c[m,n] += a[m,k]·b[n,k]^T with b row-major
+        // [n,k] = [in_dim, out_dim] — which is w's own layout.
+        matmul_bt_acc(grad_out.data(), w.data(), &mut dx, rows, out_dim, in_dim);
+        // dW = Xᵀ · dY
+        let mut dw = vec![0.0f32; in_dim * out_dim];
+        matmul_at_acc(x.data(), grad_out.data(), &mut dw, rows, in_dim, out_dim);
+        let mut params_g = vec![Tensor::from_vec(w.shape(), dw)];
+        if self.has_bias {
+            let mut db = vec![0.0f32; out_dim];
+            for r in 0..rows {
+                let row = &grad_out.data()[r * out_dim..(r + 1) * out_dim];
+                for (d, g) in db.iter_mut().zip(row.iter()) {
+                    *d += *g;
+                }
+            }
+            params_g.push(Tensor::from_vec(&[out_dim], db));
+        }
+        OpGrads {
+            inputs: vec![Some(Tensor::from_vec(x.shape(), dx))],
+            params: params_g,
+        }
+    }
+
+    fn backward_reads_param(&self, k: usize) -> bool {
+        k == 0 // dX reads W; bias is not read in backward
+    }
+
+    fn flops(&self, inputs: &[&[usize]], params: &[&[usize]]) -> u64 {
+        let rows: usize = inputs[0][..inputs[0].len() - 1].iter().product();
+        let in_dim = params[0][0];
+        let out_dim = params[0][1];
+        (2 * rows * in_dim * out_dim) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::grad_check;
+    use crate::util::XorShiftRng;
+
+    fn loss_of(t: &Tensor) -> f32 {
+        // simple quadratic loss sum(y^2)/2 so dL/dy = y
+        t.data().iter().map(|v| v * v).sum::<f32>() / 2.0
+    }
+
+    #[test]
+    fn linear_forward_known() {
+        let x = Tensor::from_vec(&[1, 2], vec![1.0, 2.0]);
+        let w = Tensor::from_vec(&[2, 3], vec![1.0, 0.0, 1.0, 0.0, 1.0, 1.0]);
+        let b = Tensor::from_vec(&[3], vec![0.5, 0.5, 0.5]);
+        let op = Linear::new(true);
+        let y = op.forward(&[&x], &[&w, &b], &mut OpCtx::default());
+        assert_eq!(y.data(), &[1.5, 2.5, 3.5]);
+    }
+
+    #[test]
+    fn linear_gradcheck() {
+        let mut rng = XorShiftRng::new(1);
+        let x = Tensor::randn(&[3, 4], 1.0, &mut rng);
+        let w = Tensor::randn(&[4, 5], 1.0, &mut rng);
+        let b = Tensor::randn(&[5], 1.0, &mut rng);
+        let op = Linear::new(true);
+        let mut ctx = OpCtx::default();
+        let y = op.forward(&[&x], &[&w, &b], &mut ctx);
+        let grads = op.backward(&y, &[&x], &[&w, &b], &ctx); // dL/dy = y for quadratic loss
+
+        grad_check(&x, grads.inputs[0].as_ref().unwrap(), 1e-2, 2e-2, |xp| {
+            loss_of(&op.forward(&[xp], &[&w, &b], &mut OpCtx::default()))
+        }, "linear dX");
+        grad_check(&w, &grads.params[0], 1e-2, 2e-2, |wp| {
+            loss_of(&op.forward(&[&x], &[wp, &b], &mut OpCtx::default()))
+        }, "linear dW");
+        grad_check(&b, &grads.params[1], 1e-2, 2e-2, |bp| {
+            loss_of(&op.forward(&[&x], &[&w, bp], &mut OpCtx::default()))
+        }, "linear db");
+    }
+
+    #[test]
+    fn backward_reads_only_weight() {
+        let op = Linear::new(true);
+        assert!(op.backward_reads_param(0));
+        assert!(!op.backward_reads_param(1));
+    }
+
+    #[test]
+    fn batched_leading_dims() {
+        let mut rng = XorShiftRng::new(2);
+        let x = Tensor::randn(&[2, 3, 4], 1.0, &mut rng); // [b, t, d]
+        let w = Tensor::randn(&[4, 6], 1.0, &mut rng);
+        let op = Linear::new(false);
+        let y = op.forward(&[&x], &[&w], &mut OpCtx::default());
+        assert_eq!(y.shape(), &[2, 3, 6]);
+        assert_eq!(op.out_shape(&[x.shape()], &[w.shape()]), vec![2, 3, 6]);
+    }
+}

@@ -1,0 +1,393 @@
+//! Native linear-algebra kernels. These are the CPU hot path of the
+//! engine (matmul dominates fwd/bwd time, exactly as on the paper's GPUs),
+//! so they are written cache-blocked; the perf pass iterates here.
+
+/// c[m,n] += a[m,k] * b[k,n]  (row-major, accumulating).
+pub fn matmul_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "a");
+    assert_eq!(b.len(), k * n, "b");
+    assert_eq!(c.len(), m * n, "c");
+    // i-k-j loop order: unit-stride over b and c rows; block k for L1/L2.
+    // The k-loop is unrolled 4× so each pass over the c row retires four
+    // rank-1 updates — 4× less c-row load/store traffic, which is the
+    // bottleneck once b rows stream from L2.
+    const KB: usize = 256;
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + KB).min(k);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            let mut kk = k0;
+            while kk + 4 <= k1 {
+                let (a0, a1, a2, a3) = (arow[kk], arow[kk + 1], arow[kk + 2], arow[kk + 3]);
+                let b0 = &b[kk * n..(kk + 1) * n];
+                let b1 = &b[(kk + 1) * n..(kk + 2) * n];
+                let b2 = &b[(kk + 2) * n..(kk + 3) * n];
+                let b3 = &b[(kk + 3) * n..(kk + 4) * n];
+                for j in 0..n {
+                    crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                }
+                kk += 4;
+            }
+            for kk in kk..k1 {
+                let av = arow[kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                    *cv += av * *bv;
+                }
+            }
+        }
+        k0 += KB;
+    }
+}
+
+/// c[m,n] = a[m,k] * b[k,n] (overwriting).
+pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    c.iter_mut().for_each(|x| *x = 0.0);
+    matmul_acc(a, b, c, m, k, n);
+}
+
+/// c[m,n] += a[m,k] * b[n,k]^T  — i.e. B is stored row-major [n,k] and used
+/// transposed. Common in backward: dX = dY · Wᵀ.
+pub fn matmul_bt_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            // Dot product with 8 independent partial sums: breaks the
+            // loop-carried dependency so LLVM vectorizes to a full SIMD
+            // accumulator (one serial accumulator leaves >4x on the table).
+            let mut acc = [0.0f32; 8];
+            let chunks = k / 8;
+            for ch in 0..chunks {
+                let ao = &arow[ch * 8..ch * 8 + 8];
+                let bo = &brow[ch * 8..ch * 8 + 8];
+                for l in 0..8 {
+                    acc[l] += ao[l] * bo[l];
+                }
+            }
+            let mut total = acc.iter().sum::<f32>();
+            for l in chunks * 8..k {
+                total += arow[l] * brow[l];
+            }
+            crow[j] += total;
+        }
+    }
+}
+
+/// c[k,n] += a[m,k]^T * b[m,n] — A used transposed. Common in backward:
+/// dW = Xᵀ · dY.
+pub fn matmul_at_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), m * n);
+    assert_eq!(c.len(), k * n);
+    // Unroll the reduction dim (i over rows of a and b) 4×: each c-row
+    // pass retires four rank-1 updates, quartering c traffic.
+    let mut i = 0;
+    while i + 4 <= m {
+        let a0 = &a[i * k..(i + 1) * k];
+        let a1 = &a[(i + 1) * k..(i + 2) * k];
+        let a2 = &a[(i + 2) * k..(i + 3) * k];
+        let a3 = &a[(i + 3) * k..(i + 4) * k];
+        let b0 = &b[i * n..(i + 1) * n];
+        let b1 = &b[(i + 1) * n..(i + 2) * n];
+        let b2 = &b[(i + 2) * n..(i + 3) * n];
+        let b3 = &b[(i + 3) * n..(i + 4) * n];
+        for kk in 0..k {
+            let (x0, x1, x2, x3) = (a0[kk], a1[kk], a2[kk], a3[kk]);
+            let crow = &mut c[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                crow[j] += x0 * b0[j] + x1 * b1[j] + x2 * b2[j] + x3 * b3[j];
+            }
+        }
+        i += 4;
+    }
+    for i in i..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let brow = &b[i * n..(i + 1) * n];
+        for (kk, av) in arow.iter().enumerate() {
+            let av = *av;
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[kk * n..(kk + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += av * *bv;
+            }
+        }
+    }
+}
+
+/// Naive reference matmul for tests.
+pub fn matmul_ref(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0;
+            for kk in 0..k {
+                acc += a[i * k + kk] * b[kk * n + j];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+/// im2col for NCHW conv with square kernel, stride, zero padding.
+/// Output layout: [c_in*kh*kw, out_h*out_w] per image, images concatenated
+/// along columns: [c_in*kh*kw, batch*out_h*out_w].
+#[allow(clippy::too_many_arguments)]
+pub fn im2col(
+    x: &[f32],
+    batch: usize,
+    c_in: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    out: &mut [f32],
+) {
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (w + 2 * pad - kw) / stride + 1;
+    let cols = batch * oh * ow;
+    assert_eq!(out.len(), c_in * kh * kw * cols);
+    for b in 0..batch {
+        for c in 0..c_in {
+            for ki in 0..kh {
+                for kj in 0..kw {
+                    let row = (c * kh + ki) * kw + kj;
+                    for oi in 0..oh {
+                        let ii = (oi * stride + ki) as isize - pad as isize;
+                        for oj in 0..ow {
+                            let jj = (oj * stride + kj) as isize - pad as isize;
+                            let col = (b * oh + oi) * ow + oj;
+                            let v = if ii >= 0 && (ii as usize) < h && jj >= 0 && (jj as usize) < w
+                            {
+                                x[((b * c_in + c) * h + ii as usize) * w + jj as usize]
+                            } else {
+                                0.0
+                            };
+                            out[row * cols + col] = v;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// col2im: scatter-add the im2col layout back to NCHW (backward of im2col).
+#[allow(clippy::too_many_arguments)]
+pub fn col2im(
+    cols_buf: &[f32],
+    batch: usize,
+    c_in: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    out: &mut [f32],
+) {
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (w + 2 * pad - kw) / stride + 1;
+    let cols = batch * oh * ow;
+    assert_eq!(cols_buf.len(), c_in * kh * kw * cols);
+    assert_eq!(out.len(), batch * c_in * h * w);
+    out.iter_mut().for_each(|x| *x = 0.0);
+    for b in 0..batch {
+        for c in 0..c_in {
+            for ki in 0..kh {
+                for kj in 0..kw {
+                    let row = (c * kh + ki) * kw + kj;
+                    for oi in 0..oh {
+                        let ii = (oi * stride + ki) as isize - pad as isize;
+                        if ii < 0 || ii as usize >= h {
+                            continue;
+                        }
+                        for oj in 0..ow {
+                            let jj = (oj * stride + kj) as isize - pad as isize;
+                            if jj < 0 || jj as usize >= w {
+                                continue;
+                            }
+                            let col = (b * oh + oi) * ow + oj;
+                            out[((b * c_in + c) * h + ii as usize) * w + jj as usize] +=
+                                cols_buf[row * cols + col];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Row-wise softmax in place over a [rows, cols] buffer.
+pub fn softmax_rows(x: &mut [f32], rows: usize, cols: usize) {
+    assert_eq!(x.len(), rows * cols);
+    for r in 0..rows {
+        let row = &mut x[r * cols..(r + 1) * cols];
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, b| a.max(*b));
+        let mut s = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            s += *v;
+        }
+        let inv = 1.0 / s;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{proptest::check, XorShiftRng};
+
+    fn rand_vec(rng: &mut XorShiftRng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn matmul_matches_reference_small() {
+        let a = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2x3
+        let b = vec![7.0, 8.0, 9.0, 10.0, 11.0, 12.0]; // 3x2
+        let mut c = vec![0.0; 4];
+        matmul(&a, &b, &mut c, 2, 3, 2);
+        assert_eq!(c, vec![58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn matmul_property_vs_reference() {
+        check(40, "matmul == ref", |rng| {
+            let (m, k, n) = (1 + rng.below(17), 1 + rng.below(33), 1 + rng.below(17));
+            let a = rand_vec(rng, m * k);
+            let b = rand_vec(rng, k * n);
+            let mut c = vec![0.0; m * n];
+            matmul(&a, &b, &mut c, m, k, n);
+            let r = matmul_ref(&a, &b, m, k, n);
+            crate::util::proptest::close_slices(&c, &r, 1e-4, 1e-4)
+        });
+    }
+
+    #[test]
+    fn matmul_bt_property() {
+        check(30, "A*B^T == ref", |rng| {
+            let (m, k, n) = (1 + rng.below(9), 1 + rng.below(17), 1 + rng.below(9));
+            let a = rand_vec(rng, m * k);
+            let bt = rand_vec(rng, n * k); // [n,k]
+            // build B = bt^T as [k,n]
+            let mut b = vec![0.0; k * n];
+            for j in 0..n {
+                for kk in 0..k {
+                    b[kk * n + j] = bt[j * k + kk];
+                }
+            }
+            let mut c = vec![0.0; m * n];
+            matmul_bt_acc(&a, &bt, &mut c, m, k, n);
+            let r = matmul_ref(&a, &b, m, k, n);
+            crate::util::proptest::close_slices(&c, &r, 1e-4, 1e-4)
+        });
+    }
+
+    #[test]
+    fn matmul_at_property() {
+        check(30, "A^T*B == ref", |rng| {
+            let (m, k, n) = (1 + rng.below(9), 1 + rng.below(9), 1 + rng.below(9));
+            let a = rand_vec(rng, m * k); // used as [m,k], transposed -> [k,m]
+            let b = rand_vec(rng, m * n);
+            // build At = a^T as [k,m]
+            let mut at = vec![0.0; k * m];
+            for i in 0..m {
+                for kk in 0..k {
+                    at[kk * m + i] = a[i * k + kk];
+                }
+            }
+            let mut c = vec![0.0; k * n];
+            matmul_at_acc(&a, &b, &mut c, m, k, n);
+            let r = matmul_ref(&at, &b, k, m, n);
+            crate::util::proptest::close_slices(&c, &r, 1e-4, 1e-4)
+        });
+    }
+
+    #[test]
+    fn acc_variant_accumulates() {
+        let a = vec![1.0; 4]; // 2x2 ones
+        let b = vec![1.0; 4];
+        let mut c = vec![10.0; 4];
+        matmul_acc(&a, &b, &mut c, 2, 2, 2);
+        assert_eq!(c, vec![12.0; 4]);
+    }
+
+    #[test]
+    fn im2col_identity_kernel() {
+        // 1x1 kernel, stride 1, no pad: im2col is just a reshape.
+        let x: Vec<f32> = (0..2 * 3 * 2 * 2).map(|i| i as f32).collect();
+        let mut out = vec![0.0; x.len()];
+        im2col(&x, 2, 3, 2, 2, 1, 1, 1, 0, &mut out);
+        // rows = c_in, cols = batch*h*w ; element (c, b*4+p) == x[b,c,p]
+        for b in 0..2 {
+            for c in 0..3 {
+                for p in 0..4 {
+                    assert_eq!(out[c * 8 + b * 4 + p], x[(b * 3 + c) * 4 + p]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn im2col_padding_zeroes() {
+        let x = vec![1.0; 1 * 1 * 2 * 2];
+        let kh = 3;
+        let oh = 2; // (2+2-3)/1+1
+        let mut out = vec![0.0; kh * kh * oh * oh];
+        im2col(&x, 1, 1, 2, 2, kh, kh, 1, 1, &mut out);
+        // center tap (ki=1,kj=1) row must equal the input (all ones)
+        let row = (1 * kh + 1) * 1; // c=0
+        assert_eq!(&out[row * 4..row * 4 + 4], &[1.0, 1.0, 1.0, 1.0]);
+        // corner tap (0,0) at output (0,0) reads x[-1,-1] = 0
+        assert_eq!(out[0], 0.0);
+    }
+
+    #[test]
+    fn col2im_adjoint_of_im2col() {
+        // <im2col(x), y> == <x, col2im(y)> — adjointness property.
+        check(20, "col2im adjoint", |rng| {
+            let (b, c, h, w, k, s, p) = (1 + rng.below(2), 1 + rng.below(3), 4, 5, 3, 1, 1);
+            let oh = (h + 2 * p - k) / s + 1;
+            let ow = (w + 2 * p - k) / s + 1;
+            let x = rand_vec(rng, b * c * h * w);
+            let y = rand_vec(rng, c * k * k * b * oh * ow);
+            let mut cols_buf = vec![0.0; y.len()];
+            im2col(&x, b, c, h, w, k, k, s, p, &mut cols_buf);
+            let lhs: f32 = cols_buf.iter().zip(y.iter()).map(|(u, v)| u * v).sum();
+            let mut xg = vec![0.0; x.len()];
+            col2im(&y, b, c, h, w, k, k, s, p, &mut xg);
+            let rhs: f32 = x.iter().zip(xg.iter()).map(|(u, v)| u * v).sum();
+            crate::prop_assert!((lhs - rhs).abs() < 1e-2 * lhs.abs().max(1.0), "{lhs} vs {rhs}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn softmax_rows_normalizes() {
+        let mut x = vec![1.0, 2.0, 3.0, 1000.0, 1000.0, 1000.0];
+        softmax_rows(&mut x, 2, 3);
+        let s0: f32 = x[0..3].iter().sum();
+        let s1: f32 = x[3..6].iter().sum();
+        assert!((s0 - 1.0).abs() < 1e-5);
+        assert!((s1 - 1.0).abs() < 1e-5, "overflow-safe");
+        assert!(x[2] > x[1] && x[1] > x[0]);
+    }
+}

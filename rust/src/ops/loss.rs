@@ -1,0 +1,162 @@
+//! Loss heads. The engine starts backward from a scalar loss node with
+//! upstream gradient 1.0.
+
+use super::linalg::softmax_rows;
+use super::{Op, OpCtx, OpGrads};
+use crate::tensor::Tensor;
+
+/// Softmax + cross-entropy, mean over rows. Inputs: [logits, labels];
+/// logits [rows, classes] (leading dims flattened), labels [rows] of class
+/// indices stored as f32. Output: scalar [1].
+pub struct SoftmaxCrossEntropy;
+
+impl Op for SoftmaxCrossEntropy {
+    fn name(&self) -> &'static str {
+        "softmax_xent"
+    }
+
+    fn out_shape(&self, _inputs: &[&[usize]], _p: &[&[usize]]) -> Vec<usize> {
+        vec![1]
+    }
+
+    fn forward(&self, inputs: &[&Tensor], _p: &[&Tensor], ctx: &mut OpCtx) -> Tensor {
+        let logits = inputs[0];
+        let labels = inputs[1];
+        let (rows, classes) = logits.rows_cols();
+        assert_eq!(labels.len(), rows, "labels per row");
+        let mut probs = logits.data().to_vec();
+        softmax_rows(&mut probs, rows, classes);
+        let mut loss = 0.0f32;
+        for r in 0..rows {
+            let t = (labels.data()[r] as usize).min(classes - 1);
+            loss -= probs[r * classes + t].max(1e-12).ln();
+        }
+        loss /= rows as f32;
+        ctx.save(Tensor::from_vec(&[rows, classes], probs));
+        Tensor::from_vec(&[1], vec![loss])
+    }
+
+    fn backward(
+        &self,
+        grad_out: &Tensor,
+        inputs: &[&Tensor],
+        _p: &[&Tensor],
+        ctx: &OpCtx,
+    ) -> OpGrads {
+        let logits = inputs[0];
+        let labels = inputs[1];
+        let (rows, classes) = logits.rows_cols();
+        let g = grad_out.data()[0] / rows as f32;
+        let probs = ctx.get(0).data();
+        let mut dx = probs.to_vec();
+        for r in 0..rows {
+            let t = (labels.data()[r] as usize).min(classes - 1);
+            dx[r * classes + t] -= 1.0;
+        }
+        dx.iter_mut().for_each(|v| *v *= g);
+        OpGrads {
+            inputs: vec![Some(Tensor::from_vec(logits.shape(), dx)), None],
+            params: vec![],
+        }
+    }
+
+    fn flops(&self, inputs: &[&[usize]], _p: &[&[usize]]) -> u64 {
+        5 * inputs[0].iter().product::<usize>() as u64
+    }
+}
+
+/// Mean-squared error: mean((pred - target)^2). Inputs: [pred, target].
+pub struct MseLoss;
+
+impl Op for MseLoss {
+    fn name(&self) -> &'static str {
+        "mse"
+    }
+    fn out_shape(&self, _inputs: &[&[usize]], _p: &[&[usize]]) -> Vec<usize> {
+        vec![1]
+    }
+    fn forward(&self, inputs: &[&Tensor], _p: &[&Tensor], _ctx: &mut OpCtx) -> Tensor {
+        let (p, t) = (inputs[0], inputs[1]);
+        let n = p.len() as f32;
+        let loss = p
+            .data()
+            .iter()
+            .zip(t.data().iter())
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            / n;
+        Tensor::from_vec(&[1], vec![loss])
+    }
+    fn backward(
+        &self,
+        grad_out: &Tensor,
+        inputs: &[&Tensor],
+        _p: &[&Tensor],
+        _ctx: &OpCtx,
+    ) -> OpGrads {
+        let (p, t) = (inputs[0], inputs[1]);
+        let n = p.len() as f32;
+        let g = grad_out.data()[0] * 2.0 / n;
+        let dx = p.zip(t, |a, b| g * (a - b));
+        OpGrads { inputs: vec![Some(dx), None], params: vec![] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::grad_check;
+    use crate::util::XorShiftRng;
+
+    #[test]
+    fn xent_uniform_logits_is_log_classes() {
+        let logits = Tensor::zeros(&[4, 10]);
+        let labels = Tensor::from_vec(&[4], vec![0.0, 3.0, 5.0, 9.0]);
+        let y = SoftmaxCrossEntropy.forward(&[&logits, &labels], &[], &mut OpCtx::default());
+        assert!((y.data()[0] - (10.0f32).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn xent_gradcheck() {
+        let mut rng = XorShiftRng::new(12);
+        let logits = Tensor::randn(&[3, 5], 1.0, &mut rng);
+        let labels = Tensor::from_vec(&[3], vec![1.0, 4.0, 0.0]);
+        let op = SoftmaxCrossEntropy;
+        let mut ctx = OpCtx::default();
+        let _ = op.forward(&[&logits, &labels], &[], &mut ctx);
+        let one = Tensor::from_vec(&[1], vec![1.0]);
+        let grads = op.backward(&one, &[&logits, &labels], &[], &ctx);
+        assert!(grads.inputs[1].is_none());
+        grad_check(&logits, grads.inputs[0].as_ref().unwrap(), 1e-2, 2e-2, |lp| {
+            op.forward(&[lp, &labels], &[], &mut OpCtx::default()).data()[0]
+        }, "xent dlogits");
+    }
+
+    #[test]
+    fn xent_grad_sums_to_zero_per_row() {
+        let mut rng = XorShiftRng::new(13);
+        let logits = Tensor::randn(&[2, 7], 1.0, &mut rng);
+        let labels = Tensor::from_vec(&[2], vec![2.0, 6.0]);
+        let op = SoftmaxCrossEntropy;
+        let mut ctx = OpCtx::default();
+        let _ = op.forward(&[&logits, &labels], &[], &mut ctx);
+        let one = Tensor::from_vec(&[1], vec![1.0]);
+        let g = op.backward(&one, &[&logits, &labels], &[], &ctx);
+        let gd = g.inputs[0].as_ref().unwrap();
+        for r in 0..2 {
+            let s: f32 = gd.data()[r * 7..(r + 1) * 7].iter().sum();
+            assert!(s.abs() < 1e-6, "row {r} grad sum {s}");
+        }
+    }
+
+    #[test]
+    fn mse_known_value_and_grad() {
+        let p = Tensor::from_vec(&[2], vec![1.0, 3.0]);
+        let t = Tensor::from_vec(&[2], vec![0.0, 1.0]);
+        let y = MseLoss.forward(&[&p, &t], &[], &mut OpCtx::default());
+        assert!((y.data()[0] - 2.5).abs() < 1e-6);
+        let one = Tensor::from_vec(&[1], vec![1.0]);
+        let g = MseLoss.backward(&one, &[&p, &t], &[], &OpCtx::default());
+        assert_eq!(g.inputs[0].as_ref().unwrap().data(), &[1.0, 2.0]);
+    }
+}

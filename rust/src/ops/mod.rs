@@ -1,0 +1,109 @@
+//! Operator set for the eager engine. Every op implements [`Op`]:
+//! a forward that may stash tensors for backward, and a backward that
+//! produces gradients w.r.t. inputs and parameters.
+//!
+//! The `backward_reads_param` contract is what makes the paper's §B.2
+//! race-condition discussion concrete: if an op's backward reads the
+//! *live* value of a parameter (e.g. matmul's `dX = dY·Wᵀ`), the
+//! backward-fusion scheduler must not update that parameter in place
+//! before the node's backward has run.
+
+pub mod activation;
+pub mod attn;
+pub mod conv;
+pub mod dense;
+pub mod linalg;
+pub mod loss;
+pub mod norm;
+pub mod shape;
+
+use crate::tensor::Tensor;
+
+/// Scratch saved by forward for use in backward (activations, masks,
+/// im2col buffers, softmax outputs, ...).
+#[derive(Default)]
+pub struct OpCtx {
+    pub saved: Vec<Tensor>,
+}
+
+impl OpCtx {
+    pub fn save(&mut self, t: Tensor) {
+        self.saved.push(t);
+    }
+    pub fn get(&self, i: usize) -> &Tensor {
+        &self.saved[i]
+    }
+}
+
+/// Gradients produced by an op's backward.
+pub struct OpGrads {
+    /// One per op input; `None` when the input needs no gradient
+    /// (e.g. integer labels).
+    pub inputs: Vec<Option<Tensor>>,
+    /// One per op parameter, same order as the node's param list.
+    pub params: Vec<Tensor>,
+}
+
+/// A differentiable operator.
+pub trait Op: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Output shape given input shapes (used by graph validation and the
+    /// memory simulator).
+    fn out_shape(&self, inputs: &[&[usize]], params: &[&[usize]]) -> Vec<usize>;
+
+    /// Execute forward; may stash tensors in `ctx` for backward.
+    fn forward(&self, inputs: &[&Tensor], params: &[&Tensor], ctx: &mut OpCtx) -> Tensor;
+
+    /// Execute backward. `params` are the *live* parameter values at the
+    /// time backward runs — deliberately so, to model the in-place-update
+    /// hazard of the paper's §B.2.
+    fn backward(
+        &self,
+        grad_out: &Tensor,
+        inputs: &[&Tensor],
+        params: &[&Tensor],
+        ctx: &OpCtx,
+    ) -> OpGrads;
+
+    /// Does this op's backward read parameter `k`'s current value?
+    /// Default: yes (conservative).
+    fn backward_reads_param(&self, _k: usize) -> bool {
+        true
+    }
+
+    /// Approximate FLOPs of forward for the given input shapes (memsim /
+    /// metrics). Backward is modeled as 2× forward where unspecified.
+    fn flops(&self, _inputs: &[&[usize]], _params: &[&[usize]]) -> u64 {
+        0
+    }
+}
+
+/// Finite-difference gradient check used by op unit tests: perturb each
+/// coordinate of `x`, compare numeric dL/dx against `analytic`.
+/// `f` maps the perturbed tensor to a scalar loss.
+pub fn grad_check(
+    x: &Tensor,
+    analytic: &Tensor,
+    eps: f32,
+    tol: f32,
+    mut f: impl FnMut(&Tensor) -> f32,
+    what: &str,
+) {
+    assert_eq!(x.shape(), analytic.shape(), "{what}: shape");
+    for i in 0..x.len() {
+        let mut xp = x.clone();
+        xp.data_mut()[i] += eps;
+        let lp = f(&xp);
+        let mut xm = x.clone();
+        xm.data_mut()[i] -= eps;
+        let lm = f(&xm);
+        let num = (lp - lm) / (2.0 * eps);
+        let ana = analytic.data()[i];
+        let denom = num.abs().max(ana.abs()).max(1.0);
+        assert!(
+            (num - ana).abs() / denom <= tol,
+            "{what}: coord {i}: numeric {num} vs analytic {ana}"
+        );
+    }
+}

@@ -1,0 +1,314 @@
+//! Normalization layers: LayerNorm (transformer) and a per-channel
+//! scale/shift BatchNorm over NCHW using batch statistics (inference-style
+//! running stats are out of scope — the paper times training iterations).
+
+use super::{Op, OpCtx, OpGrads};
+use crate::tensor::Tensor;
+
+/// LayerNorm over the last dimension. Params: [gamma, beta], both [d].
+pub struct LayerNorm {
+    pub eps: f32,
+}
+
+impl Default for LayerNorm {
+    fn default() -> Self {
+        Self { eps: 1e-5 }
+    }
+}
+
+impl Op for LayerNorm {
+    fn name(&self) -> &'static str {
+        "layernorm"
+    }
+
+    fn out_shape(&self, inputs: &[&[usize]], _p: &[&[usize]]) -> Vec<usize> {
+        inputs[0].to_vec()
+    }
+
+    fn forward(&self, inputs: &[&Tensor], params: &[&Tensor], ctx: &mut OpCtx) -> Tensor {
+        let x = inputs[0];
+        let (rows, d) = x.rows_cols();
+        let gamma = params[0].data();
+        let beta = params[1].data();
+        let mut y = vec![0.0f32; x.len()];
+        // save normalized x-hat and inverse std per row for backward
+        let mut xhat = vec![0.0f32; x.len()];
+        let mut inv_std = vec![0.0f32; rows];
+        for r in 0..rows {
+            let row = &x.data()[r * d..(r + 1) * d];
+            let mean = row.iter().sum::<f32>() / d as f32;
+            let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+            let is = 1.0 / (var + self.eps).sqrt();
+            inv_std[r] = is;
+            for i in 0..d {
+                let xh = (row[i] - mean) * is;
+                xhat[r * d + i] = xh;
+                y[r * d + i] = xh * gamma[i] + beta[i];
+            }
+        }
+        ctx.save(Tensor::from_vec(x.shape(), xhat));
+        ctx.save(Tensor::from_vec(&[rows], inv_std));
+        Tensor::from_vec(x.shape(), y)
+    }
+
+    fn backward(
+        &self,
+        grad_out: &Tensor,
+        inputs: &[&Tensor],
+        params: &[&Tensor],
+        ctx: &OpCtx,
+    ) -> OpGrads {
+        let x = inputs[0];
+        let (rows, d) = x.rows_cols();
+        let gamma = params[0].data();
+        let xhat = ctx.get(0).data();
+        let inv_std = ctx.get(1).data();
+        let go = grad_out.data();
+        let mut dgamma = vec![0.0f32; d];
+        let mut dbeta = vec![0.0f32; d];
+        let mut dx = vec![0.0f32; x.len()];
+        for r in 0..rows {
+            let is = inv_std[r];
+            let xh = &xhat[r * d..(r + 1) * d];
+            let g = &go[r * d..(r + 1) * d];
+            // dLdxhat = g * gamma
+            let mut sum_dxh = 0.0f32;
+            let mut sum_dxh_xh = 0.0f32;
+            for i in 0..d {
+                let dxh = g[i] * gamma[i];
+                sum_dxh += dxh;
+                sum_dxh_xh += dxh * xh[i];
+                dgamma[i] += g[i] * xh[i];
+                dbeta[i] += g[i];
+            }
+            let inv_d = 1.0 / d as f32;
+            for i in 0..d {
+                let dxh = g[i] * gamma[i];
+                dx[r * d + i] = is * (dxh - inv_d * sum_dxh - xh[i] * inv_d * sum_dxh_xh);
+            }
+        }
+        OpGrads {
+            inputs: vec![Some(Tensor::from_vec(x.shape(), dx))],
+            params: vec![
+                Tensor::from_vec(&[d], dgamma),
+                Tensor::from_vec(&[d], dbeta),
+            ],
+        }
+    }
+
+    fn backward_reads_param(&self, k: usize) -> bool {
+        k == 0 // gamma is read; beta is not
+    }
+
+    fn flops(&self, inputs: &[&[usize]], _p: &[&[usize]]) -> u64 {
+        8 * inputs[0].iter().product::<usize>() as u64
+    }
+}
+
+/// BatchNorm2d over NCHW with batch statistics. Params: [gamma, beta] per
+/// channel [c].
+pub struct BatchNorm2d {
+    pub eps: f32,
+}
+
+impl Default for BatchNorm2d {
+    fn default() -> Self {
+        Self { eps: 1e-5 }
+    }
+}
+
+impl Op for BatchNorm2d {
+    fn name(&self) -> &'static str {
+        "batchnorm2d"
+    }
+
+    fn out_shape(&self, inputs: &[&[usize]], _p: &[&[usize]]) -> Vec<usize> {
+        inputs[0].to_vec()
+    }
+
+    fn forward(&self, inputs: &[&Tensor], params: &[&Tensor], ctx: &mut OpCtx) -> Tensor {
+        let x = inputs[0];
+        let s = x.shape();
+        assert_eq!(s.len(), 4, "batchnorm2d expects NCHW");
+        let (n, c, h, w) = (s[0], s[1], s[2], s[3]);
+        let hw = h * w;
+        let cnt = (n * hw) as f32;
+        let gamma = params[0].data();
+        let beta = params[1].data();
+        let mut xhat = vec![0.0f32; x.len()];
+        let mut inv_std = vec![0.0f32; c];
+        let mut y = vec![0.0f32; x.len()];
+        for ch in 0..c {
+            let mut mean = 0.0f32;
+            for b in 0..n {
+                let base = (b * c + ch) * hw;
+                mean += x.data()[base..base + hw].iter().sum::<f32>();
+            }
+            mean /= cnt;
+            let mut var = 0.0f32;
+            for b in 0..n {
+                let base = (b * c + ch) * hw;
+                var += x.data()[base..base + hw]
+                    .iter()
+                    .map(|v| (v - mean) * (v - mean))
+                    .sum::<f32>();
+            }
+            var /= cnt;
+            let is = 1.0 / (var + self.eps).sqrt();
+            inv_std[ch] = is;
+            for b in 0..n {
+                let base = (b * c + ch) * hw;
+                for i in 0..hw {
+                    let xh = (x.data()[base + i] - mean) * is;
+                    xhat[base + i] = xh;
+                    y[base + i] = xh * gamma[ch] + beta[ch];
+                }
+            }
+        }
+        ctx.save(Tensor::from_vec(s, xhat));
+        ctx.save(Tensor::from_vec(&[c], inv_std));
+        Tensor::from_vec(s, y)
+    }
+
+    fn backward(
+        &self,
+        grad_out: &Tensor,
+        inputs: &[&Tensor],
+        params: &[&Tensor],
+        ctx: &OpCtx,
+    ) -> OpGrads {
+        let x = inputs[0];
+        let s = x.shape();
+        let (n, c, h, w) = (s[0], s[1], s[2], s[3]);
+        let hw = h * w;
+        let cnt = (n * hw) as f32;
+        let gamma = params[0].data();
+        let xhat = ctx.get(0).data();
+        let inv_std = ctx.get(1).data();
+        let go = grad_out.data();
+        let mut dgamma = vec![0.0f32; c];
+        let mut dbeta = vec![0.0f32; c];
+        let mut dx = vec![0.0f32; x.len()];
+        for ch in 0..c {
+            let mut sum_g = 0.0f32;
+            let mut sum_g_xh = 0.0f32;
+            for b in 0..n {
+                let base = (b * c + ch) * hw;
+                for i in 0..hw {
+                    sum_g += go[base + i];
+                    sum_g_xh += go[base + i] * xhat[base + i];
+                }
+            }
+            dgamma[ch] = sum_g_xh;
+            dbeta[ch] = sum_g;
+            let is = inv_std[ch];
+            let gch = gamma[ch];
+            for b in 0..n {
+                let base = (b * c + ch) * hw;
+                for i in 0..hw {
+                    dx[base + i] = gch * is
+                        * (go[base + i] - sum_g / cnt - xhat[base + i] * sum_g_xh / cnt);
+                }
+            }
+        }
+        OpGrads {
+            inputs: vec![Some(Tensor::from_vec(s, dx))],
+            params: vec![
+                Tensor::from_vec(&[c], dgamma),
+                Tensor::from_vec(&[c], dbeta),
+            ],
+        }
+    }
+
+    fn backward_reads_param(&self, k: usize) -> bool {
+        k == 0
+    }
+
+    fn flops(&self, inputs: &[&[usize]], _p: &[&[usize]]) -> u64 {
+        10 * inputs[0].iter().product::<usize>() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::grad_check;
+    use crate::util::XorShiftRng;
+
+    fn quad(t: &Tensor) -> f32 {
+        t.data().iter().map(|v| v * v).sum::<f32>() / 2.0
+    }
+
+    #[test]
+    fn layernorm_normalizes_rows() {
+        let mut rng = XorShiftRng::new(4);
+        let x = Tensor::randn(&[3, 8], 2.0, &mut rng);
+        let g = Tensor::full(&[8], 1.0);
+        let b = Tensor::zeros(&[8]);
+        let y = LayerNorm::default().forward(&[&x], &[&g, &b], &mut OpCtx::default());
+        for r in 0..3 {
+            let row = &y.data()[r * 8..(r + 1) * 8];
+            let mean = row.iter().sum::<f32>() / 8.0;
+            let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 8.0;
+            assert!(mean.abs() < 1e-5);
+            assert!((var - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn layernorm_gradcheck() {
+        let mut rng = XorShiftRng::new(5);
+        let x = Tensor::randn(&[2, 6], 1.0, &mut rng);
+        let g = Tensor::randn(&[6], 0.5, &mut rng).map(|v| v + 1.0);
+        let b = Tensor::randn(&[6], 0.5, &mut rng);
+        let op = LayerNorm::default();
+        let mut ctx = OpCtx::default();
+        let y = op.forward(&[&x], &[&g, &b], &mut ctx);
+        let grads = op.backward(&y, &[&x], &[&g, &b], &ctx);
+        grad_check(&x, grads.inputs[0].as_ref().unwrap(), 1e-2, 3e-2, |xp| {
+            quad(&op.forward(&[xp], &[&g, &b], &mut OpCtx::default()))
+        }, "ln dX");
+        grad_check(&g, &grads.params[0], 1e-2, 3e-2, |gp| {
+            quad(&op.forward(&[&x], &[gp, &b], &mut OpCtx::default()))
+        }, "ln dgamma");
+        grad_check(&b, &grads.params[1], 1e-2, 3e-2, |bp| {
+            quad(&op.forward(&[&x], &[&g, bp], &mut OpCtx::default()))
+        }, "ln dbeta");
+    }
+
+    #[test]
+    fn batchnorm_normalizes_channels() {
+        let mut rng = XorShiftRng::new(6);
+        let x = Tensor::randn(&[4, 3, 2, 2], 3.0, &mut rng);
+        let g = Tensor::full(&[3], 1.0);
+        let b = Tensor::zeros(&[3]);
+        let y = BatchNorm2d::default().forward(&[&x], &[&g, &b], &mut OpCtx::default());
+        for ch in 0..3 {
+            let mut vals = Vec::new();
+            for bb in 0..4 {
+                let base = (bb * 3 + ch) * 4;
+                vals.extend_from_slice(&y.data()[base..base + 4]);
+            }
+            let mean = vals.iter().sum::<f32>() / vals.len() as f32;
+            assert!(mean.abs() < 1e-4, "ch {ch} mean {mean}");
+        }
+    }
+
+    #[test]
+    fn batchnorm_gradcheck() {
+        let mut rng = XorShiftRng::new(7);
+        let x = Tensor::randn(&[2, 2, 2, 2], 1.0, &mut rng);
+        let g = Tensor::from_vec(&[2], vec![1.2, 0.8]);
+        let b = Tensor::from_vec(&[2], vec![0.1, -0.2]);
+        let op = BatchNorm2d::default();
+        let mut ctx = OpCtx::default();
+        let y = op.forward(&[&x], &[&g, &b], &mut ctx);
+        let grads = op.backward(&y, &[&x], &[&g, &b], &ctx);
+        grad_check(&x, grads.inputs[0].as_ref().unwrap(), 1e-2, 5e-2, |xp| {
+            quad(&op.forward(&[xp], &[&g, &b], &mut OpCtx::default()))
+        }, "bn dX");
+        grad_check(&g, &grads.params[0], 1e-2, 5e-2, |gp| {
+            quad(&op.forward(&[&x], &[gp, &b], &mut OpCtx::default()))
+        }, "bn dgamma");
+    }
+}

@@ -1,0 +1,301 @@
+//! Structural ops: residual Add, Concat (DenseNet), global average pool,
+//! Flatten, and Embedding lookup (transformer input).
+
+use super::{Op, OpCtx, OpGrads};
+use crate::tensor::Tensor;
+
+/// Elementwise sum of two same-shape inputs (residual connection).
+pub struct Add;
+
+impl Op for Add {
+    fn name(&self) -> &'static str {
+        "add"
+    }
+    fn out_shape(&self, inputs: &[&[usize]], _p: &[&[usize]]) -> Vec<usize> {
+        assert_eq!(inputs[0], inputs[1], "add shape mismatch");
+        inputs[0].to_vec()
+    }
+    fn forward(&self, inputs: &[&Tensor], _p: &[&Tensor], _ctx: &mut OpCtx) -> Tensor {
+        inputs[0].zip(inputs[1], |a, b| a + b)
+    }
+    fn backward(
+        &self,
+        grad_out: &Tensor,
+        _inputs: &[&Tensor],
+        _p: &[&Tensor],
+        _ctx: &OpCtx,
+    ) -> OpGrads {
+        OpGrads {
+            inputs: vec![Some(grad_out.clone()), Some(grad_out.clone())],
+            params: vec![],
+        }
+    }
+    fn flops(&self, inputs: &[&[usize]], _p: &[&[usize]]) -> u64 {
+        inputs[0].iter().product::<usize>() as u64
+    }
+}
+
+/// Concatenate two NCHW tensors along the channel dim (DenseNet blocks).
+pub struct ConcatChannels;
+
+impl Op for ConcatChannels {
+    fn name(&self) -> &'static str {
+        "concat_c"
+    }
+    fn out_shape(&self, inputs: &[&[usize]], _p: &[&[usize]]) -> Vec<usize> {
+        let (a, b) = (inputs[0], inputs[1]);
+        assert_eq!(a[0], b[0]);
+        assert_eq!(a[2..], b[2..]);
+        vec![a[0], a[1] + b[1], a[2], a[3]]
+    }
+    fn forward(&self, inputs: &[&Tensor], _p: &[&Tensor], _ctx: &mut OpCtx) -> Tensor {
+        let (a, b) = (inputs[0], inputs[1]);
+        let (n, ca, h, w) = (a.shape()[0], a.shape()[1], a.shape()[2], a.shape()[3]);
+        let cb = b.shape()[1];
+        let hw = h * w;
+        let mut y = vec![0.0f32; n * (ca + cb) * hw];
+        for bi in 0..n {
+            let dst_a = bi * (ca + cb) * hw;
+            y[dst_a..dst_a + ca * hw]
+                .copy_from_slice(&a.data()[bi * ca * hw..(bi + 1) * ca * hw]);
+            let dst_b = dst_a + ca * hw;
+            y[dst_b..dst_b + cb * hw]
+                .copy_from_slice(&b.data()[bi * cb * hw..(bi + 1) * cb * hw]);
+        }
+        Tensor::from_vec(&[n, ca + cb, h, w], y)
+    }
+    fn backward(
+        &self,
+        grad_out: &Tensor,
+        inputs: &[&Tensor],
+        _p: &[&Tensor],
+        _ctx: &OpCtx,
+    ) -> OpGrads {
+        let (a, b) = (inputs[0], inputs[1]);
+        let (n, ca, h, w) = (a.shape()[0], a.shape()[1], a.shape()[2], a.shape()[3]);
+        let cb = b.shape()[1];
+        let hw = h * w;
+        let mut da = vec![0.0f32; a.len()];
+        let mut db = vec![0.0f32; b.len()];
+        for bi in 0..n {
+            let src_a = bi * (ca + cb) * hw;
+            da[bi * ca * hw..(bi + 1) * ca * hw]
+                .copy_from_slice(&grad_out.data()[src_a..src_a + ca * hw]);
+            let src_b = src_a + ca * hw;
+            db[bi * cb * hw..(bi + 1) * cb * hw]
+                .copy_from_slice(&grad_out.data()[src_b..src_b + cb * hw]);
+        }
+        OpGrads {
+            inputs: vec![
+                Some(Tensor::from_vec(a.shape(), da)),
+                Some(Tensor::from_vec(b.shape(), db)),
+            ],
+            params: vec![],
+        }
+    }
+}
+
+/// Global average pool NCHW -> [n, c].
+pub struct GlobalAvgPool;
+
+impl Op for GlobalAvgPool {
+    fn name(&self) -> &'static str {
+        "gap"
+    }
+    fn out_shape(&self, inputs: &[&[usize]], _p: &[&[usize]]) -> Vec<usize> {
+        vec![inputs[0][0], inputs[0][1]]
+    }
+    fn forward(&self, inputs: &[&Tensor], _p: &[&Tensor], _ctx: &mut OpCtx) -> Tensor {
+        let x = inputs[0];
+        let s = x.shape();
+        let (n, c, h, w) = (s[0], s[1], s[2], s[3]);
+        let hw = (h * w) as f32;
+        let mut y = vec![0.0f32; n * c];
+        for b in 0..n {
+            for ch in 0..c {
+                let base = (b * c + ch) * h * w;
+                y[b * c + ch] = x.data()[base..base + h * w].iter().sum::<f32>() / hw;
+            }
+        }
+        Tensor::from_vec(&[n, c], y)
+    }
+    fn backward(
+        &self,
+        grad_out: &Tensor,
+        inputs: &[&Tensor],
+        _p: &[&Tensor],
+        _ctx: &OpCtx,
+    ) -> OpGrads {
+        let x = inputs[0];
+        let s = x.shape();
+        let (n, c, h, w) = (s[0], s[1], s[2], s[3]);
+        let hw = (h * w) as f32;
+        let mut dx = vec![0.0f32; x.len()];
+        for b in 0..n {
+            for ch in 0..c {
+                let g = grad_out.data()[b * c + ch] / hw;
+                let base = (b * c + ch) * h * w;
+                dx[base..base + h * w].iter_mut().for_each(|v| *v = g);
+            }
+        }
+        OpGrads { inputs: vec![Some(Tensor::from_vec(s, dx))], params: vec![] }
+    }
+}
+
+/// Flatten [n, d1, d2, ...] -> [n, d1*d2*...].
+pub struct Flatten;
+
+impl Op for Flatten {
+    fn name(&self) -> &'static str {
+        "flatten"
+    }
+    fn out_shape(&self, inputs: &[&[usize]], _p: &[&[usize]]) -> Vec<usize> {
+        let s = inputs[0];
+        vec![s[0], s[1..].iter().product()]
+    }
+    fn forward(&self, inputs: &[&Tensor], _p: &[&Tensor], _ctx: &mut OpCtx) -> Tensor {
+        let s = inputs[0].shape();
+        inputs[0].reshape(&[s[0], s[1..].iter().product()])
+    }
+    fn backward(
+        &self,
+        grad_out: &Tensor,
+        inputs: &[&Tensor],
+        _p: &[&Tensor],
+        _ctx: &OpCtx,
+    ) -> OpGrads {
+        OpGrads {
+            inputs: vec![Some(grad_out.reshape(inputs[0].shape()))],
+            params: vec![],
+        }
+    }
+}
+
+/// Token embedding lookup. Input: token ids as f32 [batch, seq]; param:
+/// table [vocab, dim]. Output [batch, seq, dim].
+pub struct Embedding;
+
+impl Op for Embedding {
+    fn name(&self) -> &'static str {
+        "embedding"
+    }
+    fn out_shape(&self, inputs: &[&[usize]], params: &[&[usize]]) -> Vec<usize> {
+        let mut s = inputs[0].to_vec();
+        s.push(params[0][1]);
+        s
+    }
+    fn forward(&self, inputs: &[&Tensor], params: &[&Tensor], _ctx: &mut OpCtx) -> Tensor {
+        let ids = inputs[0];
+        let table = params[0];
+        let (vocab, dim) = (table.shape()[0], table.shape()[1]);
+        let mut y = vec![0.0f32; ids.len() * dim];
+        for (i, id) in ids.data().iter().enumerate() {
+            let t = (*id as usize).min(vocab - 1);
+            y[i * dim..(i + 1) * dim].copy_from_slice(&table.data()[t * dim..(t + 1) * dim]);
+        }
+        let mut shape = ids.shape().to_vec();
+        shape.push(dim);
+        Tensor::from_vec(&shape, y)
+    }
+    fn backward(
+        &self,
+        grad_out: &Tensor,
+        inputs: &[&Tensor],
+        params: &[&Tensor],
+        _ctx: &OpCtx,
+    ) -> OpGrads {
+        let ids = inputs[0];
+        let table = params[0];
+        let (vocab, dim) = (table.shape()[0], table.shape()[1]);
+        let mut dtable = vec![0.0f32; vocab * dim];
+        for (i, id) in ids.data().iter().enumerate() {
+            let t = (*id as usize).min(vocab - 1);
+            let g = &grad_out.data()[i * dim..(i + 1) * dim];
+            let dst = &mut dtable[t * dim..(t + 1) * dim];
+            for (d, gg) in dst.iter_mut().zip(g.iter()) {
+                *d += *gg;
+            }
+        }
+        OpGrads {
+            inputs: vec![None], // ids carry no gradient
+            params: vec![Tensor::from_vec(&[vocab, dim], dtable)],
+        }
+    }
+    fn backward_reads_param(&self, _k: usize) -> bool {
+        false // scatter-add of grads only; table value unused in backward
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShiftRng;
+
+    #[test]
+    fn add_roundtrip() {
+        let a = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        let b = Tensor::from_vec(&[2], vec![10.0, 20.0]);
+        let y = Add.forward(&[&a, &b], &[], &mut OpCtx::default());
+        assert_eq!(y.data(), &[11.0, 22.0]);
+        let g = Add.backward(&y, &[&a, &b], &[], &OpCtx::default());
+        assert_eq!(g.inputs[0].as_ref().unwrap().data(), y.data());
+        assert_eq!(g.inputs[1].as_ref().unwrap().data(), y.data());
+    }
+
+    #[test]
+    fn concat_and_split_back() {
+        let mut rng = XorShiftRng::new(11);
+        let a = Tensor::randn(&[2, 2, 2, 2], 1.0, &mut rng);
+        let b = Tensor::randn(&[2, 3, 2, 2], 1.0, &mut rng);
+        let y = ConcatChannels.forward(&[&a, &b], &[], &mut OpCtx::default());
+        assert_eq!(y.shape(), &[2, 5, 2, 2]);
+        let g = ConcatChannels.backward(&y, &[&a, &b], &[], &OpCtx::default());
+        assert_eq!(g.inputs[0].as_ref().unwrap().data(), a.data());
+        assert_eq!(g.inputs[1].as_ref().unwrap().data(), b.data());
+    }
+
+    #[test]
+    fn gap_means_and_grad_spreads() {
+        let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1.0, 2.0, 3.0, 6.0]);
+        let y = GlobalAvgPool.forward(&[&x], &[], &mut OpCtx::default());
+        assert_eq!(y.data(), &[3.0]);
+        let g = GlobalAvgPool.backward(
+            &Tensor::from_vec(&[1, 1], vec![4.0]),
+            &[&x],
+            &[],
+            &OpCtx::default(),
+        );
+        assert_eq!(g.inputs[0].as_ref().unwrap().data(), &[1.0, 1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn embedding_lookup_and_scatter() {
+        let table = Tensor::from_vec(&[3, 2], vec![0.0, 1.0, 10.0, 11.0, 20.0, 21.0]);
+        let ids = Tensor::from_vec(&[1, 3], vec![2.0, 0.0, 2.0]);
+        let y = Embedding.forward(&[&ids], &[&table], &mut OpCtx::default());
+        assert_eq!(y.shape(), &[1, 3, 2]);
+        assert_eq!(y.data(), &[20.0, 21.0, 0.0, 1.0, 20.0, 21.0]);
+        let go = Tensor::full(&[1, 3, 2], 1.0);
+        let g = Embedding.backward(&go, &[&ids], &[&table], &OpCtx::default());
+        assert!(g.inputs[0].is_none());
+        // token 2 used twice -> grad 2, token 0 once -> grad 1, token 1 zero
+        assert_eq!(g.params[0].data(), &[1.0, 1.0, 0.0, 0.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn flatten_roundtrip() {
+        let x = Tensor::from_vec(&[2, 2, 3], (0..12).map(|i| i as f32).collect());
+        let y = Flatten.forward(&[&x], &[], &mut OpCtx::default());
+        assert_eq!(y.shape(), &[2, 6]);
+        let g = Flatten.backward(&y, &[&x], &[], &OpCtx::default());
+        assert_eq!(g.inputs[0].as_ref().unwrap().shape(), &[2, 2, 3]);
+    }
+
+    #[test]
+    fn embedding_clamps_out_of_vocab() {
+        let table = Tensor::from_vec(&[2, 1], vec![5.0, 7.0]);
+        let ids = Tensor::from_vec(&[1], vec![99.0]);
+        let y = Embedding.forward(&[&ids], &[&table], &mut OpCtx::default());
+        assert_eq!(y.data(), &[7.0]);
+    }
+}

@@ -1,0 +1,518 @@
+//! Iterative optimizers (paper §A, Alg. 1). Each optimizer is a pure
+//! per-parameter update rule: the *schedule* that decides **when** each
+//! update runs lives in `exec/` — that separation is exactly what lets the
+//! same optimizer run under baseline, forward-fusion, or backward-fusion
+//! without changing its math (the paper's "plug-in" property).
+//!
+//! Per the paper's Fig. 2 memory model, the update also *resets the
+//! gradient* — grads are "read and reset by the optimizer".
+
+pub mod sched;
+
+use crate::graph::ParamData;
+use crate::tensor::Tensor;
+
+/// Hyper-parameters shared across optimizers.
+#[derive(Debug, Clone)]
+pub struct Hyper {
+    pub lr: f32,
+    pub weight_decay: f32,
+    pub momentum: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// Adadelta decay.
+    pub rho: f32,
+}
+
+impl Default for Hyper {
+    fn default() -> Self {
+        Self {
+            lr: 1e-3,
+            weight_decay: 1e-2,
+            momentum: 0.9,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            rho: 0.9,
+        }
+    }
+}
+
+/// A per-parameter iterative update rule.
+pub trait Optimizer: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Number of state tensors per parameter (momentum buffers etc.).
+    fn num_state(&self) -> usize;
+
+    /// True if the rule needs information across all parameters (e.g.
+    /// global-norm clipping). Backward-fusion cannot run such rules
+    /// (paper Table 1); forward-fusion and baseline can.
+    fn needs_global(&self) -> bool {
+        false
+    }
+
+    /// Apply one update step to a single parameter. `step` is 1-based.
+    /// `global_scale` is 1.0 unless a global transform (grad clipping)
+    /// was computed after backward. Implementations must also reset the
+    /// gradient to zero (Fig. 2: grads are read *and reset* here).
+    fn update(&self, step: u64, p: &mut ParamData, hp: &Hyper, global_scale: f32);
+
+    /// (reads, writes) of f32 elements per parameter scalar — the memory
+    /// transaction footprint used by `memsim` (paper Fig. 2 analysis).
+    /// Counts param/grad/state traffic of a straightforward kernel.
+    fn mem_per_elem(&self) -> (u32, u32);
+
+    /// Arithmetic ops per scalar (memsim cost model).
+    fn flops_per_elem(&self) -> u32;
+}
+
+fn ensure_state(p: &mut ParamData, n: usize) {
+    while p.state.len() < n {
+        let shape = p.value.shape().to_vec();
+        p.state.push(Tensor::zeros(&shape));
+    }
+}
+
+/// Plain SGD: θ ← θ − lr·(g + wd·θ).
+pub struct Sgd;
+
+impl Optimizer for Sgd {
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+    fn num_state(&self) -> usize {
+        0
+    }
+    fn update(&self, _step: u64, p: &mut ParamData, hp: &Hyper, gs: f32) {
+        let wd = hp.weight_decay;
+        let lr = hp.lr;
+        for (v, g) in p.value.data_mut().iter_mut().zip(p.grad.data_mut().iter_mut()) {
+            let grad = *g * gs + wd * *v;
+            *v -= lr * grad;
+            *g = 0.0;
+        }
+    }
+    fn mem_per_elem(&self) -> (u32, u32) {
+        (2, 2) // read θ,g ; write θ,g(reset)
+    }
+    fn flops_per_elem(&self) -> u32 {
+        4
+    }
+}
+
+/// SGD with (heavy-ball) momentum: m ← μ·m + g; θ ← θ − lr·m.
+pub struct SgdMomentum;
+
+impl Optimizer for SgdMomentum {
+    fn name(&self) -> &'static str {
+        "sgd_momentum"
+    }
+    fn num_state(&self) -> usize {
+        1
+    }
+    fn update(&self, _step: u64, p: &mut ParamData, hp: &Hyper, gs: f32) {
+        ensure_state(p, 1);
+        let (lr, mu, wd) = (hp.lr, hp.momentum, hp.weight_decay);
+        let ParamData { value, grad, state, .. } = p;
+        let m = &mut state[0];
+        for ((v, g), mm) in value
+            .data_mut()
+            .iter_mut()
+            .zip(grad.data_mut().iter_mut())
+            .zip(m.data_mut().iter_mut())
+        {
+            let grad = *g * gs + wd * *v;
+            *mm = mu * *mm + grad;
+            *v -= lr * *mm;
+            *g = 0.0;
+        }
+    }
+    fn mem_per_elem(&self) -> (u32, u32) {
+        (3, 3) // read θ,g,m ; write θ,g,m
+    }
+    fn flops_per_elem(&self) -> u32 {
+        7
+    }
+}
+
+/// Adam (Kingma & Ba 2015) with decoupled L2 applied as coupled weight
+/// decay (classic Adam+wd, as used in the paper's §C.1 setup).
+pub struct Adam;
+
+impl Optimizer for Adam {
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+    fn num_state(&self) -> usize {
+        2
+    }
+    fn update(&self, step: u64, p: &mut ParamData, hp: &Hyper, gs: f32) {
+        ensure_state(p, 2);
+        let (lr, b1, b2, eps, wd) = (hp.lr, hp.beta1, hp.beta2, hp.eps, hp.weight_decay);
+        let bc1 = 1.0 - b1.powi(step as i32);
+        let bc2 = 1.0 - b2.powi(step as i32);
+        let ParamData { value, grad, state, .. } = p;
+        let (ms, vs) = state.split_at_mut(1);
+        let m = &mut ms[0];
+        let v2 = &mut vs[0];
+        for (((v, g), mm), vv) in value
+            .data_mut()
+            .iter_mut()
+            .zip(grad.data_mut().iter_mut())
+            .zip(m.data_mut().iter_mut())
+            .zip(v2.data_mut().iter_mut())
+        {
+            let grad = *g * gs + wd * *v;
+            *mm = b1 * *mm + (1.0 - b1) * grad;
+            *vv = b2 * *vv + (1.0 - b2) * grad * grad;
+            let mhat = *mm / bc1;
+            let vhat = *vv / bc2;
+            *v -= lr * mhat / (vhat.sqrt() + eps);
+            *g = 0.0;
+        }
+    }
+    fn mem_per_elem(&self) -> (u32, u32) {
+        (4, 4) // θ,g,m,v in ; θ,g,m,v out
+    }
+    fn flops_per_elem(&self) -> u32 {
+        13
+    }
+}
+
+/// AdamW: decoupled weight decay (θ ← θ·(1 − lr·wd) before the Adam step).
+pub struct AdamW;
+
+impl Optimizer for AdamW {
+    fn name(&self) -> &'static str {
+        "adamw"
+    }
+    fn num_state(&self) -> usize {
+        2
+    }
+    fn update(&self, step: u64, p: &mut ParamData, hp: &Hyper, gs: f32) {
+        ensure_state(p, 2);
+        let (lr, b1, b2, eps, wd) = (hp.lr, hp.beta1, hp.beta2, hp.eps, hp.weight_decay);
+        let bc1 = 1.0 - b1.powi(step as i32);
+        let bc2 = 1.0 - b2.powi(step as i32);
+        let ParamData { value, grad, state, .. } = p;
+        let (ms, vs) = state.split_at_mut(1);
+        let m = &mut ms[0];
+        let v2 = &mut vs[0];
+        for (((v, g), mm), vv) in value
+            .data_mut()
+            .iter_mut()
+            .zip(grad.data_mut().iter_mut())
+            .zip(m.data_mut().iter_mut())
+            .zip(v2.data_mut().iter_mut())
+        {
+            let grad = *g * gs;
+            *v *= 1.0 - lr * wd;
+            *mm = b1 * *mm + (1.0 - b1) * grad;
+            *vv = b2 * *vv + (1.0 - b2) * grad * grad;
+            let mhat = *mm / bc1;
+            let vhat = *vv / bc2;
+            *v -= lr * mhat / (vhat.sqrt() + eps);
+            *g = 0.0;
+        }
+    }
+    fn mem_per_elem(&self) -> (u32, u32) {
+        (4, 4)
+    }
+    fn flops_per_elem(&self) -> u32 {
+        14
+    }
+}
+
+/// Adagrad (Duchi et al. 2011): h ← h + g²; θ ← θ − lr·g/(√h + eps).
+pub struct Adagrad;
+
+impl Optimizer for Adagrad {
+    fn name(&self) -> &'static str {
+        "adagrad"
+    }
+    fn num_state(&self) -> usize {
+        1
+    }
+    fn update(&self, _step: u64, p: &mut ParamData, hp: &Hyper, gs: f32) {
+        ensure_state(p, 1);
+        let (lr, eps, wd) = (hp.lr, hp.eps, hp.weight_decay);
+        let ParamData { value, grad, state, .. } = p;
+        let h = &mut state[0];
+        for ((v, g), hh) in value
+            .data_mut()
+            .iter_mut()
+            .zip(grad.data_mut().iter_mut())
+            .zip(h.data_mut().iter_mut())
+        {
+            let grad = *g * gs + wd * *v;
+            *hh += grad * grad;
+            *v -= lr * grad / (hh.sqrt() + eps);
+            *g = 0.0;
+        }
+    }
+    fn mem_per_elem(&self) -> (u32, u32) {
+        (3, 3)
+    }
+    fn flops_per_elem(&self) -> u32 {
+        8
+    }
+}
+
+/// Adadelta (Zeiler 2012): two running averages, no explicit lr.
+pub struct Adadelta;
+
+impl Optimizer for Adadelta {
+    fn name(&self) -> &'static str {
+        "adadelta"
+    }
+    fn num_state(&self) -> usize {
+        2
+    }
+    fn update(&self, _step: u64, p: &mut ParamData, hp: &Hyper, gs: f32) {
+        ensure_state(p, 2);
+        let (rho, eps, wd) = (hp.rho, hp.eps, hp.weight_decay);
+        let ParamData { value, grad, state, .. } = p;
+        let (eg, ex) = state.split_at_mut(1);
+        let eg2 = &mut eg[0];
+        let ex2 = &mut ex[0];
+        for (((v, g), egg), exx) in value
+            .data_mut()
+            .iter_mut()
+            .zip(grad.data_mut().iter_mut())
+            .zip(eg2.data_mut().iter_mut())
+            .zip(ex2.data_mut().iter_mut())
+        {
+            let grad = *g * gs + wd * *v;
+            *egg = rho * *egg + (1.0 - rho) * grad * grad;
+            let dx = -((*exx + eps).sqrt() / (*egg + eps).sqrt()) * grad;
+            *exx = rho * *exx + (1.0 - rho) * dx * dx;
+            *v += dx;
+            *g = 0.0;
+        }
+    }
+    fn mem_per_elem(&self) -> (u32, u32) {
+        (4, 4)
+    }
+    fn flops_per_elem(&self) -> u32 {
+        14
+    }
+}
+
+/// RMSprop: v ← ρ·v + (1-ρ)·g²; θ ← θ − lr·g/(√v + eps).
+pub struct RmsProp;
+
+impl Optimizer for RmsProp {
+    fn name(&self) -> &'static str {
+        "rmsprop"
+    }
+    fn num_state(&self) -> usize {
+        1
+    }
+    fn update(&self, _step: u64, p: &mut ParamData, hp: &Hyper, gs: f32) {
+        ensure_state(p, 1);
+        let (lr, rho, eps, wd) = (hp.lr, hp.rho, hp.eps, hp.weight_decay);
+        let ParamData { value, grad, state, .. } = p;
+        let v2 = &mut state[0];
+        for ((v, g), vv) in value
+            .data_mut()
+            .iter_mut()
+            .zip(grad.data_mut().iter_mut())
+            .zip(v2.data_mut().iter_mut())
+        {
+            let grad = *g * gs + wd * *v;
+            *vv = rho * *vv + (1.0 - rho) * grad * grad;
+            *v -= lr * grad / (vv.sqrt() + eps);
+            *g = 0.0;
+        }
+    }
+    fn mem_per_elem(&self) -> (u32, u32) {
+        (3, 3)
+    }
+    fn flops_per_elem(&self) -> u32 {
+        9
+    }
+}
+
+/// Wraps any optimizer with global-gradient-norm clipping — an update rule
+/// that **needs global information** (paper Table 1 / §B.1: supported by
+/// forward-fusion, rejected by backward-fusion).
+pub struct GlobalNormClip<O> {
+    pub inner: O,
+    pub max_norm: f32,
+}
+
+impl<O: Optimizer> Optimizer for GlobalNormClip<O> {
+    fn name(&self) -> &'static str {
+        "global_norm_clip"
+    }
+    fn num_state(&self) -> usize {
+        self.inner.num_state()
+    }
+    fn needs_global(&self) -> bool {
+        true
+    }
+    /// `global_scale` must be the precomputed clip factor
+    /// min(1, max_norm / ||g||_global); the per-parameter work is local.
+    fn update(&self, step: u64, p: &mut ParamData, hp: &Hyper, global_scale: f32) {
+        self.inner.update(step, p, hp, global_scale);
+    }
+    fn mem_per_elem(&self) -> (u32, u32) {
+        let (r, w) = self.inner.mem_per_elem();
+        (r + 1, w) // extra grad read for the norm pass
+    }
+    fn flops_per_elem(&self) -> u32 {
+        self.inner.flops_per_elem() + 2
+    }
+}
+
+/// Construct an optimizer by name (CLI / bench sweeps).
+pub fn by_name(name: &str) -> Option<Box<dyn Optimizer>> {
+    Some(match name {
+        "sgd" => Box::new(Sgd),
+        "sgd_momentum" | "momentum" => Box::new(SgdMomentum),
+        "adam" => Box::new(Adam),
+        "adamw" => Box::new(AdamW),
+        "adagrad" => Box::new(Adagrad),
+        "adadelta" => Box::new(Adadelta),
+        "rmsprop" => Box::new(RmsProp),
+        "adam_clip" => Box::new(GlobalNormClip { inner: Adam, max_norm: 1.0 }),
+        _ => return None,
+    })
+}
+
+/// All local (BF-compatible) optimizer names, for sweeps (paper Fig. 7).
+pub const LOCAL_OPTIMIZERS: [&str; 7] = [
+    "sgd",
+    "sgd_momentum",
+    "adam",
+    "adamw",
+    "adagrad",
+    "adadelta",
+    "rmsprop",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_param(vals: &[f32], grads: &[f32]) -> ParamData {
+        ParamData {
+            name: "p".into(),
+            value: Tensor::from_vec(&[vals.len()], vals.to_vec()),
+            grad: Tensor::from_vec(&[grads.len()], grads.to_vec()),
+            state: Vec::new(),
+        }
+    }
+
+    fn hp_nodecay() -> Hyper {
+        Hyper { weight_decay: 0.0, ..Hyper::default() }
+    }
+
+    #[test]
+    fn sgd_step_and_grad_reset() {
+        let mut p = mk_param(&[1.0, 2.0], &[0.5, -0.5]);
+        let hp = Hyper { lr: 0.1, weight_decay: 0.0, ..Hyper::default() };
+        Sgd.update(1, &mut p, &hp, 1.0);
+        assert_eq!(p.value.data(), &[0.95, 2.05]);
+        assert_eq!(p.grad.data(), &[0.0, 0.0], "grad must be reset");
+    }
+
+    #[test]
+    fn sgd_weight_decay() {
+        let mut p = mk_param(&[1.0], &[0.0]);
+        let hp = Hyper { lr: 0.1, weight_decay: 0.5, ..Hyper::default() };
+        Sgd.update(1, &mut p, &hp, 1.0);
+        assert!((p.value.data()[0] - 0.95).abs() < 1e-6);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut p = mk_param(&[0.0], &[1.0]);
+        let hp = Hyper { lr: 1.0, momentum: 0.5, weight_decay: 0.0, ..Hyper::default() };
+        SgdMomentum.update(1, &mut p, &hp, 1.0);
+        assert_eq!(p.value.data(), &[-1.0]);
+        p.grad.data_mut()[0] = 1.0;
+        SgdMomentum.update(2, &mut p, &hp, 1.0);
+        // m = 0.5*1 + 1 = 1.5 -> θ = -1 - 1.5 = -2.5
+        assert_eq!(p.value.data(), &[-2.5]);
+    }
+
+    #[test]
+    fn adam_first_step_is_lr_sized() {
+        // bias correction makes |Δθ| ≈ lr on step 1 regardless of grad scale
+        let mut p = mk_param(&[0.0], &[1e-3]);
+        let hp = hp_nodecay();
+        Adam.update(1, &mut p, &hp, 1.0);
+        assert!((p.value.data()[0].abs() - hp.lr).abs() < 1e-4, "{}", p.value.data()[0]);
+    }
+
+    #[test]
+    fn adamw_decay_decoupled() {
+        let mut p = mk_param(&[1.0], &[0.0]);
+        let hp = Hyper { lr: 0.1, weight_decay: 0.5, ..Hyper::default() };
+        AdamW.update(1, &mut p, &hp, 1.0);
+        // grad=0 so only decay applies: 1 * (1 - 0.1*0.5) = 0.95
+        assert!((p.value.data()[0] - 0.95).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adagrad_lr_shrinks() {
+        let mut p = mk_param(&[0.0], &[1.0]);
+        let hp = Hyper { lr: 1.0, weight_decay: 0.0, eps: 0.0, ..Hyper::default() };
+        Adagrad.update(1, &mut p, &hp, 1.0);
+        let d1 = p.value.data()[0].abs(); // 1/sqrt(1) = 1
+        p.grad.data_mut()[0] = 1.0;
+        let before = p.value.data()[0];
+        Adagrad.update(2, &mut p, &hp, 1.0);
+        let d2 = (p.value.data()[0] - before).abs(); // 1/sqrt(2)
+        assert!(d2 < d1);
+        assert!((d2 - 1.0 / 2.0f32.sqrt()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn adadelta_moves_against_gradient() {
+        let mut p = mk_param(&[1.0], &[1.0]);
+        Adadelta.update(1, &mut p, &hp_nodecay(), 1.0);
+        assert!(p.value.data()[0] < 1.0);
+    }
+
+    #[test]
+    fn rmsprop_step() {
+        let mut p = mk_param(&[0.0], &[2.0]);
+        let hp = Hyper { lr: 0.1, weight_decay: 0.0, rho: 0.0, eps: 0.0, ..Hyper::default() };
+        // v = g², step = lr·g/|g| = lr·sign(g)
+        RmsProp.update(1, &mut p, &hp, 1.0);
+        assert!((p.value.data()[0] + 0.1).abs() < 1e-5);
+    }
+
+    #[test]
+    fn global_scale_applied() {
+        let mut p = mk_param(&[0.0], &[10.0]);
+        let hp = Hyper { lr: 1.0, weight_decay: 0.0, ..Hyper::default() };
+        let clip = GlobalNormClip { inner: Sgd, max_norm: 1.0 };
+        assert!(clip.needs_global());
+        clip.update(1, &mut p, &hp, 0.1); // scale 0.1 => effective grad 1.0
+        assert!((p.value.data()[0] + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in LOCAL_OPTIMIZERS {
+            let o = by_name(n).unwrap();
+            assert!(!o.needs_global(), "{n}");
+        }
+        assert!(by_name("adam_clip").unwrap().needs_global());
+        assert!(by_name("bogus").is_none());
+    }
+
+    #[test]
+    fn state_allocated_lazily() {
+        let mut p = mk_param(&[1.0, 2.0, 3.0], &[0.1, 0.1, 0.1]);
+        assert!(p.state.is_empty());
+        Adam.update(1, &mut p, &hp_nodecay(), 1.0);
+        assert_eq!(p.state.len(), 2);
+        assert_eq!(p.state[0].shape(), &[3]);
+    }
+}

@@ -1,0 +1,92 @@
+//! Learning-rate schedules. They interact subtly with the fusion
+//! schedules: forward-fusion applies step t's update during step t+1's
+//! forward, so the LR must be evaluated at the *gradient's* step index,
+//! not the wallclock step — the executor threads the right index through,
+//! and the equivalence tests in `exec` would catch any drift.
+
+/// A learning-rate schedule over 1-based step indices.
+pub trait LrSchedule: Send + Sync {
+    fn lr(&self, step: u64) -> f32;
+    fn name(&self) -> &'static str;
+}
+
+/// Constant LR.
+pub struct ConstantLr(pub f32);
+
+impl LrSchedule for ConstantLr {
+    fn lr(&self, _step: u64) -> f32 {
+        self.0
+    }
+    fn name(&self) -> &'static str {
+        "constant"
+    }
+}
+
+/// Linear warmup to `peak` over `warmup` steps, then cosine decay to
+/// `floor` at `total` steps (transformer-style).
+pub struct WarmupCosine {
+    pub peak: f32,
+    pub floor: f32,
+    pub warmup: u64,
+    pub total: u64,
+}
+
+impl LrSchedule for WarmupCosine {
+    fn lr(&self, step: u64) -> f32 {
+        if step <= self.warmup {
+            return self.peak * step as f32 / self.warmup.max(1) as f32;
+        }
+        let t = (step - self.warmup) as f32 / (self.total - self.warmup).max(1) as f32;
+        let t = t.min(1.0);
+        self.floor + 0.5 * (self.peak - self.floor) * (1.0 + (std::f32::consts::PI * t).cos())
+    }
+    fn name(&self) -> &'static str {
+        "warmup_cosine"
+    }
+}
+
+/// Step decay: multiply by `gamma` every `every` steps.
+pub struct StepDecay {
+    pub base: f32,
+    pub gamma: f32,
+    pub every: u64,
+}
+
+impl LrSchedule for StepDecay {
+    fn lr(&self, step: u64) -> f32 {
+        self.base * self.gamma.powi((step / self.every.max(1)) as i32)
+    }
+    fn name(&self) -> &'static str {
+        "step_decay"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = ConstantLr(0.1);
+        assert_eq!(s.lr(1), 0.1);
+        assert_eq!(s.lr(1000), 0.1);
+    }
+
+    #[test]
+    fn warmup_ramps_then_decays() {
+        let s = WarmupCosine { peak: 1.0, floor: 0.1, warmup: 10, total: 110 };
+        assert!(s.lr(1) < s.lr(5));
+        assert!((s.lr(10) - 1.0).abs() < 1e-6, "peak at end of warmup");
+        assert!(s.lr(60) < 1.0 && s.lr(60) > 0.1);
+        assert!((s.lr(110) - 0.1).abs() < 1e-5, "floor at total");
+        assert!((s.lr(500) - 0.1).abs() < 1e-5, "clamped after total");
+    }
+
+    #[test]
+    fn step_decay_steps() {
+        let s = StepDecay { base: 1.0, gamma: 0.5, every: 10 };
+        assert_eq!(s.lr(5), 1.0);
+        assert_eq!(s.lr(10), 0.5);
+        assert_eq!(s.lr(25), 0.25);
+    }
+}

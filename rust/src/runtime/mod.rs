@@ -1,0 +1,290 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` (via `make artifacts`), compiles them once on
+//! the PJRT CPU client, and executes them from the rust hot path.
+//! Python never runs at request time — the manifest + HLO text files are
+//! the entire interface between the layers.
+
+use crate::tensor::Tensor;
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// One manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    /// Expected input shapes (empty vec = f32 scalar).
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: usize,
+}
+
+/// The runtime: PJRT client + artifact registry with lazy compilation.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    metas: HashMap<String, ArtifactMeta>,
+    compiled: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    /// Create a runtime over the artifact directory (needs
+    /// `manifest.json`, see `make artifacts`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts`"))?;
+        let v = json::parse(&text).context("parsing manifest.json")?;
+        if v.get("format").as_usize() != Some(1) {
+            bail!("unsupported manifest format");
+        }
+        let mut metas = HashMap::new();
+        for a in v
+            .get("artifacts")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest: artifacts must be an array"))?
+        {
+            let name = a
+                .get("name")
+                .as_str()
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let file = dir.join(
+                a.get("file")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("artifact {name}: missing file"))?,
+            );
+            let inputs = a
+                .get("inputs")
+                .as_arr()
+                .ok_or_else(|| anyhow!("artifact {name}: missing inputs"))?
+                .iter()
+                .map(|shape| {
+                    shape
+                        .as_arr()
+                        .map(|dims| dims.iter().filter_map(Json::as_usize).collect())
+                        .ok_or_else(|| anyhow!("bad shape"))
+                })
+                .collect::<Result<Vec<Vec<usize>>>>()?;
+            let outputs = a
+                .get("outputs")
+                .as_usize()
+                .ok_or_else(|| anyhow!("artifact {name}: missing outputs"))?;
+            metas.insert(name.clone(), ArtifactMeta { name, file, inputs, outputs });
+        }
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, metas, compiled: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.metas.keys().map(String::as_str).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.metas.get(name)
+    }
+
+    /// Compile (if needed) and cache an artifact's executable.
+    fn ensure_compiled(&self, name: &str) -> Result<()> {
+        let mut cache = self.compiled.lock().unwrap();
+        if cache.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self
+            .metas
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        let path = meta
+            .file
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path"))?;
+        // HLO *text* interchange: the parser reassigns instruction ids, so
+        // jax>=0.5 modules load cleanly on xla_extension 0.5.1.
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing {path}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with host tensors; returns `meta.outputs`
+    /// tensors. Input shapes are validated against the manifest.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.ensure_compiled(name)?;
+        let meta = &self.metas[name];
+        if inputs.len() != meta.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (t, want)) in inputs.iter().zip(meta.inputs.iter()).enumerate() {
+            if t.shape() != want.as_slice() {
+                bail!("{name}: input {i} shape {:?} != manifest {want:?}", t.shape());
+            }
+            let dims: Vec<i64> = want.iter().map(|d| *d as i64).collect();
+            let lit = xla::Literal::vec1(t.data())
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshaping input {i}: {e}"))?;
+            literals.push(lit);
+        }
+        let cache = self.compiled.lock().unwrap();
+        let exe = &cache[name];
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e}"))?;
+        // aot.py lowers with return_tuple=True: always unwrap a tuple.
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling result: {e}"))?;
+        if parts.len() != meta.outputs {
+            bail!("{name}: expected {} outputs, got {}", meta.outputs, parts.len());
+        }
+        parts
+            .into_iter()
+            .map(|lit| {
+                let shape = lit
+                    .array_shape()
+                    .map_err(|e| anyhow!("output shape: {e}"))?;
+                let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
+                let data = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("output data: {e}"))?;
+                Ok(Tensor::from_vec(&dims, data))
+            })
+            .collect()
+    }
+}
+
+/// Locate the repo's artifact directory from the crate root.
+pub fn default_artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(Runtime::load(dir).expect("runtime loads"))
+    }
+
+    #[test]
+    fn manifest_loads_and_lists() {
+        let Some(rt) = runtime() else { return };
+        assert_eq!(rt.platform(), "cpu");
+        let names = rt.artifact_names();
+        assert!(names.contains(&"mlp_train_step_8x64x32x10"), "{names:?}");
+        assert!(names.contains(&"adamw_update_64x64"));
+        assert_eq!(rt.meta("adamw_update_64x64").unwrap().outputs, 4);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.execute("adamw_update_64x64", &[]).is_err(), "wrong arity");
+        assert!(rt.execute("nope", &[]).is_err(), "unknown name");
+        let bad = vec![Tensor::zeros(&[2, 2]); 5];
+        assert!(rt.execute("adamw_update_64x64", &bad).is_err(), "wrong shape");
+    }
+
+    #[test]
+    fn adamw_artifact_matches_rust_optimizer() {
+        let Some(rt) = runtime() else { return };
+        use crate::graph::ParamData;
+        use crate::optim::{AdamW, Hyper, Optimizer};
+        use crate::util::XorShiftRng;
+        let mut rng = XorShiftRng::new(42);
+        let theta = Tensor::randn(&[64, 64], 1.0, &mut rng);
+        let grad = Tensor::randn(&[64, 64], 1.0, &mut rng);
+        let m = Tensor::zeros(&[64, 64]);
+        let v = Tensor::zeros(&[64, 64]);
+        let step = Tensor::from_vec(&[], vec![1.0]);
+        let out = rt
+            .execute(
+                "adamw_update_64x64",
+                &[theta.clone(), grad.clone(), m.clone(), v.clone(), step],
+            )
+            .expect("execute");
+        assert_eq!(out.len(), 4);
+        // rust-native AdamW on the same data (hyper = aot defaults)
+        let mut pd = ParamData { name: "p".into(), value: theta, grad, state: vec![m, v] };
+        let hp = Hyper {
+            lr: 1e-3,
+            weight_decay: 1e-2,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            ..Hyper::default()
+        };
+        AdamW.update(1, &mut pd, &hp, 1.0);
+        let d = out[0].max_abs_diff(&pd.value);
+        assert!(d < 1e-5, "θ' mismatch vs rust AdamW: {d}");
+        assert_eq!(out[1].linf(), 0.0, "grad reset");
+        assert!(out[2].max_abs_diff(&pd.state[0]) < 1e-5, "m'");
+        assert!(out[3].max_abs_diff(&pd.state[1]) < 1e-5, "v'");
+    }
+
+    #[test]
+    fn mlp_train_step_decreases_loss_and_is_reusable() {
+        let Some(rt) = runtime() else { return };
+        let mut rng = crate::util::XorShiftRng::new(7);
+        let x = Tensor::randn(&[8, 64], 1.0, &mut rng);
+        let y = Tensor::randn(&[8, 10], 1.0, &mut rng);
+        let mut w1 = Tensor::randn(&[64, 32], 0.2, &mut rng);
+        let mut w2 = Tensor::randn(&[32, 10], 0.2, &mut rng);
+        let mut losses = Vec::new();
+        for _ in 0..10 {
+            let out = rt
+                .execute("mlp_train_step_8x64x32x10", &[x.clone(), y.clone(), w1, w2])
+                .expect("train step");
+            losses.push(out[0].data()[0]);
+            w1 = out[1].clone();
+            w2 = out[2].clone();
+        }
+        assert!(
+            *losses.last().unwrap() < losses[0] * 0.9,
+            "compiled train step must learn: {losses:?}"
+        );
+    }
+
+    #[test]
+    fn bwd_fused_artifact_respects_race_rule() {
+        let Some(rt) = runtime() else { return };
+        let mut rng = crate::util::XorShiftRng::new(9);
+        let x = Tensor::randn(&[32, 64], 1.0, &mut rng);
+        let dy = Tensor::randn(&[32, 128], 1.0, &mut rng);
+        let w = Tensor::randn(&[64, 128], 1.0, &mut rng);
+        let out = rt
+            .execute("bwd_matmul_sgd_32x64x128", &[x.clone(), dy.clone(), w.clone()])
+            .expect("execute");
+        // dx must use the OLD w: dx = dy · wᵀ (§B.2 race rule)
+        let mut want = vec![0.0f32; 32 * 64];
+        crate::ops::linalg::matmul_bt_acc(dy.data(), w.data(), &mut want, 32, 128, 64);
+        let want = Tensor::from_vec(&[32, 64], want);
+        assert!(out[0].max_abs_diff(&want) < 1e-3, "dx from pre-update w");
+        assert!(out[1].max_abs_diff(&w) > 1e-5, "w actually updated");
+    }
+}

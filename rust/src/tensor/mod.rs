@@ -1,0 +1,266 @@
+//! Dense f32 host tensors. The engine is f32-only (the paper's experiments
+//! are single-precision, §C.1); shape is a small Vec<usize> in row-major
+//! (C) order.
+
+use crate::util::XorShiftRng;
+use std::fmt;
+
+/// A dense, row-major f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)?;
+        if self.data.len() <= 8 {
+            write!(f, " {:?}", self.data)
+        } else {
+            write!(f, " [{} elems]", self.data.len())
+        }
+    }
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// Constant-filled tensor.
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    /// Build from raw data; panics if the element count mismatches.
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} vs data len {}",
+            data.len()
+        );
+        Self { shape: shape.to_vec(), data }
+    }
+
+    /// Gaussian init, N(0, std).
+    pub fn randn(shape: &[usize], std: f32, rng: &mut XorShiftRng) -> Self {
+        let mut t = Self::zeros(shape);
+        rng.fill_normal(&mut t.data, std);
+        t
+    }
+
+    /// Kaiming-ish fan-in init for a weight of shape [fan_in, fan_out] (or
+    /// any shape where dim 0 is fan-in).
+    pub fn kaiming(shape: &[usize], rng: &mut XorShiftRng) -> Self {
+        let fan_in = shape.first().copied().unwrap_or(1).max(1);
+        Self::randn(shape, (2.0 / fan_in as f32).sqrt(), rng)
+    }
+
+    #[inline]
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret the buffer with a new shape of identical element count.
+    pub fn reshape(&self, shape: &[usize]) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.data.len(),
+            "reshape {:?} -> {shape:?}",
+            self.shape
+        );
+        Tensor { shape: shape.to_vec(), data: self.data.clone() }
+    }
+
+    /// Number of rows when viewed as 2-D [rows, cols] (flattening leading
+    /// dims). Panics on rank-0.
+    pub fn rows_cols(&self) -> (usize, usize) {
+        assert!(!self.shape.is_empty());
+        let cols = *self.shape.last().unwrap();
+        let rows = self.data.len() / cols.max(1);
+        (rows, cols)
+    }
+
+    /// Elementwise binary op into a fresh tensor (shapes must match).
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+        assert_eq!(self.shape, other.shape, "zip shape mismatch");
+        let data = self
+            .data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| f(*a, *b))
+            .collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    /// Elementwise map into a fresh tensor.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor { shape: self.shape.clone(), data: self.data.iter().map(|x| f(*x)).collect() }
+    }
+
+    /// In-place axpy: self += alpha * other.
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        assert_eq!(self.shape, other.shape, "axpy shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += alpha * b;
+        }
+    }
+
+    /// In-place scale.
+    pub fn scale(&mut self, alpha: f32) {
+        for a in self.data.iter_mut() {
+            *a *= alpha;
+        }
+    }
+
+    /// In-place zero.
+    pub fn zero_(&mut self) {
+        self.data.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    /// Sum of elements.
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    /// L2 norm.
+    pub fn l2(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Max |x|.
+    pub fn linf(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+
+    /// Max elementwise |a-b| against another tensor.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()))
+    }
+
+    /// True if all elements are finite.
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+
+    /// Bytes occupied by the data buffer (for the memory simulator).
+    pub fn nbytes(&self) -> u64 {
+        (self.data.len() * std::mem::size_of::<f32>()) as u64
+    }
+}
+
+/// Assert two tensors are elementwise close; panics with a diagnostic.
+pub fn assert_close(a: &Tensor, b: &Tensor, atol: f32, rtol: f32, what: &str) {
+    assert_eq!(a.shape(), b.shape(), "{what}: shape mismatch");
+    for (i, (x, y)) in a.data().iter().zip(b.data().iter()).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        assert!(
+            (x - y).abs() <= tol,
+            "{what}: elem {i}: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_shape() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.rows_cols(), (2, 3));
+        let u = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        assert_eq!(u.sum(), 6.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_shape_mismatch_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn elementwise_ops() {
+        let a = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        let b = Tensor::from_vec(&[2], vec![3.0, 5.0]);
+        assert_eq!(a.zip(&b, |x, y| x + y).data(), &[4.0, 7.0]);
+        assert_eq!(a.map(|x| x * 2.0).data(), &[2.0, 4.0]);
+        let mut c = a.clone();
+        c.axpy(2.0, &b);
+        assert_eq!(c.data(), &[7.0, 12.0]);
+        c.scale(0.5);
+        assert_eq!(c.data(), &[3.5, 6.0]);
+        c.zero_();
+        assert_eq!(c.data(), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn norms() {
+        let a = Tensor::from_vec(&[2], vec![3.0, -4.0]);
+        assert_eq!(a.l2(), 5.0);
+        assert_eq!(a.linf(), 4.0);
+        assert!(a.all_finite());
+        let b = Tensor::from_vec(&[1], vec![f32::NAN]);
+        assert!(!b.all_finite());
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let a = Tensor::from_vec(&[2, 3], (0..6).map(|i| i as f32).collect());
+        let b = a.reshape(&[3, 2]);
+        assert_eq!(b.shape(), &[3, 2]);
+        assert_eq!(b.data(), a.data());
+    }
+
+    #[test]
+    fn randn_statistics() {
+        let mut rng = XorShiftRng::new(5);
+        let t = Tensor::randn(&[10_000], 2.0, &mut rng);
+        let mean = t.sum() / t.len() as f32;
+        assert!(mean.abs() < 0.1);
+        let var = t.data().iter().map(|x| (x - mean).powi(2)).sum::<f32>() / t.len() as f32;
+        assert!((var - 4.0).abs() < 0.4, "var {var}");
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        let a = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        let b = Tensor::from_vec(&[2], vec![1.5, 2.0]);
+        assert_eq!(a.max_abs_diff(&b), 0.5);
+    }
+}

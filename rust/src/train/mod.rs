@@ -1,0 +1,125 @@
+//! Training-loop driver: runs an [`Executor`] over a data stream,
+//! aggregates the per-stage timing breakdown (Fig. 3), throughput, and a
+//! loss trace, and renders results as text/CSV/markdown for the bench
+//! harness and EXPERIMENTS.md.
+
+use crate::exec::{Executor, StepStats};
+use crate::tensor::Tensor;
+use std::time::Duration;
+
+/// Aggregated results over a training run.
+#[derive(Debug, Clone, Default)]
+pub struct RunReport {
+    pub steps: usize,
+    pub losses: Vec<f32>,
+    pub forward: Duration,
+    pub backward: Duration,
+    pub optimizer: Duration,
+    pub opt_in_forward: Duration,
+    pub opt_in_backward: Duration,
+    pub wall: Duration,
+}
+
+impl RunReport {
+    pub fn add(&mut self, s: &StepStats) {
+        self.steps += 1;
+        self.losses.push(s.loss);
+        self.forward += s.forward;
+        self.backward += s.backward;
+        self.optimizer += s.optimizer;
+        self.opt_in_forward += s.opt_in_forward;
+        self.opt_in_backward += s.opt_in_backward;
+        self.wall += s.total();
+    }
+
+    /// Mean per-iteration wall time.
+    pub fn iter_ms(&self) -> f64 {
+        self.wall.as_secs_f64() * 1e3 / self.steps.max(1) as f64
+    }
+
+    /// Per-stage mean milliseconds (fwd, bwd, opt).
+    pub fn breakdown_ms(&self) -> (f64, f64, f64) {
+        let n = self.steps.max(1) as f64;
+        (
+            self.forward.as_secs_f64() * 1e3 / n,
+            self.backward.as_secs_f64() * 1e3 / n,
+            self.optimizer.as_secs_f64() * 1e3 / n,
+        )
+    }
+
+    /// Samples/second given a batch size.
+    pub fn throughput(&self, batch: usize) -> f64 {
+        batch as f64 * self.steps as f64 / self.wall.as_secs_f64().max(1e-12)
+    }
+
+    pub fn final_loss(&self) -> f32 {
+        self.losses.last().copied().unwrap_or(f32::NAN)
+    }
+
+    /// Loss trace as CSV "step,loss" lines.
+    pub fn loss_csv(&self) -> String {
+        let mut s = String::from("step,loss\n");
+        for (i, l) in self.losses.iter().enumerate() {
+            s.push_str(&format!("{},{}\n", i + 1, l));
+        }
+        s
+    }
+}
+
+/// Drive `steps` training steps, fetching a fresh batch each step from
+/// `next_batch`. Warmup steps run but are excluded from timing.
+pub fn run<F>(ex: &mut Executor, steps: usize, warmup: usize, mut next_batch: F) -> RunReport
+where
+    F: FnMut(usize) -> Vec<Tensor>,
+{
+    let mut report = RunReport::default();
+    for i in 0..warmup + steps {
+        let batch = next_batch(i);
+        let stats = ex.train_step(&batch);
+        if i >= warmup {
+            report.add(&stats);
+        }
+    }
+    report
+}
+
+/// Render a Fig.-3-style breakdown row.
+pub fn breakdown_row(label: &str, r: &RunReport) -> String {
+    let (f, b, o) = r.breakdown_ms();
+    format!(
+        "{label:<18} fwd {f:7.2} ms  bwd {b:7.2} ms  opt {o:7.2} ms  total {t:7.2} ms",
+        t = r.iter_ms()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::image_batch;
+    use crate::exec::ExecConfig;
+    use crate::graph::ScheduleKind;
+    use crate::models::mlp;
+    use crate::optim::{Hyper, SgdMomentum};
+    use crate::util::XorShiftRng;
+
+    #[test]
+    fn run_collects_report() {
+        let mut ex = Executor::new(
+            mlp(1),
+            Box::new(SgdMomentum),
+            Hyper { lr: 0.05, ..Hyper::default() },
+            ExecConfig { schedule: ScheduleKind::Baseline, ..Default::default() },
+        )
+        .unwrap();
+        let mut rng = XorShiftRng::new(2);
+        let r = run(&mut ex, 5, 2, |_| image_batch(4, 3, 16, 16, 10, &mut rng));
+        assert_eq!(r.steps, 5);
+        assert_eq!(r.losses.len(), 5);
+        assert!(r.iter_ms() > 0.0);
+        assert!(r.throughput(4) > 0.0);
+        let (f, b, o) = r.breakdown_ms();
+        assert!(f > 0.0 && b > 0.0 && o > 0.0);
+        assert!(r.loss_csv().lines().count() == 6);
+        assert!(breakdown_row("x", &r).contains("total"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Small self-contained utilities: PRNG, JSON parsing, timing, and a
+//! lightweight property-testing harness. No external dependencies — the
+//! build environment is offline, so we carry our own.
+
+pub mod json;
+pub mod prng;
+pub mod proptest;
+pub mod timer;
+
+pub use prng::XorShiftRng;
+pub use timer::Stopwatch;

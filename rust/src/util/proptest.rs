@@ -1,0 +1,98 @@
+//! A miniature property-testing harness (the offline crate set has no
+//! `proptest`). A property is a closure over a deterministic RNG; the
+//! harness runs it for many cases and, on failure, reports the seed so the
+//! exact case can be replayed.
+//!
+//! ```ignore
+//! check(100, "matmul assoc shapes", |rng| {
+//!     let n = 1 + rng.below(8);
+//!     ...
+//!     Ok(())
+//! });
+//! ```
+
+use super::prng::XorShiftRng;
+
+/// Outcome of a single property case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `cases` randomized cases of `prop`. Panics with the failing seed and
+/// message on the first failure. Base seed is fixed (deterministic CI) but
+/// can be overridden with the OPTFUSE_PROP_SEED env var for replay.
+pub fn check<F>(cases: u64, name: &str, mut prop: F)
+where
+    F: FnMut(&mut XorShiftRng) -> CaseResult,
+{
+    let base = std::env::var("OPTFUSE_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0xC0FFEE);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = XorShiftRng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} (replay with \
+                 OPTFUSE_PROP_SEED={base} and case index {case}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper producing a CaseResult-friendly error.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn close_slices(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> CaseResult {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol || x.is_nan() != y.is_nan() {
+            return Err(format!("elem {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check(25, "trivial", |_rng| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        check(10, "fails", |rng| {
+            if rng.below(3) == 0 {
+                Err("boom".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn close_slices_tolerances() {
+        assert!(close_slices(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-6, 1e-6).is_ok());
+        assert!(close_slices(&[1.0], &[1.1], 1e-6, 1e-6).is_err());
+        assert!(close_slices(&[1.0], &[1.0, 2.0], 1.0, 1.0).is_err());
+    }
+}

@@ -1,0 +1,114 @@
+//! Timing helpers for the training loop and bench harness.
+
+use std::time::{Duration, Instant};
+
+/// A restartable stopwatch accumulating named phases — used for the paper's
+/// per-stage breakdown (forward / backward / optimizer, Fig. 3).
+#[derive(Debug, Default, Clone)]
+pub struct Stopwatch {
+    phases: Vec<(String, Duration)>,
+    started: Option<(String, Instant)>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Begin (or switch to) a phase. Closes any open phase first.
+    pub fn phase(&mut self, name: &str) {
+        self.stop();
+        self.started = Some((name.to_string(), Instant::now()));
+    }
+
+    /// Close the currently open phase, if any.
+    pub fn stop(&mut self) {
+        if let Some((name, t0)) = self.started.take() {
+            let d = t0.elapsed();
+            if let Some(p) = self.phases.iter_mut().find(|(n, _)| *n == name) {
+                p.1 += d;
+            } else {
+                self.phases.push((name, d));
+            }
+        }
+    }
+
+    /// Accumulated duration for a phase (zero if unknown).
+    pub fn get(&self, name: &str) -> Duration {
+        self.phases
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, d)| *d)
+            .unwrap_or_default()
+    }
+
+    /// Sum over all phases.
+    pub fn total(&self) -> Duration {
+        self.phases.iter().map(|(_, d)| *d).sum()
+    }
+
+    /// (name, duration) pairs in insertion order.
+    pub fn phases(&self) -> &[(String, Duration)] {
+        &self.phases
+    }
+
+    pub fn clear(&mut self) {
+        self.phases.clear();
+        self.started = None;
+    }
+}
+
+/// Run `f` `n` times, returning per-iteration mean wall time of the middle
+/// samples (drops warmup and tail outliers; used by the bench harness).
+pub fn bench_mean<F: FnMut()>(n: usize, warmup: usize, mut f: F) -> Duration {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<Duration> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort_unstable();
+    // trimmed mean: middle 80%
+    let lo = n / 10;
+    let hi = n - n / 10;
+    let kept = &samples[lo..hi.max(lo + 1)];
+    kept.iter().sum::<Duration>() / kept.len() as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_accumulate() {
+        let mut sw = Stopwatch::new();
+        sw.phase("a");
+        std::thread::sleep(Duration::from_millis(2));
+        sw.phase("b");
+        std::thread::sleep(Duration::from_millis(2));
+        sw.phase("a");
+        std::thread::sleep(Duration::from_millis(2));
+        sw.stop();
+        assert!(sw.get("a") >= Duration::from_millis(3));
+        assert!(sw.get("b") >= Duration::from_millis(1));
+        assert!(sw.total() >= Duration::from_millis(5));
+        assert_eq!(sw.phases().len(), 2);
+    }
+
+    #[test]
+    fn bench_mean_runs() {
+        let mut count = 0;
+        let d = bench_mean(10, 2, || count += 1);
+        assert_eq!(count, 12);
+        assert!(d < Duration::from_millis(50));
+    }
+
+    #[test]
+    fn unknown_phase_is_zero() {
+        let sw = Stopwatch::new();
+        assert_eq!(sw.get("nope"), Duration::ZERO);
+    }
+}

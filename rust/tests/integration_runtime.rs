@@ -1,0 +1,146 @@
+//! Cross-layer integration: the rust-native engine (L3) and the AOT
+//! JAX+Pallas artifacts (L2/L1 via PJRT) must compute the same training —
+//! two independent implementations of the same math meeting at a
+//! numerical contract. Skipped gracefully when `make artifacts` hasn't
+//! run.
+
+use optfuse::exec::{ExecConfig, Executor};
+use optfuse::graph::{Graph, ScheduleKind, Src};
+use optfuse::ops::activation::Relu;
+use optfuse::ops::dense::Linear;
+use optfuse::ops::loss::MseLoss;
+use optfuse::optim::{Hyper, Sgd};
+use optfuse::runtime::{default_artifacts_dir, Runtime};
+use optfuse::tensor::Tensor;
+use optfuse::util::XorShiftRng;
+
+fn runtime() -> Option<Runtime> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::load(dir).expect("runtime"))
+}
+
+/// The rust twin of python/compile/model.py::mlp_train_step:
+/// y_hat = relu(x@w1)@w2, MSE loss, SGD lr=0.05 wd=0.
+fn native_mlp(w1: Tensor, w2: Tensor) -> Graph {
+    let mut g = Graph::new("mlp_twin", 2);
+    let p1 = g.param_init("w1", w1);
+    let p2 = g.param_init("w2", w2);
+    let l1 = g.push("fc1", Box::new(Linear::new(false)), vec![Src::External(0)], vec![p1]);
+    let r = g.push("relu", Box::new(Relu), vec![Src::Node(l1)], vec![]);
+    let l2 = g.push("fc2", Box::new(Linear::new(false)), vec![Src::Node(r)], vec![p2]);
+    let loss = g.push("mse", Box::new(MseLoss), vec![Src::Node(l2), Src::External(1)], vec![]);
+    g.set_loss(loss);
+    g
+}
+
+/// DESIGN.md §6.6: native engine == compiled artifact, step by step,
+/// under every schedule.
+#[test]
+fn native_engine_matches_compiled_train_step() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = XorShiftRng::new(2024);
+    let x = Tensor::randn(&[8, 64], 1.0, &mut rng);
+    let y = Tensor::randn(&[8, 10], 1.0, &mut rng);
+    let w1_0 = Tensor::randn(&[64, 32], 0.2, &mut rng);
+    let w2_0 = Tensor::randn(&[32, 10], 0.2, &mut rng);
+
+    for kind in ScheduleKind::ALL {
+        // --- native run (rust L3 engine) ---
+        let mut ex = Executor::new(
+            native_mlp(w1_0.clone(), w2_0.clone()),
+            Box::new(Sgd),
+            Hyper { lr: 0.05, weight_decay: 0.0, ..Hyper::default() },
+            ExecConfig { schedule: kind, threads: 2, race_guard: true, ..Default::default() },
+        )
+        .unwrap();
+        let mut native_losses = Vec::new();
+        for _ in 0..6 {
+            native_losses.push(ex.train_step(&[x.clone(), y.clone()]).loss);
+        }
+        ex.flush_pending();
+        let native_params = ex.graph.store.snapshot();
+
+        // --- compiled run (PJRT executing the jax+pallas module) ---
+        let mut w1 = w1_0.clone();
+        let mut w2 = w2_0.clone();
+        let mut compiled_losses = Vec::new();
+        for _ in 0..6 {
+            let out = rt
+                .execute("mlp_train_step_8x64x32x10", &[x.clone(), y.clone(), w1, w2])
+                .expect("compiled step");
+            compiled_losses.push(out[0].data()[0]);
+            w1 = out[1].clone();
+            w2 = out[2].clone();
+        }
+
+        for (i, (a, b)) in native_losses.iter().zip(compiled_losses.iter()).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-4 * (1.0 + a.abs()),
+                "{kind:?} step {i}: native {a} vs compiled {b}"
+            );
+        }
+        assert!(native_params[0].max_abs_diff(&w1) < 2e-4, "{kind:?}: w1 drift");
+        assert!(native_params[1].max_abs_diff(&w2) < 2e-4, "{kind:?}: w2 drift");
+    }
+}
+
+/// The fused forward-fusion kernel (Pallas) == engine FF semantics:
+/// update w with pending grads, then matmul with the fresh weight.
+#[test]
+fn fwd_fusion_artifact_matches_engine_semantics() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = XorShiftRng::new(77);
+    let x = Tensor::randn(&[32, 64], 1.0, &mut rng);
+    let w = Tensor::randn(&[64, 128], 0.3, &mut rng);
+    let grad = Tensor::randn(&[64, 128], 0.3, &mut rng);
+    let m = Tensor::randn(&[64, 128], 0.1, &mut rng);
+    let out = rt
+        .execute(
+            "fwd_update_matmul_32x64x128",
+            &[x.clone(), w.clone(), grad.clone(), m.clone()],
+        )
+        .expect("execute");
+    // reference: sgdm update (lr=1e-2, mu=0.9, wd=0 per aot defaults) then matmul
+    let mut mm = m.clone();
+    let mut w2 = w.clone();
+    for ((wv, gv), mv) in w2
+        .data_mut()
+        .iter_mut()
+        .zip(grad.data().iter())
+        .zip(mm.data_mut().iter_mut())
+    {
+        *mv = 0.9 * *mv + *gv;
+        *wv -= 1e-2 * *mv;
+    }
+    let mut y = vec![0.0f32; 32 * 128];
+    optfuse::ops::linalg::matmul(x.data(), w2.data(), &mut y, 32, 64, 128);
+    let y = Tensor::from_vec(&[32, 128], y);
+    assert!(out[0].max_abs_diff(&y) < 1e-3, "y from updated weight");
+    assert!(out[1].max_abs_diff(&w2) < 1e-5, "w'");
+    assert_eq!(out[2].linf(), 0.0, "grad reset");
+    assert!(out[3].max_abs_diff(&mm) < 1e-5, "m'");
+}
+
+/// ffn_block artifact sanity: residual path and shape contract.
+#[test]
+fn ffn_block_artifact_runs() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = XorShiftRng::new(5);
+    let x = Tensor::randn(&[64, 128], 1.0, &mut rng);
+    let inputs = vec![
+        x.clone(),
+        Tensor::full(&[128], 1.0),
+        Tensor::zeros(&[128]),
+        Tensor::zeros(&[128, 512]),
+        Tensor::zeros(&[512]),
+        Tensor::zeros(&[512, 128]),
+        Tensor::zeros(&[128]),
+    ];
+    let out = rt.execute("ffn_block_64x128", &inputs).expect("execute");
+    // zero weights -> pure residual: out == x
+    assert!(out[0].max_abs_diff(&x) < 1e-5);
+}

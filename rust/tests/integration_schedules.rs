@@ -1,0 +1,178 @@
+//! Integration + property tests for the core invariant of the paper:
+//! **the three schedules compute identical training** (DESIGN.md §6.1)
+//! — checked over randomly generated graphs, optimizers, weight tying,
+//! and thread counts.
+
+use optfuse::exec::{ExecConfig, Executor};
+use optfuse::graph::{Graph, ParamId, ScheduleKind, Src};
+use optfuse::ops::activation::{Gelu, Relu, Sigmoid};
+use optfuse::ops::dense::Linear;
+use optfuse::ops::loss::MseLoss;
+use optfuse::ops::shape::Add;
+use optfuse::optim::{self, Hyper};
+use optfuse::tensor::Tensor;
+use optfuse::util::{proptest::check, XorShiftRng};
+
+/// Generate a random feed-forward DAG: a chain of Linear layers with
+/// random activations, random residual skips, and occasional weight
+/// tying between same-shape layers.
+fn random_graph(rng: &mut XorShiftRng) -> (Graph, usize) {
+    let depth = 2 + rng.below(5);
+    let dim = 4 + rng.below(8);
+    let mut g = Graph::new("random", 2);
+    let mut cur = Src::External(0);
+    let mut square_params: Vec<ParamId> = Vec::new();
+    let mut skip_candidates: Vec<(Src, usize)> = Vec::new(); // (node, dim marker)
+    for l in 0..depth {
+        // maybe tie to an earlier same-shape weight
+        let tie = !square_params.is_empty() && rng.below(4) == 0;
+        let w = if tie {
+            square_params[rng.below(square_params.len())]
+        } else {
+            let w = g.param(&format!("w{l}"), &[dim, dim], rng);
+            square_params.push(w);
+            w
+        };
+        let lin = g.push(&format!("fc{l}"), Box::new(Linear::new(false)), vec![cur], vec![w]);
+        cur = Src::Node(lin);
+        // random activation
+        match rng.below(4) {
+            0 => {
+                let n = g.push(&format!("relu{l}"), Box::new(Relu), vec![cur], vec![]);
+                cur = Src::Node(n);
+            }
+            1 => {
+                let n = g.push(&format!("gelu{l}"), Box::new(Gelu), vec![cur], vec![]);
+                cur = Src::Node(n);
+            }
+            2 => {
+                let n = g.push(&format!("sig{l}"), Box::new(Sigmoid), vec![cur], vec![]);
+                cur = Src::Node(n);
+            }
+            _ => {}
+        }
+        // random residual skip from an earlier same-dim node
+        if let Some(&(src, _)) = skip_candidates.get(rng.below(skip_candidates.len().max(1))) {
+            if rng.below(3) == 0 {
+                let n = g.push(&format!("add{l}"), Box::new(Add), vec![cur, src], vec![]);
+                cur = Src::Node(n);
+            }
+        }
+        skip_candidates.push((cur, dim));
+    }
+    let loss = g.push("mse", Box::new(MseLoss), vec![cur, Src::External(1)], vec![]);
+    g.set_loss(loss);
+    (g, dim)
+}
+
+fn run_schedule(
+    seed: u64,
+    opt_name: &str,
+    kind: ScheduleKind,
+    threads: usize,
+    steps: usize,
+) -> (Vec<f32>, Vec<Tensor>) {
+    let mut grng = XorShiftRng::new(seed);
+    let (g, dim) = random_graph(&mut grng);
+    let mut ex = Executor::new(
+        g,
+        optim::by_name(opt_name).unwrap(),
+        Hyper { lr: 0.01, ..Hyper::default() },
+        ExecConfig { schedule: kind, threads, race_guard: true, ..Default::default() },
+    )
+    .unwrap();
+    let mut drng = XorShiftRng::new(seed ^ 0xDA7A);
+    let x = Tensor::randn(&[3, dim], 1.0, &mut drng);
+    let y = Tensor::randn(&[3, dim], 1.0, &mut drng);
+    let mut losses = Vec::new();
+    for _ in 0..steps {
+        losses.push(ex.train_step(&[x.clone(), y.clone()]).loss);
+    }
+    ex.flush_pending();
+    (losses, ex.graph.store.snapshot())
+}
+
+#[test]
+fn property_schedule_equivalence_random_graphs() {
+    check(20, "3-schedule equivalence on random graphs", |rng| {
+        let seed = rng.next_u64();
+        let opt = optim::LOCAL_OPTIMIZERS[rng.below(optim::LOCAL_OPTIMIZERS.len())];
+        let steps = 1 + rng.below(4);
+        let threads = rng.below(4);
+        let (lb, pb) = run_schedule(seed, opt, ScheduleKind::Baseline, 0, steps);
+        let (lf, pf) = run_schedule(seed, opt, ScheduleKind::ForwardFusion, 0, steps);
+        let (lbf, pbf) = run_schedule(seed, opt, ScheduleKind::BackwardFusion, threads, steps);
+        if lb != lf {
+            return Err(format!("FF loss mismatch ({opt}): {lb:?} vs {lf:?}"));
+        }
+        if lb != lbf {
+            return Err(format!("BF loss mismatch ({opt}, t={threads}): {lb:?} vs {lbf:?}"));
+        }
+        for (i, ((a, b), c)) in pb.iter().zip(pf.iter()).zip(pbf.iter()).enumerate() {
+            if a.max_abs_diff(b) > 1e-6 {
+                return Err(format!("FF param {i} diverged ({opt})"));
+            }
+            if a.max_abs_diff(c) > 1e-6 {
+                return Err(format!("BF param {i} diverged ({opt})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_losses_finite_and_graphs_valid() {
+    check(30, "random graphs execute and stay finite", |rng| {
+        let seed = rng.next_u64();
+        let (losses, params) = run_schedule(seed, "adam", ScheduleKind::BackwardFusion, 2, 3);
+        if !losses.iter().all(|l| l.is_finite()) {
+            return Err(format!("non-finite loss: {losses:?}"));
+        }
+        if !params.iter().all(|p| p.all_finite()) {
+            return Err("non-finite parameter".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn failure_injection_wrong_external_count_panics() {
+    let result = std::panic::catch_unwind(|| {
+        let mut rng = XorShiftRng::new(1);
+        let (g, _) = random_graph(&mut rng);
+        let mut ex = Executor::new(
+            g,
+            optim::by_name("sgd").unwrap(),
+            Hyper::default(),
+            ExecConfig::default(),
+        )
+        .unwrap();
+        // missing the label tensor
+        ex.train_step(&[Tensor::zeros(&[3, 8])]);
+    });
+    assert!(result.is_err(), "must reject wrong external count");
+}
+
+#[test]
+fn long_run_equivalence_with_contention() {
+    // 20 steps, 4 threads, adamw — stresses the pool under repeated reuse
+    let (lb, pb) = run_schedule(0xFEED, "adamw", ScheduleKind::Baseline, 0, 20);
+    let (lbf, pbf) = run_schedule(0xFEED, "adamw", ScheduleKind::BackwardFusion, 4, 20);
+    assert_eq!(lb, lbf);
+    for (a, b) in pb.iter().zip(pbf.iter()) {
+        assert!(a.max_abs_diff(b) < 1e-6);
+    }
+    assert!(lb.last().unwrap() < lb.first().unwrap(), "should learn");
+}
+
+#[test]
+fn ff_eval_between_steps_matches_baseline_flushed() {
+    // paper §3: FF's pending update may land in an *evaluation* forward;
+    // our engine keeps eval pure, so an explicit flush must reconcile.
+    let seed = 0xABCD;
+    let (_, pb) = run_schedule(seed, "sgd_momentum", ScheduleKind::Baseline, 0, 5);
+    let (_, pf) = run_schedule(seed, "sgd_momentum", ScheduleKind::ForwardFusion, 0, 5);
+    for (a, b) in pb.iter().zip(pf.iter()) {
+        assert!(a.max_abs_diff(b) < 1e-6);
+    }
+}
