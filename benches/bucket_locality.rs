@@ -1,0 +1,141 @@
+//! Storage-layout axis: per-parameter (scattered) vs bucketed flat
+//! update time, across the model zoo — the second fusion axis next to
+//! the paper's schedule axis. Bucketing fuses one optimizer dispatch,
+//! one lock round and one grad/state allocation walk per *bucket*
+//! instead of per *parameter*, which pays off most for models with many
+//! small parameters (MobileNetV2-style — the paper's Fig. 6 left end).
+//!
+//! Output: per model, the baseline-schedule optimizer-stage time and
+//! whole-iteration time for scattered storage and for three bucket
+//! caps, plus the update-dispatch counts. Losses are asserted
+//! bit-identical between layouts (the storage analogue of "the schedule
+//! never changes the math").
+
+#[path = "common.rs"]
+mod common;
+
+use optfuse::data::image_batch;
+use optfuse::exec::{ExecConfig, Executor};
+use optfuse::graph::{Graph, ScheduleKind};
+use optfuse::optim::{self, Hyper};
+use optfuse::train::{self, RunReport};
+use optfuse::util::XorShiftRng;
+
+struct Measured {
+    report: RunReport,
+    units: usize,
+    dispatched: u64,
+}
+
+fn measure(
+    build: fn(u64) -> Graph,
+    kind: ScheduleKind,
+    bucket_cap_bytes: Option<usize>,
+    batch: usize,
+    steps: usize,
+) -> Measured {
+    let mut ex = Executor::new(
+        build(42),
+        optim::by_name("adam").unwrap(),
+        Hyper { lr: 1e-3, ..Hyper::default() },
+        ExecConfig {
+            schedule: kind,
+            threads: 0,
+            race_guard: true,
+            bucket_cap_bytes,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let units = ex.graph.store.num_units();
+    let mut rng = XorShiftRng::new(9);
+    let report = train::run(&mut ex, steps, 1, |_| image_batch(batch, 3, 16, 16, 10, &mut rng));
+    Measured { report, units, dispatched: ex.counters.updates_dispatched }
+}
+
+fn main() {
+    common::header(
+        "bucket locality — per-param vs bucketed fused updates (schedule × storage)",
+        "flat buckets cut per-parameter dispatch/lock/allocation overhead (Bagua FusedOptimizer, \
+         IPEX optimizer fusion)",
+    );
+
+    let zoo: &[(&str, fn(u64) -> Graph)] = &[
+        ("mobilenet_v2_ish", optfuse::models::mobilenet_v2_ish),
+        ("densenet_ish", optfuse::models::densenet_ish),
+        ("resnet_ish", optfuse::models::resnet_ish),
+        ("mlp", optfuse::models::mlp),
+        ("deep_mlp", optfuse::models::deep_mlp),
+        ("wide_mlp", optfuse::models::wide_mlp),
+    ];
+    let caps: &[(&str, Option<usize>)] = &[
+        ("scattered", None),
+        ("64KiB", Some(64 << 10)),
+        ("1MiB", Some(1 << 20)),
+        ("one-bucket", Some(usize::MAX)),
+    ];
+    let (batch, steps) = (16, 5);
+
+    println!(
+        "\n  baseline schedule, adam, batch {batch}, {steps} timed steps; opt = standalone \
+         optimizer-stage ms/iter\n"
+    );
+    println!(
+        "  {:<18} {:<10} {:>7} {:>10} {:>10} {:>10}",
+        "model", "storage", "units", "opt ms", "iter ms", "disp/step"
+    );
+    for (name, build) in zoo {
+        let mut scattered_losses: Option<Vec<f32>> = None;
+        let mut scattered_opt_ms = 0.0;
+        for (cap_name, cap) in caps {
+            let m = measure(*build, ScheduleKind::Baseline, *cap, batch, steps);
+            let (_, _, opt_ms) = m.report.breakdown_ms();
+            match &scattered_losses {
+                None => {
+                    scattered_losses = Some(m.report.losses.clone());
+                    scattered_opt_ms = opt_ms;
+                }
+                Some(want) => assert_eq!(
+                    want, &m.report.losses,
+                    "{name}/{cap_name}: bucketing must not change training"
+                ),
+            }
+            // counters cover warmup + timed steps; baseline dispatches
+            // exactly `units` per step, so the division is exact
+            let disp_per_step = m.dispatched / (steps as u64 + 1);
+            println!(
+                "  {:<18} {:<10} {:>7} {:>10.3} {:>10.2} {:>10}   x{:.2} opt",
+                name,
+                cap_name,
+                m.units,
+                opt_ms,
+                m.report.iter_ms(),
+                disp_per_step,
+                scattered_opt_ms / opt_ms.max(1e-9),
+            );
+        }
+        println!();
+    }
+
+    // schedule × storage: the fused bucket update also rides inside
+    // backward-fusion (inline) — show one model across the grid
+    println!("  schedule × storage grid (mobilenet_v2_ish, opt-in-stage ms/iter):\n");
+    for kind in ScheduleKind::ALL {
+        for (cap_name, cap) in &[("scattered", None), ("1MiB", Some(1usize << 20))] {
+            let m = measure(optfuse::models::mobilenet_v2_ish, kind, *cap, batch, steps);
+            let (_, _, opt_ms) = m.report.breakdown_ms();
+            let fused_ms = (m.report.opt_in_forward + m.report.opt_in_backward).as_secs_f64()
+                * 1e3
+                / steps as f64;
+            println!(
+                "    {:<16} {:<10} opt-stage {:>8.3}  fused-in-fwd/bwd {:>8.3}  iter {:>8.2} ms",
+                kind.label(),
+                cap_name,
+                opt_ms,
+                fused_ms,
+                m.report.iter_ms()
+            );
+        }
+    }
+    println!("\nbucket locality bench complete ✓ (losses bit-identical across layouts)");
+}

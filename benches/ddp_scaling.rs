@@ -23,6 +23,7 @@ fn run(world: usize, schedule: ScheduleKind, steps: usize) -> optfuse::ddp::DdpR
             world,
             schedule,
             steps,
+            bucket_cap_bytes: None,
             local_batch_maker: Box::new(move |rank, step| {
                 let mut rng = XorShiftRng::new(((rank as u64) << 32) | step as u64);
                 image_batch(4, 3, 16, 16, 10, &mut rng)

@@ -16,6 +16,13 @@ use optfuse::tensor::Tensor;
 use optfuse::util::XorShiftRng;
 
 fn main() -> anyhow::Result<()> {
+    if !Runtime::available() {
+        println!(
+            "built without PJRT support — add the `xla` dependency to Cargo.toml and build \
+             with `--features pjrt` to run this demo"
+        );
+        return Ok(());
+    }
     let rt = Runtime::load(default_artifacts_dir())?;
     println!("PJRT platform: {} | artifacts: {:?}\n", rt.platform(), rt.artifact_names());
 

@@ -11,6 +11,12 @@
 //! ```
 //! Gradients are deliberately *not* saved: every schedule's checkpoint
 //! boundary is after updates, where grads are zero by the Fig. 2 contract.
+//!
+//! The format is also *storage-layout independent*: optimizer state is
+//! serialized per parameter (shaped like the parameter) via
+//! `ParamStore::export_state` / `import_state`, which view into the flat
+//! bucket arenas when the store is bucketed. A checkpoint written by a
+//! bucketed run restores into a scattered run and vice versa.
 
 use crate::exec::Executor;
 use crate::tensor::Tensor;
@@ -90,14 +96,15 @@ pub fn save(ex: &mut Executor, path: impl AsRef<Path>) -> Result<()> {
     write_u32(&mut w, VERSION)?;
     write_u64(&mut w, ex.step_count())?;
     write_u32(&mut w, ex.graph.store.len() as u32)?;
-    for p in &ex.graph.store.params {
+    for (pid, p) in ex.graph.store.params.iter().enumerate() {
+        let state = ex.graph.store.export_state(pid);
         let pd = p.data.read().unwrap();
         let name = pd.name.as_bytes();
         write_u32(&mut w, name.len() as u32)?;
         w.write_all(name)?;
         write_tensor(&mut w, &pd.value)?;
-        write_u32(&mut w, pd.state.len() as u32)?;
-        for s in &pd.state {
+        write_u32(&mut w, state.len() as u32)?;
+        for s in &state {
             write_tensor(&mut w, s)?;
         }
     }
@@ -128,24 +135,39 @@ pub fn load(ex: &mut Executor, path: impl AsRef<Path>) -> Result<u64> {
             ex.graph.store.len()
         );
     }
-    for p in &ex.graph.store.params {
-        let mut pd = p.data.write().unwrap();
-        let name_len = read_u32(&mut r)? as usize;
-        let mut name = vec![0u8; name_len];
-        r.read_exact(&mut name)?;
-        let name = String::from_utf8(name)?;
-        if name != pd.name {
-            bail!("param order mismatch: checkpoint '{name}' vs model '{}'", pd.name);
+    for pid in 0..ex.graph.store.len() {
+        let (n_state, want_len) = {
+            let p = ex.graph.store.get(pid);
+            let mut pd = p.data.write().unwrap();
+            let name_len = read_u32(&mut r)? as usize;
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name)?;
+            let name = String::from_utf8(name)?;
+            if name != pd.name {
+                bail!("param order mismatch: checkpoint '{name}' vs model '{}'", pd.name);
+            }
+            let value = read_tensor(&mut r)?;
+            if value.shape() != pd.value.shape() {
+                bail!("shape mismatch for '{name}'");
+            }
+            pd.value = value;
+            (read_u32(&mut r)? as usize, pd.value.len())
+        };
+        let state: Vec<Tensor> =
+            (0..n_state).map(|_| read_tensor(&mut r)).collect::<Result<_>>()?;
+        for (slot, s) in state.iter().enumerate() {
+            if s.len() != want_len {
+                bail!("state slot {slot} size mismatch for param {pid}");
+            }
         }
-        let value = read_tensor(&mut r)?;
-        if value.shape() != pd.value.shape() {
-            bail!("shape mismatch for '{name}'");
-        }
-        pd.value = value;
-        pd.grad.zero_();
-        let n_state = read_u32(&mut r)? as usize;
-        pd.state = (0..n_state).map(|_| read_tensor(&mut r)).collect::<Result<_>>()?;
+        ex.graph
+            .store
+            .import_state(pid, state)
+            .map_err(|e| anyhow::anyhow!("restoring state: {e}"))?;
     }
+    // checkpoints are taken at flushed boundaries, so grads restore to
+    // zero in whichever layout holds them
+    ex.graph.store.zero_grads();
     ex.set_step(step);
     Ok(step)
 }

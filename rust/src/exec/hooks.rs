@@ -23,9 +23,13 @@ use std::sync::Arc;
 
 /// Context passed to hooks: mutable access to parameters + the optimizer.
 pub struct HookCtx<'a> {
+    /// The model graph (parameters reachable through its store).
     pub graph: &'a Graph,
+    /// The update rule.
     pub opt: &'a dyn Optimizer,
+    /// Hyper-parameters effective at `step`.
     pub hyper: &'a Hyper,
+    /// 1-based index of the step whose gradients are being consumed.
     pub step: u64,
 }
 
@@ -67,6 +71,7 @@ pub struct ForwardFusionHooks {
 }
 
 impl ForwardFusionHooks {
+    /// Build FF hooks for a model with `n_params` parameters.
     pub fn new(n_params: usize) -> Self {
         Self { updated: vec![false; n_params], has_pending: false }
     }
@@ -106,6 +111,7 @@ pub struct BackwardFusionHooks {
 }
 
 impl BackwardFusionHooks {
+    /// Build BF hooks for a model with `n_params` parameters.
     pub fn new(n_params: usize) -> Self {
         Self { count: vec![0; n_params] }
     }
@@ -132,15 +138,27 @@ impl Hooks for BackwardFusionHooks {
 /// (Deliberately simple: single-threaded; the production scheduler with
 /// the worker pool lives in [`super::Executor`].)
 pub struct HookedTrainer<H: Hooks> {
+    /// The model being trained.
     pub graph: Graph,
+    /// The update rule.
     pub opt: Arc<dyn Optimizer>,
+    /// Hyper-parameters passed to every hook context.
     pub hyper: Hyper,
+    /// The user's hook implementation.
     pub hooks: H,
     step: u64,
 }
 
 impl<H: Hooks> HookedTrainer<H> {
+    /// Build a hook-driven trainer. Scattered storage only: the hook
+    /// API hands out per-parameter update callbacks, which have no
+    /// meaning once grads/state live in flat buckets — use the built-in
+    /// scheduler (`ExecConfig::bucket_cap_bytes`) for bucketed training.
     pub fn new(graph: Graph, opt: Box<dyn Optimizer>, hyper: Hyper, hooks: H) -> Self {
+        assert!(
+            !graph.store.is_bucketed(),
+            "HookedTrainer requires scattered parameter storage"
+        );
         Self { graph, opt: Arc::from(opt), hyper, hooks, step: 0 }
     }
 

@@ -16,21 +16,31 @@
 //! the naive buggy ordering — updating as soon as the parameter gradient
 //! is computed but *before* the node finishes using the old value — which
 //! corrupts ∂L/∂x exactly as the paper warns.
+//!
+//! **Storage axis:** with `bucket_cap_bytes` set, the store is bucketed
+//! ([`crate::optim::bucket`]) and the *schedulable unit* becomes a whole
+//! bucket instead of a parameter: forward-fusion updates a bucket before
+//! the first use of any member, backward-fusion refcounts member uses and
+//! fires the fused bucket update once every member's gradient is complete
+//! (still after each producing node's backward — the §B.2 guard extends
+//! to buckets unchanged). Schedule × storage are independent axes and any
+//! combination trains bit-identically.
 
 pub mod hooks;
 pub mod pool;
 
 use crate::graph::{Graph, ParamId, ScheduleKind, Src};
 use crate::ops::OpCtx;
-use crate::optim::{Hyper, Optimizer};
+use crate::optim::{bucket, Hyper, Optimizer};
 use crate::tensor::Tensor;
-use pool::{Job, UpdatePool};
+use pool::{Job, JobTarget, UpdatePool};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Engine configuration.
 #[derive(Clone)]
 pub struct ExecConfig {
+    /// Which of the paper's three schedules runs the updates.
     pub schedule: ScheduleKind,
     /// Worker threads for backward-fusion updates. 0 = update inline on
     /// the main thread (locality only, no parallelism).
@@ -40,6 +50,10 @@ pub struct ExecConfig {
     /// Gradient accumulation: updates fire only every `accum_steps`
     /// micro-steps (grads keep accumulating in between). 1 = every step.
     pub accum_steps: u64,
+    /// `Some(cap)` switches the store to bucketed flat storage with at
+    /// most `cap` bytes of gradient payload per bucket; `None` keeps the
+    /// scattered per-parameter layout.
+    pub bucket_cap_bytes: Option<usize>,
 }
 
 impl Default for ExecConfig {
@@ -49,6 +63,7 @@ impl Default for ExecConfig {
             threads: 0,
             race_guard: true,
             accum_steps: 1,
+            bucket_cap_bytes: None,
         }
     }
 }
@@ -56,6 +71,7 @@ impl Default for ExecConfig {
 /// Per-step measurements (the paper's Fig. 3 breakdown).
 #[derive(Debug, Clone, Default)]
 pub struct StepStats {
+    /// Scalar loss of this step's forward pass.
     pub loss: f32,
     /// Wallclock of the forward stage (includes fused updates under FF).
     pub forward: Duration,
@@ -72,6 +88,7 @@ pub struct StepStats {
 }
 
 impl StepStats {
+    /// Total wallclock of the step across all three stages.
     pub fn total(&self) -> Duration {
         self.forward + self.backward + self.optimizer
     }
@@ -81,22 +98,32 @@ impl StepStats {
 /// makes small batches slower, paper §C.2).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ControlCounters {
+    /// FF `updated`-flag tests (Alg. 2).
     pub flag_checks: u64,
+    /// BF refcount increments + decrements (Alg. 3).
     pub refcount_ops: u64,
+    /// Optimizer updates issued (inline or to the worker pool); one
+    /// fused bucket update counts once.
     pub updates_dispatched: u64,
 }
 
 /// The training executor. Owns the graph, the optimizer, and schedule
 /// state that persists across iterations (FF pending updates).
 pub struct Executor {
+    /// The model being trained (graph + parameter store).
     pub graph: Graph,
+    /// The update rule.
     pub opt: Arc<dyn Optimizer>,
+    /// Base hyper-parameters (`lr` may be overridden by a schedule).
     pub hyper: Hyper,
+    /// Engine configuration this executor was built with.
     pub cfg: ExecConfig,
     step: u64,
-    /// FF: per-param `updated` flag (Alg. 2).
+    /// FF: per-unit `updated` flag (Alg. 2); a unit is a bucket when
+    /// bucketed, a parameter otherwise.
     updated: Vec<bool>,
-    /// BF: per-param forward-use refcount (Alg. 3).
+    /// BF: per-unit forward-use refcount (Alg. 3); counts member uses
+    /// when the unit is a bucket.
     count: Vec<u32>,
     /// FF: whether grads from a previous backward are pending application.
     has_pending: bool,
@@ -104,6 +131,7 @@ pub struct Executor {
     /// by the *next* FF updates or the baseline optimizer stage.
     global_scale: f32,
     pool: Option<UpdatePool>,
+    /// Scheduler bookkeeping totals (ablation instrumentation).
     pub counters: ControlCounters,
     /// Per-node forward activations of the last step (kept for tests).
     last_loss: f32,
@@ -113,6 +141,9 @@ pub struct Executor {
 }
 
 impl Executor {
+    /// Build an executor over `graph`, bucketizing the store when
+    /// `cfg.bucket_cap_bytes` is set. Fails if the schedule cannot run
+    /// the optimizer (paper Table 1).
     pub fn new(
         graph: Graph,
         opt: Box<dyn Optimizer>,
@@ -128,7 +159,11 @@ impl Executor {
                 opt.name()
             );
         }
-        let n_params = graph.store.len();
+        let mut graph = graph;
+        if let Some(cap) = cfg.bucket_cap_bytes {
+            graph.store.bucketize(cap);
+        }
+        let n_units = graph.store.num_units();
         let pool = if cfg.schedule == ScheduleKind::BackwardFusion && cfg.threads > 0 {
             Some(UpdatePool::new(cfg.threads))
         } else {
@@ -140,8 +175,8 @@ impl Executor {
             hyper,
             cfg,
             step: 0,
-            updated: vec![false; n_params],
-            count: vec![0; n_params],
+            updated: vec![false; n_units],
+            count: vec![0; n_units],
             has_pending: false,
             global_scale: 1.0,
             pool,
@@ -151,10 +186,12 @@ impl Executor {
         })
     }
 
+    /// Number of completed update steps.
     pub fn step_count(&self) -> u64 {
         self.step
     }
 
+    /// Loss of the most recent forward pass (NaN before the first).
     pub fn last_loss(&self) -> f32 {
         self.last_loss
     }
@@ -187,12 +224,28 @@ impl Executor {
         step % self.cfg.accum_steps.max(1) == 0
     }
 
-    fn update_param_inline(&mut self, pid: ParamId, step: u64) -> Duration {
+    /// Run the optimizer on one schedulable unit — a bucket (fused
+    /// multi-parameter pass) when bucketed, a single parameter
+    /// otherwise — on the calling thread.
+    fn update_unit_inline(&mut self, unit: usize, step: u64) -> Duration {
         let t0 = Instant::now();
         let hp = self.hyper_at(step);
-        let p = self.graph.store.get(pid);
-        let mut pd = p.data.write().unwrap();
-        self.opt.update(step, &mut pd, &hp, self.global_scale);
+        match &self.graph.store.buckets {
+            Some(bs) => {
+                bucket::apply_bucket_update(
+                    &bs.buckets[unit],
+                    self.opt.as_ref(),
+                    step,
+                    &hp,
+                    self.global_scale,
+                );
+            }
+            None => {
+                let p = self.graph.store.get(unit);
+                let mut pd = p.data.write().unwrap();
+                self.opt.update(step, &mut pd, &hp, self.global_scale);
+            }
+        }
         self.counters.updates_dispatched += 1;
         t0.elapsed()
     }
@@ -216,21 +269,26 @@ impl Executor {
         // step-dependent rules (Adam bias correction) match baseline.
         let pending_step = self.step;
         for i in 0..n {
-            // Alg. 2: lazy update before first use this iteration.
+            // Alg. 2: lazy update before first use this iteration. With
+            // buckets the whole bucket updates before its first member's
+            // first use — still before every member's first read, so the
+            // math is unchanged.
             if ff && train && self.has_pending {
                 let pids: Vec<ParamId> = self.graph.nodes[i].params.clone();
                 for pid in pids {
                     self.counters.flag_checks += 1;
-                    if !self.updated[pid] {
-                        opt_in_fwd += self.update_param_inline(pid, pending_step);
-                        self.updated[pid] = true;
+                    let unit = self.graph.store.unit_of(pid);
+                    if !self.updated[unit] {
+                        opt_in_fwd += self.update_unit_inline(unit, pending_step);
+                        self.updated[unit] = true;
                     }
                 }
             }
-            // Alg. 3: count forward uses.
+            // Alg. 3: count forward uses (member uses count against the
+            // owning bucket when bucketed).
             if bf && train {
                 for pid in &self.graph.nodes[i].params {
-                    self.count[*pid] += 1;
+                    self.count[self.graph.store.unit_of(*pid)] += 1;
                     self.counters.refcount_ops += 1;
                 }
             }
@@ -266,14 +324,14 @@ impl Executor {
         let t0 = Instant::now();
         let (acts, ctxs, opt_in_fwd) = self.forward_pass(externals, true);
         if ff && self.has_pending {
-            // Any parameter not touched by this forward still must update
+            // Any unit not touched by this forward still must update
             // exactly once per iteration (Alg. 2 applies to the used ones;
-            // unused-but-gradful params are flushed here for equivalence).
+            // unused-but-gradful units are flushed here for equivalence).
             let step = self.step;
-            for pid in 0..self.graph.store.len() {
-                if !self.updated[pid] {
-                    stats.opt_in_forward += self.update_param_inline(pid, step);
-                    self.updated[pid] = true;
+            for unit in 0..self.graph.store.num_units() {
+                if !self.updated[unit] {
+                    stats.opt_in_forward += self.update_unit_inline(unit, step);
+                    self.updated[unit] = true;
                 }
             }
             self.has_pending = false;
@@ -302,12 +360,13 @@ impl Executor {
                 let pids: Vec<ParamId> = self.graph.nodes[i].params.clone();
                 for pid in pids {
                     self.counters.refcount_ops += 1;
-                    self.count[pid] -= 1;
-                    if self.count[pid] == 0 && self.is_update_step(this_step) {
+                    let unit = self.graph.store.unit_of(pid);
+                    self.count[unit] -= 1;
+                    if self.count[unit] == 0 && self.is_update_step(this_step) {
                         // NOTE: grad not yet accumulated for this node —
                         // the update consumes stale grads AND clobbers θ
                         // before ∂L/∂x is computed. Deliberately wrong.
-                        opt_in_bwd += self.update_param_inline(pid, this_step);
+                        opt_in_bwd += self.update_unit_inline(unit, this_step);
                     }
                 }
             }
@@ -340,23 +399,30 @@ impl Executor {
                     }
                 }
             }
-            // accumulate param grads
+            // accumulate param grads (into the flat bucket arena when
+            // bucketed — same axpy, same order, bit-identical)
             let pids: Vec<ParamId> = self.graph.nodes[i].params.clone();
             for (k, pid) in pids.iter().enumerate() {
-                let p = self.graph.store.get(*pid);
-                p.data.write().unwrap().grad.axpy(1.0, &og.params[k]);
+                self.graph.store.accum_grad(*pid, &og.params[k]);
             }
             // Alg. 3 (correct ordering): refcount after this node's
-            // backward has consumed the old value.
+            // backward has consumed the old value. A bucket fires only
+            // when the counts of *all* its members have drained, so the
+            // §B.2 guard extends to buckets unchanged.
             if bf && self.cfg.race_guard {
                 let boundary = self.is_update_step(this_step);
                 for pid in pids {
                     self.counters.refcount_ops += 1;
-                    self.count[pid] -= 1;
-                    if self.count[pid] == 0 && boundary {
+                    let unit = self.graph.store.unit_of(pid);
+                    self.count[unit] -= 1;
+                    if self.count[unit] == 0 && boundary {
                         if let Some(pool) = &self.pool {
+                            let target = match &self.graph.store.buckets {
+                                Some(bs) => JobTarget::Bucket(Arc::clone(&bs.buckets[unit])),
+                                None => JobTarget::Param(Arc::clone(self.graph.store.get(pid))),
+                            };
                             pool.submit(Job {
-                                param: Arc::clone(self.graph.store.get(pid)),
+                                target,
                                 opt: Arc::clone(&self.opt),
                                 hyper: self.hyper_at(this_step),
                                 step: this_step,
@@ -364,7 +430,7 @@ impl Executor {
                             });
                             self.counters.updates_dispatched += 1;
                         } else {
-                            opt_in_bwd += self.update_param_inline(pid, this_step);
+                            opt_in_bwd += self.update_unit_inline(unit, this_step);
                         }
                     }
                 }
@@ -383,7 +449,7 @@ impl Executor {
         // gradient set (valid for baseline and FF; BF was rejected above).
         if self.opt.needs_global() {
             let norm = self.graph.store.global_grad_norm();
-            let max_norm = 1.0; // matches GlobalNormClip::max_norm default
+            let max_norm = self.opt.global_max_norm();
             self.global_scale = if norm > max_norm { max_norm / norm } else { 1.0 };
         }
 
@@ -392,8 +458,8 @@ impl Executor {
             ScheduleKind::Baseline => {
                 if self.is_update_step(this_step) {
                     let t2 = Instant::now();
-                    for pid in 0..self.graph.store.len() {
-                        self.update_param_inline(pid, this_step);
+                    for unit in 0..self.graph.store.num_units() {
+                        self.update_unit_inline(unit, this_step);
                     }
                     stats.optimizer = t2.elapsed();
                 }
@@ -418,10 +484,10 @@ impl Executor {
         if self.cfg.schedule == ScheduleKind::ForwardFusion && self.has_pending {
             // grads belong to the already-counted step `self.step`
             let step = self.step;
-            for pid in 0..self.graph.store.len() {
-                if !self.updated[pid] {
-                    self.update_param_inline(pid, step);
-                    self.updated[pid] = true;
+            for unit in 0..self.graph.store.num_units() {
+                if !self.updated[unit] {
+                    self.update_unit_inline(unit, step);
+                    self.updated[unit] = true;
                 }
             }
             // Updates applied here correspond to the *next* step's lazy
@@ -475,8 +541,7 @@ impl Executor {
             }
             let pids: Vec<ParamId> = self.graph.nodes[i].params.clone();
             for (k, pid) in pids.iter().enumerate() {
-                let p = self.graph.store.get(*pid);
-                p.data.write().unwrap().grad.axpy(1.0, &og.params[k]);
+                self.graph.store.accum_grad(*pid, &og.params[k]);
             }
         }
         loss
@@ -484,21 +549,36 @@ impl Executor {
 
     /// Apply the optimizer to a single parameter at the *next* step index
     /// (DDP backward-fusion path: update fused with its all-reduce).
+    /// Scattered storage only — with buckets, use
+    /// [`Executor::apply_update_unit`] on the owning bucket.
     pub fn apply_update(&mut self, pid: ParamId) {
-        let step = self.step + 1;
-        self.update_param_inline(pid, step);
+        assert!(
+            !self.graph.store.is_bucketed(),
+            "apply_update is per-parameter; bucketed stores update whole buckets \
+             (apply_update_unit)"
+        );
+        self.apply_update_unit(pid);
     }
 
-    /// Apply the optimizer to every parameter and advance the step
-    /// counter (DDP baseline path after the all-reduce).
+    /// Apply the optimizer to one schedulable unit — a bucket when
+    /// bucketed, a parameter otherwise — at the *next* step index (DDP
+    /// backward-fusion path: update fused with the unit's all-reduce).
+    pub fn apply_update_unit(&mut self, unit: usize) {
+        let step = self.step + 1;
+        self.update_unit_inline(unit, step);
+    }
+
+    /// Apply the optimizer to every unit and advance the step counter
+    /// (DDP baseline path after the all-reduce).
     pub fn apply_all_updates(&mut self) {
         let step = self.step + 1;
         if self.opt.needs_global() {
             let norm = self.graph.store.global_grad_norm();
-            self.global_scale = if norm > 1.0 { 1.0 / norm } else { 1.0 };
+            let max_norm = self.opt.global_max_norm();
+            self.global_scale = if norm > max_norm { max_norm / norm } else { 1.0 };
         }
-        for pid in 0..self.graph.store.len() {
-            self.update_param_inline(pid, step);
+        for unit in 0..self.graph.store.num_units() {
+            self.update_unit_inline(unit, step);
         }
         self.step = step;
     }
@@ -835,6 +915,57 @@ mod tests {
         assert_eq!(lb[0], lb[1]);
         assert_eq!(lb[1], lb[2]);
         assert_ne!(lb[2], lb[3], "boundary update landed");
+    }
+
+    /// Storage-layout equivalence: bucketed flat storage must reproduce
+    /// scattered training bit-for-bit under every schedule.
+    #[test]
+    fn bucketed_matches_scattered_all_schedules() {
+        let run = |kind, cap: Option<usize>| {
+            let g = mlp_graph(77, 3);
+            let cfg = ExecConfig {
+                schedule: kind,
+                threads: 2,
+                bucket_cap_bytes: cap,
+                ..Default::default()
+            };
+            let mut ex = Executor::new(g, Box::new(Adam), Hyper::default(), cfg).unwrap();
+            let d = data(5);
+            let losses: Vec<f32> = (0..5).map(|_| ex.train_step(&d).loss).collect();
+            ex.flush_pending();
+            (losses, ex.graph.store.snapshot())
+        };
+        for kind in ScheduleKind::ALL {
+            let (ls, ps) = run(kind, None);
+            // 8×8 f32 params are 256 B each: 600 B cap → 2 members/bucket
+            let (lb, pb) = run(kind, Some(600));
+            assert_eq!(ls, lb, "{kind:?}: losses must be bit-identical");
+            for (i, (a, b)) in ps.iter().zip(pb.iter()).enumerate() {
+                assert_eq!(a.max_abs_diff(b), 0.0, "{kind:?}: param {i} bit-identical");
+            }
+        }
+    }
+
+    /// Buckets reduce dispatched updates: 3 params in 2 buckets fire 2
+    /// fused updates per step.
+    #[test]
+    fn bucketed_dispatch_counts_buckets() {
+        let g = mlp_graph(2, 3);
+        let mut ex = Executor::new(
+            g,
+            Box::new(Sgd),
+            Hyper::default(),
+            ExecConfig {
+                schedule: ScheduleKind::BackwardFusion,
+                bucket_cap_bytes: Some(600),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(ex.graph.store.num_units(), 2);
+        let d = data(6);
+        ex.train_step(&d);
+        assert_eq!(ex.counters.updates_dispatched, 2, "one dispatch per bucket");
     }
 
     #[test]

@@ -1,21 +1,52 @@
-//! Worker pool for backward-fusion: parameter updates are dispatched to
+//! Worker pool for backward-fusion: optimizer updates are dispatched to
 //! background threads so they overlap the remaining back-propagation —
-//! the paper's parallelism claim (§3, Fig. 1d).
+//! the paper's parallelism claim (§3, Fig. 1d). A job updates either a
+//! single scattered parameter or a whole flat bucket
+//! ([`crate::optim::bucket`]) in one fused pass.
 
 use crate::graph::ParamRef;
+use crate::optim::bucket::{apply_bucket_update, BucketRef};
 use crate::optim::{Hyper, Optimizer};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// One optimizer-update job.
+/// The schedulable unit an update job targets.
+pub enum JobTarget {
+    /// One parameter in scattered storage.
+    Param(ParamRef),
+    /// A whole flat bucket (fused multi-parameter update).
+    Bucket(BucketRef),
+}
+
+/// One optimizer-update job: a target unit plus everything needed to
+/// run its update on a worker thread.
 pub struct Job {
-    pub param: ParamRef,
+    /// What to update.
+    pub target: JobTarget,
+    /// The update rule.
     pub opt: Arc<dyn Optimizer>,
+    /// Hyper-parameters effective at `step`.
     pub hyper: Hyper,
+    /// 1-based step index of the gradients being consumed.
     pub step: u64,
+    /// Global-information scale (grad-clip factor), 1.0 otherwise.
     pub scale: f32,
+}
+
+impl Job {
+    fn run(self) {
+        match &self.target {
+            JobTarget::Param(param) => {
+                let mut pd = param.data.write().unwrap();
+                self.opt.update(self.step, &mut pd, &self.hyper, self.scale);
+            }
+            JobTarget::Bucket(bucket) => {
+                apply_bucket_update(bucket, self.opt.as_ref(), self.step, &self.hyper, self.scale);
+            }
+        }
+    }
 }
 
 enum Msg {
@@ -37,10 +68,12 @@ pub struct UpdatePool {
     tx: Sender<Msg>,
     shared: Arc<Shared>,
     handles: Vec<JoinHandle<()>>,
+    /// Number of worker threads.
     pub workers: usize,
 }
 
 impl UpdatePool {
+    /// Spawn a pool of `workers` update threads (must be > 0).
     pub fn new(workers: usize) -> Self {
         assert!(workers > 0);
         let (tx, rx) = channel::<Msg>();
@@ -59,10 +92,7 @@ impl UpdatePool {
                     match msg {
                         Ok(Msg::Run(job)) => {
                             let t0 = Instant::now();
-                            {
-                                let mut pd = job.param.data.write().unwrap();
-                                job.opt.update(job.step, &mut pd, &job.hyper, job.scale);
-                            }
+                            job.run();
                             let ns = t0.elapsed().as_nanos() as u64;
                             *shared.busy_ns.lock().unwrap() += ns;
                             let mut p = shared.pending.lock().unwrap();
@@ -143,7 +173,7 @@ mod tests {
         let hp = Hyper { lr: 1.0, weight_decay: 0.0, ..Hyper::default() };
         for p in &params {
             pool.submit(Job {
-                param: Arc::clone(p),
+                target: JobTarget::Param(Arc::clone(p)),
                 opt: Arc::clone(&opt),
                 hyper: hp.clone(),
                 step: 1,
@@ -175,7 +205,7 @@ mod tests {
         for round in 0..3 {
             p.data.write().unwrap().grad = Tensor::full(&[8], 1.0);
             pool.submit(Job {
-                param: Arc::clone(&p),
+                target: JobTarget::Param(Arc::clone(&p)),
                 opt: Arc::clone(&opt),
                 hyper: hp.clone(),
                 step: round + 1,
@@ -184,5 +214,29 @@ mod tests {
             pool.wait_all();
         }
         assert!((p.data.read().unwrap().value.data()[0] - (1.0 - 1.5)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bucket_jobs_update_members() {
+        use crate::graph::ParamStore;
+        use crate::optim::bucket::build_buckets;
+        let mut store = ParamStore::default();
+        store.add("a", Tensor::full(&[64], 1.0));
+        store.add("b", Tensor::full(&[32], 2.0));
+        let (buckets, _) = build_buckets(&store.params, 1 << 20);
+        buckets[0].data.write().unwrap().grads = Tensor::full(&[96], 1.0);
+        let pool = UpdatePool::new(2);
+        let opt: Arc<dyn Optimizer> = Arc::new(Sgd);
+        pool.submit(Job {
+            target: JobTarget::Bucket(Arc::clone(&buckets[0])),
+            opt,
+            hyper: Hyper { lr: 1.0, weight_decay: 0.0, ..Hyper::default() },
+            step: 1,
+            scale: 1.0,
+        });
+        pool.wait_all();
+        assert_eq!(store.params[0].data.read().unwrap().value.data()[0], 0.0);
+        assert_eq!(store.params[1].data.read().unwrap().value.data()[0], 1.0);
+        assert!(buckets[0].data.read().unwrap().grads.data().iter().all(|g| *g == 0.0));
     }
 }

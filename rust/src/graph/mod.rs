@@ -9,6 +9,7 @@
 //! backward-fusion is 2n+1 (updates overlap the remaining backward).
 
 use crate::ops::Op;
+use crate::optim::bucket::{self, BucketRef};
 use crate::tensor::Tensor;
 use crate::util::XorShiftRng;
 use std::sync::{Arc, RwLock};
@@ -37,12 +38,21 @@ pub struct Node {
 }
 
 /// Mutable per-parameter payload, shared with the update worker pool.
+///
+/// In the bucketed storage layout (see [`ParamStore::bucketize`]) only
+/// `name` and `value` are live here: `grad` and `state` are empty and
+/// the flat bucket arenas are authoritative.
 pub struct ParamData {
+    /// Human-readable parameter name (checkpoint identity).
     pub name: String,
+    /// The parameter values (always stored here, in both layouts).
     pub value: Tensor,
+    /// The gradient accumulator (scattered layout only; empty when
+    /// bucketed).
     pub grad: Tensor,
     /// Optimizer state slots (momentum, v, accumulators, ...), created
-    /// lazily by the optimizer on first update.
+    /// lazily by the optimizer on first update (scattered layout only;
+    /// empty when bucketed).
     pub state: Vec<Tensor>,
 }
 
@@ -55,14 +65,33 @@ pub struct Param {
 
 pub type ParamRef = Arc<Param>;
 
-/// All trainable parameters of a model.
+/// The bucketed half of a [`ParamStore`]: flat grad/state buckets plus
+/// the parameter→bucket membership map (see [`crate::optim::bucket`]).
+pub struct BucketSet {
+    /// The buckets, covering the parameters in ascending-id order.
+    pub buckets: Vec<BucketRef>,
+    /// `pid -> (bucket index, member index)`.
+    pub loc: Vec<(usize, usize)>,
+}
+
+/// All trainable parameters of a model, in either scattered storage
+/// (each parameter owns its value/grad/state allocations) or bucketed
+/// storage (values stay per-parameter; grads and optimizer state live
+/// in flat per-bucket arenas).
 #[derive(Default)]
 pub struct ParamStore {
+    /// Parameter cells, indexed by `ParamId`.
     pub params: Vec<ParamRef>,
+    /// Flat bucketed grad/state storage (`None` = scattered layout).
+    pub buckets: Option<BucketSet>,
 }
 
 impl ParamStore {
+    /// Register a parameter; returns its id. Must happen before
+    /// [`ParamStore::bucketize`] — the bucket layout is fixed at build
+    /// time.
     pub fn add(&mut self, name: &str, value: Tensor) -> ParamId {
+        assert!(self.buckets.is_none(), "cannot add parameters after bucketize()");
         let grad = Tensor::zeros(value.shape());
         self.params.push(Arc::new(Param {
             data: RwLock::new(ParamData {
@@ -73,6 +102,123 @@ impl ParamStore {
             }),
         }));
         self.params.len() - 1
+    }
+
+    /// Switch to bucketed storage: group parameters in id order into
+    /// flat buckets holding at most `cap_bytes` of f32 gradient payload
+    /// each, moving grads (and any already-allocated optimizer state)
+    /// into the flat arenas and retiring the per-parameter allocations.
+    /// Panics if already bucketed.
+    pub fn bucketize(&mut self, cap_bytes: usize) {
+        assert!(self.buckets.is_none(), "store already bucketized");
+        let (buckets, loc) = bucket::build_buckets(&self.params, cap_bytes);
+        for p in &self.params {
+            let mut pd = p.data.write().unwrap();
+            // The flat arenas are authoritative from here on; empty
+            // tensors make any stale per-parameter use fail fast on a
+            // shape mismatch instead of silently diverging.
+            pd.grad = Tensor::zeros(&[0]);
+            pd.state = Vec::new();
+        }
+        self.buckets = Some(BucketSet { buckets, loc });
+    }
+
+    /// True when grads/state live in flat buckets.
+    pub fn is_bucketed(&self) -> bool {
+        self.buckets.is_some()
+    }
+
+    /// Number of schedulable update units: buckets when bucketed,
+    /// otherwise individual parameters.
+    pub fn num_units(&self) -> usize {
+        match &self.buckets {
+            Some(b) => b.buckets.len(),
+            None => self.params.len(),
+        }
+    }
+
+    /// The schedulable unit owning `pid` (its bucket index when
+    /// bucketed, else `pid` itself).
+    pub fn unit_of(&self, pid: ParamId) -> usize {
+        match &self.buckets {
+            Some(b) => b.loc[pid].0,
+            None => pid,
+        }
+    }
+
+    /// Accumulate `g` into the parameter's gradient, whichever layout
+    /// it lives in.
+    pub fn accum_grad(&self, pid: ParamId, g: &Tensor) {
+        match &self.buckets {
+            Some(bs) => {
+                let (bi, mi) = bs.loc[pid];
+                let mut bd = bs.buckets[bi].data.write().unwrap();
+                let dst = bd.grad_slice_mut(mi);
+                assert_eq!(dst.len(), g.len(), "accum_grad: length mismatch");
+                for (d, s) in dst.iter_mut().zip(g.data().iter()) {
+                    *d += *s;
+                }
+            }
+            None => self.params[pid].data.write().unwrap().grad.axpy(1.0, g),
+        }
+    }
+
+    /// Snapshot one parameter's optimizer state as parameter-shaped
+    /// tensors, regardless of storage layout (checkpoint save).
+    pub fn export_state(&self, pid: ParamId) -> Vec<Tensor> {
+        match &self.buckets {
+            Some(bs) => {
+                let (bi, mi) = bs.loc[pid];
+                let bd = bs.buckets[bi].data.read().unwrap();
+                let m = &bd.members[mi];
+                let shape = m.param.data.read().unwrap().value.shape().to_vec();
+                bd.state
+                    .iter()
+                    .map(|s| {
+                        Tensor::from_vec(&shape, s.data()[m.offset..m.offset + m.len].to_vec())
+                    })
+                    .collect()
+            }
+            None => self.params[pid].data.read().unwrap().state.clone(),
+        }
+    }
+
+    /// Restore one parameter's optimizer state from parameter-shaped
+    /// tensors (checkpoint load), routing into the flat arenas when
+    /// bucketed.
+    pub fn import_state(&self, pid: ParamId, states: Vec<Tensor>) -> Result<(), String> {
+        match &self.buckets {
+            Some(bs) => {
+                let (bi, mi) = bs.loc[pid];
+                let mut bd = bs.buckets[bi].data.write().unwrap();
+                bd.ensure_state(states.len());
+                let (offset, len) = {
+                    let m = &bd.members[mi];
+                    (m.offset, m.len)
+                };
+                for (slot, t) in states.iter().enumerate() {
+                    if t.len() != len {
+                        return Err(format!(
+                            "state slot {slot} for param {pid}: {} elems, member holds {len}",
+                            t.len()
+                        ));
+                    }
+                    bd.state[slot].data_mut()[offset..offset + len].copy_from_slice(t.data());
+                }
+                // Mirror the scattered branch's full replacement: a
+                // restore with fewer slots (e.g. an SGD checkpoint into
+                // a bucket warmed by Adam) must not leave stale state
+                // behind in the higher slots.
+                for slot in states.len()..bd.state.len() {
+                    bd.state[slot].data_mut()[offset..offset + len].fill(0.0);
+                }
+                Ok(())
+            }
+            None => {
+                self.params[pid].data.write().unwrap().state = states;
+                Ok(())
+            }
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -103,21 +249,44 @@ impl ParamStore {
             .collect()
     }
 
-    /// Global L2 norm over all grads (for global-norm clipping).
+    /// Global L2 norm over all grads (for global-norm clipping). Both
+    /// layouts accumulate per-parameter subtotals in id order, so the
+    /// f32 summation order — and therefore the clip factor — is
+    /// bit-identical between scattered and bucketed storage.
     pub fn global_grad_norm(&self) -> f32 {
-        self.params
-            .iter()
-            .map(|p| {
-                let g = &p.data.read().unwrap().grad;
-                g.data().iter().map(|x| x * x).sum::<f32>()
-            })
-            .sum::<f32>()
-            .sqrt()
+        let mut total = 0.0f32;
+        match &self.buckets {
+            Some(bs) => {
+                for b in &bs.buckets {
+                    let bd = b.data.read().unwrap();
+                    for mi in 0..bd.members.len() {
+                        total += bd.grad_slice(mi).iter().map(|x| x * x).sum::<f32>();
+                    }
+                }
+            }
+            None => {
+                for p in &self.params {
+                    let g = &p.data.read().unwrap().grad;
+                    total += g.data().iter().map(|x| x * x).sum::<f32>();
+                }
+            }
+        }
+        total.sqrt()
     }
 
+    /// Reset every gradient to zero, whichever layout holds them.
     pub fn zero_grads(&self) {
-        for p in &self.params {
-            p.data.write().unwrap().grad.zero_();
+        match &self.buckets {
+            Some(bs) => {
+                for b in &bs.buckets {
+                    b.data.write().unwrap().grads.zero_();
+                }
+            }
+            None => {
+                for p in &self.params {
+                    p.data.write().unwrap().grad.zero_();
+                }
+            }
         }
     }
 }

@@ -1,11 +1,15 @@
 //! optfuse — reproduction of "Optimizer Fusion: Efficient Training with
 //! Better Locality and Parallelism" (Jiang et al., 2021).
 //!
-//! Three-layer architecture:
+//! Three-layer architecture (see ARCHITECTURE.md for the full map):
 //! * L3 (this crate): eager-execution training engine whose scheduler
-//!   implements the paper's baseline / forward-fusion / backward-fusion.
+//!   implements the paper's baseline / forward-fusion / backward-fusion,
+//!   over either scattered per-parameter storage or bucketed flat
+//!   storage ([`optim::bucket`]).
 //! * L2/L1 (python/, build-time only): JAX model + Pallas fused kernels,
 //!   AOT-lowered to HLO text and executed via PJRT in `runtime`.
+
+#![warn(missing_docs)]
 
 pub mod checkpoint;
 pub mod config;

@@ -62,6 +62,21 @@ fn hyper_from(args: &Args) -> Hyper {
     }
 }
 
+/// `--bucket-cap <bytes>` flag; 0 (the default) keeps scattered storage.
+fn bucket_cap_from(args: &Args) -> Option<usize> {
+    match args.usize_or("bucket-cap", 0) {
+        0 => None,
+        cap => Some(cap),
+    }
+}
+
+fn storage_label(cap: Option<usize>) -> String {
+    match cap {
+        Some(cap) => format!("bucketed({cap}B)"),
+        None => "scattered".to_string(),
+    }
+}
+
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let model = args.str_or("model", "mobilenet_v2_ish");
     let schedule: ScheduleKind = args
@@ -73,22 +88,31 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let steps = args.usize_or("steps", 20);
     let threads = args.usize_or("threads", 4);
     let seed = args.usize_or("seed", 1) as u64;
+    let bucket_cap = bucket_cap_from(args);
 
     let graph = models::by_name(&model, seed)
         .ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
     let opt = optim::by_name(&opt_name)
         .ok_or_else(|| anyhow::anyhow!("unknown optimizer '{opt_name}'"))?;
     println!(
-        "training {model} ({} params, {} layers) schedule={} optimizer={opt_name} batch={batch}",
+        "training {model} ({} params, {} layers) schedule={} optimizer={opt_name} batch={batch} \
+         storage={}",
         graph.store.num_scalars(),
         graph.num_layers(),
-        schedule.label()
+        schedule.label(),
+        storage_label(bucket_cap)
     );
     let mut ex = Executor::new(
         graph,
         opt,
         hyper_from(args),
-        ExecConfig { schedule, threads, race_guard: true, ..Default::default() },
+        ExecConfig {
+            schedule,
+            threads,
+            race_guard: true,
+            bucket_cap_bytes: bucket_cap,
+            ..Default::default()
+        },
     )?;
     let mut rng = XorShiftRng::new(seed + 100);
     let is_lm = model.starts_with("transformer");
@@ -160,7 +184,12 @@ fn cmd_ddp(args: &Args) -> anyhow::Result<()> {
         .parse()
         .map_err(|e: String| anyhow::anyhow!(e))?;
     let batch = args.usize_or("batch", 8);
-    println!("DDP: world={world} schedule={} steps={steps}", schedule.label());
+    let bucket_cap = bucket_cap_from(args);
+    println!(
+        "DDP: world={world} schedule={} steps={steps} storage={}",
+        schedule.label(),
+        storage_label(bucket_cap)
+    );
     let report = train_ddp(
         || models::mobilenet_v2_ish(3),
         || optim::by_name("adam").unwrap(),
@@ -169,6 +198,7 @@ fn cmd_ddp(args: &Args) -> anyhow::Result<()> {
             world,
             schedule,
             steps,
+            bucket_cap_bytes: bucket_cap,
             local_batch_maker: Box::new(move |rank, step| {
                 let mut rng = XorShiftRng::new(((rank as u64) << 32) | step as u64);
                 data::image_batch(batch, 3, 16, 16, 10, &mut rng)
@@ -176,9 +206,10 @@ fn cmd_ddp(args: &Args) -> anyhow::Result<()> {
         },
     );
     println!(
-        "iter {:.2} ms | comm {:.2} MiB | final loss {:.4}",
+        "iter {:.2} ms | comm {:.2} MiB | {} reduces/step | final loss {:.4}",
         report.iter_ms,
         report.comm_bytes as f64 / (1 << 20) as f64,
+        report.reduces_per_step,
         report.losses.last().unwrap_or(&f32::NAN)
     );
     Ok(())

@@ -1,0 +1,301 @@
+//! Bucketed flat-parameter storage: size-capped groups of parameters
+//! whose **gradients and optimizer state** live in one contiguous
+//! backing [`Tensor`] per bucket (built on [`crate::tensor::flat`]).
+//!
+//! The per-parameter `ParamData` allocations of the scattered layout are
+//! exactly the storage pattern that Bagua's `FusedOptimizer` and IPEX
+//! optimizer fusion eliminate: when every parameter owns its own heap
+//! blocks, an optimizer pass (or a DDP all-reduce) hops allocations and
+//! pays per-parameter dispatch, locking, and cache-miss overhead. A
+//! bucket replaces that with one flat gradient buffer and one flat
+//! buffer per optimizer-state slot, walked front to back in a single
+//! fused pass ([`crate::optim::Optimizer::update_bucket`]).
+//!
+//! Parameter *values* intentionally stay per-parameter: the graph ops
+//! borrow `&Tensor` views of each value during forward/backward, so the
+//! value allocation is owned by the compute path, not the update path.
+//! The update and communication paths — which this module serves — own
+//! grads and state exclusively, and those are fully flattened. The
+//! schedule machinery treats a bucket as one schedulable unit: under
+//! backward-fusion a bucket fires as soon as the gradients of *all* its
+//! members are complete (per-bucket refcount, preserving the §B.2 race
+//! guard), and under forward-fusion right before the first member is
+//! used by the next forward pass.
+//!
+//! Lock order: a bucket's lock is always taken **before** any member
+//! parameter lock, and member locks are taken in member order; the
+//! forward/backward path never holds a parameter lock while acquiring a
+//! bucket lock. That ordering makes concurrent pool updates deadlock-free.
+
+use crate::graph::{ParamId, ParamRef};
+use crate::optim::{Hyper, Optimizer};
+use crate::tensor::flat::FlatLayout;
+use crate::tensor::Tensor;
+use std::sync::{Arc, RwLock};
+
+/// One parameter's membership in a bucket.
+pub struct Member {
+    /// The parameter's id in the owning `ParamStore`.
+    pub pid: ParamId,
+    /// Shared handle to the parameter (values stay scattered).
+    pub param: ParamRef,
+    /// Element offset of this member in the bucket's flat buffers.
+    pub offset: usize,
+    /// Element count of this member.
+    pub len: usize,
+}
+
+/// The lock-protected payload of one bucket.
+pub struct BucketData {
+    /// Flat gradient buffer covering every member, in member order.
+    pub grads: Tensor,
+    /// Flat optimizer-state buffers (one per state slot), allocated
+    /// lazily on the first bucket update, each the same length as
+    /// `grads`.
+    pub state: Vec<Tensor>,
+    /// The members, ordered by ascending `offset` with tight packing.
+    pub members: Vec<Member>,
+}
+
+impl BucketData {
+    /// Total element count of the flat buffers.
+    pub fn num_elems(&self) -> usize {
+        self.grads.len()
+    }
+
+    /// Grow `state` to `n` full-length zero buffers (no-op if present).
+    pub fn ensure_state(&mut self, n: usize) {
+        let len = self.grads.len();
+        while self.state.len() < n {
+            self.state.push(Tensor::zeros(&[len]));
+        }
+    }
+
+    /// Borrow one member's gradient region.
+    pub fn grad_slice(&self, member: usize) -> &[f32] {
+        let m = &self.members[member];
+        &self.grads.data()[m.offset..m.offset + m.len]
+    }
+
+    /// Mutably borrow one member's gradient region.
+    pub fn grad_slice_mut(&mut self, member: usize) -> &mut [f32] {
+        let m = &self.members[member];
+        let (offset, len) = (m.offset, m.len);
+        &mut self.grads.data_mut()[offset..offset + len]
+    }
+}
+
+/// A bucket cell: lock-protected so a worker thread can run the fused
+/// update of one bucket while the main thread continues backward for
+/// others (the backward-fusion parallelism claim, now at bucket
+/// granularity).
+pub struct Bucket {
+    /// The bucket payload, guarded by the bucket lock (see the module
+    /// docs for the lock order).
+    pub data: RwLock<BucketData>,
+}
+
+/// Shared handle to a [`Bucket`].
+pub type BucketRef = Arc<Bucket>;
+
+/// Mutable, lock-free view of a bucket mid-update: the flat gradient
+/// and state buffers plus each member's (scattered) value slice. Built
+/// by [`apply_bucket_update`] from the bucket and parameter locks, and
+/// consumed by [`Optimizer::update_bucket`].
+pub struct BucketViewMut<'a> {
+    /// Whole-bucket flat gradient buffer.
+    pub grads: &'a mut [f32],
+    /// Whole-bucket flat state buffers, one per optimizer state slot.
+    pub state: Vec<&'a mut [f32]>,
+    /// Member value slices with their spans into the flat buffers.
+    pub members: Vec<MemberMut<'a>>,
+}
+
+/// One member's mutable view inside a [`BucketViewMut`].
+pub struct MemberMut<'a> {
+    /// The member's parameter values (its own allocation).
+    pub value: &'a mut [f32],
+    /// Element offset of the member in the flat buffers.
+    pub offset: usize,
+    /// Element count of the member.
+    pub len: usize,
+}
+
+/// Greedily group parameter lengths (in element counts, given in id
+/// order) into buckets of at most `cap_bytes` of f32 payload each.
+/// Grouping preserves id order, so scattered and bucketed iteration
+/// visit scalars in the same sequence — the basis of the bit-exactness
+/// guarantee. A single parameter larger than the cap gets its own
+/// bucket.
+pub fn partition_by_bytes(lens: &[usize], cap_bytes: usize) -> Vec<Vec<usize>> {
+    let cap_elems = (cap_bytes / std::mem::size_of::<f32>()).max(1);
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    let mut cur: Vec<usize> = Vec::new();
+    let mut cur_elems = 0usize;
+    for (i, len) in lens.iter().enumerate() {
+        if !cur.is_empty() && cur_elems + len > cap_elems {
+            groups.push(std::mem::take(&mut cur));
+            cur_elems = 0;
+        }
+        cur.push(i);
+        cur_elems += len;
+    }
+    if !cur.is_empty() {
+        groups.push(cur);
+    }
+    groups
+}
+
+/// Build buckets over `params` (indexed by `ParamId`), flattening each
+/// group's gradients (and any already-allocated optimizer state) into
+/// contiguous backing tensors. Returns the buckets plus a
+/// `pid -> (bucket index, member index)` map. The caller (the
+/// `ParamStore`) is responsible for retiring the now-redundant
+/// per-parameter grad/state allocations.
+pub fn build_buckets(
+    params: &[ParamRef],
+    cap_bytes: usize,
+) -> (Vec<BucketRef>, Vec<(usize, usize)>) {
+    let lens: Vec<usize> = params
+        .iter()
+        .map(|p| p.data.read().unwrap().value.len())
+        .collect();
+    let groups = partition_by_bytes(&lens, cap_bytes);
+    let mut loc = vec![(0usize, 0usize); params.len()];
+    let mut buckets = Vec::with_capacity(groups.len());
+    for (bi, group) in groups.iter().enumerate() {
+        let guards: Vec<_> = group
+            .iter()
+            .map(|pid| params[*pid].data.read().unwrap())
+            .collect();
+        let shapes: Vec<&[usize]> = guards.iter().map(|g| g.value.shape()).collect();
+        let layout = FlatLayout::from_shapes(&shapes);
+        // flatten current grads (normally all-zero at construction)
+        let grad_refs: Vec<&Tensor> = guards.iter().map(|g| &g.grad).collect();
+        let grads = layout.pack(&grad_refs);
+        // migrate any already-allocated per-parameter state
+        let n_state = guards.first().map_or(0, |g| g.state.len());
+        assert!(
+            guards.iter().all(|g| g.state.len() == n_state),
+            "bucketize: members disagree on optimizer state count"
+        );
+        let state: Vec<Tensor> = (0..n_state)
+            .map(|slot| {
+                let slot_refs: Vec<&Tensor> = guards.iter().map(|g| &g.state[slot]).collect();
+                layout.pack(&slot_refs)
+            })
+            .collect();
+        let members: Vec<Member> = group
+            .iter()
+            .enumerate()
+            .map(|(mi, pid)| {
+                loc[*pid] = (bi, mi);
+                let span = layout.span(mi);
+                Member {
+                    pid: *pid,
+                    param: Arc::clone(&params[*pid]),
+                    offset: span.offset,
+                    len: span.len,
+                }
+            })
+            .collect();
+        drop(guards);
+        buckets.push(Arc::new(Bucket {
+            data: RwLock::new(BucketData { grads, state, members }),
+        }));
+    }
+    (buckets, loc)
+}
+
+/// Run one fused optimizer step over a whole bucket: takes the bucket
+/// lock, lazily allocates flat state for `opt`, takes every member's
+/// value lock (in member order, after the bucket lock — see the module
+/// lock-order contract), and hands the assembled [`BucketViewMut`] to
+/// [`Optimizer::update_bucket`]. Shared by the inline schedule paths
+/// and the backward-fusion worker pool.
+pub fn apply_bucket_update(
+    bucket: &Bucket,
+    opt: &dyn Optimizer,
+    step: u64,
+    hp: &Hyper,
+    global_scale: f32,
+) {
+    let mut bd = bucket.data.write().unwrap();
+    bd.ensure_state(opt.num_state());
+    let BucketData { grads, state, members } = &mut *bd;
+    let mut guards: Vec<_> = members
+        .iter()
+        .map(|m| m.param.data.write().unwrap())
+        .collect();
+    let mut view = BucketViewMut {
+        grads: grads.data_mut(),
+        state: state.iter_mut().map(Tensor::data_mut).collect(),
+        members: guards
+            .iter_mut()
+            .zip(members.iter())
+            .map(|(g, m)| MemberMut {
+                value: g.value.data_mut(),
+                offset: m.offset,
+                len: m.len,
+            })
+            .collect(),
+    };
+    opt.update_bucket(step, &mut view, hp, global_scale);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ParamStore;
+    use crate::optim::Sgd;
+
+    #[test]
+    fn partition_respects_cap_and_order() {
+        // 4-byte floats: cap 40 bytes = 10 elems
+        let groups = partition_by_bytes(&[4, 4, 4, 12, 2], 40);
+        assert_eq!(groups, vec![vec![0, 1], vec![2], vec![3], vec![4]]);
+        // oversized param gets its own bucket
+        let groups = partition_by_bytes(&[100, 1], 40);
+        assert_eq!(groups, vec![vec![0], vec![1]]);
+        // huge cap: one bucket
+        let groups = partition_by_bytes(&[3, 3, 3], 1 << 20);
+        assert_eq!(groups, vec![vec![0, 1, 2]]);
+        assert!(partition_by_bytes(&[], 64).is_empty());
+    }
+
+    #[test]
+    fn build_buckets_maps_members() {
+        let mut store = ParamStore::default();
+        store.add("a", Tensor::full(&[2, 2], 1.0));
+        store.add("b", Tensor::full(&[3], 2.0));
+        store.add("c", Tensor::full(&[5], 3.0));
+        // cap 32 bytes = 8 elems: [a(4), b(3)] then [c(5)]
+        let (buckets, loc) = build_buckets(&store.params, 32);
+        assert_eq!(buckets.len(), 2);
+        assert_eq!(loc, vec![(0, 0), (0, 1), (1, 0)]);
+        let b0 = buckets[0].data.read().unwrap();
+        assert_eq!(b0.num_elems(), 7);
+        assert_eq!(b0.members[1].offset, 4);
+        assert_eq!(b0.members[1].len, 3);
+        assert!(b0.grads.data().iter().all(|g| *g == 0.0));
+        assert!(b0.state.is_empty());
+    }
+
+    #[test]
+    fn apply_bucket_update_runs_the_rule() {
+        let mut store = ParamStore::default();
+        store.add("a", Tensor::full(&[2], 1.0));
+        store.add("b", Tensor::full(&[3], 2.0));
+        let (buckets, _) = build_buckets(&store.params, 1 << 20);
+        {
+            let mut bd = buckets[0].data.write().unwrap();
+            bd.grads = Tensor::full(&[5], 1.0);
+        }
+        let hp = Hyper { lr: 0.5, weight_decay: 0.0, ..Hyper::default() };
+        apply_bucket_update(&buckets[0], &Sgd, 1, &hp, 1.0);
+        let bd = buckets[0].data.read().unwrap();
+        assert!(bd.grads.data().iter().all(|g| *g == 0.0), "grads reset");
+        assert_eq!(store.params[0].data.read().unwrap().value.data(), &[0.5, 0.5]);
+        assert_eq!(store.params[1].data.read().unwrap().value.data(), &[1.5, 1.5, 1.5]);
+    }
+}

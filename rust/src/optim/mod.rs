@@ -6,20 +6,35 @@
 //!
 //! Per the paper's Fig. 2 memory model, the update also *resets the
 //! gradient* — grads are "read and reset by the optimizer".
+//!
+//! Every rule is written once as a raw-slice kernel
+//! ([`Optimizer::update_slices`]); the per-parameter entry point
+//! ([`Optimizer::update`]) and the fused multi-parameter entry point
+//! ([`Optimizer::update_bucket`], over [`bucket`] flat storage) are both
+//! derived from it, so scattered and bucketed training are bit-identical
+//! by construction.
 
+pub mod bucket;
 pub mod sched;
 
 use crate::graph::ParamData;
 use crate::tensor::Tensor;
+use bucket::BucketViewMut;
 
 /// Hyper-parameters shared across optimizers.
 #[derive(Debug, Clone)]
 pub struct Hyper {
+    /// Learning rate.
     pub lr: f32,
+    /// L2 / decoupled weight decay coefficient (rule-dependent).
     pub weight_decay: f32,
+    /// Heavy-ball momentum coefficient (SGD-momentum).
     pub momentum: f32,
+    /// Adam-family first-moment decay.
     pub beta1: f32,
+    /// Adam-family second-moment decay.
     pub beta2: f32,
+    /// Numerical-stability epsilon.
     pub eps: f32,
     /// Adadelta decay.
     pub rho: f32,
@@ -41,6 +56,7 @@ impl Default for Hyper {
 
 /// A per-parameter iterative update rule.
 pub trait Optimizer: Send + Sync {
+    /// Stable identifier used by CLI flags and bench tables.
     fn name(&self) -> &'static str;
 
     /// Number of state tensors per parameter (momentum buffers etc.).
@@ -53,11 +69,87 @@ pub trait Optimizer: Send + Sync {
         false
     }
 
-    /// Apply one update step to a single parameter. `step` is 1-based.
-    /// `global_scale` is 1.0 unless a global transform (grad clipping)
-    /// was computed after backward. Implementations must also reset the
-    /// gradient to zero (Fig. 2: grads are read *and reset* here).
-    fn update(&self, step: u64, p: &mut ParamData, hp: &Hyper, global_scale: f32);
+    /// Clip threshold consulted when [`Optimizer::needs_global`]: the
+    /// executor computes `global_scale = min(1, max_norm / ‖g‖)` from it
+    /// after each backward pass. Ignored for local rules.
+    fn global_max_norm(&self) -> f32 {
+        1.0
+    }
+
+    /// The raw elementwise kernel: one update step over equal-length
+    /// value/grad slices plus `num_state()` state slices. `step` is
+    /// 1-based; `global_scale` is 1.0 unless a global transform (grad
+    /// clipping) was computed after backward. Implementations must also
+    /// reset the gradient to zero (Fig. 2: grads are read *and reset*
+    /// here). Callers guarantee `state.len() == num_state()` and that
+    /// every slice has `value.len()` elements.
+    fn update_slices(
+        &self,
+        step: u64,
+        value: &mut [f32],
+        grad: &mut [f32],
+        state: &mut [&mut [f32]],
+        hp: &Hyper,
+        global_scale: f32,
+    );
+
+    /// Apply one update step to a single parameter (scattered storage).
+    /// Lazily allocates the parameter's state tensors, then runs
+    /// [`Optimizer::update_slices`] — the historical per-`ParamData`
+    /// entry point, now derived from the kernel.
+    fn update(&self, step: u64, p: &mut ParamData, hp: &Hyper, global_scale: f32) {
+        ensure_state(p, self.num_state());
+        let ParamData { value, grad, state, .. } = p;
+        let mut slots: Vec<&mut [f32]> = state.iter_mut().map(Tensor::data_mut).collect();
+        self.update_slices(step, value.data_mut(), grad.data_mut(), &mut slots, hp, global_scale);
+    }
+
+    /// Apply one update step to every member of a bucket in a single
+    /// pass over its flat gradient/state buffers (see [`bucket`]).
+    ///
+    /// The default implementation is the *fallback contract*: it walks
+    /// the members in span order, handing each member's value slice and
+    /// its contiguous region of the flat buffers to
+    /// [`Optimizer::update_slices`]. Because spans are tight and
+    /// ordered, this is already one front-to-back sweep of the flat
+    /// gradient and state arrays — an override can fuse further but must
+    /// keep the math identical. The caller guarantees `bucket.state`
+    /// holds `num_state()` full-length buffers.
+    ///
+    /// ```
+    /// use optfuse::optim::bucket::{BucketViewMut, MemberMut};
+    /// use optfuse::optim::{Hyper, Optimizer, Sgd};
+    ///
+    /// // Two parameters sharing one flat gradient buffer.
+    /// let mut v1 = vec![1.0f32, 2.0];
+    /// let mut v2 = vec![3.0f32];
+    /// let mut grads = vec![1.0f32, 1.0, 1.0];
+    /// let mut view = BucketViewMut {
+    ///     grads: &mut grads,
+    ///     state: Vec::new(),
+    ///     members: vec![
+    ///         MemberMut { value: &mut v1, offset: 0, len: 2 },
+    ///         MemberMut { value: &mut v2, offset: 2, len: 1 },
+    ///     ],
+    /// };
+    /// let hp = Hyper { lr: 0.5, weight_decay: 0.0, ..Hyper::default() };
+    /// Sgd.update_bucket(1, &mut view, &hp, 1.0);
+    /// // Identical math to two per-parameter Sgd updates:
+    /// assert_eq!(v1, [0.5, 1.5]);
+    /// assert_eq!(v2, [2.5]);
+    /// assert_eq!(grads, [0.0, 0.0, 0.0], "grads are read and reset");
+    /// ```
+    fn update_bucket(&self, step: u64, b: &mut BucketViewMut<'_>, hp: &Hyper, global_scale: f32) {
+        for m in b.members.iter_mut() {
+            let g = &mut b.grads[m.offset..m.offset + m.len];
+            let mut slots: Vec<&mut [f32]> = b
+                .state
+                .iter_mut()
+                .map(|s| &mut s[m.offset..m.offset + m.len])
+                .collect();
+            self.update_slices(step, m.value, g, &mut slots, hp, global_scale);
+        }
+    }
 
     /// (reads, writes) of f32 elements per parameter scalar — the memory
     /// transaction footprint used by `memsim` (paper Fig. 2 analysis).
@@ -85,10 +177,18 @@ impl Optimizer for Sgd {
     fn num_state(&self) -> usize {
         0
     }
-    fn update(&self, _step: u64, p: &mut ParamData, hp: &Hyper, gs: f32) {
+    fn update_slices(
+        &self,
+        _step: u64,
+        value: &mut [f32],
+        grad: &mut [f32],
+        _state: &mut [&mut [f32]],
+        hp: &Hyper,
+        gs: f32,
+    ) {
         let wd = hp.weight_decay;
         let lr = hp.lr;
-        for (v, g) in p.value.data_mut().iter_mut().zip(p.grad.data_mut().iter_mut()) {
+        for (v, g) in value.iter_mut().zip(grad.iter_mut()) {
             let grad = *g * gs + wd * *v;
             *v -= lr * grad;
             *g = 0.0;
@@ -112,17 +212,17 @@ impl Optimizer for SgdMomentum {
     fn num_state(&self) -> usize {
         1
     }
-    fn update(&self, _step: u64, p: &mut ParamData, hp: &Hyper, gs: f32) {
-        ensure_state(p, 1);
+    fn update_slices(
+        &self,
+        _step: u64,
+        value: &mut [f32],
+        grad: &mut [f32],
+        state: &mut [&mut [f32]],
+        hp: &Hyper,
+        gs: f32,
+    ) {
         let (lr, mu, wd) = (hp.lr, hp.momentum, hp.weight_decay);
-        let ParamData { value, grad, state, .. } = p;
-        let m = &mut state[0];
-        for ((v, g), mm) in value
-            .data_mut()
-            .iter_mut()
-            .zip(grad.data_mut().iter_mut())
-            .zip(m.data_mut().iter_mut())
-        {
+        for ((v, g), mm) in value.iter_mut().zip(grad.iter_mut()).zip(state[0].iter_mut()) {
             let grad = *g * gs + wd * *v;
             *mm = mu * *mm + grad;
             *v -= lr * *mm;
@@ -148,21 +248,24 @@ impl Optimizer for Adam {
     fn num_state(&self) -> usize {
         2
     }
-    fn update(&self, step: u64, p: &mut ParamData, hp: &Hyper, gs: f32) {
-        ensure_state(p, 2);
+    fn update_slices(
+        &self,
+        step: u64,
+        value: &mut [f32],
+        grad: &mut [f32],
+        state: &mut [&mut [f32]],
+        hp: &Hyper,
+        gs: f32,
+    ) {
         let (lr, b1, b2, eps, wd) = (hp.lr, hp.beta1, hp.beta2, hp.eps, hp.weight_decay);
         let bc1 = 1.0 - b1.powi(step as i32);
         let bc2 = 1.0 - b2.powi(step as i32);
-        let ParamData { value, grad, state, .. } = p;
         let (ms, vs) = state.split_at_mut(1);
-        let m = &mut ms[0];
-        let v2 = &mut vs[0];
         for (((v, g), mm), vv) in value
-            .data_mut()
             .iter_mut()
-            .zip(grad.data_mut().iter_mut())
-            .zip(m.data_mut().iter_mut())
-            .zip(v2.data_mut().iter_mut())
+            .zip(grad.iter_mut())
+            .zip(ms[0].iter_mut())
+            .zip(vs[0].iter_mut())
         {
             let grad = *g * gs + wd * *v;
             *mm = b1 * *mm + (1.0 - b1) * grad;
@@ -191,21 +294,24 @@ impl Optimizer for AdamW {
     fn num_state(&self) -> usize {
         2
     }
-    fn update(&self, step: u64, p: &mut ParamData, hp: &Hyper, gs: f32) {
-        ensure_state(p, 2);
+    fn update_slices(
+        &self,
+        step: u64,
+        value: &mut [f32],
+        grad: &mut [f32],
+        state: &mut [&mut [f32]],
+        hp: &Hyper,
+        gs: f32,
+    ) {
         let (lr, b1, b2, eps, wd) = (hp.lr, hp.beta1, hp.beta2, hp.eps, hp.weight_decay);
         let bc1 = 1.0 - b1.powi(step as i32);
         let bc2 = 1.0 - b2.powi(step as i32);
-        let ParamData { value, grad, state, .. } = p;
         let (ms, vs) = state.split_at_mut(1);
-        let m = &mut ms[0];
-        let v2 = &mut vs[0];
         for (((v, g), mm), vv) in value
-            .data_mut()
             .iter_mut()
-            .zip(grad.data_mut().iter_mut())
-            .zip(m.data_mut().iter_mut())
-            .zip(v2.data_mut().iter_mut())
+            .zip(grad.iter_mut())
+            .zip(ms[0].iter_mut())
+            .zip(vs[0].iter_mut())
         {
             let grad = *g * gs;
             *v *= 1.0 - lr * wd;
@@ -235,17 +341,17 @@ impl Optimizer for Adagrad {
     fn num_state(&self) -> usize {
         1
     }
-    fn update(&self, _step: u64, p: &mut ParamData, hp: &Hyper, gs: f32) {
-        ensure_state(p, 1);
+    fn update_slices(
+        &self,
+        _step: u64,
+        value: &mut [f32],
+        grad: &mut [f32],
+        state: &mut [&mut [f32]],
+        hp: &Hyper,
+        gs: f32,
+    ) {
         let (lr, eps, wd) = (hp.lr, hp.eps, hp.weight_decay);
-        let ParamData { value, grad, state, .. } = p;
-        let h = &mut state[0];
-        for ((v, g), hh) in value
-            .data_mut()
-            .iter_mut()
-            .zip(grad.data_mut().iter_mut())
-            .zip(h.data_mut().iter_mut())
-        {
+        for ((v, g), hh) in value.iter_mut().zip(grad.iter_mut()).zip(state[0].iter_mut()) {
             let grad = *g * gs + wd * *v;
             *hh += grad * grad;
             *v -= lr * grad / (hh.sqrt() + eps);
@@ -270,19 +376,22 @@ impl Optimizer for Adadelta {
     fn num_state(&self) -> usize {
         2
     }
-    fn update(&self, _step: u64, p: &mut ParamData, hp: &Hyper, gs: f32) {
-        ensure_state(p, 2);
+    fn update_slices(
+        &self,
+        _step: u64,
+        value: &mut [f32],
+        grad: &mut [f32],
+        state: &mut [&mut [f32]],
+        hp: &Hyper,
+        gs: f32,
+    ) {
         let (rho, eps, wd) = (hp.rho, hp.eps, hp.weight_decay);
-        let ParamData { value, grad, state, .. } = p;
         let (eg, ex) = state.split_at_mut(1);
-        let eg2 = &mut eg[0];
-        let ex2 = &mut ex[0];
         for (((v, g), egg), exx) in value
-            .data_mut()
             .iter_mut()
-            .zip(grad.data_mut().iter_mut())
-            .zip(eg2.data_mut().iter_mut())
-            .zip(ex2.data_mut().iter_mut())
+            .zip(grad.iter_mut())
+            .zip(eg[0].iter_mut())
+            .zip(ex[0].iter_mut())
         {
             let grad = *g * gs + wd * *v;
             *egg = rho * *egg + (1.0 - rho) * grad * grad;
@@ -310,17 +419,17 @@ impl Optimizer for RmsProp {
     fn num_state(&self) -> usize {
         1
     }
-    fn update(&self, _step: u64, p: &mut ParamData, hp: &Hyper, gs: f32) {
-        ensure_state(p, 1);
+    fn update_slices(
+        &self,
+        _step: u64,
+        value: &mut [f32],
+        grad: &mut [f32],
+        state: &mut [&mut [f32]],
+        hp: &Hyper,
+        gs: f32,
+    ) {
         let (lr, rho, eps, wd) = (hp.lr, hp.rho, hp.eps, hp.weight_decay);
-        let ParamData { value, grad, state, .. } = p;
-        let v2 = &mut state[0];
-        for ((v, g), vv) in value
-            .data_mut()
-            .iter_mut()
-            .zip(grad.data_mut().iter_mut())
-            .zip(v2.data_mut().iter_mut())
-        {
+        for ((v, g), vv) in value.iter_mut().zip(grad.iter_mut()).zip(state[0].iter_mut()) {
             let grad = *g * gs + wd * *v;
             *vv = rho * *vv + (1.0 - rho) * grad * grad;
             *v -= lr * grad / (vv.sqrt() + eps);
@@ -339,7 +448,9 @@ impl Optimizer for RmsProp {
 /// that **needs global information** (paper Table 1 / §B.1: supported by
 /// forward-fusion, rejected by backward-fusion).
 pub struct GlobalNormClip<O> {
+    /// The wrapped local update rule.
     pub inner: O,
+    /// Clip threshold on the global gradient L2 norm.
     pub max_norm: f32,
 }
 
@@ -353,10 +464,21 @@ impl<O: Optimizer> Optimizer for GlobalNormClip<O> {
     fn needs_global(&self) -> bool {
         true
     }
+    fn global_max_norm(&self) -> f32 {
+        self.max_norm
+    }
     /// `global_scale` must be the precomputed clip factor
     /// min(1, max_norm / ||g||_global); the per-parameter work is local.
-    fn update(&self, step: u64, p: &mut ParamData, hp: &Hyper, global_scale: f32) {
-        self.inner.update(step, p, hp, global_scale);
+    fn update_slices(
+        &self,
+        step: u64,
+        value: &mut [f32],
+        grad: &mut [f32],
+        state: &mut [&mut [f32]],
+        hp: &Hyper,
+        global_scale: f32,
+    ) {
+        self.inner.update_slices(step, value, grad, state, hp, global_scale);
     }
     fn mem_per_elem(&self) -> (u32, u32) {
         let (r, w) = self.inner.mem_per_elem();
@@ -505,6 +627,48 @@ mod tests {
         }
         assert!(by_name("adam_clip").unwrap().needs_global());
         assert!(by_name("bogus").is_none());
+    }
+
+    #[test]
+    fn update_bucket_default_matches_per_param() {
+        use bucket::{BucketViewMut, MemberMut};
+        let hp = hp_nodecay();
+        // per-param reference (two steps so Adam state matters)
+        let mut p1 = mk_param(&[1.0, -2.0], &[0.3, 0.4]);
+        let mut p2 = mk_param(&[0.5, 0.25, -1.0], &[0.1, -0.2, 0.3]);
+        // bucketed twin over one flat grad + flat state pair
+        let mut v1 = vec![1.0f32, -2.0];
+        let mut v2 = vec![0.5f32, 0.25, -1.0];
+        let mut grads = vec![0.3f32, 0.4, 0.1, -0.2, 0.3];
+        let mut m = vec![0.0f32; 5];
+        let mut s = vec![0.0f32; 5];
+        for step in 1..=2u64 {
+            Adam.update(step, &mut p1, &hp, 1.0);
+            Adam.update(step, &mut p2, &hp, 1.0);
+            {
+                let (ms, ss) = (&mut m[..], &mut s[..]);
+                let mut view = BucketViewMut {
+                    grads: &mut grads,
+                    state: vec![ms, ss],
+                    members: vec![
+                        MemberMut { value: &mut v1, offset: 0, len: 2 },
+                        MemberMut { value: &mut v2, offset: 2, len: 3 },
+                    ],
+                };
+                Adam.update_bucket(step, &mut view, &hp, 1.0);
+            }
+            assert_eq!(v1.as_slice(), p1.value.data(), "step {step}: p1 values");
+            assert_eq!(v2.as_slice(), p2.value.data(), "step {step}: p2 values");
+            assert_eq!(&m[..2], p1.state[0].data(), "step {step}: p1 m-state");
+            assert_eq!(&m[2..], p2.state[0].data(), "step {step}: p2 m-state");
+            assert!(grads.iter().all(|g| *g == 0.0), "grads reset");
+            // refill identical grads for the next step
+            for (i, g) in [0.05f32, -0.1, 0.2, 0.0, -0.3].iter().enumerate() {
+                grads[i] = *g;
+            }
+            p1.grad = Tensor::from_vec(&[2], grads[..2].to_vec());
+            p2.grad = Tensor::from_vec(&[3], grads[2..].to_vec());
+        }
     }
 
     #[test]

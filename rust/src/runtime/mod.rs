@@ -3,93 +3,145 @@
 //! the PJRT CPU client, and executes them from the rust hot path.
 //! Python never runs at request time — the manifest + HLO text files are
 //! the entire interface between the layers.
+//!
+//! The PJRT backend needs the external `xla` bindings, which the offline
+//! build environment does not ship; it is gated behind the `pjrt` cargo
+//! feature. Without the feature, [`Runtime`] still parses and validates
+//! the manifest (so artifact metadata stays testable) but
+//! [`Runtime::execute`] reports that the engine was built without PJRT.
+//! [`Runtime::available`] tells callers which backend they got.
 
 use crate::tensor::Tensor;
 use crate::util::json::{self, Json};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
 use std::sync::Mutex;
 
 /// One manifest entry.
 #[derive(Debug, Clone)]
 pub struct ArtifactMeta {
+    /// Artifact name (the executable's registry key).
     pub name: String,
+    /// Path of the HLO text file.
     pub file: PathBuf,
     /// Expected input shapes (empty vec = f32 scalar).
     pub inputs: Vec<Vec<usize>>,
+    /// Number of output tensors.
     pub outputs: usize,
 }
 
-/// The runtime: PJRT client + artifact registry with lazy compilation.
+/// Parse `manifest.json` in `dir` into the artifact registry.
+fn load_metas(dir: &Path) -> Result<HashMap<String, ArtifactMeta>> {
+    let manifest_path = dir.join("manifest.json");
+    let text = std::fs::read_to_string(&manifest_path)
+        .with_context(|| format!("reading {manifest_path:?} — run `make artifacts`"))?;
+    let v = json::parse(&text).context("parsing manifest.json")?;
+    if v.get("format").as_usize() != Some(1) {
+        bail!("unsupported manifest format");
+    }
+    let mut metas = HashMap::new();
+    for a in v
+        .get("artifacts")
+        .as_arr()
+        .ok_or_else(|| anyhow!("manifest: artifacts must be an array"))?
+    {
+        let name = a
+            .get("name")
+            .as_str()
+            .ok_or_else(|| anyhow!("artifact missing name"))?
+            .to_string();
+        let file = dir.join(
+            a.get("file")
+                .as_str()
+                .ok_or_else(|| anyhow!("artifact {name}: missing file"))?,
+        );
+        let inputs = a
+            .get("inputs")
+            .as_arr()
+            .ok_or_else(|| anyhow!("artifact {name}: missing inputs"))?
+            .iter()
+            .map(|shape| {
+                shape
+                    .as_arr()
+                    .map(|dims| dims.iter().filter_map(Json::as_usize).collect())
+                    .ok_or_else(|| anyhow!("bad shape"))
+            })
+            .collect::<Result<Vec<Vec<usize>>>>()?;
+        let outputs = a
+            .get("outputs")
+            .as_usize()
+            .ok_or_else(|| anyhow!("artifact {name}: missing outputs"))?;
+        metas.insert(name.clone(), ArtifactMeta { name, file, inputs, outputs });
+    }
+    Ok(metas)
+}
+
+/// The runtime: artifact registry plus (with the `pjrt` feature) a PJRT
+/// client with lazy compilation.
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
     metas: HashMap<String, ArtifactMeta>,
+    #[cfg(feature = "pjrt")]
     compiled: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
 }
 
 impl Runtime {
-    /// Create a runtime over the artifact directory (needs
-    /// `manifest.json`, see `make artifacts`).
-    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = dir.as_ref();
-        let manifest_path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&manifest_path)
-            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts`"))?;
-        let v = json::parse(&text).context("parsing manifest.json")?;
-        if v.get("format").as_usize() != Some(1) {
-            bail!("unsupported manifest format");
-        }
-        let mut metas = HashMap::new();
-        for a in v
-            .get("artifacts")
-            .as_arr()
-            .ok_or_else(|| anyhow!("manifest: artifacts must be an array"))?
-        {
-            let name = a
-                .get("name")
-                .as_str()
-                .ok_or_else(|| anyhow!("artifact missing name"))?
-                .to_string();
-            let file = dir.join(
-                a.get("file")
-                    .as_str()
-                    .ok_or_else(|| anyhow!("artifact {name}: missing file"))?,
-            );
-            let inputs = a
-                .get("inputs")
-                .as_arr()
-                .ok_or_else(|| anyhow!("artifact {name}: missing inputs"))?
-                .iter()
-                .map(|shape| {
-                    shape
-                        .as_arr()
-                        .map(|dims| dims.iter().filter_map(Json::as_usize).collect())
-                        .ok_or_else(|| anyhow!("bad shape"))
-                })
-                .collect::<Result<Vec<Vec<usize>>>>()?;
-            let outputs = a
-                .get("outputs")
-                .as_usize()
-                .ok_or_else(|| anyhow!("artifact {name}: missing outputs"))?;
-            metas.insert(name.clone(), ArtifactMeta { name, file, inputs, outputs });
-        }
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self { client, metas, compiled: Mutex::new(HashMap::new()) })
+    /// True when the crate was built with the `pjrt` feature and
+    /// [`Runtime::execute`] can actually run artifacts.
+    pub const fn available() -> bool {
+        cfg!(feature = "pjrt")
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
+    /// List the registered artifact names, sorted.
     pub fn artifact_names(&self) -> Vec<&str> {
         let mut v: Vec<&str> = self.metas.keys().map(String::as_str).collect();
         v.sort_unstable();
         v
     }
 
+    /// Look up one artifact's manifest entry.
     pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
         self.metas.get(name)
+    }
+
+    /// Validate `inputs` against the manifest entry for `name`.
+    fn check_inputs(&self, name: &str, inputs: &[Tensor]) -> Result<()> {
+        let meta = self
+            .metas
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        if inputs.len() != meta.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, want)) in inputs.iter().zip(meta.inputs.iter()).enumerate() {
+            if t.shape() != want.as_slice() {
+                bail!("{name}: input {i} shape {:?} != manifest {want:?}", t.shape());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl Runtime {
+    /// Create a runtime over the artifact directory (needs
+    /// `manifest.json`, see `make artifacts`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let metas = load_metas(dir.as_ref())?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, metas, compiled: Mutex::new(HashMap::new()) })
+    }
+
+    /// Name of the PJRT platform backing this runtime.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
     }
 
     /// Compile (if needed) and cache an artifact's executable.
@@ -123,19 +175,10 @@ impl Runtime {
     /// tensors. Input shapes are validated against the manifest.
     pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         self.ensure_compiled(name)?;
+        self.check_inputs(name, inputs)?;
         let meta = &self.metas[name];
-        if inputs.len() != meta.inputs.len() {
-            bail!(
-                "{name}: expected {} inputs, got {}",
-                meta.inputs.len(),
-                inputs.len()
-            );
-        }
         let mut literals = Vec::with_capacity(inputs.len());
         for (i, (t, want)) in inputs.iter().zip(meta.inputs.iter()).enumerate() {
-            if t.shape() != want.as_slice() {
-                bail!("{name}: input {i} shape {:?} != manifest {want:?}", t.shape());
-            }
             let dims: Vec<i64> = want.iter().map(|d| *d as i64).collect();
             let lit = xla::Literal::vec1(t.data())
                 .reshape(&dims)
@@ -173,6 +216,33 @@ impl Runtime {
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Create a runtime over the artifact directory. Without the `pjrt`
+    /// feature this parses and validates the manifest but cannot execute
+    /// artifacts.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let metas = load_metas(dir.as_ref())?;
+        Ok(Self { metas })
+    }
+
+    /// Name of the backing platform — `"stub"` without the `pjrt`
+    /// feature.
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Validate the request against the manifest, then report that the
+    /// engine was built without PJRT.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.check_inputs(name, inputs)?;
+        bail!(
+            "{name}: built without PJRT support — add the `xla` dependency to Cargo.toml and \
+             build with `--features pjrt`"
+        )
+    }
+}
+
 /// Locate the repo's artifact directory from the crate root.
 pub fn default_artifacts_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -183,6 +253,10 @@ mod tests {
     use super::*;
 
     fn runtime() -> Option<Runtime> {
+        if !Runtime::available() {
+            eprintln!("skipping: built without the pjrt feature");
+            return None;
+        }
         let dir = default_artifacts_dir();
         if !dir.join("manifest.json").exists() {
             eprintln!("skipping: run `make artifacts` first");
@@ -192,9 +266,16 @@ mod tests {
     }
 
     #[test]
+    fn stub_reports_unavailable_or_platform_is_cpu() {
+        match runtime() {
+            Some(rt) => assert_eq!(rt.platform(), "cpu"),
+            None => assert!(!Runtime::available() || !default_artifacts_dir().exists()),
+        }
+    }
+
+    #[test]
     fn manifest_loads_and_lists() {
         let Some(rt) = runtime() else { return };
-        assert_eq!(rt.platform(), "cpu");
         let names = rt.artifact_names();
         assert!(names.contains(&"mlp_train_step_8x64x32x10"), "{names:?}");
         assert!(names.contains(&"adamw_update_64x64"));

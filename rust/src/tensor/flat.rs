@@ -1,0 +1,166 @@
+//! Flat-buffer layout: pack many logically-separate tensors into one
+//! contiguous 1-D backing [`Tensor`], addressed through per-member spans.
+//!
+//! This is the storage substrate for [`crate::optim::bucket`]: a bucket's
+//! gradients and optimizer state each live in one backing tensor laid out
+//! by a [`FlatLayout`], so a multi-parameter optimizer update (or a DDP
+//! all-reduce) streams over a single allocation instead of hopping
+//! between per-parameter heap blocks — the locality argument of Bagua's
+//! `FusedOptimizer` and IPEX optimizer fusion, applied to this engine.
+
+use super::Tensor;
+
+/// One member's region inside a flat backing buffer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Span {
+    /// Element offset of the region's start in the backing buffer.
+    pub offset: usize,
+    /// Region length in elements.
+    pub len: usize,
+    /// Logical shape of the member (product equals `len`).
+    pub shape: Vec<usize>,
+}
+
+/// A contiguous packing of N member shapes: spans are tight (no padding)
+/// and ordered, so walking members in index order walks the backing
+/// buffer front to back exactly once.
+#[derive(Debug, Clone, Default)]
+pub struct FlatLayout {
+    spans: Vec<Span>,
+    total: usize,
+}
+
+impl FlatLayout {
+    /// Build a tight layout packing `shapes` in order.
+    pub fn from_shapes(shapes: &[&[usize]]) -> Self {
+        let mut spans = Vec::with_capacity(shapes.len());
+        let mut offset = 0;
+        for shape in shapes {
+            let len: usize = shape.iter().product();
+            spans.push(Span { offset, len, shape: shape.to_vec() });
+            offset += len;
+        }
+        Self { spans, total: offset }
+    }
+
+    /// Number of members.
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    /// True when the layout has no members.
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// Total element count of the backing buffer.
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Span of member `i`.
+    pub fn span(&self, i: usize) -> &Span {
+        &self.spans[i]
+    }
+
+    /// All spans in member order.
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+
+    /// Allocate a zeroed 1-D backing tensor for this layout.
+    pub fn alloc(&self) -> Tensor {
+        Tensor::zeros(&[self.total])
+    }
+
+    /// Borrow member `i`'s region of a backing tensor.
+    pub fn slice<'a>(&self, flat: &'a Tensor, i: usize) -> &'a [f32] {
+        let s = &self.spans[i];
+        &flat.data()[s.offset..s.offset + s.len]
+    }
+
+    /// Mutably borrow member `i`'s region of a backing tensor.
+    pub fn slice_mut<'a>(&self, flat: &'a mut Tensor, i: usize) -> &'a mut [f32] {
+        let s = &self.spans[i];
+        &mut flat.data_mut()[s.offset..s.offset + s.len]
+    }
+
+    /// Materialize member `i` as an owned tensor with its logical shape
+    /// (a copy — the backing buffer stays authoritative).
+    pub fn view(&self, flat: &Tensor, i: usize) -> Tensor {
+        let s = &self.spans[i];
+        Tensor::from_vec(&s.shape, self.slice(flat, i).to_vec())
+    }
+
+    /// Overwrite member `i`'s region from `src` (lengths must match).
+    pub fn write(&self, flat: &mut Tensor, i: usize, src: &Tensor) {
+        let dst = self.slice_mut(flat, i);
+        assert_eq!(dst.len(), src.len(), "flat write: member {i} length mismatch");
+        dst.copy_from_slice(src.data());
+    }
+
+    /// Pack `tensors` (matching this layout) into a fresh backing tensor.
+    pub fn pack(&self, tensors: &[&Tensor]) -> Tensor {
+        assert_eq!(tensors.len(), self.spans.len(), "flat pack: member count");
+        let mut flat = self.alloc();
+        for (i, t) in tensors.iter().enumerate() {
+            self.write(&mut flat, i, t);
+        }
+        flat
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> FlatLayout {
+        FlatLayout::from_shapes(&[&[2, 3], &[4], &[1, 1, 2]])
+    }
+
+    #[test]
+    fn spans_are_tight_and_ordered() {
+        let l = layout();
+        assert_eq!(l.len(), 3);
+        assert_eq!(l.total(), 6 + 4 + 2);
+        assert_eq!(l.span(0).offset, 0);
+        assert_eq!(l.span(1).offset, 6);
+        assert_eq!(l.span(2).offset, 10);
+        assert_eq!(l.span(2).shape, vec![1, 1, 2]);
+        assert!(!l.is_empty());
+        assert!(FlatLayout::from_shapes(&[]).is_empty());
+    }
+
+    #[test]
+    fn pack_view_roundtrip() {
+        let l = layout();
+        let a = Tensor::from_vec(&[2, 3], (0..6).map(|i| i as f32).collect());
+        let b = Tensor::full(&[4], 7.0);
+        let c = Tensor::from_vec(&[1, 1, 2], vec![8.0, 9.0]);
+        let flat = l.pack(&[&a, &b, &c]);
+        assert_eq!(flat.shape(), &[12]);
+        assert_eq!(l.view(&flat, 0), a);
+        assert_eq!(l.view(&flat, 1), b);
+        assert_eq!(l.view(&flat, 2), c);
+    }
+
+    #[test]
+    fn slice_mut_edits_backing() {
+        let l = layout();
+        let mut flat = l.alloc();
+        l.slice_mut(&mut flat, 1).fill(3.0);
+        assert_eq!(flat.data()[5], 0.0);
+        assert_eq!(flat.data()[6], 3.0);
+        assert_eq!(flat.data()[9], 3.0);
+        assert_eq!(flat.data()[10], 0.0);
+        assert_eq!(l.slice(&flat, 1), &[3.0; 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn write_rejects_wrong_length() {
+        let l = layout();
+        let mut flat = l.alloc();
+        l.write(&mut flat, 0, &Tensor::zeros(&[2]));
+    }
+}

@@ -2,6 +2,8 @@
 //! are single-precision, §C.1); shape is a small Vec<usize> in row-major
 //! (C) order.
 
+pub mod flat;
+
 use crate::util::XorShiftRng;
 use std::fmt;
 

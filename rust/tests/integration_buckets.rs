@@ -1,0 +1,269 @@
+//! Integration tests for bucketed flat-parameter storage: the storage
+//! layout is a pure performance axis — it must never change the math.
+//!
+//! * Bucketed vs per-param training is **bit-identical** for all three
+//!   schedules on a real CNN (the acceptance bar for this subsystem).
+//! * Checkpoints round-trip through flat storage and are portable
+//!   between layouts in both directions.
+//! * Weight tying and gradient accumulation behave identically at
+//!   bucket granularity.
+
+use optfuse::checkpoint;
+use optfuse::data::image_batch;
+use optfuse::exec::{ExecConfig, Executor};
+use optfuse::graph::{Graph, ScheduleKind, Src};
+use optfuse::models;
+use optfuse::ops::activation::Relu;
+use optfuse::ops::dense::Linear;
+use optfuse::ops::loss::MseLoss;
+use optfuse::optim::{self, Adam, Hyper};
+use optfuse::tensor::Tensor;
+use optfuse::util::XorShiftRng;
+
+fn cnn_batches(n: usize, seed: u64) -> Vec<Vec<Tensor>> {
+    let mut rng = XorShiftRng::new(seed);
+    (0..n).map(|_| image_batch(2, 3, 16, 16, 10, &mut rng)).collect()
+}
+
+fn run_cnn(
+    kind: ScheduleKind,
+    threads: usize,
+    cap: Option<usize>,
+    batches: &[Vec<Tensor>],
+) -> (Vec<f32>, Vec<Tensor>) {
+    let mut ex = Executor::new(
+        models::resnet_ish(11),
+        Box::new(Adam),
+        Hyper::default(),
+        ExecConfig {
+            schedule: kind,
+            threads,
+            race_guard: true,
+            bucket_cap_bytes: cap,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let losses = batches.iter().map(|b| ex.train_step(b).loss).collect();
+    ex.flush_pending();
+    (losses, ex.graph.store.snapshot())
+}
+
+/// Acceptance criterion: bucketed and per-param paths produce
+/// bit-identical loss traces for Baseline, ForwardFusion and
+/// BackwardFusion on the test CNN.
+#[test]
+fn cnn_bucketed_equals_scattered_all_schedules() {
+    let batches = cnn_batches(3, 5);
+    for kind in ScheduleKind::ALL {
+        let (ls, ps) = run_cnn(kind, 2, None, &batches);
+        // small cap → many multi-member buckets; huge cap → one bucket
+        for cap in [16 << 10, usize::MAX] {
+            let (lb, pb) = run_cnn(kind, 2, Some(cap), &batches);
+            assert_eq!(ls, lb, "{kind:?} cap {cap}: loss trace must be bit-identical");
+            for (i, (a, b)) in ps.iter().zip(pb.iter()).enumerate() {
+                assert_eq!(
+                    a.max_abs_diff(b),
+                    0.0,
+                    "{kind:?} cap {cap}: param {i} must be bit-identical"
+                );
+            }
+        }
+    }
+}
+
+fn mk(kind: ScheduleKind, cap: Option<usize>) -> Executor {
+    Executor::new(
+        models::mlp(3),
+        Box::new(Adam),
+        Hyper::default(),
+        ExecConfig { schedule: kind, bucket_cap_bytes: cap, ..Default::default() },
+    )
+    .unwrap()
+}
+
+/// Checkpoint round-trip through flat storage: optimizer state written
+/// from bucket views restores bit-exactly — into a bucketed executor
+/// (different cap!) and into a scattered one.
+#[test]
+fn checkpoint_roundtrip_through_flat_storage() {
+    let dir = std::env::temp_dir().join("optfuse_bucket_ckpt_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("flat.ckpt");
+    let batches = cnn_batches(8, 4);
+
+    // reference: uninterrupted scattered run
+    let mut full = mk(ScheduleKind::Baseline, None);
+    let mut ref_losses = Vec::new();
+    for b in &batches {
+        ref_losses.push(full.train_step(b).loss);
+    }
+
+    // bucketed run, interrupted at step 4
+    let mut first = mk(ScheduleKind::Baseline, Some(8 << 10));
+    for b in &batches[..4] {
+        first.train_step(b);
+    }
+    checkpoint::save(&mut first, &path).unwrap();
+
+    // resume bucketed with a different cap — the checkpoint is
+    // layout-independent, so the bucket geometry may change freely
+    let mut resumed_bucketed = mk(ScheduleKind::Baseline, Some(1 << 20));
+    assert_eq!(checkpoint::load(&mut resumed_bucketed, &path).unwrap(), 4);
+    // and resume scattered from the same bucketed checkpoint
+    let mut resumed_scattered = mk(ScheduleKind::Baseline, None);
+    assert_eq!(checkpoint::load(&mut resumed_scattered, &path).unwrap(), 4);
+
+    let mut tail_b = Vec::new();
+    let mut tail_s = Vec::new();
+    for b in &batches[4..] {
+        tail_b.push(resumed_bucketed.train_step(b).loss);
+        tail_s.push(resumed_scattered.train_step(b).loss);
+    }
+    assert_eq!(&ref_losses[4..], tail_b.as_slice(), "bucketed resume must be bit-exact");
+    assert_eq!(&ref_losses[4..], tail_s.as_slice(), "bucketed→scattered resume must be bit-exact");
+}
+
+/// The reverse direction: a scattered checkpoint restores into a
+/// bucketed executor, under a different schedule.
+#[test]
+fn scattered_checkpoint_loads_into_bucketed() {
+    let dir = std::env::temp_dir().join("optfuse_bucket_ckpt_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cross.ckpt");
+    let batches = cnn_batches(6, 9);
+
+    let mut full = mk(ScheduleKind::Baseline, None);
+    let mut ref_losses = Vec::new();
+    for b in &batches {
+        ref_losses.push(full.train_step(b).loss);
+    }
+
+    let mut scattered = mk(ScheduleKind::BackwardFusion, None);
+    for b in &batches[..3] {
+        scattered.train_step(b);
+    }
+    checkpoint::save(&mut scattered, &path).unwrap();
+
+    let mut bucketed_ff = mk(ScheduleKind::ForwardFusion, Some(4 << 10));
+    assert_eq!(checkpoint::load(&mut bucketed_ff, &path).unwrap(), 3);
+    let mut tail = Vec::new();
+    for b in &batches[3..] {
+        tail.push(bucketed_ff.train_step(b).loss);
+    }
+    bucketed_ff.flush_pending();
+    assert_eq!(&ref_losses[3..], tail.as_slice(), "BF→ckpt→bucketed-FF == baseline");
+}
+
+/// Restoring a checkpoint carrying *fewer* optimizer-state slots than
+/// the bucket arenas have warmed (here: a fresh step-0 checkpoint into
+/// an Adam-warmed executor) must clear the stale slots, exactly like
+/// the scattered layout's full state replacement.
+#[test]
+fn restore_clears_stale_bucket_state() {
+    let dir = std::env::temp_dir().join("optfuse_bucket_ckpt_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("stale.ckpt");
+    let batches = cnn_batches(5, 33);
+
+    // a fresh checkpoint: step 0, zero state slots per param
+    let mut fresh = mk(ScheduleKind::Baseline, None);
+    checkpoint::save(&mut fresh, &path).unwrap();
+
+    // warm both layouts with two Adam steps, then restore the fresh ckpt
+    let mut bucketed = mk(ScheduleKind::Baseline, Some(4 << 10));
+    let mut scattered = mk(ScheduleKind::Baseline, None);
+    for b in &batches[..2] {
+        bucketed.train_step(b);
+        scattered.train_step(b);
+    }
+    assert_eq!(checkpoint::load(&mut bucketed, &path).unwrap(), 0);
+    assert_eq!(checkpoint::load(&mut scattered, &path).unwrap(), 0);
+
+    let lb: Vec<f32> = batches.iter().map(|b| bucketed.train_step(b).loss).collect();
+    let ls: Vec<f32> = batches.iter().map(|b| scattered.train_step(b).loss).collect();
+    assert_eq!(lb, ls, "stale flat state must be cleared on restore");
+}
+
+/// A weight-tied parameter shares a bucket slot: it must still update
+/// exactly once per iteration under every schedule × both layouts.
+#[test]
+fn weight_tying_with_buckets() {
+    let build = || {
+        let mut rng = XorShiftRng::new(8);
+        let mut g = Graph::new("tied", 2);
+        let w = g.param("w_shared", &[8, 8], &mut rng);
+        let w2 = g.param("w_out", &[8, 8], &mut rng);
+        let l1 = g.push("fc1", Box::new(Linear::new(false)), vec![Src::External(0)], vec![w]);
+        let r = g.push("relu", Box::new(Relu), vec![Src::Node(l1)], vec![]);
+        let l2 = g.push("fc2", Box::new(Linear::new(false)), vec![Src::Node(r)], vec![w]);
+        let l3 = g.push("fc3", Box::new(Linear::new(false)), vec![Src::Node(l2)], vec![w2]);
+        let loss = g.push("mse", Box::new(MseLoss), vec![Src::Node(l3), Src::External(1)], vec![]);
+        g.set_loss(loss);
+        g
+    };
+    let mut rng = XorShiftRng::new(14);
+    let d = vec![
+        Tensor::randn(&[4, 8], 1.0, &mut rng),
+        Tensor::randn(&[4, 8], 1.0, &mut rng),
+    ];
+    let mut outs = Vec::new();
+    for kind in ScheduleKind::ALL {
+        for cap in [None, Some(200), Some(1 << 20)] {
+            let mut ex = Executor::new(
+                build(),
+                Box::new(Adam),
+                Hyper::default(),
+                ExecConfig {
+                    schedule: kind,
+                    threads: 2,
+                    bucket_cap_bytes: cap,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            for _ in 0..4 {
+                ex.train_step(&d);
+            }
+            ex.flush_pending();
+            outs.push(ex.graph.store.snapshot());
+        }
+    }
+    for s in &outs[1..] {
+        for (a, b) in outs[0].iter().zip(s.iter()) {
+            assert_eq!(a.max_abs_diff(b), 0.0, "tied params identical across schedule × storage");
+        }
+    }
+}
+
+/// Gradient accumulation accumulates into the flat arena between
+/// boundaries; every optimizer in the local family stays bit-exact.
+#[test]
+fn grad_accumulation_and_optimizer_family_bucketed() {
+    let batches = cnn_batches(6, 77);
+    for opt_name in ["sgd_momentum", "adamw", "rmsprop"] {
+        let run = |cap: Option<usize>| {
+            let mut ex = Executor::new(
+                models::mlp(21),
+                optim::by_name(opt_name).unwrap(),
+                Hyper { lr: 0.01, ..Hyper::default() },
+                ExecConfig {
+                    schedule: ScheduleKind::BackwardFusion,
+                    threads: 2,
+                    accum_steps: 2,
+                    bucket_cap_bytes: cap,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            let losses: Vec<f32> = batches.iter().map(|b| ex.train_step(b).loss).collect();
+            (losses, ex.graph.store.snapshot())
+        };
+        let (ls, ps) = run(None);
+        let (lb, pb) = run(Some(2 << 10));
+        assert_eq!(ls, lb, "{opt_name}: accum losses bit-identical");
+        for (a, b) in ps.iter().zip(pb.iter()) {
+            assert_eq!(a.max_abs_diff(b), 0.0, "{opt_name}: params bit-identical");
+        }
+    }
+}

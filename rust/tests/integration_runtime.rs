@@ -15,6 +15,10 @@ use optfuse::tensor::Tensor;
 use optfuse::util::XorShiftRng;
 
 fn runtime() -> Option<Runtime> {
+    if !Runtime::available() {
+        eprintln!("skipping: built without the pjrt feature");
+        return None;
+    }
     let dir = default_artifacts_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("skipping: run `make artifacts` first");

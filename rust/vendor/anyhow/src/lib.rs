@@ -1,0 +1,148 @@
+//! Minimal, dependency-free subset of the `anyhow` API, vendored so the
+//! crate builds in the offline container (the registry is unavailable).
+//!
+//! Provides exactly what this repository uses: [`Error`], [`Result`],
+//! the [`anyhow!`] / [`bail!`] macros, and the [`Context`] extension
+//! trait. Errors are flattened to a message string at construction —
+//! no backtraces, no downcasting.
+
+use std::fmt;
+
+/// A string-backed error type, API-compatible (for our uses) with
+/// `anyhow::Error`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(msg: M) -> Self {
+        Self { msg: msg.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Mirrors anyhow's blanket conversion: any std error can be `?`-raised
+// into `Error`. (Sound because `Error` itself does not implement
+// `std::error::Error`, exactly like the real crate.)
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(&e)
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to an error, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    /// Wrap the error with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(&$err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($msg:literal $(,)?) => {
+        return Err($crate::anyhow!($msg))
+    };
+    ($err:expr $(,)?) => {
+        return Err($crate::anyhow!($err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        return Err($crate::anyhow!($fmt, $($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::Other, "boom"))?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = fails_io().unwrap_err();
+        assert!(e.to_string().contains("boom"));
+    }
+
+    #[test]
+    fn context_prepends() {
+        let r: std::result::Result<(), String> = Err("inner".into());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+        let r: std::result::Result<(), String> = Err("inner".into());
+        let e = r.with_context(|| format!("outer {}", 2)).unwrap_err();
+        assert_eq!(e.to_string(), "outer 2: inner");
+    }
+
+    #[test]
+    fn option_context() {
+        let n: Option<u32> = None;
+        assert!(n.context("missing").is_err());
+        assert_eq!(Some(3u32).context("missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let a = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let s = String::from("from expr");
+        let b = anyhow!(s);
+        assert_eq!(b.to_string(), "from expr");
+        let c = anyhow!("x = {}", 7);
+        assert_eq!(c.to_string(), "x = 7");
+        let f = || -> Result<()> { bail!("bye {}", 1) };
+        assert_eq!(f().unwrap_err().to_string(), "bye 1");
+    }
+}
