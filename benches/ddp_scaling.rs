@@ -1,29 +1,51 @@
 //! §C.5: distributed data parallel — "the training speedup with DDP is
-//! similar to that on a single GPU". We run the DDP simulation with both
-//! schedules, check math-equivalence, report iteration time and
-//! all-reduce traffic, and compare the schedule speedup against the
-//! single-worker case.
+//! similar to that on a single GPU". The harness sweeps the new comm
+//! axes: schedule (baseline vs backward-fusion), storage (scattered vs
+//! bucketed collectives), ZeRO-1 sharded updates on/off, and
+//! backward-fusion overlap threads on/off — reporting iteration time,
+//! communicator traffic, rounds per step, the measured comm/compute
+//! overlap fraction, and the per-replica optimizer-state footprint.
+//!
+//! The math-equivalence assertions that used to live here (schedules
+//! agree at every world size; world=W bit-equal to a single process;
+//! sharded ⇄ unsharded bit-equal) moved to
+//! `rust/tests/integration_ddp.rs`, where `cargo test` actually runs
+//! them in CI; this harness keeps only perf-shaped sanity checks.
 
 #[path = "common.rs"]
 mod common;
 
 use optfuse::data::image_batch;
-use optfuse::ddp::{train_ddp, DdpConfig};
+use optfuse::ddp::{train_ddp, DdpConfig, DdpReport};
 use optfuse::graph::ScheduleKind;
 use optfuse::models;
 use optfuse::optim::{self, Hyper};
 use optfuse::util::XorShiftRng;
 
-fn run(world: usize, schedule: ScheduleKind, steps: usize) -> optfuse::ddp::DdpReport {
+struct Axis {
+    label: &'static str,
+    schedule: ScheduleKind,
+    bucket_cap: Option<usize>,
+    shard: bool,
+    overlap: usize,
+}
+
+const CAP: usize = 1 << 20;
+
+fn run(world: usize, axis: &Axis, steps: usize) -> DdpReport {
     train_ddp(
         || models::deep_mlp(3),
         || optim::by_name("adam").unwrap(),
         Hyper::default(),
         DdpConfig {
             world,
-            schedule,
+            schedule: axis.schedule,
             steps,
-            bucket_cap_bytes: None,
+            bucket_cap_bytes: axis.bucket_cap,
+            shard_updates: axis.shard,
+            overlap_threads: axis.overlap,
+            load_from: None,
+            save_to: None,
             local_batch_maker: Box::new(move |rank, step| {
                 let mut rng = XorShiftRng::new(((rank as u64) << 32) | step as u64);
                 image_batch(4, 3, 16, 16, 10, &mut rng)
@@ -34,44 +56,105 @@ fn run(world: usize, schedule: ScheduleKind, steps: usize) -> optfuse::ddp::DdpR
 
 fn main() {
     common::header(
-        "§C.5 — DDP training with the fusion schedules",
-        "optimizer managed per-replica after all-reduce; speedup similar to single-GPU",
+        "§C.5 — DDP with schedule-integrated collectives",
+        "reduce fused into the schedules; ZeRO-1 sharded fused updates; measured overlap",
     );
 
-    let steps = 4;
-    println!("\n  world  schedule          iter ms    comm MiB    final loss");
-    let mut final_losses = Vec::new();
+    let axes = [
+        Axis {
+            label: "base/scattered",
+            schedule: ScheduleKind::Baseline,
+            bucket_cap: None,
+            shard: false,
+            overlap: 0,
+        },
+        Axis {
+            label: "bf/scattered",
+            schedule: ScheduleKind::BackwardFusion,
+            bucket_cap: None,
+            shard: false,
+            overlap: 0,
+        },
+        Axis {
+            label: "base/bucketed",
+            schedule: ScheduleKind::Baseline,
+            bucket_cap: Some(CAP),
+            shard: false,
+            overlap: 0,
+        },
+        Axis {
+            label: "bf/bucketed",
+            schedule: ScheduleKind::BackwardFusion,
+            bucket_cap: Some(CAP),
+            shard: false,
+            overlap: 0,
+        },
+        Axis {
+            label: "bf/bkt+overlap",
+            schedule: ScheduleKind::BackwardFusion,
+            bucket_cap: Some(CAP),
+            shard: false,
+            overlap: 2,
+        },
+        Axis {
+            label: "base/bkt+shard",
+            schedule: ScheduleKind::Baseline,
+            bucket_cap: Some(CAP),
+            shard: true,
+            overlap: 0,
+        },
+        Axis {
+            label: "bf/bkt+shard+ov",
+            schedule: ScheduleKind::BackwardFusion,
+            bucket_cap: Some(CAP),
+            shard: true,
+            overlap: 2,
+        },
+    ];
+
+    let steps = 3;
+    println!(
+        "\n  world  axis              iter ms   comm MiB  rounds/st  overlap%  state KiB  loss"
+    );
     for world in [1usize, 2, 4] {
-        for schedule in [ScheduleKind::Baseline, ScheduleKind::BackwardFusion] {
-            let r = run(world, schedule, steps);
+        let mut state_unsharded = None;
+        let mut state_sharded = None;
+        for axis in &axes {
+            let r = run(world, axis, steps);
             println!(
-                "  {world:>5}  {:<16} {:>8.2}   {:>8.2}    {:.4}",
-                schedule.label(),
+                "  {world:>5}  {:<16} {:>8.2}  {:>9.2}  {:>9.1}  {:>7.0}%  {:>9.1}  {:.4}",
+                axis.label,
                 r.iter_ms,
                 r.comm_bytes as f64 / (1 << 20) as f64,
-                r.losses.last().unwrap()
+                r.reduces_per_step,
+                r.overlap_frac * 100.0,
+                r.opt_state_bytes as f64 / 1024.0,
+                r.losses.last().unwrap_or(&f32::NAN)
             );
-            final_losses.push((world, schedule, *r.losses.last().unwrap()));
+            if axis.label == "base/bucketed" {
+                state_unsharded = Some(r.opt_state_bytes);
+            }
+            if axis.label == "base/bkt+shard" {
+                state_sharded = Some(r.opt_state_bytes);
+            }
         }
-    }
-    // math equivalence: schedules agree at every world size
-    for world in [1usize, 2, 4] {
-        let ls: Vec<f32> = final_losses
-            .iter()
-            .filter(|(w, _, _)| *w == world)
-            .map(|(_, _, l)| *l)
-            .collect();
+        // perf-shape sanity: sharding cuts the per-replica optimizer
+        // state by ~world (exact up to shard-balance rounding)
+        let (u, s) = (state_unsharded.unwrap(), state_sharded.unwrap());
         assert!(
-            (ls[0] - ls[1]).abs() < 1e-6,
-            "world {world}: schedules must produce identical training"
+            s <= u / world as u64 + 1024,
+            "world {world}: sharded state {s} B should be ~1/{world} of {u} B"
         );
+        println!();
     }
-    // comm volume scales with world size (2 copies per rank per reduce)
-    let comm1 = run(1, ScheduleKind::Baseline, 1).comm_bytes;
-    let comm4 = run(4, ScheduleKind::Baseline, 1).comm_bytes;
+
+    // comm volume grows with world size (per-rank copies per collective)
+    let comm1 = run(1, &axes[0], 1).comm_bytes;
+    let comm4 = run(4, &axes[0], 1).comm_bytes;
     assert!(comm4 > 3 * comm1, "all-reduce traffic grows with world size");
     println!(
-        "\n  schedule-equivalence holds at every world size ✓ (single-core host: \
-         wallclock scaling is contended; traffic accounting is exact)\n§C.5 reproduced ✓"
+        "  traffic scales with world ✓ · sharded state ~1/W ✓ (single-core host: wallclock\n\
+         \x20 scaling is contended; traffic/rounds/footprint accounting is exact)\n\
+         §C.5 reproduced ✓ — math equivalence asserted in rust/tests/integration_ddp.rs"
     );
 }

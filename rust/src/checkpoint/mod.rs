@@ -17,6 +17,14 @@
 //! `ParamStore::export_state` / `import_state`, which view into the flat
 //! bucket arenas when the store is bucketed. A checkpoint written by a
 //! bucketed run restores into a scattered run and vice versa.
+//!
+//! ZeRO-1 sharded DDP runs ([`crate::ddp`]) are *world-size portable*
+//! through the same format: before saving, every rank all-gathers its
+//! state shards back to full coverage
+//! ([`crate::exec::Executor::prepare_checkpoint`] — `export_state`
+//! fails fast on still-sharded state), so the file never depends on the
+//! world size that wrote it; after loading, a sharded rank re-narrows
+//! its state with `ParamStore::reshard_state`.
 
 use crate::exec::Executor;
 use crate::tensor::Tensor;

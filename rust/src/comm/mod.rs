@@ -1,0 +1,471 @@
+//! The communication subsystem: collectives over flat bucket spans with
+//! unified byte / round / latency accounting.
+//!
+//! [`Communicator`] is the engine-facing contract — `all_reduce_mean`,
+//! `reduce_scatter_mean`, `all_gather` — and [`SharedMemComm`] is the
+//! in-process implementation backing the DDP simulation (standing in for
+//! NCCL). Three properties matter to the rest of the engine:
+//!
+//! * **Tag-matched, order-independent sessions.** Every collective names
+//!   a `tag`; ranks join the session for that tag in whatever order their
+//!   threads reach it. This is what lets backward-fusion fire a bucket's
+//!   reduce from a worker-pool thread *while backward is still running*
+//!   (`exec::pool` comm jobs): two ranks may issue bucket 5's and bucket
+//!   6's reduces in opposite orders without deadlock. Repeated use of a
+//!   tag is sequenced per rank, so step k and step k+1 of the same bucket
+//!   never collide.
+//! * **Deterministic reduction order.** A mean-reduce sums rank
+//!   contributions in rank order (0, 1, …, W−1) and then scales by 1/W,
+//!   on *every* rank. All ranks therefore compute bit-identical results
+//!   (f32 addition is commutative but not associative — a rank-dependent
+//!   order would let replicas drift in the low bits), and a
+//!   `reduce_scatter_mean` shard is bit-identical to the corresponding
+//!   region of an `all_reduce_mean`. The ZeRO-1 sharded update path's
+//!   bit-exactness guarantee rests on this.
+//! * **One accounting path.** Every collective — including the scalar
+//!   loss reduce — lands in the same [`CommStats`] (bytes moved, rounds,
+//!   blocked nanoseconds), so `DdpReport` totals cannot disagree with
+//!   themselves the way the old `AllReducer::bytes_moved` /
+//!   `reduces_per_step` split did.
+//!
+//! Shard spans (which contiguous region of a flat buffer rank r owns)
+//! come from [`crate::tensor::flat::shard_span`]; the update-side span
+//! arithmetic lives in [`crate::optim::bucket::apply_bucket_update_range`].
+
+use crate::tensor::flat::shard_span;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// Unified collective accounting, shared by every operation a
+/// [`Communicator`] performs.
+#[derive(Debug, Default)]
+pub struct CommStats {
+    /// Total bytes sent + received across all ranks and collectives.
+    pub bytes: AtomicU64,
+    /// Collective calls, counted once per participating rank (so one
+    /// all-reduce among W ranks adds W).
+    pub rounds: AtomicU64,
+    /// Wallclock spent inside collectives (waiting + reducing), summed
+    /// across ranks, in nanoseconds.
+    pub wait_ns: AtomicU64,
+}
+
+impl CommStats {
+    fn record(&self, sent: usize, received: usize, t0: Instant) {
+        self.bytes
+            .fetch_add((sent + received) as u64, Ordering::Relaxed);
+        self.rounds.fetch_add(1, Ordering::Relaxed);
+        self.wait_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+}
+
+/// Collective tags: every in-flight collective is identified by a tag so
+/// ranks can issue collectives for *different* schedulable units in
+/// different orders (worker-pool overlap) without cross-talk.
+pub mod tags {
+    /// The scalar loss all-reduce (per training step).
+    pub const LOSS: u64 = u64::MAX;
+
+    /// Gradient reduce of schedulable unit `unit`.
+    pub fn grad(unit: usize) -> u64 {
+        (1u64 << 56) | unit as u64
+    }
+
+    /// Updated-value all-gather of schedulable unit `unit` (ZeRO-1).
+    pub fn value(unit: usize) -> u64 {
+        (2u64 << 56) | unit as u64
+    }
+
+    /// Optimizer-state all-gather of `unit`'s state slot `slot`
+    /// (checkpoint gather).
+    pub fn state(unit: usize, slot: usize) -> u64 {
+        (3u64 << 56) | ((slot as u64) << 40) | unit as u64
+    }
+}
+
+/// Collectives over equal-length f32 buffers among a fixed set of ranks.
+///
+/// All ranks must call the *same* collective with the *same* tag and
+/// buffer length; the tag decouples issue order across ranks.
+pub trait Communicator: Send + Sync {
+    /// Number of participating ranks.
+    fn world(&self) -> usize;
+
+    /// Average `data` across all ranks, in place on every rank. The
+    /// reduction order is rank order on every rank, so all ranks end
+    /// with bit-identical buffers.
+    fn all_reduce_mean(&self, rank: usize, tag: u64, data: &mut [f32]);
+
+    /// Average across ranks, but each rank receives only its own shard
+    /// (`shard_span(data.len(), world, rank)`), written in place into
+    /// that region of `data`; the rest of `data` is left untouched. The
+    /// shard's values are bit-identical to the same region of an
+    /// `all_reduce_mean`.
+    fn reduce_scatter_mean(&self, rank: usize, tag: u64, data: &mut [f32]);
+
+    /// Each rank contributes its own shard region of `data`; on return
+    /// `data` is fully populated with every rank's shard on every rank.
+    fn all_gather(&self, rank: usize, tag: u64, data: &mut [f32]);
+
+    /// The unified accounting for every collective issued through this
+    /// communicator.
+    fn stats(&self) -> &CommStats;
+}
+
+/// Everything the executor needs to participate in collectives: the
+/// communicator, this replica's rank, and whether fused updates are
+/// ZeRO-1 sharded across ranks.
+#[derive(Clone)]
+pub struct CommCtx {
+    /// The collective backend shared by all ranks.
+    pub comm: Arc<dyn Communicator>,
+    /// This replica's rank in `[0, world)`.
+    pub rank: usize,
+    /// ZeRO-1: each rank reduces-scatters gradients, updates only its
+    /// own shard of every bucket (1/W of the update FLOPs and optimizer
+    /// state), and all-gathers the updated values.
+    pub shard: bool,
+}
+
+enum ReduceOp {
+    /// Elementwise sum in rank order, scaled by 1/world.
+    MeanSum,
+    /// Concatenate contributions in rank order (shard reassembly).
+    Concat,
+}
+
+struct Session {
+    stage: Vec<Option<Vec<f32>>>,
+    arrived: usize,
+    departed: usize,
+    result: Option<Arc<Vec<f32>>>,
+}
+
+impl Session {
+    fn new(world: usize) -> Self {
+        Self {
+            stage: (0..world).map(|_| None).collect(),
+            arrived: 0,
+            departed: 0,
+            result: None,
+        }
+    }
+}
+
+struct Inner {
+    /// In-flight sessions keyed by `(tag, per-rank sequence number)`.
+    sessions: HashMap<(u64, u64), Session>,
+    /// Per-rank count of collectives issued per tag: the k-th call with
+    /// a tag on one rank pairs with the k-th call on every other rank,
+    /// so a fast rank can start step k+1's collective for a bucket
+    /// before a slow rank has left step k's.
+    next_seq: Vec<HashMap<u64, u64>>,
+}
+
+/// Shared-memory [`Communicator`]: ranks are threads of one process and
+/// collectives meet in tag-matched staging sessions.
+pub struct SharedMemComm {
+    world: usize,
+    inner: Mutex<Inner>,
+    ready: Condvar,
+    stats: CommStats,
+}
+
+impl SharedMemComm {
+    /// A communicator for `world` ranks (threads).
+    pub fn new(world: usize) -> Self {
+        assert!(world > 0, "communicator needs at least one rank");
+        Self {
+            world,
+            inner: Mutex::new(Inner {
+                sessions: HashMap::new(),
+                next_seq: (0..world).map(|_| HashMap::new()).collect(),
+            }),
+            ready: Condvar::new(),
+            stats: CommStats::default(),
+        }
+    }
+
+    /// Join the session for `tag`, contribute `contribution`, block until
+    /// all ranks have contributed, and return the (shared) reduced
+    /// result. The last rank to arrive performs the reduction.
+    fn collective(&self, rank: usize, tag: u64, contribution: Vec<f32>, op: ReduceOp) -> Arc<Vec<f32>> {
+        assert!(rank < self.world, "rank {rank} out of range");
+        let mut inner = self.inner.lock().unwrap();
+        let seq = {
+            let c = inner.next_seq[rank].entry(tag).or_insert(0);
+            let s = *c;
+            *c += 1;
+            s
+        };
+        let key = (tag, seq);
+        let world = self.world;
+        let is_last = {
+            let sess = inner
+                .sessions
+                .entry(key)
+                .or_insert_with(|| Session::new(world));
+            assert!(
+                sess.stage[rank].is_none(),
+                "rank {rank} contributed twice to tag {tag:#x}"
+            );
+            sess.stage[rank] = Some(contribution);
+            sess.arrived += 1;
+            sess.arrived == world
+        };
+        let result = if is_last {
+            // Run the O(len·world) reduction *outside* the session lock:
+            // other tags' sessions keep making progress while this one
+            // reduces — the whole point of tag-matched concurrency. The
+            // session cannot be removed meanwhile (ranks depart only
+            // after the result is published below).
+            let stage = {
+                let sess = inner.sessions.get_mut(&key).unwrap();
+                std::mem::take(&mut sess.stage)
+            };
+            drop(inner);
+            let reduced = Arc::new(reduce_stage(&op, world, &stage));
+            inner = self.inner.lock().unwrap();
+            let sess = inner.sessions.get_mut(&key).unwrap();
+            sess.result = Some(Arc::clone(&reduced));
+            self.ready.notify_all();
+            reduced
+        } else {
+            loop {
+                if let Some(r) = inner.sessions.get(&key).and_then(|s| s.result.clone()) {
+                    break r;
+                }
+                inner = self.ready.wait(inner).unwrap();
+            }
+        };
+        let done = {
+            let sess = inner.sessions.get_mut(&key).unwrap();
+            sess.departed += 1;
+            sess.departed == world
+        };
+        if done {
+            inner.sessions.remove(&key);
+        }
+        result
+    }
+}
+
+fn reduce_stage(op: &ReduceOp, world: usize, stage: &[Option<Vec<f32>>]) -> Vec<f32> {
+    match op {
+        ReduceOp::MeanSum => {
+            // Rank order, starting from rank 0, on every rank — the
+            // bit-determinism contract of the module docs.
+            let mut acc = stage[0].as_ref().expect("rank 0 contribution").clone();
+            for s in stage.iter().skip(1) {
+                let s = s.as_ref().expect("contribution");
+                // hard assert: a silent zip-to-shorter would break the
+                // bit-exactness contract instead of failing fast
+                assert_eq!(s.len(), acc.len(), "collective length mismatch");
+                for (a, b) in acc.iter_mut().zip(s.iter()) {
+                    *a += *b;
+                }
+            }
+            let inv = 1.0 / world as f32;
+            for a in acc.iter_mut() {
+                *a *= inv;
+            }
+            acc
+        }
+        ReduceOp::Concat => stage
+            .iter()
+            .flat_map(|s| s.as_ref().expect("contribution").iter().copied())
+            .collect(),
+    }
+}
+
+impl Communicator for SharedMemComm {
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn all_reduce_mean(&self, rank: usize, tag: u64, data: &mut [f32]) {
+        let t0 = Instant::now();
+        let n = data.len();
+        let result = self.collective(rank, tag, data.to_vec(), ReduceOp::MeanSum);
+        data.copy_from_slice(&result);
+        self.stats.record(n * 4, n * 4, t0);
+    }
+
+    fn reduce_scatter_mean(&self, rank: usize, tag: u64, data: &mut [f32]) {
+        let t0 = Instant::now();
+        let n = data.len();
+        let (off, len) = shard_span(n, self.world, rank);
+        let result = self.collective(rank, tag, data.to_vec(), ReduceOp::MeanSum);
+        data[off..off + len].copy_from_slice(&result[off..off + len]);
+        self.stats.record(n * 4, len * 4, t0);
+    }
+
+    fn all_gather(&self, rank: usize, tag: u64, data: &mut [f32]) {
+        let t0 = Instant::now();
+        let n = data.len();
+        let (off, len) = shard_span(n, self.world, rank);
+        let result = self.collective(rank, tag, data[off..off + len].to_vec(), ReduceOp::Concat);
+        assert_eq!(result.len(), n, "all_gather: shards must tile the buffer");
+        data.copy_from_slice(&result);
+        self.stats.record(len * 4, n * 4, t0);
+    }
+
+    fn stats(&self) -> &CommStats {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex as StdMutex;
+
+    #[test]
+    fn all_reduce_means_and_is_bit_identical_across_ranks() {
+        let world = 3;
+        let comm = Arc::new(SharedMemComm::new(world));
+        let outs = Arc::new(StdMutex::new(vec![Vec::new(); world]));
+        std::thread::scope(|s| {
+            for rank in 0..world {
+                let comm = Arc::clone(&comm);
+                let outs = Arc::clone(&outs);
+                s.spawn(move || {
+                    let mut d = vec![(rank + 1) as f32 * 0.1; 5];
+                    comm.all_reduce_mean(rank, tags::grad(0), &mut d);
+                    outs.lock().unwrap()[rank] = d;
+                });
+            }
+        });
+        let outs = outs.lock().unwrap();
+        for r in 1..world {
+            assert_eq!(outs[0], outs[r], "ranks must agree bit-for-bit");
+        }
+        assert!((outs[0][0] - 0.2).abs() < 1e-6, "mean of 0.1, 0.2, 0.3");
+        assert_eq!(comm.stats().rounds.load(Ordering::Relaxed), world as u64);
+        assert!(comm.stats().bytes.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn reduce_scatter_shard_matches_all_reduce() {
+        let world = 4;
+        let comm = Arc::new(SharedMemComm::new(world));
+        let n = 10; // non-divisible by world: remainder spread over early ranks
+        let outs = Arc::new(StdMutex::new(vec![(Vec::new(), Vec::new()); world]));
+        std::thread::scope(|s| {
+            for rank in 0..world {
+                let comm = Arc::clone(&comm);
+                let outs = Arc::clone(&outs);
+                s.spawn(move || {
+                    let base: Vec<f32> = (0..n).map(|i| (i * (rank + 1)) as f32).collect();
+                    let mut ar = base.clone();
+                    comm.all_reduce_mean(rank, tags::grad(1), &mut ar);
+                    let mut rs = base.clone();
+                    comm.reduce_scatter_mean(rank, tags::grad(2), &mut rs);
+                    outs.lock().unwrap()[rank] = (ar, rs);
+                });
+            }
+        });
+        let outs = outs.lock().unwrap();
+        for rank in 0..world {
+            let (ar, rs) = &outs[rank];
+            let (off, len) = shard_span(n, world, rank);
+            assert_eq!(&ar[off..off + len], &rs[off..off + len], "shard values identical");
+            // outside the shard, reduce-scatter leaves the local buffer
+            for i in 0..n {
+                if i < off || i >= off + len {
+                    assert_eq!(rs[i], (i * (rank + 1)) as f32, "untouched outside shard");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_gather_reassembles_shards() {
+        let world = 3;
+        let n = 8;
+        let comm = Arc::new(SharedMemComm::new(world));
+        let outs = Arc::new(StdMutex::new(vec![Vec::new(); world]));
+        // the "true" full buffer every rank should end with
+        let full: Vec<f32> = (0..n).map(|i| i as f32 * 2.0).collect();
+        std::thread::scope(|s| {
+            for rank in 0..world {
+                let comm = Arc::clone(&comm);
+                let outs = Arc::clone(&outs);
+                let full = full.clone();
+                s.spawn(move || {
+                    // each rank knows only its own shard
+                    let mut d = vec![0.0f32; n];
+                    let (off, len) = shard_span(n, world, rank);
+                    d[off..off + len].copy_from_slice(&full[off..off + len]);
+                    comm.all_gather(rank, tags::value(0), &mut d);
+                    outs.lock().unwrap()[rank] = d;
+                });
+            }
+        });
+        let outs = outs.lock().unwrap();
+        for rank in 0..world {
+            assert_eq!(outs[rank], full, "rank {rank} reassembled");
+        }
+    }
+
+    /// The property the worker-pool overlap depends on: each rank may
+    /// have several collectives for *different* tags in flight at once
+    /// (its pool workers), and the sessions pair up by tag no matter
+    /// how the threads interleave.
+    #[test]
+    fn tags_decouple_concurrent_sessions_across_ranks() {
+        let comm = Arc::new(SharedMemComm::new(2));
+        let outs = Arc::new(StdMutex::new([[0.0f32; 2]; 2]));
+        std::thread::scope(|s| {
+            for rank in 0..2 {
+                for (slot, tag) in [tags::grad(7), tags::grad(8)].into_iter().enumerate() {
+                    let comm = Arc::clone(&comm);
+                    let outs = Arc::clone(&outs);
+                    s.spawn(move || {
+                        let base = if slot == 0 { rank as f32 } else { 10.0 + rank as f32 };
+                        let mut d = [base];
+                        comm.all_reduce_mean(rank, tag, &mut d);
+                        outs.lock().unwrap()[rank][slot] = d[0];
+                    });
+                }
+            }
+        });
+        let outs = outs.lock().unwrap();
+        for rank in 0..2 {
+            assert_eq!(outs[rank][0], 0.5, "mean of 0, 1");
+            assert_eq!(outs[rank][1], 10.5, "mean of 10, 11");
+        }
+    }
+
+    #[test]
+    fn tag_reuse_across_rounds_is_sequenced() {
+        let comm = Arc::new(SharedMemComm::new(2));
+        std::thread::scope(|s| {
+            for rank in 0..2 {
+                let comm = Arc::clone(&comm);
+                s.spawn(move || {
+                    for round in 0..5 {
+                        let mut d = vec![rank as f32 + round as f32; 4];
+                        comm.all_reduce_mean(rank, tags::grad(3), &mut d);
+                        assert_eq!(d[0], 0.5 + round as f32);
+                    }
+                });
+            }
+        });
+        assert_eq!(comm.stats().rounds.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn world_one_is_identity() {
+        let comm = SharedMemComm::new(1);
+        let mut d = vec![3.0f32, -1.0];
+        comm.all_reduce_mean(0, tags::LOSS, &mut d);
+        assert_eq!(d, vec![3.0, -1.0]);
+        let mut d = vec![5.0f32; 4];
+        comm.all_gather(0, tags::value(0), &mut d);
+        assert_eq!(d, vec![5.0; 4]);
+    }
+}

@@ -25,15 +25,26 @@
 //! (still after each producing node's backward — the §B.2 guard extends
 //! to buckets unchanged). Schedule × storage are independent axes and any
 //! combination trains bit-identically.
+//!
+//! **Replication axis:** with a [`crate::comm::CommCtx`] installed
+//! ([`Executor::set_comm`]) the same schedule state machines drive DDP:
+//! the point where a schedule runs a unit's update becomes
+//! *reduce-then-update*. Under backward-fusion with worker threads the
+//! reduce job is submitted the moment the unit's refcounts drain, so the
+//! collective (and, sharded, the shard update + value gather) overlaps
+//! the rest of backward — the distributed analogue of the paper's
+//! Fig. 1d, measured by `overlapped_job_ns / total_job_ns`.
 
 pub mod hooks;
 pub mod pool;
 
+use crate::comm::{tags, CommCtx};
 use crate::graph::{Graph, ParamId, ScheduleKind, Src};
 use crate::ops::OpCtx;
 use crate::optim::{bucket, Hyper, Optimizer};
+use crate::tensor::flat::shard_span;
 use crate::tensor::Tensor;
-use pool::{Job, JobTarget, UpdatePool};
+use pool::{CommPlan, Job, JobTarget, UpdatePool};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -138,6 +149,17 @@ pub struct Executor {
     /// Optional LR schedule; evaluated at the *gradient's* step index so
     /// forward-fusion's deferred updates stay equivalent to baseline.
     lr_schedule: Option<Box<dyn crate::optim::sched::LrSchedule>>,
+    /// DDP participation: when set, the schedule arms reduce gradients
+    /// through the communicator at the points where they would update
+    /// (see [`Executor::set_comm`]).
+    comm: Option<CommCtx>,
+    /// Nanoseconds of pool-job *execution* (reduce + update, queue wait
+    /// excluded) that ran while the backward node loop was still
+    /// executing — the overlap the paper's Fig. 1d promises, measured.
+    pub overlapped_job_ns: u64,
+    /// Total nanoseconds of pool-job execution, the denominator of the
+    /// overlap fraction.
+    pub total_job_ns: u64,
 }
 
 impl Executor {
@@ -183,7 +205,38 @@ impl Executor {
             counters: ControlCounters::default(),
             last_loss: f32::NAN,
             lr_schedule: None,
+            comm: None,
+            overlapped_job_ns: 0,
+            total_job_ns: 0,
         })
+    }
+
+    /// Join a DDP collective group: every schedule arm now reduces a
+    /// unit's gradients through `ctx.comm` at the point where it would
+    /// run that unit's update — baseline in its standalone stage,
+    /// forward-fusion in bulk right after backward (updates stay lazy),
+    /// backward-fusion per unit as its refcounts drain, inline or as a
+    /// reduce-then-update job on the worker pool. With `ctx.shard`
+    /// (ZeRO-1), updates reduce-scatter, touch only this rank's shard of
+    /// each bucket, and all-gather the refreshed values.
+    ///
+    /// Sharding requires bucketed storage (shard spans are regions of
+    /// the flat arenas), and global-information optimizers are not
+    /// supported with sharding (the global norm would need a second
+    /// collective over partial sums — see ROADMAP).
+    pub fn set_comm(&mut self, ctx: CommCtx) {
+        if ctx.shard {
+            assert!(
+                self.graph.store.is_bucketed(),
+                "sharded updates need bucketed storage (set bucket_cap_bytes)"
+            );
+            assert!(
+                !self.opt.needs_global(),
+                "sharded updates do not support global-information optimizer '{}'",
+                self.opt.name()
+            );
+        }
+        self.comm = Some(ctx);
     }
 
     /// Number of completed update steps.
@@ -250,6 +303,124 @@ impl Executor {
         t0.elapsed()
     }
 
+    /// The schedulable unit as a pool/collective job target.
+    fn job_target(&self, unit: usize) -> JobTarget {
+        match &self.graph.store.buckets {
+            Some(bs) => JobTarget::Bucket(Arc::clone(&bs.buckets[unit])),
+            None => JobTarget::Param(Arc::clone(self.graph.store.get(unit))),
+        }
+    }
+
+    /// Inline comm-aware unit update (reduce-then-update, sharded when
+    /// configured). `do_reduce` is false when the gradients were already
+    /// reduced (forward-fusion's bulk reduce).
+    fn comm_update_unit(&mut self, unit: usize, step: u64, do_reduce: bool) -> Duration {
+        let t0 = Instant::now();
+        let ctx = self.comm.as_ref().expect("comm ctx").clone();
+        let hp = self.hyper_at(step);
+        let target = self.job_target(unit);
+        pool::run_comm_update(
+            &ctx,
+            unit,
+            &target,
+            self.opt.as_ref(),
+            step,
+            &hp,
+            self.global_scale,
+            do_reduce,
+        );
+        self.counters.updates_dispatched += 1;
+        t0.elapsed()
+    }
+
+    /// Unit update on the forward-fusion lazy path: local when
+    /// single-process; comm-aware (shard update + value gather, no
+    /// re-reduce) under DDP.
+    fn ff_update_unit(&mut self, unit: usize, step: u64) -> Duration {
+        if self.comm.is_some() {
+            self.comm_update_unit(unit, step, false)
+        } else {
+            self.update_unit_inline(unit, step)
+        }
+    }
+
+    /// Reduce every unit's gradients across replicas in unit order
+    /// (bulk): the forward-fusion and global-information DDP paths,
+    /// where the reduce must complete before updates or the global norm.
+    fn comm_reduce_all_grads(&mut self) {
+        let ctx = self.comm.as_ref().expect("comm ctx").clone();
+        match &self.graph.store.buckets {
+            Some(bs) => {
+                for (unit, b) in bs.buckets.iter().enumerate() {
+                    let mut bd = b.data.write().unwrap();
+                    if ctx.shard {
+                        ctx.comm
+                            .reduce_scatter_mean(ctx.rank, tags::grad(unit), bd.grads.data_mut());
+                    } else {
+                        ctx.comm
+                            .all_reduce_mean(ctx.rank, tags::grad(unit), bd.grads.data_mut());
+                    }
+                }
+            }
+            None => {
+                for pid in 0..self.graph.store.len() {
+                    let p = Arc::clone(self.graph.store.get(pid));
+                    let mut pd = p.data.write().unwrap();
+                    ctx.comm
+                        .all_reduce_mean(ctx.rank, tags::grad(pid), pd.grad.data_mut());
+                }
+            }
+        }
+    }
+
+    /// Collectively widen ZeRO-1 sharded optimizer state back to full
+    /// coverage by all-gathering every bucket's state slots — the
+    /// checkpoint-save path, after which `ParamStore::export_state`
+    /// sees world-size-independent state on every rank. Must be called
+    /// by **all** ranks (it participates in collectives); a no-op
+    /// without sharding.
+    pub fn gather_sharded_state(&mut self) {
+        let Some(ctx) = self.comm.clone() else { return };
+        if !ctx.shard {
+            return;
+        }
+        let slots = self.opt.num_state();
+        if slots == 0 {
+            return;
+        }
+        let Some(bs) = &self.graph.store.buckets else { return };
+        for (unit, b) in bs.buckets.iter().enumerate() {
+            let total = b.data.read().unwrap().num_elems();
+            let (off, len) = shard_span(total, ctx.comm.world(), ctx.rank);
+            let mut gathered: Vec<Tensor> = Vec::with_capacity(slots);
+            for slot in 0..slots {
+                let mut buf = vec![0.0f32; total];
+                {
+                    let bd = b.data.read().unwrap();
+                    if slot < bd.state.len() && len > 0 {
+                        let soff = bd.state_range.0;
+                        buf[off..off + len]
+                            .copy_from_slice(&bd.state[slot].data()[off - soff..off - soff + len]);
+                    }
+                }
+                ctx.comm.all_gather(ctx.rank, tags::state(unit, slot), &mut buf);
+                gathered.push(Tensor::from_vec(&[total], buf));
+            }
+            let mut bd = b.data.write().unwrap();
+            bd.state = gathered;
+            bd.state_range = (0, total);
+        }
+    }
+
+    /// Bring the replica to a checkpointable boundary: flush pending
+    /// forward-fusion updates and gather sharded optimizer state. Under
+    /// DDP all ranks must call this together (both halves may issue
+    /// collectives); afterwards rank 0 can `checkpoint::save`.
+    pub fn prepare_checkpoint(&mut self) {
+        self.flush_pending();
+        self.gather_sharded_state();
+    }
+
     /// Run one forward pass, returning per-node activations and ctxs plus
     /// update time spent inside forward (FF). `train` gates FF updates.
     fn forward_pass(
@@ -279,7 +450,7 @@ impl Executor {
                     self.counters.flag_checks += 1;
                     let unit = self.graph.store.unit_of(pid);
                     if !self.updated[unit] {
-                        opt_in_fwd += self.update_unit_inline(unit, pending_step);
+                        opt_in_fwd += self.ff_update_unit(unit, pending_step);
                         self.updated[unit] = true;
                     }
                 }
@@ -330,7 +501,7 @@ impl Executor {
             let step = self.step;
             for unit in 0..self.graph.store.num_units() {
                 if !self.updated[unit] {
-                    stats.opt_in_forward += self.update_unit_inline(unit, step);
+                    stats.opt_in_forward += self.ff_update_unit(unit, step);
                     self.updated[unit] = true;
                 }
             }
@@ -417,18 +588,24 @@ impl Executor {
                     self.count[unit] -= 1;
                     if self.count[unit] == 0 && boundary {
                         if let Some(pool) = &self.pool {
-                            let target = match &self.graph.store.buckets {
-                                Some(bs) => JobTarget::Bucket(Arc::clone(&bs.buckets[unit])),
-                                None => JobTarget::Param(Arc::clone(self.graph.store.get(pid))),
-                            };
+                            let target = self.job_target(unit);
+                            let comm = self
+                                .comm
+                                .as_ref()
+                                .map(|ctx| CommPlan { ctx: ctx.clone(), unit });
                             pool.submit(Job {
                                 target,
                                 opt: Arc::clone(&self.opt),
                                 hyper: self.hyper_at(this_step),
                                 step: this_step,
                                 scale: self.global_scale,
+                                comm,
                             });
                             self.counters.updates_dispatched += 1;
+                        } else if self.comm.is_some() {
+                            // schedule-integrated reduce: the collective
+                            // fires at the drain point, inline
+                            opt_in_bwd += self.comm_update_unit(unit, this_step, true);
                         } else {
                             opt_in_bwd += self.update_unit_inline(unit, this_step);
                         }
@@ -437,8 +614,17 @@ impl Executor {
             }
         }
         if let Some(pool) = &self.pool {
+            // job execution time before this instant ran while backward
+            // was still producing gradients for later units
+            let bwd_compute_end = Instant::now();
             pool.wait_all();
             opt_in_bwd += pool.take_busy();
+            for (start, end) in pool.take_spans() {
+                let capped = if end < bwd_compute_end { end } else { bwd_compute_end };
+                self.total_job_ns += end.duration_since(start).as_nanos() as u64;
+                self.overlapped_job_ns +=
+                    capped.saturating_duration_since(start).as_nanos() as u64;
+            }
         }
         stats.backward = t1.elapsed();
         stats.opt_in_backward = opt_in_bwd;
@@ -447,25 +633,46 @@ impl Executor {
 
         // global-information transform: compute clip scale from the full
         // gradient set (valid for baseline and FF; BF was rejected above).
-        if self.opt.needs_global() {
+        // Under DDP the scale must come from the *reduced* gradients, so
+        // the bulk reduce happens first and the schedule arms below skip
+        // their own reduce.
+        let reduced_for_global = if self.opt.needs_global() {
+            let pre_reduced = self.comm.is_some() && self.is_update_step(this_step);
+            if pre_reduced {
+                self.comm_reduce_all_grads();
+            }
             let norm = self.graph.store.global_grad_norm();
             let max_norm = self.opt.global_max_norm();
             self.global_scale = if norm > max_norm { max_norm / norm } else { 1.0 };
-        }
+            pre_reduced
+        } else {
+            false
+        };
 
         // ---- standalone optimizer stage (baseline only) ----
         match self.cfg.schedule {
             ScheduleKind::Baseline => {
                 if self.is_update_step(this_step) {
                     let t2 = Instant::now();
-                    for unit in 0..self.graph.store.num_units() {
-                        self.update_unit_inline(unit, this_step);
+                    if self.comm.is_some() {
+                        for unit in 0..self.graph.store.num_units() {
+                            self.comm_update_unit(unit, this_step, !reduced_for_global);
+                        }
+                    } else {
+                        for unit in 0..self.graph.store.num_units() {
+                            self.update_unit_inline(unit, this_step);
+                        }
                     }
                     stats.optimizer = t2.elapsed();
                 }
             }
             ScheduleKind::ForwardFusion => {
                 if self.is_update_step(this_step) {
+                    // DDP: reduce now, in bulk; the updates stay lazy and
+                    // consume the reduced gradients next forward.
+                    if self.comm.is_some() && !reduced_for_global {
+                        self.comm_reduce_all_grads();
+                    }
                     self.has_pending = true;
                 }
                 // Alg. 2: reset flags during backward ("f_i.updated ← False").
@@ -482,11 +689,13 @@ impl Executor {
     /// completed steps — used before checkpointing / equivalence checks.
     pub fn flush_pending(&mut self) {
         if self.cfg.schedule == ScheduleKind::ForwardFusion && self.has_pending {
-            // grads belong to the already-counted step `self.step`
+            // grads belong to the already-counted step `self.step`. Under
+            // DDP all ranks flush together (sharded flushes all-gather),
+            // in the same deterministic unit order.
             let step = self.step;
             for unit in 0..self.graph.store.num_units() {
                 if !self.updated[unit] {
-                    self.update_unit_inline(unit, step);
+                    self.ff_update_unit(unit, step);
                     self.updated[unit] = true;
                 }
             }
@@ -497,96 +706,6 @@ impl Executor {
             self.has_pending = false;
             self.updated.iter_mut().for_each(|f| *f = false);
         }
-    }
-
-    /// Forward + backward only: accumulate gradients without applying any
-    /// update and without bumping the step counter. Used by the DDP
-    /// coordinator (§C.5), where the schedule instead governs where the
-    /// all-reduce and the update land.
-    pub fn forward_backward(&mut self, externals: &[Tensor]) -> f32 {
-        let (acts, ctxs, _) = self.forward_pass(externals, false);
-        let loss_node = self.graph.loss_node.expect("loss node set");
-        let loss = acts[loss_node].as_ref().unwrap().data()[0];
-        self.last_loss = loss;
-        let n = self.graph.nodes.len();
-        let mut grads: Vec<Option<Tensor>> = (0..n).map(|_| None).collect();
-        grads[loss_node] = Some(Tensor::from_vec(&[1], vec![1.0]));
-        for i in (0..n).rev() {
-            let Some(gout) = grads[i].take() else { continue };
-            let node = &self.graph.nodes[i];
-            let input_refs: Vec<&Tensor> = node
-                .inputs
-                .iter()
-                .map(|s| match s {
-                    Src::Node(id) => acts[*id].as_ref().expect("alive"),
-                    Src::External(e) => &externals[*e],
-                })
-                .collect();
-            let guards: Vec<_> = node
-                .params
-                .iter()
-                .map(|p| self.graph.store.get(*p).data.read().unwrap())
-                .collect();
-            let param_refs: Vec<&Tensor> = guards.iter().map(|g| &g.value).collect();
-            let og = node.op.backward(&gout, &input_refs, &param_refs, &ctxs[i]);
-            drop(guards);
-            for (k, src) in self.graph.nodes[i].inputs.iter().enumerate() {
-                if let (Src::Node(dst), Some(g)) = (src, og.inputs.get(k).and_then(|x| x.as_ref()))
-                {
-                    match &mut grads[*dst] {
-                        Some(acc) => acc.axpy(1.0, g),
-                        slot @ None => *slot = Some(g.clone()),
-                    }
-                }
-            }
-            let pids: Vec<ParamId> = self.graph.nodes[i].params.clone();
-            for (k, pid) in pids.iter().enumerate() {
-                self.graph.store.accum_grad(*pid, &og.params[k]);
-            }
-        }
-        loss
-    }
-
-    /// Apply the optimizer to a single parameter at the *next* step index
-    /// (DDP backward-fusion path: update fused with its all-reduce).
-    /// Scattered storage only — with buckets, use
-    /// [`Executor::apply_update_unit`] on the owning bucket.
-    pub fn apply_update(&mut self, pid: ParamId) {
-        assert!(
-            !self.graph.store.is_bucketed(),
-            "apply_update is per-parameter; bucketed stores update whole buckets \
-             (apply_update_unit)"
-        );
-        self.apply_update_unit(pid);
-    }
-
-    /// Apply the optimizer to one schedulable unit — a bucket when
-    /// bucketed, a parameter otherwise — at the *next* step index (DDP
-    /// backward-fusion path: update fused with the unit's all-reduce).
-    pub fn apply_update_unit(&mut self, unit: usize) {
-        let step = self.step + 1;
-        self.update_unit_inline(unit, step);
-    }
-
-    /// Apply the optimizer to every unit and advance the step counter
-    /// (DDP baseline path after the all-reduce).
-    pub fn apply_all_updates(&mut self) {
-        let step = self.step + 1;
-        if self.opt.needs_global() {
-            let norm = self.graph.store.global_grad_norm();
-            let max_norm = self.opt.global_max_norm();
-            self.global_scale = if norm > max_norm { max_norm / norm } else { 1.0 };
-        }
-        for unit in 0..self.graph.store.num_units() {
-            self.update_unit_inline(unit, step);
-        }
-        self.step = step;
-    }
-
-    /// Advance the step counter without updating (DDP backward-fusion,
-    /// where `apply_update` already ran per parameter).
-    pub fn advance_step(&mut self) {
-        self.step += 1;
     }
 
     /// Pure forward evaluation (no updates, no bookkeeping).

@@ -3,10 +3,24 @@
 //! the paper's parallelism claim (§3, Fig. 1d). A job updates either a
 //! single scattered parameter or a whole flat bucket
 //! ([`crate::optim::bucket`]) in one fused pass.
+//!
+//! With a [`CommPlan`] attached (DDP), a job becomes *reduce-then-update*:
+//! it first averages the unit's gradients across replicas through the
+//! [`crate::comm`] subsystem, then runs the update — and under ZeRO-1
+//! sharding it reduce-scatters, updates only this rank's shard, and
+//! all-gathers the refreshed values. Because the collective sessions are
+//! tag-matched, two ranks' pools may retire buckets in different orders
+//! without deadlock; the pool records each job's `(started, finished)`
+//! execution span so the executor can measure how much of the
+//! comm+update work genuinely overlapped backward.
 
+use crate::comm::{tags, CommCtx};
 use crate::graph::ParamRef;
-use crate::optim::bucket::{apply_bucket_update, BucketRef};
+use crate::optim::bucket::{
+    apply_bucket_update, apply_bucket_update_range, member_overlap, BucketData, BucketRef,
+};
 use crate::optim::{Hyper, Optimizer};
+use crate::tensor::flat::shard_span;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -18,6 +32,16 @@ pub enum JobTarget {
     Param(ParamRef),
     /// A whole flat bucket (fused multi-parameter update).
     Bucket(BucketRef),
+}
+
+/// Collective participation attached to a job (DDP): which unit's tags
+/// to meet on, and this rank's communicator handle.
+pub struct CommPlan {
+    /// Communicator + rank + sharding mode.
+    pub ctx: CommCtx,
+    /// Schedulable unit index — the tag namespace for this job's
+    /// collectives.
+    pub unit: usize,
 }
 
 /// One optimizer-update job: a target unit plus everything needed to
@@ -33,17 +57,133 @@ pub struct Job {
     pub step: u64,
     /// Global-information scale (grad-clip factor), 1.0 otherwise.
     pub scale: f32,
+    /// When set, reduce the unit's gradients across replicas before the
+    /// update (and gather sharded values after it).
+    pub comm: Option<CommPlan>,
 }
 
 impl Job {
     fn run(self) {
-        match &self.target {
-            JobTarget::Param(param) => {
-                let mut pd = param.data.write().unwrap();
-                self.opt.update(self.step, &mut pd, &self.hyper, self.scale);
+        match &self.comm {
+            Some(plan) => run_comm_update(
+                &plan.ctx,
+                plan.unit,
+                &self.target,
+                self.opt.as_ref(),
+                self.step,
+                &self.hyper,
+                self.scale,
+                true,
+            ),
+            None => match &self.target {
+                JobTarget::Param(param) => {
+                    let mut pd = param.data.write().unwrap();
+                    self.opt.update(self.step, &mut pd, &self.hyper, self.scale);
+                }
+                JobTarget::Bucket(bucket) => {
+                    apply_bucket_update(
+                        bucket,
+                        self.opt.as_ref(),
+                        self.step,
+                        &self.hyper,
+                        self.scale,
+                    );
+                }
+            },
+        }
+    }
+}
+
+/// Copy this rank's `[offset, offset + len)` region of the member values
+/// into `buf` (bucket lock held by the caller; member locks in order).
+fn values_to_flat(bd: &BucketData, buf: &mut [f32], offset: usize, len: usize) {
+    for m in &bd.members {
+        let Some((a, b)) = member_overlap(m, offset, len) else { continue };
+        let pd = m.param.data.read().unwrap();
+        buf[a..b].copy_from_slice(&pd.value.data()[a - m.offset..b - m.offset]);
+    }
+}
+
+/// Write the gathered full flat value buffer back into every member's
+/// value tensor (this rank's own shard round-trips bit-identically).
+fn flat_to_values(bd: &BucketData, buf: &[f32]) {
+    for m in &bd.members {
+        let mut pd = m.param.data.write().unwrap();
+        pd.value
+            .data_mut()
+            .copy_from_slice(&buf[m.offset..m.offset + m.len]);
+    }
+}
+
+/// The shared reduce-then-update path for one schedulable unit, used by
+/// the inline schedule arms (baseline stage, backward-fusion with no
+/// pool) and by pool comm jobs alike.
+///
+/// * Unsharded: all-reduce the unit's gradients (when `do_reduce`), then
+///   run the ordinary full update.
+/// * ZeRO-1 (`ctx.shard`, buckets only): reduce-scatter the bucket's
+///   gradients, update only this rank's shard
+///   ([`apply_bucket_update_range`] — 1/W of the update FLOPs and
+///   optimizer state), zero the stale non-shard gradients, and
+///   all-gather the refreshed parameter values.
+///
+/// `do_reduce` is false on paths whose gradients were already reduced
+/// (forward-fusion reduces in bulk after backward, lazy-updates next
+/// forward).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_comm_update(
+    ctx: &CommCtx,
+    unit: usize,
+    target: &JobTarget,
+    opt: &dyn Optimizer,
+    step: u64,
+    hp: &Hyper,
+    scale: f32,
+    do_reduce: bool,
+) {
+    let rank = ctx.rank;
+    match target {
+        JobTarget::Param(param) => {
+            // Scattered storage: sharding is rejected at set_comm, so
+            // this is always the replicated path.
+            let mut pd = param.data.write().unwrap();
+            if do_reduce {
+                ctx.comm.all_reduce_mean(rank, tags::grad(unit), pd.grad.data_mut());
             }
-            JobTarget::Bucket(bucket) => {
-                apply_bucket_update(bucket, self.opt.as_ref(), self.step, &self.hyper, self.scale);
+            opt.update(step, &mut pd, hp, scale);
+        }
+        JobTarget::Bucket(bucket) => {
+            if ctx.shard {
+                let total = bucket.data.read().unwrap().num_elems();
+                let (off, len) = shard_span(total, ctx.comm.world(), rank);
+                if do_reduce {
+                    let mut bd = bucket.data.write().unwrap();
+                    ctx.comm
+                        .reduce_scatter_mean(rank, tags::grad(unit), bd.grads.data_mut());
+                }
+                apply_bucket_update_range(bucket, opt, step, hp, scale, off, len);
+                {
+                    // the complement still holds local unreduced grads
+                    let mut bd = bucket.data.write().unwrap();
+                    bd.zero_grads_outside(off, len);
+                }
+                let mut buf = vec![0.0f32; total];
+                {
+                    let bd = bucket.data.read().unwrap();
+                    values_to_flat(&bd, &mut buf, off, len);
+                }
+                ctx.comm.all_gather(rank, tags::value(unit), &mut buf);
+                {
+                    let bd = bucket.data.read().unwrap();
+                    flat_to_values(&bd, &buf);
+                }
+            } else {
+                if do_reduce {
+                    let mut bd = bucket.data.write().unwrap();
+                    ctx.comm
+                        .all_reduce_mean(rank, tags::grad(unit), bd.grads.data_mut());
+                }
+                apply_bucket_update(bucket, opt, step, hp, scale);
             }
         }
     }
@@ -61,6 +201,11 @@ struct Shared {
     /// Sum of per-job wallclock across workers, in nanos (the "hidden"
     /// optimizer time that overlapped backward).
     busy_ns: Mutex<u64>,
+    /// Per-job `(started, finished)` instants (worker execution time —
+    /// queue wait excluded, so a job that only *queued* during backward
+    /// never counts as overlap), drained by the executor for
+    /// comm/compute overlap accounting.
+    spans: Mutex<Vec<(Instant, Instant)>>,
 }
 
 /// A fixed pool of update workers fed from one shared queue.
@@ -82,6 +227,7 @@ impl UpdatePool {
             pending: Mutex::new(0),
             done: Condvar::new(),
             busy_ns: Mutex::new(0),
+            spans: Mutex::new(Vec::new()),
         });
         let handles = (0..workers)
             .map(|_| {
@@ -93,8 +239,10 @@ impl UpdatePool {
                         Ok(Msg::Run(job)) => {
                             let t0 = Instant::now();
                             job.run();
-                            let ns = t0.elapsed().as_nanos() as u64;
+                            let end = Instant::now();
+                            let ns = (end - t0).as_nanos() as u64;
                             *shared.busy_ns.lock().unwrap() += ns;
+                            shared.spans.lock().unwrap().push((t0, end));
                             let mut p = shared.pending.lock().unwrap();
                             *p -= 1;
                             if *p == 0 {
@@ -133,6 +281,12 @@ impl UpdatePool {
         *b = 0;
         d
     }
+
+    /// Drain the per-job `(started, finished)` execution spans recorded
+    /// since the last call.
+    pub fn take_spans(&self) -> Vec<(Instant, Instant)> {
+        std::mem::take(&mut *self.shared.spans.lock().unwrap())
+    }
 }
 
 impl Drop for UpdatePool {
@@ -165,6 +319,10 @@ mod tests {
         })
     }
 
+    fn mk_job(target: JobTarget, opt: Arc<dyn Optimizer>, hp: Hyper, step: u64) -> Job {
+        Job { target, opt, hyper: hp, step, scale: 1.0, comm: None }
+    }
+
     #[test]
     fn updates_applied_and_waited() {
         let pool = UpdatePool::new(4);
@@ -172,13 +330,7 @@ mod tests {
         let opt: Arc<dyn Optimizer> = Arc::new(Sgd);
         let hp = Hyper { lr: 1.0, weight_decay: 0.0, ..Hyper::default() };
         for p in &params {
-            pool.submit(Job {
-                target: JobTarget::Param(Arc::clone(p)),
-                opt: Arc::clone(&opt),
-                hyper: hp.clone(),
-                step: 1,
-                scale: 1.0,
-            });
+            pool.submit(mk_job(JobTarget::Param(Arc::clone(p)), Arc::clone(&opt), hp.clone(), 1));
         }
         pool.wait_all();
         for p in &params {
@@ -188,6 +340,8 @@ mod tests {
         }
         assert!(pool.take_busy() > Duration::ZERO);
         assert_eq!(pool.take_busy(), Duration::ZERO, "busy resets");
+        assert_eq!(pool.take_spans().len(), 16, "one span per job");
+        assert!(pool.take_spans().is_empty(), "spans drain");
     }
 
     #[test]
@@ -204,13 +358,7 @@ mod tests {
         let hp = Hyper { lr: 0.5, weight_decay: 0.0, ..Hyper::default() };
         for round in 0..3 {
             p.data.write().unwrap().grad = Tensor::full(&[8], 1.0);
-            pool.submit(Job {
-                target: JobTarget::Param(Arc::clone(&p)),
-                opt: Arc::clone(&opt),
-                hyper: hp.clone(),
-                step: round + 1,
-                scale: 1.0,
-            });
+            pool.submit(mk_job(JobTarget::Param(Arc::clone(&p)), Arc::clone(&opt), hp.clone(), round + 1));
             pool.wait_all();
         }
         assert!((p.data.read().unwrap().value.data()[0] - (1.0 - 1.5)).abs() < 1e-6);
@@ -227,16 +375,62 @@ mod tests {
         buckets[0].data.write().unwrap().grads = Tensor::full(&[96], 1.0);
         let pool = UpdatePool::new(2);
         let opt: Arc<dyn Optimizer> = Arc::new(Sgd);
-        pool.submit(Job {
-            target: JobTarget::Bucket(Arc::clone(&buckets[0])),
+        pool.submit(mk_job(
+            JobTarget::Bucket(Arc::clone(&buckets[0])),
             opt,
-            hyper: Hyper { lr: 1.0, weight_decay: 0.0, ..Hyper::default() },
-            step: 1,
-            scale: 1.0,
-        });
+            Hyper { lr: 1.0, weight_decay: 0.0, ..Hyper::default() },
+            1,
+        ));
         pool.wait_all();
         assert_eq!(store.params[0].data.read().unwrap().value.data()[0], 0.0);
         assert_eq!(store.params[1].data.read().unwrap().value.data()[0], 1.0);
         assert!(buckets[0].data.read().unwrap().grads.data().iter().all(|g| *g == 0.0));
+    }
+
+    /// Two "ranks" (threads) drive comm jobs through their own pools:
+    /// the reduce-then-update must average gradients and keep replicas
+    /// bit-identical, with sharded and unsharded modes agreeing.
+    #[test]
+    fn comm_jobs_reduce_then_update_across_ranks() {
+        use crate::comm::{CommCtx, SharedMemComm};
+        use crate::graph::ParamStore;
+        use crate::optim::bucket::build_buckets;
+        let world = 2;
+        for shard in [false, true] {
+            let comm = Arc::new(SharedMemComm::new(world));
+            let outs = Arc::new(Mutex::new(vec![Vec::new(); world]));
+            std::thread::scope(|s| {
+                for rank in 0..world {
+                    let comm = Arc::clone(&comm);
+                    let outs = Arc::clone(&outs);
+                    s.spawn(move || {
+                        let mut store = ParamStore::default();
+                        store.add("a", Tensor::full(&[4], 1.0));
+                        store.add("b", Tensor::full(&[2], 2.0));
+                        let (buckets, _) = build_buckets(&store.params, 1 << 20);
+                        // rank-dependent grads: mean is 1.0 everywhere
+                        buckets[0].data.write().unwrap().grads =
+                            Tensor::full(&[6], if rank == 0 { 0.5 } else { 1.5 });
+                        let ctx = CommCtx { comm, rank, shard };
+                        let pool = UpdatePool::new(1);
+                        pool.submit(Job {
+                            target: JobTarget::Bucket(Arc::clone(&buckets[0])),
+                            opt: Arc::new(Sgd),
+                            hyper: Hyper { lr: 1.0, weight_decay: 0.0, ..Hyper::default() },
+                            step: 1,
+                            scale: 1.0,
+                            comm: Some(CommPlan { ctx, unit: 0 }),
+                        });
+                        pool.wait_all();
+                        let mut vals = store.params[0].data.read().unwrap().value.data().to_vec();
+                        vals.extend_from_slice(store.params[1].data.read().unwrap().value.data());
+                        outs.lock().unwrap()[rank] = vals;
+                    });
+                }
+            });
+            let outs = outs.lock().unwrap();
+            assert_eq!(outs[0], outs[1], "replicas identical (shard={shard})");
+            assert_eq!(outs[0], vec![0.0, 0.0, 0.0, 0.0, 1.0, 1.0], "θ - lr·mean(g)");
+        }
     }
 }

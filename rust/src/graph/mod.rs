@@ -171,11 +171,18 @@ impl ParamStore {
                 let (bi, mi) = bs.loc[pid];
                 let bd = bs.buckets[bi].data.read().unwrap();
                 let m = &bd.members[mi];
+                let (soff, slen) = bd.state_range;
+                assert!(
+                    bd.state.is_empty() || (m.offset >= soff && m.offset + m.len <= soff + slen),
+                    "export_state over ZeRO-1 sharded state: gather first \
+                     (Executor::gather_sharded_state)"
+                );
                 let shape = m.param.data.read().unwrap().value.shape().to_vec();
                 bd.state
                     .iter()
                     .map(|s| {
-                        Tensor::from_vec(&shape, s.data()[m.offset..m.offset + m.len].to_vec())
+                        let a = m.offset - soff;
+                        Tensor::from_vec(&shape, s.data()[a..a + m.len].to_vec())
                     })
                     .collect()
             }
@@ -191,6 +198,13 @@ impl ParamStore {
             Some(bs) => {
                 let (bi, mi) = bs.loc[pid];
                 let mut bd = bs.buckets[bi].data.write().unwrap();
+                if bd.state_range != (0, bd.num_elems()) {
+                    return Err(format!(
+                        "import_state into bucket {bi} with sharded state coverage \
+                         {:?}; load before resharding",
+                        bd.state_range
+                    ));
+                }
                 bd.ensure_state(states.len());
                 let (offset, len) = {
                     let m = &bd.members[mi];
@@ -218,6 +232,63 @@ impl ParamStore {
                 self.params[pid].data.write().unwrap().state = states;
                 Ok(())
             }
+        }
+    }
+
+    /// Narrow every bucket's optimizer-state coverage to `rank`'s ZeRO-1
+    /// shard ([`crate::tensor::flat::shard_span`]), dropping the rest of
+    /// the allocation. Used after a checkpoint restore (which imports
+    /// full, world-size-independent state) to return a sharded replica to
+    /// its 1/W footprint; existing state must cover the shard. No-op on
+    /// scattered stores (sharded updates require buckets).
+    pub fn reshard_state(&self, world: usize, rank: usize) {
+        let Some(bs) = &self.buckets else { return };
+        for b in &bs.buckets {
+            let mut bd = b.data.write().unwrap();
+            let total = bd.num_elems();
+            let (off, len) = crate::tensor::flat::shard_span(total, world, rank);
+            if bd.state.is_empty() {
+                bd.state_range = (off, len);
+                continue;
+            }
+            let (soff, slen) = bd.state_range;
+            assert!(
+                off >= soff && off + len <= soff + slen,
+                "reshard_state: existing coverage [{soff}, {}) misses shard [{off}, {})",
+                soff + slen,
+                off + len
+            );
+            let narrowed: Vec<Tensor> = bd
+                .state
+                .iter()
+                .map(|s| Tensor::from_vec(&[len], s.data()[off - soff..off - soff + len].to_vec()))
+                .collect();
+            bd.state = narrowed;
+            bd.state_range = (off, len);
+        }
+    }
+
+    /// Bytes currently allocated to optimizer state on this replica, in
+    /// whichever layout holds it. Under ZeRO-1 sharding this is ~1/W of
+    /// the unsharded figure — the memory claim reported by `DdpReport`.
+    pub fn opt_state_bytes(&self) -> u64 {
+        match &self.buckets {
+            Some(bs) => bs
+                .buckets
+                .iter()
+                .map(|b| {
+                    let bd = b.data.read().unwrap();
+                    bd.state.iter().map(|s| s.len() * 4).sum::<usize>() as u64
+                })
+                .sum(),
+            None => self
+                .params
+                .iter()
+                .map(|p| {
+                    let pd = p.data.read().unwrap();
+                    pd.state.iter().map(|s| s.len() * 4).sum::<usize>() as u64
+                })
+                .sum(),
         }
     }
 

@@ -12,6 +12,7 @@
 #![warn(missing_docs)]
 
 pub mod checkpoint;
+pub mod comm;
 pub mod config;
 pub mod data;
 pub mod ddp;

@@ -184,11 +184,22 @@ fn cmd_ddp(args: &Args) -> anyhow::Result<()> {
         .parse()
         .map_err(|e: String| anyhow::anyhow!(e))?;
     let batch = args.usize_or("batch", 8);
-    let bucket_cap = bucket_cap_from(args);
+    let mut bucket_cap = bucket_cap_from(args);
+    // `--shard` = ZeRO-1 sharded updates; needs buckets, so default a cap
+    let shard = args.flag("shard");
+    if shard && bucket_cap.is_none() {
+        bucket_cap = Some(1 << 20);
+        println!("(--shard needs bucketed storage; defaulting --bucket-cap to 1 MiB)");
+    }
+    // `--overlap N` = N reduce-then-update worker threads per replica
+    // (backward-fusion only)
+    let overlap = args.usize_or("overlap", 0);
     println!(
-        "DDP: world={world} schedule={} steps={steps} storage={}",
+        "DDP: world={world} schedule={} steps={steps} storage={} shard={} overlap_threads={}",
         schedule.label(),
-        storage_label(bucket_cap)
+        storage_label(bucket_cap),
+        shard,
+        overlap
     );
     let report = train_ddp(
         || models::mobilenet_v2_ish(3),
@@ -199,6 +210,10 @@ fn cmd_ddp(args: &Args) -> anyhow::Result<()> {
             schedule,
             steps,
             bucket_cap_bytes: bucket_cap,
+            shard_updates: shard,
+            overlap_threads: overlap,
+            load_from: None,
+            save_to: None,
             local_batch_maker: Box::new(move |rank, step| {
                 let mut rng = XorShiftRng::new(((rank as u64) << 32) | step as u64);
                 data::image_batch(batch, 3, 16, 16, 10, &mut rng)
@@ -206,10 +221,16 @@ fn cmd_ddp(args: &Args) -> anyhow::Result<()> {
         },
     );
     println!(
-        "iter {:.2} ms | comm {:.2} MiB | {} reduces/step | final loss {:.4}",
+        "iter {:.2} ms | comm {:.2} MiB, {} rounds, {:.1} ms blocked | {:.1} rounds/step | \
+         overlap {:.0}% | opt state {:.1} KiB/replica | {} update elems/step | final loss {:.4}",
         report.iter_ms,
         report.comm_bytes as f64 / (1 << 20) as f64,
+        report.comm_rounds,
+        report.comm_wait_ms,
         report.reduces_per_step,
+        report.overlap_frac * 100.0,
+        report.opt_state_bytes as f64 / 1024.0,
+        report.update_elems_per_step,
         report.losses.last().unwrap_or(&f32::NAN)
     );
     Ok(())

@@ -50,9 +50,14 @@ pub struct BucketData {
     /// Flat gradient buffer covering every member, in member order.
     pub grads: Tensor,
     /// Flat optimizer-state buffers (one per state slot), allocated
-    /// lazily on the first bucket update, each the same length as
-    /// `grads`.
+    /// lazily on the first bucket update, each covering `state_range`.
     pub state: Vec<Tensor>,
+    /// `(offset, len)` element range of the bucket that the `state`
+    /// tensors cover. Full coverage `(0, grads.len())` in ordinary
+    /// training; a ZeRO-1 rank narrows it to its own shard so each
+    /// replica allocates only 1/W of the optimizer state (see
+    /// [`crate::comm`]). Every `state` tensor has length `state_range.1`.
+    pub state_range: (usize, usize),
     /// The members, ordered by ascending `offset` with tight packing.
     pub members: Vec<Member>,
 }
@@ -63,11 +68,48 @@ impl BucketData {
         self.grads.len()
     }
 
-    /// Grow `state` to `n` full-length zero buffers (no-op if present).
+    /// Grow `state` to `n` zero buffers covering `state_range` (no-op if
+    /// present).
     pub fn ensure_state(&mut self, n: usize) {
-        let len = self.grads.len();
+        let len = self.state_range.1;
         while self.state.len() < n {
             self.state.push(Tensor::zeros(&[len]));
+        }
+    }
+
+    /// Grow `state` to `n` zero buffers that cover at least
+    /// `[offset, offset + len)`. On the first allocation the coverage is
+    /// set to exactly that range (the ZeRO-1 shard-only allocation);
+    /// afterwards the requested range must lie inside the existing
+    /// coverage.
+    pub fn ensure_state_range(&mut self, n: usize, offset: usize, len: usize) {
+        if n == 0 {
+            return;
+        }
+        if self.state.is_empty() {
+            self.state_range = (offset, len);
+        }
+        let (soff, slen) = self.state_range;
+        assert!(
+            offset >= soff && offset + len <= soff + slen,
+            "bucket state covers [{soff}, {}) but the update needs [{offset}, {})",
+            soff + slen,
+            offset + len
+        );
+        self.ensure_state(n);
+    }
+
+    /// Zero every gradient element outside `[offset, offset + len)`.
+    /// After a ZeRO-1 reduce-scatter the complement of a rank's shard
+    /// still holds *local, unreduced* gradients; they must be cleared
+    /// before the next backward accumulates on top of them.
+    pub fn zero_grads_outside(&mut self, offset: usize, len: usize) {
+        let d = self.grads.data_mut();
+        for v in &mut d[..offset] {
+            *v = 0.0;
+        }
+        for v in &mut d[offset + len..] {
+            *v = 0.0;
         }
     }
 
@@ -200,8 +242,9 @@ pub fn build_buckets(
             })
             .collect();
         drop(guards);
+        let total = grads.len();
         buckets.push(Arc::new(Bucket {
-            data: RwLock::new(BucketData { grads, state, members }),
+            data: RwLock::new(BucketData { grads, state, state_range: (0, total), members }),
         }));
     }
     (buckets, loc)
@@ -221,8 +264,13 @@ pub fn apply_bucket_update(
     global_scale: f32,
 ) {
     let mut bd = bucket.data.write().unwrap();
+    assert_eq!(
+        bd.state_range,
+        (0, bd.num_elems()),
+        "full bucket update over sharded state; use apply_bucket_update_range"
+    );
     bd.ensure_state(opt.num_state());
-    let BucketData { grads, state, members } = &mut *bd;
+    let BucketData { grads, state, members, .. } = &mut *bd;
     let mut guards: Vec<_> = members
         .iter()
         .map(|m| m.param.data.write().unwrap())
@@ -241,6 +289,57 @@ pub fn apply_bucket_update(
             .collect(),
     };
     opt.update_bucket(step, &mut view, hp, global_scale);
+}
+
+/// The intersection of member `m`'s span with `[offset, offset + len)`,
+/// as absolute bucket-element bounds `(a, b)` — `None` when disjoint.
+/// The single copy of the shard-span ⇄ member-slice clamp arithmetic,
+/// shared by the shard update below and the value gather in
+/// [`crate::exec::pool`] (the two must never disagree mid-parameter).
+pub fn member_overlap(m: &Member, offset: usize, len: usize) -> Option<(usize, usize)> {
+    let a = offset.max(m.offset);
+    let b = (offset + len).min(m.offset + m.len);
+    (a < b).then_some((a, b))
+}
+
+/// Run one optimizer step over only `[offset, offset + len)` of a
+/// bucket's flat arena — the ZeRO-1 shard update. Walks the members
+/// overlapping the range and hands each overlap's value / grad / state
+/// sub-slices to the shared [`Optimizer::update_slices`] kernel, so a
+/// range update is bit-identical to the same region of a full bucket
+/// update (elementwise rules touch every scalar independently).
+///
+/// Lazily allocates state covering exactly the range when none exists
+/// (`BucketData::ensure_state_range`) — this is where a ZeRO-1 replica's
+/// optimizer-state footprint drops to its shard. Locks follow the module
+/// contract: bucket lock first, then member value locks in member order.
+pub fn apply_bucket_update_range(
+    bucket: &Bucket,
+    opt: &dyn Optimizer,
+    step: u64,
+    hp: &Hyper,
+    global_scale: f32,
+    offset: usize,
+    len: usize,
+) {
+    if len == 0 {
+        return;
+    }
+    let mut bd = bucket.data.write().unwrap();
+    bd.ensure_state_range(opt.num_state(), offset, len);
+    let soff = bd.state_range.0;
+    let BucketData { grads, state, members, .. } = &mut *bd;
+    for m in members.iter() {
+        let Some((a, b)) = member_overlap(m, offset, len) else { continue };
+        let mut pd = m.param.data.write().unwrap();
+        let value = &mut pd.value.data_mut()[a - m.offset..b - m.offset];
+        let grad = &mut grads.data_mut()[a..b];
+        let mut slots: Vec<&mut [f32]> = state
+            .iter_mut()
+            .map(|s| &mut s.data_mut()[a - soff..b - soff])
+            .collect();
+        opt.update_slices(step, value, grad, &mut slots, hp, global_scale);
+    }
 }
 
 #[cfg(test)]
@@ -297,5 +396,75 @@ mod tests {
         assert!(bd.grads.data().iter().all(|g| *g == 0.0), "grads reset");
         assert_eq!(store.params[0].data.read().unwrap().value.data(), &[0.5, 0.5]);
         assert_eq!(store.params[1].data.read().unwrap().value.data(), &[1.5, 1.5, 1.5]);
+    }
+
+    /// Two disjoint range updates must equal one full update exactly, and
+    /// a range that splits a member mid-tensor must still land right.
+    #[test]
+    fn range_updates_compose_to_full_update() {
+        use crate::optim::SgdMomentum;
+        let mk = || {
+            let mut store = ParamStore::default();
+            store.add("a", Tensor::full(&[3], 1.0));
+            store.add("b", Tensor::full(&[5], 2.0));
+            let (buckets, _) = build_buckets(&store.params, 1 << 20);
+            buckets[0].data.write().unwrap().grads =
+                Tensor::from_vec(&[8], (1..=8).map(|i| i as f32 * 0.1).collect());
+            (store, buckets)
+        };
+        let hp = Hyper { lr: 0.5, weight_decay: 0.0, ..Hyper::default() };
+        let (full_store, full_buckets) = mk();
+        apply_bucket_update(&full_buckets[0], &SgdMomentum, 1, &hp, 1.0);
+        let (part_store, part_buckets) = mk();
+        // split mid-member "b": [0, 5) then [5, 8)
+        apply_bucket_update_range(&part_buckets[0], &SgdMomentum, 1, &hp, 1.0, 0, 5);
+        // second range: state for [5, 8) not covered by the first alloc —
+        // use a fresh bucket to model the other rank
+        let (other_store, other_buckets) = mk();
+        apply_bucket_update_range(&other_buckets[0], &SgdMomentum, 1, &hp, 1.0, 5, 3);
+        for pid in 0..2 {
+            let f = full_store.params[pid].data.read().unwrap();
+            let p = part_store.params[pid].data.read().unwrap();
+            let o = other_store.params[pid].data.read().unwrap();
+            for (i, fv) in f.value.data().iter().enumerate() {
+                // bucket offsets: param 0 -> [0,3), param 1 -> [3,8)
+                let flat = if pid == 0 { i } else { 3 + i };
+                let got = if flat < 5 { p.value.data()[i] } else { o.value.data()[i] };
+                assert_eq!(*fv, got, "param {pid} elem {i} bit-identical");
+            }
+        }
+        // shard-only state allocation: rank covering [0,5) holds 5 elems
+        let bd = part_buckets[0].data.read().unwrap();
+        assert_eq!(bd.state_range, (0, 5));
+        assert_eq!(bd.state[0].len(), 5);
+        let bd = other_buckets[0].data.read().unwrap();
+        assert_eq!(bd.state_range, (5, 3));
+        assert_eq!(bd.state[0].len(), 3);
+    }
+
+    #[test]
+    fn zero_grads_outside_clears_complement() {
+        let mut store = ParamStore::default();
+        store.add("a", Tensor::full(&[6], 1.0));
+        let (buckets, _) = build_buckets(&store.params, 1 << 20);
+        {
+            let mut bd = buckets[0].data.write().unwrap();
+            bd.grads = Tensor::full(&[6], 2.0);
+            bd.zero_grads_outside(2, 3);
+            assert_eq!(bd.grads.data(), &[0.0, 0.0, 2.0, 2.0, 2.0, 0.0]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "the update needs")]
+    fn range_update_outside_coverage_panics() {
+        let mut store = ParamStore::default();
+        store.add("a", Tensor::full(&[8], 1.0));
+        let (buckets, _) = build_buckets(&store.params, 1 << 20);
+        let hp = Hyper::default();
+        use crate::optim::SgdMomentum;
+        apply_bucket_update_range(&buckets[0], &SgdMomentum, 1, &hp, 1.0, 0, 4);
+        // coverage is now [0, 4): updating [4, 8) must fail fast
+        apply_bucket_update_range(&buckets[0], &SgdMomentum, 1, &hp, 1.0, 4, 4);
     }
 }

@@ -21,6 +21,25 @@ pub struct Span {
     pub shape: Vec<usize>,
 }
 
+/// The contiguous region of a flat buffer of `len` elements owned by
+/// `rank` out of `world`, as `(offset, length)`. Shards tile the buffer
+/// in rank order with no gaps; when `len` does not divide evenly the
+/// remainder goes one element each to the lowest ranks, so shard sizes
+/// differ by at most one (a rank's shard may be empty when
+/// `len < world`). This is the single source of shard-span truth shared
+/// by the ZeRO-1 update path ([`crate::optim::bucket`]) and the
+/// communicator's reduce-scatter / all-gather
+/// ([`crate::comm::Communicator`]).
+pub fn shard_span(len: usize, world: usize, rank: usize) -> (usize, usize) {
+    assert!(world > 0, "shard_span: world must be positive");
+    assert!(rank < world, "shard_span: rank {rank} out of {world}");
+    let base = len / world;
+    let rem = len % world;
+    let offset = rank * base + rank.min(rem);
+    let size = base + usize::from(rank < rem);
+    (offset, size)
+}
+
 /// A contiguous packing of N member shapes: spans are tight (no padding)
 /// and ordered, so walking members in index order walks the backing
 /// buffer front to back exactly once.
@@ -162,5 +181,27 @@ mod tests {
         let l = layout();
         let mut flat = l.alloc();
         l.write(&mut flat, 0, &Tensor::zeros(&[2]));
+    }
+
+    #[test]
+    fn shard_spans_tile_the_buffer() {
+        for (len, world) in [(12usize, 4usize), (10, 4), (3, 4), (0, 2), (7, 1), (5, 5)] {
+            let mut next = 0usize;
+            for rank in 0..world {
+                let (off, sz) = shard_span(len, world, rank);
+                assert_eq!(off, next, "len {len} world {world} rank {rank}: contiguous");
+                next = off + sz;
+                // balanced: sizes differ by at most one
+                assert!(sz >= len / world && sz <= len / world + 1);
+            }
+            assert_eq!(next, len, "shards cover exactly the buffer");
+        }
+        // remainder goes to the lowest ranks
+        assert_eq!(shard_span(10, 4, 0), (0, 3));
+        assert_eq!(shard_span(10, 4, 1), (3, 3));
+        assert_eq!(shard_span(10, 4, 2), (6, 2));
+        assert_eq!(shard_span(10, 4, 3), (8, 2));
+        // a rank can own nothing
+        assert_eq!(shard_span(3, 4, 3), (3, 0));
     }
 }

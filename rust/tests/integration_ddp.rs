@@ -1,0 +1,453 @@
+//! DDP equivalence suite (tier-1): the math claims that used to live as
+//! asserts inside `benches/ddp_scaling.rs` — where CI never ran them —
+//! plus the ZeRO-1 sharding and overlap claims of the comm subsystem.
+//!
+//! * the three schedules produce identical training at every world size;
+//! * a W-replica run is **bit-identical** to a single process on the
+//!   concatenated batch (per-rank batch of 1 row, power-of-two shapes,
+//!   and the communicator's deterministic rank-order reduction make the
+//!   f32 summation trees line up exactly — see `comm` module docs);
+//! * sharded (ZeRO-1) ⇄ unsharded training is bit-identical while the
+//!   per-replica optimizer-state bytes and update elements drop to 1/W;
+//! * under backward-fusion with overlap threads, reduce jobs run while
+//!   backward is still executing (nonzero overlap fraction);
+//! * checkpoints written by a sharded run restore into unsharded,
+//!   different-world-size, and scattered-storage runs bit-identically.
+
+use optfuse::data::image_batch;
+use optfuse::ddp::{single_process_iter_ms, train_ddp, DdpConfig, DdpReport};
+use optfuse::exec::{ExecConfig, Executor};
+use optfuse::graph::{Graph, ScheduleKind, Src};
+use optfuse::models::{deep_mlp, mlp};
+use optfuse::ops::activation::Relu;
+use optfuse::ops::dense::Linear;
+use optfuse::ops::loss::MseLoss;
+use optfuse::optim::{Adam, Hyper, Optimizer, SgdMomentum};
+use optfuse::tensor::Tensor;
+use optfuse::util::XorShiftRng;
+
+/// 8 → 8 → 1 MLP with an MSE head. Every dimension is a power of two,
+/// every op is row-independent, and the final layer has one output —
+/// the construction under which DDP's rank-order mean-reduce reproduces
+/// a single process's accumulation order bit-for-bit.
+fn tiny_graph(seed: u64) -> Graph {
+    let mut rng = XorShiftRng::new(seed);
+    let mut g = Graph::new("tiny", 2);
+    let w1 = g.param("fc1.w", &[8, 8], &mut rng);
+    let l1 = g.push("fc1", Box::new(Linear::new(false)), vec![Src::External(0)], vec![w1]);
+    let r = g.push("relu", Box::new(Relu), vec![Src::Node(l1)], vec![]);
+    let w2 = g.param("fc2.w", &[8, 1], &mut rng);
+    let l2 = g.push("fc2", Box::new(Linear::new(false)), vec![Src::Node(r)], vec![w2]);
+    let loss = g.push("mse", Box::new(MseLoss), vec![Src::Node(l2), Src::External(1)], vec![]);
+    g.set_loss(loss);
+    g
+}
+
+/// One deterministic sample (x row, y target) per (rank, step).
+fn sample(rank: usize, step: usize) -> (Vec<f32>, f32) {
+    let mut rng = XorShiftRng::new(7000 + ((rank as u64) << 20) + step as u64);
+    let x = Tensor::randn(&[8], 1.0, &mut rng);
+    let y = Tensor::randn(&[1], 1.0, &mut rng);
+    (x.data().to_vec(), y.data()[0])
+}
+
+/// Rank r's batch at `step`: exactly one row.
+fn tiny_batch(rank: usize, step: usize) -> Vec<Tensor> {
+    let (x, y) = sample(rank, step);
+    vec![Tensor::from_vec(&[1, 8], x), Tensor::from_vec(&[1, 1], vec![y])]
+}
+
+/// The concatenated global batch of `world` ranks at `step`, in rank
+/// order (what a single process would see).
+fn tiny_concat_batch(world: usize, step: usize) -> Vec<Tensor> {
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for rank in 0..world {
+        let (x, y) = sample(rank, step);
+        xs.extend_from_slice(&x);
+        ys.push(y);
+    }
+    vec![Tensor::from_vec(&[world, 8], xs), Tensor::from_vec(&[world, 1], ys)]
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_tiny(
+    world: usize,
+    schedule: ScheduleKind,
+    steps: usize,
+    cap: Option<usize>,
+    shard: bool,
+    overlap: usize,
+    opt: fn() -> Box<dyn Optimizer>,
+    hyper: Hyper,
+    load: Option<std::path::PathBuf>,
+    save: Option<std::path::PathBuf>,
+    step_offset: usize,
+) -> DdpReport {
+    train_ddp(
+        || tiny_graph(3),
+        opt,
+        hyper,
+        DdpConfig {
+            world,
+            schedule,
+            steps,
+            bucket_cap_bytes: cap,
+            shard_updates: shard,
+            overlap_threads: overlap,
+            load_from: load,
+            save_to: save,
+            local_batch_maker: Box::new(move |rank, step| tiny_batch(rank, step + step_offset)),
+        },
+    )
+}
+
+fn sgd_momentum() -> Box<dyn Optimizer> {
+    Box::new(SgdMomentum)
+}
+
+fn adam() -> Box<dyn Optimizer> {
+    Box::new(Adam)
+}
+
+fn sgd_hyper() -> Hyper {
+    Hyper { lr: 0.05, weight_decay: 0.0, ..Hyper::default() }
+}
+
+fn max_param_diff(a: &[Tensor], b: &[Tensor]) -> f32 {
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| x.max_abs_diff(y))
+        .fold(0.0f32, f32::max)
+}
+
+/// Schedule axis (moved out of `benches/ddp_scaling.rs` so `cargo test`
+/// covers it): at every world size, all three schedules — and both
+/// storage layouts — produce identical losses and parameters.
+#[test]
+fn schedules_and_storage_agree_at_every_world_size() {
+    let run = |world: usize, schedule: ScheduleKind, cap: Option<usize>| {
+        train_ddp(
+            || mlp(99),
+            sgd_momentum,
+            sgd_hyper(),
+            DdpConfig {
+                world,
+                schedule,
+                steps: 3,
+                bucket_cap_bytes: cap,
+                shard_updates: false,
+                overlap_threads: 0,
+                load_from: None,
+                save_to: None,
+                local_batch_maker: Box::new(|rank, step| {
+                    let mut rng = XorShiftRng::new(((rank as u64) << 32) | step as u64);
+                    image_batch(2, 3, 16, 16, 10, &mut rng)
+                }),
+            },
+        )
+    };
+    for world in [1usize, 2, 4] {
+        let base = run(world, ScheduleKind::Baseline, None);
+        for schedule in [ScheduleKind::ForwardFusion, ScheduleKind::BackwardFusion] {
+            let r = run(world, schedule, None);
+            assert_eq!(
+                base.losses, r.losses,
+                "world {world} {schedule:?}: schedule must not change DDP math"
+            );
+            assert_eq!(
+                max_param_diff(&base.final_params, &r.final_params),
+                0.0,
+                "world {world} {schedule:?}: final params bit-identical"
+            );
+        }
+        // storage axis: bucketed collectives, same math
+        let bucketed = run(world, ScheduleKind::Baseline, Some(1 << 20));
+        assert_eq!(base.losses, bucketed.losses, "world {world}: bucketing must not change math");
+        assert_eq!(max_param_diff(&base.final_params, &bucketed.final_params), 0.0);
+        assert!(base.comm_bytes > 0);
+    }
+}
+
+/// A world-W run must be **bit-equal** to a single process training on
+/// the concatenated batch.
+#[test]
+fn ddp_matches_single_process_bitwise() {
+    let steps = 4;
+    for world in [2usize, 4] {
+        for schedule in [ScheduleKind::Baseline, ScheduleKind::BackwardFusion] {
+            let ddp = run_tiny(
+                world, schedule, steps, None, false, 0, sgd_momentum, sgd_hyper(), None, None, 0,
+            );
+            let (_, single_losses) = single_process_iter_ms(
+                || tiny_graph(3),
+                sgd_momentum,
+                sgd_hyper(),
+                steps,
+                |step| tiny_concat_batch(world, step),
+            );
+            for (s, (a, b)) in ddp.losses.iter().zip(single_losses.iter()).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "world {world} {schedule:?} step {s}: ddp {a} vs single {b}"
+                );
+            }
+            // and the weights themselves
+            let mut single = Executor::new(
+                tiny_graph(3),
+                sgd_momentum(),
+                sgd_hyper(),
+                ExecConfig { schedule: ScheduleKind::Baseline, ..Default::default() },
+            )
+            .unwrap();
+            for step in 0..steps {
+                single.train_step(&tiny_concat_batch(world, step));
+            }
+            assert_eq!(
+                max_param_diff(&ddp.final_params, &single.graph.store.snapshot()),
+                0.0,
+                "world {world} {schedule:?}: params bit-identical to single process"
+            );
+        }
+    }
+}
+
+/// The ZeRO-1 acceptance claim: at world = 4, sharded updates train
+/// bit-identically to unsharded (and to a single process), while the
+/// per-replica optimizer state and update FLOPs drop to exactly 1/4.
+#[test]
+fn sharded_updates_match_unsharded_bitwise_with_quarter_footprint() {
+    let world = 4;
+    let steps = 4;
+    let cap = Some(200); // fc1.w (256 B) oversized → own bucket; fc2.w its own
+    for schedule in [ScheduleKind::Baseline, ScheduleKind::BackwardFusion] {
+        let unsharded = run_tiny(
+            world, schedule, steps, cap, false, 0, adam, Hyper::default(), None, None, 0,
+        );
+        let sharded = run_tiny(
+            world, schedule, steps, cap, true, 0, adam, Hyper::default(), None, None, 0,
+        );
+        assert_eq!(
+            unsharded.losses, sharded.losses,
+            "{schedule:?}: sharding must not change the math"
+        );
+        assert_eq!(
+            max_param_diff(&unsharded.final_params, &sharded.final_params),
+            0.0,
+            "{schedule:?}: final params bit-identical"
+        );
+        // Adam: 2 state slots over 64 + 8 params; both divisible by 4
+        assert_eq!(unsharded.opt_state_bytes, (64 + 8) * 2 * 4);
+        assert_eq!(
+            sharded.opt_state_bytes * world as u64,
+            unsharded.opt_state_bytes,
+            "{schedule:?}: optimizer-state bytes drop to 1/W per replica"
+        );
+        assert_eq!(unsharded.update_elems_per_step, 72);
+        assert_eq!(
+            sharded.update_elems_per_step * world,
+            unsharded.update_elems_per_step,
+            "{schedule:?}: update FLOPs drop to 1/W per replica"
+        );
+        // sharding adds the value all-gather round per bucket
+        assert!(sharded.reduces_per_step > unsharded.reduces_per_step);
+    }
+    // and the sharded run still equals a single process on the global batch
+    let sharded = run_tiny(
+        world,
+        ScheduleKind::Baseline,
+        steps,
+        cap,
+        true,
+        0,
+        adam,
+        Hyper::default(),
+        None,
+        None,
+        0,
+    );
+    let (_, single_losses) = single_process_iter_ms(
+        || tiny_graph(3),
+        adam,
+        Hyper::default(),
+        steps,
+        |step| tiny_concat_batch(world, step),
+    );
+    for (s, (a, b)) in sharded.losses.iter().zip(single_losses.iter()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "sharded step {s}: {a} vs single {b}");
+    }
+}
+
+/// Collective-granularity axis (moved from the bench): bucketing cuts
+/// rounds per step without changing the math. Rounds come from the
+/// unified comm accounting, which includes the loss reduce.
+#[test]
+fn bucketed_storage_cuts_collective_rounds() {
+    let run = |cap: Option<usize>| {
+        train_ddp(
+            || mlp(42),
+            sgd_momentum,
+            sgd_hyper(),
+            DdpConfig {
+                world: 2,
+                schedule: ScheduleKind::Baseline,
+                steps: 3,
+                bucket_cap_bytes: cap,
+                shard_updates: false,
+                overlap_threads: 0,
+                load_from: None,
+                save_to: None,
+                local_batch_maker: Box::new(|rank, step| {
+                    let mut rng = XorShiftRng::new(((rank as u64) << 32) | step as u64);
+                    image_batch(2, 3, 16, 16, 10, &mut rng)
+                }),
+            },
+        )
+    };
+    let scattered = run(None);
+    let bucketed = run(Some(1 << 20));
+    assert_eq!(scattered.losses, bucketed.losses, "bucketing must not change DDP math");
+    assert!(
+        bucketed.reduces_per_step < scattered.reduces_per_step,
+        "buckets must cut the collective count ({} vs {})",
+        bucketed.reduces_per_step,
+        scattered.reduces_per_step
+    );
+    // mlp has 6 params: scattered = 6 grad reduces + 1 loss reduce
+    assert_eq!(scattered.reduces_per_step, 7.0);
+}
+
+/// The overlap acceptance claim: under backward-fusion with worker
+/// threads, reduce-then-update jobs are issued at the refcount drain
+/// points and run while backward is still executing.
+#[test]
+fn backward_fusion_overlaps_reduce_with_backward() {
+    // deep_mlp's 26 layers each fill one 256 KiB bucket, so buckets
+    // drain one by one as backward walks the layers — the early-drained
+    // (deep) buckets' reduce jobs run while the shallow layers are
+    // still back-propagating
+    let run = |shard: bool, overlap: usize| {
+        train_ddp(
+            || deep_mlp(5),
+            sgd_momentum,
+            sgd_hyper(),
+            DdpConfig {
+                world: 2,
+                schedule: ScheduleKind::BackwardFusion,
+                steps: 2,
+                bucket_cap_bytes: Some(1 << 18),
+                shard_updates: shard,
+                overlap_threads: overlap,
+                load_from: None,
+                save_to: None,
+                local_batch_maker: Box::new(|rank, step| {
+                    let mut rng = XorShiftRng::new(((rank as u64) << 32) | step as u64);
+                    image_batch(2, 3, 16, 16, 10, &mut rng)
+                }),
+            },
+        )
+    };
+    let inline = run(false, 0);
+    assert_eq!(inline.overlap_frac, 0.0, "no pool, no overlap");
+    let overlapped = run(false, 2);
+    assert!(
+        overlapped.overlap_frac > 0.0,
+        "reduce jobs must run while backward continues (got {})",
+        overlapped.overlap_frac
+    );
+    assert_eq!(inline.losses, overlapped.losses, "overlap must not change the math");
+    // ZeRO-1 sharded jobs overlap too
+    let sharded = run(true, 2);
+    assert!(sharded.overlap_frac > 0.0);
+    assert_eq!(inline.losses, sharded.losses, "sharded overlap must not change the math");
+}
+
+/// Checkpoints from a sharded run are world-size- and layout-portable:
+/// resume sharded, unsharded, and single-process-scattered, all
+/// bit-identical to the uninterrupted run.
+#[test]
+fn sharded_checkpoints_are_world_and_layout_portable() {
+    let dir = std::env::temp_dir().join("optfuse_ddp_ckpt_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("zero1.ckpt");
+    let cap = Some(200);
+
+    // uninterrupted reference: world=2, sharded, 4 steps
+    let full = run_tiny(
+        2, ScheduleKind::Baseline, 4, cap, true, 0, adam, Hyper::default(), None, None, 0,
+    );
+
+    // first half, saving a gathered (full-state) checkpoint at step 2
+    let first = run_tiny(
+        2,
+        ScheduleKind::Baseline,
+        2,
+        cap,
+        true,
+        0,
+        adam,
+        Hyper::default(),
+        None,
+        Some(path.clone()),
+        0,
+    );
+    assert_eq!(&full.losses[..2], first.losses.as_slice());
+
+    // resume sharded at the same world size
+    let resharded = run_tiny(
+        2,
+        ScheduleKind::Baseline,
+        2,
+        cap,
+        true,
+        0,
+        adam,
+        Hyper::default(),
+        Some(path.clone()),
+        None,
+        2,
+    );
+    assert_eq!(&full.losses[2..], resharded.losses.as_slice(), "sharded resume");
+
+    // resume unsharded (layout portability)
+    let unsharded = run_tiny(
+        2,
+        ScheduleKind::Baseline,
+        2,
+        cap,
+        false,
+        0,
+        adam,
+        Hyper::default(),
+        Some(path.clone()),
+        None,
+        2,
+    );
+    assert_eq!(&full.losses[2..], unsharded.losses.as_slice(), "unsharded resume");
+
+    // resume as a single scattered-storage process on the concatenated
+    // batch (world-size AND storage-layout portability at once)
+    let single = train_ddp(
+        || tiny_graph(3),
+        adam,
+        Hyper::default(),
+        DdpConfig {
+            world: 1,
+            schedule: ScheduleKind::Baseline,
+            steps: 2,
+            bucket_cap_bytes: None,
+            shard_updates: false,
+            overlap_threads: 0,
+            load_from: Some(path.clone()),
+            save_to: None,
+            local_batch_maker: Box::new(|_rank, step| tiny_concat_batch(2, step + 2)),
+        },
+    );
+    for (s, (a, b)) in full.losses[2..].iter().zip(single.losses.iter()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "single-process resume step {s}: {a} vs {b}");
+    }
+    assert_eq!(max_param_diff(&full.final_params, &resharded.final_params), 0.0);
+    assert_eq!(max_param_diff(&full.final_params, &unsharded.final_params), 0.0);
+    assert_eq!(max_param_diff(&full.final_params, &single.final_params), 0.0);
+}
