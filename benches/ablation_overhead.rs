@@ -29,7 +29,12 @@ fn main() {
         models::deep_mlp(1),
         optim::by_name("adam").unwrap(),
         Hyper::default(),
-        ExecConfig { schedule: ScheduleKind::BackwardFusion, threads: 0, race_guard: true, ..Default::default() },
+        ExecConfig {
+            schedule: ScheduleKind::BackwardFusion,
+            threads: 0,
+            race_guard: true,
+            ..Default::default()
+        },
     )
     .unwrap();
     let mut rng = XorShiftRng::new(2);
@@ -58,7 +63,12 @@ fn main() {
             models::deep_mlp(1),
             optim::by_name("sgd").unwrap(),
             Hyper::default(),
-            ExecConfig { schedule: ScheduleKind::BackwardFusion, threads: 0, race_guard: guard, ..Default::default() },
+            ExecConfig {
+                schedule: ScheduleKind::BackwardFusion,
+                threads: 0,
+                race_guard: guard,
+                ..Default::default()
+            },
         )
         .unwrap();
         let mut rng = XorShiftRng::new(3);
@@ -72,13 +82,17 @@ fn main() {
             if guard { "correct ordering" } else { "NAIVE — corrupts ∂L/∂x, do not use" }
         );
     }
-    println!("  → the safe ordering costs nothing: it only *positions* the update after the node's backward");
+    println!(
+        "  → the safe ordering costs nothing: it only *positions* the update after the \
+         node's backward"
+    );
 
     // (c) pool width (single-core host: expect flat/overhead-only — the
     //     multi-core benefit is quantified by memsim's overlap model)
     println!("\n(c) BF worker-pool width (deep_mlp bs=4; 1-core host):");
     for threads in [0usize, 1, 2, 4] {
-        let bf = common::measure(models::deep_mlp, ScheduleKind::BackwardFusion, "adam", 4, 6, threads);
+        let bf =
+            common::measure(models::deep_mlp, ScheduleKind::BackwardFusion, "adam", 4, 6, threads);
         println!("  threads={threads}   {:.2} ms/iter", bf.iter_ms());
     }
 

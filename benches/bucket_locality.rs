@@ -59,8 +59,14 @@ fn main() {
         "flat buckets cut per-parameter dispatch/lock/allocation overhead (Bagua FusedOptimizer, \
          IPEX optimizer fusion)",
     );
+    // `--smoke` / OPTFUSE_BENCH_SMOKE=1: reduced zoo and step count so CI
+    // can run the harness per-PR and archive the table as an artifact
+    let smoke = common::smoke_mode();
+    if smoke {
+        println!("  (smoke mode: reduced zoo/steps for CI)");
+    }
 
-    let zoo: &[(&str, fn(u64) -> Graph)] = &[
+    let full_zoo: &[(&str, fn(u64) -> Graph)] = &[
         ("mobilenet_v2_ish", optfuse::models::mobilenet_v2_ish),
         ("densenet_ish", optfuse::models::densenet_ish),
         ("resnet_ish", optfuse::models::resnet_ish),
@@ -68,13 +74,14 @@ fn main() {
         ("deep_mlp", optfuse::models::deep_mlp),
         ("wide_mlp", optfuse::models::wide_mlp),
     ];
+    let zoo = if smoke { &full_zoo[..2] } else { full_zoo };
     let caps: &[(&str, Option<usize>)] = &[
         ("scattered", None),
         ("64KiB", Some(64 << 10)),
         ("1MiB", Some(1 << 20)),
         ("one-bucket", Some(usize::MAX)),
     ];
-    let (batch, steps) = (16, 5);
+    let (batch, steps) = if smoke { (8, 2) } else { (16, 5) };
 
     println!(
         "\n  baseline schedule, adam, batch {batch}, {steps} timed steps; opt = standalone \

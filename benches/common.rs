@@ -12,6 +12,16 @@ use optfuse::optim::{self, Hyper};
 use optfuse::train::{self, RunReport};
 use optfuse::util::XorShiftRng;
 
+/// CI smoke mode for the perf harnesses: `--smoke` on the command line
+/// or `OPTFUSE_BENCH_SMOKE` set to anything but empty/`0`. Reduced
+/// sweep sizes so the `bench-smoke` CI job stays cheap on small runners.
+pub fn smoke_mode() -> bool {
+    if std::env::args().any(|a| a == "--smoke") {
+        return true;
+    }
+    matches!(std::env::var("OPTFUSE_BENCH_SMOKE"), Ok(v) if !v.is_empty() && v != "0")
+}
+
 pub fn header(title: &str, paper_says: &str) {
     println!("\n==================================================================");
     println!("{title}");

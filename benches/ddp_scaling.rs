@@ -1,23 +1,36 @@
 //! §C.5: distributed data parallel — "the training speedup with DDP is
-//! similar to that on a single GPU". The harness sweeps the new comm
-//! axes: schedule (baseline vs backward-fusion), storage (scattered vs
-//! bucketed collectives), ZeRO-1 sharded updates on/off, and
-//! backward-fusion overlap threads on/off — reporting iteration time,
-//! communicator traffic, rounds per step, the measured comm/compute
-//! overlap fraction, and the per-replica optimizer-state footprint.
+//! similar to that on a single GPU". The harness sweeps the comm axes:
+//! schedule (baseline vs backward-fusion), storage (scattered vs
+//! bucketed collectives), ZeRO-1 sharded updates on/off, backward-fusion
+//! overlap threads on/off, and the collective **algorithm** (flat staged
+//! sessions vs chunked ring vs binomial tree) — reporting iteration
+//! time, communicator traffic (bytes *and* hop legs), rounds per step,
+//! the measured comm/compute overlap fraction, and the per-replica
+//! optimizer-state footprint. A final section compares the measured
+//! per-step wire accounting against `memsim::simulate_ddp`'s prediction
+//! — the two must agree exactly (the cluster-scaling claim of the comm
+//! model, asserted for every algorithm).
 //!
 //! The math-equivalence assertions that used to live here (schedules
 //! agree at every world size; world=W bit-equal to a single process;
 //! sharded ⇄ unsharded bit-equal) moved to
-//! `rust/tests/integration_ddp.rs`, where `cargo test` actually runs
-//! them in CI; this harness keeps only perf-shaped sanity checks.
+//! `rust/tests/integration_ddp.rs` and
+//! `rust/tests/integration_comm_model.rs`, where `cargo test` actually
+//! runs them in CI; this harness keeps perf-shaped sanity checks.
+//!
+//! Smoke mode (`--smoke` or `OPTFUSE_BENCH_SMOKE=1`): reduced worlds and
+//! step counts so CI can run the harness on every PR and upload the
+//! printed tables as a build artifact (paper-figure output rot shows up
+//! in the diff instead of at the next manual run).
 
 #[path = "common.rs"]
 mod common;
 
+use optfuse::comm::{CommAlgo, WireCost};
 use optfuse::data::image_batch;
 use optfuse::ddp::{train_ddp, DdpConfig, DdpReport};
 use optfuse::graph::ScheduleKind;
+use optfuse::memsim::{machines, CollOp};
 use optfuse::models;
 use optfuse::optim::{self, Hyper};
 use optfuse::util::XorShiftRng;
@@ -32,7 +45,7 @@ struct Axis {
 
 const CAP: usize = 1 << 20;
 
-fn run(world: usize, axis: &Axis, steps: usize) -> DdpReport {
+fn run(world: usize, algo: CommAlgo, axis: &Axis, steps: usize) -> DdpReport {
     train_ddp(
         || models::deep_mlp(3),
         || optim::by_name("adam").unwrap(),
@@ -40,8 +53,10 @@ fn run(world: usize, axis: &Axis, steps: usize) -> DdpReport {
         DdpConfig {
             world,
             schedule: axis.schedule,
+            algo,
             steps,
             bucket_cap_bytes: axis.bucket_cap,
+            comm_chunk_bytes: None,
             shard_updates: axis.shard,
             overlap_threads: axis.overlap,
             load_from: None,
@@ -56,9 +71,14 @@ fn run(world: usize, axis: &Axis, steps: usize) -> DdpReport {
 
 fn main() {
     common::header(
-        "§C.5 — DDP with schedule-integrated collectives",
-        "reduce fused into the schedules; ZeRO-1 sharded fused updates; measured overlap",
+        "§C.5 — DDP with schedule-integrated, topology-aware collectives",
+        "reduce fused into the schedules; ZeRO-1 sharded fused updates; flat/ring/tree \
+         algorithms; measured overlap; memsim-predicted wire accounting",
     );
+    let smoke = common::smoke_mode();
+    if smoke {
+        println!("  (smoke mode: reduced worlds/steps for CI)");
+    }
 
     let axes = [
         Axis {
@@ -112,15 +132,16 @@ fn main() {
         },
     ];
 
-    let steps = 3;
+    let steps = if smoke { 2 } else { 3 };
+    let worlds: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4] };
     println!(
         "\n  world  axis              iter ms   comm MiB  rounds/st  overlap%  state KiB  loss"
     );
-    for world in [1usize, 2, 4] {
+    for &world in worlds {
         let mut state_unsharded = None;
         let mut state_sharded = None;
         for axis in &axes {
-            let r = run(world, axis, steps);
+            let r = run(world, CommAlgo::Flat, axis, steps);
             println!(
                 "  {world:>5}  {:<16} {:>8.2}  {:>9.2}  {:>9.1}  {:>7.0}%  {:>9.1}  {:.4}",
                 axis.label,
@@ -148,13 +169,87 @@ fn main() {
         println!();
     }
 
-    // comm volume grows with world size (per-rank copies per collective)
-    let comm1 = run(1, &axes[0], 1).comm_bytes;
-    let comm4 = run(4, &axes[0], 1).comm_bytes;
-    assert!(comm4 > 3 * comm1, "all-reduce traffic grows with world size");
+    // ---- collective-algorithm axis: same math, different wire shape ----
+    let algo_world = 2;
+    let algo_axis = axes
+        .iter()
+        .find(|a| a.label == "bf/bkt+overlap")
+        .expect("algo axis present");
     println!(
-        "  traffic scales with world ✓ · sharded state ~1/W ✓ (single-core host: wallclock\n\
-         \x20 scaling is contended; traffic/rounds/footprint accounting is exact)\n\
-         §C.5 reproduced ✓ — math equivalence asserted in rust/tests/integration_ddp.rs"
+        "  algo axis (world={algo_world}, {}): measured vs predicted wire accounting",
+        algo_axis.label
+    );
+    println!(
+        "    algo   iter ms   comm MiB   hops/st   wait ms   overlap%   predicted MiB  hops"
+    );
+    let ic = machines::shared_mem(algo_world);
+    // predicted per-step wire accounting over the *same* bucket layout:
+    // derive unit element counts from the model itself
+    let graph = models::deep_mlp(3);
+    let lens: Vec<usize> = graph
+        .store
+        .params
+        .iter()
+        .map(|p| p.data.read().unwrap().value.len())
+        .collect();
+    let groups = optfuse::optim::bucket::partition_by_bytes(&lens, CAP);
+    let mut flat_losses: Option<Vec<f32>> = None;
+    for algo in CommAlgo::ALL {
+        let r = run(algo_world, algo, algo_axis, steps);
+        let mut predicted = WireCost::default();
+        for group in &groups {
+            let n: usize = group.iter().map(|i| lens[*i]).sum();
+            predicted += ic.wire(algo, CollOp::AllReduce, n);
+        }
+        predicted += ic.wire(algo, CollOp::AllReduce, 1); // loss reduce
+        println!(
+            "    {:<5} {:>8.2}  {:>9.2}  {:>8.1}  {:>8.2}  {:>8.0}%  {:>12.2}  {}",
+            algo.label(),
+            r.iter_ms,
+            r.comm_bytes as f64 / (1 << 20) as f64,
+            r.comm_hops as f64 / steps as f64,
+            r.comm_wait_ms,
+            r.overlap_frac * 100.0,
+            (predicted.bytes * steps as u64) as f64 / (1 << 20) as f64,
+            predicted.hops * steps as u64
+        );
+        // the comm model's exact-accounting claim, live in the harness
+        assert_eq!(
+            r.comm_bytes,
+            predicted.bytes * steps as u64,
+            "{}: measured wire bytes must equal memsim's closed form",
+            algo.label()
+        );
+        assert_eq!(
+            r.comm_hops,
+            predicted.hops * steps as u64,
+            "{}: measured hop legs must equal memsim's closed form",
+            algo.label()
+        );
+        match &flat_losses {
+            None => flat_losses = Some(r.losses),
+            Some(want) => {
+                assert_eq!(want, &r.losses, "{}: algorithms must not change the math", algo.label())
+            }
+        }
+    }
+    println!();
+
+    // comm volume grows with world size (per-rank copies per collective);
+    // reuse the sweep's largest world in smoke mode so the CI job never
+    // runs a configuration bigger than the reduced sweep itself
+    let top_world = *worlds.last().unwrap();
+    let comm1 = run(1, CommAlgo::Flat, &axes[0], 1).comm_bytes;
+    let comm_top = run(top_world, CommAlgo::Flat, &axes[0], 1).comm_bytes;
+    assert!(
+        comm_top > (top_world as u64 - 1) * comm1,
+        "all-reduce traffic grows with world size"
+    );
+    println!(
+        "  traffic scales with world ✓ · sharded state ~1/W ✓ · algo wire accounting exact ✓\n\
+         \x20 (single-core host: wallclock scaling is contended; traffic/rounds/hops/footprint\n\
+         \x20 accounting is exact)\n\
+         §C.5 reproduced ✓ — math equivalence asserted in rust/tests/integration_ddp.rs and\n\
+         rust/tests/integration_comm_model.rs"
     );
 }

@@ -43,7 +43,10 @@ fn main() {
         .iter()
         .map(|s| (s - mean).abs() / mean)
         .fold(0.0f64, f64::max);
-    println!("\n  BF saved-time spread over b∈[32,256]: ±{:.1}% of mean ({mean:.2} ms)", spread * 100.0);
+    println!(
+        "\n  BF saved-time spread over b∈[32,256]: ±{:.1}% of mean ({mean:.2} ms)",
+        spread * 100.0
+    );
     assert!(spread < 0.35, "saved time should be roughly batch-independent");
 
     // paper §C.2 closed-form: s = (b·t_grad + t_opt) / (b·t_grad + t_opt − t_saved)

@@ -53,7 +53,9 @@ fn main() -> anyhow::Result<()> {
     // Measured Fig.-7 slice. On this CPU host fwd/bwd at batch 32 dwarfs
     // the update, so the optimizer-ratio regime of the paper is reached
     // with a parameter-heavy model at small batch (see DESIGN.md §4).
-    println!("\n-- optimizer sweep (wide_mlp, batch 2: high optimizer-time ratio, Fig. 7 slice) --");
+    println!(
+        "\n-- optimizer sweep (wide_mlp, batch 2: high optimizer-time ratio, Fig. 7 slice) --"
+    );
     for opt in ["sgd", "sgd_momentum", "rmsprop", "adam", "adadelta"] {
         let b = run(wide_mlp, ScheduleKind::Baseline, opt, 2, steps);
         let f = run(wide_mlp, ScheduleKind::BackwardFusion, opt, 2, steps);

@@ -52,7 +52,12 @@ fn main() -> anyhow::Result<()> {
         graph,
         Box::new(AdamW),
         Hyper { lr: 3e-4, weight_decay: 1e-2, ..Hyper::default() },
-        ExecConfig { schedule: ScheduleKind::BackwardFusion, threads: 4, race_guard: true, ..Default::default() },
+        ExecConfig {
+            schedule: ScheduleKind::BackwardFusion,
+            threads: 4,
+            race_guard: true,
+            ..Default::default()
+        },
     )?;
 
     let mut rng = XorShiftRng::new(5);

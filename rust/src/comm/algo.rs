@@ -1,0 +1,255 @@
+//! Collective-algorithm selection and the closed-form wire accounting
+//! shared between the real communicators and `memsim`'s interconnect
+//! cost model.
+//!
+//! Every [`crate::comm::Communicator`] implementation records its actual
+//! per-hop traffic into [`crate::comm::CommStats`]; the `wire_*`
+//! functions here are the closed forms of exactly that accounting
+//! (asserted equal in each implementation's tests). `memsim` prices
+//! collectives from the same functions, which is what lets
+//! `rust/tests/integration_comm_model.rs` demand that the performance
+//! model's per-collective bytes × hops match the measured stats
+//! **exactly**, not approximately.
+//!
+//! Accounting semantics (per collective over `n` f32 elements, world W,
+//! B = 4n payload bytes):
+//!
+//! | algo | all-reduce bytes | all-reduce hops | critical path |
+//! |------|------------------|-----------------|---------------|
+//! | flat | `2BW` (each rank stages B in, B out) | `2W` | 2 legs + root-serialized volume |
+//! | ring | `4B(W−1)` (2(W−1) steps × W chunk messages, both ends) | `4W(W−1)` | `2(W−1)` hops of `B/W` |
+//! | tree | `4B(W−1)` (2(W−1) full-size messages, both ends) | `4(W−1)` | `2⌈log₂W⌉` hops of `B` |
+//!
+//! `bytes` counts sent + received at both endpoints; `hops` counts
+//! point-to-point legs (one per endpoint per message; the flat session's
+//! contribute/collect pair counts as 2 per rank). Ring and tree move the
+//! same total volume — the difference the cost model prices is *where*
+//! it moves: the ring spreads it over every link in parallel, the tree
+//! serializes full buffers over `O(log W)` links.
+
+use super::ring::RingComm;
+use super::tree::TreeComm;
+use super::{Communicator, SharedMemComm};
+use crate::tensor::flat::shard_span;
+use std::sync::Arc;
+
+/// Which collective algorithm a DDP run (or a memsim prediction) uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CommAlgo {
+    /// One staged session per collective ([`SharedMemComm`]): every rank
+    /// contributes its full buffer and collects the full result.
+    Flat,
+    /// Reduce-scatter + all-gather over chunked segments
+    /// ([`RingComm`]): bandwidth-optimal, `2(W−1)` hop latencies.
+    Ring,
+    /// Binomial reduce + broadcast ([`TreeComm`]): latency-optimal,
+    /// `2⌈log₂W⌉` full-buffer hops.
+    Tree,
+}
+
+impl CommAlgo {
+    /// All algorithms, in presentation order.
+    pub const ALL: [CommAlgo; 3] = [CommAlgo::Flat, CommAlgo::Ring, CommAlgo::Tree];
+
+    /// Stable identifier used by CLI flags and bench tables.
+    pub fn label(&self) -> &'static str {
+        match self {
+            CommAlgo::Flat => "flat",
+            CommAlgo::Ring => "ring",
+            CommAlgo::Tree => "tree",
+        }
+    }
+}
+
+impl std::str::FromStr for CommAlgo {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "flat" | "shared" => Ok(CommAlgo::Flat),
+            "ring" => Ok(CommAlgo::Ring),
+            "tree" => Ok(CommAlgo::Tree),
+            _ => Err(format!("unknown collective algorithm '{s}' (flat, ring, tree)")),
+        }
+    }
+}
+
+/// Build the communicator implementing `algo` for `world` ranks.
+pub fn make_comm(algo: CommAlgo, world: usize) -> Arc<dyn Communicator> {
+    match algo {
+        CommAlgo::Flat => Arc::new(SharedMemComm::new(world)),
+        CommAlgo::Ring => Arc::new(RingComm::new(world)),
+        CommAlgo::Tree => Arc::new(TreeComm::new(world)),
+    }
+}
+
+/// Wire accounting of one collective, summed over all ranks — the exact
+/// closed form of what the matching [`Communicator`] records into
+/// [`crate::comm::CommStats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WireCost {
+    /// Bytes counted at both endpoints (sent + received).
+    pub bytes: u64,
+    /// Point-to-point legs (one per endpoint per message).
+    pub hops: u64,
+}
+
+impl std::ops::AddAssign for WireCost {
+    fn add_assign(&mut self, rhs: Self) {
+        self.bytes += rhs.bytes;
+        self.hops += rhs.hops;
+    }
+}
+
+/// Sum of shard-span byte sizes of ranks `1..world` (everything except
+/// rank 0's shard) — the tree scatter/gather star traffic.
+fn nonroot_span_bytes(n: usize, world: usize) -> u64 {
+    let (_, s0) = shard_span(n, world, 0);
+    4 * (n - s0) as u64
+}
+
+/// Closed-form wire cost of one `all_reduce_mean` of `n` f32 elements.
+pub fn wire_all_reduce(algo: CommAlgo, n: usize, world: usize) -> WireCost {
+    let (n64, w) = (n as u64, world as u64);
+    match algo {
+        // every rank stages 4n in and 4n out of the session, 2 legs each
+        CommAlgo::Flat => WireCost { bytes: 8 * n64 * w, hops: 2 * w },
+        CommAlgo::Ring => {
+            if world == 1 {
+                return WireCost::default();
+            }
+            // per step the W chunk messages tile the buffer exactly, so
+            // each of the 2(W−1) steps moves 4n sent + 4n received
+            WireCost { bytes: 16 * n64 * (w - 1), hops: 4 * w * (w - 1) }
+        }
+        CommAlgo::Tree => {
+            if world == 1 {
+                return WireCost::default();
+            }
+            // 2(W−1) full-size messages (reduce + broadcast edges)
+            WireCost { bytes: 16 * n64 * (w - 1), hops: 4 * (w - 1) }
+        }
+    }
+}
+
+/// Closed-form wire cost of one `reduce_scatter_mean`.
+pub fn wire_reduce_scatter(algo: CommAlgo, n: usize, world: usize) -> WireCost {
+    let (n64, w) = (n as u64, world as u64);
+    match algo {
+        // each rank stages 4n in and takes its 4·shard out
+        CommAlgo::Flat => WireCost { bytes: 4 * n64 * w + 4 * n64, hops: 2 * w },
+        CommAlgo::Ring => {
+            if world == 1 {
+                return WireCost::default();
+            }
+            WireCost { bytes: 8 * n64 * (w - 1), hops: 2 * w * (w - 1) }
+        }
+        CommAlgo::Tree => {
+            if world == 1 {
+                return WireCost::default();
+            }
+            // W−1 full-size reduce messages + the root's span scatter
+            WireCost {
+                bytes: 8 * n64 * (w - 1) + 2 * nonroot_span_bytes(n, world),
+                hops: 4 * (w - 1),
+            }
+        }
+    }
+}
+
+/// Closed-form wire cost of one `all_gather`.
+pub fn wire_all_gather(algo: CommAlgo, n: usize, world: usize) -> WireCost {
+    let (n64, w) = (n as u64, world as u64);
+    match algo {
+        // each rank stages its 4·shard in and takes 4n out
+        CommAlgo::Flat => WireCost { bytes: 4 * n64 + 4 * n64 * w, hops: 2 * w },
+        CommAlgo::Ring => {
+            if world == 1 {
+                return WireCost::default();
+            }
+            WireCost { bytes: 8 * n64 * (w - 1), hops: 2 * w * (w - 1) }
+        }
+        CommAlgo::Tree => {
+            if world == 1 {
+                return WireCost::default();
+            }
+            // span star-gather to the root + W−1 full-size broadcasts
+            WireCost {
+                bytes: 2 * nonroot_span_bytes(n, world) + 8 * n64 * (w - 1),
+                hops: 4 * (w - 1),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::Ordering;
+
+    #[test]
+    fn parse_and_label_roundtrip() {
+        for algo in CommAlgo::ALL {
+            assert_eq!(algo.label().parse::<CommAlgo>().unwrap(), algo);
+        }
+        assert!("mesh".parse::<CommAlgo>().is_err());
+    }
+
+    #[test]
+    fn make_comm_builds_the_right_world() {
+        for algo in CommAlgo::ALL {
+            assert_eq!(make_comm(algo, 3).world(), 3);
+        }
+    }
+
+    /// The flat closed form must match what `SharedMemComm` has always
+    /// recorded (8n bytes and 2 legs per rank per all-reduce).
+    #[test]
+    fn flat_closed_form_matches_recorded_stats() {
+        use super::super::tags;
+        use std::sync::Arc;
+        let world = 3;
+        let n = 10;
+        let comm = Arc::new(SharedMemComm::new(world));
+        std::thread::scope(|s| {
+            for rank in 0..world {
+                let comm = Arc::clone(&comm);
+                s.spawn(move || {
+                    let mut d = vec![rank as f32; n];
+                    comm.all_reduce_mean(rank, tags::grad(0), &mut d);
+                });
+            }
+        });
+        let want = wire_all_reduce(CommAlgo::Flat, n, world);
+        assert_eq!(comm.stats().bytes.load(Ordering::Relaxed), want.bytes);
+        assert_eq!(comm.stats().hops.load(Ordering::Relaxed), want.hops);
+        assert_eq!(want.bytes, 8 * n as u64 * world as u64);
+        assert_eq!(want.hops, 2 * world as u64);
+    }
+
+    #[test]
+    fn ring_and_tree_move_equal_volume_over_different_hop_counts() {
+        let (n, w) = (1000, 8);
+        let ring = wire_all_reduce(CommAlgo::Ring, n, w);
+        let tree = wire_all_reduce(CommAlgo::Tree, n, w);
+        assert_eq!(ring.bytes, tree.bytes, "same total volume");
+        assert!(ring.hops > tree.hops, "ring pays W× the hops");
+        assert_eq!(ring.hops, 4 * 8 * 7);
+        assert_eq!(tree.hops, 4 * 7);
+    }
+
+    #[test]
+    fn world_one_moves_nothing_for_ring_and_tree() {
+        for op in [wire_all_reduce, wire_reduce_scatter, wire_all_gather] {
+            assert_eq!(op(CommAlgo::Ring, 64, 1), WireCost::default());
+            assert_eq!(op(CommAlgo::Tree, 64, 1), WireCost::default());
+        }
+    }
+
+    #[test]
+    fn wire_cost_accumulates() {
+        let mut acc = WireCost::default();
+        acc += wire_all_reduce(CommAlgo::Ring, 10, 4);
+        acc += wire_all_reduce(CommAlgo::Ring, 10, 4);
+        assert_eq!(acc.bytes, 2 * wire_all_reduce(CommAlgo::Ring, 10, 4).bytes);
+    }
+}

@@ -31,6 +31,29 @@
 //! Shard spans (which contiguous region of a flat buffer rank r owns)
 //! come from [`crate::tensor::flat::shard_span`]; the update-side span
 //! arithmetic lives in [`crate::optim::bucket::apply_bucket_update_range`].
+//!
+//! **Topology axis.** [`SharedMemComm`] is the *flat* algorithm: one
+//! staged session per collective, every rank in, every rank out. The
+//! [`RingComm`] and [`TreeComm`] siblings implement the same trait over
+//! genuine hop-by-hop message passing ([`p2p`]) — bandwidth-optimal
+//! chunked ring reduce-scatter + all-gather, and latency-optimal
+//! binomial reduce + broadcast — selected through [`CommAlgo`] /
+//! `DdpConfig::algo` / `--algo`. All three are bit-identical (the
+//! per-origin payloads of [`p2p`] let every algorithm reduce in rank
+//! order), and all three land in the same [`CommStats`], now with a
+//! per-hop `hops` leg counter whose closed forms ([`algo`]) are shared
+//! with `memsim`'s interconnect cost model.
+
+pub mod algo;
+pub mod p2p;
+pub mod ring;
+pub mod tree;
+
+pub use algo::{
+    make_comm, wire_all_gather, wire_all_reduce, wire_reduce_scatter, CommAlgo, WireCost,
+};
+pub use ring::RingComm;
+pub use tree::TreeComm;
 
 use crate::tensor::flat::shard_span;
 use std::collections::HashMap;
@@ -50,16 +73,62 @@ pub struct CommStats {
     /// Wallclock spent inside collectives (waiting + reducing), summed
     /// across ranks, in nanoseconds.
     pub wait_ns: AtomicU64,
+    /// Point-to-point transfer legs, counted at each endpoint: a ring
+    /// all-reduce adds `4(W−1)` per rank, a tree all-reduce `4(W−1)`
+    /// total, and a flat session 2 per rank (contribute + collect). The
+    /// closed forms live in [`algo`] and are what `memsim` prices.
+    pub hops: AtomicU64,
 }
 
 impl CommStats {
-    fn record(&self, sent: usize, received: usize, t0: Instant) {
+    pub(crate) fn record(&self, sent: usize, received: usize, hops: u64, t0: Instant) {
         self.bytes
             .fetch_add((sent + received) as u64, Ordering::Relaxed);
         self.rounds.fetch_add(1, Ordering::Relaxed);
+        self.hops.fetch_add(hops, Ordering::Relaxed);
         self.wait_ns
             .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
     }
+}
+
+/// Fold per-origin contributions into their mean, summing **in rank
+/// order** (0, 1, …, W−1) and then scaling by 1/W — the one reduction
+/// kernel every algorithm funnels through, and the reason flat, ring,
+/// and tree collectives are bit-identical (f32 addition is commutative
+/// but not associative; a topology-dependent order would let the
+/// algorithms drift apart in the low bits).
+pub(crate) fn mean_in_rank_order(
+    world: usize,
+    len: usize,
+    contributions: &[(usize, Vec<f32>)],
+) -> Vec<f32> {
+    let mut by_rank: Vec<Option<&Vec<f32>>> = vec![None; world];
+    for (origin, data) in contributions.iter() {
+        assert!(by_rank[*origin].is_none(), "rank {origin} contributed twice");
+        by_rank[*origin] = Some(data);
+    }
+    mean_of_ranked(world, len, &by_rank)
+}
+
+/// The shared core of every mean-reduce: contributions indexed by rank,
+/// summed 0 → W−1 and then scaled. [`SharedMemComm`]'s staged sessions
+/// and the ring/tree [`mean_in_rank_order`] both funnel here, so there
+/// is exactly one reduction kernel to keep bit-identical.
+fn mean_of_ranked(world: usize, len: usize, by_rank: &[Option<&Vec<f32>>]) -> Vec<f32> {
+    let mut acc = by_rank[0].expect("rank 0 contribution").clone();
+    assert_eq!(acc.len(), len, "collective length mismatch");
+    for c in by_rank.iter().skip(1) {
+        let c = c.expect("contribution");
+        assert_eq!(c.len(), len, "collective length mismatch");
+        for (a, b) in acc.iter_mut().zip(c.iter()) {
+            *a += *b;
+        }
+    }
+    let inv = 1.0 / world as f32;
+    for a in acc.iter_mut() {
+        *a *= inv;
+    }
+    acc
 }
 
 /// Collective tags: every in-flight collective is identified by a tag so
@@ -72,6 +141,16 @@ pub mod tags {
     /// Gradient reduce of schedulable unit `unit`.
     pub fn grad(unit: usize) -> u64 {
         (1u64 << 56) | unit as u64
+    }
+
+    /// Gradient reduce of chunk `chunk` of schedulable unit `unit` — the
+    /// per-chunk overlap jobs of backward-fusion (`exec`'s
+    /// `comm_chunk_bytes`). The limits are asserted: silently aliasing
+    /// two chunks onto one tag would pair mismatched collectives.
+    pub fn grad_chunk(unit: usize, chunk: usize) -> u64 {
+        assert!(unit < 1 << 40, "grad_chunk: unit {unit} overflows the tag namespace");
+        assert!(chunk < 1 << 16, "grad_chunk: chunk {chunk} overflows the tag namespace");
+        (4u64 << 56) | ((chunk as u64) << 40) | unit as u64
     }
 
     /// Updated-value all-gather of schedulable unit `unit` (ZeRO-1).
@@ -192,7 +271,13 @@ impl SharedMemComm {
     /// Join the session for `tag`, contribute `contribution`, block until
     /// all ranks have contributed, and return the (shared) reduced
     /// result. The last rank to arrive performs the reduction.
-    fn collective(&self, rank: usize, tag: u64, contribution: Vec<f32>, op: ReduceOp) -> Arc<Vec<f32>> {
+    fn collective(
+        &self,
+        rank: usize,
+        tag: u64,
+        contribution: Vec<f32>,
+        op: ReduceOp,
+    ) -> Arc<Vec<f32>> {
         assert!(rank < self.world, "rank {rank} out of range");
         let mut inner = self.inner.lock().unwrap();
         let seq = {
@@ -256,23 +341,12 @@ impl SharedMemComm {
 fn reduce_stage(op: &ReduceOp, world: usize, stage: &[Option<Vec<f32>>]) -> Vec<f32> {
     match op {
         ReduceOp::MeanSum => {
-            // Rank order, starting from rank 0, on every rank — the
-            // bit-determinism contract of the module docs.
-            let mut acc = stage[0].as_ref().expect("rank 0 contribution").clone();
-            for s in stage.iter().skip(1) {
-                let s = s.as_ref().expect("contribution");
-                // hard assert: a silent zip-to-shorter would break the
-                // bit-exactness contract instead of failing fast
-                assert_eq!(s.len(), acc.len(), "collective length mismatch");
-                for (a, b) in acc.iter_mut().zip(s.iter()) {
-                    *a += *b;
-                }
-            }
-            let inv = 1.0 / world as f32;
-            for a in acc.iter_mut() {
-                *a *= inv;
-            }
-            acc
+            // Rank order, starting from rank 0, on every rank — the one
+            // shared reduction kernel (see `mean_of_ranked`), so the
+            // flat session cannot drift from the ring/tree algorithms.
+            let by_rank: Vec<Option<&Vec<f32>>> = stage.iter().map(|s| s.as_ref()).collect();
+            let len = by_rank[0].map_or(0, |c| c.len());
+            mean_of_ranked(world, len, &by_rank)
         }
         ReduceOp::Concat => stage
             .iter()
@@ -291,7 +365,7 @@ impl Communicator for SharedMemComm {
         let n = data.len();
         let result = self.collective(rank, tag, data.to_vec(), ReduceOp::MeanSum);
         data.copy_from_slice(&result);
-        self.stats.record(n * 4, n * 4, t0);
+        self.stats.record(n * 4, n * 4, 2, t0);
     }
 
     fn reduce_scatter_mean(&self, rank: usize, tag: u64, data: &mut [f32]) {
@@ -300,7 +374,7 @@ impl Communicator for SharedMemComm {
         let (off, len) = shard_span(n, self.world, rank);
         let result = self.collective(rank, tag, data.to_vec(), ReduceOp::MeanSum);
         data[off..off + len].copy_from_slice(&result[off..off + len]);
-        self.stats.record(n * 4, len * 4, t0);
+        self.stats.record(n * 4, len * 4, 2, t0);
     }
 
     fn all_gather(&self, rank: usize, tag: u64, data: &mut [f32]) {
@@ -310,7 +384,7 @@ impl Communicator for SharedMemComm {
         let result = self.collective(rank, tag, data[off..off + len].to_vec(), ReduceOp::Concat);
         assert_eq!(result.len(), n, "all_gather: shards must tile the buffer");
         data.copy_from_slice(&result);
-        self.stats.record(len * 4, n * 4, t0);
+        self.stats.record(len * 4, n * 4, 2, t0);
     }
 
     fn stats(&self) -> &CommStats {

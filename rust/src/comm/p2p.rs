@@ -1,0 +1,174 @@
+//! Point-to-point mailbox: the message substrate under the ring and
+//! tree collectives.
+//!
+//! A `Mailbox` is a tag-addressed in-memory network: a *post* is a
+//! non-blocking send of one message along a directed edge, a *take* is a
+//! blocking receive. Messages are keyed by the collective instance
+//! (`tag` + per-rank sequence number), the *leg* (the algorithm's step
+//! index), and the directed `(from, to)` edge, so any number of
+//! collectives — for different buckets, issued in different orders by
+//! different ranks' worker pools — can be in flight without cross-talk,
+//! exactly like the flat communicator's tag-matched sessions.
+//!
+//! The non-blocking-post / blocking-take split is what makes the ring
+//! deadlock-free: every rank posts its outgoing chunk for step `t`
+//! before blocking on the incoming one, so a cycle of mutual waits
+//! cannot form.
+//!
+//! Payloads carry `(origin rank, data)` pairs rather than pre-reduced
+//! partial sums: the receiver that completes a reduction folds the
+//! contributions **in rank order**, which is how the ring and tree
+//! algorithms stay bit-identical to the flat communicator (see the
+//! [`crate::comm`] module docs — wire-byte accounting still charges only
+//! the bytes the real algorithm would move per hop).
+
+use std::collections::HashMap;
+use std::sync::{Condvar, Mutex};
+
+/// Address of one in-flight message: collective instance (`tag`, `seq`),
+/// algorithm step (`leg`), and directed edge (`from` → `to`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub(crate) struct MsgKey {
+    /// Collective tag (see [`crate::comm::tags`]).
+    pub tag: u64,
+    /// Per-rank sequence number of this tag's k-th collective.
+    pub seq: u64,
+    /// Step index within the collective's algorithm.
+    pub leg: u32,
+    /// Sending rank.
+    pub from: usize,
+    /// Receiving rank.
+    pub to: usize,
+}
+
+/// Message payload: per-origin-rank data segments, kept separate so the
+/// final reduction can run in rank order (the bit-determinism contract).
+pub(crate) type Payload = Vec<(usize, Vec<f32>)>;
+
+/// Wire traffic and hop legs accumulated by one rank inside one
+/// collective — the shared per-collective scratch the ring and tree
+/// algorithms flush into `CommStats::record` when they finish.
+#[derive(Default)]
+pub(crate) struct Acct {
+    /// Bytes this rank put on the wire.
+    pub sent: usize,
+    /// Bytes this rank took off the wire.
+    pub received: usize,
+    /// Point-to-point legs this rank participated in.
+    pub legs: u64,
+}
+
+struct Inner {
+    slots: HashMap<MsgKey, Payload>,
+    /// Per-rank count of collectives issued per tag: the k-th collective
+    /// with a tag on one rank exchanges messages with the k-th on every
+    /// other rank, whatever the thread interleaving.
+    next_seq: Vec<HashMap<u64, u64>>,
+}
+
+/// The shared in-memory "network" of one ring or tree communicator.
+pub(crate) struct Mailbox {
+    inner: Mutex<Inner>,
+    ready: Condvar,
+}
+
+impl Mailbox {
+    pub fn new(world: usize) -> Self {
+        Self {
+            inner: Mutex::new(Inner {
+                slots: HashMap::new(),
+                next_seq: (0..world).map(|_| HashMap::new()).collect(),
+            }),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// The sequence number of `rank`'s next collective with `tag`.
+    /// Because every rank issues the same collectives with the same tags
+    /// the same number of times, the k-th call on each rank yields the
+    /// same value — the pairing invariant of [`MsgKey::seq`].
+    pub fn next_seq(&self, rank: usize, tag: u64) -> u64 {
+        let mut inner = self.inner.lock().unwrap();
+        let c = inner.next_seq[rank].entry(tag).or_insert(0);
+        let s = *c;
+        *c += 1;
+        s
+    }
+
+    /// Non-blocking send: deposit `payload` for the receiver of `key`.
+    pub fn post(&self, key: MsgKey, payload: Payload) {
+        let mut inner = self.inner.lock().unwrap();
+        let prev = inner.slots.insert(key, payload);
+        assert!(prev.is_none(), "p2p: duplicate message for {key:?}");
+        drop(inner);
+        self.ready.notify_all();
+    }
+
+    /// Blocking receive: wait until the message addressed by `key` has
+    /// been posted, then take ownership of it.
+    pub fn take(&self, key: MsgKey) -> Payload {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(p) = inner.slots.remove(&key) {
+                return p;
+            }
+            inner = self.ready.wait(inner).unwrap();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn key(leg: u32, from: usize, to: usize) -> MsgKey {
+        MsgKey { tag: 9, seq: 0, leg, from, to }
+    }
+
+    #[test]
+    fn post_then_take_roundtrips() {
+        let m = Mailbox::new(2);
+        m.post(key(0, 0, 1), vec![(0, vec![1.0, 2.0])]);
+        let p = m.take(key(0, 0, 1));
+        assert_eq!(p, vec![(0, vec![1.0, 2.0])]);
+    }
+
+    #[test]
+    fn take_blocks_until_posted() {
+        let m = Arc::new(Mailbox::new(2));
+        let m2 = Arc::clone(&m);
+        let h = std::thread::spawn(move || m2.take(key(3, 1, 0)));
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        m.post(key(3, 1, 0), vec![(1, vec![7.0])]);
+        assert_eq!(h.join().unwrap(), vec![(1, vec![7.0])]);
+    }
+
+    #[test]
+    fn distinct_legs_and_edges_do_not_collide() {
+        let m = Mailbox::new(3);
+        m.post(key(0, 0, 1), vec![(0, vec![1.0])]);
+        m.post(key(0, 1, 2), vec![(1, vec![2.0])]);
+        m.post(key(1, 0, 1), vec![(0, vec![3.0])]);
+        assert_eq!(m.take(key(1, 0, 1))[0].1, vec![3.0]);
+        assert_eq!(m.take(key(0, 1, 2))[0].1, vec![2.0]);
+        assert_eq!(m.take(key(0, 0, 1))[0].1, vec![1.0]);
+    }
+
+    #[test]
+    fn sequence_numbers_advance_per_rank_and_tag() {
+        let m = Mailbox::new(2);
+        assert_eq!(m.next_seq(0, 5), 0);
+        assert_eq!(m.next_seq(0, 5), 1);
+        assert_eq!(m.next_seq(1, 5), 0);
+        assert_eq!(m.next_seq(0, 6), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate message")]
+    fn duplicate_post_fails_fast() {
+        let m = Mailbox::new(2);
+        m.post(key(0, 0, 1), vec![]);
+        m.post(key(0, 0, 1), vec![]);
+    }
+}

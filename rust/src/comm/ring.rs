@@ -1,0 +1,393 @@
+//! Ring collectives: bandwidth-optimal all-reduce as reduce-scatter +
+//! all-gather over chunked segments (Baidu/NCCL-style).
+//!
+//! The buffer is split into `W` contiguous chunks (the same
+//! [`shard_span`] segments ZeRO-1 shards by). In the reduce-scatter
+//! phase, step `t` has every rank send one chunk to its successor and
+//! receive one from its predecessor, folding its own contribution in —
+//! after `W−1` steps each rank owns the fully-reduced chunk that is its
+//! shard. The all-gather phase circulates the reduced chunks for another
+//! `W−1` steps. Every link is busy every step, and each rank moves only
+//! `2(W−1)/W` of the buffer per direction — the bandwidth-optimal
+//! schedule, at the cost of `2(W−1)` serial hop latencies
+//! (latency-*pessimal*; see [`super::TreeComm`] for the other extreme and
+//! `memsim`'s `Interconnect` for the cost model that prices both).
+//!
+//! Bit-determinism: messages carry per-origin contributions
+//! ([`super::p2p`]) and the rank that completes a chunk folds them in
+//! rank order, so results are bit-identical to [`super::SharedMemComm`]
+//! — while [`super::CommStats`] charges exactly the chunk bytes the real
+//! algorithm would put on the wire at each hop.
+//!
+//! Ordering contract (stricter than the flat communicator, same as real
+//! NCCL): hop receives block, so two ranks must not issue collectives
+//! for *different* tags in opposite orders **on single threads**.
+//! Concurrent issuance on separate threads (the worker pool) is fine —
+//! messages are tag-matched — and every schedule arm in `exec`/`ddp`
+//! issues inline collectives in deterministic unit order, while pool
+//! jobs are submitted and dequeued in the same FIFO order on every rank,
+//! which is exactly the progress guarantee the induction in the pool
+//! docs needs.
+
+use super::p2p::{Acct, Mailbox, MsgKey, Payload};
+use super::{mean_in_rank_order, CommStats, Communicator};
+use crate::tensor::flat::shard_span;
+use std::time::Instant;
+
+/// Ring [`Communicator`]: reduce-scatter + all-gather over chunked
+/// segments, 2(W−1) steps per all-reduce.
+pub struct RingComm {
+    world: usize,
+    mail: Mailbox,
+    stats: CommStats,
+}
+
+impl RingComm {
+    /// A ring communicator for `world` ranks.
+    pub fn new(world: usize) -> Self {
+        assert!(world > 0, "communicator needs at least one rank");
+        Self { world, mail: Mailbox::new(world), stats: CommStats::default() }
+    }
+
+    /// Span of ring-chunk `k` in a buffer of `n` elements. Ring-chunk
+    /// `k` finishes its reduction on rank `(k − 1) mod W`, so mapping it
+    /// to shard span `(k − 1) mod W` makes every rank finish holding
+    /// exactly its own [`shard_span`] — the alignment the ZeRO-1 update
+    /// path relies on.
+    fn chunk_span(&self, n: usize, ring_chunk: usize) -> (usize, usize) {
+        shard_span(n, self.world, (ring_chunk + self.world - 1) % self.world)
+    }
+
+    /// The reduce-scatter phase: `W−1` send/receive steps, after which
+    /// this rank holds every rank's contribution for ring-chunk
+    /// `(rank + 1) mod W` (= its own shard span).
+    fn reduce_scatter_phase(
+        &self,
+        rank: usize,
+        tag: u64,
+        seq: u64,
+        data: &[f32],
+        acct: &mut Acct,
+    ) -> Payload {
+        let w = self.world;
+        let next = (rank + 1) % w;
+        let prev = (rank + w - 1) % w;
+        let chunk_of = |k: usize| {
+            let (o, l) = self.chunk_span(data.len(), k);
+            data[o..o + l].to_vec()
+        };
+        let mut carry: Payload = vec![(rank, chunk_of(rank))];
+        for t in 0..w - 1 {
+            let c_send = (rank + w - t) % w;
+            let (_, send_len) = self.chunk_span(data.len(), c_send);
+            self.mail.post(
+                MsgKey { tag, seq, leg: t as u32, from: rank, to: next },
+                std::mem::take(&mut carry),
+            );
+            acct.sent += 4 * send_len;
+            acct.legs += 1;
+            let c_recv = (rank + w - t - 1) % w;
+            let (_, recv_len) = self.chunk_span(data.len(), c_recv);
+            let mut incoming =
+                self.mail.take(MsgKey { tag, seq, leg: t as u32, from: prev, to: rank });
+            incoming.push((rank, chunk_of(c_recv)));
+            acct.received += 4 * recv_len;
+            acct.legs += 1;
+            carry = incoming;
+        }
+        carry
+    }
+
+    /// The all-gather phase: circulate completed chunks for `W−1` steps.
+    /// `have` is indexed by ring-chunk id and must hold this rank's own
+    /// chunk (`(rank + 1) mod W`) on entry; on return it holds all `W`.
+    #[allow(clippy::too_many_arguments)]
+    fn all_gather_phase(
+        &self,
+        rank: usize,
+        tag: u64,
+        seq: u64,
+        n: usize,
+        leg0: u32,
+        have: &mut [Option<Vec<f32>>],
+        acct: &mut Acct,
+    ) {
+        let w = self.world;
+        let next = (rank + 1) % w;
+        let prev = (rank + w - 1) % w;
+        for t in 0..w - 1 {
+            let c_send = (rank + 1 + w - t) % w;
+            let payload = have[c_send].clone().expect("all-gather invariant: chunk in hand");
+            let (_, send_len) = self.chunk_span(n, c_send);
+            self.mail.post(
+                MsgKey { tag, seq, leg: leg0 + t as u32, from: rank, to: next },
+                vec![(c_send, payload)],
+            );
+            acct.sent += 4 * send_len;
+            acct.legs += 1;
+            let c_recv = (rank + w - t) % w;
+            let (_, recv_len) = self.chunk_span(n, c_recv);
+            let mut msg =
+                self.mail.take(MsgKey { tag, seq, leg: leg0 + t as u32, from: prev, to: rank });
+            let (cid, chunk) = msg.pop().expect("all-gather payload");
+            assert_eq!(cid, c_recv, "ring all-gather chunk id mismatch");
+            have[c_recv] = Some(chunk);
+            acct.received += 4 * recv_len;
+            acct.legs += 1;
+        }
+    }
+}
+
+impl Communicator for RingComm {
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn all_reduce_mean(&self, rank: usize, tag: u64, data: &mut [f32]) {
+        let t0 = Instant::now();
+        let w = self.world;
+        assert!(rank < w, "rank {rank} out of range");
+        if w == 1 {
+            // mean over one rank is the identity; nothing moves
+            self.stats.record(0, 0, 0, t0);
+            return;
+        }
+        let seq = self.mail.next_seq(rank, tag);
+        let mut acct = Acct::default();
+        let n = data.len();
+        let carry = self.reduce_scatter_phase(rank, tag, seq, data, &mut acct);
+        let own = (rank + 1) % w;
+        let (_, own_len) = self.chunk_span(n, own);
+        let mut have: Vec<Option<Vec<f32>>> = (0..w).map(|_| None).collect();
+        have[own] = Some(mean_in_rank_order(w, own_len, &carry));
+        self.all_gather_phase(rank, tag, seq, n, (w - 1) as u32, &mut have, &mut acct);
+        for (k, chunk) in have.iter().enumerate() {
+            let (o, l) = self.chunk_span(n, k);
+            data[o..o + l].copy_from_slice(chunk.as_ref().expect("all chunks gathered"));
+        }
+        self.stats.record(acct.sent, acct.received, acct.legs, t0);
+    }
+
+    fn reduce_scatter_mean(&self, rank: usize, tag: u64, data: &mut [f32]) {
+        let t0 = Instant::now();
+        let w = self.world;
+        assert!(rank < w, "rank {rank} out of range");
+        if w == 1 {
+            self.stats.record(0, 0, 0, t0);
+            return;
+        }
+        let seq = self.mail.next_seq(rank, tag);
+        let mut acct = Acct::default();
+        let carry = self.reduce_scatter_phase(rank, tag, seq, data, &mut acct);
+        let own = (rank + 1) % w;
+        // ring-chunk (rank + 1) maps exactly to shard_span(n, w, rank)
+        let (o, l) = self.chunk_span(data.len(), own);
+        data[o..o + l].copy_from_slice(&mean_in_rank_order(w, l, &carry));
+        self.stats.record(acct.sent, acct.received, acct.legs, t0);
+    }
+
+    fn all_gather(&self, rank: usize, tag: u64, data: &mut [f32]) {
+        let t0 = Instant::now();
+        let w = self.world;
+        assert!(rank < w, "rank {rank} out of range");
+        if w == 1 {
+            self.stats.record(0, 0, 0, t0);
+            return;
+        }
+        let seq = self.mail.next_seq(rank, tag);
+        let mut acct = Acct::default();
+        let n = data.len();
+        let own = (rank + 1) % w;
+        let mut have: Vec<Option<Vec<f32>>> = (0..w).map(|_| None).collect();
+        {
+            let (o, l) = self.chunk_span(n, own);
+            have[own] = Some(data[o..o + l].to_vec());
+        }
+        self.all_gather_phase(rank, tag, seq, n, 0, &mut have, &mut acct);
+        for (k, chunk) in have.iter().enumerate() {
+            let (o, l) = self.chunk_span(n, k);
+            data[o..o + l].copy_from_slice(chunk.as_ref().expect("all chunks gathered"));
+        }
+        self.stats.record(acct.sent, acct.received, acct.legs, t0);
+    }
+
+    fn stats(&self) -> &CommStats {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::algo::{wire_all_gather, wire_all_reduce, wire_reduce_scatter, CommAlgo};
+    use super::super::{tags, SharedMemComm};
+    use super::*;
+    use std::sync::atomic::Ordering;
+    use std::sync::{Arc, Mutex};
+
+    /// Drive one collective on every rank of both a ring and a flat
+    /// communicator with identical inputs; return (ring, flat) outputs.
+    fn drive(
+        world: usize,
+        n: usize,
+        op: impl Fn(&dyn Communicator, usize, &mut [f32]) + Sync,
+    ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let ring = Arc::new(RingComm::new(world));
+        let flat = Arc::new(SharedMemComm::new(world));
+        let outs = Arc::new(Mutex::new(vec![(Vec::new(), Vec::new()); world]));
+        let op = &op;
+        std::thread::scope(|s| {
+            for rank in 0..world {
+                let ring = Arc::clone(&ring);
+                let flat = Arc::clone(&flat);
+                let outs = Arc::clone(&outs);
+                s.spawn(move || {
+                    let base: Vec<f32> =
+                        (0..n).map(|i| (i as f32 + 1.3) * (rank as f32 - 0.7)).collect();
+                    let mut r = base.clone();
+                    op(ring.as_ref(), rank, &mut r);
+                    let mut f = base.clone();
+                    op(flat.as_ref(), rank, &mut f);
+                    outs.lock().unwrap()[rank] = (r, f);
+                });
+            }
+        });
+        let outs = outs.lock().unwrap();
+        let ring_outs = outs.iter().map(|(r, _)| r.clone()).collect();
+        let flat_outs = outs.iter().map(|(_, f)| f.clone()).collect();
+        (ring_outs, flat_outs)
+    }
+
+    fn assert_bit_equal(a: &[Vec<f32>], b: &[Vec<f32>], what: &str) {
+        for (rank, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x.len(), y.len());
+            for (i, (u, v)) in x.iter().zip(y.iter()).enumerate() {
+                assert_eq!(u.to_bits(), v.to_bits(), "{what}: rank {rank} elem {i}: {u} vs {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_reduce_bit_identical_to_flat_at_every_world_size() {
+        for world in [1usize, 2, 3, 4, 5] {
+            // n = 10 is not divisible by most world sizes: chunks differ
+            let (ring, flat) =
+                drive(world, 10, |c, rank, d| c.all_reduce_mean(rank, tags::grad(0), d));
+            assert_bit_equal(&ring, &flat, &format!("all_reduce world {world}"));
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_bit_identical_to_flat() {
+        for world in [2usize, 3, 4] {
+            let (ring, flat) =
+                drive(world, 11, |c, rank, d| c.reduce_scatter_mean(rank, tags::grad(1), d));
+            assert_bit_equal(&ring, &flat, &format!("reduce_scatter world {world}"));
+        }
+    }
+
+    #[test]
+    fn all_gather_bit_identical_to_flat() {
+        for world in [2usize, 3, 4] {
+            // all_gather reads only the caller's own shard, so identical
+            // inputs give identical reassembled outputs
+            let (ring, flat) = drive(world, 9, |c, rank, d| c.all_gather(rank, tags::value(0), d));
+            assert_bit_equal(&ring, &flat, &format!("all_gather world {world}"));
+        }
+    }
+
+    /// Satellite accounting check: one ring all-reduce of n elements
+    /// among W ranks moves exactly 2(W−1) chunk-sized messages per rank
+    /// (counted at both endpoints) over 4(W−1) legs per rank.
+    #[test]
+    fn stats_match_closed_form() {
+        for (world, n) in [(2usize, 8usize), (3, 10), (4, 10)] {
+            let ring = Arc::new(RingComm::new(world));
+            std::thread::scope(|s| {
+                for rank in 0..world {
+                    let ring = Arc::clone(&ring);
+                    s.spawn(move || {
+                        let mut d = vec![rank as f32; n];
+                        ring.all_reduce_mean(rank, tags::grad(7), &mut d);
+                    });
+                }
+            });
+            let want = wire_all_reduce(CommAlgo::Ring, n, world);
+            assert_eq!(ring.stats.bytes.load(Ordering::Relaxed), want.bytes, "w={world} n={n}");
+            assert_eq!(ring.stats.hops.load(Ordering::Relaxed), want.hops, "w={world} n={n}");
+            assert_eq!(ring.stats.rounds.load(Ordering::Relaxed), world as u64);
+            // and the documented algebraic forms
+            assert_eq!(want.bytes, 16 * n as u64 * (world as u64 - 1));
+            assert_eq!(want.hops, 4 * world as u64 * (world as u64 - 1));
+        }
+    }
+
+    #[test]
+    fn phase_stats_match_closed_forms() {
+        let world = 3;
+        let n = 10;
+        for (which, want) in [
+            ("rs", wire_reduce_scatter(CommAlgo::Ring, n, world)),
+            ("ag", wire_all_gather(CommAlgo::Ring, n, world)),
+        ] {
+            let ring = Arc::new(RingComm::new(world));
+            std::thread::scope(|s| {
+                for rank in 0..world {
+                    let ring = Arc::clone(&ring);
+                    s.spawn(move || {
+                        let mut d = vec![1.0f32; n];
+                        if which == "rs" {
+                            ring.reduce_scatter_mean(rank, tags::grad(0), &mut d);
+                        } else {
+                            ring.all_gather(rank, tags::value(0), &mut d);
+                        }
+                    });
+                }
+            });
+            assert_eq!(ring.stats.bytes.load(Ordering::Relaxed), want.bytes, "{which}");
+            assert_eq!(ring.stats.hops.load(Ordering::Relaxed), want.hops, "{which}");
+            // one phase: half of an all-reduce
+            assert_eq!(want.bytes, 8 * n as u64 * (world as u64 - 1), "{which}");
+        }
+    }
+
+    #[test]
+    fn world_one_is_identity_with_zero_traffic() {
+        let ring = RingComm::new(1);
+        let mut d = vec![3.0f32, -1.0];
+        ring.all_reduce_mean(0, tags::LOSS, &mut d);
+        assert_eq!(d, vec![3.0, -1.0]);
+        assert_eq!(ring.stats.bytes.load(Ordering::Relaxed), 0);
+        assert_eq!(ring.stats.hops.load(Ordering::Relaxed), 0);
+        assert_eq!(ring.stats.rounds.load(Ordering::Relaxed), 1);
+    }
+
+    /// Pool-overlap precondition: a rank may have ring collectives for
+    /// several tags in flight at once on different worker threads, and
+    /// they pair up by tag however the threads interleave (the executor's
+    /// backward-fusion pool does exactly this).
+    #[test]
+    fn tags_decouple_concurrent_ring_sessions() {
+        let world = 2;
+        let ring = Arc::new(RingComm::new(world));
+        let outs = Arc::new(Mutex::new([[0.0f32; 2]; 2]));
+        std::thread::scope(|s| {
+            for rank in 0..world {
+                for (slot, tag) in [tags::grad(7), tags::grad(8)].into_iter().enumerate() {
+                    let ring = Arc::clone(&ring);
+                    let outs = Arc::clone(&outs);
+                    s.spawn(move || {
+                        let base = if slot == 0 { rank as f32 } else { 10.0 + rank as f32 };
+                        let mut d = [base, base];
+                        ring.all_reduce_mean(rank, tag, &mut d);
+                        outs.lock().unwrap()[rank][slot] = d[0];
+                    });
+                }
+            }
+        });
+        let outs = outs.lock().unwrap();
+        for rank in 0..world {
+            assert_eq!(outs[rank][0], 0.5, "mean of 0, 1");
+            assert_eq!(outs[rank][1], 10.5, "mean of 10, 11");
+        }
+    }
+}

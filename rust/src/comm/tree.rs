@@ -1,0 +1,378 @@
+//! Binomial-tree collectives: latency-optimal all-reduce as a
+//! ⌈log₂W⌉-round reduce to rank 0 followed by a mirror-image broadcast.
+//!
+//! In reduce round `k` (k = 0, 1, …), every rank whose low `k` bits are
+//! zero is still active; the active ranks with bit `k` set send their
+//! partial to `rank − 2ᵏ` and retire. After ⌈log₂W⌉ rounds rank 0 holds
+//! every contribution; the broadcast walks the same edges in reverse.
+//! The critical path is `2⌈log₂W⌉` hops of the **full** buffer — the
+//! latency-optimal schedule (vs the ring's `2(W−1)` hops of `1/W`
+//! buffers), which wins for small buffers and loses bandwidth for big
+//! ones; `memsim`'s `Interconnect` prices the crossover.
+//!
+//! Bit-determinism: reduce messages carry per-origin contributions
+//! ([`super::p2p`]) and rank 0 folds them in rank order, so results are
+//! bit-identical to [`super::SharedMemComm`] and [`super::RingComm`] —
+//! while [`super::CommStats`] charges the full-buffer bytes a real tree
+//! would move per hop. The single-thread ordering contract of
+//! [`super::RingComm`] applies unchanged.
+
+use super::p2p::{Acct, Mailbox, MsgKey, Payload};
+use super::{mean_in_rank_order, CommStats, Communicator};
+use crate::tensor::flat::shard_span;
+use std::time::Instant;
+
+/// Binomial-tree [`Communicator`]: ⌈log₂W⌉ reduce rounds to rank 0 plus
+/// the mirrored broadcast.
+pub struct TreeComm {
+    world: usize,
+    mail: Mailbox,
+    stats: CommStats,
+}
+
+/// ⌈log₂ world⌉ — the number of reduce (and broadcast) rounds.
+pub(crate) fn tree_rounds(world: usize) -> u32 {
+    usize::BITS - (world - 1).leading_zeros()
+}
+
+impl TreeComm {
+    /// A binomial-tree communicator for `world` ranks.
+    pub fn new(world: usize) -> Self {
+        assert!(world > 0, "communicator needs at least one rank");
+        Self { world, mail: Mailbox::new(world), stats: CommStats::default() }
+    }
+
+    /// Binomial reduce to rank 0: non-roots post their accumulated
+    /// contribution list up the tree at round `trailing_zeros(rank)` and
+    /// return `None`; rank 0 returns the full contribution list. Each
+    /// message is charged as one full-buffer hop.
+    fn reduce_to_root(
+        &self,
+        rank: usize,
+        tag: u64,
+        seq: u64,
+        data: &[f32],
+        acct: &mut Acct,
+    ) -> Option<Payload> {
+        let w = self.world;
+        let bytes = 4 * data.len();
+        let mut carry: Payload = vec![(rank, data.to_vec())];
+        for k in 0..tree_rounds(w) {
+            let d = 1usize << k;
+            if rank % (2 * d) == d {
+                // this round's sender: ship the partial and retire
+                self.mail.post(
+                    MsgKey { tag, seq, leg: k, from: rank, to: rank - d },
+                    std::mem::take(&mut carry),
+                );
+                acct.sent += bytes;
+                acct.legs += 1;
+                return None;
+            }
+            // still active: absorb the partner's partial if it exists
+            if rank + d < w {
+                let incoming =
+                    self.mail.take(MsgKey { tag, seq, leg: k, from: rank + d, to: rank });
+                carry.extend(incoming);
+                acct.received += bytes;
+                acct.legs += 1;
+            }
+        }
+        Some(carry)
+    }
+
+    /// Mirror-image binomial broadcast of `result` from rank 0: each rank
+    /// receives from its parent (edge round = `trailing_zeros(rank)`),
+    /// then forwards to its children in descending round order. An edge
+    /// of round `j` is keyed `leg_base + j`; callers pick a `leg_base`
+    /// that cannot collide with the legs already spent (the reduce's
+    /// `0..rounds`, or the all-gather's star leg 0).
+    #[allow(clippy::too_many_arguments)]
+    fn broadcast_from_root(
+        &self,
+        rank: usize,
+        tag: u64,
+        seq: u64,
+        result: Option<Vec<f32>>,
+        n: usize,
+        leg_base: u32,
+        acct: &mut Acct,
+    ) -> Vec<f32> {
+        let w = self.world;
+        let bytes = 4 * n;
+        let (result, my_round) = match result {
+            Some(r) => (r, tree_rounds(w)),
+            None => {
+                let k = rank.trailing_zeros();
+                let parent = rank - (1usize << k);
+                let mut msg =
+                    self.mail.take(MsgKey { tag, seq, leg: leg_base + k, from: parent, to: rank });
+                acct.received += bytes;
+                acct.legs += 1;
+                (msg.pop().expect("broadcast payload").1, k)
+            }
+        };
+        for j in (0..my_round).rev() {
+            let child = rank + (1usize << j);
+            if child < w {
+                self.mail.post(
+                    MsgKey { tag, seq, leg: leg_base + j, from: rank, to: child },
+                    vec![(rank, result.clone())],
+                );
+                acct.sent += bytes;
+                acct.legs += 1;
+            }
+        }
+        result
+    }
+}
+
+impl Communicator for TreeComm {
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn all_reduce_mean(&self, rank: usize, tag: u64, data: &mut [f32]) {
+        let t0 = Instant::now();
+        let w = self.world;
+        assert!(rank < w, "rank {rank} out of range");
+        if w == 1 {
+            self.stats.record(0, 0, 0, t0);
+            return;
+        }
+        let seq = self.mail.next_seq(rank, tag);
+        let mut acct = Acct::default();
+        let n = data.len();
+        let reduced = self
+            .reduce_to_root(rank, tag, seq, data, &mut acct)
+            .map(|carry| mean_in_rank_order(w, n, &carry));
+        let result =
+            self.broadcast_from_root(rank, tag, seq, reduced, n, tree_rounds(w), &mut acct);
+        data.copy_from_slice(&result);
+        self.stats.record(acct.sent, acct.received, acct.legs, t0);
+    }
+
+    fn reduce_scatter_mean(&self, rank: usize, tag: u64, data: &mut [f32]) {
+        let t0 = Instant::now();
+        let w = self.world;
+        assert!(rank < w, "rank {rank} out of range");
+        if w == 1 {
+            self.stats.record(0, 0, 0, t0);
+            return;
+        }
+        let seq = self.mail.next_seq(rank, tag);
+        let mut acct = Acct::default();
+        let n = data.len();
+        let rounds = tree_rounds(w);
+        let (off, len) = shard_span(n, w, rank);
+        match self.reduce_to_root(rank, tag, seq, data, &mut acct) {
+            Some(carry) => {
+                // root: compute the full mean, scatter each rank its shard
+                let full = mean_in_rank_order(w, n, &carry);
+                for r in 1..w {
+                    let (o, l) = shard_span(n, w, r);
+                    self.mail.post(
+                        MsgKey { tag, seq, leg: rounds, from: 0, to: r },
+                        vec![(r, full[o..o + l].to_vec())],
+                    );
+                    acct.sent += 4 * l;
+                    acct.legs += 1;
+                }
+                data[off..off + len].copy_from_slice(&full[off..off + len]);
+            }
+            None => {
+                let mut msg =
+                    self.mail.take(MsgKey { tag, seq, leg: rounds, from: 0, to: rank });
+                data[off..off + len].copy_from_slice(&msg.pop().expect("scatter payload").1);
+                acct.received += 4 * len;
+                acct.legs += 1;
+            }
+        }
+        self.stats.record(acct.sent, acct.received, acct.legs, t0);
+    }
+
+    fn all_gather(&self, rank: usize, tag: u64, data: &mut [f32]) {
+        let t0 = Instant::now();
+        let w = self.world;
+        assert!(rank < w, "rank {rank} out of range");
+        if w == 1 {
+            self.stats.record(0, 0, 0, t0);
+            return;
+        }
+        let seq = self.mail.next_seq(rank, tag);
+        let mut acct = Acct::default();
+        let n = data.len();
+        let (off, len) = shard_span(n, w, rank);
+        // star-gather the shards to rank 0 (leg 0 per edge), then
+        // binomial-broadcast the assembled buffer (legs 1 + round)
+        let assembled = if rank == 0 {
+            let mut full = vec![0.0f32; n];
+            full[off..off + len].copy_from_slice(&data[off..off + len]);
+            for r in 1..w {
+                let (o, l) = shard_span(n, w, r);
+                let mut msg = self.mail.take(MsgKey { tag, seq, leg: 0, from: r, to: 0 });
+                full[o..o + l].copy_from_slice(&msg.pop().expect("gather payload").1);
+                acct.received += 4 * l;
+                acct.legs += 1;
+            }
+            Some(full)
+        } else {
+            self.mail.post(
+                MsgKey { tag, seq, leg: 0, from: rank, to: 0 },
+                vec![(rank, data[off..off + len].to_vec())],
+            );
+            acct.sent += 4 * len;
+            acct.legs += 1;
+            None
+        };
+        // the gather used leg 0, so broadcast edges live at 1 + round
+        let result = self.broadcast_from_root(rank, tag, seq, assembled, n, 1, &mut acct);
+        data.copy_from_slice(&result);
+        self.stats.record(acct.sent, acct.received, acct.legs, t0);
+    }
+
+    fn stats(&self) -> &CommStats {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::algo::{wire_all_gather, wire_all_reduce, wire_reduce_scatter, CommAlgo};
+    use super::super::{tags, SharedMemComm};
+    use super::*;
+    use std::sync::atomic::Ordering;
+    use std::sync::{Arc, Mutex};
+
+    fn drive(
+        world: usize,
+        n: usize,
+        op: impl Fn(&dyn Communicator, usize, &mut [f32]) + Sync,
+    ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let tree = Arc::new(TreeComm::new(world));
+        let flat = Arc::new(SharedMemComm::new(world));
+        let outs = Arc::new(Mutex::new(vec![(Vec::new(), Vec::new()); world]));
+        let op = &op;
+        std::thread::scope(|s| {
+            for rank in 0..world {
+                let tree = Arc::clone(&tree);
+                let flat = Arc::clone(&flat);
+                let outs = Arc::clone(&outs);
+                s.spawn(move || {
+                    let base: Vec<f32> =
+                        (0..n).map(|i| (i as f32 - 2.1) * (rank as f32 + 0.9)).collect();
+                    let mut t = base.clone();
+                    op(tree.as_ref(), rank, &mut t);
+                    let mut f = base.clone();
+                    op(flat.as_ref(), rank, &mut f);
+                    outs.lock().unwrap()[rank] = (t, f);
+                });
+            }
+        });
+        let outs = outs.lock().unwrap();
+        let tree_outs = outs.iter().map(|(t, _)| t.clone()).collect();
+        let flat_outs = outs.iter().map(|(_, f)| f.clone()).collect();
+        (tree_outs, flat_outs)
+    }
+
+    fn assert_bit_equal(a: &[Vec<f32>], b: &[Vec<f32>], what: &str) {
+        for (rank, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x.len(), y.len());
+            for (i, (u, v)) in x.iter().zip(y.iter()).enumerate() {
+                assert_eq!(u.to_bits(), v.to_bits(), "{what}: rank {rank} elem {i}: {u} vs {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn rounds_are_ceil_log2() {
+        for (w, r) in [(1usize, 0u32), (2, 1), (3, 2), (4, 2), (5, 3), (8, 3), (9, 4)] {
+            assert_eq!(tree_rounds(w), r, "world {w}");
+        }
+    }
+
+    /// Power-of-two and ragged world sizes both reduce bit-identically
+    /// to the flat communicator — including W = 3 and 5, where some
+    /// reduce rounds have no partner.
+    #[test]
+    fn all_reduce_bit_identical_to_flat_at_every_world_size() {
+        for world in [1usize, 2, 3, 4, 5] {
+            let (tree, flat) =
+                drive(world, 10, |c, rank, d| c.all_reduce_mean(rank, tags::grad(0), d));
+            assert_bit_equal(&tree, &flat, &format!("all_reduce world {world}"));
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_and_all_gather_bit_identical_to_flat() {
+        for world in [2usize, 3, 4, 5] {
+            let (tree, flat) =
+                drive(world, 11, |c, rank, d| c.reduce_scatter_mean(rank, tags::grad(1), d));
+            assert_bit_equal(&tree, &flat, &format!("reduce_scatter world {world}"));
+            let (tree, flat) =
+                drive(world, 9, |c, rank, d| c.all_gather(rank, tags::value(0), d));
+            assert_bit_equal(&tree, &flat, &format!("all_gather world {world}"));
+        }
+    }
+
+    /// Satellite accounting check: a tree all-reduce is 2(W−1) full-size
+    /// messages — W−1 up the tree, W−1 back down — counted at both ends.
+    #[test]
+    fn stats_match_closed_form() {
+        for (world, n) in [(2usize, 8usize), (3, 10), (4, 10), (5, 6)] {
+            let tree = Arc::new(TreeComm::new(world));
+            std::thread::scope(|s| {
+                for rank in 0..world {
+                    let tree = Arc::clone(&tree);
+                    s.spawn(move || {
+                        let mut d = vec![rank as f32; n];
+                        tree.all_reduce_mean(rank, tags::grad(7), &mut d);
+                    });
+                }
+            });
+            let want = wire_all_reduce(CommAlgo::Tree, n, world);
+            assert_eq!(tree.stats.bytes.load(Ordering::Relaxed), want.bytes, "w={world} n={n}");
+            assert_eq!(tree.stats.hops.load(Ordering::Relaxed), want.hops, "w={world} n={n}");
+            assert_eq!(tree.stats.rounds.load(Ordering::Relaxed), world as u64);
+            assert_eq!(want.bytes, 16 * n as u64 * (world as u64 - 1));
+            assert_eq!(want.hops, 4 * (world as u64 - 1));
+        }
+    }
+
+    #[test]
+    fn phase_stats_match_closed_forms() {
+        let world = 4;
+        let n = 10;
+        for (which, want) in [
+            ("rs", wire_reduce_scatter(CommAlgo::Tree, n, world)),
+            ("ag", wire_all_gather(CommAlgo::Tree, n, world)),
+        ] {
+            let tree = Arc::new(TreeComm::new(world));
+            std::thread::scope(|s| {
+                for rank in 0..world {
+                    let tree = Arc::clone(&tree);
+                    s.spawn(move || {
+                        let mut d = vec![1.0f32; n];
+                        if which == "rs" {
+                            tree.reduce_scatter_mean(rank, tags::grad(0), &mut d);
+                        } else {
+                            tree.all_gather(rank, tags::value(0), &mut d);
+                        }
+                    });
+                }
+            });
+            assert_eq!(tree.stats.bytes.load(Ordering::Relaxed), want.bytes, "{which}");
+            assert_eq!(tree.stats.hops.load(Ordering::Relaxed), want.hops, "{which}");
+        }
+    }
+
+    #[test]
+    fn world_one_is_identity_with_zero_traffic() {
+        let tree = TreeComm::new(1);
+        let mut d = vec![3.0f32, -1.0];
+        tree.all_reduce_mean(0, tags::LOSS, &mut d);
+        assert_eq!(d, vec![3.0, -1.0]);
+        assert_eq!(tree.stats.bytes.load(Ordering::Relaxed), 0);
+        assert_eq!(tree.stats.rounds.load(Ordering::Relaxed), 1);
+    }
+}

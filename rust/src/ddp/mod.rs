@@ -36,9 +36,16 @@
 //! replica bit-identical, sharded ⇄ unsharded training bit-identical,
 //! and the whole run bit-identical to a single process on the
 //! concatenated batch (asserted in `rust/tests/integration_ddp.rs`).
+//!
+//! [`DdpConfig::algo`] picks the collective topology — flat staged
+//! sessions, chunked ring, or binomial tree ([`crate::comm::CommAlgo`]).
+//! The choice never changes the math (every algorithm reduces in rank
+//! order), only the wire bytes, hop count, and blocked time reported
+//! here and predicted by `memsim::simulate_ddp`
+//! (`rust/tests/integration_comm_model.rs` pins predicted ⇄ measured).
 
 use crate::checkpoint;
-use crate::comm::{tags, CommCtx, Communicator, SharedMemComm};
+use crate::comm::{make_comm, tags, CommAlgo, CommCtx, Communicator};
 use crate::exec::{ExecConfig, Executor};
 use crate::graph::{Graph, ScheduleKind};
 use crate::optim::{Hyper, Optimizer};
@@ -69,6 +76,11 @@ pub struct DdpReport {
     /// rank — includes one-off end-of-run work (forward-fusion flush
     /// gathers, checkpoint state gathers).
     pub comm_rounds: u64,
+    /// Total point-to-point hop legs across the run — the
+    /// topology-sensitive figure: flat sessions cost 2 legs per rank per
+    /// collective, a ring `4(W−1)` per rank, a tree `4(W−1)` total (see
+    /// [`crate::comm::algo`] for the closed forms `memsim` prices).
+    pub comm_hops: u64,
     /// Collectives per rank per *training-loop* step — the unified
     /// round accounting (gradient reduces + ZeRO-1 value gathers + the
     /// loss reduce), snapshotted before any end-of-run flush/checkpoint
@@ -101,11 +113,22 @@ pub struct DdpConfig {
     pub world: usize,
     /// Which executor schedule drives the reduce+update placement.
     pub schedule: ScheduleKind,
+    /// Which collective algorithm the replicas meet through: one flat
+    /// staged session per collective, a chunked ring (bandwidth-
+    /// optimal), or a binomial tree (latency-optimal). All three are
+    /// bit-identical; they differ only in wire bytes, hop count, and
+    /// blocked time (`--algo`).
+    pub algo: CommAlgo,
     /// Steps to run.
     pub steps: usize,
     /// `Some(cap)` trains every replica on bucketed flat storage and
     /// makes the bucket the collective granularity.
     pub bucket_cap_bytes: Option<usize>,
+    /// `Some(cap)` splits backward-fusion reduce-then-update jobs into
+    /// per-chunk jobs of at most `cap` gradient bytes
+    /// ([`crate::exec::ExecConfig::comm_chunk_bytes`]). Replicated
+    /// bucketed runs only.
+    pub comm_chunk_bytes: Option<usize>,
     /// ZeRO-1: reduce-scatter gradients, update only this rank's shard
     /// of every bucket, all-gather values. Requires `bucket_cap_bytes`.
     pub shard_updates: bool,
@@ -138,8 +161,10 @@ impl DdpConfig {
         Self {
             world,
             schedule,
+            algo: CommAlgo::Flat,
             steps,
             bucket_cap_bytes: None,
+            comm_chunk_bytes: None,
             shard_updates: false,
             overlap_threads: 0,
             load_from: None,
@@ -176,7 +201,7 @@ pub fn train_ddp(
         !cfg.shard_updates || cfg.bucket_cap_bytes.is_some(),
         "shard_updates requires bucketed storage: set bucket_cap_bytes (--bucket-cap)"
     );
-    let comm = Arc::new(SharedMemComm::new(world));
+    let comm: Arc<dyn Communicator> = make_comm(cfg.algo, world);
     let rank0: Arc<Mutex<Option<RankZero>>> = Arc::new(Mutex::new(None));
     let batch_maker = Arc::new(cfg.local_batch_maker);
     let sync = Arc::new(Barrier::new(world));
@@ -192,6 +217,7 @@ pub fn train_ddp(
             let schedule = cfg.schedule;
             let steps = cfg.steps;
             let bucket_cap_bytes = cfg.bucket_cap_bytes;
+            let comm_chunk_bytes = cfg.comm_chunk_bytes;
             let shard = cfg.shard_updates;
             let overlap_threads = cfg.overlap_threads;
             let load_from = cfg.load_from.clone();
@@ -203,14 +229,16 @@ pub fn train_ddp(
                     graph,
                     opt,
                     hyper,
-                    ExecConfig { schedule, threads, bucket_cap_bytes, ..Default::default() },
+                    ExecConfig {
+                        schedule,
+                        threads,
+                        bucket_cap_bytes,
+                        comm_chunk_bytes,
+                        ..Default::default()
+                    },
                 )
                 .expect("executor");
-                ex.set_comm(CommCtx {
-                    comm: Arc::clone(&comm) as Arc<dyn Communicator>,
-                    rank,
-                    shard,
-                });
+                ex.set_comm(CommCtx { comm: Arc::clone(&comm), rank, shard });
                 if let Some(path) = &load_from {
                     checkpoint::load(&mut ex, path).expect("ddp: checkpoint restore");
                     if shard {
@@ -301,6 +329,7 @@ pub fn train_ddp(
         iter_ms: rz.loop_wall.as_secs_f64() * 1e3 / cfg.steps.max(1) as f64,
         comm_bytes: stats.bytes.load(Ordering::Relaxed),
         comm_rounds: stats.rounds.load(Ordering::Relaxed),
+        comm_hops: stats.hops.load(Ordering::Relaxed),
         reduces_per_step: rz.in_loop_rounds as f64 / denom,
         comm_wait_ms: stats.wait_ns.load(Ordering::Relaxed) as f64 / 1e6,
         overlap_frac: rz.overlap_frac,

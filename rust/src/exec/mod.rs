@@ -33,7 +33,14 @@
 //! reduce job is submitted the moment the unit's refcounts drain, so the
 //! collective (and, sharded, the shard update + value gather) overlaps
 //! the rest of backward — the distributed analogue of the paper's
-//! Fig. 1d, measured by `overlapped_job_ns / total_job_ns`.
+//! Fig. 1d, measured by `overlapped_job_ns / total_job_ns`. With
+//! [`ExecConfig::comm_chunk_bytes`] the overlap granularity drops from
+//! the bucket to a fixed-size *chunk*: a drained bucket submits one
+//! reduce-then-update job per chunk of its flat arena, so a large
+//! bucket's collective starts earlier and several workers reduce it
+//! concurrently. The collective algorithm itself (flat session, ring,
+//! or binomial tree — [`crate::comm::CommAlgo`]) is the communicator's
+//! concern; every schedule arm here is algorithm-agnostic.
 
 pub mod hooks;
 pub mod pool;
@@ -44,7 +51,7 @@ use crate::ops::OpCtx;
 use crate::optim::{bucket, Hyper, Optimizer};
 use crate::tensor::flat::shard_span;
 use crate::tensor::Tensor;
-use pool::{CommPlan, Job, JobTarget, UpdatePool};
+use pool::{CommChunk, CommPlan, Job, JobTarget, UpdatePool};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -65,6 +72,17 @@ pub struct ExecConfig {
     /// most `cap` bytes of gradient payload per bucket; `None` keeps the
     /// scattered per-parameter layout.
     pub bucket_cap_bytes: Option<usize>,
+    /// DDP backward-fusion overlap granularity: `Some(cap)` splits each
+    /// drained bucket's reduce-then-update into per-chunk jobs of at
+    /// most `cap` gradient bytes (collectives meet on
+    /// [`crate::comm::tags::grad_chunk`]), so a big bucket's collective
+    /// can start overlapping backward before the whole bucket would and
+    /// several workers can reduce one bucket concurrently. Requires
+    /// bucketed storage; ignored without a communicator, under ZeRO-1
+    /// sharding (the shard split already divides the work), and by the
+    /// other schedules (their reduces are bulk/serial by design). Chunk
+    /// grids are deterministic, so chunking never changes the math.
+    pub comm_chunk_bytes: Option<usize>,
 }
 
 impl Default for ExecConfig {
@@ -75,6 +93,7 @@ impl Default for ExecConfig {
             race_guard: true,
             accum_steps: 1,
             bucket_cap_bytes: None,
+            comm_chunk_bytes: None,
         }
     }
 }
@@ -236,6 +255,12 @@ impl Executor {
                 self.opt.name()
             );
         }
+        if self.cfg.comm_chunk_bytes.is_some() && !ctx.shard {
+            assert!(
+                self.graph.store.is_bucketed(),
+                "chunked comm jobs need bucketed storage (set bucket_cap_bytes)"
+            );
+        }
         self.comm = Some(ctx);
     }
 
@@ -309,6 +334,65 @@ impl Executor {
             Some(bs) => JobTarget::Bucket(Arc::clone(&bs.buckets[unit])),
             None => JobTarget::Param(Arc::clone(self.graph.store.get(unit))),
         }
+    }
+
+    /// The deterministic chunk grid for `unit`'s comm jobs: `Some` only
+    /// when chunked overlap applies — a communicator is installed,
+    /// updates are not sharded, storage is bucketed, and the bucket is
+    /// bigger than one chunk. Every rank computes the same grid from the
+    /// same bucket size, so chunk collectives pair up across ranks.
+    fn comm_chunks_of(&self, unit: usize) -> Option<Vec<CommChunk>> {
+        let cap = self.cfg.comm_chunk_bytes?;
+        let ctx = self.comm.as_ref()?;
+        if ctx.shard {
+            return None;
+        }
+        let bs = self.graph.store.buckets.as_ref()?;
+        let total = bs.buckets[unit].data.read().unwrap().num_elems();
+        let chunk_elems = (cap / 4).max(1);
+        if total <= chunk_elems {
+            return None;
+        }
+        let mut chunks = Vec::new();
+        let mut offset = 0;
+        while offset < total {
+            let len = chunk_elems.min(total - offset);
+            chunks.push(CommChunk { index: chunks.len(), offset, len });
+            offset += len;
+        }
+        Some(chunks)
+    }
+
+    /// Inline chunked reduce-then-update of a bucket unit (backward-
+    /// fusion drain point with no pool): the same chunk grid and tags as
+    /// the pool path, executed serially on the calling thread.
+    fn comm_update_unit_chunked(
+        &mut self,
+        unit: usize,
+        step: u64,
+        chunks: &[CommChunk],
+    ) -> Duration {
+        let t0 = Instant::now();
+        let ctx = self.comm.as_ref().expect("comm ctx").clone();
+        let hp = self.hyper_at(step);
+        let bucket = {
+            let bs = self.graph.store.buckets.as_ref().expect("chunking implies buckets");
+            Arc::clone(&bs.buckets[unit])
+        };
+        for chunk in chunks {
+            pool::run_comm_chunk_update(
+                &ctx,
+                unit,
+                *chunk,
+                &bucket,
+                self.opt.as_ref(),
+                step,
+                &hp,
+                self.global_scale,
+            );
+        }
+        self.counters.updates_dispatched += chunks.len() as u64;
+        t0.elapsed()
     }
 
     /// Inline comm-aware unit update (reduce-then-update, sharded when
@@ -587,21 +671,36 @@ impl Executor {
                     let unit = self.graph.store.unit_of(pid);
                     self.count[unit] -= 1;
                     if self.count[unit] == 0 && boundary {
+                        // `Some` only under DDP with chunked overlap on
+                        let chunks = self.comm_chunks_of(unit);
                         if let Some(pool) = &self.pool {
-                            let target = self.job_target(unit);
-                            let comm = self
-                                .comm
-                                .as_ref()
-                                .map(|ctx| CommPlan { ctx: ctx.clone(), unit });
-                            pool.submit(Job {
-                                target,
-                                opt: Arc::clone(&self.opt),
-                                hyper: self.hyper_at(this_step),
-                                step: this_step,
-                                scale: self.global_scale,
-                                comm,
-                            });
-                            self.counters.updates_dispatched += 1;
+                            // one job per chunk when chunking is active
+                            // (the unit's collective splits so it starts
+                            // overlapping backward sooner and spreads
+                            // over workers), else one whole-unit job
+                            let job_chunks: Vec<Option<CommChunk>> = match chunks {
+                                Some(cs) => cs.into_iter().map(Some).collect(),
+                                None => vec![None],
+                            };
+                            let ctx = self.comm.as_ref().cloned();
+                            for chunk in job_chunks {
+                                pool.submit(Job {
+                                    target: self.job_target(unit),
+                                    opt: Arc::clone(&self.opt),
+                                    hyper: self.hyper_at(this_step),
+                                    step: this_step,
+                                    scale: self.global_scale,
+                                    comm: ctx.as_ref().map(|ctx| CommPlan {
+                                        ctx: ctx.clone(),
+                                        unit,
+                                        chunk,
+                                    }),
+                                });
+                                self.counters.updates_dispatched += 1;
+                            }
+                        } else if let Some(chunks) = chunks {
+                            opt_in_bwd +=
+                                self.comm_update_unit_chunked(unit, this_step, &chunks);
                         } else if self.comm.is_some() {
                             // schedule-integrated reduce: the collective
                             // fires at the drain point, inline
@@ -894,7 +993,8 @@ mod tests {
         let d = data(4);
         let mut outs = Vec::new();
         for kind in ScheduleKind::ALL {
-            let cfg = ExecConfig { schedule: kind, threads: 2, race_guard: true, ..Default::default() };
+            let cfg =
+                ExecConfig { schedule: kind, threads: 2, race_guard: true, ..Default::default() };
             let mut ex =
                 Executor::new(build(), Box::new(Adam), Hyper::default(), cfg).unwrap();
             for _ in 0..4 {

@@ -42,6 +42,24 @@ pub struct CommPlan {
     /// Schedulable unit index — the tag namespace for this job's
     /// collectives.
     pub unit: usize,
+    /// `Some` when this job covers one contiguous chunk of the unit's
+    /// flat arena instead of the whole bucket (`ExecConfig::
+    /// comm_chunk_bytes`): the reduce meets on
+    /// [`tags::grad_chunk`]`(unit, chunk.index)` and the fused update
+    /// touches only the chunk's range. Chunk grids are deterministic
+    /// from the bucket size, so every rank submits the same chunk set.
+    pub chunk: Option<CommChunk>,
+}
+
+/// One contiguous chunk of a bucket's flat arena, as a comm-job target.
+#[derive(Debug, Clone, Copy)]
+pub struct CommChunk {
+    /// Chunk index within the unit (the collective tag discriminator).
+    pub index: usize,
+    /// Element offset of the chunk in the flat arena.
+    pub offset: usize,
+    /// Element count of the chunk.
+    pub len: usize,
 }
 
 /// One optimizer-update job: a target unit plus everything needed to
@@ -65,6 +83,21 @@ pub struct Job {
 impl Job {
     fn run(self) {
         match &self.comm {
+            Some(CommPlan { ctx, unit, chunk: Some(chunk) }) => {
+                let JobTarget::Bucket(bucket) = &self.target else {
+                    panic!("chunked comm jobs target buckets");
+                };
+                run_comm_chunk_update(
+                    ctx,
+                    *unit,
+                    *chunk,
+                    bucket,
+                    self.opt.as_ref(),
+                    self.step,
+                    &self.hyper,
+                    self.scale,
+                );
+            }
             Some(plan) => run_comm_update(
                 &plan.ctx,
                 plan.unit,
@@ -187,6 +220,50 @@ pub(crate) fn run_comm_update(
             }
         }
     }
+}
+
+/// Reduce-then-update of one contiguous *chunk* of a bucket — the
+/// per-chunk overlap granularity of backward-fusion under
+/// `ExecConfig::comm_chunk_bytes`. Several chunk jobs of the same bucket
+/// may run on different pool workers at once, so the collective must
+/// not run under the bucket lock: a worker blocked in a collective
+/// while holding its replica's bucket lock would stop that replica's
+/// *other* chunk jobs from issuing their collectives, and two ranks
+/// whose workers picked different chunks first would deadlock. The
+/// chunk's gradients are therefore copied out, reduced lock-free, and
+/// copied back before the range update (bit-identical either way: the
+/// mean and the update rule are elementwise).
+///
+/// Sharding composes with chunking upstream (the executor submits whole
+/// -bucket jobs when `ctx.shard`); this path asserts the replicated
+/// case.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_comm_chunk_update(
+    ctx: &CommCtx,
+    unit: usize,
+    chunk: CommChunk,
+    bucket: &BucketRef,
+    opt: &dyn Optimizer,
+    step: u64,
+    hp: &Hyper,
+    scale: f32,
+) {
+    assert!(!ctx.shard, "chunked comm jobs are replicated-only (shard splits work already)");
+    let (off, len) = (chunk.offset, chunk.len);
+    let mut buf = {
+        let bd = bucket.data.read().unwrap();
+        bd.grads.data()[off..off + len].to_vec()
+    };
+    ctx.comm
+        .all_reduce_mean(ctx.rank, tags::grad_chunk(unit, chunk.index), &mut buf);
+    {
+        let mut bd = bucket.data.write().unwrap();
+        bd.grads.data_mut()[off..off + len].copy_from_slice(&buf);
+        // allocate full-coverage state *before* the range update so
+        // `ensure_state_range` never narrows coverage to one chunk
+        bd.ensure_state(opt.num_state());
+    }
+    apply_bucket_update_range(bucket, opt, step, hp, scale, off, len);
 }
 
 enum Msg {
@@ -358,7 +435,9 @@ mod tests {
         let hp = Hyper { lr: 0.5, weight_decay: 0.0, ..Hyper::default() };
         for round in 0..3 {
             p.data.write().unwrap().grad = Tensor::full(&[8], 1.0);
-            pool.submit(mk_job(JobTarget::Param(Arc::clone(&p)), Arc::clone(&opt), hp.clone(), round + 1));
+            let job =
+                mk_job(JobTarget::Param(Arc::clone(&p)), Arc::clone(&opt), hp.clone(), round + 1);
+            pool.submit(job);
             pool.wait_all();
         }
         assert!((p.data.read().unwrap().value.data()[0] - (1.0 - 1.5)).abs() < 1e-6);
@@ -419,7 +498,7 @@ mod tests {
                             hyper: Hyper { lr: 1.0, weight_decay: 0.0, ..Hyper::default() },
                             step: 1,
                             scale: 1.0,
-                            comm: Some(CommPlan { ctx, unit: 0 }),
+                            comm: Some(CommPlan { ctx, unit: 0, chunk: None }),
                         });
                         pool.wait_all();
                         let mut vals = store.params[0].data.read().unwrap().value.data().to_vec();
@@ -432,5 +511,55 @@ mod tests {
             assert_eq!(outs[0], outs[1], "replicas identical (shard={shard})");
             assert_eq!(outs[0], vec![0.0, 0.0, 0.0, 0.0, 1.0, 1.0], "θ - lr·mean(g)");
         }
+    }
+
+    /// Chunked comm jobs: two ranks each split one 6-element bucket into
+    /// two chunk jobs; the reduced updates must equal the whole-bucket
+    /// path exactly, whatever order the workers pick the chunks in.
+    #[test]
+    fn chunked_comm_jobs_match_whole_bucket_reduce() {
+        use crate::comm::{CommCtx, SharedMemComm};
+        use crate::graph::ParamStore;
+        use crate::optim::bucket::build_buckets;
+        let world = 2;
+        let comm = Arc::new(SharedMemComm::new(world));
+        let outs = Arc::new(Mutex::new(vec![Vec::new(); world]));
+        std::thread::scope(|s| {
+            for rank in 0..world {
+                let comm = Arc::clone(&comm);
+                let outs = Arc::clone(&outs);
+                s.spawn(move || {
+                    let mut store = ParamStore::default();
+                    store.add("a", Tensor::full(&[4], 1.0));
+                    store.add("b", Tensor::full(&[2], 2.0));
+                    let (buckets, _) = build_buckets(&store.params, 1 << 20);
+                    buckets[0].data.write().unwrap().grads =
+                        Tensor::full(&[6], if rank == 0 { 0.5 } else { 1.5 });
+                    let ctx = CommCtx { comm, rank, shard: false };
+                    let pool = UpdatePool::new(2);
+                    for (index, offset, len) in [(0usize, 0usize, 3usize), (1, 3, 3)] {
+                        pool.submit(Job {
+                            target: JobTarget::Bucket(Arc::clone(&buckets[0])),
+                            opt: Arc::new(Sgd),
+                            hyper: Hyper { lr: 1.0, weight_decay: 0.0, ..Hyper::default() },
+                            step: 1,
+                            scale: 1.0,
+                            comm: Some(CommPlan {
+                                ctx: ctx.clone(),
+                                unit: 0,
+                                chunk: Some(CommChunk { index, offset, len }),
+                            }),
+                        });
+                    }
+                    pool.wait_all();
+                    let mut vals = store.params[0].data.read().unwrap().value.data().to_vec();
+                    vals.extend_from_slice(store.params[1].data.read().unwrap().value.data());
+                    outs.lock().unwrap()[rank] = vals;
+                });
+            }
+        });
+        let outs = outs.lock().unwrap();
+        assert_eq!(outs[0], outs[1], "replicas identical");
+        assert_eq!(outs[0], vec![0.0, 0.0, 0.0, 0.0, 1.0, 1.0], "θ - lr·mean(g)");
     }
 }

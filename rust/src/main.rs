@@ -3,16 +3,18 @@
 //! Subcommands:
 //!   info                         engine + artifact summary, Table-1 matrix
 //!   train       --model M --schedule S --optimizer O --batch B --steps N
-//!   simulate    --model M --machine X --batch B --optimizer O  (memsim)
-//!   ddp         --world W --schedule S --steps N
+//!   simulate    --model M --machine X --batch B --optimizer O  (memsim;
+//!               --world W > 1 adds the DDP prediction table, --algo A)
+//!   ddp         --world W --schedule S --steps N --algo flat|ring|tree
 //!   artifacts   list + smoke-execute the AOT artifacts via PJRT
 
+use optfuse::comm::CommAlgo;
 use optfuse::config::Args;
 use optfuse::data;
 use optfuse::ddp::{train_ddp, DdpConfig};
 use optfuse::exec::{ExecConfig, Executor};
 use optfuse::graph::ScheduleKind;
-use optfuse::memsim::{self, machines, spec::OptSpec, zoo};
+use optfuse::memsim::{self, machines, spec::OptSpec, zoo, DdpSimConfig};
 use optfuse::models;
 use optfuse::optim::{self, Hyper};
 use optfuse::runtime::{default_artifacts_dir, Runtime};
@@ -44,7 +46,8 @@ fn info(_args: &Args) -> anyhow::Result<()> {
     println!("  forward-fusion    yes       no           yes");
     println!("  backward-fusion   yes       yes          no");
     println!();
-    println!("models: {}", models::image_zoo().iter().map(|m| m.name).collect::<Vec<_>>().join(", "));
+    let model_names: Vec<_> = models::image_zoo().iter().map(|m| m.name).collect();
+    println!("models: {}", model_names.join(", "));
     println!("optimizers: {}", optim::LOCAL_OPTIMIZERS.join(", "));
     match Runtime::load(default_artifacts_dir()) {
         Ok(rt) => println!("artifacts ({}): {}", rt.platform(), rt.artifact_names().join(", ")),
@@ -173,6 +176,51 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             base.total_s / r.total_s
         );
     }
+    // --world W > 1: the cluster-scaling prediction (memsim comm model)
+    let world = args.usize_or("world", 1);
+    if world > 1 {
+        let algos: Vec<CommAlgo> = match args.get("algo") {
+            None | Some("all") => CommAlgo::ALL.to_vec(),
+            Some(a) => vec![a.parse().map_err(|e: String| anyhow::anyhow!(e))?],
+        };
+        let mut cap = match args.usize_or("bucket-cap", 1 << 20) {
+            0 => None,
+            cap => Some(cap),
+        };
+        let shard = args.flag("shard");
+        if shard && cap.is_none() {
+            cap = Some(1 << 20);
+            println!("(--shard prediction needs bucketed units; defaulting --bucket-cap to 1 MiB)");
+        }
+        let m = machine.with_world(world);
+        println!(
+            "\nDDP prediction: world={world} link {:.1} GB/s, {:.1} µs/hop | \
+             storage={} shard={shard}",
+            m.interconnect.link_bw / 1e9,
+            m.interconnect.hop_latency_s * 1e6,
+            storage_label(cap)
+        );
+        println!(
+            "  algo  schedule          step ms   comm ms  exposed   overlap%   wire MiB  hops"
+        );
+        for algo in algos {
+            for kind in ScheduleKind::ALL {
+                let ddp = DdpSimConfig { algo, bucket_cap_bytes: cap, shard };
+                let r = memsim::simulate_ddp(&m, &net, &opt, batch, kind, ddp);
+                println!(
+                    "  {:<5} {:<16} {:>8.2}  {:>8.2}  {:>7.2}  {:>8.0}%  {:>9.2}  {}",
+                    algo.label(),
+                    kind.label(),
+                    r.step_s * 1e3,
+                    r.comm_serial_s * 1e3,
+                    r.comm_exposed_s * 1e3,
+                    r.overlap_frac * 100.0,
+                    r.wire_per_step.bytes as f64 / (1 << 20) as f64,
+                    r.wire_per_step.hops
+                );
+            }
+        }
+    }
     Ok(())
 }
 
@@ -194,12 +242,35 @@ fn cmd_ddp(args: &Args) -> anyhow::Result<()> {
     // `--overlap N` = N reduce-then-update worker threads per replica
     // (backward-fusion only)
     let overlap = args.usize_or("overlap", 0);
+    // `--algo flat|ring|tree` = collective algorithm (same math, different
+    // wire bytes / hops / blocked time)
+    let algo: CommAlgo = args
+        .str_or("algo", "flat")
+        .parse()
+        .map_err(|e: String| anyhow::anyhow!(e))?;
+    // `--chunk-cap <bytes>` = split backward-fusion reduce jobs per chunk
+    let mut chunk_cap = match args.usize_or("chunk-cap", 0) {
+        0 => None,
+        cap => Some(cap),
+    };
+    if chunk_cap.is_some() && (shard || schedule != ScheduleKind::BackwardFusion) {
+        // don't print a chunk setting that the executor would ignore
+        println!("(--chunk-cap applies to replicated backward-fusion only; ignoring it)");
+        chunk_cap = None;
+    }
+    if chunk_cap.is_some() && bucket_cap.is_none() {
+        bucket_cap = Some(1 << 20);
+        println!("(--chunk-cap needs bucketed storage; defaulting --bucket-cap to 1 MiB)");
+    }
     println!(
-        "DDP: world={world} schedule={} steps={steps} storage={} shard={} overlap_threads={}",
+        "DDP: world={world} schedule={} algo={} steps={steps} storage={} shard={} \
+         overlap_threads={} chunk={:?}",
         schedule.label(),
+        algo.label(),
         storage_label(bucket_cap),
         shard,
-        overlap
+        overlap,
+        chunk_cap
     );
     let report = train_ddp(
         || models::mobilenet_v2_ish(3),
@@ -208,8 +279,10 @@ fn cmd_ddp(args: &Args) -> anyhow::Result<()> {
         DdpConfig {
             world,
             schedule,
+            algo,
             steps,
             bucket_cap_bytes: bucket_cap,
+            comm_chunk_bytes: chunk_cap,
             shard_updates: shard,
             overlap_threads: overlap,
             load_from: None,
@@ -221,11 +294,13 @@ fn cmd_ddp(args: &Args) -> anyhow::Result<()> {
         },
     );
     println!(
-        "iter {:.2} ms | comm {:.2} MiB, {} rounds, {:.1} ms blocked | {:.1} rounds/step | \
-         overlap {:.0}% | opt state {:.1} KiB/replica | {} update elems/step | final loss {:.4}",
+        "iter {:.2} ms | comm {:.2} MiB, {} rounds, {} hops, {:.1} ms blocked | \
+         {:.1} rounds/step | overlap {:.0}% | opt state {:.1} KiB/replica | \
+         {} update elems/step | final loss {:.4}",
         report.iter_ms,
         report.comm_bytes as f64 / (1 << 20) as f64,
         report.comm_rounds,
+        report.comm_hops,
         report.comm_wait_ms,
         report.reduces_per_step,
         report.overlap_frac * 100.0,

@@ -1,12 +1,33 @@
 //! Machine presets. The three GPU machines mirror the paper's Table 2
 //! testbeds (TITAN Xp / GTX 1080 / GTX 1070 maxQ) via their public spec
-//! sheets; host-side overheads reflect the paired CPUs' single-core speed.
+//! sheets; host-side overheads reflect the paired CPUs' single-core
+//! speed. Interconnects: the desktop GPUs replicate over PCIe 3.0-class
+//! links (x16 ≈ 12 GB/s, x8 ≈ 6 GB/s, a few μs per message through the
+//! driver stack); the CPU host replicates over shared memory (a condvar
+//! handoff per hop, memcpy-class bandwidth) — the setting the in-process
+//! DDP harness actually measures.
 
-use super::Machine;
+use super::{Interconnect, Machine};
 
 const GB: f64 = 1e9;
 const TFLOP: f64 = 1e12;
 const MIB: u64 = 1 << 20;
+
+/// PCIe 3.0 x16-class replica interconnect (desktop multi-GPU).
+pub fn pcie_x16(world: usize) -> Interconnect {
+    Interconnect { world, link_bw: 12.0 * GB, hop_latency_s: 5.0e-6 }
+}
+
+/// PCIe 3.0 x8-class replica interconnect (laptop / bifurcated lanes).
+pub fn pcie_x8(world: usize) -> Interconnect {
+    Interconnect { world, link_bw: 6.0 * GB, hop_latency_s: 8.0e-6 }
+}
+
+/// Shared-memory threads (the in-process DDP harness): a hop is a
+/// mutex+condvar handoff, bandwidth is a memcpy.
+pub fn shared_mem(world: usize) -> Interconnect {
+    Interconnect { world, link_bw: 8.0 * GB, hop_latency_s: 3.0e-6 }
+}
 
 /// TITAN Xp + Core i9-7900X (paper Table 2 row 1).
 pub fn titan_xp() -> Machine {
@@ -20,6 +41,7 @@ pub fn titan_xp() -> Machine {
         launch_s: 10.0e-6,
         overlap_efficiency: 0.85,
         ctrl_s: 1.5e-6,
+        interconnect: pcie_x16(1),
     }
 }
 
@@ -36,6 +58,7 @@ pub fn gtx_1080() -> Machine {
         launch_s: 14.0e-6,
         overlap_efficiency: 0.85,
         ctrl_s: 2.5e-6,
+        interconnect: pcie_x16(1),
     }
 }
 
@@ -51,6 +74,7 @@ pub fn gtx_1070_maxq() -> Machine {
         launch_s: 12.0e-6,
         overlap_efficiency: 0.75,
         ctrl_s: 2.0e-6,
+        interconnect: pcie_x8(1),
     }
 }
 
@@ -68,6 +92,7 @@ pub fn cpu_host() -> Machine {
         launch_s: 0.3e-6,
         overlap_efficiency: 0.0,
         ctrl_s: 0.2e-6,
+        interconnect: shared_mem(1),
     }
 }
 
@@ -92,5 +117,14 @@ mod tests {
     #[test]
     fn table2_has_three_rows() {
         assert_eq!(table2_machines().len(), 3);
+    }
+
+    #[test]
+    fn presets_default_to_single_device_and_resize() {
+        for m in table2_machines() {
+            assert_eq!(m.interconnect.world, 1);
+            assert!(m.interconnect.link_bw > 0.0 && m.interconnect.hop_latency_s > 0.0);
+        }
+        assert_eq!(titan_xp().with_world(4).interconnect.world, 4);
     }
 }

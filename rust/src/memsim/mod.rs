@@ -19,12 +19,30 @@
 //! — a roofline with kernel-launch overhead, which is what makes the
 //! unfused eager optimizer expensive at ImageNet scale (hundreds of tiny
 //! elementwise launches) exactly as in PyTorch eager.
+//!
+//! **Cluster axis.** [`Machine`] carries an [`Interconnect`] (link
+//! bandwidth, per-hop latency, world size) and [`simulate_ddp`] extends
+//! the single-device model with *comm kernels*: each gradient
+//! collective is priced by its algorithm's critical path — a flat
+//! session serializes the full volume through one meeting point, the
+//! ring pays `2(W−1)` hop latencies on `1/W`-size chunks
+//! (bandwidth-optimal), the binomial tree `2⌈log₂W⌉` full-buffer hops
+//! (latency-optimal) — and the backward-fusion placement model overlaps
+//! them against backward the way the executor's drain-point jobs do.
+//! Wire-byte/hop accounting reuses the closed forms of
+//! [`crate::comm::algo`], so a prediction's per-collective bytes × hops
+//! match the harness's measured `CommStats` exactly
+//! (`rust/tests/integration_comm_model.rs`).
 
 pub mod machines;
 pub mod spec;
 pub mod zoo;
 
+use crate::comm::algo::{wire_all_gather, wire_all_reduce, wire_reduce_scatter};
+use crate::comm::tree::tree_rounds;
+use crate::comm::{CommAlgo, WireCost};
 use crate::graph::ScheduleKind;
+use crate::optim::bucket::partition_by_bytes;
 use spec::{NetSpec, OptSpec};
 use std::collections::HashMap;
 
@@ -53,6 +71,93 @@ pub struct Machine {
     /// Host-side per-parameter control overhead of the fusion schedules
     /// (flag checks / refcounts, Algs. 2–3), seconds.
     pub ctrl_s: f64,
+    /// The replica interconnect this machine scales over
+    /// ([`simulate_ddp`]); `world: 1` means single-device.
+    pub interconnect: Interconnect,
+}
+
+impl Machine {
+    /// This machine with its interconnect resized to `world` replicas —
+    /// the ergonomic entry into [`simulate_ddp`] sweeps.
+    pub fn with_world(mut self, world: usize) -> Machine {
+        self.interconnect.world = world;
+        self
+    }
+}
+
+/// The replica interconnect of a [`Machine`]: enough to price every
+/// collective algorithm's critical path and total wire traffic.
+#[derive(Debug, Clone)]
+pub struct Interconnect {
+    /// Number of replicas joined by this interconnect.
+    pub world: usize,
+    /// Per-link bandwidth, bytes/s per direction.
+    pub link_bw: f64,
+    /// Per point-to-point message latency, seconds.
+    pub hop_latency_s: f64,
+}
+
+/// Which collective a comm kernel models (the [`Interconnect`] pricing
+/// axis; the byte/hop closed forms live in [`crate::comm::algo`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollOp {
+    /// Full all-reduce (gradient averaging, replicated path).
+    AllReduce,
+    /// Reduce-scatter (ZeRO-1 gradient shard).
+    ReduceScatter,
+    /// All-gather (ZeRO-1 value refresh).
+    AllGather,
+}
+
+impl Interconnect {
+    /// Critical-path seconds of one collective over `n` f32 elements
+    /// with algorithm `algo`. `B = 4n`, `W = world`, `R = ⌈log₂W⌉`:
+    ///
+    /// * flat all-reduce: `2·lat + 2(W−1)·B/bw` — two session legs, the
+    ///   full volume serialized through the meeting point;
+    /// * ring all-reduce: `2(W−1)·(lat + (B/W)/bw)` — every link busy
+    ///   every step on `1/W` chunks (bandwidth-optimal, latency-heavy);
+    /// * tree all-reduce: `2R·(lat + B/bw)` — `log W` full-buffer hops
+    ///   each way (latency-optimal, bandwidth-heavy).
+    ///
+    /// Reduce-scatter / all-gather are the matching halves (the tree
+    /// variants add the root's serialized span scatter/gather star).
+    pub fn collective_s(&self, algo: CommAlgo, op: CollOp, n: usize) -> f64 {
+        let w = self.world;
+        if w <= 1 {
+            return 0.0;
+        }
+        let b = (4 * n) as f64;
+        let lat = self.hop_latency_s;
+        let bw = self.link_bw;
+        let wf = w as f64;
+        let steps = wf - 1.0;
+        let r = tree_rounds(w) as f64;
+        match (algo, op) {
+            (CommAlgo::Flat, CollOp::AllReduce) => 2.0 * lat + 2.0 * steps * b / bw,
+            (CommAlgo::Flat, CollOp::ReduceScatter) | (CommAlgo::Flat, CollOp::AllGather) => {
+                2.0 * lat + steps * (b + b / wf) / bw
+            }
+            (CommAlgo::Ring, CollOp::AllReduce) => 2.0 * steps * (lat + (b / wf) / bw),
+            (CommAlgo::Ring, CollOp::ReduceScatter) | (CommAlgo::Ring, CollOp::AllGather) => {
+                steps * (lat + (b / wf) / bw)
+            }
+            (CommAlgo::Tree, CollOp::AllReduce) => 2.0 * r * (lat + b / bw),
+            (CommAlgo::Tree, CollOp::ReduceScatter) | (CommAlgo::Tree, CollOp::AllGather) => {
+                r * (lat + b / bw) + steps * (lat + (b / wf) / bw)
+            }
+        }
+    }
+
+    /// Exact wire accounting of one collective — the same closed forms
+    /// the real communicators record into `CommStats`.
+    pub fn wire(&self, algo: CommAlgo, op: CollOp, n: usize) -> WireCost {
+        match op {
+            CollOp::AllReduce => wire_all_reduce(algo, n, self.world),
+            CollOp::ReduceScatter => wire_reduce_scatter(algo, n, self.world),
+            CollOp::AllGather => wire_all_gather(algo, n, self.world),
+        }
+    }
 }
 
 /// Identifies a tensor in the cache simulator.
@@ -308,6 +413,140 @@ pub fn simulate(
     res
 }
 
+/// Collective-granularity units of a DDP step: the flattened parameter
+/// tensor sizes grouped by the same greedy byte-capped partition the
+/// real `ParamStore::bucketize` uses ([`partition_by_bytes`]) — which is
+/// what makes a memsim prediction's collective set identical to the
+/// harness's, bucket for bucket. `None` models scattered storage (one
+/// collective per parameter tensor).
+pub fn comm_unit_elems(net: &NetSpec, bucket_cap_bytes: Option<usize>) -> Vec<usize> {
+    let lens = net.param_elem_list();
+    match bucket_cap_bytes {
+        None => lens,
+        Some(cap) => partition_by_bytes(&lens, cap)
+            .iter()
+            .map(|group| group.iter().map(|i| lens[*i]).sum())
+            .collect(),
+    }
+}
+
+/// DDP replication knobs of a [`simulate_ddp`] prediction (world size
+/// comes from the machine's [`Interconnect`]).
+#[derive(Debug, Clone, Copy)]
+pub struct DdpSimConfig {
+    /// Collective algorithm to price.
+    pub algo: CommAlgo,
+    /// Bucketed (`Some(cap)`) or scattered (`None`) collective units.
+    pub bucket_cap_bytes: Option<usize>,
+    /// ZeRO-1: gradients reduce-scatter and values all-gather instead of
+    /// one all-reduce per unit.
+    pub shard: bool,
+}
+
+/// Predicted per-iteration breakdown of a DDP step — the cluster-side
+/// analogue of [`SimResult`], comparable to the harness's `DdpReport`.
+#[derive(Debug, Clone)]
+pub struct DdpSimResult {
+    /// The single-replica compute prediction the comm model extends.
+    pub compute: SimResult,
+    /// Serial sum of all per-step collective critical paths (gradient
+    /// units + the scalar loss reduce).
+    pub comm_serial_s: f64,
+    /// Collective time left exposed on the critical path after the
+    /// schedule's overlap (equals `comm_serial_s` for baseline and
+    /// forward-fusion, less for backward-fusion).
+    pub comm_exposed_s: f64,
+    /// Predicted fraction of gradient-collective time hidden behind
+    /// backward — the model's estimate of `DdpReport::overlap_frac`.
+    pub overlap_frac: f64,
+    /// Predicted per-iteration wallclock: compute + exposed comm.
+    pub step_s: f64,
+    /// Exact per-step wire accounting, summed over the unit collectives
+    /// and the loss reduce — matches the measured `CommStats` delta of
+    /// one unsharded or ZeRO-1 training step exactly.
+    pub wire_per_step: WireCost,
+}
+
+/// Predict one DDP training iteration: the single-device [`simulate`]
+/// plus the interconnect-priced collectives, placed where the schedule
+/// places them — serialized after backward (baseline: reduce+update per
+/// unit; forward-fusion: bulk reduce), or overlapped against backward at
+/// the refcount drain points (backward-fusion), with unit `i` of `U`
+/// assumed to drain once backward has retired the layers above it.
+pub fn simulate_ddp(
+    m: &Machine,
+    net: &NetSpec,
+    opt: &OptSpec,
+    batch: usize,
+    schedule: ScheduleKind,
+    ddp: DdpSimConfig,
+) -> DdpSimResult {
+    // mirror the harness's own constraint (`train_ddp` rejects sharding
+    // over scattered storage), so every prediction describes a run that
+    // can actually be measured
+    assert!(
+        !ddp.shard || ddp.bucket_cap_bytes.is_some(),
+        "simulate_ddp: ZeRO-1 sharding requires bucketed units (set bucket_cap_bytes)"
+    );
+    let compute = simulate(m, net, opt, batch, schedule);
+    let ic = &m.interconnect;
+    let units = comm_unit_elems(net, ddp.bucket_cap_bytes);
+    let unit_s: Vec<f64> = units
+        .iter()
+        .map(|n| {
+            if ddp.shard {
+                ic.collective_s(ddp.algo, CollOp::ReduceScatter, *n)
+                    + ic.collective_s(ddp.algo, CollOp::AllGather, *n)
+            } else {
+                ic.collective_s(ddp.algo, CollOp::AllReduce, *n)
+            }
+        })
+        .collect();
+    let loss_s = ic.collective_s(ddp.algo, CollOp::AllReduce, 1);
+    let grad_comm: f64 = unit_s.iter().sum();
+    let comm_serial_s = grad_comm + loss_s;
+    let mut wire_per_step = WireCost::default();
+    for n in &units {
+        if ddp.shard {
+            wire_per_step += ic.wire(ddp.algo, CollOp::ReduceScatter, *n);
+            wire_per_step += ic.wire(ddp.algo, CollOp::AllGather, *n);
+        } else {
+            wire_per_step += ic.wire(ddp.algo, CollOp::AllReduce, *n);
+        }
+    }
+    wire_per_step += ic.wire(ddp.algo, CollOp::AllReduce, 1);
+
+    let (comm_exposed_s, overlap_frac) = match schedule {
+        ScheduleKind::Baseline | ScheduleKind::ForwardFusion => (comm_serial_s, 0.0),
+        ScheduleKind::BackwardFusion => {
+            // drain-point pipeline: backward retires units in reverse
+            // order at evenly-spaced points; a unit's collective starts
+            // at max(its drain point, the previous collective's finish)
+            let bwd = compute.backward_s;
+            let n_units = unit_s.len();
+            let mut finish = 0.0f64;
+            let mut hidden = 0.0f64;
+            for (i, c) in unit_s.iter().enumerate().rev() {
+                let drain = bwd * (n_units - i) as f64 / n_units.max(1) as f64;
+                let start = drain.max(finish);
+                finish = start + c;
+                hidden += bwd.min(finish) - bwd.min(start);
+            }
+            let exposed = (finish - bwd).max(0.0) + loss_s;
+            let frac = if grad_comm > 0.0 { hidden / grad_comm } else { 0.0 };
+            (exposed, frac)
+        }
+    };
+    DdpSimResult {
+        step_s: compute.total_s + comm_exposed_s,
+        compute,
+        comm_serial_s,
+        comm_exposed_s,
+        overlap_frac,
+        wire_per_step,
+    }
+}
+
 /// Theoretical speedup model from the paper §C.2:
 /// `s = (b·t_grad + t_opt) / (b·t_grad + t_opt − t_saved)`.
 pub fn theoretical_speedup(b: f64, t_grad: f64, t_opt: f64, t_saved: f64) -> f64 {
@@ -393,6 +632,89 @@ mod tests {
             (s64 - s256).abs() / s64.max(s256) < 0.35,
             "saved ms should be roughly flat: {s64:.2} vs {s256:.2}"
         );
+    }
+
+    #[test]
+    fn interconnect_prices_latency_vs_bandwidth_regimes() {
+        let m = titan_xp().with_world(4);
+        let ic = &m.interconnect;
+        // tiny buffer: latency dominates → flat (2 legs) < tree (2·logW)
+        // < ring (2(W−1))
+        let small = 64;
+        let f = ic.collective_s(CommAlgo::Flat, CollOp::AllReduce, small);
+        let t = ic.collective_s(CommAlgo::Tree, CollOp::AllReduce, small);
+        let r = ic.collective_s(CommAlgo::Ring, CollOp::AllReduce, small);
+        assert!(f < t && t < r, "latency regime: flat {f:.2e} < tree {t:.2e} < ring {r:.2e}");
+        // huge buffer: bandwidth dominates → ring (chunked, every link
+        // busy) < tree (log W full copies) < flat (root-serialized)
+        let big = 32 << 20;
+        let f = ic.collective_s(CommAlgo::Flat, CollOp::AllReduce, big);
+        let t = ic.collective_s(CommAlgo::Tree, CollOp::AllReduce, big);
+        let r = ic.collective_s(CommAlgo::Ring, CollOp::AllReduce, big);
+        assert!(r < t && t < f, "bandwidth regime: ring {r:.2e} < tree {t:.2e} < flat {f:.2e}");
+    }
+
+    #[test]
+    fn world_one_collectives_are_free() {
+        let m = titan_xp(); // world = 1 preset
+        for algo in CommAlgo::ALL {
+            assert_eq!(m.interconnect.collective_s(algo, CollOp::AllReduce, 1 << 20), 0.0);
+        }
+    }
+
+    #[test]
+    fn comm_units_mirror_bucket_partition() {
+        let net = zoo::mobilenet_v2();
+        let scattered = comm_unit_elems(&net, None);
+        assert_eq!(scattered.len(), net.num_param_tensors());
+        let one = comm_unit_elems(&net, Some(usize::MAX));
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0] as u64, net.total_params());
+        let capped = comm_unit_elems(&net, Some(1 << 20));
+        assert!(capped.len() > 1 && capped.len() < scattered.len());
+        assert_eq!(capped.iter().sum::<usize>() as u64, net.total_params());
+    }
+
+    #[test]
+    fn backward_fusion_hides_collectives_the_other_schedules_expose() {
+        let m = titan_xp().with_world(4);
+        let net = zoo::mobilenet_v2();
+        let opt = OptSpec::adam();
+        let ddp = DdpSimConfig {
+            algo: CommAlgo::Ring,
+            bucket_cap_bytes: Some(1 << 20),
+            shard: false,
+        };
+        let base = simulate_ddp(&m, &net, &opt, 32, ScheduleKind::Baseline, ddp);
+        let bf = simulate_ddp(&m, &net, &opt, 32, ScheduleKind::BackwardFusion, ddp);
+        assert_eq!(base.overlap_frac, 0.0);
+        assert_eq!(base.comm_exposed_s, base.comm_serial_s);
+        assert!(bf.overlap_frac > 0.0, "drain-point pipeline must hide some comm");
+        assert!(
+            bf.comm_exposed_s < bf.comm_serial_s,
+            "exposed {:.3e} < serial {:.3e}",
+            bf.comm_exposed_s,
+            bf.comm_serial_s
+        );
+        // same wire volume either way: overlap moves time, not bytes
+        assert_eq!(base.wire_per_step, bf.wire_per_step);
+        assert!(bf.step_s > bf.compute.total_s, "loss reduce always exposed");
+    }
+
+    #[test]
+    fn sharded_prediction_prices_scatter_plus_gather() {
+        let m = titan_xp().with_world(4);
+        let net = zoo::mobilenet_v2();
+        let opt = OptSpec::adam();
+        let cap = Some(1 << 20);
+        let unsharded = DdpSimConfig { algo: CommAlgo::Ring, bucket_cap_bytes: cap, shard: false };
+        let sharded = DdpSimConfig { shard: true, ..unsharded };
+        let u = simulate_ddp(&m, &net, &opt, 32, ScheduleKind::Baseline, unsharded);
+        let s = simulate_ddp(&m, &net, &opt, 32, ScheduleKind::Baseline, sharded);
+        // ring RS + AG equals ring AR in both time and wire closed forms
+        let rel = (u.comm_serial_s - s.comm_serial_s).abs() / u.comm_serial_s;
+        assert!(rel < 1e-9, "ring RS+AG ≡ ring AR: {rel}");
+        assert_eq!(u.wire_per_step, s.wire_per_step);
     }
 
     #[test]

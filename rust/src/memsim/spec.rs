@@ -52,6 +52,19 @@ impl NetSpec {
         self.total_params() as f64 / self.num_param_layers().max(1) as f64
     }
 
+    /// Every parameter tensor's element count, flattened in layer order —
+    /// the same sequence the runnable engine's `ParamStore` registers
+    /// parameters in, and therefore the sequence
+    /// `optim::bucket::partition_by_bytes` groups into buckets. The comm
+    /// model ([`crate::memsim::comm_unit_elems`]) derives its collective
+    /// units from this, bucket-for-bucket identical to the harness.
+    pub fn param_elem_list(&self) -> Vec<usize> {
+        self.layers
+            .iter()
+            .flat_map(|l| l.param_elems.iter().map(|e| *e as usize))
+            .collect()
+    }
+
     pub fn flops_per_item(&self) -> f64 {
         self.layers.iter().map(|l| l.flops_per_item).sum()
     }
@@ -185,25 +198,67 @@ pub struct OptSpec {
 
 impl OptSpec {
     pub fn sgd() -> Self {
-        Self { name: "sgd", state_slots: 0, flops_per_elem: 4, kernels_per_param: 3, traffic_amplification: 1.5 }
+        Self {
+            name: "sgd",
+            state_slots: 0,
+            flops_per_elem: 4,
+            kernels_per_param: 3,
+            traffic_amplification: 1.5,
+        }
     }
     pub fn sgd_momentum() -> Self {
-        Self { name: "sgd_momentum", state_slots: 1, flops_per_elem: 7, kernels_per_param: 5, traffic_amplification: 2.0 }
+        Self {
+            name: "sgd_momentum",
+            state_slots: 1,
+            flops_per_elem: 7,
+            kernels_per_param: 5,
+            traffic_amplification: 2.0,
+        }
     }
     pub fn adam() -> Self {
-        Self { name: "adam", state_slots: 2, flops_per_elem: 13, kernels_per_param: 10, traffic_amplification: 2.5 }
+        Self {
+            name: "adam",
+            state_slots: 2,
+            flops_per_elem: 13,
+            kernels_per_param: 10,
+            traffic_amplification: 2.5,
+        }
     }
     pub fn adamw() -> Self {
-        Self { name: "adamw", state_slots: 2, flops_per_elem: 14, kernels_per_param: 11, traffic_amplification: 2.5 }
+        Self {
+            name: "adamw",
+            state_slots: 2,
+            flops_per_elem: 14,
+            kernels_per_param: 11,
+            traffic_amplification: 2.5,
+        }
     }
     pub fn adagrad() -> Self {
-        Self { name: "adagrad", state_slots: 1, flops_per_elem: 8, kernels_per_param: 6, traffic_amplification: 2.0 }
+        Self {
+            name: "adagrad",
+            state_slots: 1,
+            flops_per_elem: 8,
+            kernels_per_param: 6,
+            traffic_amplification: 2.0,
+        }
     }
     pub fn adadelta() -> Self {
-        Self { name: "adadelta", state_slots: 2, flops_per_elem: 14, kernels_per_param: 12, traffic_amplification: 2.8 }
+        Self {
+            name: "adadelta",
+            state_slots: 2,
+            flops_per_elem: 14,
+            kernels_per_param: 12,
+            traffic_amplification: 2.8,
+        }
     }
     pub fn rmsprop() -> Self {
-        Self { name: "rmsprop", state_slots: 1, flops_per_elem: 9, kernels_per_param: 7, traffic_amplification: 2.2 }
+        Self {
+            name: "rmsprop",
+            state_slots: 1,
+            flops_per_elem: 9,
+            kernels_per_param: 7,
+            traffic_amplification: 2.2,
+        }
     }
     pub fn by_name(name: &str) -> Option<Self> {
         Some(match name {
@@ -261,6 +316,7 @@ mod tests {
         assert_eq!(n.num_param_tensors(), 2);
         assert_eq!(n.num_param_layers(), 1);
         assert_eq!(n.avg_params_per_layer(), 72.0);
+        assert_eq!(n.param_elem_list(), vec![64, 8]);
     }
 
     #[test]

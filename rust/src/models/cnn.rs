@@ -297,7 +297,8 @@ pub fn deep_mlp(seed: u64) -> Graph {
         let r = g.push(&format!("relu{i}"), Box::new(Relu), vec![cur], vec![]);
         let w = g.param(&format!("fc{i}.w"), &[d, d], &mut rng);
         // residual-free plain stack; small init keeps activations sane
-        let lin = g.push(&format!("fc{i}"), Box::new(Linear::new(false)), vec![Src::Node(r)], vec![w]);
+        let lin =
+            g.push(&format!("fc{i}"), Box::new(Linear::new(false)), vec![Src::Node(r)], vec![w]);
         cur = Src::Node(lin);
     }
     let w_out = g.param("fc_out.w", &[d, 10], &mut rng);
@@ -369,7 +370,12 @@ mod tests {
                     g,
                     Box::new(Adam),
                     Hyper::default(),
-                    ExecConfig { schedule: kind, threads: 2, race_guard: true, ..Default::default() },
+                    ExecConfig {
+                        schedule: kind,
+                        threads: 2,
+                        race_guard: true,
+                        ..Default::default()
+                    },
                 )
                 .unwrap();
                 let s = ex.train_step(&data);

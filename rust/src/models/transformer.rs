@@ -64,7 +64,8 @@ pub fn transformer_lm(cfg: &TransformerCfg, seed: u64) -> Graph {
         "embed.table",
         Tensor::randn(&[cfg.vocab, d], 0.02, &mut rng),
     );
-    let mut cur = Src::Node(g.push("embed", Box::new(Embedding), vec![Src::External(0)], vec![table]));
+    let embed = g.push("embed", Box::new(Embedding), vec![Src::External(0)], vec![table]);
+    let mut cur = Src::Node(embed);
 
     for li in 0..cfg.layers {
         // --- attention sublayer (pre-LN) ---
@@ -102,9 +103,13 @@ pub fn transformer_lm(cfg: &TransformerCfg, seed: u64) -> Graph {
             &format!("l{li}.v.w"),
             Tensor::randn(&[3 * d, d], (1.0 / (3 * d) as f32).sqrt(), &mut rng),
         );
-        let q = g.push(&format!("l{li}.q"), Box::new(Linear::new(false)), vec![Src::Node(qkv)], vec![wq]);
-        let k = g.push(&format!("l{li}.k"), Box::new(Linear::new(false)), vec![Src::Node(qkv)], vec![wk]);
-        let v = g.push(&format!("l{li}.v"), Box::new(Linear::new(false)), vec![Src::Node(qkv)], vec![wv]);
+        let lin = |g: &mut Graph, tag: &str, w| {
+            let name = format!("l{li}.{tag}");
+            g.push(&name, Box::new(Linear::new(false)), vec![Src::Node(qkv)], vec![w])
+        };
+        let q = lin(&mut g, "q", wq);
+        let k = lin(&mut g, "k", wk);
+        let v = lin(&mut g, "v", wv);
         let attn = g.push(
             &format!("l{li}.attn"),
             Box::new(MultiHeadAttention::new(cfg.heads, true)),
@@ -157,7 +162,8 @@ pub fn transformer_lm(cfg: &TransformerCfg, seed: u64) -> Graph {
             vec![Src::Node(gelu)],
             vec![w2, b2],
         );
-        let res2 = g.push(&format!("l{li}.res2"), Box::new(Add), vec![Src::Node(res1), Src::Node(ff2)], vec![]);
+        let res2_inputs = vec![Src::Node(res1), Src::Node(ff2)];
+        let res2 = g.push(&format!("l{li}.res2"), Box::new(Add), res2_inputs, vec![]);
         cur = Src::Node(res2);
     }
 
@@ -238,7 +244,12 @@ mod tests {
             g,
             Box::new(AdamW),
             Hyper { lr: 3e-3, weight_decay: 0.0, ..Hyper::default() },
-            ExecConfig { schedule: ScheduleKind::BackwardFusion, threads: 2, race_guard: true, ..Default::default() },
+            ExecConfig {
+                schedule: ScheduleKind::BackwardFusion,
+                threads: 2,
+                race_guard: true,
+                ..Default::default()
+            },
         )
         .unwrap();
         let corpus: Vec<u8> = (0..1024u32).map(|i| (i % 97) as u8).collect();

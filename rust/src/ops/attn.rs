@@ -44,7 +44,8 @@ impl Op for MultiHeadAttention {
                 // scores[t,t] = Q_h K_hᵀ * scale
                 let att = &mut probs[(bi * h + hi) * t * t..(bi * h + hi + 1) * t * t];
                 for i in 0..t {
-                    let qrow = &q.data()[(bi * t + i) * d + hi * dh..(bi * t + i) * d + (hi + 1) * dh];
+                    let qoff = (bi * t + i) * d;
+                    let qrow = &q.data()[qoff + hi * dh..qoff + (hi + 1) * dh];
                     for j in 0..t {
                         if self.causal && j > i {
                             att[i * t + j] = f32::NEG_INFINITY;
@@ -214,7 +215,8 @@ mod tests {
         let q = Tensor::zeros(&[1, 2, 2]);
         let k = Tensor::zeros(&[1, 2, 2]);
         let v = Tensor::from_vec(&[1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
-        let y = MultiHeadAttention::new(1, false).forward(&[&q, &k, &v], &[], &mut OpCtx::default());
+        let y =
+            MultiHeadAttention::new(1, false).forward(&[&q, &k, &v], &[], &mut OpCtx::default());
         assert_eq!(y.data(), &[2.0, 3.0, 2.0, 3.0]);
     }
 
@@ -231,8 +233,11 @@ mod tests {
         let loss = |qq: &Tensor, kk: &Tensor, vv: &Tensor| {
             quad(&op.forward(&[qq, kk, vv], &[], &mut OpCtx::default()))
         };
-        grad_check(&q, grads.inputs[0].as_ref().unwrap(), 1e-2, 5e-2, |qp| loss(qp, &k, &v), "mha dQ");
-        grad_check(&k, grads.inputs[1].as_ref().unwrap(), 1e-2, 5e-2, |kp| loss(&q, kp, &v), "mha dK");
-        grad_check(&v, grads.inputs[2].as_ref().unwrap(), 1e-2, 5e-2, |vp| loss(&q, &k, vp), "mha dV");
+        let dq = grads.inputs[0].as_ref().unwrap();
+        grad_check(&q, dq, 1e-2, 5e-2, |qp| loss(qp, &k, &v), "mha dQ");
+        let dk = grads.inputs[1].as_ref().unwrap();
+        grad_check(&k, dk, 1e-2, 5e-2, |kp| loss(&q, kp, &v), "mha dK");
+        let dv = grads.inputs[2].as_ref().unwrap();
+        grad_check(&v, dv, 1e-2, 5e-2, |vp| loss(&q, &k, vp), "mha dV");
     }
 }

@@ -1,0 +1,349 @@
+//! The comm-model acceptance suite (tier-1): topology-aware collectives
+//! and the memsim cluster-scaling predictor.
+//!
+//! * **Bit-identity.** Ring and tree all-reduce trains bit-identically
+//!   to the flat `SharedMemComm` at every world size — across schedules,
+//!   bucketed storage, worker-pool overlap, and ZeRO-1 sharding. (The
+//!   per-collective bit-identity lives in `comm::ring`/`comm::tree` unit
+//!   tests; this file asserts it end-to-end through the executor.)
+//! * **Exact wire accounting.** A DDP run's measured `CommStats` bytes
+//!   and hop legs equal `steps ×` the closed forms in `comm::algo` —
+//!   the same functions `memsim::simulate_ddp` prices from — summed over
+//!   the run's actual bucket layout plus the per-step loss reduce. No
+//!   tolerance: the model and the harness share one accounting
+//!   definition, so the match is exact, per collective.
+//! * **Predicted ⇄ measured ranking.** memsim's predicted step-time
+//!   ordering of {flat, ring, tree} matches the harness's measured
+//!   blocked-time ordering for every schedule, on (at least) two
+//!   machines from `table2_machines()`. Collective payloads are kept in
+//!   the latency-dominated regime, where the shared-memory harness and
+//!   the PCIe-class machine models agree on what matters: hop count.
+//!   Wallclock is involved, so the measurement uses min-of-3 runs and up
+//!   to three attempts.
+//! * **Chunked overlap.** Per-chunk backward-fusion reduce jobs
+//!   (`comm_chunk_bytes`) are bit-identical to whole-bucket jobs and
+//!   multiply the collective round count by the chunk factor.
+
+use optfuse::comm::{wire_all_gather, wire_all_reduce, wire_reduce_scatter, CommAlgo, WireCost};
+use optfuse::data::image_batch;
+use optfuse::ddp::{train_ddp, DdpConfig, DdpReport};
+use optfuse::graph::{Graph, ScheduleKind, Src};
+use optfuse::memsim::machines::table2_machines;
+use optfuse::memsim::spec::{LayerSpec, NetSpec, OptSpec};
+use optfuse::memsim::{simulate_ddp, DdpSimConfig};
+use optfuse::models::mlp;
+use optfuse::ops::activation::Relu;
+use optfuse::ops::dense::Linear;
+use optfuse::ops::loss::MseLoss;
+use optfuse::optim::bucket::partition_by_bytes;
+use optfuse::optim::{Hyper, Optimizer, SgdMomentum};
+use optfuse::tensor::Tensor;
+use optfuse::util::XorShiftRng;
+
+fn sgd_momentum() -> Box<dyn Optimizer> {
+    Box::new(SgdMomentum)
+}
+
+fn sgd_hyper() -> Hyper {
+    Hyper { lr: 0.05, weight_decay: 0.0, ..Hyper::default() }
+}
+
+fn image_batch_maker() -> Box<dyn Fn(usize, usize) -> Vec<Tensor> + Send + Sync> {
+    Box::new(|rank, step| {
+        let mut rng = XorShiftRng::new(((rank as u64) << 32) | step as u64);
+        image_batch(2, 3, 16, 16, 10, &mut rng)
+    })
+}
+
+fn max_param_diff(a: &[Tensor], b: &[Tensor]) -> f32 {
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| x.max_abs_diff(y))
+        .fold(0.0f32, f32::max)
+}
+
+/// A small MLP with `layers` dense 16×16 layers (1 KiB per parameter):
+/// many schedulable units whose collectives stay firmly in the
+/// latency-dominated regime on every machine model.
+fn lane_graph(seed: u64, layers: usize) -> Graph {
+    let mut rng = XorShiftRng::new(seed);
+    let mut g = Graph::new("lanes", 2);
+    let mut prev = Src::External(0);
+    for l in 0..layers {
+        let w = g.param(&format!("w{l}"), &[16, 16], &mut rng);
+        let lin = g.push(&format!("fc{l}"), Box::new(Linear::new(false)), vec![prev], vec![w]);
+        let act = g.push(&format!("relu{l}"), Box::new(Relu), vec![Src::Node(lin)], vec![]);
+        prev = Src::Node(act);
+    }
+    let loss = g.push("mse", Box::new(MseLoss), vec![prev, Src::External(1)], vec![]);
+    g.set_loss(loss);
+    g
+}
+
+fn lane_batch(rank: usize, step: usize) -> Vec<Tensor> {
+    let mut rng = XorShiftRng::new(4000 + ((rank as u64) << 20) + step as u64);
+    vec![Tensor::randn(&[4, 16], 1.0, &mut rng), Tensor::randn(&[4, 16], 1.0, &mut rng)]
+}
+
+/// The memsim mirror of [`lane_graph`]: same parameter tensor sizes in
+/// the same order, so `comm_unit_elems` reproduces the harness's bucket
+/// layout exactly.
+fn lane_netspec(layers: usize) -> NetSpec {
+    NetSpec {
+        name: "lanes".into(),
+        layers: (0..layers)
+            .map(|l| LayerSpec {
+                name: format!("fc{l}"),
+                param_elems: vec![256],
+                in_elems: 16,
+                out_elems: 16,
+                flops_per_item: 2.0 * 256.0,
+            })
+            .collect(),
+    }
+}
+
+/// Acceptance: ring and tree all-reduce are bit-identical to flat at
+/// every world size — through the executor's schedules, the worker
+/// pool, bucketed storage, and ZeRO-1 sharding.
+#[test]
+fn ring_and_tree_train_bit_identically_to_flat_at_every_world_size() {
+    // (schedule, bucket cap, shard, overlap threads)
+    let configs: &[(ScheduleKind, Option<usize>, bool, usize)] = &[
+        (ScheduleKind::Baseline, None, false, 0),
+        (ScheduleKind::ForwardFusion, Some(1 << 20), false, 0),
+        (ScheduleKind::BackwardFusion, Some(1 << 12), false, 2),
+        (ScheduleKind::Baseline, Some(1 << 12), true, 0),
+    ];
+    let run = |world: usize,
+               algo: CommAlgo,
+               (schedule, cap, shard, overlap): (ScheduleKind, Option<usize>, bool, usize)|
+     -> DdpReport {
+        let mut cfg = DdpConfig::new(world, schedule, 3, image_batch_maker());
+        cfg.algo = algo;
+        cfg.bucket_cap_bytes = cap;
+        cfg.shard_updates = shard;
+        cfg.overlap_threads = overlap;
+        train_ddp(|| mlp(99), sgd_momentum, sgd_hyper(), cfg)
+    };
+    for world in [1usize, 2, 3, 4] {
+        for &config in configs {
+            let flat = run(world, CommAlgo::Flat, config);
+            for algo in [CommAlgo::Ring, CommAlgo::Tree] {
+                let other = run(world, algo, config);
+                assert_eq!(
+                    flat.losses, other.losses,
+                    "world {world} {config:?} {}: losses must be bit-identical to flat",
+                    algo.label()
+                );
+                assert_eq!(
+                    max_param_diff(&flat.final_params, &other.final_params),
+                    0.0,
+                    "world {world} {config:?} {}: final params bit-identical to flat",
+                    algo.label()
+                );
+                // same collectives, same round accounting
+                assert_eq!(other.reduces_per_step, flat.reduces_per_step);
+            }
+        }
+    }
+}
+
+/// Acceptance: measured wire bytes × hop legs equal the closed forms —
+/// exactly — for every algorithm, for replicated and ZeRO-1 runs. The
+/// expectation is assembled per collective (each gradient unit of the
+/// run's actual bucket layout, plus the scalar loss reduce), so the
+/// per-collective accounting is pinned, not just the totals.
+#[test]
+fn wire_accounting_matches_closed_forms_exactly() {
+    let world = 3;
+    let steps = 4;
+    let cap = 1 << 10; // 1 KiB buckets over 1 KiB params: one per layer
+    let layers = 5;
+    // the run's collective units, derived the same way the store does
+    let lens: Vec<usize> = {
+        let g = lane_graph(11, layers);
+        g.store
+            .params
+            .iter()
+            .map(|p| p.data.read().unwrap().value.len())
+            .collect()
+    };
+    let units: Vec<usize> = partition_by_bytes(&lens, cap)
+        .iter()
+        .map(|group| group.iter().map(|i| lens[*i]).sum())
+        .collect();
+    let schedules =
+        [ScheduleKind::Baseline, ScheduleKind::ForwardFusion, ScheduleKind::BackwardFusion];
+    for shard in [false, true] {
+        for schedule in schedules {
+            if shard && schedule == ScheduleKind::ForwardFusion {
+                // FF's end-of-run flush all-gathers under sharding —
+                // steady-state per-step accounting doesn't apply
+                continue;
+            }
+            for algo in CommAlgo::ALL {
+                let mut cfg = DdpConfig::new(world, schedule, steps, Box::new(lane_batch));
+                cfg.algo = algo;
+                cfg.bucket_cap_bytes = Some(cap);
+                cfg.shard_updates = shard;
+                let r = train_ddp(|| lane_graph(11, layers), sgd_momentum, sgd_hyper(), cfg);
+                let mut per_step = WireCost::default();
+                for n in &units {
+                    if shard {
+                        per_step += wire_reduce_scatter(algo, *n, world);
+                        per_step += wire_all_gather(algo, *n, world);
+                    } else {
+                        per_step += wire_all_reduce(algo, *n, world);
+                    }
+                }
+                per_step += wire_all_reduce(algo, 1, world); // loss
+                let label = format!("{schedule:?}/{}/shard={shard}", algo.label());
+                assert_eq!(
+                    r.comm_bytes,
+                    per_step.bytes * steps as u64,
+                    "{label}: measured bytes must equal the closed form exactly"
+                );
+                assert_eq!(
+                    r.comm_hops,
+                    per_step.hops * steps as u64,
+                    "{label}: measured hop legs must equal the closed form exactly"
+                );
+            }
+        }
+    }
+}
+
+/// Ascending ranking of three values as a permutation of indices.
+fn ranking(vals: &[f64; 3]) -> [usize; 3] {
+    let mut idx = [0usize, 1, 2];
+    idx.sort_by(|&a, &b| vals[a].partial_cmp(&vals[b]).unwrap());
+    idx
+}
+
+/// Does `measured` respect the predicted ascending order `order`, up to
+/// near-ties? Adjacent pairs may appear in either order when they are
+/// within `slack` of each other — a contended 2-core host cannot
+/// reliably separate collectives whose blocked times differ by a few
+/// percent, and demanding it would make a tier-1 test flaky. What this
+/// still pins down: no algorithm the model calls strictly slower may
+/// *measurably* beat one the model calls faster.
+fn respects_order(order: &[usize; 3], measured: &[f64; 3], slack: f64) -> bool {
+    measured[order[0]] <= measured[order[1]] * slack
+        && measured[order[1]] <= measured[order[2]] * slack
+        && measured[order[0]] <= measured[order[2]] * slack
+}
+
+/// Acceptance: memsim's predicted step-time ordering of
+/// {flat, ring, tree} matches the measured harness ordering for every
+/// schedule, on two machines from `table2_machines()`. Measured metric:
+/// communicator blocked time per step (the component the algorithms
+/// differ in; iteration wallclock on a contended host adds compute
+/// noise the model deliberately does not describe). Min-of-3 runs per
+/// config, near-ties accepted in either order, up to 3 attempts —
+/// wallclock is involved and tier-1 must not flake.
+#[test]
+fn memsim_predicted_algo_ranking_matches_measured() {
+    let world = 4;
+    let steps = 8;
+    let layers = 6;
+    let schedules =
+        [ScheduleKind::Baseline, ScheduleKind::ForwardFusion, ScheduleKind::BackwardFusion];
+    let net = lane_netspec(layers);
+    let opt = OptSpec::sgd_momentum();
+
+    // predictions are deterministic: compute once, per machine × schedule
+    let machines: Vec<_> = table2_machines().into_iter().take(2).collect();
+    let mut predicted: Vec<[[usize; 3]; 3]> = Vec::new();
+    for m in &machines {
+        let m = m.clone().with_world(world);
+        let mut per_schedule = [[0usize; 3]; 3];
+        for (si, schedule) in schedules.iter().enumerate() {
+            let mut step_s = [0.0f64; 3];
+            for (ai, algo) in CommAlgo::ALL.iter().enumerate() {
+                let ddp = DdpSimConfig { algo: *algo, bucket_cap_bytes: None, shard: false };
+                step_s[ai] = simulate_ddp(&m, &net, &opt, 4, *schedule, ddp).step_s;
+            }
+            per_schedule[si] = ranking(&step_s);
+        }
+        predicted.push(per_schedule);
+    }
+    // all machine models agree in the latency regime — one measured
+    // ranking must match them all
+    for ps in &predicted[1..] {
+        assert_eq!(ps, &predicted[0], "table2 machines agree in the latency regime");
+    }
+
+    let measure = |schedule: ScheduleKind, algo: CommAlgo| -> f64 {
+        let one = || {
+            let mut cfg = DdpConfig::new(world, schedule, steps, Box::new(lane_batch));
+            cfg.algo = algo;
+            if schedule == ScheduleKind::BackwardFusion {
+                cfg.overlap_threads = 2;
+            }
+            train_ddp(|| lane_graph(21, layers), sgd_momentum, sgd_hyper(), cfg).comm_wait_ms
+        };
+        // min-of-3: blocked time is wallclock, and a descheduled rank
+        // inflates it — the minimum is the least-noisy observation
+        one().min(one()).min(one())
+    };
+
+    // Slack and attempts are sized for loaded shared CI runners: ring's
+    // blocked time is a small-integer multiple of flat's here, so 25%
+    // slack still rejects a genuinely wrong model while absorbing
+    // scheduler preemption spikes.
+    let attempts = 4;
+    let slack = 1.25;
+    let mut last_mismatch = String::new();
+    for attempt in 0..attempts {
+        let mut all_match = true;
+        for (si, schedule) in schedules.iter().enumerate() {
+            let mut wait_ms = [0.0f64; 3];
+            for (ai, algo) in CommAlgo::ALL.iter().enumerate() {
+                wait_ms[ai] = measure(*schedule, *algo);
+            }
+            if !respects_order(&predicted[0][si], &wait_ms, slack) {
+                all_match = false;
+                last_mismatch = format!(
+                    "attempt {attempt}: {schedule:?}: measured {:?} (waits {wait_ms:?}) \
+                     vs predicted {:?}",
+                    ranking(&wait_ms),
+                    predicted[0][si]
+                );
+            }
+        }
+        if all_match {
+            return;
+        }
+    }
+    panic!("predicted vs measured algorithm ranking disagreed on every attempt: {last_mismatch}");
+}
+
+/// Chunked backward-fusion overlap jobs: bit-identical to whole-bucket
+/// jobs, with the collective round count scaled by the chunk factor.
+#[test]
+fn chunked_overlap_jobs_match_unchunked_bitwise() {
+    let world = 2;
+    let steps = 3;
+    let layers = 3; // 3 × 1 KiB params in one 4 KiB-capped bucket
+    let run = |chunk: Option<usize>, overlap: usize| {
+        let mut cfg =
+            DdpConfig::new(world, ScheduleKind::BackwardFusion, steps, Box::new(lane_batch));
+        cfg.bucket_cap_bytes = Some(1 << 20); // single bucket (3 KiB)
+        cfg.comm_chunk_bytes = chunk;
+        cfg.overlap_threads = overlap;
+        cfg.algo = CommAlgo::Ring;
+        train_ddp(|| lane_graph(31, layers), sgd_momentum, sgd_hyper(), cfg)
+    };
+    let whole = run(None, 2);
+    let chunked = run(Some(1 << 10), 2); // 3 chunks of 256 elems
+    assert_eq!(whole.losses, chunked.losses, "chunking must not change the math");
+    assert_eq!(max_param_diff(&whole.final_params, &chunked.final_params), 0.0);
+    // 1 bucket reduce + 1 loss = 2 rounds/step whole; 3 + 1 chunked
+    assert_eq!(whole.reduces_per_step, 2.0);
+    assert_eq!(chunked.reduces_per_step, 4.0);
+    // inline chunked (no pool) agrees too
+    let inline_chunked = run(Some(1 << 10), 0);
+    assert_eq!(whole.losses, inline_chunked.losses);
+    assert_eq!(max_param_diff(&whole.final_params, &inline_chunked.final_params), 0.0);
+}

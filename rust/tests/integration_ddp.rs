@@ -84,22 +84,18 @@ fn run_tiny(
     save: Option<std::path::PathBuf>,
     step_offset: usize,
 ) -> DdpReport {
-    train_ddp(
-        || tiny_graph(3),
-        opt,
-        hyper,
-        DdpConfig {
-            world,
-            schedule,
-            steps,
-            bucket_cap_bytes: cap,
-            shard_updates: shard,
-            overlap_threads: overlap,
-            load_from: load,
-            save_to: save,
-            local_batch_maker: Box::new(move |rank, step| tiny_batch(rank, step + step_offset)),
-        },
-    )
+    let mut cfg = DdpConfig::new(
+        world,
+        schedule,
+        steps,
+        Box::new(move |rank, step| tiny_batch(rank, step + step_offset)),
+    );
+    cfg.bucket_cap_bytes = cap;
+    cfg.shard_updates = shard;
+    cfg.overlap_threads = overlap;
+    cfg.load_from = load;
+    cfg.save_to = save;
+    train_ddp(|| tiny_graph(3), opt, hyper, cfg)
 }
 
 fn sgd_momentum() -> Box<dyn Optimizer> {
@@ -127,25 +123,17 @@ fn max_param_diff(a: &[Tensor], b: &[Tensor]) -> f32 {
 #[test]
 fn schedules_and_storage_agree_at_every_world_size() {
     let run = |world: usize, schedule: ScheduleKind, cap: Option<usize>| {
-        train_ddp(
-            || mlp(99),
-            sgd_momentum,
-            sgd_hyper(),
-            DdpConfig {
-                world,
-                schedule,
-                steps: 3,
-                bucket_cap_bytes: cap,
-                shard_updates: false,
-                overlap_threads: 0,
-                load_from: None,
-                save_to: None,
-                local_batch_maker: Box::new(|rank, step| {
-                    let mut rng = XorShiftRng::new(((rank as u64) << 32) | step as u64);
-                    image_batch(2, 3, 16, 16, 10, &mut rng)
-                }),
-            },
-        )
+        let mut cfg = DdpConfig::new(
+            world,
+            schedule,
+            3,
+            Box::new(|rank, step| {
+                let mut rng = XorShiftRng::new(((rank as u64) << 32) | step as u64);
+                image_batch(2, 3, 16, 16, 10, &mut rng)
+            }),
+        );
+        cfg.bucket_cap_bytes = cap;
+        train_ddp(|| mlp(99), sgd_momentum, sgd_hyper(), cfg)
     };
     for world in [1usize, 2, 4] {
         let base = run(world, ScheduleKind::Baseline, None);
@@ -285,25 +273,17 @@ fn sharded_updates_match_unsharded_bitwise_with_quarter_footprint() {
 #[test]
 fn bucketed_storage_cuts_collective_rounds() {
     let run = |cap: Option<usize>| {
-        train_ddp(
-            || mlp(42),
-            sgd_momentum,
-            sgd_hyper(),
-            DdpConfig {
-                world: 2,
-                schedule: ScheduleKind::Baseline,
-                steps: 3,
-                bucket_cap_bytes: cap,
-                shard_updates: false,
-                overlap_threads: 0,
-                load_from: None,
-                save_to: None,
-                local_batch_maker: Box::new(|rank, step| {
-                    let mut rng = XorShiftRng::new(((rank as u64) << 32) | step as u64);
-                    image_batch(2, 3, 16, 16, 10, &mut rng)
-                }),
-            },
-        )
+        let mut cfg = DdpConfig::new(
+            2,
+            ScheduleKind::Baseline,
+            3,
+            Box::new(|rank, step| {
+                let mut rng = XorShiftRng::new(((rank as u64) << 32) | step as u64);
+                image_batch(2, 3, 16, 16, 10, &mut rng)
+            }),
+        );
+        cfg.bucket_cap_bytes = cap;
+        train_ddp(|| mlp(42), sgd_momentum, sgd_hyper(), cfg)
     };
     let scattered = run(None);
     let bucketed = run(Some(1 << 20));
@@ -328,25 +308,19 @@ fn backward_fusion_overlaps_reduce_with_backward() {
     // (deep) buckets' reduce jobs run while the shallow layers are
     // still back-propagating
     let run = |shard: bool, overlap: usize| {
-        train_ddp(
-            || deep_mlp(5),
-            sgd_momentum,
-            sgd_hyper(),
-            DdpConfig {
-                world: 2,
-                schedule: ScheduleKind::BackwardFusion,
-                steps: 2,
-                bucket_cap_bytes: Some(1 << 18),
-                shard_updates: shard,
-                overlap_threads: overlap,
-                load_from: None,
-                save_to: None,
-                local_batch_maker: Box::new(|rank, step| {
-                    let mut rng = XorShiftRng::new(((rank as u64) << 32) | step as u64);
-                    image_batch(2, 3, 16, 16, 10, &mut rng)
-                }),
-            },
-        )
+        let mut cfg = DdpConfig::new(
+            2,
+            ScheduleKind::BackwardFusion,
+            2,
+            Box::new(|rank, step| {
+                let mut rng = XorShiftRng::new(((rank as u64) << 32) | step as u64);
+                image_batch(2, 3, 16, 16, 10, &mut rng)
+            }),
+        );
+        cfg.bucket_cap_bytes = Some(1 << 18);
+        cfg.shard_updates = shard;
+        cfg.overlap_threads = overlap;
+        train_ddp(|| deep_mlp(5), sgd_momentum, sgd_hyper(), cfg)
     };
     let inline = run(false, 0);
     assert_eq!(inline.overlap_frac, 0.0, "no pool, no overlap");
@@ -428,22 +402,16 @@ fn sharded_checkpoints_are_world_and_layout_portable() {
 
     // resume as a single scattered-storage process on the concatenated
     // batch (world-size AND storage-layout portability at once)
-    let single = train_ddp(
-        || tiny_graph(3),
-        adam,
-        Hyper::default(),
-        DdpConfig {
-            world: 1,
-            schedule: ScheduleKind::Baseline,
-            steps: 2,
-            bucket_cap_bytes: None,
-            shard_updates: false,
-            overlap_threads: 0,
-            load_from: Some(path.clone()),
-            save_to: None,
-            local_batch_maker: Box::new(|_rank, step| tiny_concat_batch(2, step + 2)),
-        },
-    );
+    let single = {
+        let mut cfg = DdpConfig::new(
+            1,
+            ScheduleKind::Baseline,
+            2,
+            Box::new(|_rank, step| tiny_concat_batch(2, step + 2)),
+        );
+        cfg.load_from = Some(path.clone());
+        train_ddp(|| tiny_graph(3), adam, Hyper::default(), cfg)
+    };
     for (s, (a, b)) in full.losses[2..].iter().zip(single.losses.iter()).enumerate() {
         assert_eq!(a.to_bits(), b.to_bits(), "single-process resume step {s}: {a} vs {b}");
     }
