@@ -1,15 +1,22 @@
 //! §C.5: distributed data parallel — "the training speedup with DDP is
 //! similar to that on a single GPU". The harness sweeps the comm axes:
 //! schedule (baseline vs backward-fusion), storage (scattered vs
-//! bucketed collectives), ZeRO-1 sharded updates on/off, backward-fusion
-//! overlap threads on/off, and the collective **algorithm** (flat staged
-//! sessions vs chunked ring vs binomial tree) — reporting iteration
-//! time, communicator traffic (bytes *and* hop legs), rounds per step,
-//! the measured comm/compute overlap fraction, and the per-replica
-//! optimizer-state footprint. A final section compares the measured
-//! per-step wire accounting against `memsim::simulate_ddp`'s prediction
-//! — the two must agree exactly (the cluster-scaling claim of the comm
-//! model, asserted for every algorithm).
+//! bucketed collectives), ZeRO shard stage (none/zero1/zero2/zero3),
+//! backward-fusion overlap threads on/off, and the collective
+//! **algorithm** (flat staged sessions vs chunked ring vs binomial
+//! tree) — reporting iteration time, communicator traffic (bytes *and*
+//! hop legs), rounds per step, the measured comm/compute overlap
+//! fraction, and the per-replica arena footprints. The shard-stage
+//! section prints the per-stage peak-memory table (grads / values /
+//! optimizer state per replica) and asserts it equals
+//! `memsim::stage_memory`'s closed form exactly; the algo section
+//! compares the measured per-step wire accounting against
+//! `memsim::simulate_ddp`'s prediction — the two must agree exactly
+//! (the cluster-scaling claim of the comm model, asserted for every
+//! algorithm); and a calibration section least-squares-fits the
+//! `shared_mem` interconnect's hop latency / link bandwidth from the
+//! measured blocked time (`machines::fit_interconnect`) instead of the
+//! hand-picked constants.
 //!
 //! The math-equivalence assertions that used to live here (schedules
 //! agree at every world size; world=W bit-equal to a single process;
@@ -26,11 +33,11 @@
 #[path = "common.rs"]
 mod common;
 
-use optfuse::comm::{CommAlgo, WireCost};
+use optfuse::comm::{CommAlgo, ShardStage, WireCost};
 use optfuse::data::image_batch;
 use optfuse::ddp::{train_ddp, DdpConfig, DdpReport};
 use optfuse::graph::ScheduleKind;
-use optfuse::memsim::{machines, CollOp};
+use optfuse::memsim::{machines, stage_memory, CollOp};
 use optfuse::models;
 use optfuse::optim::{self, Hyper};
 use optfuse::util::XorShiftRng;
@@ -39,7 +46,7 @@ struct Axis {
     label: &'static str,
     schedule: ScheduleKind,
     bucket_cap: Option<usize>,
-    shard: bool,
+    stage: ShardStage,
     overlap: usize,
 }
 
@@ -57,7 +64,7 @@ fn run(world: usize, algo: CommAlgo, axis: &Axis, steps: usize) -> DdpReport {
             steps,
             bucket_cap_bytes: axis.bucket_cap,
             comm_chunk_bytes: None,
-            shard_updates: axis.shard,
+            shard_stage: axis.stage,
             overlap_threads: axis.overlap,
             load_from: None,
             save_to: None,
@@ -85,49 +92,49 @@ fn main() {
             label: "base/scattered",
             schedule: ScheduleKind::Baseline,
             bucket_cap: None,
-            shard: false,
+            stage: ShardStage::None,
             overlap: 0,
         },
         Axis {
             label: "bf/scattered",
             schedule: ScheduleKind::BackwardFusion,
             bucket_cap: None,
-            shard: false,
+            stage: ShardStage::None,
             overlap: 0,
         },
         Axis {
             label: "base/bucketed",
             schedule: ScheduleKind::Baseline,
             bucket_cap: Some(CAP),
-            shard: false,
+            stage: ShardStage::None,
             overlap: 0,
         },
         Axis {
             label: "bf/bucketed",
             schedule: ScheduleKind::BackwardFusion,
             bucket_cap: Some(CAP),
-            shard: false,
+            stage: ShardStage::None,
             overlap: 0,
         },
         Axis {
             label: "bf/bkt+overlap",
             schedule: ScheduleKind::BackwardFusion,
             bucket_cap: Some(CAP),
-            shard: false,
+            stage: ShardStage::None,
             overlap: 2,
         },
         Axis {
             label: "base/bkt+shard",
             schedule: ScheduleKind::Baseline,
             bucket_cap: Some(CAP),
-            shard: true,
+            stage: ShardStage::Zero1,
             overlap: 0,
         },
         Axis {
             label: "bf/bkt+shard+ov",
             schedule: ScheduleKind::BackwardFusion,
             bucket_cap: Some(CAP),
-            shard: true,
+            stage: ShardStage::Zero1,
             overlap: 2,
         },
     ];
@@ -194,8 +201,14 @@ fn main() {
         .collect();
     let groups = optfuse::optim::bucket::partition_by_bytes(&lens, CAP);
     let mut flat_losses: Option<Vec<f32>> = None;
+    let mut calib: Vec<machines::CommSample> = Vec::new();
     for algo in CommAlgo::ALL {
         let r = run(algo_world, algo, algo_axis, steps);
+        calib.push(machines::CommSample {
+            bytes: r.comm_bytes,
+            hops: r.comm_hops,
+            wait_s: r.comm_wait_ms / 1e3,
+        });
         let mut predicted = WireCost::default();
         for group in &groups {
             let n: usize = group.iter().map(|i| lens[*i]).sum();
@@ -232,6 +245,79 @@ fn main() {
                 assert_eq!(want, &r.losses, "{}: algorithms must not change the math", algo.label())
             }
         }
+    }
+    println!();
+
+    // ---- interconnect calibration: fit hop latency / link bandwidth
+    // from the measured blocked time of the algo-axis runs (instead of
+    // the hand-picked shared_mem constants). Three algorithms give three
+    // (bytes, hops, wait) observations spanning hop-heavy (ring) and
+    // volume-heavy (flat) mixes; a degenerate or non-physical fit falls
+    // back to the preset, so this section never produces nonsense.
+    let hand = machines::shared_mem(algo_world);
+    let fitted = machines::fit_interconnect(algo_world, &calib);
+    let fell_back = (fitted.hop_latency_s - hand.hop_latency_s).abs() < f64::EPSILON
+        && (fitted.link_bw - hand.link_bw).abs() < f64::EPSILON;
+    println!(
+        "  shared_mem calibration (least squares over {} algo runs): \
+         {:.2} µs/hop, {:.2} GB/s{}",
+        calib.len(),
+        fitted.hop_latency_s * 1e6,
+        fitted.link_bw / 1e9,
+        if fell_back { "  [degenerate fit; hand-picked preset kept]" } else { "" }
+    );
+    assert!(fitted.hop_latency_s > 0.0 && fitted.link_bw > 0.0, "calibrated preset is physical");
+
+    // ---- shard-stage axis: the per-stage peak-memory table, asserted
+    // against memsim's closed form *exactly* (both sides sum rank 0's
+    // shard spans over the same bucket layout) ----
+    let stage_world = algo_world;
+    let stage_units: Vec<usize> = groups
+        .iter()
+        .map(|group| group.iter().map(|i| lens[*i]).sum())
+        .collect();
+    println!(
+        "  shard-stage axis (world={stage_world}, base/bucketed, adam): per-replica peak \
+         arena bytes"
+    );
+    println!("    stage   grads KiB   values KiB   state KiB   comm MiB   loss");
+    for stage in ShardStage::ALL {
+        let axis = Axis {
+            label: "stage",
+            schedule: ScheduleKind::Baseline,
+            bucket_cap: Some(CAP),
+            stage,
+            overlap: 0,
+        };
+        let r = run(stage_world, CommAlgo::Flat, &axis, steps);
+        let want = stage_memory(&stage_units, 2, stage, stage_world);
+        assert_eq!(
+            r.peak_grad_arena_bytes,
+            want.grad_bytes,
+            "{}: measured grad-arena peak must equal memsim's closed form",
+            stage.label()
+        );
+        assert_eq!(
+            r.peak_value_arena_bytes,
+            want.value_bytes,
+            "{}: measured value-arena peak must equal memsim's closed form",
+            stage.label()
+        );
+        assert_eq!(
+            r.opt_state_bytes,
+            want.opt_state_bytes,
+            "{}: measured optimizer-state bytes must equal memsim's closed form",
+            stage.label()
+        );
+        println!(
+            "    {:<6} {:>10.1}  {:>10.1}  {:>10.1}  {:>9.2}  {:.4}",
+            stage.label(),
+            r.peak_grad_arena_bytes as f64 / 1024.0,
+            r.peak_value_arena_bytes as f64 / 1024.0,
+            r.opt_state_bytes as f64 / 1024.0,
+            r.comm_bytes as f64 / (1 << 20) as f64,
+            r.losses.last().unwrap_or(&f32::NAN)
+        );
     }
     println!();
 

@@ -18,13 +18,16 @@
 //! bucket arenas when the store is bucketed. A checkpoint written by a
 //! bucketed run restores into a scattered run and vice versa.
 //!
-//! ZeRO-1 sharded DDP runs ([`crate::ddp`]) are *world-size portable*
-//! through the same format: before saving, every rank all-gathers its
-//! state shards back to full coverage
+//! ZeRO-sharded DDP runs ([`crate::ddp`]) are *world-size and
+//! stage-portable* through the same format: before saving, every rank
+//! materializes ZeRO-3 shard-resident values and all-gathers its state
+//! shards back to full coverage
 //! ([`crate::exec::Executor::prepare_checkpoint`] — `export_state`
 //! fails fast on still-sharded state), so the file never depends on the
-//! world size that wrote it; after loading, a sharded rank re-narrows
-//! its state with `ParamStore::reshard_state`.
+//! world size *or shard stage* that wrote it; after loading, a sharded
+//! rank re-applies its stage's steady-state arena layout with
+//! `ParamStore::apply_shard_stage` (state narrow, ZeRO-2/3 grad narrow,
+//! ZeRO-3 value release).
 
 use crate::exec::Executor;
 use crate::tensor::Tensor;

@@ -30,7 +30,7 @@
 use super::ring::RingComm;
 use super::tree::TreeComm;
 use super::{Communicator, SharedMemComm};
-use crate::tensor::flat::shard_span;
+use crate::tensor::flat::shard_partition;
 use std::sync::Arc;
 
 /// Which collective algorithm a DDP run (or a memsim prediction) uses.
@@ -100,13 +100,6 @@ impl std::ops::AddAssign for WireCost {
     }
 }
 
-/// Sum of shard-span byte sizes of ranks `1..world` (everything except
-/// rank 0's shard) — the tree scatter/gather star traffic.
-fn nonroot_span_bytes(n: usize, world: usize) -> u64 {
-    let (_, s0) = shard_span(n, world, 0);
-    4 * (n - s0) as u64
-}
-
 /// Closed-form wire cost of one `all_reduce_mean` of `n` f32 elements.
 pub fn wire_all_reduce(algo: CommAlgo, n: usize, world: usize) -> WireCost {
     let (n64, w) = (n as u64, world as u64);
@@ -131,11 +124,24 @@ pub fn wire_all_reduce(algo: CommAlgo, n: usize, world: usize) -> WireCost {
     }
 }
 
-/// Closed-form wire cost of one `reduce_scatter_mean`.
+/// Closed-form wire cost of one `reduce_scatter_mean` (balanced
+/// [`crate::tensor::flat::shard_span`] ownership).
 pub fn wire_reduce_scatter(algo: CommAlgo, n: usize, world: usize) -> WireCost {
+    wire_reduce_scatter_spans(algo, &shard_partition(n, world))
+}
+
+/// Closed-form wire cost of one `reduce_scatter_mean_spans` over an
+/// explicit rank-ordered ownership partition (the chunked ZeRO path).
+/// Flat and ring traffic depend only on the total length — the spans
+/// tile the buffer, so per-stage message sets always cover it exactly —
+/// while the tree's root scatter star moves every *non-root* span, so
+/// its byte count shifts with `spans[0]`.
+pub fn wire_reduce_scatter_spans(algo: CommAlgo, spans: &[(usize, usize)]) -> WireCost {
+    let world = spans.len();
+    let n: usize = spans.iter().map(|s| s.1).sum();
     let (n64, w) = (n as u64, world as u64);
     match algo {
-        // each rank stages 4n in and takes its 4·shard out
+        // each rank stages 4n in and takes its 4·span out
         CommAlgo::Flat => WireCost { bytes: 4 * n64 * w + 4 * n64, hops: 2 * w },
         CommAlgo::Ring => {
             if world == 1 {
@@ -148,19 +154,27 @@ pub fn wire_reduce_scatter(algo: CommAlgo, n: usize, world: usize) -> WireCost {
                 return WireCost::default();
             }
             // W−1 full-size reduce messages + the root's span scatter
-            WireCost {
-                bytes: 8 * n64 * (w - 1) + 2 * nonroot_span_bytes(n, world),
-                hops: 4 * (w - 1),
-            }
+            let nonroot = 4 * (n - spans[0].1) as u64;
+            WireCost { bytes: 8 * n64 * (w - 1) + 2 * nonroot, hops: 4 * (w - 1) }
         }
     }
 }
 
-/// Closed-form wire cost of one `all_gather`.
+/// Closed-form wire cost of one `all_gather` (balanced ownership).
 pub fn wire_all_gather(algo: CommAlgo, n: usize, world: usize) -> WireCost {
+    wire_all_gather_spans(algo, &shard_partition(n, world))
+}
+
+/// Closed-form wire cost of one `all_gather_spans` over an explicit
+/// rank-ordered ownership partition (see
+/// [`wire_reduce_scatter_spans`] for why only the tree depends on the
+/// span shape).
+pub fn wire_all_gather_spans(algo: CommAlgo, spans: &[(usize, usize)]) -> WireCost {
+    let world = spans.len();
+    let n: usize = spans.iter().map(|s| s.1).sum();
     let (n64, w) = (n as u64, world as u64);
     match algo {
-        // each rank stages its 4·shard in and takes 4n out
+        // each rank stages its 4·span in and takes 4n out
         CommAlgo::Flat => WireCost { bytes: 4 * n64 + 4 * n64 * w, hops: 2 * w },
         CommAlgo::Ring => {
             if world == 1 {
@@ -173,10 +187,8 @@ pub fn wire_all_gather(algo: CommAlgo, n: usize, world: usize) -> WireCost {
                 return WireCost::default();
             }
             // span star-gather to the root + W−1 full-size broadcasts
-            WireCost {
-                bytes: 2 * nonroot_span_bytes(n, world) + 8 * n64 * (w - 1),
-                hops: 4 * (w - 1),
-            }
+            let nonroot = 4 * (n - spans[0].1) as u64;
+            WireCost { bytes: 2 * nonroot + 8 * n64 * (w - 1), hops: 4 * (w - 1) }
         }
     }
 }
@@ -242,6 +254,52 @@ mod tests {
         for op in [wire_all_reduce, wire_reduce_scatter, wire_all_gather] {
             assert_eq!(op(CommAlgo::Ring, 64, 1), WireCost::default());
             assert_eq!(op(CommAlgo::Tree, 64, 1), WireCost::default());
+        }
+    }
+
+    /// Span-parameterized collectives must record exactly the span-aware
+    /// closed forms, for every algorithm, on an unbalanced partition
+    /// (chunk ∩ shard shapes) — including an empty span.
+    #[test]
+    fn span_closed_forms_match_recorded_stats() {
+        use super::super::{make_comm, tags};
+        let world = 3;
+        let spans = [(0usize, 4usize), (4, 0), (4, 3)];
+        let n = 7;
+        for algo in CommAlgo::ALL {
+            let comm = make_comm(algo, world);
+            let c = &comm;
+            std::thread::scope(|s| {
+                for rank in 0..world {
+                    s.spawn(move || {
+                        let mut d = vec![rank as f32; n];
+                        c.reduce_scatter_mean_spans(rank, tags::grad(0), &mut d, &spans);
+                        let mut d = vec![1.0f32; n];
+                        c.all_gather_spans(rank, tags::value(0), &mut d, &spans);
+                    });
+                }
+            });
+            let want_rs = wire_reduce_scatter_spans(algo, &spans);
+            let want_ag = wire_all_gather_spans(algo, &spans);
+            assert_eq!(
+                comm.stats().bytes.load(Ordering::Relaxed),
+                want_rs.bytes + want_ag.bytes,
+                "{} span bytes",
+                algo.label()
+            );
+            assert_eq!(
+                comm.stats().hops.load(Ordering::Relaxed),
+                want_rs.hops + want_ag.hops,
+                "{} span hops",
+                algo.label()
+            );
+        }
+        // balanced spans reduce to the historical closed forms
+        for algo in CommAlgo::ALL {
+            assert_eq!(
+                wire_reduce_scatter_spans(algo, &crate::tensor::flat::shard_partition(10, 4)),
+                wire_reduce_scatter(algo, 10, 4)
+            );
         }
     }
 

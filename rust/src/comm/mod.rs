@@ -20,8 +20,12 @@
 //!   (f32 addition is commutative but not associative — a rank-dependent
 //!   order would let replicas drift in the low bits), and a
 //!   `reduce_scatter_mean` shard is bit-identical to the corresponding
-//!   region of an `all_reduce_mean`. The ZeRO-1 sharded update path's
-//!   bit-exactness guarantee rests on this.
+//!   region of an `all_reduce_mean`. The ZeRO shard stages'
+//!   ([`ShardStage`]) bit-exactness guarantee rests on this. The
+//!   `_spans` collective variants generalize the ownership partition
+//!   beyond the balanced `shard_span` split — the chunked ZeRO path
+//!   hands each rank the intersection of its bucket-level shard with
+//!   the chunk.
 //! * **One accounting path.** Every collective — including the scalar
 //!   loss reduce — lands in the same [`CommStats`] (bytes moved, rounds,
 //!   blocked nanoseconds), so `DdpReport` totals cannot disagree with
@@ -50,12 +54,13 @@ pub mod ring;
 pub mod tree;
 
 pub use algo::{
-    make_comm, wire_all_gather, wire_all_reduce, wire_reduce_scatter, CommAlgo, WireCost,
+    make_comm, wire_all_gather, wire_all_gather_spans, wire_all_reduce, wire_reduce_scatter,
+    wire_reduce_scatter_spans, CommAlgo, WireCost,
 };
 pub use ring::RingComm;
 pub use tree::TreeComm;
 
-use crate::tensor::flat::shard_span;
+use crate::tensor::flat::shard_partition;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -131,12 +136,87 @@ fn mean_of_ranked(world: usize, len: usize, by_rank: &[Option<&Vec<f32>>]) -> Ve
     acc
 }
 
+/// Which ZeRO shard stage a DDP run applies to the flat bucket arenas
+/// (after Xu et al. 2020 and the ZeRO staging of Rajbhandari et al.):
+/// each stage shards one more per-replica arena across the world,
+/// trading collectives for memory while staying bit-identical to
+/// unsharded training (the engine's standing invariant).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ShardStage {
+    /// Fully replicated: every rank holds full grads, state, and values.
+    None,
+    /// ZeRO-1: optimizer state + the fused update shard (reduce-scatter
+    /// gradients, update own shard, all-gather values). Grad and value
+    /// arenas stay full on every rank.
+    Zero1,
+    /// ZeRO-2: additionally shard the gradient arenas — after the
+    /// drain-point reduce-scatter a rank keeps only its shard slice and
+    /// frees the rest, so steady-state grad residency is 1/W (grads are
+    /// transiently full during backward, which computes them locally).
+    Zero2,
+    /// ZeRO-3: additionally shard the parameter value arenas — values
+    /// live shard-resident between steps, all-gather per bucket on first
+    /// touch of the next forward, and release after the post-backward
+    /// update.
+    Zero3,
+}
+
+impl ShardStage {
+    /// All stages, in presentation order.
+    pub const ALL: [ShardStage; 4] =
+        [ShardStage::None, ShardStage::Zero1, ShardStage::Zero2, ShardStage::Zero3];
+
+    /// Stable identifier used by CLI flags and bench tables.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ShardStage::None => "none",
+            ShardStage::Zero1 => "zero1",
+            ShardStage::Zero2 => "zero2",
+            ShardStage::Zero3 => "zero3",
+        }
+    }
+
+    /// Any sharding at all (stage ≥ 1): updates reduce-scatter and touch
+    /// only the rank's shard; optimizer state allocates shard-only.
+    pub fn sharded(&self) -> bool {
+        !matches!(self, ShardStage::None)
+    }
+
+    /// Stage ≥ 2: gradient arenas narrow to the shard after the update.
+    pub fn shards_grads(&self) -> bool {
+        matches!(self, ShardStage::Zero2 | ShardStage::Zero3)
+    }
+
+    /// Stage 3: value arenas are shard-resident between steps and
+    /// all-gather on first touch of the next forward.
+    pub fn shards_values(&self) -> bool {
+        matches!(self, ShardStage::Zero3)
+    }
+}
+
+impl std::str::FromStr for ShardStage {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "none" | "0" | "off" => Ok(ShardStage::None),
+            "zero1" | "1" => Ok(ShardStage::Zero1),
+            "zero2" | "2" => Ok(ShardStage::Zero2),
+            "zero3" | "3" => Ok(ShardStage::Zero3),
+            _ => Err(format!("unknown shard stage '{s}' (none, zero1, zero2, zero3)")),
+        }
+    }
+}
+
 /// Collective tags: every in-flight collective is identified by a tag so
 /// ranks can issue collectives for *different* schedulable units in
 /// different orders (worker-pool overlap) without cross-talk.
 pub mod tags {
     /// The scalar loss all-reduce (per training step).
     pub const LOSS: u64 = u64::MAX;
+
+    /// The global-gradient-norm partial-sum all-reduce (sharded
+    /// global-information optimizers — one scalar per rank per step).
+    pub const NORM: u64 = u64::MAX - 1;
 
     /// Gradient reduce of schedulable unit `unit`.
     pub fn grad(unit: usize) -> u64 {
@@ -153,9 +233,20 @@ pub mod tags {
         (4u64 << 56) | ((chunk as u64) << 40) | unit as u64
     }
 
-    /// Updated-value all-gather of schedulable unit `unit` (ZeRO-1).
+    /// Value all-gather of schedulable unit `unit`: post-update under
+    /// ZeRO-1/2, pre-forward gather-on-first-touch under ZeRO-3, and the
+    /// end-of-run / checkpoint value materialization.
     pub fn value(unit: usize) -> u64 {
         (2u64 << 56) | unit as u64
+    }
+
+    /// Value all-gather of chunk `chunk` of unit `unit` — the per-chunk
+    /// value leg of chunked ZeRO-1/2 overlap jobs (pairs with
+    /// [`grad_chunk`]'s reduce leg).
+    pub fn value_chunk(unit: usize, chunk: usize) -> u64 {
+        assert!(unit < 1 << 40, "value_chunk: unit {unit} overflows the tag namespace");
+        assert!(chunk < 1 << 16, "value_chunk: chunk {chunk} overflows the tag namespace");
+        (5u64 << 56) | ((chunk as u64) << 40) | unit as u64
     }
 
     /// Optimizer-state all-gather of `unit`'s state slot `slot`
@@ -183,30 +274,68 @@ pub trait Communicator: Send + Sync {
     /// that region of `data`; the rest of `data` is left untouched. The
     /// shard's values are bit-identical to the same region of an
     /// `all_reduce_mean`.
-    fn reduce_scatter_mean(&self, rank: usize, tag: u64, data: &mut [f32]);
+    fn reduce_scatter_mean(&self, rank: usize, tag: u64, data: &mut [f32]) {
+        let spans = shard_partition(data.len(), self.world());
+        self.reduce_scatter_mean_spans(rank, tag, data, &spans);
+    }
+
+    /// [`Communicator::reduce_scatter_mean`] with an explicit ownership
+    /// partition: rank `r` receives `spans[r]` instead of the balanced
+    /// `shard_span`. The spans must tile `data` contiguously in rank
+    /// order (empty spans allowed). This is the primitive the chunked
+    /// ZeRO path needs — a chunk's collective hands each rank the
+    /// intersection of its *bucket-level* shard with the chunk, which is
+    /// generally not the balanced partition of the chunk itself.
+    fn reduce_scatter_mean_spans(
+        &self,
+        rank: usize,
+        tag: u64,
+        data: &mut [f32],
+        spans: &[(usize, usize)],
+    );
 
     /// Each rank contributes its own shard region of `data`; on return
     /// `data` is fully populated with every rank's shard on every rank.
-    fn all_gather(&self, rank: usize, tag: u64, data: &mut [f32]);
+    fn all_gather(&self, rank: usize, tag: u64, data: &mut [f32]) {
+        let spans = shard_partition(data.len(), self.world());
+        self.all_gather_spans(rank, tag, data, &spans);
+    }
+
+    /// [`Communicator::all_gather`] with an explicit ownership partition
+    /// (same contract as [`Communicator::reduce_scatter_mean_spans`]):
+    /// rank `r` contributes `spans[r]` of `data`.
+    fn all_gather_spans(&self, rank: usize, tag: u64, data: &mut [f32], spans: &[(usize, usize)]);
 
     /// The unified accounting for every collective issued through this
     /// communicator.
     fn stats(&self) -> &CommStats;
 }
 
+/// Check a spans argument against the [`Communicator`] span contract:
+/// one span per rank, tiling `[0, n)` contiguously in rank order.
+pub(crate) fn assert_spans_tile(spans: &[(usize, usize)], world: usize, n: usize) {
+    assert_eq!(spans.len(), world, "span collective: one span per rank");
+    let mut next = 0usize;
+    for (rank, (off, len)) in spans.iter().enumerate() {
+        assert_eq!(*off, next, "span collective: rank {rank} span not contiguous");
+        next = off + len;
+    }
+    assert_eq!(next, n, "span collective: spans must tile the buffer");
+}
+
 /// Everything the executor needs to participate in collectives: the
-/// communicator, this replica's rank, and whether fused updates are
-/// ZeRO-1 sharded across ranks.
+/// communicator, this replica's rank, and which ZeRO shard stage the
+/// run applies to the flat bucket arenas.
 #[derive(Clone)]
 pub struct CommCtx {
     /// The collective backend shared by all ranks.
     pub comm: Arc<dyn Communicator>,
     /// This replica's rank in `[0, world)`.
     pub rank: usize,
-    /// ZeRO-1: each rank reduces-scatters gradients, updates only its
-    /// own shard of every bucket (1/W of the update FLOPs and optimizer
-    /// state), and all-gathers the updated values.
-    pub shard: bool,
+    /// ZeRO stage: `Zero1` shards state + update, `Zero2` additionally
+    /// the gradient arenas, `Zero3` additionally the value arenas (see
+    /// [`ShardStage`]).
+    pub stage: ShardStage,
 }
 
 enum ReduceOp {
@@ -368,19 +497,27 @@ impl Communicator for SharedMemComm {
         self.stats.record(n * 4, n * 4, 2, t0);
     }
 
-    fn reduce_scatter_mean(&self, rank: usize, tag: u64, data: &mut [f32]) {
+    fn reduce_scatter_mean_spans(
+        &self,
+        rank: usize,
+        tag: u64,
+        data: &mut [f32],
+        spans: &[(usize, usize)],
+    ) {
         let t0 = Instant::now();
         let n = data.len();
-        let (off, len) = shard_span(n, self.world, rank);
+        assert_spans_tile(spans, self.world, n);
+        let (off, len) = spans[rank];
         let result = self.collective(rank, tag, data.to_vec(), ReduceOp::MeanSum);
         data[off..off + len].copy_from_slice(&result[off..off + len]);
         self.stats.record(n * 4, len * 4, 2, t0);
     }
 
-    fn all_gather(&self, rank: usize, tag: u64, data: &mut [f32]) {
+    fn all_gather_spans(&self, rank: usize, tag: u64, data: &mut [f32], spans: &[(usize, usize)]) {
         let t0 = Instant::now();
         let n = data.len();
-        let (off, len) = shard_span(n, self.world, rank);
+        assert_spans_tile(spans, self.world, n);
+        let (off, len) = spans[rank];
         let result = self.collective(rank, tag, data[off..off + len].to_vec(), ReduceOp::Concat);
         assert_eq!(result.len(), n, "all_gather: shards must tile the buffer");
         data.copy_from_slice(&result);
@@ -395,6 +532,7 @@ impl Communicator for SharedMemComm {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::flat::shard_span;
     use std::sync::Mutex as StdMutex;
 
     #[test]
@@ -530,6 +668,77 @@ mod tests {
             }
         });
         assert_eq!(comm.stats().rounds.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn shard_stage_parse_label_roundtrip() {
+        for stage in ShardStage::ALL {
+            assert_eq!(stage.label().parse::<ShardStage>().unwrap(), stage);
+        }
+        assert_eq!("2".parse::<ShardStage>().unwrap(), ShardStage::Zero2);
+        assert!("zero4".parse::<ShardStage>().is_err());
+        assert!(!ShardStage::None.sharded());
+        assert!(ShardStage::Zero1.sharded() && !ShardStage::Zero1.shards_grads());
+        assert!(ShardStage::Zero2.shards_grads() && !ShardStage::Zero2.shards_values());
+        assert!(ShardStage::Zero3.shards_grads() && ShardStage::Zero3.shards_values());
+    }
+
+    /// Span-parameterized collectives: an uneven rank-ordered partition
+    /// (the chunk ∩ shard case) scatters/gathers exactly those spans,
+    /// bit-identical to the same regions of a full all-reduce.
+    #[test]
+    fn span_collectives_respect_explicit_partitions() {
+        let world = 3;
+        let n = 8;
+        // deliberately unbalanced, with one empty span
+        let spans = [(0usize, 5usize), (5, 0), (5, 3)];
+        let comm = Arc::new(SharedMemComm::new(world));
+        let outs = Arc::new(StdMutex::new(vec![(Vec::new(), Vec::new()); world]));
+        std::thread::scope(|s| {
+            for rank in 0..world {
+                let comm = Arc::clone(&comm);
+                let outs = Arc::clone(&outs);
+                s.spawn(move || {
+                    let base: Vec<f32> = (0..n).map(|i| (i * (rank + 1)) as f32).collect();
+                    let mut ar = base.clone();
+                    comm.all_reduce_mean(rank, tags::grad(4), &mut ar);
+                    let mut rs = base.clone();
+                    comm.reduce_scatter_mean_spans(rank, tags::grad(5), &mut rs, &spans);
+                    outs.lock().unwrap()[rank] = (ar, rs);
+                });
+            }
+        });
+        let outs = outs.lock().unwrap();
+        for rank in 0..world {
+            let (ar, rs) = &outs[rank];
+            let (off, len) = spans[rank];
+            assert_eq!(&ar[off..off + len], &rs[off..off + len], "own span reduced");
+            for i in 0..n {
+                if i < off || i >= off + len {
+                    assert_eq!(rs[i], (i * (rank + 1)) as f32, "untouched outside span");
+                }
+            }
+        }
+        // gather with the same partition reassembles the full buffer
+        let full: Vec<f32> = (0..n).map(|i| i as f32 + 0.5).collect();
+        let outs = Arc::new(StdMutex::new(vec![Vec::new(); world]));
+        std::thread::scope(|s| {
+            for rank in 0..world {
+                let comm = Arc::clone(&comm);
+                let outs = Arc::clone(&outs);
+                let full = full.clone();
+                s.spawn(move || {
+                    let mut d = vec![0.0f32; n];
+                    let (off, len) = spans[rank];
+                    d[off..off + len].copy_from_slice(&full[off..off + len]);
+                    comm.all_gather_spans(rank, tags::value(9), &mut d, &spans);
+                    outs.lock().unwrap()[rank] = d;
+                });
+            }
+        });
+        for rank in 0..world {
+            assert_eq!(outs.lock().unwrap()[rank], full, "rank {rank} reassembled");
+        }
     }
 
     #[test]

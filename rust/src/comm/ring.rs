@@ -1,8 +1,10 @@
 //! Ring collectives: bandwidth-optimal all-reduce as reduce-scatter +
 //! all-gather over chunked segments (Baidu/NCCL-style).
 //!
-//! The buffer is split into `W` contiguous chunks (the same
-//! [`shard_span`] segments ZeRO-1 shards by). In the reduce-scatter
+//! The buffer is split into `W` contiguous chunks (by default the same
+//! [`crate::tensor::flat::shard_span`] segments the ZeRO stages shard
+//! by; the `_spans` collective variants accept any rank-ordered
+//! partition — the chunk ∩ shard case). In the reduce-scatter
 //! phase, step `t` has every rank send one chunk to its successor and
 //! receive one from its predecessor, folding its own contribution in —
 //! after `W−1` steps each rank owns the fully-reduced chunk that is its
@@ -30,8 +32,8 @@
 //! docs needs.
 
 use super::p2p::{Acct, Mailbox, MsgKey, Payload};
-use super::{mean_in_rank_order, CommStats, Communicator};
-use crate::tensor::flat::shard_span;
+use super::{assert_spans_tile, mean_in_rank_order, CommStats, Communicator};
+use crate::tensor::flat::shard_partition;
 use std::time::Instant;
 
 /// Ring [`Communicator`]: reduce-scatter + all-gather over chunked
@@ -49,37 +51,40 @@ impl RingComm {
         Self { world, mail: Mailbox::new(world), stats: CommStats::default() }
     }
 
-    /// Span of ring-chunk `k` in a buffer of `n` elements. Ring-chunk
-    /// `k` finishes its reduction on rank `(k − 1) mod W`, so mapping it
-    /// to shard span `(k − 1) mod W` makes every rank finish holding
-    /// exactly its own [`shard_span`] — the alignment the ZeRO-1 update
-    /// path relies on.
-    fn chunk_span(&self, n: usize, ring_chunk: usize) -> (usize, usize) {
-        shard_span(n, self.world, (ring_chunk + self.world - 1) % self.world)
+    /// Span of ring-chunk `k` under the ownership partition `spans`.
+    /// Ring-chunk `k` finishes its reduction on rank `(k − 1) mod W`, so
+    /// mapping it to span `(k − 1) mod W` makes every rank finish
+    /// holding exactly the span it owns — the alignment the ZeRO update
+    /// path relies on. `spans` is the balanced `shard_partition` for the
+    /// plain collectives and the chunk ∩ shard intersections for the
+    /// chunked ZeRO path.
+    fn chunk_span(&self, spans: &[(usize, usize)], ring_chunk: usize) -> (usize, usize) {
+        spans[(ring_chunk + self.world - 1) % self.world]
     }
 
     /// The reduce-scatter phase: `W−1` send/receive steps, after which
     /// this rank holds every rank's contribution for ring-chunk
-    /// `(rank + 1) mod W` (= its own shard span).
+    /// `(rank + 1) mod W` (= the span it owns).
     fn reduce_scatter_phase(
         &self,
         rank: usize,
         tag: u64,
         seq: u64,
         data: &[f32],
+        spans: &[(usize, usize)],
         acct: &mut Acct,
     ) -> Payload {
         let w = self.world;
         let next = (rank + 1) % w;
         let prev = (rank + w - 1) % w;
         let chunk_of = |k: usize| {
-            let (o, l) = self.chunk_span(data.len(), k);
+            let (o, l) = self.chunk_span(spans, k);
             data[o..o + l].to_vec()
         };
         let mut carry: Payload = vec![(rank, chunk_of(rank))];
         for t in 0..w - 1 {
             let c_send = (rank + w - t) % w;
-            let (_, send_len) = self.chunk_span(data.len(), c_send);
+            let (_, send_len) = self.chunk_span(spans, c_send);
             self.mail.post(
                 MsgKey { tag, seq, leg: t as u32, from: rank, to: next },
                 std::mem::take(&mut carry),
@@ -87,7 +92,7 @@ impl RingComm {
             acct.sent += 4 * send_len;
             acct.legs += 1;
             let c_recv = (rank + w - t - 1) % w;
-            let (_, recv_len) = self.chunk_span(data.len(), c_recv);
+            let (_, recv_len) = self.chunk_span(spans, c_recv);
             let mut incoming =
                 self.mail.take(MsgKey { tag, seq, leg: t as u32, from: prev, to: rank });
             incoming.push((rank, chunk_of(c_recv)));
@@ -107,7 +112,7 @@ impl RingComm {
         rank: usize,
         tag: u64,
         seq: u64,
-        n: usize,
+        spans: &[(usize, usize)],
         leg0: u32,
         have: &mut [Option<Vec<f32>>],
         acct: &mut Acct,
@@ -118,7 +123,7 @@ impl RingComm {
         for t in 0..w - 1 {
             let c_send = (rank + 1 + w - t) % w;
             let payload = have[c_send].clone().expect("all-gather invariant: chunk in hand");
-            let (_, send_len) = self.chunk_span(n, c_send);
+            let (_, send_len) = self.chunk_span(spans, c_send);
             self.mail.post(
                 MsgKey { tag, seq, leg: leg0 + t as u32, from: rank, to: next },
                 vec![(c_send, payload)],
@@ -126,7 +131,7 @@ impl RingComm {
             acct.sent += 4 * send_len;
             acct.legs += 1;
             let c_recv = (rank + w - t) % w;
-            let (_, recv_len) = self.chunk_span(n, c_recv);
+            let (_, recv_len) = self.chunk_span(spans, c_recv);
             let mut msg =
                 self.mail.take(MsgKey { tag, seq, leg: leg0 + t as u32, from: prev, to: rank });
             let (cid, chunk) = msg.pop().expect("all-gather payload");
@@ -155,57 +160,65 @@ impl Communicator for RingComm {
         let seq = self.mail.next_seq(rank, tag);
         let mut acct = Acct::default();
         let n = data.len();
-        let carry = self.reduce_scatter_phase(rank, tag, seq, data, &mut acct);
+        let spans = shard_partition(n, w);
+        let carry = self.reduce_scatter_phase(rank, tag, seq, data, &spans, &mut acct);
         let own = (rank + 1) % w;
-        let (_, own_len) = self.chunk_span(n, own);
+        let (_, own_len) = self.chunk_span(&spans, own);
         let mut have: Vec<Option<Vec<f32>>> = (0..w).map(|_| None).collect();
         have[own] = Some(mean_in_rank_order(w, own_len, &carry));
-        self.all_gather_phase(rank, tag, seq, n, (w - 1) as u32, &mut have, &mut acct);
+        self.all_gather_phase(rank, tag, seq, &spans, (w - 1) as u32, &mut have, &mut acct);
         for (k, chunk) in have.iter().enumerate() {
-            let (o, l) = self.chunk_span(n, k);
+            let (o, l) = self.chunk_span(&spans, k);
             data[o..o + l].copy_from_slice(chunk.as_ref().expect("all chunks gathered"));
         }
         self.stats.record(acct.sent, acct.received, acct.legs, t0);
     }
 
-    fn reduce_scatter_mean(&self, rank: usize, tag: u64, data: &mut [f32]) {
+    fn reduce_scatter_mean_spans(
+        &self,
+        rank: usize,
+        tag: u64,
+        data: &mut [f32],
+        spans: &[(usize, usize)],
+    ) {
         let t0 = Instant::now();
         let w = self.world;
         assert!(rank < w, "rank {rank} out of range");
+        assert_spans_tile(spans, w, data.len());
         if w == 1 {
             self.stats.record(0, 0, 0, t0);
             return;
         }
         let seq = self.mail.next_seq(rank, tag);
         let mut acct = Acct::default();
-        let carry = self.reduce_scatter_phase(rank, tag, seq, data, &mut acct);
+        let carry = self.reduce_scatter_phase(rank, tag, seq, data, spans, &mut acct);
         let own = (rank + 1) % w;
-        // ring-chunk (rank + 1) maps exactly to shard_span(n, w, rank)
-        let (o, l) = self.chunk_span(data.len(), own);
+        // ring-chunk (rank + 1) maps exactly to this rank's span
+        let (o, l) = self.chunk_span(spans, own);
         data[o..o + l].copy_from_slice(&mean_in_rank_order(w, l, &carry));
         self.stats.record(acct.sent, acct.received, acct.legs, t0);
     }
 
-    fn all_gather(&self, rank: usize, tag: u64, data: &mut [f32]) {
+    fn all_gather_spans(&self, rank: usize, tag: u64, data: &mut [f32], spans: &[(usize, usize)]) {
         let t0 = Instant::now();
         let w = self.world;
         assert!(rank < w, "rank {rank} out of range");
+        assert_spans_tile(spans, w, data.len());
         if w == 1 {
             self.stats.record(0, 0, 0, t0);
             return;
         }
         let seq = self.mail.next_seq(rank, tag);
         let mut acct = Acct::default();
-        let n = data.len();
         let own = (rank + 1) % w;
         let mut have: Vec<Option<Vec<f32>>> = (0..w).map(|_| None).collect();
         {
-            let (o, l) = self.chunk_span(n, own);
+            let (o, l) = self.chunk_span(spans, own);
             have[own] = Some(data[o..o + l].to_vec());
         }
-        self.all_gather_phase(rank, tag, seq, n, 0, &mut have, &mut acct);
+        self.all_gather_phase(rank, tag, seq, spans, 0, &mut have, &mut acct);
         for (k, chunk) in have.iter().enumerate() {
-            let (o, l) = self.chunk_span(n, k);
+            let (o, l) = self.chunk_span(spans, k);
             data[o..o + l].copy_from_slice(chunk.as_ref().expect("all chunks gathered"));
         }
         self.stats.record(acct.sent, acct.received, acct.legs, t0);

@@ -18,8 +18,7 @@
 //! [`super::RingComm`] applies unchanged.
 
 use super::p2p::{Acct, Mailbox, MsgKey, Payload};
-use super::{mean_in_rank_order, CommStats, Communicator};
-use crate::tensor::flat::shard_span;
+use super::{assert_spans_tile, mean_in_rank_order, CommStats, Communicator};
 use std::time::Instant;
 
 /// Binomial-tree [`Communicator`]: ⌈log₂W⌉ reduce rounds to rank 0 plus
@@ -152,10 +151,17 @@ impl Communicator for TreeComm {
         self.stats.record(acct.sent, acct.received, acct.legs, t0);
     }
 
-    fn reduce_scatter_mean(&self, rank: usize, tag: u64, data: &mut [f32]) {
+    fn reduce_scatter_mean_spans(
+        &self,
+        rank: usize,
+        tag: u64,
+        data: &mut [f32],
+        spans: &[(usize, usize)],
+    ) {
         let t0 = Instant::now();
         let w = self.world;
         assert!(rank < w, "rank {rank} out of range");
+        assert_spans_tile(spans, w, data.len());
         if w == 1 {
             self.stats.record(0, 0, 0, t0);
             return;
@@ -164,13 +170,13 @@ impl Communicator for TreeComm {
         let mut acct = Acct::default();
         let n = data.len();
         let rounds = tree_rounds(w);
-        let (off, len) = shard_span(n, w, rank);
+        let (off, len) = spans[rank];
         match self.reduce_to_root(rank, tag, seq, data, &mut acct) {
             Some(carry) => {
-                // root: compute the full mean, scatter each rank its shard
+                // root: compute the full mean, scatter each rank its span
                 let full = mean_in_rank_order(w, n, &carry);
                 for r in 1..w {
-                    let (o, l) = shard_span(n, w, r);
+                    let (o, l) = spans[r];
                     self.mail.post(
                         MsgKey { tag, seq, leg: rounds, from: 0, to: r },
                         vec![(r, full[o..o + l].to_vec())],
@@ -191,10 +197,11 @@ impl Communicator for TreeComm {
         self.stats.record(acct.sent, acct.received, acct.legs, t0);
     }
 
-    fn all_gather(&self, rank: usize, tag: u64, data: &mut [f32]) {
+    fn all_gather_spans(&self, rank: usize, tag: u64, data: &mut [f32], spans: &[(usize, usize)]) {
         let t0 = Instant::now();
         let w = self.world;
         assert!(rank < w, "rank {rank} out of range");
+        assert_spans_tile(spans, w, data.len());
         if w == 1 {
             self.stats.record(0, 0, 0, t0);
             return;
@@ -202,14 +209,14 @@ impl Communicator for TreeComm {
         let seq = self.mail.next_seq(rank, tag);
         let mut acct = Acct::default();
         let n = data.len();
-        let (off, len) = shard_span(n, w, rank);
-        // star-gather the shards to rank 0 (leg 0 per edge), then
+        let (off, len) = spans[rank];
+        // star-gather the spans to rank 0 (leg 0 per edge), then
         // binomial-broadcast the assembled buffer (legs 1 + round)
         let assembled = if rank == 0 {
             let mut full = vec![0.0f32; n];
             full[off..off + len].copy_from_slice(&data[off..off + len]);
             for r in 1..w {
-                let (o, l) = shard_span(n, w, r);
+                let (o, l) = spans[r];
                 let mut msg = self.mail.take(MsgKey { tag, seq, leg: 0, from: r, to: 0 });
                 full[o..o + l].copy_from_slice(&msg.pop().expect("gather payload").1);
                 acct.received += 4 * l;

@@ -20,17 +20,31 @@
 //!   the comm/compute overlap real DDP gets from gradient bucketing,
 //!   reported as [`DdpReport::overlap_frac`].
 //!
-//! With [`DdpConfig::shard_updates`] (ZeRO-1, after Xu et al. 2020,
-//! "Automatic Cross-Replica Sharding of Weight Update in Data-Parallel
-//! Training"), each rank owns a contiguous shard of every bucket's flat
-//! grad/state arena: gradients reduce-scatter instead of all-reduce, the
-//! fused update touches only the rank's shard (1/W of the update FLOPs
-//! and optimizer-state memory), and the refreshed values all-gather.
-//! Checkpoints stay world-size- and layout-portable: saving gathers the
-//! sharded state back to full coverage first
-//! ([`crate::exec::Executor::prepare_checkpoint`]), and loading restores
-//! full state then re-narrows it to the rank's shard
-//! (`ParamStore::reshard_state`).
+//! With [`DdpConfig::shard_stage`] (after Xu et al. 2020, "Automatic
+//! Cross-Replica Sharding of Weight Update in Data-Parallel Training",
+//! staged as in ZeRO), each rank owns a contiguous shard of every
+//! bucket's flat arena:
+//!
+//! * `Zero1` — gradients reduce-scatter instead of all-reduce, the
+//!   fused update touches only the rank's shard (1/W of the update
+//!   FLOPs and optimizer-state memory), and the refreshed values
+//!   all-gather.
+//! * `Zero2` — additionally, the gradient arena narrows to the shard
+//!   right after the drain-point update frees it, so steady-state grad
+//!   residency is 1/W per replica (it re-widens transiently while
+//!   backward computes the next step's local gradients).
+//! * `Zero3` — additionally, parameter values live shard-resident
+//!   between steps: each bucket all-gathers its values on the first
+//!   touch of the next forward (hung on the same first-touch machinery
+//!   as the forward-fusion `updated` flags) and releases them after the
+//!   post-backward update, so steady-state value residency is 1/W plus
+//!   one transient gather buffer.
+//!
+//! Checkpoints stay world-size-, layout-, **and stage**-portable:
+//! saving materializes values and gathers sharded state back to full
+//! coverage first ([`crate::exec::Executor::prepare_checkpoint`]), and
+//! loading restores full tensors then re-applies the stage's steady
+//! state (`ParamStore::apply_shard_stage`).
 //!
 //! The communicator's deterministic rank-order reduction keeps every
 //! replica bit-identical, sharded ⇄ unsharded training bit-identical,
@@ -45,7 +59,7 @@
 //! (`rust/tests/integration_comm_model.rs` pins predicted ⇄ measured).
 
 use crate::checkpoint;
-use crate::comm::{make_comm, tags, CommAlgo, CommCtx, Communicator};
+use crate::comm::{make_comm, tags, CommAlgo, CommCtx, Communicator, ShardStage};
 use crate::exec::{ExecConfig, Executor};
 use crate::graph::{Graph, ScheduleKind};
 use crate::optim::{Hyper, Optimizer};
@@ -94,10 +108,21 @@ pub struct DdpReport {
     /// 0.0 otherwise). Nonzero means collectives genuinely overlapped
     /// compute.
     pub overlap_frac: f64,
-    /// Optimizer-state bytes actually allocated on one replica (rank 0)
-    /// at the end of training — ~1/W of the unsharded figure under
-    /// `shard_updates`.
+    /// Peak optimizer-state bytes allocated on one replica (rank 0),
+    /// sampled at step boundaries ([`crate::exec::ArenaPeak`]) — ~1/W
+    /// of the unsharded figure under any sharded stage. State only
+    /// grows during a run, so this equals the end-of-training residency
+    /// (measured before the checkpoint gather widens sharded state).
     pub opt_state_bytes: u64,
+    /// Peak steady-state gradient-arena bytes on rank 0, sampled at step
+    /// boundaries ([`crate::exec::ArenaPeak`]) — ~1/W under `Zero2`+
+    /// (full-coverage transients during backward are inherent to data
+    /// parallelism and excluded).
+    pub peak_grad_arena_bytes: u64,
+    /// Peak steady-state parameter-value bytes on rank 0 at step
+    /// boundaries — ~1/W under `Zero3` (plus a transient gather buffer
+    /// while a bucket is materialized for forward/backward).
+    pub peak_value_arena_bytes: u64,
     /// Parameter elements each update step touches on one replica
     /// (rank 0) — the update-FLOPs share: total params unsharded, ~1/W
     /// sharded.
@@ -126,12 +151,15 @@ pub struct DdpConfig {
     pub bucket_cap_bytes: Option<usize>,
     /// `Some(cap)` splits backward-fusion reduce-then-update jobs into
     /// per-chunk jobs of at most `cap` gradient bytes
-    /// ([`crate::exec::ExecConfig::comm_chunk_bytes`]). Replicated
-    /// bucketed runs only.
+    /// ([`crate::exec::ExecConfig::comm_chunk_bytes`]). Requires
+    /// bucketed storage; composes with every [`ShardStage`] (sharded
+    /// chunks reduce-scatter over chunk ∩ shard ownership spans).
     pub comm_chunk_bytes: Option<usize>,
-    /// ZeRO-1: reduce-scatter gradients, update only this rank's shard
-    /// of every bucket, all-gather values. Requires `bucket_cap_bytes`.
-    pub shard_updates: bool,
+    /// ZeRO shard stage: `Zero1` shards the optimizer state and update,
+    /// `Zero2` additionally the gradient arenas, `Zero3` additionally
+    /// the parameter values. Any sharded stage requires
+    /// `bucket_cap_bytes` (shards are spans of the flat bucket arenas).
+    pub shard_stage: ShardStage,
     /// Worker threads per replica for backward-fusion reduce-then-update
     /// jobs. 0 = collectives fire inline at the drain points (schedule-
     /// integrated but serialized); >0 = jobs overlap backward.
@@ -165,7 +193,7 @@ impl DdpConfig {
             steps,
             bucket_cap_bytes: None,
             comm_chunk_bytes: None,
-            shard_updates: false,
+            shard_stage: ShardStage::None,
             overlap_threads: 0,
             load_from: None,
             save_to: None,
@@ -183,6 +211,8 @@ struct RankZero {
     in_loop_rounds: u64,
     overlap_frac: f64,
     opt_state_bytes: u64,
+    peak_grad_arena_bytes: u64,
+    peak_value_arena_bytes: u64,
     update_elems_per_step: usize,
     final_params: Vec<Tensor>,
 }
@@ -198,8 +228,8 @@ pub fn train_ddp(
     let world = cfg.world;
     assert!(world >= 1, "DDP needs at least one replica");
     assert!(
-        !cfg.shard_updates || cfg.bucket_cap_bytes.is_some(),
-        "shard_updates requires bucketed storage: set bucket_cap_bytes (--bucket-cap)"
+        !cfg.shard_stage.sharded() || cfg.bucket_cap_bytes.is_some(),
+        "shard stages require bucketed storage: set bucket_cap_bytes (--bucket-cap)"
     );
     let comm: Arc<dyn Communicator> = make_comm(cfg.algo, world);
     let rank0: Arc<Mutex<Option<RankZero>>> = Arc::new(Mutex::new(None));
@@ -218,7 +248,7 @@ pub fn train_ddp(
             let steps = cfg.steps;
             let bucket_cap_bytes = cfg.bucket_cap_bytes;
             let comm_chunk_bytes = cfg.comm_chunk_bytes;
-            let shard = cfg.shard_updates;
+            let stage = cfg.shard_stage;
             let overlap_threads = cfg.overlap_threads;
             let load_from = cfg.load_from.clone();
             let save_to = cfg.save_to.clone();
@@ -238,12 +268,12 @@ pub fn train_ddp(
                     },
                 )
                 .expect("executor");
-                ex.set_comm(CommCtx { comm: Arc::clone(&comm), rank, shard });
+                ex.set_comm(CommCtx { comm: Arc::clone(&comm), rank, stage });
                 if let Some(path) = &load_from {
                     checkpoint::load(&mut ex, path).expect("ddp: checkpoint restore");
-                    if shard {
-                        ex.graph.store.reshard_state(world, rank);
-                    }
+                    // re-apply the stage's steady-state arena layout
+                    // (the file carries full-coverage tensors)
+                    ex.graph.store.apply_shard_stage(stage, world, rank);
                 }
                 let mut losses = Vec::new();
                 let t_loop = Instant::now();
@@ -268,14 +298,16 @@ pub fn train_ddp(
                     if rank == 0 { comm.stats().rounds.load(Ordering::Relaxed) } else { 0 };
                 sync.wait();
                 // Flush FF's pending updates so parameter values reflect
-                // every step — a collective under sharding, so all ranks
-                // flush together (same deterministic unit order).
+                // every step — may issue collectives under sharding, so
+                // all ranks flush together (same deterministic unit
+                // order).
                 ex.flush_pending();
-                if rank == 0 {
-                    // capture the per-replica footprint *before* the
-                    // checkpoint gather widens sharded state
+                let footprint = if rank == 0 {
+                    // capture the per-replica footprint *before* value
+                    // materialization / the checkpoint gather widen the
+                    // sharded arenas
                     let store = &ex.graph.store;
-                    let update_elems_per_step = if shard {
+                    let update_elems_per_step: usize = if stage.sharded() {
                         store
                             .buckets
                             .as_ref()
@@ -290,15 +322,26 @@ pub fn train_ddp(
                     } else {
                         store.num_scalars()
                     };
+                    Some((ex.arena_peak, update_elems_per_step))
+                } else {
+                    None
+                };
+                // ZeRO-3 keeps values shard-resident: all ranks gather
+                // them back (a collective) so rank 0 can snapshot full
+                // parameters.
+                ex.materialize_values();
+                if let Some((peak, update_elems_per_step)) = footprint {
                     let (olap, total) = (ex.overlapped_job_ns, ex.total_job_ns);
                     *rank0.lock().unwrap() = Some(RankZero {
                         losses: std::mem::take(&mut losses),
                         loop_wall,
                         in_loop_rounds,
                         overlap_frac: if total > 0 { olap as f64 / total as f64 } else { 0.0 },
-                        opt_state_bytes: store.opt_state_bytes(),
+                        opt_state_bytes: peak.opt_state_bytes,
+                        peak_grad_arena_bytes: peak.grad_bytes,
+                        peak_value_arena_bytes: peak.value_bytes,
                         update_elems_per_step,
-                        final_params: store.snapshot(),
+                        final_params: ex.graph.store.snapshot(),
                     });
                 }
                 if save_to.is_some() {
@@ -334,6 +377,8 @@ pub fn train_ddp(
         comm_wait_ms: stats.wait_ns.load(Ordering::Relaxed) as f64 / 1e6,
         overlap_frac: rz.overlap_frac,
         opt_state_bytes: rz.opt_state_bytes,
+        peak_grad_arena_bytes: rz.peak_grad_arena_bytes,
+        peak_value_arena_bytes: rz.peak_value_arena_bytes,
         update_elems_per_step: rz.update_elems_per_step,
         final_params: rz.final_params,
     }
@@ -407,10 +452,10 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "shard_updates requires bucketed storage")]
+    #[should_panic(expected = "shard stages require bucketed storage")]
     fn sharding_without_buckets_is_rejected() {
         let mut c = cfg(ScheduleKind::Baseline, 2, 1);
-        c.shard_updates = true;
+        c.shard_stage = ShardStage::Zero1;
         train_ddp(
             || mlp(1),
             || Box::new(SgdMomentum) as Box<dyn Optimizer>,

@@ -55,6 +55,23 @@ use pool::{CommChunk, CommPlan, Job, JobTarget, UpdatePool};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+/// High-water marks of the per-replica arena residency, sampled at step
+/// boundaries (after the step's updates and any ZeRO-2/3 narrowing /
+/// release have completed). This is the *steady-state* peak the shard
+/// stages shrink: gradients transiently re-widen during backward (every
+/// replica computes full local gradients) and ZeRO-3 values transiently
+/// materialize for forward/backward plus one flat gather buffer — both
+/// inherent to data parallelism and excluded here by construction.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ArenaPeak {
+    /// Peak gradient-arena bytes (1/W steady-state under ZeRO-2/3).
+    pub grad_bytes: u64,
+    /// Peak parameter-value bytes (1/W steady-state under ZeRO-3).
+    pub value_bytes: u64,
+    /// Peak optimizer-state bytes (1/W under any ZeRO stage).
+    pub opt_state_bytes: u64,
+}
+
 /// Engine configuration.
 #[derive(Clone)]
 pub struct ExecConfig {
@@ -77,11 +94,13 @@ pub struct ExecConfig {
     /// most `cap` gradient bytes (collectives meet on
     /// [`crate::comm::tags::grad_chunk`]), so a big bucket's collective
     /// can start overlapping backward before the whole bucket would and
-    /// several workers can reduce one bucket concurrently. Requires
-    /// bucketed storage; ignored without a communicator, under ZeRO-1
-    /// sharding (the shard split already divides the work), and by the
-    /// other schedules (their reduces are bulk/serial by design). Chunk
-    /// grids are deterministic, so chunking never changes the math.
+    /// several workers can reduce one bucket concurrently. Under a
+    /// sharded [`crate::comm::ShardStage`] the chunk jobs reduce-scatter
+    /// / all-gather with chunk ∩ shard ownership spans instead of
+    /// all-reducing. Requires bucketed storage; ignored without a
+    /// communicator and by the other schedules (their reduces are
+    /// bulk/serial by design). Chunk grids are deterministic, so
+    /// chunking never changes the math.
     pub comm_chunk_bytes: Option<usize>,
 }
 
@@ -179,6 +198,10 @@ pub struct Executor {
     /// Total nanoseconds of pool-job execution, the denominator of the
     /// overlap fraction.
     pub total_job_ns: u64,
+    /// Steady-state peak arena residency per component, sampled at step
+    /// boundaries — the figure the ZeRO stages shrink and
+    /// `memsim::simulate_ddp` predicts exactly.
+    pub arena_peak: ArenaPeak,
 }
 
 impl Executor {
@@ -227,6 +250,7 @@ impl Executor {
             comm: None,
             overlapped_job_ns: 0,
             total_job_ns: 0,
+            arena_peak: ArenaPeak::default(),
         })
     }
 
@@ -235,27 +259,29 @@ impl Executor {
     /// run that unit's update — baseline in its standalone stage,
     /// forward-fusion in bulk right after backward (updates stay lazy),
     /// backward-fusion per unit as its refcounts drain, inline or as a
-    /// reduce-then-update job on the worker pool. With `ctx.shard`
-    /// (ZeRO-1), updates reduce-scatter, touch only this rank's shard of
-    /// each bucket, and all-gather the refreshed values.
+    /// reduce-then-update job on the worker pool. With a sharded
+    /// [`crate::comm::ShardStage`], updates reduce-scatter and touch
+    /// only this rank's shard of each bucket; ZeRO-1/2 all-gather the
+    /// refreshed values, ZeRO-2/3 narrow the gradient arenas to the
+    /// shard after the update, and ZeRO-3 keeps values shard-resident
+    /// between steps (all-gathered per bucket on first touch of the
+    /// next forward — the same first-touch machinery as the
+    /// forward-fusion `updated` flags).
     ///
     /// Sharding requires bucketed storage (shard spans are regions of
-    /// the flat arenas), and global-information optimizers are not
-    /// supported with sharding (the global norm would need a second
-    /// collective over partial sums — see ROADMAP).
+    /// the flat arenas). Global-information optimizers are supported
+    /// under sharding: the global norm is assembled by all-reducing
+    /// per-shard partial squared norms ([`tags::NORM`]) — the partial
+    /// sums reassociate the f32 reduction, so the clip factor matches
+    /// unsharded training to rounding rather than bit-for-bit.
     pub fn set_comm(&mut self, ctx: CommCtx) {
-        if ctx.shard {
+        if ctx.stage.sharded() {
             assert!(
                 self.graph.store.is_bucketed(),
                 "sharded updates need bucketed storage (set bucket_cap_bytes)"
             );
-            assert!(
-                !self.opt.needs_global(),
-                "sharded updates do not support global-information optimizer '{}'",
-                self.opt.name()
-            );
         }
-        if self.cfg.comm_chunk_bytes.is_some() && !ctx.shard {
+        if self.cfg.comm_chunk_bytes.is_some() {
             assert!(
                 self.graph.store.is_bucketed(),
                 "chunked comm jobs need bucketed storage (set bucket_cap_bytes)"
@@ -338,15 +364,14 @@ impl Executor {
 
     /// The deterministic chunk grid for `unit`'s comm jobs: `Some` only
     /// when chunked overlap applies — a communicator is installed,
-    /// updates are not sharded, storage is bucketed, and the bucket is
-    /// bigger than one chunk. Every rank computes the same grid from the
-    /// same bucket size, so chunk collectives pair up across ranks.
+    /// storage is bucketed, and the bucket is bigger than one chunk.
+    /// Every rank computes the same grid from the same bucket size, so
+    /// chunk collectives pair up across ranks. Under a sharded stage the
+    /// chunk jobs reduce-scatter with chunk ∩ shard ownership spans
+    /// (`pool::run_comm_chunk_update`).
     fn comm_chunks_of(&self, unit: usize) -> Option<Vec<CommChunk>> {
         let cap = self.cfg.comm_chunk_bytes?;
-        let ctx = self.comm.as_ref()?;
-        if ctx.shard {
-            return None;
-        }
+        self.comm.as_ref()?;
         let bs = self.graph.store.buckets.as_ref()?;
         let total = bs.buckets[unit].data.read().unwrap().num_elems();
         let chunk_elems = (cap / 4).max(1);
@@ -437,7 +462,15 @@ impl Executor {
             Some(bs) => {
                 for (unit, b) in bs.buckets.iter().enumerate() {
                     let mut bd = b.data.write().unwrap();
-                    if ctx.shard {
+                    if ctx.stage.sharded() {
+                        // the collective needs the full local gradients;
+                        // a still-narrowed ZeRO-2/3 arena means backward
+                        // never accumulated into this bucket
+                        assert_eq!(
+                            bd.grad_range,
+                            (0, bd.num_elems()),
+                            "sharded bulk reduce over narrowed grads (unit {unit})"
+                        );
                         ctx.comm
                             .reduce_scatter_mean(ctx.rank, tags::grad(unit), bd.grads.data_mut());
                     } else {
@@ -465,7 +498,7 @@ impl Executor {
     /// without sharding.
     pub fn gather_sharded_state(&mut self) {
         let Some(ctx) = self.comm.clone() else { return };
-        if !ctx.shard {
+        if !ctx.stage.sharded() {
             return;
         }
         let slots = self.opt.num_state();
@@ -496,12 +529,81 @@ impl Executor {
         }
     }
 
+    /// All-gather one bucket's ZeRO-3 shard-resident values and rebuild
+    /// its member value tensors — the gather-on-first-touch leg of the
+    /// value-sharding cycle, also used to materialize values for
+    /// snapshots and checkpoints. A no-op (and no collective) when the
+    /// bucket's values are already materialized; since every replica
+    /// tracks the same release state, the ranks always agree on whether
+    /// the collective fires. The collective runs lock-free (copy-out /
+    /// copy-back), per the pool module's lock rule.
+    fn gather_unit_values(&self, unit: usize) {
+        let Some(ctx) = self.comm.as_ref() else { return };
+        if !ctx.stage.shards_values() {
+            return;
+        }
+        let bs = self.graph.store.buckets.as_ref().expect("ZeRO-3 implies buckets");
+        let bucket = &bs.buckets[unit];
+        let (total, off, shard_vals) = {
+            let bd = bucket.data.read().unwrap();
+            // fast path: already materialized — the common case for
+            // every node touch after a bucket's first
+            let Some(v) = &bd.values else { return };
+            (bd.num_elems(), bd.value_range.0, v.data().to_vec())
+        };
+        let mut buf = vec![0.0f32; total];
+        buf[off..off + shard_vals.len()].copy_from_slice(&shard_vals);
+        ctx.comm.all_gather(ctx.rank, tags::value(unit), &mut buf);
+        bucket.data.write().unwrap().materialize_values(&buf);
+    }
+
+    /// Materialize every ZeRO-3-released bucket's values (a collective
+    /// per released bucket — all ranks must call this together), so
+    /// snapshots and checkpoints see full parameter tensors. No-op for
+    /// the other stages.
+    pub fn materialize_values(&self) {
+        for unit in 0..self.graph.store.num_units() {
+            self.gather_unit_values(unit);
+        }
+    }
+
+    /// End-of-step arena compaction for ZeRO-2/3: narrow any gradient
+    /// arena still at full coverage to this rank's shard (preserving the
+    /// shard slice — forward-fusion's reduced-but-unconsumed gradients
+    /// survive), and release ZeRO-3 values to shard-resident form. The
+    /// whole-bucket drain paths already did both at the drain point;
+    /// this sweep covers the paths that cannot free per-bucket arenas
+    /// mid-step (chunked jobs, forward-fusion's bulk reduce) and is
+    /// idempotent over the rest.
+    fn sharded_compact(&mut self) {
+        let Some(ctx) = self.comm.clone() else { return };
+        if !ctx.stage.shards_grads() {
+            return;
+        }
+        let world = ctx.comm.world();
+        let Some(bs) = &self.graph.store.buckets else { return };
+        for b in &bs.buckets {
+            let mut bd = b.data.write().unwrap();
+            let total = bd.num_elems();
+            let (off, len) = shard_span(total, world, ctx.rank);
+            if bd.grad_range == (0, total) {
+                bd.narrow_grads(off, len);
+            }
+            if ctx.stage.shards_values() {
+                bd.release_values(off, len);
+            }
+        }
+    }
+
     /// Bring the replica to a checkpointable boundary: flush pending
-    /// forward-fusion updates and gather sharded optimizer state. Under
-    /// DDP all ranks must call this together (both halves may issue
-    /// collectives); afterwards rank 0 can `checkpoint::save`.
+    /// forward-fusion updates, materialize ZeRO-3 values, and gather
+    /// sharded optimizer state. Under DDP all ranks must call this
+    /// together (all three halves may issue collectives); afterwards
+    /// rank 0 can `checkpoint::save` — the file carries full-coverage
+    /// values and state, so it is world-size- **and stage**-portable.
     pub fn prepare_checkpoint(&mut self) {
         self.flush_pending();
+        self.materialize_values();
         self.gather_sharded_state();
     }
 
@@ -519,6 +621,7 @@ impl Executor {
         let mut opt_in_fwd = Duration::ZERO;
         let ff = self.cfg.schedule == ScheduleKind::ForwardFusion;
         let bf = self.cfg.schedule == ScheduleKind::BackwardFusion;
+        let z3 = self.comm.as_ref().is_some_and(|c| c.stage.shards_values());
         // FF lazy updates apply the grads of the *previous* iteration's
         // backward; they must use that iteration's step number so
         // step-dependent rules (Adam bias correction) match baseline.
@@ -537,6 +640,19 @@ impl Executor {
                         opt_in_fwd += self.ff_update_unit(unit, pending_step);
                         self.updated[unit] = true;
                     }
+                }
+            }
+            // ZeRO-3 gather-on-first-touch: a bucket whose values are
+            // shard-resident all-gathers them right before the first use
+            // of any member — after the FF lazy update above, so the
+            // gathered values are this step's. Runs for eval too (the
+            // forward needs materialized values either way); every
+            // replica walks the same graph, so the gather order is
+            // deterministic across ranks. Already-materialized buckets
+            // fall through on the read-lock fast path.
+            if z3 {
+                for pid in &self.graph.nodes[i].params {
+                    self.gather_unit_values(self.graph.store.unit_of(*pid));
                 }
             }
             // Alg. 3: count forward uses (member uses count against the
@@ -734,13 +850,26 @@ impl Executor {
         // gradient set (valid for baseline and FF; BF was rejected above).
         // Under DDP the scale must come from the *reduced* gradients, so
         // the bulk reduce happens first and the schedule arms below skip
-        // their own reduce.
+        // their own reduce. Sharded, each rank holds only its shard of
+        // the reduced gradients, so the norm is assembled from per-shard
+        // partial squared sums all-reduced across ranks — the partials
+        // reassociate the f32 summation, so the sharded clip factor
+        // matches unsharded training to rounding (not bit-for-bit, the
+        // one documented deviation from the bit-identity invariant).
         let reduced_for_global = if self.opt.needs_global() {
             let pre_reduced = self.comm.is_some() && self.is_update_step(this_step);
             if pre_reduced {
                 self.comm_reduce_all_grads();
             }
-            let norm = self.graph.store.global_grad_norm();
+            let norm = match &self.comm {
+                Some(ctx) if pre_reduced && ctx.stage.sharded() => {
+                    let w = ctx.comm.world();
+                    let mut part = [self.graph.store.shard_grad_sq_partial(w, ctx.rank)];
+                    ctx.comm.all_reduce_mean(ctx.rank, tags::NORM, &mut part);
+                    (part[0] * w as f32).sqrt()
+                }
+                _ => self.graph.store.global_grad_norm(),
+            };
             let max_norm = self.opt.global_max_norm();
             self.global_scale = if norm > max_norm { max_norm / norm } else { 1.0 };
             pre_reduced
@@ -781,7 +910,28 @@ impl Executor {
                 debug_assert!(self.count.iter().all(|c| *c == 0), "all counts drained");
             }
         }
+        // ZeRO-2/3 steady state: every grad arena narrowed to the shard
+        // (and ZeRO-3 values released) before the step ends — the
+        // whole-bucket drain paths freed theirs at the drain point; this
+        // covers chunked jobs and forward-fusion's bulk reduce.
+        if self.is_update_step(this_step) {
+            self.sharded_compact();
+        }
+        // steady-state residency high-water marks (the figure the shard
+        // stages shrink; transient mid-step buffers documented on
+        // `ArenaPeak`)
+        self.sample_arena_peak();
         stats
+    }
+
+    /// Fold the store's current arena residency into the step-boundary
+    /// high-water marks ([`ArenaPeak`]).
+    fn sample_arena_peak(&mut self) {
+        let store = &self.graph.store;
+        self.arena_peak.grad_bytes = self.arena_peak.grad_bytes.max(store.grad_arena_bytes());
+        self.arena_peak.value_bytes = self.arena_peak.value_bytes.max(store.value_arena_bytes());
+        self.arena_peak.opt_state_bytes =
+            self.arena_peak.opt_state_bytes.max(store.opt_state_bytes());
     }
 
     /// Apply any pending (FF) updates so parameter values reflect all
@@ -804,6 +954,10 @@ impl Executor {
             // flush brings FF to the same state).
             self.has_pending = false;
             self.updated.iter_mut().for_each(|f| *f = false);
+            // the flush may have allocated optimizer state for units the
+            // loop never lazily updated (a 1-step FF run) — fold it into
+            // the peaks so `DdpReport` sees the post-flush residency
+            self.sample_arena_peak();
         }
     }
 

@@ -14,13 +14,14 @@
 //! execution span so the executor can measure how much of the
 //! comm+update work genuinely overlapped backward.
 
-use crate::comm::{tags, CommCtx};
+use crate::comm::{tags, CommCtx, ShardStage};
 use crate::graph::ParamRef;
 use crate::optim::bucket::{
-    apply_bucket_update, apply_bucket_update_range, member_overlap, BucketData, BucketRef,
+    apply_bucket_update, apply_bucket_update_range, apply_bucket_update_shard_resident,
+    member_overlap, BucketData, BucketRef,
 };
 use crate::optim::{Hyper, Optimizer};
-use crate::tensor::flat::shard_span;
+use crate::tensor::flat::{chunk_shard_spans, shard_span};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -127,24 +128,44 @@ impl Job {
     }
 }
 
-/// Copy this rank's `[offset, offset + len)` region of the member values
-/// into `buf` (bucket lock held by the caller; member locks in order).
-fn values_to_flat(bd: &BucketData, buf: &mut [f32], offset: usize, len: usize) {
+/// Copy the `[offset, offset + len)` arena region of the member values
+/// into `buf`, which covers the arena starting at element `base` (bucket
+/// lock held by the caller; member locks in order). `base = 0` is the
+/// whole-bucket case; chunk jobs pass the chunk offset.
+fn values_to_buf(bd: &BucketData, buf: &mut [f32], base: usize, offset: usize, len: usize) {
     for m in &bd.members {
         let Some((a, b)) = member_overlap(m, offset, len) else { continue };
         let pd = m.param.data.read().unwrap();
-        buf[a..b].copy_from_slice(&pd.value.data()[a - m.offset..b - m.offset]);
+        buf[a - base..b - base].copy_from_slice(&pd.value.data()[a - m.offset..b - m.offset]);
     }
 }
 
-/// Write the gathered full flat value buffer back into every member's
-/// value tensor (this rank's own shard round-trips bit-identically).
-fn flat_to_values(bd: &BucketData, buf: &[f32]) {
+/// Write a gathered flat value buffer (covering the arena from `base`)
+/// back into the member value tensors over `[offset, offset + len)`
+/// (this rank's own shard round-trips bit-identically).
+fn buf_to_values(bd: &BucketData, buf: &[f32], base: usize, offset: usize, len: usize) {
     for m in &bd.members {
+        let Some((a, b)) = member_overlap(m, offset, len) else { continue };
         let mut pd = m.param.data.write().unwrap();
-        pd.value
-            .data_mut()
-            .copy_from_slice(&buf[m.offset..m.offset + m.len]);
+        pd.value.data_mut()[a - m.offset..b - m.offset].copy_from_slice(&buf[a - base..b - base]);
+    }
+}
+
+/// Post-update value all-gather of a whole bucket (ZeRO-1/2: every rank
+/// refreshed its own shard of the member values; afterwards every
+/// replica sees all updated parameters). Collectives run lock-free
+/// (copy-out / copy-back), per the chunk-job rule in the module docs.
+fn gather_bucket_values(ctx: &CommCtx, unit: usize, bucket: &BucketRef, total: usize) {
+    let (off, len) = shard_span(total, ctx.comm.world(), ctx.rank);
+    let mut buf = vec![0.0f32; total];
+    {
+        let bd = bucket.data.read().unwrap();
+        values_to_buf(&bd, &mut buf, 0, off, len);
+    }
+    ctx.comm.all_gather(ctx.rank, tags::value(unit), &mut buf);
+    {
+        let bd = bucket.data.read().unwrap();
+        buf_to_values(&bd, &buf, 0, 0, total);
     }
 }
 
@@ -154,11 +175,20 @@ fn flat_to_values(bd: &BucketData, buf: &[f32]) {
 ///
 /// * Unsharded: all-reduce the unit's gradients (when `do_reduce`), then
 ///   run the ordinary full update.
-/// * ZeRO-1 (`ctx.shard`, buckets only): reduce-scatter the bucket's
-///   gradients, update only this rank's shard
-///   ([`apply_bucket_update_range`] — 1/W of the update FLOPs and
-///   optimizer state), zero the stale non-shard gradients, and
-///   all-gather the refreshed parameter values.
+/// * ZeRO-1 (buckets only): reduce-scatter the bucket's gradients,
+///   update only this rank's shard ([`apply_bucket_update_range`] — 1/W
+///   of the update FLOPs and optimizer state), zero the stale non-shard
+///   gradients, and all-gather the refreshed parameter values.
+/// * ZeRO-2: as ZeRO-1, but instead of zeroing the non-shard gradients
+///   the arena is *narrowed* to the shard — at a backward-fusion drain
+///   point this frees the bucket's grad memory while backward is still
+///   running for other buckets (the FORGE-style residency elimination).
+/// * ZeRO-3: additionally skip the post-update value all-gather and
+///   *release* the member value tensors to the shard-resident form; the
+///   next forward all-gathers them back on first touch (`exec`'s
+///   gather-on-first-touch hook). A bucket whose values are already
+///   released (forward-fusion's lazy update after the post-backward
+///   release) updates the shard-resident buffers directly.
 ///
 /// `do_reduce` is false on paths whose gradients were already reduced
 /// (forward-fusion reduces in bulk after backward, lazy-updates next
@@ -186,37 +216,59 @@ pub(crate) fn run_comm_update(
             opt.update(step, &mut pd, hp, scale);
         }
         JobTarget::Bucket(bucket) => {
-            if ctx.shard {
-                let total = bucket.data.read().unwrap().num_elems();
-                let (off, len) = shard_span(total, ctx.comm.world(), rank);
-                if do_reduce {
-                    let mut bd = bucket.data.write().unwrap();
-                    ctx.comm
-                        .reduce_scatter_mean(rank, tags::grad(unit), bd.grads.data_mut());
-                }
-                apply_bucket_update_range(bucket, opt, step, hp, scale, off, len);
-                {
-                    // the complement still holds local unreduced grads
-                    let mut bd = bucket.data.write().unwrap();
-                    bd.zero_grads_outside(off, len);
-                }
-                let mut buf = vec![0.0f32; total];
-                {
-                    let bd = bucket.data.read().unwrap();
-                    values_to_flat(&bd, &mut buf, off, len);
-                }
-                ctx.comm.all_gather(rank, tags::value(unit), &mut buf);
-                {
-                    let bd = bucket.data.read().unwrap();
-                    flat_to_values(&bd, &buf);
-                }
-            } else {
+            if !ctx.stage.sharded() {
                 if do_reduce {
                     let mut bd = bucket.data.write().unwrap();
                     ctx.comm
                         .all_reduce_mean(rank, tags::grad(unit), bd.grads.data_mut());
                 }
                 apply_bucket_update(bucket, opt, step, hp, scale);
+                return;
+            }
+            let total = bucket.data.read().unwrap().num_elems();
+            let (off, len) = shard_span(total, ctx.comm.world(), rank);
+            if do_reduce {
+                // backward re-widened any ZeRO-2/3-narrowed arena, so
+                // the reduce-scatter sees the full local gradients — a
+                // bucket that somehow skipped accumulation (a parameter
+                // disconnected from the loss) must fail loudly here, not
+                // feed a shard-length buffer into a full-length collective
+                let mut bd = bucket.data.write().unwrap();
+                assert_eq!(
+                    bd.grad_range,
+                    (0, total),
+                    "sharded reduce over narrowed grads (backward must have widened)"
+                );
+                ctx.comm
+                    .reduce_scatter_mean(rank, tags::grad(unit), bd.grads.data_mut());
+            }
+            let shard_resident = bucket.data.read().unwrap().values.is_some();
+            if shard_resident {
+                apply_bucket_update_shard_resident(bucket, opt, step, hp, scale);
+            } else {
+                apply_bucket_update_range(bucket, opt, step, hp, scale, off, len);
+            }
+            match ctx.stage {
+                ShardStage::None => unreachable!("handled above"),
+                ShardStage::Zero1 => {
+                    // the complement still holds local unreduced grads
+                    let mut bd = bucket.data.write().unwrap();
+                    bd.zero_grads_outside(off, len);
+                }
+                ShardStage::Zero2 | ShardStage::Zero3 => {
+                    // free the complement instead (no-op when the lazy
+                    // forward-fusion path already narrowed post-reduce)
+                    let mut bd = bucket.data.write().unwrap();
+                    if bd.grad_range == (0, total) {
+                        bd.narrow_grads(off, len);
+                    }
+                    if ctx.stage.shards_values() {
+                        bd.release_values(off, len);
+                    }
+                }
+            }
+            if !ctx.stage.shards_values() {
+                gather_bucket_values(ctx, unit, bucket, total);
             }
         }
     }
@@ -234,9 +286,19 @@ pub(crate) fn run_comm_update(
 /// copied back before the range update (bit-identical either way: the
 /// mean and the update rule are elementwise).
 ///
-/// Sharding composes with chunking upstream (the executor submits whole
-/// -bucket jobs when `ctx.shard`); this path asserts the replicated
-/// case.
+/// Replicated: all-reduce the chunk, update the chunk's range.
+///
+/// Sharded (any ZeRO stage): the chunk *reduce-scatters* with an
+/// explicit ownership partition — rank r owns the intersection of its
+/// bucket-level [`shard_span`] with the chunk
+/// ([`chunk_shard_spans`], in chunk-local coordinates) — and the fused
+/// update walks exactly that intersection, which stays inside the
+/// rank's shard-only state coverage. ZeRO-1/2
+/// then all-gather the chunk's refreshed values with the same spans;
+/// ZeRO-3 leaves values for the pre-forward gather. The end-of-step
+/// compaction in `exec` narrows ZeRO-2/3 grad arenas (and releases
+/// ZeRO-3 values) once every chunk job of the step has drained — a
+/// chunk job cannot free bucket-level arenas on its own.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn run_comm_chunk_update(
     ctx: &CommCtx,
@@ -248,22 +310,84 @@ pub(crate) fn run_comm_chunk_update(
     hp: &Hyper,
     scale: f32,
 ) {
-    assert!(!ctx.shard, "chunked comm jobs are replicated-only (shard splits work already)");
     let (off, len) = (chunk.offset, chunk.len);
+    if !ctx.stage.sharded() {
+        let mut buf = {
+            let bd = bucket.data.read().unwrap();
+            bd.grads.data()[off..off + len].to_vec()
+        };
+        ctx.comm
+            .all_reduce_mean(ctx.rank, tags::grad_chunk(unit, chunk.index), &mut buf);
+        {
+            let mut bd = bucket.data.write().unwrap();
+            bd.grads.data_mut()[off..off + len].copy_from_slice(&buf);
+            // allocate full-coverage state *before* the range update so
+            // `ensure_state_range` never narrows coverage to one chunk
+            bd.ensure_state(opt.num_state());
+        }
+        apply_bucket_update_range(bucket, opt, step, hp, scale, off, len);
+        return;
+    }
+    let world = ctx.comm.world();
+    let total = bucket.data.read().unwrap().num_elems();
+    let shard = shard_span(total, world, ctx.rank);
+    // chunk-local ownership spans: each rank's bucket-level shard
+    // clamped to the chunk ([`chunk_shard_spans`] — the spans tile the
+    // chunk, with placed empties for ranks whose shard misses it)
+    let spans = chunk_shard_spans(total, world, off, len);
     let mut buf = {
         let bd = bucket.data.read().unwrap();
+        assert_eq!(
+            bd.grad_range,
+            (0, total),
+            "sharded chunk job over narrowed grads (backward must have widened)"
+        );
         bd.grads.data()[off..off + len].to_vec()
     };
-    ctx.comm
-        .all_reduce_mean(ctx.rank, tags::grad_chunk(unit, chunk.index), &mut buf);
+    ctx.comm.reduce_scatter_mean_spans(
+        ctx.rank,
+        tags::grad_chunk(unit, chunk.index),
+        &mut buf,
+        &spans,
+    );
+    let (mo, ml) = spans[ctx.rank];
     {
         let mut bd = bucket.data.write().unwrap();
-        bd.grads.data_mut()[off..off + len].copy_from_slice(&buf);
-        // allocate full-coverage state *before* the range update so
-        // `ensure_state_range` never narrows coverage to one chunk
-        bd.ensure_state(opt.num_state());
+        bd.grads.data_mut()[off + mo..off + mo + ml].copy_from_slice(&buf[mo..mo + ml]);
+        if !ctx.stage.shards_grads() {
+            // ZeRO-1 keeps the full arena: the chunk's non-owned region
+            // still holds local unreduced grads — zero this chunk's
+            // complement (the union over chunk jobs covers the bucket)
+            for v in &mut bd.grads.data_mut()[off..off + mo] {
+                *v = 0.0;
+            }
+            for v in &mut bd.grads.data_mut()[off + mo + ml..off + len] {
+                *v = 0.0;
+            }
+        }
+        // state covers the whole bucket-level shard, never one chunk's
+        // piece: allocate it up front so no chunk narrows the coverage
+        bd.ensure_state_range(opt.num_state(), shard.0, shard.1);
     }
-    apply_bucket_update_range(bucket, opt, step, hp, scale, off, len);
+    apply_bucket_update_range(bucket, opt, step, hp, scale, off + mo, ml);
+    if !ctx.stage.shards_values() {
+        // refresh this chunk's values everywhere, with the same spans
+        let mut vbuf = vec![0.0f32; len];
+        {
+            let bd = bucket.data.read().unwrap();
+            values_to_buf(&bd, &mut vbuf, off, off + mo, ml);
+        }
+        ctx.comm.all_gather_spans(
+            ctx.rank,
+            tags::value_chunk(unit, chunk.index),
+            &mut vbuf,
+            &spans,
+        );
+        {
+            let bd = bucket.data.read().unwrap();
+            buf_to_values(&bd, &vbuf, off, off, len);
+        }
+    }
 }
 
 enum Msg {
@@ -468,14 +592,17 @@ mod tests {
 
     /// Two "ranks" (threads) drive comm jobs through their own pools:
     /// the reduce-then-update must average gradients and keep replicas
-    /// bit-identical, with sharded and unsharded modes agreeing.
+    /// bit-identical, with every shard stage agreeing. Under ZeRO-2/3
+    /// the drain-point job also frees the non-shard arenas; ZeRO-3
+    /// leaves values shard-resident, so the check reads them from the
+    /// bucket's shard buffer instead of the (released) member tensors.
     #[test]
     fn comm_jobs_reduce_then_update_across_ranks() {
         use crate::comm::{CommCtx, SharedMemComm};
         use crate::graph::ParamStore;
         use crate::optim::bucket::build_buckets;
         let world = 2;
-        for shard in [false, true] {
+        for stage in ShardStage::ALL {
             let comm = Arc::new(SharedMemComm::new(world));
             let outs = Arc::new(Mutex::new(vec![Vec::new(); world]));
             std::thread::scope(|s| {
@@ -490,7 +617,7 @@ mod tests {
                         // rank-dependent grads: mean is 1.0 everywhere
                         buckets[0].data.write().unwrap().grads =
                             Tensor::full(&[6], if rank == 0 { 0.5 } else { 1.5 });
-                        let ctx = CommCtx { comm, rank, shard };
+                        let ctx = CommCtx { comm, rank, stage };
                         let pool = UpdatePool::new(1);
                         pool.submit(Job {
                             target: JobTarget::Bucket(Arc::clone(&buckets[0])),
@@ -501,15 +628,113 @@ mod tests {
                             comm: Some(CommPlan { ctx, unit: 0, chunk: None }),
                         });
                         pool.wait_all();
-                        let mut vals = store.params[0].data.read().unwrap().value.data().to_vec();
-                        vals.extend_from_slice(store.params[1].data.read().unwrap().value.data());
+                        let bd = buckets[0].data.read().unwrap();
+                        let vals = if stage.shards_values() {
+                            // released: own shard only, from the bucket
+                            bd.values.as_ref().unwrap().data().to_vec()
+                        } else {
+                            let mut v =
+                                store.params[0].data.read().unwrap().value.data().to_vec();
+                            v.extend_from_slice(
+                                store.params[1].data.read().unwrap().value.data(),
+                            );
+                            v
+                        };
+                        if stage.shards_grads() {
+                            assert_eq!(
+                                bd.grads.len(),
+                                3,
+                                "stage {stage:?}: grad arena narrowed to the shard"
+                            );
+                        }
                         outs.lock().unwrap()[rank] = vals;
                     });
                 }
             });
             let outs = outs.lock().unwrap();
-            assert_eq!(outs[0], outs[1], "replicas identical (shard={shard})");
-            assert_eq!(outs[0], vec![0.0, 0.0, 0.0, 0.0, 1.0, 1.0], "θ - lr·mean(g)");
+            let full = vec![0.0, 0.0, 0.0, 0.0, 1.0, 1.0]; // θ - lr·mean(g)
+            if stage.shards_values() {
+                assert_eq!(outs[0], full[..3], "rank 0 shard updated");
+                assert_eq!(outs[1], full[3..], "rank 1 shard updated");
+            } else {
+                assert_eq!(outs[0], outs[1], "replicas identical ({stage:?})");
+                assert_eq!(outs[0], full, "θ - lr·mean(g)");
+            }
+        }
+    }
+
+    /// Sharded chunk jobs: the chunk ∩ shard span collectives must
+    /// reproduce the whole-bucket sharded path exactly, per stage.
+    #[test]
+    fn sharded_chunk_jobs_match_whole_bucket_path() {
+        use crate::comm::{CommCtx, SharedMemComm};
+        use crate::graph::ParamStore;
+        use crate::optim::bucket::build_buckets;
+        let world = 2;
+        for stage in [ShardStage::Zero1, ShardStage::Zero2, ShardStage::Zero3] {
+            let comm = Arc::new(SharedMemComm::new(world));
+            let outs = Arc::new(Mutex::new(vec![Vec::new(); world]));
+            std::thread::scope(|s| {
+                for rank in 0..world {
+                    let comm = Arc::clone(&comm);
+                    let outs = Arc::clone(&outs);
+                    s.spawn(move || {
+                        let mut store = ParamStore::default();
+                        store.add("a", Tensor::full(&[4], 1.0));
+                        store.add("b", Tensor::full(&[2], 2.0));
+                        let (buckets, _) = build_buckets(&store.params, 1 << 20);
+                        buckets[0].data.write().unwrap().grads =
+                            Tensor::full(&[6], if rank == 0 { 0.5 } else { 1.5 });
+                        let ctx = CommCtx { comm, rank, stage };
+                        let pool = UpdatePool::new(2);
+                        // two chunks (2 + 4 elems): the second straddles
+                        // the world-2 shard boundary ([0,3) / [3,6)), so
+                        // its ownership spans are partial on both ranks
+                        for (index, offset, len) in [(0usize, 0usize, 2usize), (1, 2, 4)] {
+                            pool.submit(Job {
+                                target: JobTarget::Bucket(Arc::clone(&buckets[0])),
+                                opt: Arc::new(Sgd),
+                                hyper: Hyper { lr: 1.0, weight_decay: 0.0, ..Hyper::default() },
+                                step: 1,
+                                scale: 1.0,
+                                comm: Some(CommPlan {
+                                    ctx: ctx.clone(),
+                                    unit: 0,
+                                    chunk: Some(CommChunk { index, offset, len }),
+                                }),
+                            });
+                        }
+                        pool.wait_all();
+                        let vals = if stage.shards_values() {
+                            // chunk jobs leave values materialized; the
+                            // executor's end-of-step compaction releases
+                            // them — here members still hold everything
+                            let (off, len) = shard_span(6, world, rank);
+                            let mut buf = vec![0.0f32; 6];
+                            let bd = buckets[0].data.read().unwrap();
+                            values_to_buf(&bd, &mut buf, 0, off, len);
+                            buf[off..off + len].to_vec()
+                        } else {
+                            let mut v =
+                                store.params[0].data.read().unwrap().value.data().to_vec();
+                            v.extend_from_slice(
+                                store.params[1].data.read().unwrap().value.data(),
+                            );
+                            v
+                        };
+                        outs.lock().unwrap()[rank] = vals;
+                    });
+                }
+            });
+            let outs = outs.lock().unwrap();
+            let full = vec![0.0, 0.0, 0.0, 0.0, 1.0, 1.0];
+            if stage.shards_values() {
+                assert_eq!(outs[0], full[..3], "{stage:?}: rank 0 shard");
+                assert_eq!(outs[1], full[3..], "{stage:?}: rank 1 shard");
+            } else {
+                assert_eq!(outs[0], outs[1], "{stage:?}: replicas identical");
+                assert_eq!(outs[0], full, "{stage:?}: θ - lr·mean(g)");
+            }
         }
     }
 
@@ -535,7 +760,7 @@ mod tests {
                     let (buckets, _) = build_buckets(&store.params, 1 << 20);
                     buckets[0].data.write().unwrap().grads =
                         Tensor::full(&[6], if rank == 0 { 0.5 } else { 1.5 });
-                    let ctx = CommCtx { comm, rank, shard: false };
+                    let ctx = CommCtx { comm, rank, stage: ShardStage::None };
                     let pool = UpdatePool::new(2);
                     for (index, offset, len) in [(0usize, 0usize, 3usize), (1, 3, 3)] {
                         pool.submit(Job {

@@ -147,12 +147,16 @@ impl ParamStore {
     }
 
     /// Accumulate `g` into the parameter's gradient, whichever layout
-    /// it lives in.
+    /// it lives in. A ZeRO-2/3-narrowed bucket grad arena is lazily
+    /// re-widened to full coverage first — backward computes full local
+    /// gradients on every replica, so the full buffer must transiently
+    /// exist; it narrows back to the shard after the next update.
     pub fn accum_grad(&self, pid: ParamId, g: &Tensor) {
         match &self.buckets {
             Some(bs) => {
                 let (bi, mi) = bs.loc[pid];
                 let mut bd = bs.buckets[bi].data.write().unwrap();
+                bd.widen_grads();
                 let dst = bd.grad_slice_mut(mi);
                 assert_eq!(dst.len(), g.len(), "accum_grad: length mismatch");
                 for (d, s) in dst.iter_mut().zip(g.data().iter()) {
@@ -266,6 +270,117 @@ impl ParamStore {
             bd.state = narrowed;
             bd.state_range = (off, len);
         }
+    }
+
+    /// Apply a ZeRO shard stage's steady-state arena layout to this
+    /// rank's store: narrow optimizer state to the shard (stage ≥ 1,
+    /// [`ParamStore::reshard_state`]), narrow the gradient arenas
+    /// (stage ≥ 2 — the post-restore grads are zero, so the shard slice
+    /// is preserved trivially), and release the value arenas to
+    /// shard-resident form (stage 3). Used after a checkpoint restore —
+    /// which imports full, world-size-independent state — to return a
+    /// sharded replica to its 1/W footprint, making checkpoints
+    /// *stage*-portable as well as world-size-portable. No-op for
+    /// `ShardStage::None` and on scattered stores.
+    pub fn apply_shard_stage(&self, stage: crate::comm::ShardStage, world: usize, rank: usize) {
+        if !stage.sharded() {
+            return;
+        }
+        self.reshard_state(world, rank);
+        let Some(bs) = &self.buckets else { return };
+        if !stage.shards_grads() {
+            return;
+        }
+        for b in &bs.buckets {
+            let mut bd = b.data.write().unwrap();
+            let total = bd.num_elems();
+            let (off, len) = crate::tensor::flat::shard_span(total, world, rank);
+            bd.widen_grads();
+            bd.narrow_grads(off, len);
+            if stage.shards_values() {
+                bd.release_values(off, len);
+            }
+        }
+    }
+
+    /// Sum of squared gradients over this rank's shard of every bucket
+    /// arena — the per-shard partial of the global gradient norm. All
+    /// ranks' partials all-reduce to the full `‖g‖²` (sharded
+    /// global-norm clipping). Subtotals accumulate per member ∩ shard
+    /// piece in member order, mirroring
+    /// [`ParamStore::global_grad_norm`]'s per-member association — so at
+    /// world 1 (one shard covering everything) the partial is
+    /// bit-identical to the unsharded norm; at larger worlds the
+    /// cross-rank reassociation is the only rounding difference.
+    /// Tolerates narrowed ZeRO-2/3 arenas, whose coverage is exactly the
+    /// shard being summed.
+    pub fn shard_grad_sq_partial(&self, world: usize, rank: usize) -> f32 {
+        let Some(bs) = &self.buckets else {
+            panic!("shard_grad_sq_partial: sharded norms require bucketed storage");
+        };
+        let mut total = 0.0f32;
+        for b in &bs.buckets {
+            let bd = b.data.read().unwrap();
+            let n = bd.num_elems();
+            let (off, len) = crate::tensor::flat::shard_span(n, world, rank);
+            let (goff, glen) = bd.grad_range;
+            assert!(
+                off >= goff && off + len <= goff + glen,
+                "shard_grad_sq_partial: shard outside grad coverage"
+            );
+            for m in &bd.members {
+                let Some((a, b)) = crate::optim::bucket::member_overlap(m, off, len) else {
+                    continue;
+                };
+                total += bd.grads.data()[a - goff..b - goff]
+                    .iter()
+                    .map(|x| x * x)
+                    .sum::<f32>();
+            }
+        }
+        total
+    }
+
+    /// Bytes currently allocated to gradient arenas on this replica —
+    /// the ZeRO-2/3 steady-state residency figure (1/W once narrowed;
+    /// transiently full during backward).
+    pub fn grad_arena_bytes(&self) -> u64 {
+        match &self.buckets {
+            Some(bs) => bs
+                .buckets
+                .iter()
+                .map(|b| b.data.read().unwrap().grads.len() as u64 * 4)
+                .sum(),
+            None => self
+                .params
+                .iter()
+                .map(|p| p.data.read().unwrap().grad.len() as u64 * 4)
+                .sum(),
+        }
+    }
+
+    /// Bytes currently allocated to parameter values on this replica —
+    /// per-member tensors plus any ZeRO-3 shard-resident bucket copy
+    /// (1/W once released; transiently full + one gather buffer while
+    /// materialized for forward/backward).
+    pub fn value_arena_bytes(&self) -> u64 {
+        let member_bytes: u64 = self
+            .params
+            .iter()
+            .map(|p| p.data.read().unwrap().value.len() as u64 * 4)
+            .sum();
+        let shard_bytes: u64 = match &self.buckets {
+            Some(bs) => bs
+                .buckets
+                .iter()
+                .map(|b| {
+                    let bd = b.data.read().unwrap();
+                    bd.values.as_ref().map_or(0, |v| v.len() as u64 * 4)
+                })
+                .sum(),
+            None => 0,
+        };
+        member_bytes + shard_bytes
     }
 
     /// Bytes currently allocated to optimizer state on this replica, in

@@ -8,7 +8,7 @@
 //!   ddp         --world W --schedule S --steps N --algo flat|ring|tree
 //!   artifacts   list + smoke-execute the AOT artifacts via PJRT
 
-use optfuse::comm::CommAlgo;
+use optfuse::comm::{CommAlgo, ShardStage};
 use optfuse::config::Args;
 use optfuse::data;
 use optfuse::ddp::{train_ddp, DdpConfig};
@@ -77,6 +77,16 @@ fn storage_label(cap: Option<usize>) -> String {
     match cap {
         Some(cap) => format!("bucketed({cap}B)"),
         None => "scattered".to_string(),
+    }
+}
+
+/// `--shard-stage none|zero1|zero2|zero3` (also `0`–`3`); the legacy
+/// `--shard` flag is an alias for `zero1`.
+fn shard_stage_from(args: &Args) -> anyhow::Result<ShardStage> {
+    match args.get("shard-stage") {
+        Some(s) => s.parse().map_err(|e: String| anyhow::anyhow!(e)),
+        None if args.flag("shard") => Ok(ShardStage::Zero1),
+        None => Ok(ShardStage::None),
     }
 }
 
@@ -187,25 +197,28 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             0 => None,
             cap => Some(cap),
         };
-        let shard = args.flag("shard");
-        if shard && cap.is_none() {
+        let stage = shard_stage_from(args)?;
+        if stage.sharded() && cap.is_none() {
             cap = Some(1 << 20);
-            println!("(--shard prediction needs bucketed units; defaulting --bucket-cap to 1 MiB)");
+            println!(
+                "(--shard-stage prediction needs bucketed units; defaulting --bucket-cap to 1 MiB)"
+            );
         }
         let m = machine.with_world(world);
         println!(
             "\nDDP prediction: world={world} link {:.1} GB/s, {:.1} µs/hop | \
-             storage={} shard={shard}",
+             storage={} shard-stage={}",
             m.interconnect.link_bw / 1e9,
             m.interconnect.hop_latency_s * 1e6,
-            storage_label(cap)
+            storage_label(cap),
+            stage.label()
         );
         println!(
             "  algo  schedule          step ms   comm ms  exposed   overlap%   wire MiB  hops"
         );
         for algo in algos {
             for kind in ScheduleKind::ALL {
-                let ddp = DdpSimConfig { algo, bucket_cap_bytes: cap, shard };
+                let ddp = DdpSimConfig { algo, bucket_cap_bytes: cap, stage };
                 let r = memsim::simulate_ddp(&m, &net, &opt, batch, kind, ddp);
                 println!(
                     "  {:<5} {:<16} {:>8.2}  {:>8.2}  {:>7.2}  {:>8.0}%  {:>9.2}  {}",
@@ -220,6 +233,22 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
                 );
             }
         }
+        // the per-stage memory ladder (stage-independent of algo/schedule)
+        let mib = (1 << 20) as f64;
+        println!("\n  per-replica steady-state arena bytes (MiB):");
+        println!("  stage   grads    values   opt-state  gather-buf");
+        for stage in ShardStage::ALL {
+            let units = memsim::comm_unit_elems(&net, cap);
+            let mem = memsim::stage_memory(&units, opt.state_slots as usize, stage, world);
+            println!(
+                "  {:<6} {:>7.2}  {:>7.2}  {:>9.2}  {:>9.2}",
+                stage.label(),
+                mem.grad_bytes as f64 / mib,
+                mem.value_bytes as f64 / mib,
+                mem.opt_state_bytes as f64 / mib,
+                mem.gather_buf_bytes as f64 / mib
+            );
+        }
     }
     Ok(())
 }
@@ -233,11 +262,12 @@ fn cmd_ddp(args: &Args) -> anyhow::Result<()> {
         .map_err(|e: String| anyhow::anyhow!(e))?;
     let batch = args.usize_or("batch", 8);
     let mut bucket_cap = bucket_cap_from(args);
-    // `--shard` = ZeRO-1 sharded updates; needs buckets, so default a cap
-    let shard = args.flag("shard");
-    if shard && bucket_cap.is_none() {
+    // `--shard-stage zero1|zero2|zero3` (legacy `--shard` = zero1):
+    // sharded arenas need buckets, so default a cap
+    let stage = shard_stage_from(args)?;
+    if stage.sharded() && bucket_cap.is_none() {
         bucket_cap = Some(1 << 20);
-        println!("(--shard needs bucketed storage; defaulting --bucket-cap to 1 MiB)");
+        println!("(--shard-stage needs bucketed storage; defaulting --bucket-cap to 1 MiB)");
     }
     // `--overlap N` = N reduce-then-update worker threads per replica
     // (backward-fusion only)
@@ -249,13 +279,14 @@ fn cmd_ddp(args: &Args) -> anyhow::Result<()> {
         .parse()
         .map_err(|e: String| anyhow::anyhow!(e))?;
     // `--chunk-cap <bytes>` = split backward-fusion reduce jobs per chunk
+    // (sharded stages reduce-scatter per chunk with chunk ∩ shard spans)
     let mut chunk_cap = match args.usize_or("chunk-cap", 0) {
         0 => None,
         cap => Some(cap),
     };
-    if chunk_cap.is_some() && (shard || schedule != ScheduleKind::BackwardFusion) {
+    if chunk_cap.is_some() && schedule != ScheduleKind::BackwardFusion {
         // don't print a chunk setting that the executor would ignore
-        println!("(--chunk-cap applies to replicated backward-fusion only; ignoring it)");
+        println!("(--chunk-cap applies to backward-fusion only; ignoring it)");
         chunk_cap = None;
     }
     if chunk_cap.is_some() && bucket_cap.is_none() {
@@ -263,12 +294,12 @@ fn cmd_ddp(args: &Args) -> anyhow::Result<()> {
         println!("(--chunk-cap needs bucketed storage; defaulting --bucket-cap to 1 MiB)");
     }
     println!(
-        "DDP: world={world} schedule={} algo={} steps={steps} storage={} shard={} \
+        "DDP: world={world} schedule={} algo={} steps={steps} storage={} shard-stage={} \
          overlap_threads={} chunk={:?}",
         schedule.label(),
         algo.label(),
         storage_label(bucket_cap),
-        shard,
+        stage.label(),
         overlap,
         chunk_cap
     );
@@ -283,7 +314,7 @@ fn cmd_ddp(args: &Args) -> anyhow::Result<()> {
             steps,
             bucket_cap_bytes: bucket_cap,
             comm_chunk_bytes: chunk_cap,
-            shard_updates: shard,
+            shard_stage: stage,
             overlap_threads: overlap,
             load_from: None,
             save_to: None,
@@ -295,8 +326,7 @@ fn cmd_ddp(args: &Args) -> anyhow::Result<()> {
     );
     println!(
         "iter {:.2} ms | comm {:.2} MiB, {} rounds, {} hops, {:.1} ms blocked | \
-         {:.1} rounds/step | overlap {:.0}% | opt state {:.1} KiB/replica | \
-         {} update elems/step | final loss {:.4}",
+         {:.1} rounds/step | overlap {:.0}% | {} update elems/step | final loss {:.4}",
         report.iter_ms,
         report.comm_bytes as f64 / (1 << 20) as f64,
         report.comm_rounds,
@@ -304,9 +334,15 @@ fn cmd_ddp(args: &Args) -> anyhow::Result<()> {
         report.comm_wait_ms,
         report.reduces_per_step,
         report.overlap_frac * 100.0,
-        report.opt_state_bytes as f64 / 1024.0,
         report.update_elems_per_step,
         report.losses.last().unwrap_or(&f32::NAN)
+    );
+    println!(
+        "per-replica arenas (steady-state peak): grads {:.1} KiB | values {:.1} KiB | \
+         opt state {:.1} KiB",
+        report.peak_grad_arena_bytes as f64 / 1024.0,
+        report.peak_value_arena_bytes as f64 / 1024.0,
+        report.opt_state_bytes as f64 / 1024.0
     );
     Ok(())
 }

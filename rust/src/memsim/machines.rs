@@ -24,9 +24,64 @@ pub fn pcie_x8(world: usize) -> Interconnect {
 }
 
 /// Shared-memory threads (the in-process DDP harness): a hop is a
-/// mutex+condvar handoff, bandwidth is a memcpy.
+/// mutex+condvar handoff, bandwidth is a memcpy. These constants are the
+/// *fallback* when no measurements exist; [`fit_interconnect`] replaces
+/// them with coefficients fitted to measured `CommStats` blocked time.
 pub fn shared_mem(world: usize) -> Interconnect {
     Interconnect { world, link_bw: 8.0 * GB, hop_latency_s: 3.0e-6 }
+}
+
+/// One measured collective-accounting observation: the `CommStats`
+/// totals of a run (or a run segment) whose blocked time the fit
+/// explains as `hops · latency + bytes / bandwidth`.
+#[derive(Debug, Clone, Copy)]
+pub struct CommSample {
+    /// Total wire bytes (sent + received at both endpoints).
+    pub bytes: u64,
+    /// Total point-to-point hop legs.
+    pub hops: u64,
+    /// Total wallclock blocked inside collectives, seconds (summed over
+    /// ranks, like `CommStats::wait_ns`).
+    pub wait_s: f64,
+}
+
+/// Calibrate a shared-memory-class [`Interconnect`] from measured
+/// blocked time instead of hand-picked constants: a two-parameter
+/// least-squares fit of `wait ≈ hops · lat + bytes · (1/bw)` over the
+/// samples (normal equations of the linear model — the design matrix is
+/// `[hops, bytes]`). Samples should span both the latency-dominated
+/// regime (many hops, small payloads — e.g. a tree or flat run over
+/// small buckets) and the bandwidth-dominated one (large ring payloads),
+/// or the system is ill-conditioned; degenerate or non-physical fits
+/// (singular matrix, non-positive latency or bandwidth) fall back to the
+/// hand-picked [`shared_mem`] preset so a bad measurement set can never
+/// produce a nonsense machine model.
+pub fn fit_interconnect(world: usize, samples: &[CommSample]) -> Interconnect {
+    let fallback = shared_mem(world);
+    if samples.len() < 2 {
+        return fallback;
+    }
+    let (mut shh, mut shb, mut sbb, mut shw, mut sbw) = (0.0f64, 0.0, 0.0, 0.0, 0.0);
+    for s in samples {
+        let (h, b, w) = (s.hops as f64, s.bytes as f64, s.wait_s);
+        shh += h * h;
+        shb += h * b;
+        sbb += b * b;
+        shw += h * w;
+        sbw += b * w;
+    }
+    let det = shh * sbb - shb * shb;
+    // relative conditioning guard: det of a rank-1-ish system is tiny
+    // against the scale of its entries
+    if det.abs() <= 1e-12 * shh.max(sbb).powi(2).max(f64::MIN_POSITIVE) {
+        return fallback;
+    }
+    let lat = (sbb * shw - shb * sbw) / det;
+    let inv_bw = (shh * sbw - shb * shw) / det;
+    if !(lat.is_finite() && inv_bw.is_finite()) || lat <= 0.0 || inv_bw <= 0.0 {
+        return fallback;
+    }
+    Interconnect { world, link_bw: 1.0 / inv_bw, hop_latency_s: lat }
 }
 
 /// TITAN Xp + Core i9-7900X (paper Table 2 row 1).
@@ -117,6 +172,46 @@ mod tests {
     #[test]
     fn table2_has_three_rows() {
         assert_eq!(table2_machines().len(), 3);
+    }
+
+    /// The least-squares calibration recovers known coefficients from
+    /// synthetic samples generated by the model itself, and falls back
+    /// to the hand-picked preset on degenerate inputs.
+    #[test]
+    fn fit_interconnect_recovers_known_coefficients() {
+        let (lat, bw) = (2.5e-6f64, 5.0 * GB);
+        let gen = |hops: u64, bytes: u64| CommSample {
+            bytes,
+            hops,
+            wait_s: hops as f64 * lat + bytes as f64 / bw,
+        };
+        // latency-heavy and bandwidth-heavy observations together make
+        // the system well-conditioned
+        let samples = [
+            gen(4000, 1 << 16),
+            gen(48, 64 << 20),
+            gen(800, 4 << 20),
+            gen(12000, 1 << 12),
+        ];
+        let ic = fit_interconnect(4, &samples);
+        assert_eq!(ic.world, 4);
+        assert!((ic.hop_latency_s - lat).abs() / lat < 1e-6, "lat {:.3e}", ic.hop_latency_s);
+        assert!((ic.link_bw - bw).abs() / bw < 1e-6, "bw {:.3e}", ic.link_bw);
+        // degenerate: too few samples, or all samples proportional
+        // (rank-1 design), or non-physical negative coefficients
+        let fb = shared_mem(2);
+        let one = fit_interconnect(2, &samples[..1]);
+        assert_eq!(one.hop_latency_s, fb.hop_latency_s);
+        let rank1 = [gen(100, 1000), gen(200, 2000), gen(400, 4000)];
+        let r1 = fit_interconnect(2, &rank1);
+        assert_eq!(r1.link_bw, fb.link_bw, "rank-1 design falls back");
+        let negative = [
+            CommSample { bytes: 1000, hops: 10, wait_s: 1.0 },
+            CommSample { bytes: 1 << 20, hops: 20, wait_s: 0.9 },
+            CommSample { bytes: 2 << 20, hops: 4000, wait_s: 0.1 },
+        ];
+        let neg = fit_interconnect(2, &negative);
+        assert_eq!(neg.hop_latency_s, fb.hop_latency_s, "non-physical fit falls back");
     }
 
     #[test]

@@ -40,9 +40,10 @@ pub mod zoo;
 
 use crate::comm::algo::{wire_all_gather, wire_all_reduce, wire_reduce_scatter};
 use crate::comm::tree::tree_rounds;
-use crate::comm::{CommAlgo, WireCost};
+use crate::comm::{CommAlgo, ShardStage, WireCost};
 use crate::graph::ScheduleKind;
 use crate::optim::bucket::partition_by_bytes;
+use crate::tensor::flat::shard_span;
 use spec::{NetSpec, OptSpec};
 use std::collections::HashMap;
 
@@ -103,9 +104,9 @@ pub struct Interconnect {
 pub enum CollOp {
     /// Full all-reduce (gradient averaging, replicated path).
     AllReduce,
-    /// Reduce-scatter (ZeRO-1 gradient shard).
+    /// Reduce-scatter (the ZeRO stages' gradient shard).
     ReduceScatter,
-    /// All-gather (ZeRO-1 value refresh).
+    /// All-gather (ZeRO-1/2 value refresh; ZeRO-3 pre-forward gather).
     AllGather,
 }
 
@@ -438,9 +439,58 @@ pub struct DdpSimConfig {
     pub algo: CommAlgo,
     /// Bucketed (`Some(cap)`) or scattered (`None`) collective units.
     pub bucket_cap_bytes: Option<usize>,
-    /// ZeRO-1: gradients reduce-scatter and values all-gather instead of
-    /// one all-reduce per unit.
-    pub shard: bool,
+    /// ZeRO shard stage: any sharded stage prices a reduce-scatter +
+    /// all-gather per unit instead of one all-reduce (ZeRO-3 moves the
+    /// gather to the next forward's first touch — same wire volume,
+    /// different placement), and shrinks the predicted per-replica
+    /// arena residency ([`StageMemory`]).
+    pub stage: ShardStage,
+}
+
+/// Predicted per-replica steady-state arena residency of a DDP
+/// configuration — the memory claim of each shard stage, matching the
+/// harness's measured [`crate::exec::ArenaPeak`] **exactly** (both sides
+/// compute rank 0's `shard_span` sums over the same bucket layout).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageMemory {
+    /// Gradient-arena bytes (1/W under ZeRO-2/3; transiently full
+    /// during backward on every stage — inherent to data parallelism).
+    pub grad_bytes: u64,
+    /// Parameter-value bytes (1/W under ZeRO-3).
+    pub value_bytes: u64,
+    /// Optimizer-state bytes (1/W under any sharded stage).
+    pub opt_state_bytes: u64,
+    /// ZeRO-3 transient: the flat gather buffer of the largest unit,
+    /// live while a bucket's values are being materialized.
+    pub gather_buf_bytes: u64,
+}
+
+/// Rank 0's predicted steady-state arena bytes for `units` (collective
+/// unit element counts in id order) under `stage` at world size `world`,
+/// with `state_slots` optimizer-state tensors per element. Shard spans
+/// are rank 0's (the rank the harness reports), so remainder elements
+/// land exactly where `ParamStore` puts them.
+pub fn stage_memory(
+    units: &[usize],
+    state_slots: usize,
+    stage: ShardStage,
+    world: usize,
+) -> StageMemory {
+    let full: u64 = units.iter().map(|n| 4 * *n as u64).sum();
+    let shard0: u64 = units
+        .iter()
+        .map(|n| 4 * shard_span(*n, world.max(1), 0).1 as u64)
+        .sum();
+    StageMemory {
+        grad_bytes: if stage.shards_grads() { shard0 } else { full },
+        value_bytes: if stage.shards_values() { shard0 } else { full },
+        opt_state_bytes: state_slots as u64 * if stage.sharded() { shard0 } else { full },
+        gather_buf_bytes: if stage.shards_values() {
+            units.iter().map(|n| 4 * *n as u64).max().unwrap_or(0)
+        } else {
+            0
+        },
+    }
 }
 
 /// Predicted per-iteration breakdown of a DDP step — the cluster-side
@@ -463,8 +513,14 @@ pub struct DdpSimResult {
     pub step_s: f64,
     /// Exact per-step wire accounting, summed over the unit collectives
     /// and the loss reduce — matches the measured `CommStats` delta of
-    /// one unsharded or ZeRO-1 training step exactly.
+    /// one unsharded or sharded training step exactly (ZeRO-3's
+    /// pre-forward gathers amortize to one all-gather per unit per
+    /// step: the first step skips them — values start materialized —
+    /// and the end-of-run materialization adds them back).
     pub wire_per_step: WireCost,
+    /// Predicted per-replica steady-state arena residency — equals the
+    /// measured `DdpReport` peaks exactly, per stage.
+    pub memory: StageMemory,
 }
 
 /// Predict one DDP training iteration: the single-device [`simulate`]
@@ -485,16 +541,17 @@ pub fn simulate_ddp(
     // over scattered storage), so every prediction describes a run that
     // can actually be measured
     assert!(
-        !ddp.shard || ddp.bucket_cap_bytes.is_some(),
-        "simulate_ddp: ZeRO-1 sharding requires bucketed units (set bucket_cap_bytes)"
+        !ddp.stage.sharded() || ddp.bucket_cap_bytes.is_some(),
+        "simulate_ddp: shard stages require bucketed units (set bucket_cap_bytes)"
     );
     let compute = simulate(m, net, opt, batch, schedule);
     let ic = &m.interconnect;
     let units = comm_unit_elems(net, ddp.bucket_cap_bytes);
+    let sharded = ddp.stage.sharded();
     let unit_s: Vec<f64> = units
         .iter()
         .map(|n| {
-            if ddp.shard {
+            if sharded {
                 ic.collective_s(ddp.algo, CollOp::ReduceScatter, *n)
                     + ic.collective_s(ddp.algo, CollOp::AllGather, *n)
             } else {
@@ -507,7 +564,7 @@ pub fn simulate_ddp(
     let comm_serial_s = grad_comm + loss_s;
     let mut wire_per_step = WireCost::default();
     for n in &units {
-        if ddp.shard {
+        if sharded {
             wire_per_step += ic.wire(ddp.algo, CollOp::ReduceScatter, *n);
             wire_per_step += ic.wire(ddp.algo, CollOp::AllGather, *n);
         } else {
@@ -515,6 +572,7 @@ pub fn simulate_ddp(
         }
     }
     wire_per_step += ic.wire(ddp.algo, CollOp::AllReduce, 1);
+    let memory = stage_memory(&units, opt.state_slots as usize, ddp.stage, ic.world);
 
     let (comm_exposed_s, overlap_frac) = match schedule {
         ScheduleKind::Baseline | ScheduleKind::ForwardFusion => (comm_serial_s, 0.0),
@@ -544,6 +602,7 @@ pub fn simulate_ddp(
         comm_exposed_s,
         overlap_frac,
         wire_per_step,
+        memory,
     }
 }
 
@@ -683,7 +742,7 @@ mod tests {
         let ddp = DdpSimConfig {
             algo: CommAlgo::Ring,
             bucket_cap_bytes: Some(1 << 20),
-            shard: false,
+            stage: ShardStage::None,
         };
         let base = simulate_ddp(&m, &net, &opt, 32, ScheduleKind::Baseline, ddp);
         let bf = simulate_ddp(&m, &net, &opt, 32, ScheduleKind::BackwardFusion, ddp);
@@ -707,14 +766,55 @@ mod tests {
         let net = zoo::mobilenet_v2();
         let opt = OptSpec::adam();
         let cap = Some(1 << 20);
-        let unsharded = DdpSimConfig { algo: CommAlgo::Ring, bucket_cap_bytes: cap, shard: false };
-        let sharded = DdpSimConfig { shard: true, ..unsharded };
+        let unsharded =
+            DdpSimConfig { algo: CommAlgo::Ring, bucket_cap_bytes: cap, stage: ShardStage::None };
+        let sharded = DdpSimConfig { stage: ShardStage::Zero1, ..unsharded };
         let u = simulate_ddp(&m, &net, &opt, 32, ScheduleKind::Baseline, unsharded);
         let s = simulate_ddp(&m, &net, &opt, 32, ScheduleKind::Baseline, sharded);
         // ring RS + AG equals ring AR in both time and wire closed forms
         let rel = (u.comm_serial_s - s.comm_serial_s).abs() / u.comm_serial_s;
         assert!(rel < 1e-9, "ring RS+AG ≡ ring AR: {rel}");
         assert_eq!(u.wire_per_step, s.wire_per_step);
+        // stages 2 and 3 move the same wire as stage 1; only memory drops
+        for stage in [ShardStage::Zero2, ShardStage::Zero3] {
+            let ddp = DdpSimConfig { stage, ..unsharded };
+            let r = simulate_ddp(&m, &net, &opt, 32, ScheduleKind::Baseline, ddp);
+            assert_eq!(r.wire_per_step, s.wire_per_step, "{stage:?}: same wire as ZeRO-1");
+        }
+    }
+
+    /// The per-stage memory ladder: each stage shards one more arena to
+    /// ~1/W of its replicated size, and the predicted bytes follow rank
+    /// 0's exact shard spans (remainders included).
+    #[test]
+    fn stage_memory_ladder() {
+        let units = [10usize, 7, 3];
+        let world = 4;
+        let slots = 2;
+        let full: u64 = 4 * (10 + 7 + 3);
+        // rank 0 shard spans: 3 of 10, 2 of 7, 1 of 3
+        let shard0: u64 = 4 * (3 + 2 + 1);
+        let none = stage_memory(&units, slots, ShardStage::None, world);
+        assert_eq!(
+            none,
+            StageMemory {
+                grad_bytes: full,
+                value_bytes: full,
+                opt_state_bytes: 2 * full,
+                gather_buf_bytes: 0
+            }
+        );
+        let z1 = stage_memory(&units, slots, ShardStage::Zero1, world);
+        assert_eq!(z1.opt_state_bytes, 2 * shard0);
+        assert_eq!((z1.grad_bytes, z1.value_bytes), (full, full));
+        let z2 = stage_memory(&units, slots, ShardStage::Zero2, world);
+        assert_eq!((z2.grad_bytes, z2.value_bytes), (shard0, full));
+        let z3 = stage_memory(&units, slots, ShardStage::Zero3, world);
+        assert_eq!((z3.grad_bytes, z3.value_bytes), (shard0, shard0));
+        assert_eq!(z3.gather_buf_bytes, 40, "largest unit's flat gather buffer");
+        // world 1: every stage degenerates to the replicated footprint
+        let w1 = stage_memory(&units, slots, ShardStage::Zero3, 1);
+        assert_eq!((w1.grad_bytes, w1.value_bytes, w1.opt_state_bytes), (full, full, 2 * full));
     }
 
     #[test]

@@ -43,29 +43,50 @@ pub struct Member {
     pub offset: usize,
     /// Element count of this member.
     pub len: usize,
+    /// Logical tensor shape of the member — needed to re-materialize a
+    /// ZeRO-3-released value tensor from a gathered flat buffer.
+    pub shape: Vec<usize>,
 }
 
 /// The lock-protected payload of one bucket.
 pub struct BucketData {
-    /// Flat gradient buffer covering every member, in member order.
+    /// Flat gradient buffer covering `grad_range` (every member, in
+    /// member order, at full coverage).
     pub grads: Tensor,
+    /// `(offset, len)` element range of the bucket that `grads` covers.
+    /// Full coverage in ordinary training; a ZeRO-2/3 rank narrows it to
+    /// its own shard after the drain-point reduce-scatter + update
+    /// ([`BucketData::narrow_grads`]) so steady-state grad residency is
+    /// 1/W, and re-widens lazily when the next backward accumulates
+    /// ([`BucketData::widen_grads`]). `grads` has length `grad_range.1`.
+    pub grad_range: (usize, usize),
     /// Flat optimizer-state buffers (one per state slot), allocated
     /// lazily on the first bucket update, each covering `state_range`.
     pub state: Vec<Tensor>,
     /// `(offset, len)` element range of the bucket that the `state`
-    /// tensors cover. Full coverage `(0, grads.len())` in ordinary
-    /// training; a ZeRO-1 rank narrows it to its own shard so each
-    /// replica allocates only 1/W of the optimizer state (see
-    /// [`crate::comm`]). Every `state` tensor has length `state_range.1`.
+    /// tensors cover. Full coverage in ordinary training; a ZeRO rank
+    /// narrows it to its own shard so each replica allocates only 1/W of
+    /// the optimizer state (see [`crate::comm`]). Every `state` tensor
+    /// has length `state_range.1`.
     pub state_range: (usize, usize),
+    /// ZeRO-3 shard-resident parameter values: `Some` while the member
+    /// value tensors are released (emptied), covering `value_range` of
+    /// the bucket arena. `None` while values are materialized in the
+    /// per-member tensors (ordinary training, and between the pre-forward
+    /// all-gather and the post-update release).
+    pub values: Option<Tensor>,
+    /// `(offset, len)` range `values` covers when `Some`.
+    pub value_range: (usize, usize),
     /// The members, ordered by ascending `offset` with tight packing.
     pub members: Vec<Member>,
 }
 
 impl BucketData {
-    /// Total element count of the flat buffers.
+    /// Total element count of the bucket arena (the spans are tight, so
+    /// the last member's end is the total — independent of how narrow
+    /// the grad/state/value buffers currently are).
     pub fn num_elems(&self) -> usize {
-        self.grads.len()
+        self.members.last().map_or(0, |m| m.offset + m.len)
     }
 
     /// Grow `state` to `n` zero buffers covering `state_range` (no-op if
@@ -102,8 +123,14 @@ impl BucketData {
     /// Zero every gradient element outside `[offset, offset + len)`.
     /// After a ZeRO-1 reduce-scatter the complement of a rank's shard
     /// still holds *local, unreduced* gradients; they must be cleared
-    /// before the next backward accumulates on top of them.
+    /// before the next backward accumulates on top of them. (ZeRO-2/3
+    /// instead *free* the complement — [`BucketData::narrow_grads`].)
     pub fn zero_grads_outside(&mut self, offset: usize, len: usize) {
+        assert_eq!(
+            self.grad_range,
+            (0, self.num_elems()),
+            "zero_grads_outside over narrowed grads; the complement is already freed"
+        );
         let d = self.grads.data_mut();
         for v in &mut d[..offset] {
             *v = 0.0;
@@ -113,17 +140,105 @@ impl BucketData {
         }
     }
 
-    /// Borrow one member's gradient region.
-    pub fn grad_slice(&self, member: usize) -> &[f32] {
-        let m = &self.members[member];
-        &self.grads.data()[m.offset..m.offset + m.len]
+    /// Shrink the gradient buffer to `[offset, offset + len)` of the
+    /// arena, **preserving** that region's contents and freeing the rest
+    /// — the ZeRO-2/3 post-update step that drops steady-state grad
+    /// residency to the rank's shard. The range must lie inside the
+    /// current coverage.
+    pub fn narrow_grads(&mut self, offset: usize, len: usize) {
+        let (goff, glen) = self.grad_range;
+        assert!(
+            offset >= goff && offset + len <= goff + glen,
+            "narrow_grads: [{offset}, {}) outside coverage [{goff}, {})",
+            offset + len,
+            goff + glen
+        );
+        let kept = self.grads.data()[offset - goff..offset - goff + len].to_vec();
+        self.grads = Tensor::from_vec(&[len], kept);
+        self.grad_range = (offset, len);
     }
 
-    /// Mutably borrow one member's gradient region.
+    /// Grow a narrowed gradient buffer back to full arena coverage,
+    /// preserving the covered region's contents (normally all-zero —
+    /// the update resets consumed gradients). Called lazily when
+    /// backward first accumulates into a ZeRO-2/3-narrowed bucket; a
+    /// no-op at full coverage.
+    pub fn widen_grads(&mut self) {
+        let total = self.num_elems();
+        if self.grad_range == (0, total) {
+            return;
+        }
+        let (goff, glen) = self.grad_range;
+        let mut full = vec![0.0f32; total];
+        full[goff..goff + glen].copy_from_slice(self.grads.data());
+        self.grads = Tensor::from_vec(&[total], full);
+        self.grad_range = (0, total);
+    }
+
+    /// Borrow one member's gradient region (must lie inside the current
+    /// grad coverage).
+    pub fn grad_slice(&self, member: usize) -> &[f32] {
+        let m = &self.members[member];
+        let (goff, glen) = self.grad_range;
+        assert!(
+            m.offset >= goff && m.offset + m.len <= goff + glen,
+            "grad_slice: member {member} outside grad coverage [{goff}, {})",
+            goff + glen
+        );
+        &self.grads.data()[m.offset - goff..m.offset - goff + m.len]
+    }
+
+    /// Mutably borrow one member's gradient region (must lie inside the
+    /// current grad coverage).
     pub fn grad_slice_mut(&mut self, member: usize) -> &mut [f32] {
         let m = &self.members[member];
-        let (offset, len) = (m.offset, m.len);
+        let (goff, glen) = self.grad_range;
+        assert!(
+            m.offset >= goff && m.offset + m.len <= goff + glen,
+            "grad_slice_mut: member {member} outside grad coverage [{goff}, {})",
+            goff + glen
+        );
+        let (offset, len) = (m.offset - goff, m.len);
         &mut self.grads.data_mut()[offset..offset + len]
+    }
+
+    /// ZeRO-3 release: copy `[offset, offset + len)` of the member value
+    /// tensors into a shard-resident flat buffer and empty the member
+    /// tensors, dropping per-replica value residency to the shard. The
+    /// caller holds the bucket lock; member locks are taken in member
+    /// order (the module lock-order contract). No-op if already released.
+    pub fn release_values(&mut self, offset: usize, len: usize) {
+        if self.values.is_some() {
+            return;
+        }
+        let mut shard = vec![0.0f32; len];
+        for m in &self.members {
+            let Some((a, b)) = member_overlap(m, offset, len) else {
+                // outside the shard: still drop the replica's copy
+                let mut pd = m.param.data.write().unwrap();
+                pd.value = Tensor::zeros(&[0]);
+                continue;
+            };
+            let mut pd = m.param.data.write().unwrap();
+            shard[a - offset..b - offset]
+                .copy_from_slice(&pd.value.data()[a - m.offset..b - m.offset]);
+            pd.value = Tensor::zeros(&[0]);
+        }
+        self.values = Some(Tensor::from_vec(&[len], shard));
+        self.value_range = (offset, len);
+    }
+
+    /// ZeRO-3 materialize: rebuild every member's value tensor (with its
+    /// logical shape) from a fully-gathered flat buffer and drop the
+    /// shard-resident copy. Inverse of [`BucketData::release_values`];
+    /// the caller supplies `full` from the value all-gather.
+    pub fn materialize_values(&mut self, full: &[f32]) {
+        assert_eq!(full.len(), self.num_elems(), "materialize_values: buffer length");
+        for m in &self.members {
+            let mut pd = m.param.data.write().unwrap();
+            pd.value = Tensor::from_vec(&m.shape, full[m.offset..m.offset + m.len].to_vec());
+        }
+        self.values = None;
     }
 }
 
@@ -238,13 +353,22 @@ pub fn build_buckets(
                     param: Arc::clone(&params[*pid]),
                     offset: span.offset,
                     len: span.len,
+                    shape: span.shape.clone(),
                 }
             })
             .collect();
         drop(guards);
         let total = grads.len();
         buckets.push(Arc::new(Bucket {
-            data: RwLock::new(BucketData { grads, state, state_range: (0, total), members }),
+            data: RwLock::new(BucketData {
+                grads,
+                grad_range: (0, total),
+                state,
+                state_range: (0, total),
+                values: None,
+                value_range: (0, total),
+                members,
+            }),
         }));
     }
     (buckets, loc)
@@ -269,6 +393,12 @@ pub fn apply_bucket_update(
         (0, bd.num_elems()),
         "full bucket update over sharded state; use apply_bucket_update_range"
     );
+    assert_eq!(
+        bd.grad_range,
+        (0, bd.num_elems()),
+        "full bucket update over narrowed grads; use apply_bucket_update_range"
+    );
+    assert!(bd.values.is_none(), "full bucket update over released values");
     bd.ensure_state(opt.num_state());
     let BucketData { grads, state, members, .. } = &mut *bd;
     let mut guards: Vec<_> = members
@@ -326,20 +456,69 @@ pub fn apply_bucket_update_range(
         return;
     }
     let mut bd = bucket.data.write().unwrap();
+    assert!(
+        bd.values.is_none(),
+        "range update over released values; use apply_bucket_update_shard_resident"
+    );
     bd.ensure_state_range(opt.num_state(), offset, len);
     let soff = bd.state_range.0;
+    let (goff, glen) = bd.grad_range;
+    assert!(
+        offset >= goff && offset + len <= goff + glen,
+        "range update [{offset}, {}) outside grad coverage [{goff}, {})",
+        offset + len,
+        goff + glen
+    );
     let BucketData { grads, state, members, .. } = &mut *bd;
     for m in members.iter() {
         let Some((a, b)) = member_overlap(m, offset, len) else { continue };
         let mut pd = m.param.data.write().unwrap();
         let value = &mut pd.value.data_mut()[a - m.offset..b - m.offset];
-        let grad = &mut grads.data_mut()[a..b];
+        let grad = &mut grads.data_mut()[a - goff..b - goff];
         let mut slots: Vec<&mut [f32]> = state
             .iter_mut()
             .map(|s| &mut s.data_mut()[a - soff..b - soff])
             .collect();
         opt.update_slices(step, value, grad, &mut slots, hp, global_scale);
     }
+}
+
+/// Run one optimizer step over a bucket whose values are ZeRO-3
+/// shard-resident ([`BucketData::release_values`]): the update's value /
+/// grad / state slices all live in shard-only flat buffers covering
+/// exactly the rank's shard, so no member value tensor exists to touch.
+/// Bit-identical to the same region of [`apply_bucket_update_range`] —
+/// every update rule is elementwise, so where the scalars live (and how
+/// the slice is cut) cannot change the math. This is the forward-fusion
+/// lazy-update path under ZeRO-3, where values were released right after
+/// the previous backward.
+pub fn apply_bucket_update_shard_resident(
+    bucket: &Bucket,
+    opt: &dyn Optimizer,
+    step: u64,
+    hp: &Hyper,
+    global_scale: f32,
+) {
+    let mut bd = bucket.data.write().unwrap();
+    let (off, len) = bd.value_range;
+    assert!(bd.values.is_some(), "shard-resident update needs released values");
+    if len == 0 {
+        return;
+    }
+    bd.ensure_state_range(opt.num_state(), off, len);
+    assert_eq!(
+        bd.grad_range,
+        (off, len),
+        "shard-resident update: grads must be narrowed to the value shard"
+    );
+    if opt.num_state() > 0 {
+        assert_eq!(bd.state_range, (off, len), "shard-resident update: state covers the shard");
+    }
+    let BucketData { grads, state, values, .. } = &mut *bd;
+    let value = values.as_mut().expect("released values").data_mut();
+    let grad = grads.data_mut();
+    let mut slots: Vec<&mut [f32]> = state.iter_mut().map(Tensor::data_mut).collect();
+    opt.update_slices(step, value, grad, &mut slots, hp, global_scale);
 }
 
 #[cfg(test)]
@@ -453,6 +632,90 @@ mod tests {
             bd.zero_grads_outside(2, 3);
             assert_eq!(bd.grads.data(), &[0.0, 0.0, 2.0, 2.0, 2.0, 0.0]);
         }
+    }
+
+    /// ZeRO-2 grad lifecycle: narrow preserves the shard slice and frees
+    /// the rest; widen restores full coverage preserving the shard.
+    #[test]
+    fn narrow_and_widen_grads_roundtrip() {
+        let mut store = ParamStore::default();
+        store.add("a", Tensor::full(&[6], 1.0));
+        let (buckets, _) = build_buckets(&store.params, 1 << 20);
+        let mut bd = buckets[0].data.write().unwrap();
+        bd.grads = Tensor::from_vec(&[6], (0..6).map(|i| i as f32).collect());
+        bd.narrow_grads(2, 3);
+        assert_eq!(bd.grad_range, (2, 3));
+        assert_eq!(bd.grads.data(), &[2.0, 3.0, 4.0]);
+        bd.widen_grads();
+        assert_eq!(bd.grad_range, (0, 6));
+        assert_eq!(bd.grads.data(), &[0.0, 0.0, 2.0, 3.0, 4.0, 0.0]);
+        bd.widen_grads(); // idempotent
+        assert_eq!(bd.grad_range, (0, 6));
+    }
+
+    /// ZeRO-3 value lifecycle: release extracts the shard and empties
+    /// member tensors; materialize rebuilds them with their shapes.
+    #[test]
+    fn release_and_materialize_values_roundtrip() {
+        let mut store = ParamStore::default();
+        store.add("a", Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]));
+        store.add("b", Tensor::from_vec(&[3], vec![5.0, 6.0, 7.0]));
+        let (buckets, _) = build_buckets(&store.params, 1 << 20);
+        let mut bd = buckets[0].data.write().unwrap();
+        // shard [2, 5): straddles both members mid-tensor
+        bd.release_values(2, 3);
+        assert_eq!(bd.value_range, (2, 3));
+        assert_eq!(bd.values.as_ref().unwrap().data(), &[3.0, 4.0, 5.0]);
+        assert_eq!(store.params[0].data.read().unwrap().value.len(), 0, "released");
+        assert_eq!(store.params[1].data.read().unwrap().value.len(), 0, "released");
+        bd.release_values(2, 3); // idempotent
+        // a gathered full buffer rebuilds the members, shapes intact
+        let full: Vec<f32> = (10..17).map(|i| i as f32).collect();
+        bd.materialize_values(&full);
+        assert!(bd.values.is_none());
+        let p0 = store.params[0].data.read().unwrap();
+        assert_eq!(p0.value.shape(), &[2, 2]);
+        assert_eq!(p0.value.data(), &[10.0, 11.0, 12.0, 13.0]);
+        assert_eq!(store.params[1].data.read().unwrap().value.data(), &[14.0, 15.0, 16.0]);
+    }
+
+    /// A shard-resident update (values released, grads/state narrowed)
+    /// must be bit-identical to the same range of a member-resident
+    /// range update.
+    #[test]
+    fn shard_resident_update_matches_range_update() {
+        use crate::optim::SgdMomentum;
+        let hp = Hyper { lr: 0.5, weight_decay: 0.0, ..Hyper::default() };
+        let grads: Vec<f32> = (1..=8).map(|i| i as f32 * 0.1).collect();
+        let mk = || {
+            let mut store = ParamStore::default();
+            store.add("a", Tensor::full(&[3], 1.0));
+            store.add("b", Tensor::full(&[5], 2.0));
+            let (buckets, _) = build_buckets(&store.params, 1 << 20);
+            buckets[0].data.write().unwrap().grads = Tensor::from_vec(&[8], grads.clone());
+            (store, buckets)
+        };
+        // reference: member-resident range update over [2, 6)
+        let (ref_store, ref_buckets) = mk();
+        apply_bucket_update_range(&ref_buckets[0], &SgdMomentum, 1, &hp, 1.0, 2, 4);
+        // shard-resident twin: release values + narrow grads first
+        let (_store, buckets) = mk();
+        {
+            let mut bd = buckets[0].data.write().unwrap();
+            bd.release_values(2, 4);
+            bd.narrow_grads(2, 4);
+        }
+        apply_bucket_update_shard_resident(&buckets[0], &SgdMomentum, 1, &hp, 1.0);
+        let bd = buckets[0].data.read().unwrap();
+        let vals = bd.values.as_ref().unwrap().data();
+        let r0 = ref_store.params[0].data.read().unwrap();
+        let r1 = ref_store.params[1].data.read().unwrap();
+        // arena [2, 6) = member a's [2, 3) then member b's [0, 3)
+        assert_eq!(vals[0], r0.value.data()[2]);
+        assert_eq!(&vals[1..], &r1.value.data()[..3]);
+        assert!(bd.grads.data().iter().all(|g| *g == 0.0), "shard grads reset");
+        assert_eq!(bd.state_range, (2, 4));
+        assert_eq!(bd.state[0].len(), 4, "state allocated shard-only");
     }
 
     #[test]

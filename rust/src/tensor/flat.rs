@@ -40,6 +40,37 @@ pub fn shard_span(len: usize, world: usize, rank: usize) -> (usize, usize) {
     (offset, size)
 }
 
+/// All `world` shard spans of a buffer of `len` elements, in rank order —
+/// the balanced partition every collective defaults to. The spans tile
+/// `[0, len)` contiguously (see [`shard_span`]).
+pub fn shard_partition(len: usize, world: usize) -> Vec<(usize, usize)> {
+    (0..world).map(|rank| shard_span(len, world, rank)).collect()
+}
+
+/// The chunk × shard ownership arithmetic of the chunked ZeRO
+/// collectives: each rank's bucket-level [`shard_span`] of a `total`
+/// -element arena, clamped to the chunk `[chunk_off, chunk_off +
+/// chunk_len)` and rebased to chunk-local coordinates. Because the
+/// shard partition tiles the arena, the clamped spans tile the chunk in
+/// rank order — ranks whose shard misses the chunk get a correctly
+/// placed *empty* span at the boundary, satisfying the span-collective
+/// tiling contract ([`crate::comm::Communicator`]'s `_spans` methods).
+pub fn chunk_shard_spans(
+    total: usize,
+    world: usize,
+    chunk_off: usize,
+    chunk_len: usize,
+) -> Vec<(usize, usize)> {
+    (0..world)
+        .map(|rank| {
+            let (so, sl) = shard_span(total, world, rank);
+            let lo = so.clamp(chunk_off, chunk_off + chunk_len);
+            let hi = (so + sl).clamp(chunk_off, chunk_off + chunk_len);
+            (lo - chunk_off, hi - lo)
+        })
+        .collect()
+}
+
 /// A contiguous packing of N member shapes: spans are tight (no padding)
 /// and ordered, so walking members in index order walks the backing
 /// buffer front to back exactly once.
@@ -203,5 +234,38 @@ mod tests {
         assert_eq!(shard_span(10, 4, 3), (8, 2));
         // a rank can own nothing
         assert_eq!(shard_span(3, 4, 3), (3, 0));
+    }
+
+    #[test]
+    fn shard_partition_matches_spans() {
+        let p = shard_partition(10, 4);
+        assert_eq!(p, vec![(0, 3), (3, 3), (6, 2), (8, 2)]);
+        for (rank, span) in p.iter().enumerate() {
+            assert_eq!(*span, shard_span(10, 4, rank));
+        }
+    }
+
+    #[test]
+    fn chunk_shard_spans_tile_the_chunk_with_placed_empties() {
+        // 12-element arena, world 3 (shards [0,4) [4,8) [8,12)), chunk
+        // [3, 8): rank 0 owns [3,4), rank 1 owns [4,8), rank 2 nothing
+        let spans = chunk_shard_spans(12, 3, 3, 5);
+        assert_eq!(spans, vec![(0, 1), (1, 4), (5, 0)]);
+        // chunk before rank 1's shard: the empty spans still sit at
+        // their tiling positions (rank 1/2 empty at the chunk's end)
+        let spans = chunk_shard_spans(12, 3, 0, 2);
+        assert_eq!(spans, vec![(0, 2), (2, 0), (2, 0)]);
+        // chunk after rank 0/1: empties at offset 0
+        let spans = chunk_shard_spans(12, 3, 9, 3);
+        assert_eq!(spans, vec![(0, 0), (0, 0), (0, 3)]);
+        // every case tiles contiguously in rank order
+        for (off, len) in [(3usize, 5usize), (0, 2), (9, 3), (0, 12), (5, 0)] {
+            let mut next = 0;
+            for (o, l) in chunk_shard_spans(12, 3, off, len) {
+                assert_eq!(o, next);
+                next = o + l;
+            }
+            assert_eq!(next, len, "chunk [{off}, {}) covered", off + len);
+        }
     }
 }

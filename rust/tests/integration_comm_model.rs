@@ -24,7 +24,9 @@
 //!   (`comm_chunk_bytes`) are bit-identical to whole-bucket jobs and
 //!   multiply the collective round count by the chunk factor.
 
-use optfuse::comm::{wire_all_gather, wire_all_reduce, wire_reduce_scatter, CommAlgo, WireCost};
+use optfuse::comm::{
+    wire_all_gather, wire_all_reduce, wire_reduce_scatter, CommAlgo, ShardStage, WireCost,
+};
 use optfuse::data::image_batch;
 use optfuse::ddp::{train_ddp, DdpConfig, DdpReport};
 use optfuse::graph::{Graph, ScheduleKind, Src};
@@ -122,7 +124,7 @@ fn ring_and_tree_train_bit_identically_to_flat_at_every_world_size() {
         let mut cfg = DdpConfig::new(world, schedule, 3, image_batch_maker());
         cfg.algo = algo;
         cfg.bucket_cap_bytes = cap;
-        cfg.shard_updates = shard;
+        cfg.shard_stage = if shard { ShardStage::Zero1 } else { ShardStage::None };
         cfg.overlap_threads = overlap;
         train_ddp(|| mlp(99), sgd_momentum, sgd_hyper(), cfg)
     };
@@ -186,7 +188,7 @@ fn wire_accounting_matches_closed_forms_exactly() {
                 let mut cfg = DdpConfig::new(world, schedule, steps, Box::new(lane_batch));
                 cfg.algo = algo;
                 cfg.bucket_cap_bytes = Some(cap);
-                cfg.shard_updates = shard;
+                cfg.shard_stage = if shard { ShardStage::Zero1 } else { ShardStage::None };
                 let r = train_ddp(|| lane_graph(11, layers), sgd_momentum, sgd_hyper(), cfg);
                 let mut per_step = WireCost::default();
                 for n in &units {
@@ -261,7 +263,8 @@ fn memsim_predicted_algo_ranking_matches_measured() {
         for (si, schedule) in schedules.iter().enumerate() {
             let mut step_s = [0.0f64; 3];
             for (ai, algo) in CommAlgo::ALL.iter().enumerate() {
-                let ddp = DdpSimConfig { algo: *algo, bucket_cap_bytes: None, shard: false };
+                let ddp =
+                    DdpSimConfig { algo: *algo, bucket_cap_bytes: None, stage: ShardStage::None };
                 step_s[ai] = simulate_ddp(&m, &net, &opt, 4, *schedule, ddp).step_s;
             }
             per_schedule[si] = ranking(&step_s);

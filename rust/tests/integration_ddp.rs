@@ -22,6 +22,7 @@ use optfuse::models::{deep_mlp, mlp};
 use optfuse::ops::activation::Relu;
 use optfuse::ops::dense::Linear;
 use optfuse::ops::loss::MseLoss;
+use optfuse::comm::ShardStage;
 use optfuse::optim::{Adam, Hyper, Optimizer, SgdMomentum};
 use optfuse::tensor::Tensor;
 use optfuse::util::XorShiftRng;
@@ -76,7 +77,7 @@ fn run_tiny(
     schedule: ScheduleKind,
     steps: usize,
     cap: Option<usize>,
-    shard: bool,
+    stage: ShardStage,
     overlap: usize,
     opt: fn() -> Box<dyn Optimizer>,
     hyper: Hyper,
@@ -91,7 +92,7 @@ fn run_tiny(
         Box::new(move |rank, step| tiny_batch(rank, step + step_offset)),
     );
     cfg.bucket_cap_bytes = cap;
-    cfg.shard_updates = shard;
+    cfg.shard_stage = stage;
     cfg.overlap_threads = overlap;
     cfg.load_from = load;
     cfg.save_to = save;
@@ -165,7 +166,8 @@ fn ddp_matches_single_process_bitwise() {
     for world in [2usize, 4] {
         for schedule in [ScheduleKind::Baseline, ScheduleKind::BackwardFusion] {
             let ddp = run_tiny(
-                world, schedule, steps, None, false, 0, sgd_momentum, sgd_hyper(), None, None, 0,
+                world, schedule, steps, None, ShardStage::None, 0, sgd_momentum, sgd_hyper(),
+                None, None, 0,
             );
             let (_, single_losses) = single_process_iter_ms(
                 || tiny_graph(3),
@@ -211,10 +213,12 @@ fn sharded_updates_match_unsharded_bitwise_with_quarter_footprint() {
     let cap = Some(200); // fc1.w (256 B) oversized → own bucket; fc2.w its own
     for schedule in [ScheduleKind::Baseline, ScheduleKind::BackwardFusion] {
         let unsharded = run_tiny(
-            world, schedule, steps, cap, false, 0, adam, Hyper::default(), None, None, 0,
+            world, schedule, steps, cap, ShardStage::None, 0, adam, Hyper::default(), None, None,
+            0,
         );
         let sharded = run_tiny(
-            world, schedule, steps, cap, true, 0, adam, Hyper::default(), None, None, 0,
+            world, schedule, steps, cap, ShardStage::Zero1, 0, adam, Hyper::default(), None,
+            None, 0,
         );
         assert_eq!(
             unsharded.losses, sharded.losses,
@@ -247,7 +251,7 @@ fn sharded_updates_match_unsharded_bitwise_with_quarter_footprint() {
         ScheduleKind::Baseline,
         steps,
         cap,
-        true,
+        ShardStage::Zero1,
         0,
         adam,
         Hyper::default(),
@@ -318,7 +322,7 @@ fn backward_fusion_overlaps_reduce_with_backward() {
             }),
         );
         cfg.bucket_cap_bytes = Some(1 << 18);
-        cfg.shard_updates = shard;
+        cfg.shard_stage = if shard { ShardStage::Zero1 } else { ShardStage::None };
         cfg.overlap_threads = overlap;
         train_ddp(|| deep_mlp(5), sgd_momentum, sgd_hyper(), cfg)
     };
@@ -349,7 +353,8 @@ fn sharded_checkpoints_are_world_and_layout_portable() {
 
     // uninterrupted reference: world=2, sharded, 4 steps
     let full = run_tiny(
-        2, ScheduleKind::Baseline, 4, cap, true, 0, adam, Hyper::default(), None, None, 0,
+        2, ScheduleKind::Baseline, 4, cap, ShardStage::Zero1, 0, adam, Hyper::default(), None,
+        None, 0,
     );
 
     // first half, saving a gathered (full-state) checkpoint at step 2
@@ -358,7 +363,7 @@ fn sharded_checkpoints_are_world_and_layout_portable() {
         ScheduleKind::Baseline,
         2,
         cap,
-        true,
+        ShardStage::Zero1,
         0,
         adam,
         Hyper::default(),
@@ -374,7 +379,7 @@ fn sharded_checkpoints_are_world_and_layout_portable() {
         ScheduleKind::Baseline,
         2,
         cap,
-        true,
+        ShardStage::Zero1,
         0,
         adam,
         Hyper::default(),
@@ -390,7 +395,7 @@ fn sharded_checkpoints_are_world_and_layout_portable() {
         ScheduleKind::Baseline,
         2,
         cap,
-        false,
+        ShardStage::None,
         0,
         adam,
         Hyper::default(),

@@ -1,0 +1,405 @@
+//! Shard-stage acceptance suite (tier-1): ZeRO-1/2/3 as a first-class
+//! axis through exec, comm, memsim, and checkpointing.
+//!
+//! * **Bit-identity.** Every sharded stage trains bit-identically to
+//!   unsharded DDP at worlds 1–4, across all three schedules and all
+//!   three collective algorithms (losses and final parameters).
+//! * **Memory.** Measured peak grad-arena bytes are exactly 1/W per
+//!   replica under ZeRO-2/3 and peak value-arena bytes exactly 1/W
+//!   under ZeRO-3 (steady-state peaks at step boundaries — the
+//!   transient full-coverage backward grads and the ZeRO-3 gather
+//!   buffer are documented on `exec::ArenaPeak`), and
+//!   `memsim::stage_memory` (what `simulate_ddp` reports) predicts
+//!   every component **exactly** — no tolerance, both sides sum rank
+//!   0's `shard_span`s over the same bucket layout.
+//! * **Chunked ZeRO.** `comm_chunk_bytes` composes with every stage:
+//!   per-chunk reduce-scatters over chunk ∩ shard ownership spans are
+//!   bit-identical to the whole-bucket sharded path.
+//! * **Global-norm clipping under sharding.** Per-shard partial squared
+//!   norms all-reduce into the global norm; clipped sharded training
+//!   matches clipped unsharded training to f32 rounding (the partial
+//!   sums reassociate the reduction — the one documented deviation from
+//!   bit-identity) and exactly at world 1.
+//! * **Stage-portable checkpoints.** Save under ZeRO-3 at world 4,
+//!   resume unsharded at world 1 (and the reverse); losses bit-equal
+//!   from the resume step.
+
+use optfuse::comm::{CommAlgo, ShardStage};
+use optfuse::data::image_batch;
+use optfuse::ddp::{train_ddp, DdpConfig, DdpReport};
+use optfuse::graph::{Graph, ScheduleKind, Src};
+use optfuse::memsim::stage_memory;
+use optfuse::models::mlp;
+use optfuse::ops::activation::Relu;
+use optfuse::ops::dense::Linear;
+use optfuse::ops::loss::MseLoss;
+use optfuse::optim::bucket::partition_by_bytes;
+use optfuse::optim::{Adam, GlobalNormClip, Hyper, Optimizer, Sgd, SgdMomentum};
+use optfuse::tensor::Tensor;
+use optfuse::util::XorShiftRng;
+
+fn sgd_momentum() -> Box<dyn Optimizer> {
+    Box::new(SgdMomentum)
+}
+
+fn adam() -> Box<dyn Optimizer> {
+    Box::new(Adam)
+}
+
+fn sgd_hyper() -> Hyper {
+    Hyper { lr: 0.05, weight_decay: 0.0, ..Hyper::default() }
+}
+
+fn image_batch_maker() -> Box<dyn Fn(usize, usize) -> Vec<Tensor> + Send + Sync> {
+    Box::new(|rank, step| {
+        let mut rng = XorShiftRng::new(((rank as u64) << 32) | step as u64);
+        image_batch(2, 3, 16, 16, 10, &mut rng)
+    })
+}
+
+fn max_param_diff(a: &[Tensor], b: &[Tensor]) -> f32 {
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| x.max_abs_diff(y))
+        .fold(0.0f32, f32::max)
+}
+
+/// The full equivalence matrix of the tentpole acceptance criterion:
+/// each stage bit-identical to unsharded at worlds 1–4 × all three
+/// schedules × all three collective algorithms.
+#[test]
+fn every_stage_bit_identical_to_unsharded_across_worlds_schedules_algos() {
+    let cap = Some(1 << 12);
+    let run = |world: usize, schedule: ScheduleKind, algo: CommAlgo, stage: ShardStage| {
+        let mut cfg = DdpConfig::new(world, schedule, 3, image_batch_maker());
+        cfg.algo = algo;
+        cfg.bucket_cap_bytes = cap;
+        cfg.shard_stage = stage;
+        if schedule == ScheduleKind::BackwardFusion {
+            cfg.overlap_threads = 2;
+        }
+        train_ddp(|| mlp(99), sgd_momentum, sgd_hyper(), cfg)
+    };
+    for world in [1usize, 2, 3, 4] {
+        for schedule in ScheduleKind::ALL {
+            for algo in CommAlgo::ALL {
+                let base = run(world, schedule, algo, ShardStage::None);
+                for stage in [ShardStage::Zero1, ShardStage::Zero2, ShardStage::Zero3] {
+                    let r = run(world, schedule, algo, stage);
+                    let label =
+                        format!("world {world} {schedule:?} {} {}", algo.label(), stage.label());
+                    assert_eq!(base.losses, r.losses, "{label}: losses bit-identical");
+                    assert_eq!(
+                        max_param_diff(&base.final_params, &r.final_params),
+                        0.0,
+                        "{label}: final params bit-identical"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// 16×16 dense lanes: every parameter is 256 elements (1 KiB), so a
+/// 1 KiB bucket cap gives one bucket per layer and the arena arithmetic
+/// is easy to cross-check by hand.
+fn lane_graph(seed: u64, layers: usize) -> Graph {
+    let mut rng = XorShiftRng::new(seed);
+    let mut g = Graph::new("lanes", 2);
+    let mut prev = Src::External(0);
+    for l in 0..layers {
+        let w = g.param(&format!("w{l}"), &[16, 16], &mut rng);
+        let lin = g.push(&format!("fc{l}"), Box::new(Linear::new(false)), vec![prev], vec![w]);
+        let act = g.push(&format!("relu{l}"), Box::new(Relu), vec![Src::Node(lin)], vec![]);
+        prev = Src::Node(act);
+    }
+    let loss = g.push("mse", Box::new(MseLoss), vec![prev, Src::External(1)], vec![]);
+    g.set_loss(loss);
+    g
+}
+
+fn lane_batch(rank: usize, step: usize) -> Vec<Tensor> {
+    let mut rng = XorShiftRng::new(4000 + ((rank as u64) << 20) + step as u64);
+    vec![Tensor::randn(&[4, 16], 1.0, &mut rng), Tensor::randn(&[4, 16], 1.0, &mut rng)]
+}
+
+/// The memory acceptance criterion: measured peak arena bytes are 1/W
+/// per sharded component, and `memsim::stage_memory` predicts every
+/// component exactly.
+#[test]
+fn stage_memory_is_one_over_world_and_matches_memsim_exactly() {
+    let layers = 5;
+    let cap = 1 << 10;
+    let lens: Vec<usize> = {
+        let g = lane_graph(11, layers);
+        g.store
+            .params
+            .iter()
+            .map(|p| p.data.read().unwrap().value.len())
+            .collect()
+    };
+    let units: Vec<usize> = partition_by_bytes(&lens, cap)
+        .iter()
+        .map(|group| group.iter().map(|i| lens[*i]).sum())
+        .collect();
+    let run = |world: usize, schedule: ScheduleKind, stage: ShardStage| -> DdpReport {
+        let mut cfg = DdpConfig::new(world, schedule, 3, Box::new(lane_batch));
+        cfg.bucket_cap_bytes = Some(cap);
+        cfg.shard_stage = stage;
+        train_ddp(|| lane_graph(11, layers), adam, Hyper::default(), cfg)
+    };
+    let total_bytes = 4 * lens.iter().sum::<usize>() as u64;
+    for world in [1usize, 2, 4] {
+        for schedule in [ScheduleKind::Baseline, ScheduleKind::BackwardFusion] {
+            for stage in ShardStage::ALL {
+                let r = run(world, schedule, stage);
+                let want = stage_memory(&units, 2, stage, world); // Adam: 2 slots
+                let label = format!("world {world} {schedule:?} {}", stage.label());
+                assert_eq!(
+                    r.peak_grad_arena_bytes, want.grad_bytes,
+                    "{label}: measured grad peak == predicted"
+                );
+                assert_eq!(
+                    r.peak_value_arena_bytes, want.value_bytes,
+                    "{label}: measured value peak == predicted"
+                );
+                assert_eq!(
+                    r.opt_state_bytes, want.opt_state_bytes,
+                    "{label}: measured state bytes == predicted"
+                );
+                // 256-element units divide evenly by 1/2/4: the sharded
+                // components are *exactly* 1/W of the replicated bytes
+                if stage.shards_grads() {
+                    assert_eq!(r.peak_grad_arena_bytes, total_bytes / world as u64, "{label}");
+                } else {
+                    assert_eq!(r.peak_grad_arena_bytes, total_bytes, "{label}");
+                }
+                if stage.shards_values() {
+                    assert_eq!(r.peak_value_arena_bytes, total_bytes / world as u64, "{label}");
+                } else {
+                    assert_eq!(r.peak_value_arena_bytes, total_bytes, "{label}");
+                }
+                if stage.sharded() {
+                    assert_eq!(r.opt_state_bytes, 2 * total_bytes / world as u64, "{label}");
+                }
+            }
+        }
+    }
+    // forward-fusion reaches the same steady state (updates are lazy,
+    // so the narrowed/released arenas carry reduced-but-unconsumed
+    // gradients between steps — the peaks must not change)
+    for stage in [ShardStage::Zero2, ShardStage::Zero3] {
+        let r = run(4, ScheduleKind::ForwardFusion, stage);
+        let want = stage_memory(&units, 2, stage, 4);
+        assert_eq!(r.peak_grad_arena_bytes, want.grad_bytes, "FF {}", stage.label());
+        assert_eq!(r.peak_value_arena_bytes, want.value_bytes, "FF {}", stage.label());
+    }
+}
+
+/// Satellite: `comm_chunk_bytes` composes with every ZeRO stage — the
+/// chunk ∩ shard span collectives must be bit-identical to the
+/// whole-bucket sharded path (and to unchunked unsharded training).
+#[test]
+fn chunked_sharded_path_matches_unchunked_bitwise_under_every_stage() {
+    let layers = 3; // 3 × 1 KiB params in one bucket
+    let run = |chunk: Option<usize>, stage: ShardStage, overlap: usize| {
+        let mut cfg = DdpConfig::new(3, ScheduleKind::BackwardFusion, 3, Box::new(lane_batch));
+        cfg.bucket_cap_bytes = Some(1 << 20); // single bucket (3 KiB)
+        cfg.comm_chunk_bytes = chunk;
+        cfg.overlap_threads = overlap;
+        cfg.algo = CommAlgo::Ring;
+        cfg.shard_stage = stage;
+        train_ddp(|| lane_graph(31, layers), sgd_momentum, sgd_hyper(), cfg)
+    };
+    let reference = run(None, ShardStage::None, 2);
+    for stage in ShardStage::ALL {
+        // 600 B chunks: 150-elem chunks over a 768-elem arena whose
+        // world-3 shards are 256 elems — chunk and shard boundaries
+        // interleave, so the ownership spans include partial and empty
+        // intersections
+        let chunked = run(Some(600), stage, 2);
+        assert_eq!(
+            reference.losses,
+            chunked.losses,
+            "{}: chunked sharded must not change the math",
+            stage.label()
+        );
+        assert_eq!(
+            max_param_diff(&reference.final_params, &chunked.final_params),
+            0.0,
+            "{}: chunked sharded params bit-identical",
+            stage.label()
+        );
+        // inline chunked (no pool) agrees too
+        let inline = run(Some(600), stage, 0);
+        assert_eq!(reference.losses, inline.losses, "{}: inline chunked", stage.label());
+    }
+}
+
+/// Satellite: global-norm clipping under sharding. The executor
+/// all-reduces per-shard partial squared norms instead of rejecting
+/// global-information optimizers; clipped sharded training matches
+/// clipped unsharded training to f32 rounding (the partials reassociate
+/// the norm's summation order), and exactly at world 1.
+#[test]
+fn global_norm_clipping_matches_under_sharding() {
+    let clipped = || -> Box<dyn Optimizer> {
+        Box::new(GlobalNormClip { inner: Sgd, max_norm: 0.05 })
+    };
+    // lr high enough that the clip threshold engages every step
+    let hyper = Hyper { lr: 0.1, weight_decay: 0.0, ..Hyper::default() };
+    let run = |world: usize, schedule: ScheduleKind, stage: ShardStage| {
+        let mut cfg = DdpConfig::new(world, schedule, 4, Box::new(lane_batch));
+        cfg.bucket_cap_bytes = Some(1 << 10);
+        cfg.shard_stage = stage;
+        train_ddp(|| lane_graph(7, 3), clipped, hyper.clone(), cfg)
+    };
+    // world 1: one shard covers everything — the partial-norm path must
+    // still be *bit*-identical to the unsharded norm
+    for schedule in [ScheduleKind::Baseline, ScheduleKind::ForwardFusion] {
+        let base = run(1, schedule, ShardStage::None);
+        for stage in [ShardStage::Zero1, ShardStage::Zero2, ShardStage::Zero3] {
+            let r = run(1, schedule, stage);
+            assert_eq!(base.losses, r.losses, "world 1 {schedule:?} {}", stage.label());
+        }
+    }
+    // world > 1: identical up to the reassociated f32 norm reduction
+    for schedule in [ScheduleKind::Baseline, ScheduleKind::ForwardFusion] {
+        let base = run(3, schedule, ShardStage::None);
+        assert!(base.losses.iter().all(|l| l.is_finite()));
+        for stage in [ShardStage::Zero1, ShardStage::Zero2, ShardStage::Zero3] {
+            let r = run(3, schedule, stage);
+            for (s, (a, b)) in base.losses.iter().zip(r.losses.iter()).enumerate() {
+                let tol = 1e-5 * a.abs().max(1.0);
+                assert!(
+                    (a - b).abs() <= tol,
+                    "world 3 {schedule:?} {} step {s}: {a} vs {b}",
+                    stage.label()
+                );
+            }
+            let diff = max_param_diff(&base.final_params, &r.final_params);
+            assert!(diff <= 1e-5, "world 3 {schedule:?} {}: params {diff}", stage.label());
+        }
+    }
+}
+
+// ---- stage-portable checkpoints: the tiny bit-equal-across-world-size
+// construction from integration_ddp.rs (one row per rank, power-of-two
+// shapes, single-output head) ----
+
+fn tiny_graph(seed: u64) -> Graph {
+    let mut rng = XorShiftRng::new(seed);
+    let mut g = Graph::new("tiny", 2);
+    let w1 = g.param("fc1.w", &[8, 8], &mut rng);
+    let l1 = g.push("fc1", Box::new(Linear::new(false)), vec![Src::External(0)], vec![w1]);
+    let r = g.push("relu", Box::new(Relu), vec![Src::Node(l1)], vec![]);
+    let w2 = g.param("fc2.w", &[8, 1], &mut rng);
+    let l2 = g.push("fc2", Box::new(Linear::new(false)), vec![Src::Node(r)], vec![w2]);
+    let loss = g.push("mse", Box::new(MseLoss), vec![Src::Node(l2), Src::External(1)], vec![]);
+    g.set_loss(loss);
+    g
+}
+
+fn sample(rank: usize, step: usize) -> (Vec<f32>, f32) {
+    let mut rng = XorShiftRng::new(7000 + ((rank as u64) << 20) + step as u64);
+    let x = Tensor::randn(&[8], 1.0, &mut rng);
+    let y = Tensor::randn(&[1], 1.0, &mut rng);
+    (x.data().to_vec(), y.data()[0])
+}
+
+fn tiny_batch(rank: usize, step: usize) -> Vec<Tensor> {
+    let (x, y) = sample(rank, step);
+    vec![Tensor::from_vec(&[1, 8], x), Tensor::from_vec(&[1, 1], vec![y])]
+}
+
+fn tiny_concat_batch(world: usize, step: usize) -> Vec<Tensor> {
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for rank in 0..world {
+        let (x, y) = sample(rank, step);
+        xs.extend_from_slice(&x);
+        ys.push(y);
+    }
+    vec![Tensor::from_vec(&[world, 8], xs), Tensor::from_vec(&[world, 1], ys)]
+}
+
+/// Satellite: checkpoints are stage-portable in both directions — save
+/// under ZeRO-3 at world 4 and resume unsharded at world 1, and save
+/// unsharded at world 1 and resume under ZeRO-3 at world 4, with losses
+/// bit-equal to the uninterrupted run from the resume step.
+#[test]
+fn checkpoints_are_stage_portable_both_directions() {
+    let dir = std::env::temp_dir().join("optfuse_shard_stage_ckpt_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cap = Some(200); // fc1.w (256 B) its own bucket; fc2.w its own
+    let world = 4;
+    let zero3_cfg = |steps: usize,
+                     offset: usize,
+                     load: Option<std::path::PathBuf>,
+                     save: Option<std::path::PathBuf>| {
+        let mut cfg = DdpConfig::new(
+            world,
+            ScheduleKind::Baseline,
+            steps,
+            Box::new(move |rank, step| tiny_batch(rank, step + offset)),
+        );
+        cfg.bucket_cap_bytes = cap;
+        cfg.shard_stage = ShardStage::Zero3;
+        cfg.load_from = load;
+        cfg.save_to = save;
+        cfg
+    };
+    let single_cfg = |steps: usize,
+                      offset: usize,
+                      load: Option<std::path::PathBuf>,
+                      save: Option<std::path::PathBuf>| {
+        let mut cfg = DdpConfig::new(
+            1,
+            ScheduleKind::Baseline,
+            steps,
+            Box::new(move |_rank, step| tiny_concat_batch(world, step + offset)),
+        );
+        cfg.load_from = load;
+        cfg.save_to = save;
+        cfg
+    };
+    // the uninterrupted reference: world 4 under ZeRO-3 (bit-equal to
+    // the single-process run on the concatenated batch)
+    let full = train_ddp(|| tiny_graph(3), adam, Hyper::default(), zero3_cfg(4, 0, None, None));
+
+    // direction 1: ZeRO-3 @ world 4 → save → resume None @ world 1
+    let path = dir.join("zero3_w4.ckpt");
+    let first = train_ddp(
+        || tiny_graph(3),
+        adam,
+        Hyper::default(),
+        zero3_cfg(2, 0, None, Some(path.clone())),
+    );
+    assert_eq!(&full.losses[..2], first.losses.as_slice());
+    let resumed =
+        train_ddp(|| tiny_graph(3), adam, Hyper::default(), single_cfg(2, 2, Some(path), None));
+    for (s, (a, b)) in full.losses[2..].iter().zip(resumed.losses.iter()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "zero3→none resume step {s}: {a} vs {b}");
+    }
+    assert_eq!(max_param_diff(&full.final_params, &resumed.final_params), 0.0);
+
+    // direction 2: None @ world 1 → save → resume ZeRO-3 @ world 4
+    let path = dir.join("none_w1.ckpt");
+    let first = train_ddp(
+        || tiny_graph(3),
+        adam,
+        Hyper::default(),
+        single_cfg(2, 0, None, Some(path.clone())),
+    );
+    assert_eq!(&full.losses[..2], first.losses.as_slice(), "single ≡ ddp prefix");
+    let resumed = train_ddp(
+        || tiny_graph(3),
+        adam,
+        Hyper::default(),
+        zero3_cfg(2, 2, Some(path), None),
+    );
+    for (s, (a, b)) in full.losses[2..].iter().zip(resumed.losses.iter()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "none→zero3 resume step {s}: {a} vs {b}");
+    }
+    assert_eq!(max_param_diff(&full.final_params, &resumed.final_params), 0.0);
+}
