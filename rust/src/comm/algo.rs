@@ -1,13 +1,14 @@
-//! Collective-algorithm selection and the closed-form wire accounting
-//! shared between the real communicators and `memsim`'s interconnect
-//! cost model.
+//! Collective-algorithm selection, the two-tier [`Topology`] model, and
+//! the closed-form wire accounting shared between the real communicators
+//! and `memsim`'s interconnect cost model.
 //!
 //! Every [`crate::comm::Communicator`] implementation records its actual
 //! per-hop traffic into [`crate::comm::CommStats`]; the `wire_*`
 //! functions here are the closed forms of exactly that accounting
 //! (asserted equal in each implementation's tests). `memsim` prices
 //! collectives from the same functions, which is what lets
-//! `rust/tests/integration_comm_model.rs` demand that the performance
+//! `rust/tests/integration_comm_model.rs` and
+//! `rust/tests/integration_hier_plan.rs` demand that the performance
 //! model's per-collective bytes × hops match the measured stats
 //! **exactly**, not approximately.
 //!
@@ -19,19 +20,124 @@
 //! | flat | `2BW` (each rank stages B in, B out) | `2W` | 2 legs + root-serialized volume |
 //! | ring | `4B(W−1)` (2(W−1) steps × W chunk messages, both ends) | `4W(W−1)` | `2(W−1)` hops of `B/W` |
 //! | tree | `4B(W−1)` (2(W−1) full-size messages, both ends) | `4(W−1)` | `2⌈log₂W⌉` hops of `B` |
+//! | hier | per-node ring phases + leader stars + a leader tree | see [`wire_all_reduce`] | intra ring + `2⌈log₂N⌉` inter hops |
 //!
 //! `bytes` counts sent + received at both endpoints; `hops` counts
 //! point-to-point legs (one per endpoint per message; the flat session's
-//! contribute/collect pair counts as 2 per rank). Ring and tree move the
-//! same total volume — the difference the cost model prices is *where*
-//! it moves: the ring spreads it over every link in parallel, the tree
-//! serializes full buffers over `O(log W)` links.
+//! contribute/collect pair counts as 2 per rank). Flat, ring, and tree
+//! are *topology-oblivious*: their traffic depends only on `W`, so once
+//! a world spans nodes every one of their legs may cross the slow
+//! inter-node link. [`CommAlgo::Hier`] is the topology-aware
+//! composition — ring reduce-scatter / all-gather *within* each node,
+//! a binomial tree *across* node leaders — whose closed forms here are
+//! written as the same per-message loops the implementation charges, so
+//! the match is structural, not algebraic.
 
+use super::hier::HierComm;
 use super::ring::RingComm;
 use super::tree::TreeComm;
-use super::{Communicator, SharedMemComm};
+use super::{CommStats, Communicator, SharedMemComm};
 use crate::tensor::flat::shard_partition;
 use std::sync::Arc;
+
+/// The two-tier replica layout of a collective group: `world` ranks
+/// packed into nodes of `ranks_per_node` consecutive ranks (the last
+/// node may be smaller when the division is ragged). `ranks_per_node ==
+/// 0` is the degenerate one-tier case — every rank on one node — which
+/// is what the flat presets and all pre-existing call sites use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Topology {
+    /// Number of ranks in the group.
+    pub world: usize,
+    /// Consecutive ranks per node; 0 means "all ranks on one node".
+    pub ranks_per_node: usize,
+}
+
+impl Topology {
+    /// One-tier topology: every rank on a single node.
+    pub fn flat(world: usize) -> Self {
+        Self { world, ranks_per_node: 0 }
+    }
+
+    /// Two-tier topology with `ranks_per_node` consecutive ranks per
+    /// node (the last node takes the remainder).
+    pub fn two_tier(world: usize, ranks_per_node: usize) -> Self {
+        assert!(ranks_per_node > 0, "two_tier: ranks_per_node must be positive");
+        Self { world, ranks_per_node }
+    }
+
+    /// Effective node capacity (the one-tier case reports the world).
+    pub fn rpn(&self) -> usize {
+        if self.ranks_per_node == 0 {
+            self.world.max(1)
+        } else {
+            self.ranks_per_node
+        }
+    }
+
+    /// Number of nodes (≥ 1).
+    pub fn nodes(&self) -> usize {
+        let (w, r) = (self.world.max(1), self.rpn());
+        (w + r - 1) / r
+    }
+
+    /// Node index of `rank`.
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.rpn()
+    }
+
+    /// First (leader) rank of node `g`.
+    pub fn node_first(&self, g: usize) -> usize {
+        g * self.rpn()
+    }
+
+    /// Number of ranks on node `g` (the last node may be smaller).
+    pub fn node_size(&self, g: usize) -> usize {
+        let first = self.node_first(g);
+        self.rpn().min(self.world - first)
+    }
+
+    /// True when the group spans more than one node.
+    pub fn multi_node(&self) -> bool {
+        self.nodes() > 1
+    }
+
+    /// Display label: `flat` for one-tier, `RxN` for two-tier.
+    pub fn label(&self) -> String {
+        if self.ranks_per_node == 0 {
+            "flat".to_string()
+        } else {
+            format!("{}x{}", self.rpn(), self.nodes())
+        }
+    }
+
+    /// Parse a `--topology` value for a group of `world` ranks: `flat`
+    /// (one tier) or `RxN` (R consecutive ranks per node, N nodes). The
+    /// node grid must cover the world: `R·(N−1) < world ≤ R·N`.
+    pub fn parse(s: &str, world: usize) -> Result<Self, String> {
+        if s == "flat" {
+            return Ok(Self::flat(world));
+        }
+        let (r, nn) = s
+            .split_once('x')
+            .ok_or_else(|| format!("topology '{s}' is not 'flat' or 'RxN'"))?;
+        let r: usize = r.parse().map_err(|_| format!("bad ranks-per-node in '{s}'"))?;
+        let nn: usize = nn.parse().map_err(|_| format!("bad node count in '{s}'"))?;
+        if r == 0 || nn == 0 {
+            return Err(format!("topology '{s}' must have positive dimensions"));
+        }
+        let topo = Self::two_tier(world, r);
+        if topo.nodes() != nn {
+            return Err(format!(
+                "topology {r}x{nn} does not cover world {world} \
+                 (need {}x{} for this world)",
+                r,
+                topo.nodes()
+            ));
+        }
+        Ok(topo)
+    }
+}
 
 /// Which collective algorithm a DDP run (or a memsim prediction) uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -45,11 +151,21 @@ pub enum CommAlgo {
     /// Binomial reduce + broadcast ([`TreeComm`]): latency-optimal,
     /// `2⌈log₂W⌉` full-buffer hops.
     Tree,
+    /// Two-tier composition ([`HierComm`]): ring reduce-scatter /
+    /// all-gather within each node, binomial tree across node leaders.
+    /// Degenerates to the leader tree at one rank per node; the only
+    /// algorithm whose wire shape follows the [`Topology`].
+    Hier,
 }
 
 impl CommAlgo {
     /// All algorithms, in presentation order.
-    pub const ALL: [CommAlgo; 3] = [CommAlgo::Flat, CommAlgo::Ring, CommAlgo::Tree];
+    pub const ALL: [CommAlgo; 4] =
+        [CommAlgo::Flat, CommAlgo::Ring, CommAlgo::Tree, CommAlgo::Hier];
+
+    /// The topology-oblivious algorithms (wire shape independent of the
+    /// node grid) — the historical one-tier set.
+    pub const ONE_TIER: [CommAlgo; 3] = [CommAlgo::Flat, CommAlgo::Ring, CommAlgo::Tree];
 
     /// Stable identifier used by CLI flags and bench tables.
     pub fn label(&self) -> &'static str {
@@ -57,6 +173,7 @@ impl CommAlgo {
             CommAlgo::Flat => "flat",
             CommAlgo::Ring => "ring",
             CommAlgo::Tree => "tree",
+            CommAlgo::Hier => "hier",
         }
     }
 }
@@ -68,17 +185,71 @@ impl std::str::FromStr for CommAlgo {
             "flat" | "shared" => Ok(CommAlgo::Flat),
             "ring" => Ok(CommAlgo::Ring),
             "tree" => Ok(CommAlgo::Tree),
-            _ => Err(format!("unknown collective algorithm '{s}' (flat, ring, tree)")),
+            "hier" => Ok(CommAlgo::Hier),
+            _ => Err(format!("unknown collective algorithm '{s}' (flat, ring, tree, hier)")),
         }
     }
 }
 
-/// Build the communicator implementing `algo` for `world` ranks.
-pub fn make_comm(algo: CommAlgo, world: usize) -> Arc<dyn Communicator> {
+/// What `DdpConfig::algo` / `--algo` selects: one algorithm for every
+/// collective, or the per-bucket planner ([`crate::comm::plan`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlgoSelect {
+    /// Every collective uses this algorithm.
+    Fixed(CommAlgo),
+    /// `--algo auto`: a memsim-driven plan picks the algorithm (and the
+    /// chunk split) per bucket; collectives route through
+    /// [`crate::comm::plan::MixedComm`].
+    Auto,
+}
+
+impl AlgoSelect {
+    /// Stable identifier used by CLI flags and bench tables.
+    pub fn label(&self) -> &'static str {
+        match self {
+            AlgoSelect::Fixed(a) => a.label(),
+            AlgoSelect::Auto => "auto",
+        }
+    }
+}
+
+impl From<CommAlgo> for AlgoSelect {
+    fn from(a: CommAlgo) -> Self {
+        AlgoSelect::Fixed(a)
+    }
+}
+
+impl std::str::FromStr for AlgoSelect {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        if s == "auto" {
+            return Ok(AlgoSelect::Auto);
+        }
+        s.parse::<CommAlgo>()
+            .map(AlgoSelect::Fixed)
+            .map_err(|e| format!("{e} — or 'auto' for the per-bucket planner"))
+    }
+}
+
+/// Build the communicator implementing `algo` over `topo` (the one-tier
+/// algorithms only read `topo.world`).
+pub fn make_comm(algo: CommAlgo, topo: &Topology) -> Arc<dyn Communicator> {
+    make_comm_shared(algo, topo, Arc::new(CommStats::default()))
+}
+
+/// [`make_comm`] with an externally shared [`CommStats`] — how
+/// [`crate::comm::plan::MixedComm`] keeps one accounting path across a
+/// mixed-algorithm session.
+pub fn make_comm_shared(
+    algo: CommAlgo,
+    topo: &Topology,
+    stats: Arc<CommStats>,
+) -> Arc<dyn Communicator> {
     match algo {
-        CommAlgo::Flat => Arc::new(SharedMemComm::new(world)),
-        CommAlgo::Ring => Arc::new(RingComm::new(world)),
-        CommAlgo::Tree => Arc::new(TreeComm::new(world)),
+        CommAlgo::Flat => Arc::new(SharedMemComm::with_stats(topo.world, stats)),
+        CommAlgo::Ring => Arc::new(RingComm::with_stats(topo.world, stats)),
+        CommAlgo::Tree => Arc::new(TreeComm::with_stats(topo.world, stats)),
+        CommAlgo::Hier => Arc::new(HierComm::with_stats(*topo, stats)),
     }
 }
 
@@ -93,6 +264,13 @@ pub struct WireCost {
     pub hops: u64,
 }
 
+impl WireCost {
+    fn msg(&mut self, elems: usize) {
+        self.bytes += 8 * elems as u64;
+        self.hops += 2;
+    }
+}
+
 impl std::ops::AddAssign for WireCost {
     fn add_assign(&mut self, rhs: Self) {
         self.bytes += rhs.bytes;
@@ -100,8 +278,55 @@ impl std::ops::AddAssign for WireCost {
     }
 }
 
+/// The intra-node ring phases of [`CommAlgo::Hier`], charged per
+/// message exactly as `HierComm` does: `phases` ring sweeps (reduce-
+/// scatter and/or all-gather) of `s − 1` steps each, every step moving
+/// one chunk message per node member (the chunks tile the buffer).
+fn hier_ring_phase(c: &mut WireCost, n: usize, s: usize, phases: usize) {
+    if s <= 1 {
+        return;
+    }
+    let spans = shard_partition(n, s);
+    for _phase in 0..phases {
+        for _step in 0..s - 1 {
+            for span in &spans {
+                c.msg(span.1);
+            }
+        }
+    }
+}
+
+/// One leader star of [`CommAlgo::Hier`]: a message per non-leader node
+/// member carrying that member's span (gather up or scatter down).
+fn hier_star(c: &mut WireCost, spans: &[(usize, usize)]) {
+    for span in spans.iter().skip(1) {
+        c.msg(span.1);
+    }
+}
+
+/// The inter-node binomial tree of [`CommAlgo::Hier`]: `N − 1` full-
+/// size messages per direction (reduce and/or broadcast edges).
+fn hier_tree(c: &mut WireCost, n: usize, nodes: usize, directions: usize) {
+    for _dir in 0..directions {
+        for _edge in 0..nodes - 1 {
+            c.msg(n);
+        }
+    }
+}
+
+/// Contiguous region of `spans` owned by node `g` of `topo` (the spans
+/// are per-rank and rank-ordered, so a node's union is contiguous).
+fn node_region(topo: &Topology, spans: &[(usize, usize)], g: usize) -> (usize, usize) {
+    let first = topo.node_first(g);
+    let s = topo.node_size(g);
+    let off = spans[first].0;
+    let len: usize = spans[first..first + s].iter().map(|x| x.1).sum();
+    (off, len)
+}
+
 /// Closed-form wire cost of one `all_reduce_mean` of `n` f32 elements.
-pub fn wire_all_reduce(algo: CommAlgo, n: usize, world: usize) -> WireCost {
+pub fn wire_all_reduce(algo: CommAlgo, n: usize, topo: &Topology) -> WireCost {
+    let world = topo.world;
     let (n64, w) = (n as u64, world as u64);
     match algo {
         // every rank stages 4n in and 4n out of the session, 2 legs each
@@ -121,23 +346,49 @@ pub fn wire_all_reduce(algo: CommAlgo, n: usize, world: usize) -> WireCost {
             // 2(W−1) full-size messages (reduce + broadcast edges)
             WireCost { bytes: 16 * n64 * (w - 1), hops: 4 * (w - 1) }
         }
+        CommAlgo::Hier => {
+            if world == 1 {
+                return WireCost::default();
+            }
+            let mut c = WireCost::default();
+            for g in 0..topo.nodes() {
+                let s = topo.node_size(g);
+                if s > 1 {
+                    let local = shard_partition(n, s);
+                    hier_ring_phase(&mut c, n, s, 1); // intra ring RS
+                    hier_star(&mut c, &local); // span gather to leader
+                    hier_star(&mut c, &local); // result span scatter
+                    hier_ring_phase(&mut c, n, s, 1); // intra ring AG
+                }
+            }
+            if topo.multi_node() {
+                hier_tree(&mut c, n, topo.nodes(), 2); // reduce + bcast
+            }
+            c
+        }
     }
 }
 
 /// Closed-form wire cost of one `reduce_scatter_mean` (balanced
 /// [`crate::tensor::flat::shard_span`] ownership).
-pub fn wire_reduce_scatter(algo: CommAlgo, n: usize, world: usize) -> WireCost {
-    wire_reduce_scatter_spans(algo, &shard_partition(n, world))
+pub fn wire_reduce_scatter(algo: CommAlgo, n: usize, topo: &Topology) -> WireCost {
+    wire_reduce_scatter_spans(algo, &shard_partition(n, topo.world), topo)
 }
 
 /// Closed-form wire cost of one `reduce_scatter_mean_spans` over an
 /// explicit rank-ordered ownership partition (the chunked ZeRO path).
 /// Flat and ring traffic depend only on the total length — the spans
 /// tile the buffer, so per-stage message sets always cover it exactly —
-/// while the tree's root scatter star moves every *non-root* span, so
-/// its byte count shifts with `spans[0]`.
-pub fn wire_reduce_scatter_spans(algo: CommAlgo, spans: &[(usize, usize)]) -> WireCost {
+/// while the tree's root scatter star moves every *non-root* span (its
+/// byte count shifts with `spans[0]`) and the hierarchical down path
+/// moves node regions then member spans.
+pub fn wire_reduce_scatter_spans(
+    algo: CommAlgo,
+    spans: &[(usize, usize)],
+    topo: &Topology,
+) -> WireCost {
     let world = spans.len();
+    debug_assert_eq!(world, topo.world, "span count must match the topology world");
     let n: usize = spans.iter().map(|s| s.1).sum();
     let (n64, w) = (n as u64, world as u64);
     match algo {
@@ -157,20 +408,55 @@ pub fn wire_reduce_scatter_spans(algo: CommAlgo, spans: &[(usize, usize)]) -> Wi
             let nonroot = 4 * (n - spans[0].1) as u64;
             WireCost { bytes: 8 * n64 * (w - 1) + 2 * nonroot, hops: 4 * (w - 1) }
         }
+        CommAlgo::Hier => {
+            if world == 1 {
+                return WireCost::default();
+            }
+            let mut c = WireCost::default();
+            // up path: intra ring RS over local spans, span gather to
+            // the leader, leader tree-reduce to the root
+            for g in 0..topo.nodes() {
+                let s = topo.node_size(g);
+                if s > 1 {
+                    hier_ring_phase(&mut c, n, s, 1);
+                    hier_star(&mut c, &shard_partition(n, s));
+                }
+            }
+            if topo.multi_node() {
+                hier_tree(&mut c, n, topo.nodes(), 1); // reduce only
+                // root scatters each non-root leader its node's region
+                for g in 1..topo.nodes() {
+                    c.msg(node_region(topo, spans, g).1);
+                }
+            }
+            // leaders scatter each member its owned span
+            for g in 0..topo.nodes() {
+                let first = topo.node_first(g);
+                for r in first + 1..first + topo.node_size(g) {
+                    c.msg(spans[r].1);
+                }
+            }
+            c
+        }
     }
 }
 
 /// Closed-form wire cost of one `all_gather` (balanced ownership).
-pub fn wire_all_gather(algo: CommAlgo, n: usize, world: usize) -> WireCost {
-    wire_all_gather_spans(algo, &shard_partition(n, world))
+pub fn wire_all_gather(algo: CommAlgo, n: usize, topo: &Topology) -> WireCost {
+    wire_all_gather_spans(algo, &shard_partition(n, topo.world), topo)
 }
 
 /// Closed-form wire cost of one `all_gather_spans` over an explicit
 /// rank-ordered ownership partition (see
-/// [`wire_reduce_scatter_spans`] for why only the tree depends on the
-/// span shape).
-pub fn wire_all_gather_spans(algo: CommAlgo, spans: &[(usize, usize)]) -> WireCost {
+/// [`wire_reduce_scatter_spans`] for why only the tree and hier shapes
+/// depend on the span layout).
+pub fn wire_all_gather_spans(
+    algo: CommAlgo,
+    spans: &[(usize, usize)],
+    topo: &Topology,
+) -> WireCost {
     let world = spans.len();
+    debug_assert_eq!(world, topo.world, "span count must match the topology world");
     let n: usize = spans.iter().map(|s| s.1).sum();
     let (n64, w) = (n as u64, world as u64);
     match algo {
@@ -190,6 +476,35 @@ pub fn wire_all_gather_spans(algo: CommAlgo, spans: &[(usize, usize)]) -> WireCo
             let nonroot = 4 * (n - spans[0].1) as u64;
             WireCost { bytes: 2 * nonroot + 8 * n64 * (w - 1), hops: 4 * (w - 1) }
         }
+        CommAlgo::Hier => {
+            if world == 1 {
+                return WireCost::default();
+            }
+            let mut c = WireCost::default();
+            // up path: members star their owned spans to the leader,
+            // non-root leaders star their regions to the root
+            for g in 0..topo.nodes() {
+                let first = topo.node_first(g);
+                for r in first + 1..first + topo.node_size(g) {
+                    c.msg(spans[r].1);
+                }
+            }
+            if topo.multi_node() {
+                for g in 1..topo.nodes() {
+                    c.msg(node_region(topo, spans, g).1);
+                }
+                hier_tree(&mut c, n, topo.nodes(), 1); // full broadcast
+            }
+            // down path within each node: local-span scatter + ring AG
+            for g in 0..topo.nodes() {
+                let s = topo.node_size(g);
+                if s > 1 {
+                    hier_star(&mut c, &shard_partition(n, s));
+                    hier_ring_phase(&mut c, n, s, 1);
+                }
+            }
+            c
+        }
     }
 }
 
@@ -204,12 +519,46 @@ mod tests {
             assert_eq!(algo.label().parse::<CommAlgo>().unwrap(), algo);
         }
         assert!("mesh".parse::<CommAlgo>().is_err());
+        assert_eq!("auto".parse::<AlgoSelect>().unwrap(), AlgoSelect::Auto);
+        assert_eq!(
+            "ring".parse::<AlgoSelect>().unwrap(),
+            AlgoSelect::Fixed(CommAlgo::Ring)
+        );
+        assert_eq!(AlgoSelect::Auto.label(), "auto");
+        assert_eq!(AlgoSelect::from(CommAlgo::Tree).label(), "tree");
+    }
+
+    #[test]
+    fn topology_grid_covers_ragged_worlds() {
+        let t = Topology::two_tier(5, 2);
+        assert_eq!(t.nodes(), 3);
+        assert_eq!(t.node_size(0), 2);
+        assert_eq!(t.node_size(2), 1);
+        assert_eq!(t.node_of(4), 2);
+        assert_eq!(t.node_first(1), 2);
+        assert!(t.multi_node());
+        assert_eq!(t.label(), "2x3");
+        let f = Topology::flat(4);
+        assert_eq!(f.nodes(), 1);
+        assert_eq!(f.rpn(), 4);
+        assert!(!f.multi_node());
+        assert_eq!(f.label(), "flat");
+    }
+
+    #[test]
+    fn topology_parse_checks_world_coverage() {
+        assert_eq!(Topology::parse("flat", 4).unwrap(), Topology::flat(4));
+        assert_eq!(Topology::parse("2x2", 4).unwrap(), Topology::two_tier(4, 2));
+        assert_eq!(Topology::parse("2x3", 5).unwrap(), Topology::two_tier(5, 2));
+        assert!(Topology::parse("2x2", 5).is_err());
+        assert!(Topology::parse("0x2", 4).is_err());
+        assert!(Topology::parse("junk", 4).is_err());
     }
 
     #[test]
     fn make_comm_builds_the_right_world() {
         for algo in CommAlgo::ALL {
-            assert_eq!(make_comm(algo, 3).world(), 3);
+            assert_eq!(make_comm(algo, &Topology::two_tier(3, 2)).world(), 3);
         }
     }
 
@@ -231,7 +580,7 @@ mod tests {
                 });
             }
         });
-        let want = wire_all_reduce(CommAlgo::Flat, n, world);
+        let want = wire_all_reduce(CommAlgo::Flat, n, &Topology::flat(world));
         assert_eq!(comm.stats().bytes.load(Ordering::Relaxed), want.bytes);
         assert_eq!(comm.stats().hops.load(Ordering::Relaxed), want.hops);
         assert_eq!(want.bytes, 8 * n as u64 * world as u64);
@@ -241,8 +590,9 @@ mod tests {
     #[test]
     fn ring_and_tree_move_equal_volume_over_different_hop_counts() {
         let (n, w) = (1000, 8);
-        let ring = wire_all_reduce(CommAlgo::Ring, n, w);
-        let tree = wire_all_reduce(CommAlgo::Tree, n, w);
+        let topo = Topology::flat(w);
+        let ring = wire_all_reduce(CommAlgo::Ring, n, &topo);
+        let tree = wire_all_reduce(CommAlgo::Tree, n, &topo);
         assert_eq!(ring.bytes, tree.bytes, "same total volume");
         assert!(ring.hops > tree.hops, "ring pays W× the hops");
         assert_eq!(ring.hops, 4 * 8 * 7);
@@ -250,11 +600,54 @@ mod tests {
     }
 
     #[test]
-    fn world_one_moves_nothing_for_ring_and_tree() {
+    fn world_one_moves_nothing_for_ring_tree_and_hier() {
+        let topo = Topology::flat(1);
         for op in [wire_all_reduce, wire_reduce_scatter, wire_all_gather] {
-            assert_eq!(op(CommAlgo::Ring, 64, 1), WireCost::default());
-            assert_eq!(op(CommAlgo::Tree, 64, 1), WireCost::default());
+            assert_eq!(op(CommAlgo::Ring, 64, &topo), WireCost::default());
+            assert_eq!(op(CommAlgo::Tree, 64, &topo), WireCost::default());
+            assert_eq!(op(CommAlgo::Hier, 64, &topo), WireCost::default());
         }
+    }
+
+    /// With one rank per node the hierarchical composition has no intra
+    /// traffic and its wire shape collapses to the leader tree exactly —
+    /// for the all-reduce and for both span-parameterized halves.
+    #[test]
+    fn hier_degenerates_to_tree_at_one_rank_per_node() {
+        for w in [2usize, 3, 4, 5] {
+            let solo = Topology::two_tier(w, 1);
+            let flat = Topology::flat(w);
+            let n = 10;
+            assert_eq!(
+                wire_all_reduce(CommAlgo::Hier, n, &solo),
+                wire_all_reduce(CommAlgo::Tree, n, &flat),
+                "world {w} all-reduce"
+            );
+            let spans = shard_partition(n, w);
+            assert_eq!(
+                wire_reduce_scatter_spans(CommAlgo::Hier, &spans, &solo),
+                wire_reduce_scatter_spans(CommAlgo::Tree, &spans, &flat),
+                "world {w} reduce-scatter"
+            );
+            assert_eq!(
+                wire_all_gather_spans(CommAlgo::Hier, &spans, &solo),
+                wire_all_gather_spans(CommAlgo::Tree, &spans, &flat),
+                "world {w} all-gather"
+            );
+        }
+    }
+
+    /// Hand-checked two-tier all-reduce arithmetic: world 4 as 2×2.
+    /// Per node (s = 2, n = 10): ring RS 8n, ring AG 8n, gather star
+    /// 8·5, scatter star 8·5 → 240 bytes; ×2 nodes = 480. Inter tree:
+    /// 16n(N−1) = 160. Hops: per node 2s(s−1)·2 + 2(s−1)·2 = 12; ×2 =
+    /// 24; inter 4(N−1) = 4.
+    #[test]
+    fn hier_two_by_two_closed_form_by_hand() {
+        let topo = Topology::two_tier(4, 2);
+        let c = wire_all_reduce(CommAlgo::Hier, 10, &topo);
+        assert_eq!(c.bytes, 480 + 160);
+        assert_eq!(c.hops, 24 + 4);
     }
 
     /// Span-parameterized collectives must record exactly the span-aware
@@ -266,8 +659,13 @@ mod tests {
         let world = 3;
         let spans = [(0usize, 4usize), (4, 0), (4, 3)];
         let n = 7;
-        for algo in CommAlgo::ALL {
-            let comm = make_comm(algo, world);
+        for (algo, topo) in [
+            (CommAlgo::Flat, Topology::flat(world)),
+            (CommAlgo::Ring, Topology::flat(world)),
+            (CommAlgo::Tree, Topology::flat(world)),
+            (CommAlgo::Hier, Topology::two_tier(world, 2)),
+        ] {
+            let comm = make_comm(algo, &topo);
             let c = &comm;
             std::thread::scope(|s| {
                 for rank in 0..world {
@@ -279,8 +677,8 @@ mod tests {
                     });
                 }
             });
-            let want_rs = wire_reduce_scatter_spans(algo, &spans);
-            let want_ag = wire_all_gather_spans(algo, &spans);
+            let want_rs = wire_reduce_scatter_spans(algo, &spans, &topo);
+            let want_ag = wire_all_gather_spans(algo, &spans, &topo);
             assert_eq!(
                 comm.stats().bytes.load(Ordering::Relaxed),
                 want_rs.bytes + want_ag.bytes,
@@ -295,19 +693,25 @@ mod tests {
             );
         }
         // balanced spans reduce to the historical closed forms
+        let topo = Topology::flat(4);
         for algo in CommAlgo::ALL {
             assert_eq!(
-                wire_reduce_scatter_spans(algo, &crate::tensor::flat::shard_partition(10, 4)),
-                wire_reduce_scatter(algo, 10, 4)
+                wire_reduce_scatter_spans(
+                    algo,
+                    &crate::tensor::flat::shard_partition(10, 4),
+                    &topo
+                ),
+                wire_reduce_scatter(algo, 10, &topo)
             );
         }
     }
 
     #[test]
     fn wire_cost_accumulates() {
+        let topo = Topology::flat(4);
         let mut acc = WireCost::default();
-        acc += wire_all_reduce(CommAlgo::Ring, 10, 4);
-        acc += wire_all_reduce(CommAlgo::Ring, 10, 4);
-        assert_eq!(acc.bytes, 2 * wire_all_reduce(CommAlgo::Ring, 10, 4).bytes);
+        acc += wire_all_reduce(CommAlgo::Ring, 10, &topo);
+        acc += wire_all_reduce(CommAlgo::Ring, 10, &topo);
+        assert_eq!(acc.bytes, 2 * wire_all_reduce(CommAlgo::Ring, 10, &topo).bytes);
     }
 }

@@ -1,0 +1,705 @@
+//! Two-tier hierarchical collectives: ring reduce-scatter / all-gather
+//! *within* each node composed with a binomial tree *across* node
+//! leaders, over the same p2p [`super::p2p::Mailbox`] the one-tier ring
+//! and tree use.
+//!
+//! The [`super::Topology`] packs consecutive global ranks into nodes
+//! (the last node may be smaller — ragged `ranks_per_node` is fully
+//! supported). One all-reduce runs five phases:
+//!
+//! 1. **intra ring reduce-scatter** — node members exchange chunked
+//!    spans for `s−1` steps; local rank `j` ends holding local span `j`
+//!    (bandwidth-optimal inside the fast tier);
+//! 2. **span gather** — non-leader members star their reduced spans to
+//!    the node leader, which reassembles the node's contribution;
+//! 3. **inter tree** — node leaders binomial-reduce to the global root
+//!    (rank 0), which folds *every rank's* contribution with the shared
+//!    rank-order kernel, then binomial-broadcast the result back
+//!    (latency-optimal across the slow tier: `2⌈log₂N⌉` full-buffer
+//!    hops instead of a ring's `2(N·s−1)`);
+//! 4. **span scatter** — each leader stars the result spans back to its
+//!    members;
+//! 5. **intra ring all-gather** — the node circulates result spans so
+//!    every member ends with the full buffer.
+//!
+//! Bit-determinism: exactly as in [`super::RingComm`] and
+//! [`super::TreeComm`], messages carry per-origin contributions
+//! ([`super::p2p`]) and only the global root folds them — in global
+//! rank order via `mean_of_ranked` — so results are bit-identical to
+//! [`super::SharedMemComm`] whatever the node grid. The
+//! [`super::CommStats`] accounting charges the bytes the *real*
+//! hierarchical algorithm would move per hop (reduced spans intra,
+//! partial full-size buffers inter); the closed forms in
+//! [`super::algo`] iterate the same per-message loops, so measured
+//! bytes × hops match them exactly. The single-thread ordering contract
+//! of [`super::RingComm`] applies unchanged.
+
+use super::algo::Topology;
+use super::p2p::{Acct, Mailbox, MsgKey, Payload};
+use super::tree::tree_rounds;
+use super::{assert_spans_tile, mean_in_rank_order, CommStats, Communicator};
+use crate::tensor::flat::shard_partition;
+use std::sync::Arc;
+use std::time::Instant;
+
+// Leg namespaces: each phase posts on its own base so no (tag, seq,
+// leg, edge) key can collide across phases of one collective.
+const LEG_RS: u32 = 0;
+const LEG_GATHER: u32 = 1 << 16;
+const LEG_TREE_UP: u32 = 2 << 16;
+const LEG_TREE_DOWN: u32 = 3 << 16;
+const LEG_REGION: u32 = 4 << 16;
+const LEG_SCATTER: u32 = 5 << 16;
+const LEG_AG: u32 = 6 << 16;
+
+/// Two-tier [`Communicator`]: ring-within-node + tree-across-nodes.
+pub struct HierComm {
+    topo: Topology,
+    mail: Mailbox,
+    stats: Arc<CommStats>,
+}
+
+impl HierComm {
+    /// A hierarchical communicator over `topo`.
+    pub fn new(topo: Topology) -> Self {
+        Self::with_stats(topo, Arc::new(CommStats::default()))
+    }
+
+    /// [`HierComm::new`] recording into an externally shared
+    /// [`CommStats`] (mixed-algorithm sessions).
+    pub fn with_stats(topo: Topology, stats: Arc<CommStats>) -> Self {
+        assert!(topo.world > 0, "communicator needs at least one rank");
+        Self { topo, mail: Mailbox::new(topo.world), stats }
+    }
+
+    /// The topology this communicator runs over.
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// (node, first rank of node, node size, local index) of `rank`.
+    fn node_info(&self, rank: usize) -> (usize, usize, usize, usize) {
+        let g = self.topo.node_of(rank);
+        let first = self.topo.node_first(g);
+        (g, first, self.topo.node_size(g), rank - first)
+    }
+
+    /// Phase 1 — intra-node ring reduce-scatter over the node-local
+    /// spans of the full buffer. Returns the per-origin payload for
+    /// this rank's local span (all node members' contributions); a
+    /// single-member node short-circuits to its own full contribution.
+    fn intra_rs(
+        &self,
+        rank: usize,
+        tag: u64,
+        seq: u64,
+        data: &[f32],
+        acct: &mut Acct,
+    ) -> Payload {
+        let (_, first, s, l) = self.node_info(rank);
+        if s == 1 {
+            return vec![(rank, data.to_vec())];
+        }
+        let spans = shard_partition(data.len(), s);
+        let chunk_span = |k: usize| spans[(k + s - 1) % s];
+        let chunk_of = |k: usize| {
+            let (o, len) = chunk_span(k);
+            data[o..o + len].to_vec()
+        };
+        let next = first + (l + 1) % s;
+        let prev = first + (l + s - 1) % s;
+        let mut carry: Payload = vec![(rank, chunk_of(l))];
+        for t in 0..s - 1 {
+            let c_send = (l + s - t) % s;
+            let (_, send_len) = chunk_span(c_send);
+            self.mail.post(
+                MsgKey { tag, seq, leg: LEG_RS + t as u32, from: rank, to: next },
+                std::mem::take(&mut carry),
+            );
+            acct.sent += 4 * send_len;
+            acct.legs += 1;
+            let c_recv = (l + s - t - 1) % s;
+            let (_, recv_len) = chunk_span(c_recv);
+            let mut incoming =
+                self.mail.take(MsgKey { tag, seq, leg: LEG_RS + t as u32, from: prev, to: rank });
+            incoming.push((rank, chunk_of(c_recv)));
+            acct.received += 4 * recv_len;
+            acct.legs += 1;
+            carry = incoming;
+        }
+        carry
+    }
+
+    /// Phase 2 — star the reduced spans to the node leader. Non-leaders
+    /// post their span payload and return `None`; the leader collects
+    /// every member's spans and reassembles the node's per-origin
+    /// *full-buffer* contributions (concatenating each origin's chunks
+    /// in span order reassociates nothing — the root still folds whole
+    /// buffers in rank order).
+    fn gather_to_leader(
+        &self,
+        rank: usize,
+        tag: u64,
+        seq: u64,
+        carry: Payload,
+        n: usize,
+        acct: &mut Acct,
+    ) -> Option<Payload> {
+        let (_, first, s, l) = self.node_info(rank);
+        if s == 1 {
+            return Some(carry);
+        }
+        let spans = shard_partition(n, s);
+        if l != 0 {
+            self.mail.post(MsgKey { tag, seq, leg: LEG_GATHER, from: rank, to: first }, carry);
+            acct.sent += 4 * spans[l].1;
+            acct.legs += 1;
+            return None;
+        }
+        // leader: one full buffer per node member, indexed locally
+        let mut full: Vec<Vec<f32>> = (0..s).map(|_| vec![0.0f32; n]).collect();
+        let mut place = |span: (usize, usize), payload: &Payload| {
+            let (off, len) = span;
+            for (origin, chunk) in payload {
+                assert_eq!(chunk.len(), len, "hier gather: span length mismatch");
+                full[origin - first][off..off + len].copy_from_slice(chunk);
+            }
+        };
+        place(spans[0], &carry);
+        for j in 1..s {
+            let msg =
+                self.mail.take(MsgKey { tag, seq, leg: LEG_GATHER, from: first + j, to: rank });
+            acct.received += 4 * spans[j].1;
+            acct.legs += 1;
+            place(spans[j], &msg);
+        }
+        Some(full.into_iter().enumerate().map(|(j, buf)| (first + j, buf)).collect())
+    }
+
+    /// Phase 3a — binomial reduce of the node payloads across leaders
+    /// to the global root (rank 0 = leader of node 0). Non-root leaders
+    /// post their accumulated payload up the tree and return `None`;
+    /// the root returns every rank's contribution.
+    #[allow(clippy::too_many_arguments)]
+    fn inter_reduce(
+        &self,
+        g: usize,
+        rank: usize,
+        tag: u64,
+        seq: u64,
+        payload: Payload,
+        n: usize,
+        acct: &mut Acct,
+    ) -> Option<Payload> {
+        let nodes = self.topo.nodes();
+        let bytes = 4 * n;
+        let mut carry = payload;
+        for k in 0..tree_rounds(nodes) {
+            let d = 1usize << k;
+            if g % (2 * d) == d {
+                let to = self.topo.node_first(g - d);
+                self.mail.post(
+                    MsgKey { tag, seq, leg: LEG_TREE_UP + k, from: rank, to },
+                    std::mem::take(&mut carry),
+                );
+                acct.sent += bytes;
+                acct.legs += 1;
+                return None;
+            }
+            if g + d < nodes {
+                let from = self.topo.node_first(g + d);
+                let incoming =
+                    self.mail.take(MsgKey { tag, seq, leg: LEG_TREE_UP + k, from, to: rank });
+                carry.extend(incoming);
+                acct.received += bytes;
+                acct.legs += 1;
+            }
+        }
+        Some(carry)
+    }
+
+    /// Phase 3b — mirror binomial broadcast of the full result from the
+    /// root back to every leader. `result` is `Some` only at the root.
+    #[allow(clippy::too_many_arguments)]
+    fn inter_bcast(
+        &self,
+        g: usize,
+        rank: usize,
+        tag: u64,
+        seq: u64,
+        result: Option<Vec<f32>>,
+        n: usize,
+        acct: &mut Acct,
+    ) -> Vec<f32> {
+        let nodes = self.topo.nodes();
+        let bytes = 4 * n;
+        let (result, my_round) = match result {
+            Some(r) => (r, tree_rounds(nodes)),
+            None => {
+                let k = g.trailing_zeros();
+                let from = self.topo.node_first(g - (1usize << k));
+                let mut msg =
+                    self.mail.take(MsgKey { tag, seq, leg: LEG_TREE_DOWN + k, from, to: rank });
+                acct.received += bytes;
+                acct.legs += 1;
+                (msg.pop().expect("hier broadcast payload").1, k)
+            }
+        };
+        for j in (0..my_round).rev() {
+            let child = g + (1usize << j);
+            if child < nodes {
+                let to = self.topo.node_first(child);
+                self.mail.post(
+                    MsgKey { tag, seq, leg: LEG_TREE_DOWN + j, from: rank, to },
+                    vec![(rank, result.clone())],
+                );
+                acct.sent += bytes;
+                acct.legs += 1;
+            }
+        }
+        result
+    }
+
+    /// Phases 4 + 5 — distribute a fully reduced / assembled buffer to
+    /// every node member: the leader stars each member its local span,
+    /// then the node ring-all-gathers the spans so everyone ends with
+    /// the full buffer. `result` is `Some` on leaders, `None` on
+    /// members (who receive their span from the scatter).
+    fn scatter_and_ag(
+        &self,
+        rank: usize,
+        tag: u64,
+        seq: u64,
+        result: Option<Vec<f32>>,
+        data: &mut [f32],
+        acct: &mut Acct,
+    ) {
+        let (_, first, s, l) = self.node_info(rank);
+        let n = data.len();
+        if s == 1 {
+            data.copy_from_slice(&result.expect("single-member node is its own leader"));
+            return;
+        }
+        let spans = shard_partition(n, s);
+        let chunk_span = |k: usize| spans[(k + s - 1) % s];
+        let own = if let Some(full) = &result {
+            // leader: scatter members their spans, keep span 0
+            for (j, span) in spans.iter().enumerate().skip(1) {
+                let (o, len) = *span;
+                self.mail.post(
+                    MsgKey { tag, seq, leg: LEG_SCATTER, from: rank, to: first + j },
+                    vec![(j, full[o..o + len].to_vec())],
+                );
+                acct.sent += 4 * len;
+                acct.legs += 1;
+            }
+            let (o, len) = spans[0];
+            full[o..o + len].to_vec()
+        } else {
+            let mut msg =
+                self.mail.take(MsgKey { tag, seq, leg: LEG_SCATTER, from: first, to: rank });
+            acct.received += 4 * spans[l].1;
+            acct.legs += 1;
+            msg.pop().expect("hier scatter payload").1
+        };
+        // intra ring all-gather: local rank l starts with ring chunk
+        // (l + 1) % s (its local span l) and circulates for s−1 steps
+        let next = first + (l + 1) % s;
+        let prev = first + (l + s - 1) % s;
+        let mut have: Vec<Option<Vec<f32>>> = (0..s).map(|_| None).collect();
+        have[(l + 1) % s] = Some(own);
+        for t in 0..s - 1 {
+            let c_send = (l + 1 + s - t) % s;
+            let payload = have[c_send].clone().expect("hier all-gather invariant");
+            let (_, send_len) = chunk_span(c_send);
+            self.mail.post(
+                MsgKey { tag, seq, leg: LEG_AG + t as u32, from: rank, to: next },
+                vec![(c_send, payload)],
+            );
+            acct.sent += 4 * send_len;
+            acct.legs += 1;
+            let c_recv = (l + s - t) % s;
+            let (_, recv_len) = chunk_span(c_recv);
+            let mut msg =
+                self.mail.take(MsgKey { tag, seq, leg: LEG_AG + t as u32, from: prev, to: rank });
+            let (cid, chunk) = msg.pop().expect("hier all-gather payload");
+            assert_eq!(cid, c_recv, "hier all-gather chunk id mismatch");
+            have[c_recv] = Some(chunk);
+            acct.received += 4 * recv_len;
+            acct.legs += 1;
+        }
+        for (k, chunk) in have.iter().enumerate() {
+            let (o, len) = chunk_span(k);
+            data[o..o + len].copy_from_slice(chunk.as_ref().expect("all chunks gathered"));
+        }
+    }
+
+    /// The shared up path of all-reduce and reduce-scatter: intra ring
+    /// reduce-scatter, span gather to the leader, inter tree reduce.
+    /// Returns the folded full mean at the root, `None` elsewhere.
+    fn reduce_to_root(
+        &self,
+        rank: usize,
+        tag: u64,
+        seq: u64,
+        data: &[f32],
+        acct: &mut Acct,
+    ) -> Option<Vec<f32>> {
+        let (g, _, _, _) = self.node_info(rank);
+        let n = data.len();
+        let carry = self.intra_rs(rank, tag, seq, data, acct);
+        let node_payload = self.gather_to_leader(rank, tag, seq, carry, n, acct)?;
+        if !self.topo.multi_node() {
+            return Some(mean_in_rank_order(self.topo.world, n, &node_payload));
+        }
+        let all = self.inter_reduce(g, rank, tag, seq, node_payload, n, acct)?;
+        Some(mean_in_rank_order(self.topo.world, n, &all))
+    }
+}
+
+impl Communicator for HierComm {
+    fn world(&self) -> usize {
+        self.topo.world
+    }
+
+    fn all_reduce_mean(&self, rank: usize, tag: u64, data: &mut [f32]) {
+        let t0 = Instant::now();
+        let w = self.topo.world;
+        assert!(rank < w, "rank {rank} out of range");
+        if w == 1 {
+            self.stats.record(0, 0, 0, t0);
+            return;
+        }
+        let seq = self.mail.next_seq(rank, tag);
+        let mut acct = Acct::default();
+        let (g, first, _, _) = self.node_info(rank);
+        let n = data.len();
+        let folded = self.reduce_to_root(rank, tag, seq, data, &mut acct);
+        // leaders get the result through the inter tree (or already
+        // hold it at one node); members through the scatter + ring AG
+        let result = if rank == first && self.topo.multi_node() {
+            Some(self.inter_bcast(g, rank, tag, seq, folded, n, &mut acct))
+        } else {
+            folded
+        };
+        self.scatter_and_ag(rank, tag, seq, result, data, &mut acct);
+        self.stats.record(acct.sent, acct.received, acct.legs, t0);
+    }
+
+    fn reduce_scatter_mean_spans(
+        &self,
+        rank: usize,
+        tag: u64,
+        data: &mut [f32],
+        spans: &[(usize, usize)],
+    ) {
+        let t0 = Instant::now();
+        let w = self.topo.world;
+        assert!(rank < w, "rank {rank} out of range");
+        assert_spans_tile(spans, w, data.len());
+        if w == 1 {
+            self.stats.record(0, 0, 0, t0);
+            return;
+        }
+        let seq = self.mail.next_seq(rank, tag);
+        let mut acct = Acct::default();
+        let (g, first, s, _) = self.node_info(rank);
+        let folded = self.reduce_to_root(rank, tag, seq, data, &mut acct);
+        let (own_off, own_len) = spans[rank];
+        // node region: contiguous union of the node members' spans
+        let region_off = spans[first].0;
+        let region_len: usize = spans[first..first + s].iter().map(|x| x.1).sum();
+        if rank == first {
+            // leaders hold (or receive) their node's region of the mean
+            let (base, vals): (usize, Vec<f32>) = if let Some(full) = folded {
+                // root: scatter every other leader its node region
+                for g2 in 1..self.topo.nodes() {
+                    let first2 = self.topo.node_first(g2);
+                    let off2 = spans[first2].0;
+                    let len2: usize = spans[first2..first2 + self.topo.node_size(g2)]
+                        .iter()
+                        .map(|x| x.1)
+                        .sum();
+                    self.mail.post(
+                        MsgKey { tag, seq, leg: LEG_REGION, from: rank, to: first2 },
+                        vec![(g2, full[off2..off2 + len2].to_vec())],
+                    );
+                    acct.sent += 4 * len2;
+                    acct.legs += 1;
+                }
+                (region_off, full[region_off..region_off + region_len].to_vec())
+            } else {
+                let mut msg =
+                    self.mail.take(MsgKey { tag, seq, leg: LEG_REGION, from: 0, to: rank });
+                acct.received += 4 * region_len;
+                acct.legs += 1;
+                (region_off, msg.pop().expect("hier region payload").1)
+            };
+            // scatter each member its owned span from the region
+            for r in first + 1..first + s {
+                let (o, len) = spans[r];
+                self.mail.post(
+                    MsgKey { tag, seq, leg: LEG_SCATTER, from: rank, to: r },
+                    vec![(r, vals[o - base..o - base + len].to_vec())],
+                );
+                acct.sent += 4 * len;
+                acct.legs += 1;
+            }
+            data[own_off..own_off + own_len]
+                .copy_from_slice(&vals[own_off - base..own_off - base + own_len]);
+        } else {
+            let mut msg =
+                self.mail.take(MsgKey { tag, seq, leg: LEG_SCATTER, from: first, to: rank });
+            acct.received += 4 * own_len;
+            acct.legs += 1;
+            data[own_off..own_off + own_len]
+                .copy_from_slice(&msg.pop().expect("hier span payload").1);
+        }
+        self.stats.record(acct.sent, acct.received, acct.legs, t0);
+    }
+
+    fn all_gather_spans(&self, rank: usize, tag: u64, data: &mut [f32], spans: &[(usize, usize)]) {
+        let t0 = Instant::now();
+        let w = self.topo.world;
+        assert!(rank < w, "rank {rank} out of range");
+        assert_spans_tile(spans, w, data.len());
+        if w == 1 {
+            self.stats.record(0, 0, 0, t0);
+            return;
+        }
+        let seq = self.mail.next_seq(rank, tag);
+        let mut acct = Acct::default();
+        let (g, first, s, _) = self.node_info(rank);
+        let n = data.len();
+        let (own_off, own_len) = spans[rank];
+        // up: members star their spans to the leader, which assembles
+        // the node region; non-root leaders star regions to the root
+        let assembled: Option<Vec<f32>> = if rank == first {
+            let region_off = spans[first].0;
+            let region_len: usize = spans[first..first + s].iter().map(|x| x.1).sum();
+            let mut region = vec![0.0f32; region_len];
+            region[own_off - region_off..own_off - region_off + own_len]
+                .copy_from_slice(&data[own_off..own_off + own_len]);
+            for r in first + 1..first + s {
+                let (o, len) = spans[r];
+                let mut msg =
+                    self.mail.take(MsgKey { tag, seq, leg: LEG_GATHER, from: r, to: rank });
+                region[o - region_off..o - region_off + len]
+                    .copy_from_slice(&msg.pop().expect("hier gather payload").1);
+                acct.received += 4 * len;
+                acct.legs += 1;
+            }
+            if !self.topo.multi_node() {
+                Some(region)
+            } else if rank == 0 {
+                let mut full = vec![0.0f32; n];
+                full[region_off..region_off + region_len].copy_from_slice(&region);
+                for g2 in 1..self.topo.nodes() {
+                    let first2 = self.topo.node_first(g2);
+                    let off2 = spans[first2].0;
+                    let len2: usize = spans[first2..first2 + self.topo.node_size(g2)]
+                        .iter()
+                        .map(|x| x.1)
+                        .sum();
+                    let mut msg =
+                        self.mail.take(MsgKey { tag, seq, leg: LEG_REGION, from: first2, to: 0 });
+                    full[off2..off2 + len2]
+                        .copy_from_slice(&msg.pop().expect("hier region payload").1);
+                    acct.received += 4 * len2;
+                    acct.legs += 1;
+                }
+                Some(full)
+            } else {
+                self.mail.post(
+                    MsgKey { tag, seq, leg: LEG_REGION, from: rank, to: 0 },
+                    vec![(g, region)],
+                );
+                acct.sent += 4 * region_len;
+                acct.legs += 1;
+                None
+            }
+        } else {
+            self.mail.post(
+                MsgKey { tag, seq, leg: LEG_GATHER, from: rank, to: first },
+                vec![(rank, data[own_off..own_off + own_len].to_vec())],
+            );
+            acct.sent += 4 * own_len;
+            acct.legs += 1;
+            None
+        };
+        // down: tree-broadcast the full buffer to leaders, then the
+        // same scatter + intra ring all-gather as the all-reduce
+        let result = if rank == first && self.topo.multi_node() {
+            Some(self.inter_bcast(g, rank, tag, seq, assembled, n, &mut acct))
+        } else {
+            assembled
+        };
+        self.scatter_and_ag(rank, tag, seq, result, data, &mut acct);
+        self.stats.record(acct.sent, acct.received, acct.legs, t0);
+    }
+
+    fn stats(&self) -> &CommStats {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::algo::{wire_all_gather, wire_all_reduce, wire_reduce_scatter, CommAlgo};
+    use super::super::{tags, SharedMemComm};
+    use super::*;
+    use std::sync::atomic::Ordering;
+    use std::sync::{Arc, Mutex};
+
+    /// Drive one collective on every rank of a hier and a flat
+    /// communicator with identical inputs; return (hier, flat) outputs.
+    fn drive(
+        topo: Topology,
+        n: usize,
+        op: impl Fn(&dyn Communicator, usize, &mut [f32]) + Sync,
+    ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let world = topo.world;
+        let hier = Arc::new(HierComm::new(topo));
+        let flat = Arc::new(SharedMemComm::new(world));
+        let outs = Arc::new(Mutex::new(vec![(Vec::new(), Vec::new()); world]));
+        let op = &op;
+        std::thread::scope(|s| {
+            for rank in 0..world {
+                let hier = Arc::clone(&hier);
+                let flat = Arc::clone(&flat);
+                let outs = Arc::clone(&outs);
+                s.spawn(move || {
+                    let base: Vec<f32> =
+                        (0..n).map(|i| (i as f32 + 0.7) * (rank as f32 - 1.3)).collect();
+                    let mut h = base.clone();
+                    op(hier.as_ref(), rank, &mut h);
+                    let mut f = base.clone();
+                    op(flat.as_ref(), rank, &mut f);
+                    outs.lock().unwrap()[rank] = (h, f);
+                });
+            }
+        });
+        let outs = outs.lock().unwrap();
+        let hier_outs = outs.iter().map(|(h, _)| h.clone()).collect();
+        let flat_outs = outs.iter().map(|(_, f)| f.clone()).collect();
+        (hier_outs, flat_outs)
+    }
+
+    fn assert_bit_equal(a: &[Vec<f32>], b: &[Vec<f32>], what: &str) {
+        for (rank, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x.len(), y.len());
+            for (i, (u, v)) in x.iter().zip(y.iter()).enumerate() {
+                assert_eq!(u.to_bits(), v.to_bits(), "{what}: rank {rank} elem {i}: {u} vs {v}");
+            }
+        }
+    }
+
+    /// Every (world, ranks-per-node) grid worth testing at tier 1:
+    /// even, ragged, one-node, and one-rank-per-node shapes.
+    fn grids() -> Vec<Topology> {
+        vec![
+            Topology::two_tier(2, 2),
+            Topology::two_tier(3, 2), // ragged: nodes of 2 + 1
+            Topology::two_tier(4, 2),
+            Topology::two_tier(5, 2), // ragged: 2 + 2 + 1
+            Topology::two_tier(4, 3), // ragged: 3 + 1
+            Topology::two_tier(4, 1), // degenerate: pure leader tree
+            Topology::two_tier(4, 4), // degenerate: single node
+            Topology::flat(3),        // one-tier default
+        ]
+    }
+
+    #[test]
+    fn all_reduce_bit_identical_to_flat_on_every_grid() {
+        for topo in grids() {
+            // n = 10 is not divisible by most node sizes
+            let (h, f) =
+                drive(topo, 10, |c, rank, d| c.all_reduce_mean(rank, tags::grad(0), d));
+            assert_bit_equal(&h, &f, &format!("all_reduce {}", topo.label()));
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_and_all_gather_bit_identical_to_flat() {
+        for topo in grids() {
+            let (h, f) =
+                drive(topo, 11, |c, rank, d| c.reduce_scatter_mean(rank, tags::grad(1), d));
+            assert_bit_equal(&h, &f, &format!("reduce_scatter {}", topo.label()));
+            let (h, f) = drive(topo, 9, |c, rank, d| c.all_gather(rank, tags::value(0), d));
+            assert_bit_equal(&h, &f, &format!("all_gather {}", topo.label()));
+        }
+    }
+
+    /// Measured stats equal the two-tier closed forms exactly, on even
+    /// and ragged grids, for all three collectives.
+    #[test]
+    fn stats_match_two_tier_closed_forms() {
+        for topo in grids() {
+            for (which, n) in [("ar", 10usize), ("rs", 11), ("ag", 9)] {
+                let hier = Arc::new(HierComm::new(topo));
+                let world = topo.world;
+                std::thread::scope(|s| {
+                    for rank in 0..world {
+                        let hier = Arc::clone(&hier);
+                        s.spawn(move || {
+                            let mut d = vec![rank as f32 + 0.5; n];
+                            match which {
+                                "ar" => hier.all_reduce_mean(rank, tags::grad(7), &mut d),
+                                "rs" => hier.reduce_scatter_mean(rank, tags::grad(8), &mut d),
+                                _ => hier.all_gather(rank, tags::value(3), &mut d),
+                            }
+                        });
+                    }
+                });
+                let want = match which {
+                    "ar" => wire_all_reduce(CommAlgo::Hier, n, &topo),
+                    "rs" => wire_reduce_scatter(CommAlgo::Hier, n, &topo),
+                    _ => wire_all_gather(CommAlgo::Hier, n, &topo),
+                };
+                let label = format!("{which} {}", topo.label());
+                assert_eq!(hier.stats.bytes.load(Ordering::Relaxed), want.bytes, "{label}");
+                assert_eq!(hier.stats.hops.load(Ordering::Relaxed), want.hops, "{label}");
+                assert_eq!(hier.stats.rounds.load(Ordering::Relaxed), world as u64, "{label}");
+            }
+        }
+    }
+
+    #[test]
+    fn world_one_is_identity_with_zero_traffic() {
+        let hier = HierComm::new(Topology::two_tier(1, 4));
+        let mut d = vec![3.0f32, -1.0];
+        hier.all_reduce_mean(0, tags::LOSS, &mut d);
+        assert_eq!(d, vec![3.0, -1.0]);
+        assert_eq!(hier.stats.bytes.load(Ordering::Relaxed), 0);
+        assert_eq!(hier.stats.hops.load(Ordering::Relaxed), 0);
+        assert_eq!(hier.stats.rounds.load(Ordering::Relaxed), 1);
+    }
+
+    /// Pool-overlap precondition (same as ring/tree): collectives for
+    /// different tags pair up however worker threads interleave.
+    #[test]
+    fn tags_decouple_concurrent_hier_sessions() {
+        let topo = Topology::two_tier(4, 2);
+        let hier = Arc::new(HierComm::new(topo));
+        let outs = Arc::new(Mutex::new([[0.0f32; 2]; 4]));
+        std::thread::scope(|s| {
+            for rank in 0..4 {
+                for (slot, tag) in [tags::grad(7), tags::grad(8)].into_iter().enumerate() {
+                    let hier = Arc::clone(&hier);
+                    let outs = Arc::clone(&outs);
+                    s.spawn(move || {
+                        let base = if slot == 0 { rank as f32 } else { 10.0 + rank as f32 };
+                        let mut d = [base, base];
+                        hier.all_reduce_mean(rank, tag, &mut d);
+                        outs.lock().unwrap()[rank][slot] = d[0];
+                    });
+                }
+            }
+        });
+        let outs = outs.lock().unwrap();
+        for rank in 0..4 {
+            assert_eq!(outs[rank][0], 1.5, "mean of 0..=3");
+            assert_eq!(outs[rank][1], 11.5, "mean of 10..=13");
+        }
+    }
+}

@@ -38,25 +38,32 @@
 //!
 //! **Topology axis.** [`SharedMemComm`] is the *flat* algorithm: one
 //! staged session per collective, every rank in, every rank out. The
-//! [`RingComm`] and [`TreeComm`] siblings implement the same trait over
-//! genuine hop-by-hop message passing ([`p2p`]) — bandwidth-optimal
-//! chunked ring reduce-scatter + all-gather, and latency-optimal
-//! binomial reduce + broadcast — selected through [`CommAlgo`] /
-//! `DdpConfig::algo` / `--algo`. All three are bit-identical (the
-//! per-origin payloads of [`p2p`] let every algorithm reduce in rank
-//! order), and all three land in the same [`CommStats`], now with a
-//! per-hop `hops` leg counter whose closed forms ([`algo`]) are shared
-//! with `memsim`'s interconnect cost model.
+//! [`RingComm`], [`TreeComm`], and [`HierComm`] siblings implement the
+//! same trait over genuine hop-by-hop message passing ([`p2p`]) —
+//! bandwidth-optimal chunked ring reduce-scatter + all-gather,
+//! latency-optimal binomial reduce + broadcast, and the two-tier
+//! composition (ring within each node of a [`Topology`], tree across
+//! node leaders) — selected through [`CommAlgo`] / `DdpConfig::algo` /
+//! `--algo`. All four are bit-identical (the per-origin payloads of
+//! [`p2p`] let every algorithm reduce in rank order), and all four land
+//! in the same [`CommStats`], with a per-hop `hops` leg counter whose
+//! closed forms ([`algo`]) are shared with `memsim`'s interconnect cost
+//! model. `--algo auto` ([`AlgoSelect::Auto`]) routes each bucket's
+//! tags to the algorithm a memsim-driven plan picked for it ([`plan`]).
 
 pub mod algo;
+pub mod hier;
 pub mod p2p;
+pub mod plan;
 pub mod ring;
 pub mod tree;
 
 pub use algo::{
-    make_comm, wire_all_gather, wire_all_gather_spans, wire_all_reduce, wire_reduce_scatter,
-    wire_reduce_scatter_spans, CommAlgo, WireCost,
+    make_comm, make_comm_shared, wire_all_gather, wire_all_gather_spans, wire_all_reduce,
+    wire_reduce_scatter, wire_reduce_scatter_spans, AlgoSelect, CommAlgo, Topology, WireCost,
 };
+pub use hier::HierComm;
+pub use plan::{MixedComm, StepPlan, UnitPlan};
 pub use ring::RingComm;
 pub use tree::TreeComm;
 
@@ -254,6 +261,20 @@ pub mod tags {
     pub fn state(unit: usize, slot: usize) -> u64 {
         (3u64 << 56) | ((slot as u64) << 40) | unit as u64
     }
+
+    /// The schedulable unit a tag addresses, if any — the routing key of
+    /// mixed-algorithm sessions ([`crate::comm::plan::MixedComm`]). The
+    /// scalar [`LOSS`] / [`NORM`] tags (and any unrecognized namespace)
+    /// return `None` and route to the session's default algorithm.
+    pub fn unit_of(tag: u64) -> Option<usize> {
+        if tag == LOSS || tag == NORM {
+            return None;
+        }
+        match tag >> 56 {
+            1..=5 => Some((tag & ((1u64 << 40) - 1)) as usize),
+            _ => None,
+        }
+    }
 }
 
 /// Collectives over equal-length f32 buffers among a fixed set of ranks.
@@ -324,8 +345,9 @@ pub(crate) fn assert_spans_tile(spans: &[(usize, usize)], world: usize, n: usize
 }
 
 /// Everything the executor needs to participate in collectives: the
-/// communicator, this replica's rank, and which ZeRO shard stage the
-/// run applies to the flat bucket arenas.
+/// communicator, this replica's rank, which ZeRO shard stage the run
+/// applies to the flat bucket arenas, and (under `--algo auto`) the
+/// per-bucket comm plan.
 #[derive(Clone)]
 pub struct CommCtx {
     /// The collective backend shared by all ranks.
@@ -336,6 +358,19 @@ pub struct CommCtx {
     /// the gradient arenas, `Zero3` additionally the value arenas (see
     /// [`ShardStage`]).
     pub stage: ShardStage,
+    /// The planner's per-bucket algorithm + chunk-split choices
+    /// ([`crate::comm::plan`]), when a run uses `--algo auto`. The
+    /// executor reads per-unit chunk caps from it; the communicator
+    /// itself is a [`MixedComm`] routing each unit's tags to its
+    /// planned algorithm. `None` on fixed-algorithm runs.
+    pub plan: Option<Arc<StepPlan>>,
+}
+
+impl CommCtx {
+    /// A fixed-algorithm context (no per-bucket plan).
+    pub fn new(comm: Arc<dyn Communicator>, rank: usize, stage: ShardStage) -> Self {
+        Self { comm, rank, stage, plan: None }
+    }
 }
 
 enum ReduceOp {
@@ -379,12 +414,18 @@ pub struct SharedMemComm {
     world: usize,
     inner: Mutex<Inner>,
     ready: Condvar,
-    stats: CommStats,
+    stats: Arc<CommStats>,
 }
 
 impl SharedMemComm {
     /// A communicator for `world` ranks (threads).
     pub fn new(world: usize) -> Self {
+        Self::with_stats(world, Arc::new(CommStats::default()))
+    }
+
+    /// [`SharedMemComm::new`] recording into an externally shared
+    /// [`CommStats`] (mixed-algorithm sessions).
+    pub fn with_stats(world: usize, stats: Arc<CommStats>) -> Self {
         assert!(world > 0, "communicator needs at least one rank");
         Self {
             world,
@@ -393,7 +434,7 @@ impl SharedMemComm {
                 next_seq: (0..world).map(|_| HashMap::new()).collect(),
             }),
             ready: Condvar::new(),
-            stats: CommStats::default(),
+            stats,
         }
     }
 
@@ -668,6 +709,17 @@ mod tests {
             }
         });
         assert_eq!(comm.stats().rounds.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn tag_unit_decoding_routes_every_namespace() {
+        assert_eq!(tags::unit_of(tags::grad(7)), Some(7));
+        assert_eq!(tags::unit_of(tags::value(3)), Some(3));
+        assert_eq!(tags::unit_of(tags::grad_chunk(5, 9)), Some(5));
+        assert_eq!(tags::unit_of(tags::value_chunk(4, 2)), Some(4));
+        assert_eq!(tags::unit_of(tags::state(6, 1)), Some(6));
+        assert_eq!(tags::unit_of(tags::LOSS), None);
+        assert_eq!(tags::unit_of(tags::NORM), None);
     }
 
     #[test]

@@ -1,0 +1,557 @@
+//! The memsim-driven per-bucket comm planner behind `--algo auto`, and
+//! the [`MixedComm`] that executes its plans.
+//!
+//! A global `--algo` forces every bucket through one collective shape,
+//! but the flat/ring/tree/hier crossover is a function of *bucket size*
+//! and *topology* (`memsim::Interconnect::collective_s` prices it): on
+//! a two-tier cluster the scalar loss reduce wants flat's two legs,
+//! kilobyte buckets want the hierarchical composition, and multi-
+//! megabyte buckets want the chunked ring. [`plan_units`] evaluates the
+//! same closed forms `memsim::simulate_ddp` prices against the store's
+//! *actual* bucket partition and picks, per bucket, the algorithm plus
+//! the chunk split that minimizes the predicted backward-fusion
+//! drain-point exposure (Yi et al. 2022 plan fusion granularity jointly
+//! with the comm schedule; Xu et al. 2020 pick the sharded-update comm
+//! pattern per topology — this planner does both, per bucket).
+//!
+//! **Greedy is exact here.** Units drain in reverse index order at the
+//! points `memsim::drain_point` defines, and a unit's collective starts
+//! at `max(drain, previous finish)`. The final exposure is monotone in
+//! each unit's finish, and a unit's finish is monotone in the previous
+//! finish — so choosing, in drain order, the `(algo, chunk)` pair that
+//! minimizes this unit's finish dominates *every* fixed assignment,
+//! including all four uniform ones. `rust/tests/integration_hier_plan.rs`
+//! pins that guarantee against `memsim::simulate_ddp_with_algos` on two
+//! Table-2 machines.
+//!
+//! **Execution.** [`MixedComm`] implements [`Communicator`] by routing
+//! each collective to the algorithm planned for its schedulable unit —
+//! decoded from the tag ([`tags::unit_of`]), so the executor's schedule
+//! arms need no per-algo knowledge — while every inner communicator
+//! records into one shared [`CommStats`] (the one-accounting-path
+//! invariant survives mixing). Plans are deterministic functions of
+//! `(units, interconnect, stage, backward estimate, workers)`, so every
+//! rank computes the same plan and the tag-matched sessions pair up.
+
+use super::algo::{make_comm_shared, CommAlgo, Topology};
+use super::{tags, CommStats, Communicator, ShardStage};
+use crate::memsim::{drain_point, CollOp, Interconnect};
+use crate::optim::bucket::partition_by_bytes;
+use std::sync::Arc;
+
+/// The planner's choice for one schedulable unit (bucket).
+#[derive(Debug, Clone)]
+pub struct UnitPlan {
+    /// Unit index (the collective tag namespace).
+    pub unit: usize,
+    /// Flat element count of the unit's arena.
+    pub elems: usize,
+    /// Collective algorithm every one of this unit's collectives uses.
+    pub algo: CommAlgo,
+    /// `Some(cap)` splits the unit's backward-fusion drain job into
+    /// per-chunk collectives of at most `cap` elements (the executor's
+    /// `comm_chunk_bytes` machinery, but per bucket); `None` keeps the
+    /// whole-bucket collective.
+    pub chunk_elems: Option<usize>,
+    /// Predicted drain-time comm seconds for this unit under the choice.
+    pub pred_comm_s: f64,
+}
+
+/// A full per-bucket comm plan: what `--algo auto` resolves to.
+#[derive(Debug, Clone)]
+pub struct StepPlan {
+    /// The topology the plan was priced against.
+    pub topo: Topology,
+    /// Shard stage the collectives serve (decides AR vs RS+AG pricing).
+    pub stage: ShardStage,
+    /// Per-unit choices, in unit order.
+    pub units: Vec<UnitPlan>,
+    /// Algorithm for unit-less collectives (loss / norm reduces) and
+    /// units beyond the planned range.
+    pub default_algo: CommAlgo,
+    /// Predicted drain-point comm exposure beyond backward, seconds
+    /// (the objective the greedy minimizes; excludes the loss reduce).
+    pub pred_exposed_s: f64,
+    /// Predicted comm seconds hidden behind backward.
+    pub pred_hidden_s: f64,
+    /// The bucket cap that produced `units` (display only).
+    pub bucket_cap_bytes: Option<usize>,
+}
+
+impl StepPlan {
+    /// Per-unit algorithm assignment, in unit order — the shape
+    /// `memsim::simulate_ddp_with_algos` evaluates.
+    pub fn algos(&self) -> Vec<CommAlgo> {
+        self.units.iter().map(|u| u.algo).collect()
+    }
+
+    /// The planned chunk cap of `unit` (`None`: whole-bucket job, or
+    /// unit outside the planned range).
+    pub fn chunk_elems(&self, unit: usize) -> Option<usize> {
+        self.units.get(unit).and_then(|u| u.chunk_elems)
+    }
+
+    /// Human-readable plan rows for the CLI / bench tables.
+    pub fn table(&self) -> String {
+        let mut out = String::from("  unit     elems  algo  chunk      pred ms\n");
+        for u in &self.units {
+            let chunk = match u.chunk_elems {
+                Some(c) => format!("{c}"),
+                None => "-".to_string(),
+            };
+            out.push_str(&format!(
+                "  {:>4}  {:>8}  {:<5} {:>6}  {:>9.4}\n",
+                u.unit,
+                u.elems,
+                u.algo.label(),
+                chunk,
+                u.pred_comm_s * 1e3
+            ));
+        }
+        out.push_str(&format!(
+            "  predicted drain exposure {:.4} ms, hidden {:.4} ms ({} topology)\n",
+            self.pred_exposed_s * 1e3,
+            self.pred_hidden_s * 1e3,
+            self.topo.label()
+        ));
+        out
+    }
+}
+
+/// Everything [`plan_units`] prices against.
+#[derive(Clone, Copy)]
+pub struct PlanInputs<'a> {
+    /// The (possibly two-tier) interconnect model — a machine preset,
+    /// the calibrated `shared_mem` fit, or a cluster layout.
+    pub ic: &'a Interconnect,
+    /// Shard stage of the run (AR vs RS+AG pricing per unit).
+    pub stage: ShardStage,
+    /// Backward seconds available for drain-point overlap. 0 prices a
+    /// serialized schedule (baseline / forward-fusion, or a live run
+    /// with no compute estimate) — the greedy then simply minimizes
+    /// each unit's collective time, which is still never worse than any
+    /// uniform assignment.
+    pub backward_s: f64,
+    /// Overlap worker threads per replica: chunk splits assume up to
+    /// this many of a unit's chunk collectives run concurrently. 0 or 1
+    /// disables chunk planning.
+    pub workers: usize,
+    /// The bucket cap that produced the unit list (recorded on the
+    /// plan for display).
+    pub bucket_cap_bytes: Option<usize>,
+}
+
+/// Drain-time collective seconds of one unit of `n` elements: AR
+/// replicated, RS+AG sharded — except ZeRO-3, whose value gather
+/// belongs to the next forward (`memsim`'s stage-aware placement), so
+/// only the RS competes for the drain window.
+fn unit_comm_s(ic: &Interconnect, algo: CommAlgo, stage: ShardStage, n: usize) -> f64 {
+    if stage.shards_values() {
+        ic.collective_s(algo, CollOp::ReduceScatter, n)
+    } else if stage.sharded() {
+        ic.collective_s(algo, CollOp::ReduceScatter, n)
+            + ic.collective_s(algo, CollOp::AllGather, n)
+    } else {
+        ic.collective_s(algo, CollOp::AllReduce, n)
+    }
+}
+
+/// Candidate chunk splits for a unit of `n` elements with `workers`
+/// overlap threads: powers of two up to the worker count, floored so a
+/// chunk never drops below 1024 elements (4 KiB — below that the split
+/// is pure latency overhead on every link class).
+fn chunk_splits(n: usize, workers: usize) -> Vec<usize> {
+    let mut out = vec![1usize];
+    if workers >= 2 {
+        for c in [2usize, 4, 8] {
+            if c <= workers && (n + c - 1) / c >= 1024 {
+                out.push(c);
+            }
+        }
+    }
+    out
+}
+
+/// Plan the collective algorithm + chunk split for every unit: the
+/// greedy drain-order pass described in the module docs. Deterministic
+/// in its inputs — every rank derives the identical plan.
+pub fn plan_units(units: &[usize], inp: &PlanInputs) -> StepPlan {
+    let topo = inp.ic.topology();
+    let candidates: Vec<CommAlgo> = if topo.multi_node() {
+        CommAlgo::ALL.to_vec()
+    } else {
+        CommAlgo::ONE_TIER.to_vec()
+    };
+    let u = units.len();
+    let bwd = inp.backward_s.max(0.0);
+    let mut chosen: Vec<Option<UnitPlan>> = (0..u).map(|_| None).collect();
+    let mut finish = 0.0f64;
+    let mut hidden = 0.0f64;
+    for i in (0..u).rev() {
+        let n = units[i];
+        let drain = drain_point(bwd, u, i);
+        let start = drain.max(finish);
+        let mut best: Option<(f64, CommAlgo, Option<usize>)> = None;
+        for &algo in &candidates {
+            for parts in chunk_splits(n, inp.workers) {
+                let chunk = (n + parts - 1) / parts;
+                let workers = inp.workers.max(1);
+                let waves = (((parts + workers - 1) / workers).max(1)) as f64;
+                let t = if parts == 1 {
+                    unit_comm_s(inp.ic, algo, inp.stage, n)
+                } else {
+                    waves * unit_comm_s(inp.ic, algo, inp.stage, chunk)
+                };
+                let better = match &best {
+                    None => true,
+                    Some((bt, _, _)) => t < *bt,
+                };
+                if better {
+                    best = Some((t, algo, if parts == 1 { None } else { Some(chunk) }));
+                }
+            }
+        }
+        let (t, algo, chunk_elems) = best.expect("at least one candidate");
+        let fin = start + t;
+        hidden += bwd.min(fin) - bwd.min(start);
+        finish = fin;
+        chosen[i] = Some(UnitPlan { unit: i, elems: n, algo, chunk_elems, pred_comm_s: t });
+    }
+    StepPlan {
+        topo,
+        stage: inp.stage,
+        units: chosen.into_iter().map(|c| c.expect("all units planned")).collect(),
+        default_algo: default_scalar_algo(inp.ic),
+        pred_exposed_s: (finish - bwd).max(0.0),
+        pred_hidden_s: hidden,
+        bucket_cap_bytes: inp.bucket_cap_bytes,
+    }
+}
+
+/// The algorithm for scalar (unit-less) collectives — the loss and
+/// norm reduces: whatever the interconnect prices cheapest for one
+/// element (flat's two legs on every preset, but derived, not assumed).
+fn default_scalar_algo(ic: &Interconnect) -> CommAlgo {
+    let candidates = if ic.topology().multi_node() {
+        CommAlgo::ALL.to_vec()
+    } else {
+        CommAlgo::ONE_TIER.to_vec()
+    };
+    candidates
+        .into_iter()
+        .min_by(|a, b| {
+            let ta = ic.collective_s(*a, CollOp::AllReduce, 1);
+            let tb = ic.collective_s(*b, CollOp::AllReduce, 1);
+            ta.partial_cmp(&tb).expect("finite collective times")
+        })
+        .expect("non-empty candidates")
+}
+
+/// Plan across candidate bucket caps as well: partition the parameter
+/// tensor lengths with each cap (`partition_by_bytes` — the exact rule
+/// `ParamStore::bucketize` applies), plan each partition, and keep the
+/// cap whose plan predicts the least drain exposure (ties to the
+/// smaller total comm). Returns `(winning cap, its plan)`.
+pub fn plan_bucket_caps(
+    lens: &[usize],
+    caps: &[usize],
+    inp: &PlanInputs,
+) -> (usize, StepPlan) {
+    assert!(!caps.is_empty(), "plan_bucket_caps: need at least one candidate cap");
+    let mut best: Option<(usize, StepPlan)> = None;
+    for &cap in caps {
+        let units: Vec<usize> = partition_by_bytes(lens, cap)
+            .iter()
+            .map(|group| group.iter().map(|i| lens[*i]).sum())
+            .collect();
+        let inputs = PlanInputs { bucket_cap_bytes: Some(cap), ..*inp };
+        let plan = plan_units(&units, &inputs);
+        let better = match &best {
+            None => true,
+            Some((_, b)) => {
+                let (pe, be) = (plan.pred_exposed_s, b.pred_exposed_s);
+                pe < be
+                    || (pe == be
+                        && plan.units.iter().map(|u| u.pred_comm_s).sum::<f64>()
+                            < b.units.iter().map(|u| u.pred_comm_s).sum::<f64>())
+            }
+        };
+        if better {
+            best = Some((cap, plan));
+        }
+    }
+    best.expect("at least one cap evaluated")
+}
+
+/// A [`Communicator`] that routes each collective to the algorithm the
+/// plan picked for its unit. All inner communicators share one
+/// [`CommStats`], so `DdpReport`'s totals stay a single accounting
+/// path; unit-less tags (loss, norm) and units beyond the plan route
+/// to the plan's default algorithm.
+pub struct MixedComm {
+    world: usize,
+    default_algo: CommAlgo,
+    unit_algo: Vec<CommAlgo>,
+    by_algo: Vec<(CommAlgo, Arc<dyn Communicator>)>,
+    stats: Arc<CommStats>,
+}
+
+impl MixedComm {
+    /// A mixed session over `topo` with `unit_algo[i]` serving unit `i`
+    /// and `default_algo` serving scalar tags. Only the algorithms that
+    /// actually appear get a backing communicator.
+    pub fn new(topo: &Topology, unit_algo: Vec<CommAlgo>, default_algo: CommAlgo) -> Self {
+        let stats = Arc::new(CommStats::default());
+        let mut needed: Vec<CommAlgo> = vec![default_algo];
+        for a in &unit_algo {
+            if !needed.contains(a) {
+                needed.push(*a);
+            }
+        }
+        let by_algo = needed
+            .into_iter()
+            .map(|a| (a, make_comm_shared(a, topo, Arc::clone(&stats))))
+            .collect();
+        Self { world: topo.world, default_algo, unit_algo, by_algo, stats }
+    }
+
+    /// The session a plan resolves to.
+    pub fn from_plan(plan: &StepPlan) -> Self {
+        Self::new(&plan.topo, plan.algos(), plan.default_algo)
+    }
+
+    fn route(&self, tag: u64) -> &dyn Communicator {
+        let algo = tags::unit_of(tag)
+            .and_then(|u| self.unit_algo.get(u).copied())
+            .unwrap_or(self.default_algo);
+        self.by_algo
+            .iter()
+            .find(|(a, _)| *a == algo)
+            .map(|(_, c)| c.as_ref())
+            .expect("every routed algorithm has a backing communicator")
+    }
+}
+
+impl Communicator for MixedComm {
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn all_reduce_mean(&self, rank: usize, tag: u64, data: &mut [f32]) {
+        self.route(tag).all_reduce_mean(rank, tag, data);
+    }
+
+    fn reduce_scatter_mean_spans(
+        &self,
+        rank: usize,
+        tag: u64,
+        data: &mut [f32],
+        spans: &[(usize, usize)],
+    ) {
+        self.route(tag).reduce_scatter_mean_spans(rank, tag, data, spans);
+    }
+
+    fn all_gather_spans(&self, rank: usize, tag: u64, data: &mut [f32], spans: &[(usize, usize)]) {
+        self.route(tag).all_gather_spans(rank, tag, data, spans);
+    }
+
+    fn stats(&self) -> &CommStats {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::algo::{wire_all_reduce, AlgoSelect};
+    use super::*;
+    use crate::memsim::drain_pipeline;
+    use crate::memsim::machines::{clustered, pcie_x16, shared_mem};
+    use std::sync::atomic::Ordering;
+    use std::sync::Mutex;
+
+    #[test]
+    fn planner_picks_per_size_crossovers_on_a_cluster() {
+        // 8 ranks in nodes of 4 over the standard uplink: the scalar
+        // loss wants flat, kilobyte units the hier band, huge units the
+        // chunked ring (crossovers pinned in memsim's pricing tests)
+        let ic = clustered(&pcie_x16(1), 8, 4);
+        let units = vec![64usize, 1 << 16, 32 << 20];
+        let inp = PlanInputs {
+            ic: &ic,
+            stage: ShardStage::None,
+            backward_s: 0.0,
+            workers: 0,
+            bucket_cap_bytes: None,
+        };
+        let plan = plan_units(&units, &inp);
+        assert_eq!(plan.units[0].algo, CommAlgo::Flat, "tiny unit: flat's two legs");
+        assert_eq!(plan.units[1].algo, CommAlgo::Hier, "mid unit: two-tier composition");
+        assert_eq!(plan.units[2].algo, CommAlgo::Ring, "huge unit: chunked ring");
+        assert_eq!(plan.default_algo, CommAlgo::Flat, "scalar reduces: flat");
+        assert!(plan.units.iter().all(|u| u.pred_comm_s > 0.0));
+    }
+
+    /// The exactness claim the acceptance criterion rests on: for every
+    /// uniform assignment, the greedy plan's predicted drain exposure is
+    /// no worse — with and without an overlap window.
+    #[test]
+    fn plan_never_predicted_slower_than_any_uniform_assignment() {
+        let ic = clustered(&pcie_x16(1), 6, 2);
+        let units = vec![256usize, 1 << 14, 1 << 18, 1 << 12, 1 << 20];
+        for stage in [ShardStage::None, ShardStage::Zero1, ShardStage::Zero3] {
+            for backward_s in [0.0, 1e-4, 5e-3] {
+                let inp = PlanInputs {
+                    ic: &ic,
+                    stage,
+                    backward_s,
+                    workers: 0,
+                    bucket_cap_bytes: None,
+                };
+                let plan = plan_units(&units, &inp);
+                for algo in CommAlgo::ALL {
+                    let t: Vec<f64> = units
+                        .iter()
+                        .map(|n| unit_comm_s(&ic, algo, stage, *n))
+                        .collect();
+                    let (finish, _) = drain_pipeline(backward_s, &t);
+                    let exposed = (finish - backward_s).max(0.0);
+                    assert!(
+                        plan.pred_exposed_s <= exposed + 1e-12,
+                        "{stage:?} bwd={backward_s}: plan {:.3e} vs uniform {} {:.3e}",
+                        plan.pred_exposed_s,
+                        algo.label(),
+                        exposed
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_splits_respect_workers_and_floor() {
+        assert_eq!(chunk_splits(1 << 20, 0), vec![1]);
+        assert_eq!(chunk_splits(1 << 20, 1), vec![1]);
+        assert_eq!(chunk_splits(1 << 20, 2), vec![1, 2]);
+        assert_eq!(chunk_splits(1 << 20, 8), vec![1, 2, 4, 8]);
+        // 2048 elems: splitting by 4 would drop under the 1024 floor
+        assert_eq!(chunk_splits(2048, 8), vec![1, 2]);
+        assert_eq!(chunk_splits(256, 8), vec![1]);
+    }
+
+    #[test]
+    fn planner_uses_chunk_splits_for_big_units_with_workers() {
+        let ic = shared_mem(4);
+        let units = vec![1 << 20];
+        let with = PlanInputs {
+            ic: &ic,
+            stage: ShardStage::None,
+            backward_s: 0.0,
+            workers: 4,
+            bucket_cap_bytes: None,
+        };
+        let plan = plan_units(&units, &with);
+        assert!(
+            plan.units[0].chunk_elems.is_some(),
+            "a 4 MiB bucket with 4 workers should split"
+        );
+        let without = PlanInputs { workers: 0, ..with };
+        let plan = plan_units(&units, &without);
+        assert!(plan.units[0].chunk_elems.is_none(), "no workers, no split");
+    }
+
+    #[test]
+    fn plan_bucket_caps_returns_a_covering_partition() {
+        let ic = shared_mem(4);
+        let lens = vec![256usize; 12]; // 12 KiB of parameters
+        let inp = PlanInputs {
+            ic: &ic,
+            stage: ShardStage::None,
+            backward_s: 1e-4,
+            workers: 0,
+            bucket_cap_bytes: None,
+        };
+        let (cap, plan) = plan_bucket_caps(&lens, &[1 << 10, 1 << 12, 1 << 20], &inp);
+        assert!([1usize << 10, 1 << 12, 1 << 20].contains(&cap));
+        let covered: usize = plan.units.iter().map(|u| u.elems).sum();
+        assert_eq!(covered, 12 * 256, "every parameter lands in a planned unit");
+        assert_eq!(plan.bucket_cap_bytes, Some(cap));
+    }
+
+    /// A mixed session stays correct and keeps one accounting path:
+    /// two units planned onto different algorithms, driven from every
+    /// rank — results bit-identical to flat, stats equal to the sum of
+    /// the per-algorithm closed forms.
+    #[test]
+    fn mixed_comm_routes_by_unit_and_aggregates_stats() {
+        use super::super::SharedMemComm;
+        let world = 3;
+        let topo = Topology::flat(world);
+        let mixed = Arc::new(MixedComm::new(
+            &topo,
+            vec![CommAlgo::Ring, CommAlgo::Tree],
+            CommAlgo::Flat,
+        ));
+        let flat = Arc::new(SharedMemComm::new(world));
+        let n0 = 10;
+        let n1 = 7;
+        let outs = Arc::new(Mutex::new(vec![(Vec::new(), Vec::new()); world]));
+        std::thread::scope(|s| {
+            for rank in 0..world {
+                let mixed = Arc::clone(&mixed);
+                let flat = Arc::clone(&flat);
+                let outs = Arc::clone(&outs);
+                s.spawn(move || {
+                    let base0: Vec<f32> = (0..n0).map(|i| (i * (rank + 1)) as f32).collect();
+                    let base1: Vec<f32> = (0..n1).map(|i| i as f32 - rank as f32).collect();
+                    let mut a = base0.clone();
+                    mixed.all_reduce_mean(rank, tags::grad(0), &mut a);
+                    let mut b = base1.clone();
+                    mixed.all_reduce_mean(rank, tags::grad(1), &mut b);
+                    let mut l = [rank as f32];
+                    mixed.all_reduce_mean(rank, tags::LOSS, &mut l);
+                    let mut fa = base0.clone();
+                    flat.all_reduce_mean(rank, tags::grad(0), &mut fa);
+                    let mut fb = base1.clone();
+                    flat.all_reduce_mean(rank, tags::grad(1), &mut fb);
+                    a.extend_from_slice(&b);
+                    fa.extend_from_slice(&fb);
+                    outs.lock().unwrap()[rank] = (a, fa);
+                });
+            }
+        });
+        let outs = outs.lock().unwrap();
+        for (rank, (m, f)) in outs.iter().enumerate() {
+            for (i, (x, y)) in m.iter().zip(f.iter()).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "rank {rank} elem {i}");
+            }
+        }
+        let want = {
+            let mut w = wire_all_reduce(CommAlgo::Ring, n0, &topo);
+            w += wire_all_reduce(CommAlgo::Tree, n1, &topo);
+            w += wire_all_reduce(CommAlgo::Flat, 1, &topo);
+            w
+        };
+        assert_eq!(mixed.stats().bytes.load(Ordering::Relaxed), want.bytes);
+        assert_eq!(mixed.stats().hops.load(Ordering::Relaxed), want.hops);
+    }
+
+    #[test]
+    fn algo_select_round_trips_through_plan_labels() {
+        assert_eq!(AlgoSelect::Auto.label(), "auto");
+        let ic = shared_mem(2);
+        let plan = plan_units(
+            &[128],
+            &PlanInputs {
+                ic: &ic,
+                stage: ShardStage::None,
+                backward_s: 0.0,
+                workers: 0,
+                bucket_cap_bytes: Some(1 << 20),
+            },
+        );
+        assert!(plan.table().contains("unit"), "table renders");
+        assert_eq!(StepPlan::algos(&plan).len(), 1);
+        assert_eq!(plan.chunk_elems(0), None);
+        assert_eq!(plan.chunk_elems(9), None, "out of range is None");
+    }
+}

@@ -34,6 +34,7 @@
 use super::p2p::{Acct, Mailbox, MsgKey, Payload};
 use super::{assert_spans_tile, mean_in_rank_order, CommStats, Communicator};
 use crate::tensor::flat::shard_partition;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Ring [`Communicator`]: reduce-scatter + all-gather over chunked
@@ -41,14 +42,20 @@ use std::time::Instant;
 pub struct RingComm {
     world: usize,
     mail: Mailbox,
-    stats: CommStats,
+    stats: Arc<CommStats>,
 }
 
 impl RingComm {
     /// A ring communicator for `world` ranks.
     pub fn new(world: usize) -> Self {
+        Self::with_stats(world, Arc::new(CommStats::default()))
+    }
+
+    /// [`RingComm::new`] recording into an externally shared
+    /// [`CommStats`] (mixed-algorithm sessions).
+    pub fn with_stats(world: usize, stats: Arc<CommStats>) -> Self {
         assert!(world > 0, "communicator needs at least one rank");
-        Self { world, mail: Mailbox::new(world), stats: CommStats::default() }
+        Self { world, mail: Mailbox::new(world), stats }
     }
 
     /// Span of ring-chunk `k` under the ownership partition `spans`.
@@ -231,7 +238,9 @@ impl Communicator for RingComm {
 
 #[cfg(test)]
 mod tests {
-    use super::super::algo::{wire_all_gather, wire_all_reduce, wire_reduce_scatter, CommAlgo};
+    use super::super::algo::{
+        wire_all_gather, wire_all_reduce, wire_reduce_scatter, CommAlgo, Topology,
+    };
     use super::super::{tags, SharedMemComm};
     use super::*;
     use std::sync::atomic::Ordering;
@@ -324,7 +333,7 @@ mod tests {
                     });
                 }
             });
-            let want = wire_all_reduce(CommAlgo::Ring, n, world);
+            let want = wire_all_reduce(CommAlgo::Ring, n, &Topology::flat(world));
             assert_eq!(ring.stats.bytes.load(Ordering::Relaxed), want.bytes, "w={world} n={n}");
             assert_eq!(ring.stats.hops.load(Ordering::Relaxed), want.hops, "w={world} n={n}");
             assert_eq!(ring.stats.rounds.load(Ordering::Relaxed), world as u64);
@@ -339,8 +348,8 @@ mod tests {
         let world = 3;
         let n = 10;
         for (which, want) in [
-            ("rs", wire_reduce_scatter(CommAlgo::Ring, n, world)),
-            ("ag", wire_all_gather(CommAlgo::Ring, n, world)),
+            ("rs", wire_reduce_scatter(CommAlgo::Ring, n, &Topology::flat(world))),
+            ("ag", wire_all_gather(CommAlgo::Ring, n, &Topology::flat(world))),
         ] {
             let ring = Arc::new(RingComm::new(world));
             std::thread::scope(|s| {

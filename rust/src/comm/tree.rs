@@ -19,6 +19,7 @@
 
 use super::p2p::{Acct, Mailbox, MsgKey, Payload};
 use super::{assert_spans_tile, mean_in_rank_order, CommStats, Communicator};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Binomial-tree [`Communicator`]: ⌈log₂W⌉ reduce rounds to rank 0 plus
@@ -26,7 +27,7 @@ use std::time::Instant;
 pub struct TreeComm {
     world: usize,
     mail: Mailbox,
-    stats: CommStats,
+    stats: Arc<CommStats>,
 }
 
 /// ⌈log₂ world⌉ — the number of reduce (and broadcast) rounds.
@@ -37,8 +38,14 @@ pub(crate) fn tree_rounds(world: usize) -> u32 {
 impl TreeComm {
     /// A binomial-tree communicator for `world` ranks.
     pub fn new(world: usize) -> Self {
+        Self::with_stats(world, Arc::new(CommStats::default()))
+    }
+
+    /// [`TreeComm::new`] recording into an externally shared
+    /// [`CommStats`] (mixed-algorithm sessions).
+    pub fn with_stats(world: usize, stats: Arc<CommStats>) -> Self {
         assert!(world > 0, "communicator needs at least one rank");
-        Self { world, mail: Mailbox::new(world), stats: CommStats::default() }
+        Self { world, mail: Mailbox::new(world), stats }
     }
 
     /// Binomial reduce to rank 0: non-roots post their accumulated
@@ -245,7 +252,9 @@ impl Communicator for TreeComm {
 
 #[cfg(test)]
 mod tests {
-    use super::super::algo::{wire_all_gather, wire_all_reduce, wire_reduce_scatter, CommAlgo};
+    use super::super::algo::{
+        wire_all_gather, wire_all_reduce, wire_reduce_scatter, CommAlgo, Topology,
+    };
     use super::super::{tags, SharedMemComm};
     use super::*;
     use std::sync::atomic::Ordering;
@@ -337,7 +346,7 @@ mod tests {
                     });
                 }
             });
-            let want = wire_all_reduce(CommAlgo::Tree, n, world);
+            let want = wire_all_reduce(CommAlgo::Tree, n, &Topology::flat(world));
             assert_eq!(tree.stats.bytes.load(Ordering::Relaxed), want.bytes, "w={world} n={n}");
             assert_eq!(tree.stats.hops.load(Ordering::Relaxed), want.hops, "w={world} n={n}");
             assert_eq!(tree.stats.rounds.load(Ordering::Relaxed), world as u64);
@@ -351,8 +360,8 @@ mod tests {
         let world = 4;
         let n = 10;
         for (which, want) in [
-            ("rs", wire_reduce_scatter(CommAlgo::Tree, n, world)),
-            ("ag", wire_all_gather(CommAlgo::Tree, n, world)),
+            ("rs", wire_reduce_scatter(CommAlgo::Tree, n, &Topology::flat(world))),
+            ("ag", wire_all_gather(CommAlgo::Tree, n, &Topology::flat(world))),
         ] {
             let tree = Arc::new(TreeComm::new(world));
             std::thread::scope(|s| {

@@ -52,16 +52,25 @@
 //! concatenated batch (asserted in `rust/tests/integration_ddp.rs`).
 //!
 //! [`DdpConfig::algo`] picks the collective topology — flat staged
-//! sessions, chunked ring, or binomial tree ([`crate::comm::CommAlgo`]).
-//! The choice never changes the math (every algorithm reduces in rank
-//! order), only the wire bytes, hop count, and blocked time reported
-//! here and predicted by `memsim::simulate_ddp`
-//! (`rust/tests/integration_comm_model.rs` pins predicted ⇄ measured).
+//! sessions, chunked ring, binomial tree, or the two-tier hierarchical
+//! composition over [`DdpConfig::ranks_per_node`]
+//! ([`crate::comm::CommAlgo`]) — or `Auto`, which resolves a
+//! memsim-driven per-bucket plan ([`crate::comm::plan`]) and runs a
+//! mixed-algorithm session ([`MixedComm`]), with the executor reading
+//! per-bucket chunk splits off the same plan. The choice never changes
+//! the math (every algorithm reduces in rank order), only the wire
+//! bytes, hop count, and blocked time reported here and predicted by
+//! `memsim::simulate_ddp` (`rust/tests/integration_comm_model.rs` and
+//! `rust/tests/integration_hier_plan.rs` pin predicted ⇄ measured).
 
 use crate::checkpoint;
-use crate::comm::{make_comm, tags, CommAlgo, CommCtx, Communicator, ShardStage};
+use crate::comm::plan::{plan_units, MixedComm, PlanInputs, StepPlan};
+use crate::comm::{make_comm, tags, AlgoSelect, CommCtx, Communicator, ShardStage, Topology};
 use crate::exec::{ExecConfig, Executor};
 use crate::graph::{Graph, ScheduleKind};
+use crate::memsim::machines;
+use crate::memsim::Interconnect;
+use crate::optim::bucket::partition_by_bytes;
 use crate::optim::{Hyper, Optimizer};
 use crate::tensor::flat::shard_span;
 use crate::tensor::Tensor;
@@ -130,6 +139,11 @@ pub struct DdpReport {
     /// Rank-0 parameter values after the final step (replicas are
     /// bit-identical; used by the equivalence tests).
     pub final_params: Vec<Tensor>,
+    /// The per-bucket comm plan the run executed (`--algo auto` only):
+    /// which algorithm and chunk split served each bucket, plus the
+    /// planner's predicted drain exposure. `None` on fixed-algorithm
+    /// runs.
+    pub plan: Option<Arc<StepPlan>>,
 }
 
 /// Configuration of a DDP run.
@@ -138,12 +152,24 @@ pub struct DdpConfig {
     pub world: usize,
     /// Which executor schedule drives the reduce+update placement.
     pub schedule: ScheduleKind,
-    /// Which collective algorithm the replicas meet through: one flat
-    /// staged session per collective, a chunked ring (bandwidth-
-    /// optimal), or a binomial tree (latency-optimal). All three are
-    /// bit-identical; they differ only in wire bytes, hop count, and
-    /// blocked time (`--algo`).
-    pub algo: CommAlgo,
+    /// Which collective algorithm the replicas meet through
+    /// (`--algo`): a fixed choice — flat staged sessions, chunked ring
+    /// (bandwidth-optimal), binomial tree (latency-optimal), or the
+    /// two-tier hierarchical composition — or `Auto`, which resolves a
+    /// memsim-driven per-bucket plan ([`crate::comm::plan`]) and meets
+    /// through a [`MixedComm`] session. Every choice is bit-identical;
+    /// they differ only in wire bytes, hop count, and blocked time.
+    pub algo: AlgoSelect,
+    /// Two-tier replica layout (`--topology RxN`): consecutive ranks
+    /// packed into nodes of this size (0 = flat/one-tier). Drives the
+    /// hierarchical algorithm's node grid and the planner's two-tier
+    /// pricing; the other algorithms ignore it.
+    pub ranks_per_node: usize,
+    /// The interconnect model the `Auto` planner prices against; `None`
+    /// uses the `shared_mem` preset (clustered over the topology when
+    /// `ranks_per_node > 0`). A calibrated fit
+    /// (`machines::fit_interconnect`) slots in here.
+    pub planner_interconnect: Option<Interconnect>,
     /// Steps to run.
     pub steps: usize,
     /// `Some(cap)` trains every replica on bucketed flat storage and
@@ -189,7 +215,9 @@ impl DdpConfig {
         Self {
             world,
             schedule,
-            algo: CommAlgo::Flat,
+            algo: AlgoSelect::Fixed(crate::comm::CommAlgo::Flat),
+            ranks_per_node: 0,
+            planner_interconnect: None,
             steps,
             bucket_cap_bytes: None,
             comm_chunk_bytes: None,
@@ -231,13 +259,79 @@ pub fn train_ddp(
         !cfg.shard_stage.sharded() || cfg.bucket_cap_bytes.is_some(),
         "shard stages require bucketed storage: set bucket_cap_bytes (--bucket-cap)"
     );
-    let comm: Arc<dyn Communicator> = make_comm(cfg.algo, world);
+    let topo = if cfg.ranks_per_node == 0 {
+        Topology::flat(world)
+    } else {
+        Topology::two_tier(world, cfg.ranks_per_node)
+    };
+    // `--algo auto`: resolve the per-bucket plan before any replica
+    // spawns. Every rank must route every tag identically, so the plan
+    // is computed once, from the store's deterministic bucket partition
+    // (a throwaway `build()` supplies the parameter lengths) and the
+    // interconnect model, and shared through `CommCtx::plan`.
+    let (comm, plan): (Arc<dyn Communicator>, Option<Arc<StepPlan>>) = match cfg.algo {
+        AlgoSelect::Fixed(algo) => (make_comm(algo, &topo), None),
+        AlgoSelect::Auto => {
+            let cap = cfg.bucket_cap_bytes.expect(
+                "--algo auto plans per bucket and requires bucketed storage \
+                 (set bucket_cap_bytes / --bucket-cap)",
+            );
+            let lens: Vec<usize> = {
+                let probe = build();
+                probe
+                    .store
+                    .params
+                    .iter()
+                    .map(|p| p.data.read().unwrap().value.len())
+                    .collect()
+            };
+            let units: Vec<usize> = partition_by_bytes(&lens, cap)
+                .iter()
+                .map(|group| group.iter().map(|i| lens[*i]).sum())
+                .collect();
+            let ic = cfg.planner_interconnect.clone().unwrap_or_else(|| {
+                let base = machines::shared_mem(world);
+                if cfg.ranks_per_node == 0 {
+                    base
+                } else {
+                    machines::clustered(&base, world, cfg.ranks_per_node)
+                }
+            });
+            assert_eq!(
+                ic.topology(),
+                topo,
+                "planner interconnect must match the run's world and topology"
+            );
+            let workers = if cfg.schedule == ScheduleKind::BackwardFusion {
+                cfg.overlap_threads
+            } else {
+                0
+            };
+            let plan = Arc::new(plan_units(
+                &units,
+                &PlanInputs {
+                    ic: &ic,
+                    stage: cfg.shard_stage,
+                    // live runs carry no compute estimate: plan for the
+                    // serialized bound (pure per-bucket argmin), which
+                    // the greedy guarantee makes no worse than any
+                    // global --algo whatever the real overlap window
+                    backward_s: 0.0,
+                    workers,
+                    bucket_cap_bytes: Some(cap),
+                },
+            ));
+            (Arc::new(MixedComm::from_plan(&plan)), Some(plan))
+        }
+    };
     let rank0: Arc<Mutex<Option<RankZero>>> = Arc::new(Mutex::new(None));
     let batch_maker = Arc::new(cfg.local_batch_maker);
     let sync = Arc::new(Barrier::new(world));
+    let report_plan = plan.clone();
     std::thread::scope(|scope| {
         for rank in 0..world {
             let comm = Arc::clone(&comm);
+            let plan = plan.clone();
             let rank0 = Arc::clone(&rank0);
             let batch_maker = Arc::clone(&batch_maker);
             let sync = Arc::clone(&sync);
@@ -268,7 +362,7 @@ pub fn train_ddp(
                     },
                 )
                 .expect("executor");
-                ex.set_comm(CommCtx { comm: Arc::clone(&comm), rank, stage });
+                ex.set_comm(CommCtx { comm: Arc::clone(&comm), rank, stage, plan });
                 if let Some(path) = &load_from {
                     checkpoint::load(&mut ex, path).expect("ddp: checkpoint restore");
                     // re-apply the stage's steady-state arena layout
@@ -381,6 +475,7 @@ pub fn train_ddp(
         peak_value_arena_bytes: rz.peak_value_arena_bytes,
         update_elems_per_step: rz.update_elems_per_step,
         final_params: rz.final_params,
+        plan: report_plan,
     }
 }
 
@@ -449,6 +544,40 @@ mod tests {
         assert!(r.comm_wait_ms >= 0.0);
         assert!(!r.final_params.is_empty());
         assert!(r.opt_state_bytes > 0, "momentum state allocated");
+    }
+
+    /// Smoke: `--algo auto` resolves a plan, trains through the mixed
+    /// session, and reports the plan. (Bit-identity and wire exactness
+    /// live in `rust/tests/integration_hier_plan.rs`.)
+    #[test]
+    fn auto_algo_plans_and_trains() {
+        let mut c = cfg(ScheduleKind::BackwardFusion, 2, 3);
+        c.algo = AlgoSelect::Auto;
+        c.bucket_cap_bytes = Some(1 << 12);
+        c.overlap_threads = 2;
+        let r = train_ddp(
+            || mlp(99),
+            || Box::new(SgdMomentum) as Box<dyn Optimizer>,
+            Hyper { lr: 0.05, ..Hyper::default() },
+            c,
+        );
+        assert!(r.losses.iter().all(|l| l.is_finite()));
+        let plan = r.plan.expect("auto run reports its plan");
+        assert!(!plan.units.is_empty());
+        assert!(plan.table().contains("unit"));
+    }
+
+    #[test]
+    #[should_panic(expected = "--algo auto plans per bucket")]
+    fn auto_without_buckets_is_rejected() {
+        let mut c = cfg(ScheduleKind::Baseline, 2, 1);
+        c.algo = AlgoSelect::Auto;
+        train_ddp(
+            || mlp(1),
+            || Box::new(SgdMomentum) as Box<dyn Optimizer>,
+            Hyper::default(),
+            c,
+        );
     }
 
     #[test]

@@ -368,13 +368,18 @@ impl Executor {
     /// Every rank computes the same grid from the same bucket size, so
     /// chunk collectives pair up across ranks. Under a sharded stage the
     /// chunk jobs reduce-scatter with chunk ∩ shard ownership spans
-    /// (`pool::run_comm_chunk_update`).
+    /// (`pool::run_comm_chunk_update`). With a per-bucket comm plan
+    /// installed (`--algo auto`) the planner's per-unit chunk split
+    /// replaces the global `comm_chunk_bytes` cap — a unit the plan
+    /// left whole stays whole even when the CLI set a global cap.
     fn comm_chunks_of(&self, unit: usize) -> Option<Vec<CommChunk>> {
-        let cap = self.cfg.comm_chunk_bytes?;
-        self.comm.as_ref()?;
+        let ctx = self.comm.as_ref()?;
         let bs = self.graph.store.buckets.as_ref()?;
+        let chunk_elems = match &ctx.plan {
+            Some(plan) => plan.chunk_elems(unit)?,
+            None => (self.cfg.comm_chunk_bytes? / 4).max(1),
+        };
         let total = bs.buckets[unit].data.read().unwrap().num_elems();
-        let chunk_elems = (cap / 4).max(1);
         if total <= chunk_elems {
             return None;
         }
@@ -389,8 +394,9 @@ impl Executor {
     }
 
     /// Inline chunked reduce-then-update of a bucket unit (backward-
-    /// fusion drain point with no pool): the same chunk grid and tags as
-    /// the pool path, executed serially on the calling thread.
+    /// fusion drain point with no pool): the same chunk grid, tags, and
+    /// last-chunk ZeRO release as the pool path, executed serially on
+    /// the calling thread.
     fn comm_update_unit_chunked(
         &mut self,
         unit: usize,
@@ -404,6 +410,7 @@ impl Executor {
             let bs = self.graph.store.buckets.as_ref().expect("chunking implies buckets");
             Arc::clone(&bs.buckets[unit])
         };
+        let remaining = std::sync::atomic::AtomicUsize::new(chunks.len());
         for chunk in chunks {
             pool::run_comm_chunk_update(
                 &ctx,
@@ -415,6 +422,7 @@ impl Executor {
                 &hp,
                 self.global_scale,
             );
+            pool::finish_chunk_job(&ctx, &bucket, &remaining);
         }
         self.counters.updates_dispatched += chunks.len() as u64;
         t0.elapsed()
@@ -793,10 +801,21 @@ impl Executor {
                             // one job per chunk when chunking is active
                             // (the unit's collective splits so it starts
                             // overlapping backward sooner and spreads
-                            // over workers), else one whole-unit job
-                            let job_chunks: Vec<Option<CommChunk>> = match chunks {
-                                Some(cs) => cs.into_iter().map(Some).collect(),
-                                None => vec![None],
+                            // over workers), else one whole-unit job.
+                            // Chunk jobs share a completion countdown so
+                            // the last chunk's drain performs the
+                            // ZeRO-2/3 release mid-backward
+                            // (`pool::finish_chunk_job`).
+                            let (job_chunks, countdown) = match chunks {
+                                Some(cs) => {
+                                    let n = cs.len();
+                                    let cd = std::sync::atomic::AtomicUsize::new(n);
+                                    (
+                                        cs.into_iter().map(Some).collect::<Vec<_>>(),
+                                        Some(Arc::new(cd)),
+                                    )
+                                }
+                                None => (vec![None], None),
                             };
                             let ctx = self.comm.as_ref().cloned();
                             for chunk in job_chunks {
@@ -810,6 +829,7 @@ impl Executor {
                                         ctx: ctx.clone(),
                                         unit,
                                         chunk,
+                                        remaining: countdown.clone(),
                                     }),
                                 });
                                 self.counters.updates_dispatched += 1;
@@ -840,6 +860,17 @@ impl Executor {
                 self.overlapped_job_ns +=
                     capped.saturating_duration_since(start).as_nanos() as u64;
             }
+        }
+        // Backward-fusion update boundary: every unit's drain work —
+        // whole-bucket job or last chunk job — has completed here, so
+        // ZeRO-2/3 arenas must already be narrowed *mid-step*, before
+        // the end-of-step compaction sweep runs. Sampling the peaks at
+        // this boundary is what lets the tier-1 suite assert the
+        // chunked path's true-async release: without the last-chunk
+        // countdown the grad arenas would still be at full coverage
+        // here and the measured peak would exceed `memsim::stage_memory`.
+        if bf && self.is_update_step(this_step) {
+            self.sample_arena_peak();
         }
         stats.backward = t1.elapsed();
         stats.opt_in_backward = opt_in_bwd;

@@ -22,6 +22,7 @@ use crate::optim::bucket::{
 };
 use crate::optim::{Hyper, Optimizer};
 use crate::tensor::flat::{chunk_shard_spans, shard_span};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -50,6 +51,15 @@ pub struct CommPlan {
     /// touches only the chunk's range. Chunk grids are deterministic
     /// from the bucket size, so every rank submits the same chunk set.
     pub chunk: Option<CommChunk>,
+    /// Chunk-completion countdown shared by every chunk job of one
+    /// bucket in one step: the job that decrements it to zero performs
+    /// the ZeRO-2/3 release ([`finish_chunk_job`]) — narrowing the grad
+    /// arena (and releasing ZeRO-3 values) at the *last chunk's drain*,
+    /// mid-backward, exactly like the whole-bucket jobs do, instead of
+    /// waiting for the executor's end-of-step compaction sweep. `None`
+    /// on whole-bucket jobs (which release inline) and on legacy chunk
+    /// callers.
+    pub remaining: Option<Arc<AtomicUsize>>,
 }
 
 /// One contiguous chunk of a bucket's flat arena, as a comm-job target.
@@ -84,7 +94,7 @@ pub struct Job {
 impl Job {
     fn run(self) {
         match &self.comm {
-            Some(CommPlan { ctx, unit, chunk: Some(chunk) }) => {
+            Some(CommPlan { ctx, unit, chunk: Some(chunk), remaining }) => {
                 let JobTarget::Bucket(bucket) = &self.target else {
                     panic!("chunked comm jobs target buckets");
                 };
@@ -98,6 +108,9 @@ impl Job {
                     &self.hyper,
                     self.scale,
                 );
+                if let Some(remaining) = remaining {
+                    finish_chunk_job(ctx, bucket, remaining);
+                }
             }
             Some(plan) => run_comm_update(
                 &plan.ctx,
@@ -295,10 +308,13 @@ pub(crate) fn run_comm_update(
 /// update walks exactly that intersection, which stays inside the
 /// rank's shard-only state coverage. ZeRO-1/2
 /// then all-gather the chunk's refreshed values with the same spans;
-/// ZeRO-3 leaves values for the pre-forward gather. The end-of-step
-/// compaction in `exec` narrows ZeRO-2/3 grad arenas (and releases
-/// ZeRO-3 values) once every chunk job of the step has drained — a
-/// chunk job cannot free bucket-level arenas on its own.
+/// ZeRO-3 leaves values for the pre-forward gather. A single chunk job
+/// cannot free bucket-level arenas, but the *last* chunk job of a
+/// bucket can and does: callers that submit a full chunk set attach a
+/// shared countdown and [`finish_chunk_job`] narrows the ZeRO-2/3 grad
+/// arena (and releases ZeRO-3 values) at that final drain,
+/// mid-backward. The end-of-step compaction in `exec` remains the
+/// idempotent safety net for countdown-less callers.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn run_comm_chunk_update(
     ctx: &CommCtx,
@@ -387,6 +403,34 @@ pub(crate) fn run_comm_chunk_update(
             let bd = bucket.data.read().unwrap();
             buf_to_values(&bd, &vbuf, off, off, len);
         }
+    }
+}
+
+/// The true-async ZeRO-2/3 release for chunked drain jobs: every chunk
+/// job of a bucket decrements the shared countdown after its
+/// reduce-then-update completes, and the job that reaches zero — the
+/// *last chunk's drain*, which may be mid-backward on a pool worker —
+/// narrows the gradient arena to this rank's shard and releases ZeRO-3
+/// values, exactly what the whole-bucket drain path does inline. The
+/// executor's end-of-step compaction sweep remains as the idempotent
+/// safety net for paths without a countdown (forward-fusion's bulk
+/// reduce, legacy callers).
+pub(crate) fn finish_chunk_job(ctx: &CommCtx, bucket: &BucketRef, remaining: &AtomicUsize) {
+    if remaining.fetch_sub(1, Ordering::AcqRel) != 1 {
+        return;
+    }
+    if !ctx.stage.shards_grads() {
+        return;
+    }
+    let world = ctx.comm.world();
+    let mut bd = bucket.data.write().unwrap();
+    let total = bd.num_elems();
+    let (off, len) = shard_span(total, world, ctx.rank);
+    if bd.grad_range == (0, total) {
+        bd.narrow_grads(off, len);
+    }
+    if ctx.stage.shards_values() {
+        bd.release_values(off, len);
     }
 }
 
@@ -617,7 +661,7 @@ mod tests {
                         // rank-dependent grads: mean is 1.0 everywhere
                         buckets[0].data.write().unwrap().grads =
                             Tensor::full(&[6], if rank == 0 { 0.5 } else { 1.5 });
-                        let ctx = CommCtx { comm, rank, stage };
+                        let ctx = CommCtx::new(comm, rank, stage);
                         let pool = UpdatePool::new(1);
                         pool.submit(Job {
                             target: JobTarget::Bucket(Arc::clone(&buckets[0])),
@@ -625,7 +669,7 @@ mod tests {
                             hyper: Hyper { lr: 1.0, weight_decay: 0.0, ..Hyper::default() },
                             step: 1,
                             scale: 1.0,
-                            comm: Some(CommPlan { ctx, unit: 0, chunk: None }),
+                            comm: Some(CommPlan { ctx, unit: 0, chunk: None, remaining: None }),
                         });
                         pool.wait_all();
                         let bd = buckets[0].data.read().unwrap();
@@ -685,7 +729,7 @@ mod tests {
                         let (buckets, _) = build_buckets(&store.params, 1 << 20);
                         buckets[0].data.write().unwrap().grads =
                             Tensor::full(&[6], if rank == 0 { 0.5 } else { 1.5 });
-                        let ctx = CommCtx { comm, rank, stage };
+                        let ctx = CommCtx::new(comm, rank, stage);
                         let pool = UpdatePool::new(2);
                         // two chunks (2 + 4 elems): the second straddles
                         // the world-2 shard boundary ([0,3) / [3,6)), so
@@ -701,6 +745,7 @@ mod tests {
                                     ctx: ctx.clone(),
                                     unit: 0,
                                     chunk: Some(CommChunk { index, offset, len }),
+                                    remaining: None,
                                 }),
                             });
                         }
@@ -738,6 +783,80 @@ mod tests {
         }
     }
 
+    /// Satellite: the chunk-completion countdown releases ZeRO-2/3
+    /// arenas at the *last chunk's* drain — no end-of-step compaction
+    /// needed. After the pool drains, the grad arena is already
+    /// narrowed to the shard (and ZeRO-3 values shard-resident), and
+    /// the update math still matches the whole-bucket path.
+    #[test]
+    fn chunk_countdown_releases_arenas_at_last_drain() {
+        use crate::comm::{CommCtx, SharedMemComm};
+        use crate::graph::ParamStore;
+        use crate::optim::bucket::build_buckets;
+        let world = 2;
+        for stage in [ShardStage::Zero2, ShardStage::Zero3] {
+            let comm = Arc::new(SharedMemComm::new(world));
+            let outs = Arc::new(Mutex::new(vec![(0usize, false, Vec::new()); world]));
+            std::thread::scope(|s| {
+                for rank in 0..world {
+                    let comm = Arc::clone(&comm);
+                    let outs = Arc::clone(&outs);
+                    s.spawn(move || {
+                        let mut store = ParamStore::default();
+                        store.add("a", Tensor::full(&[4], 1.0));
+                        store.add("b", Tensor::full(&[2], 2.0));
+                        let (buckets, _) = build_buckets(&store.params, 1 << 20);
+                        buckets[0].data.write().unwrap().grads =
+                            Tensor::full(&[6], if rank == 0 { 0.5 } else { 1.5 });
+                        let ctx = CommCtx::new(comm, rank, stage);
+                        let pool = UpdatePool::new(2);
+                        let remaining = Arc::new(AtomicUsize::new(2));
+                        for (index, offset, len) in [(0usize, 0usize, 2usize), (1, 2, 4)] {
+                            pool.submit(Job {
+                                target: JobTarget::Bucket(Arc::clone(&buckets[0])),
+                                opt: Arc::new(Sgd),
+                                hyper: Hyper { lr: 1.0, weight_decay: 0.0, ..Hyper::default() },
+                                step: 1,
+                                scale: 1.0,
+                                comm: Some(CommPlan {
+                                    ctx: ctx.clone(),
+                                    unit: 0,
+                                    chunk: Some(CommChunk { index, offset, len }),
+                                    remaining: Some(Arc::clone(&remaining)),
+                                }),
+                            });
+                        }
+                        pool.wait_all();
+                        let bd = buckets[0].data.read().unwrap();
+                        let shard_vals = if stage.shards_values() {
+                            bd.values.as_ref().map(|v| v.data().to_vec()).unwrap_or_default()
+                        } else {
+                            let (off, len) = shard_span(6, world, rank);
+                            let mut buf = vec![0.0f32; 6];
+                            values_to_buf(&bd, &mut buf, 0, off, len);
+                            buf[off..off + len].to_vec()
+                        };
+                        outs.lock().unwrap()[rank] =
+                            (bd.grads.len(), bd.values.is_some(), shard_vals);
+                    });
+                }
+            });
+            let outs = outs.lock().unwrap();
+            let full = [0.0f32, 0.0, 0.0, 0.0, 1.0, 1.0];
+            for rank in 0..world {
+                let (grad_len, released, vals) = &outs[rank];
+                assert_eq!(*grad_len, 3, "{stage:?} rank {rank}: grads narrowed at last drain");
+                assert_eq!(
+                    *released,
+                    stage.shards_values(),
+                    "{stage:?} rank {rank}: ZeRO-3 values shard-resident at last drain"
+                );
+                let (off, len) = shard_span(6, world, rank);
+                assert_eq!(vals.as_slice(), &full[off..off + len], "{stage:?} rank {rank}");
+            }
+        }
+    }
+
     /// Chunked comm jobs: two ranks each split one 6-element bucket into
     /// two chunk jobs; the reduced updates must equal the whole-bucket
     /// path exactly, whatever order the workers pick the chunks in.
@@ -760,7 +879,7 @@ mod tests {
                     let (buckets, _) = build_buckets(&store.params, 1 << 20);
                     buckets[0].data.write().unwrap().grads =
                         Tensor::full(&[6], if rank == 0 { 0.5 } else { 1.5 });
-                    let ctx = CommCtx { comm, rank, stage: ShardStage::None };
+                    let ctx = CommCtx::new(comm, rank, ShardStage::None);
                     let pool = UpdatePool::new(2);
                     for (index, offset, len) in [(0usize, 0usize, 3usize), (1, 3, 3)] {
                         pool.submit(Job {
@@ -773,6 +892,7 @@ mod tests {
                                 ctx: ctx.clone(),
                                 unit: 0,
                                 chunk: Some(CommChunk { index, offset, len }),
+                                remaining: None,
                             }),
                         });
                     }

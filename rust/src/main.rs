@@ -8,7 +8,8 @@
 //!   ddp         --world W --schedule S --steps N --algo flat|ring|tree
 //!   artifacts   list + smoke-execute the AOT artifacts via PJRT
 
-use optfuse::comm::{CommAlgo, ShardStage};
+use optfuse::comm::plan::{plan_bucket_caps, plan_units, PlanInputs};
+use optfuse::comm::{AlgoSelect, CommAlgo, ShardStage, Topology};
 use optfuse::config::Args;
 use optfuse::data;
 use optfuse::ddp::{train_ddp, DdpConfig};
@@ -189,9 +190,11 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     // --world W > 1: the cluster-scaling prediction (memsim comm model)
     let world = args.usize_or("world", 1);
     if world > 1 {
-        let algos: Vec<CommAlgo> = match args.get("algo") {
-            None | Some("all") => CommAlgo::ALL.to_vec(),
-            Some(a) => vec![a.parse().map_err(|e: String| anyhow::anyhow!(e))?],
+        let algo_arg = args.str_or("algo", "all");
+        let auto = matches!(algo_arg.as_str(), "auto" | "all");
+        let algos: Vec<CommAlgo> = match algo_arg.as_str() {
+            "all" | "auto" => CommAlgo::ALL.to_vec(),
+            a => vec![a.parse().map_err(|e: String| anyhow::anyhow!(e))?],
         };
         let mut cap = match args.usize_or("bucket-cap", 1 << 20) {
             0 => None,
@@ -204,19 +207,30 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
                 "(--shard-stage prediction needs bucketed units; defaulting --bucket-cap to 1 MiB)"
             );
         }
-        let m = machine.with_world(world);
+        // `--topology RxN`: price a two-tier cluster (the machine's own
+        // link intra-node, the standard uplink across nodes)
+        let topo = Topology::parse(&args.str_or("topology", "flat"), world)
+            .map_err(|e| anyhow::anyhow!(e))?;
+        let m = if topo.ranks_per_node == 0 {
+            machine.with_world(world)
+        } else {
+            machine.with_topology(world, topo.ranks_per_node)
+        };
         println!(
-            "\nDDP prediction: world={world} link {:.1} GB/s, {:.1} µs/hop | \
-             storage={} shard-stage={}",
-            m.interconnect.link_bw / 1e9,
-            m.interconnect.hop_latency_s * 1e6,
+            "\nDDP prediction: world={world} topology={} | intra {:.1} GB/s {:.1} µs/hop, \
+             inter {:.1} GB/s {:.1} µs/hop | storage={} shard-stage={}",
+            m.interconnect.topology().label(),
+            m.interconnect.intra_bw / 1e9,
+            m.interconnect.intra_lat_s * 1e6,
+            m.interconnect.inter_bw / 1e9,
+            m.interconnect.inter_lat_s * 1e6,
             storage_label(cap),
             stage.label()
         );
         println!(
             "  algo  schedule          step ms   comm ms  exposed   overlap%   wire MiB  hops"
         );
-        for algo in algos {
+        for &algo in &algos {
             for kind in ScheduleKind::ALL {
                 let ddp = DdpSimConfig { algo, bucket_cap_bytes: cap, stage };
                 let r = memsim::simulate_ddp(&m, &net, &opt, batch, kind, ddp);
@@ -232,6 +246,88 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
                     r.wire_per_step.hops
                 );
             }
+        }
+        // `--algo auto` (and the default "all"): per-bucket plan table —
+        // what the planner picks against this machine's interconnect,
+        // evaluated through the same simulate_ddp pricing as the rows
+        // above so the comparison is apples to apples
+        if auto {
+            let units = memsim::comm_unit_elems(&net, cap);
+            for kind in ScheduleKind::ALL {
+                let compute = memsim::simulate(&m, &net, &opt, batch, kind);
+                let bwd = if kind == ScheduleKind::BackwardFusion {
+                    compute.backward_s
+                } else {
+                    0.0
+                };
+                let plan = plan_units(
+                    &units,
+                    &PlanInputs {
+                        ic: &m.interconnect,
+                        stage,
+                        backward_s: bwd,
+                        workers: 0,
+                        bucket_cap_bytes: cap,
+                    },
+                );
+                let ddp = DdpSimConfig {
+                    algo: plan.default_algo,
+                    bucket_cap_bytes: cap,
+                    stage,
+                };
+                let r = memsim::simulate_ddp_with_algos(
+                    &m,
+                    &net,
+                    &opt,
+                    batch,
+                    kind,
+                    ddp,
+                    &plan.algos(),
+                );
+                let best_fixed = algos
+                    .iter()
+                    .map(|a| {
+                        let ddp =
+                            DdpSimConfig { algo: *a, bucket_cap_bytes: cap, stage };
+                        memsim::simulate_ddp(&m, &net, &opt, batch, kind, ddp).step_s
+                    })
+                    .fold(f64::INFINITY, f64::min);
+                println!(
+                    "\n  auto  {:<16} {:>8.2} ms/step (best single algo {:>8.2} ms)",
+                    kind.label(),
+                    r.step_s * 1e3,
+                    best_fixed * 1e3
+                );
+                if kind == ScheduleKind::BackwardFusion {
+                    print!("{}", plan.table());
+                }
+            }
+            // the planner's bucket-cap search: sweep candidate caps
+            // around the configured one and report the cap whose plan
+            // predicts the least backward-fusion drain exposure
+            let lens = net.param_elem_list();
+            let caps: Vec<usize> = [1usize << 18, 1 << 20, 1 << 22]
+                .into_iter()
+                .chain(cap)
+                .collect();
+            let bf = memsim::simulate(&m, &net, &opt, batch, ScheduleKind::BackwardFusion);
+            let (best_cap, cap_plan) = plan_bucket_caps(
+                &lens,
+                &caps,
+                &PlanInputs {
+                    ic: &m.interconnect,
+                    stage,
+                    backward_s: bf.backward_s,
+                    workers: 0,
+                    bucket_cap_bytes: cap,
+                },
+            );
+            println!(
+                "  bucket-cap sweep (bf, candidates {caps:?}): best {best_cap} B, {} units, \
+                 predicted drain exposure {:.2} ms",
+                cap_plan.units.len(),
+                cap_plan.pred_exposed_s * 1e3
+            );
         }
         // the per-stage memory ladder (stage-independent of algo/schedule)
         let mib = (1 << 20) as f64;
@@ -272,12 +368,22 @@ fn cmd_ddp(args: &Args) -> anyhow::Result<()> {
     // `--overlap N` = N reduce-then-update worker threads per replica
     // (backward-fusion only)
     let overlap = args.usize_or("overlap", 0);
-    // `--algo flat|ring|tree` = collective algorithm (same math, different
-    // wire bytes / hops / blocked time)
-    let algo: CommAlgo = args
+    // `--algo flat|ring|tree|hier|auto` = collective algorithm (same
+    // math, different wire bytes / hops / blocked time; `auto` resolves
+    // a per-bucket plan and runs a mixed session)
+    let algo: AlgoSelect = args
         .str_or("algo", "flat")
         .parse()
         .map_err(|e: String| anyhow::anyhow!(e))?;
+    // `--topology RxN` = pack consecutive ranks into nodes of R (the
+    // hierarchical algorithm's node grid and the planner's two-tier
+    // pricing); `flat` = one tier
+    let topo = Topology::parse(&args.str_or("topology", "flat"), world)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    if algo == AlgoSelect::Auto && bucket_cap.is_none() {
+        bucket_cap = Some(1 << 20);
+        println!("(--algo auto plans per bucket; defaulting --bucket-cap to 1 MiB)");
+    }
     // `--chunk-cap <bytes>` = split backward-fusion reduce jobs per chunk
     // (sharded stages reduce-scatter per chunk with chunk ∩ shard spans)
     let mut chunk_cap = match args.usize_or("chunk-cap", 0) {
@@ -289,15 +395,22 @@ fn cmd_ddp(args: &Args) -> anyhow::Result<()> {
         println!("(--chunk-cap applies to backward-fusion only; ignoring it)");
         chunk_cap = None;
     }
+    if chunk_cap.is_some() && algo == AlgoSelect::Auto {
+        // the executor reads per-bucket chunk splits off the plan, so a
+        // global cap would be silently superseded — say so instead
+        println!("(--algo auto plans the chunk split per bucket; ignoring --chunk-cap)");
+        chunk_cap = None;
+    }
     if chunk_cap.is_some() && bucket_cap.is_none() {
         bucket_cap = Some(1 << 20);
         println!("(--chunk-cap needs bucketed storage; defaulting --bucket-cap to 1 MiB)");
     }
     println!(
-        "DDP: world={world} schedule={} algo={} steps={steps} storage={} shard-stage={} \
-         overlap_threads={} chunk={:?}",
+        "DDP: world={world} schedule={} algo={} topology={} steps={steps} storage={} \
+         shard-stage={} overlap_threads={} chunk={:?}",
         schedule.label(),
         algo.label(),
+        topo.label(),
         storage_label(bucket_cap),
         stage.label(),
         overlap,
@@ -311,6 +424,8 @@ fn cmd_ddp(args: &Args) -> anyhow::Result<()> {
             world,
             schedule,
             algo,
+            ranks_per_node: topo.ranks_per_node,
+            planner_interconnect: None,
             steps,
             bucket_cap_bytes: bucket_cap,
             comm_chunk_bytes: chunk_cap,
@@ -324,6 +439,9 @@ fn cmd_ddp(args: &Args) -> anyhow::Result<()> {
             }),
         },
     );
+    if let Some(plan) = &report.plan {
+        println!("per-bucket comm plan (--algo auto):\n{}", plan.table());
+    }
     println!(
         "iter {:.2} ms | comm {:.2} MiB, {} rounds, {} hops, {:.1} ms blocked | \
          {:.1} rounds/step | overlap {:.0}% | {} update elems/step | final loss {:.4}",

@@ -15,12 +15,12 @@ const MIB: u64 = 1 << 20;
 
 /// PCIe 3.0 x16-class replica interconnect (desktop multi-GPU).
 pub fn pcie_x16(world: usize) -> Interconnect {
-    Interconnect { world, link_bw: 12.0 * GB, hop_latency_s: 5.0e-6 }
+    Interconnect::one_tier(world, 12.0 * GB, 5.0e-6)
 }
 
 /// PCIe 3.0 x8-class replica interconnect (laptop / bifurcated lanes).
 pub fn pcie_x8(world: usize) -> Interconnect {
-    Interconnect { world, link_bw: 6.0 * GB, hop_latency_s: 8.0e-6 }
+    Interconnect::one_tier(world, 6.0 * GB, 8.0e-6)
 }
 
 /// Shared-memory threads (the in-process DDP harness): a hop is a
@@ -28,7 +28,32 @@ pub fn pcie_x8(world: usize) -> Interconnect {
 /// *fallback* when no measurements exist; [`fit_interconnect`] replaces
 /// them with coefficients fitted to measured `CommStats` blocked time.
 pub fn shared_mem(world: usize) -> Interconnect {
-    Interconnect { world, link_bw: 8.0 * GB, hop_latency_s: 3.0e-6 }
+    Interconnect::one_tier(world, 8.0 * GB, 3.0e-6)
+}
+
+/// The slow tier a Table-2 desktop joins a cluster over: 25GbE-class
+/// `(bandwidth bytes/s, hop latency seconds)` — roughly an order of
+/// magnitude below the PCIe intra-node links, which is exactly the gap
+/// the hierarchical collectives exist to bridge.
+pub fn cluster_uplink() -> (f64, f64) {
+    (2.5 * GB, 25.0e-6)
+}
+
+/// Scale an interconnect out to a two-tier cluster: keep `ic`'s own
+/// link as the fast intra-node tier (whatever preset or calibrated
+/// coefficients it carries), attach the [`cluster_uplink`] as the
+/// inter-node tier, and pack `world` ranks into nodes of
+/// `ranks_per_node`.
+pub fn clustered(ic: &Interconnect, world: usize, ranks_per_node: usize) -> Interconnect {
+    let (inter_bw, inter_lat_s) = cluster_uplink();
+    Interconnect::two_tier(
+        world,
+        ranks_per_node,
+        ic.intra_bw,
+        ic.intra_lat_s,
+        inter_bw,
+        inter_lat_s,
+    )
 }
 
 /// One measured collective-accounting observation: the `CommStats`
@@ -81,7 +106,7 @@ pub fn fit_interconnect(world: usize, samples: &[CommSample]) -> Interconnect {
     if !(lat.is_finite() && inv_bw.is_finite()) || lat <= 0.0 || inv_bw <= 0.0 {
         return fallback;
     }
-    Interconnect { world, link_bw: 1.0 / inv_bw, hop_latency_s: lat }
+    Interconnect::one_tier(world, 1.0 / inv_bw, lat)
 }
 
 /// TITAN Xp + Core i9-7900X (paper Table 2 row 1).
@@ -174,6 +199,25 @@ mod tests {
         assert_eq!(table2_machines().len(), 3);
     }
 
+    /// `clustered` keeps the machine's own link as the fast tier and
+    /// attaches the (strictly slower) uplink as the inter-node tier.
+    #[test]
+    fn clustered_keeps_intra_link_and_attaches_uplink() {
+        let base = pcie_x16(1);
+        let ic = clustered(&base, 8, 4);
+        assert_eq!(ic.world, 8);
+        assert_eq!(ic.ranks_per_node, 4);
+        assert_eq!(ic.intra_bw, base.intra_bw);
+        assert_eq!(ic.intra_lat_s, base.intra_lat_s);
+        let (ub, ul) = cluster_uplink();
+        assert_eq!((ic.inter_bw, ic.inter_lat_s), (ub, ul));
+        assert!(ic.inter_bw < ic.intra_bw && ic.inter_lat_s > ic.intra_lat_s);
+        assert_eq!(ic.topology().nodes(), 2);
+        // one-tier presets are the degenerate case: both tiers equal
+        assert_eq!(base.inter_bw, base.intra_bw);
+        assert_eq!(base.ranks_per_node, 0);
+    }
+
     /// The least-squares calibration recovers known coefficients from
     /// synthetic samples generated by the model itself, and falls back
     /// to the hand-picked preset on degenerate inputs.
@@ -195,30 +239,30 @@ mod tests {
         ];
         let ic = fit_interconnect(4, &samples);
         assert_eq!(ic.world, 4);
-        assert!((ic.hop_latency_s - lat).abs() / lat < 1e-6, "lat {:.3e}", ic.hop_latency_s);
-        assert!((ic.link_bw - bw).abs() / bw < 1e-6, "bw {:.3e}", ic.link_bw);
+        assert!((ic.intra_lat_s - lat).abs() / lat < 1e-6, "lat {:.3e}", ic.intra_lat_s);
+        assert!((ic.intra_bw - bw).abs() / bw < 1e-6, "bw {:.3e}", ic.intra_bw);
         // degenerate: too few samples, or all samples proportional
         // (rank-1 design), or non-physical negative coefficients
         let fb = shared_mem(2);
         let one = fit_interconnect(2, &samples[..1]);
-        assert_eq!(one.hop_latency_s, fb.hop_latency_s);
+        assert_eq!(one.intra_lat_s, fb.intra_lat_s);
         let rank1 = [gen(100, 1000), gen(200, 2000), gen(400, 4000)];
         let r1 = fit_interconnect(2, &rank1);
-        assert_eq!(r1.link_bw, fb.link_bw, "rank-1 design falls back");
+        assert_eq!(r1.intra_bw, fb.intra_bw, "rank-1 design falls back");
         let negative = [
             CommSample { bytes: 1000, hops: 10, wait_s: 1.0 },
             CommSample { bytes: 1 << 20, hops: 20, wait_s: 0.9 },
             CommSample { bytes: 2 << 20, hops: 4000, wait_s: 0.1 },
         ];
         let neg = fit_interconnect(2, &negative);
-        assert_eq!(neg.hop_latency_s, fb.hop_latency_s, "non-physical fit falls back");
+        assert_eq!(neg.intra_lat_s, fb.intra_lat_s, "non-physical fit falls back");
     }
 
     #[test]
     fn presets_default_to_single_device_and_resize() {
         for m in table2_machines() {
             assert_eq!(m.interconnect.world, 1);
-            assert!(m.interconnect.link_bw > 0.0 && m.interconnect.hop_latency_s > 0.0);
+            assert!(m.interconnect.intra_bw > 0.0 && m.interconnect.intra_lat_s > 0.0);
         }
         assert_eq!(titan_xp().with_world(4).interconnect.world, 4);
     }

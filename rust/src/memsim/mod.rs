@@ -20,19 +20,28 @@
 //! unfused eager optimizer expensive at ImageNet scale (hundreds of tiny
 //! elementwise launches) exactly as in PyTorch eager.
 //!
-//! **Cluster axis.** [`Machine`] carries an [`Interconnect`] (link
-//! bandwidth, per-hop latency, world size) and [`simulate_ddp`] extends
-//! the single-device model with *comm kernels*: each gradient
-//! collective is priced by its algorithm's critical path — a flat
-//! session serializes the full volume through one meeting point, the
-//! ring pays `2(W−1)` hop latencies on `1/W`-size chunks
-//! (bandwidth-optimal), the binomial tree `2⌈log₂W⌉` full-buffer hops
-//! (latency-optimal) — and the backward-fusion placement model overlaps
-//! them against backward the way the executor's drain-point jobs do.
-//! Wire-byte/hop accounting reuses the closed forms of
-//! [`crate::comm::algo`], so a prediction's per-collective bytes × hops
-//! match the harness's measured `CommStats` exactly
-//! (`rust/tests/integration_comm_model.rs`).
+//! **Cluster axis.** [`Machine`] carries an [`Interconnect`] — a
+//! two-tier topology (ranks-per-node with distinct intra-/inter-node
+//! link bandwidth and hop latency; the flat presets are the degenerate
+//! one-tier case) — and [`simulate_ddp`] extends the single-device
+//! model with *comm kernels*: each gradient collective is priced by
+//! its algorithm's critical path — a flat session serializes the full
+//! volume through one meeting point, the ring pays `2(W−1)` hop
+//! latencies on `1/W`-size chunks (bandwidth-optimal), the binomial
+//! tree `2⌈log₂W⌉` full-buffer hops (latency-optimal), and the
+//! hierarchical composition keeps its ring phases on the fast intra
+//! tier with `2⌈log₂N⌉` uplink hops (the only algorithm that does not
+//! drop to the bottleneck link on a multi-node world) — and the
+//! backward-fusion placement model overlaps them against backward the
+//! way the executor's drain-point jobs do ([`drain_pipeline`]), with
+//! ZeRO-3's value gathers priced at the next forward's first touch
+//! ([`forward_gather_pipeline`]). Wire-byte/hop accounting reuses the
+//! closed forms of [`crate::comm::algo`], so a prediction's
+//! per-collective bytes × hops match the harness's measured
+//! `CommStats` exactly (`rust/tests/integration_comm_model.rs`,
+//! `rust/tests/integration_hier_plan.rs`); the per-bucket planner
+//! ([`crate::comm::plan`]) picks `--algo auto` assignments from the
+//! same pricing.
 
 pub mod machines;
 pub mod spec;
@@ -40,7 +49,7 @@ pub mod zoo;
 
 use crate::comm::algo::{wire_all_gather, wire_all_reduce, wire_reduce_scatter};
 use crate::comm::tree::tree_rounds;
-use crate::comm::{CommAlgo, ShardStage, WireCost};
+use crate::comm::{CommAlgo, ShardStage, Topology, WireCost};
 use crate::graph::ScheduleKind;
 use crate::optim::bucket::partition_by_bytes;
 use crate::tensor::flat::shard_span;
@@ -84,18 +93,38 @@ impl Machine {
         self.interconnect.world = world;
         self
     }
+
+    /// This machine scaled out to a two-tier cluster: `world` replicas
+    /// in nodes of `ranks_per_node`, keeping the machine's own link as
+    /// the fast intra-node tier and attaching the slow cluster link of
+    /// [`machines::cluster_uplink`] as the inter-node tier.
+    pub fn with_topology(mut self, world: usize, ranks_per_node: usize) -> Machine {
+        self.interconnect = machines::clustered(&self.interconnect, world, ranks_per_node);
+        self
+    }
 }
 
-/// The replica interconnect of a [`Machine`]: enough to price every
-/// collective algorithm's critical path and total wire traffic.
+/// The replica interconnect of a [`Machine`]: a two-tier topology
+/// (consecutive ranks packed into nodes) with distinct link bandwidth
+/// and hop latency per tier — enough to price every collective
+/// algorithm's critical path and total wire traffic. The historical
+/// flat presets are the degenerate one-tier case (`ranks_per_node ==
+/// 0`, both tiers carrying the same link), so every pre-existing
+/// prediction is unchanged.
 #[derive(Debug, Clone)]
 pub struct Interconnect {
     /// Number of replicas joined by this interconnect.
     pub world: usize,
-    /// Per-link bandwidth, bytes/s per direction.
-    pub link_bw: f64,
-    /// Per point-to-point message latency, seconds.
-    pub hop_latency_s: f64,
+    /// Consecutive ranks per node; 0 = one-tier (all ranks one node).
+    pub ranks_per_node: usize,
+    /// Intra-node link bandwidth, bytes/s per direction.
+    pub intra_bw: f64,
+    /// Intra-node per-message hop latency, seconds.
+    pub intra_lat_s: f64,
+    /// Inter-node link bandwidth, bytes/s per direction.
+    pub inter_bw: f64,
+    /// Inter-node per-message hop latency, seconds.
+    pub inter_lat_s: f64,
 }
 
 /// Which collective a comm kernel models (the [`Interconnect`] pricing
@@ -111,6 +140,49 @@ pub enum CollOp {
 }
 
 impl Interconnect {
+    /// A one-tier interconnect: every rank on one node, one link class.
+    pub fn one_tier(world: usize, link_bw: f64, hop_latency_s: f64) -> Self {
+        Self {
+            world,
+            ranks_per_node: 0,
+            intra_bw: link_bw,
+            intra_lat_s: hop_latency_s,
+            inter_bw: link_bw,
+            inter_lat_s: hop_latency_s,
+        }
+    }
+
+    /// A two-tier interconnect: nodes of `ranks_per_node` joined by a
+    /// fast intra link, nodes joined by a slow inter link.
+    pub fn two_tier(
+        world: usize,
+        ranks_per_node: usize,
+        intra_bw: f64,
+        intra_lat_s: f64,
+        inter_bw: f64,
+        inter_lat_s: f64,
+    ) -> Self {
+        assert!(ranks_per_node > 0, "two_tier: ranks_per_node must be positive");
+        Self { world, ranks_per_node, intra_bw, intra_lat_s, inter_bw, inter_lat_s }
+    }
+
+    /// The rank-to-node layout this interconnect wires up.
+    pub fn topology(&self) -> Topology {
+        Topology { world: self.world, ranks_per_node: self.ranks_per_node }
+    }
+
+    /// The link class a *topology-oblivious* algorithm (flat/ring/tree)
+    /// is priced at: those algorithms span global rank order, so once
+    /// the world crosses nodes their critical path rides the slow
+    /// inter-node tier. Returns `(bandwidth, latency)`.
+    fn oblivious_link(&self) -> (f64, f64) {
+        if self.topology().multi_node() {
+            (self.inter_bw, self.inter_lat_s)
+        } else {
+            (self.intra_bw, self.intra_lat_s)
+        }
+    }
+
     /// Critical-path seconds of one collective over `n` f32 elements
     /// with algorithm `algo`. `B = 4n`, `W = world`, `R = ⌈log₂W⌉`:
     ///
@@ -119,20 +191,27 @@ impl Interconnect {
     /// * ring all-reduce: `2(W−1)·(lat + (B/W)/bw)` — every link busy
     ///   every step on `1/W` chunks (bandwidth-optimal, latency-heavy);
     /// * tree all-reduce: `2R·(lat + B/bw)` — `log W` full-buffer hops
-    ///   each way (latency-optimal, bandwidth-heavy).
+    ///   each way (latency-optimal, bandwidth-heavy);
+    /// * hier all-reduce: intra ring phases + leader stars on the fast
+    ///   tier plus `2⌈log₂N⌉` full-buffer hops on the slow tier — the
+    ///   only algorithm that does *not* drop to the bottleneck link
+    ///   when the world spans nodes.
     ///
     /// Reduce-scatter / all-gather are the matching halves (the tree
-    /// variants add the root's serialized span scatter/gather star).
+    /// variants add the root's serialized span scatter/gather star; the
+    /// hier variants the root's region star and the leader span stars).
     pub fn collective_s(&self, algo: CommAlgo, op: CollOp, n: usize) -> f64 {
         let w = self.world;
         if w <= 1 {
             return 0.0;
         }
         let b = (4 * n) as f64;
-        let lat = self.hop_latency_s;
-        let bw = self.link_bw;
         let wf = w as f64;
         let steps = wf - 1.0;
+        if algo == CommAlgo::Hier {
+            return self.hier_collective_s(op, b);
+        }
+        let (bw, lat) = self.oblivious_link();
         let r = tree_rounds(w) as f64;
         match (algo, op) {
             (CommAlgo::Flat, CollOp::AllReduce) => 2.0 * lat + 2.0 * steps * b / bw,
@@ -147,16 +226,41 @@ impl Interconnect {
             (CommAlgo::Tree, CollOp::ReduceScatter) | (CommAlgo::Tree, CollOp::AllGather) => {
                 r * (lat + b / bw) + steps * (lat + (b / wf) / bw)
             }
+            (CommAlgo::Hier, _) => unreachable!("handled above"),
+        }
+    }
+
+    /// The [`CommAlgo::Hier`] critical path, mirroring the phases of
+    /// `comm::hier`: `s` = largest node size, `N` = nodes.
+    fn hier_collective_s(&self, op: CollOp, b: f64) -> f64 {
+        let topo = self.topology();
+        let s = topo.rpn().min(self.world) as f64;
+        let nn = topo.nodes();
+        let nf = nn as f64;
+        let (bwi, lati) = (self.intra_bw, self.intra_lat_s);
+        let (bwe, late) = (self.inter_bw, self.inter_lat_s);
+        // one intra ring sweep: s−1 steps of 1/s chunks on the fast tier
+        let ring1 = (s - 1.0) * (lati + (b / s) / bwi);
+        // one leader star: s−1 serialized span messages totaling (1−1/s)B
+        let star = (s - 1.0) * lati + (b - b / s) / bwi;
+        // one inter tree direction: ⌈log₂N⌉ full-buffer hops
+        let tree1 = if nn > 1 { tree_rounds(nn) as f64 * (late + b / bwe) } else { 0.0 };
+        // the root's region star: N−1 serialized 1/N-size messages
+        let region = if nn > 1 { (nf - 1.0) * late + (b - b / nf) / bwe } else { 0.0 };
+        match op {
+            CollOp::AllReduce => 2.0 * ring1 + 2.0 * star + 2.0 * tree1,
+            CollOp::ReduceScatter | CollOp::AllGather => ring1 + star + tree1 + region,
         }
     }
 
     /// Exact wire accounting of one collective — the same closed forms
     /// the real communicators record into `CommStats`.
     pub fn wire(&self, algo: CommAlgo, op: CollOp, n: usize) -> WireCost {
+        let topo = self.topology();
         match op {
-            CollOp::AllReduce => wire_all_reduce(algo, n, self.world),
-            CollOp::ReduceScatter => wire_reduce_scatter(algo, n, self.world),
-            CollOp::AllGather => wire_all_gather(algo, n, self.world),
+            CollOp::AllReduce => wire_all_reduce(algo, n, &topo),
+            CollOp::ReduceScatter => wire_reduce_scatter(algo, n, &topo),
+            CollOp::AllGather => wire_all_gather(algo, n, &topo),
         }
     }
 }
@@ -509,6 +613,17 @@ pub struct DdpSimResult {
     /// Predicted fraction of gradient-collective time hidden behind
     /// backward — the model's estimate of `DdpReport::overlap_frac`.
     pub overlap_frac: f64,
+    /// ZeRO-3 only: serial sum of the per-bucket pre-forward value
+    /// all-gathers, priced at the *next* forward's first touch of each
+    /// bucket rather than as post-update comm (the placement the
+    /// harness actually executes). Zero for the other stages.
+    pub gather_serial_s: f64,
+    /// ZeRO-3 only: gather time left exposed after the first-touch
+    /// pipeline. Backward-fusion releases values at the drain points,
+    /// so its gathers can issue eagerly and hide behind the forward
+    /// compute of earlier buckets; baseline and forward-fusion gather
+    /// inline at the touch, fully exposed.
+    pub gather_exposed_s: f64,
     /// Predicted per-iteration wallclock: compute + exposed comm.
     pub step_s: f64,
     /// Exact per-step wire accounting, summed over the unit collectives
@@ -523,12 +638,73 @@ pub struct DdpSimResult {
     pub memory: StageMemory,
 }
 
+/// The drain point of unit `i` of `n_units` in a backward-fusion step:
+/// backward retires units in reverse order at evenly-spaced points, so
+/// unit `i`'s refcounts drain once backward has retired the layers
+/// above it. Shared by [`simulate_ddp`]'s overlap pipeline and the
+/// per-bucket planner ([`crate::comm::plan`]) so the two can never
+/// disagree about where a collective may start.
+pub fn drain_point(backward_s: f64, n_units: usize, i: usize) -> f64 {
+    backward_s * (n_units - i) as f64 / n_units.max(1) as f64
+}
+
+/// The backward-fusion drain-point pipeline over per-unit collective
+/// times (in unit order): returns `(finish of the last collective,
+/// seconds hidden behind backward)`. A unit's collective starts at
+/// `max(its drain point, the previous collective's finish)`.
+pub fn drain_pipeline(backward_s: f64, unit_s: &[f64]) -> (f64, f64) {
+    let n_units = unit_s.len();
+    let mut finish = 0.0f64;
+    let mut hidden = 0.0f64;
+    for (i, c) in unit_s.iter().enumerate().rev() {
+        let drain = drain_point(backward_s, n_units, i);
+        let start = drain.max(finish);
+        finish = start + c;
+        hidden += backward_s.min(finish) - backward_s.min(start);
+    }
+    (finish, hidden)
+}
+
+/// The ZeRO-3 first-touch gather pipeline (satellite of the stage-aware
+/// step-time model): forward first touches unit `i` at `fwd·i/U` plus
+/// accumulated stalls; gathers issue eagerly in unit order on the comm
+/// channel (values have been shard-resident since the previous step's
+/// drain-point release, so nothing blocks issue). Returns the gather
+/// seconds left exposed on the forward critical path.
+pub fn forward_gather_pipeline(forward_s: f64, gather_s: &[f64]) -> f64 {
+    let u = gather_s.len();
+    if u == 0 {
+        return 0.0;
+    }
+    let seg = forward_s / u as f64;
+    let mut cursor = 0.0f64; // forward progress incl. stalls
+    let mut free = 0.0f64; // comm channel availability
+    let mut exposed = 0.0f64;
+    for (i, g) in gather_s.iter().enumerate() {
+        if i > 0 {
+            cursor += seg;
+        }
+        let finish = free + g;
+        free = finish;
+        if finish > cursor {
+            exposed += finish - cursor;
+            cursor = finish;
+        }
+    }
+    exposed
+}
+
 /// Predict one DDP training iteration: the single-device [`simulate`]
 /// plus the interconnect-priced collectives, placed where the schedule
 /// places them — serialized after backward (baseline: reduce+update per
 /// unit; forward-fusion: bulk reduce), or overlapped against backward at
 /// the refcount drain points (backward-fusion), with unit `i` of `U`
 /// assumed to drain once backward has retired the layers above it.
+/// ZeRO-3's per-bucket value all-gathers are priced at the *next*
+/// forward's first touch ([`forward_gather_pipeline`]) rather than as
+/// post-update comm — the placement the harness executes — so the
+/// planner sees the gather/compute window backward-fusion's drain-point
+/// release opens.
 pub fn simulate_ddp(
     m: &Machine,
     net: &NetSpec,
@@ -536,6 +712,26 @@ pub fn simulate_ddp(
     batch: usize,
     schedule: ScheduleKind,
     ddp: DdpSimConfig,
+) -> DdpSimResult {
+    let units = comm_unit_elems(net, ddp.bucket_cap_bytes);
+    let algos = vec![ddp.algo; units.len()];
+    simulate_ddp_with_algos(m, net, opt, batch, schedule, ddp, &algos)
+}
+
+/// [`simulate_ddp`] with an explicit per-unit algorithm assignment —
+/// the evaluation path of the `--algo auto` planner (`ddp.algo` prices
+/// the scalar loss reduce; `unit_algos[i]` prices unit `i`'s
+/// collectives). The two functions share every pricing and placement
+/// rule, which is what makes "the planned mix is never predicted slower
+/// than any uniform assignment" a checkable claim.
+pub fn simulate_ddp_with_algos(
+    m: &Machine,
+    net: &NetSpec,
+    opt: &OptSpec,
+    batch: usize,
+    schedule: ScheduleKind,
+    ddp: DdpSimConfig,
+    unit_algos: &[CommAlgo],
 ) -> DdpSimResult {
     // mirror the harness's own constraint (`train_ddp` rejects sharding
     // over scattered storage), so every prediction describes a run that
@@ -547,60 +743,77 @@ pub fn simulate_ddp(
     let compute = simulate(m, net, opt, batch, schedule);
     let ic = &m.interconnect;
     let units = comm_unit_elems(net, ddp.bucket_cap_bytes);
+    assert_eq!(unit_algos.len(), units.len(), "one algorithm per collective unit");
     let sharded = ddp.stage.sharded();
+    let z3 = ddp.stage.shards_values();
+    // drain-point collectives: AR replicated, RS+AG sharded — except
+    // ZeRO-3, whose AG belongs to the next forward's first touch
     let unit_s: Vec<f64> = units
         .iter()
-        .map(|n| {
-            if sharded {
-                ic.collective_s(ddp.algo, CollOp::ReduceScatter, *n)
-                    + ic.collective_s(ddp.algo, CollOp::AllGather, *n)
+        .zip(unit_algos)
+        .map(|(n, algo)| {
+            if z3 {
+                ic.collective_s(*algo, CollOp::ReduceScatter, *n)
+            } else if sharded {
+                ic.collective_s(*algo, CollOp::ReduceScatter, *n)
+                    + ic.collective_s(*algo, CollOp::AllGather, *n)
             } else {
-                ic.collective_s(ddp.algo, CollOp::AllReduce, *n)
+                ic.collective_s(*algo, CollOp::AllReduce, *n)
             }
         })
         .collect();
+    let gather_s: Vec<f64> = if z3 {
+        units
+            .iter()
+            .zip(unit_algos)
+            .map(|(n, algo)| ic.collective_s(*algo, CollOp::AllGather, *n))
+            .collect()
+    } else {
+        Vec::new()
+    };
     let loss_s = ic.collective_s(ddp.algo, CollOp::AllReduce, 1);
     let grad_comm: f64 = unit_s.iter().sum();
-    let comm_serial_s = grad_comm + loss_s;
+    let gather_serial_s: f64 = gather_s.iter().sum();
+    let comm_serial_s = grad_comm + loss_s + gather_serial_s;
     let mut wire_per_step = WireCost::default();
-    for n in &units {
+    for (n, algo) in units.iter().zip(unit_algos) {
         if sharded {
-            wire_per_step += ic.wire(ddp.algo, CollOp::ReduceScatter, *n);
-            wire_per_step += ic.wire(ddp.algo, CollOp::AllGather, *n);
+            wire_per_step += ic.wire(*algo, CollOp::ReduceScatter, *n);
+            wire_per_step += ic.wire(*algo, CollOp::AllGather, *n);
         } else {
-            wire_per_step += ic.wire(ddp.algo, CollOp::AllReduce, *n);
+            wire_per_step += ic.wire(*algo, CollOp::AllReduce, *n);
         }
     }
     wire_per_step += ic.wire(ddp.algo, CollOp::AllReduce, 1);
     let memory = stage_memory(&units, opt.state_slots as usize, ddp.stage, ic.world);
 
-    let (comm_exposed_s, overlap_frac) = match schedule {
-        ScheduleKind::Baseline | ScheduleKind::ForwardFusion => (comm_serial_s, 0.0),
+    let (drain_exposed_s, overlap_frac) = match schedule {
+        ScheduleKind::Baseline | ScheduleKind::ForwardFusion => (grad_comm + loss_s, 0.0),
         ScheduleKind::BackwardFusion => {
-            // drain-point pipeline: backward retires units in reverse
-            // order at evenly-spaced points; a unit's collective starts
-            // at max(its drain point, the previous collective's finish)
             let bwd = compute.backward_s;
-            let n_units = unit_s.len();
-            let mut finish = 0.0f64;
-            let mut hidden = 0.0f64;
-            for (i, c) in unit_s.iter().enumerate().rev() {
-                let drain = bwd * (n_units - i) as f64 / n_units.max(1) as f64;
-                let start = drain.max(finish);
-                finish = start + c;
-                hidden += bwd.min(finish) - bwd.min(start);
-            }
+            let (finish, hidden) = drain_pipeline(bwd, &unit_s);
             let exposed = (finish - bwd).max(0.0) + loss_s;
             let frac = if grad_comm > 0.0 { hidden / grad_comm } else { 0.0 };
             (exposed, frac)
         }
     };
+    // ZeRO-3 gathers: inline-blocking at the touch (fully exposed) for
+    // baseline/FF; eager-issue against forward compute under BF, whose
+    // drain-point release makes the values available a whole backward
+    // earlier
+    let gather_exposed_s = match schedule {
+        ScheduleKind::BackwardFusion => forward_gather_pipeline(compute.forward_s, &gather_s),
+        _ => gather_serial_s,
+    };
+    let comm_exposed_s = drain_exposed_s + gather_exposed_s;
     DdpSimResult {
         step_s: compute.total_s + comm_exposed_s,
         compute,
         comm_serial_s,
         comm_exposed_s,
         overlap_frac,
+        gather_serial_s,
+        gather_exposed_s,
         wire_per_step,
         memory,
     }
@@ -719,6 +932,113 @@ mod tests {
         for algo in CommAlgo::ALL {
             assert_eq!(m.interconnect.collective_s(algo, CollOp::AllReduce, 1 << 20), 0.0);
         }
+    }
+
+    /// Two-tier pricing: once the world spans nodes, the topology-
+    /// oblivious algorithms ride the slow uplink while hier keeps its
+    /// ring phases on the fast intra link. The crossover structure the
+    /// planner exploits: flat wins tiny buffers (2 uplink legs), hier
+    /// wins the mid band (intra rings + `2⌈log₂N⌉` uplink hops), the
+    /// chunked ring keeps the pure-bandwidth edge on huge buffers
+    /// (`1/W`-size uplink messages) — so no single global `--algo` is
+    /// right for a mixed bucket population.
+    #[test]
+    fn two_tier_cluster_has_a_hier_band_between_flat_and_ring() {
+        let one_node = titan_xp().with_world(8);
+        let cluster = titan_xp().with_topology(8, 4);
+        let ics = (&one_node.interconnect, &cluster.interconnect);
+        for algo in CommAlgo::ONE_TIER {
+            let flat_s = ics.0.collective_s(algo, CollOp::AllReduce, 32 << 20);
+            let clus_s = ics.1.collective_s(algo, CollOp::AllReduce, 32 << 20);
+            assert!(
+                clus_s > flat_s,
+                "{}: the uplink must cost something ({clus_s:.3e} vs {flat_s:.3e})",
+                algo.label()
+            );
+        }
+        let at = |algo, n| ics.1.collective_s(algo, CollOp::AllReduce, n);
+        // mid band (256 KiB): hier beats every topology-oblivious algo
+        let mid = 1 << 16;
+        for algo in CommAlgo::ONE_TIER {
+            assert!(
+                at(CommAlgo::Hier, mid) < at(algo, mid),
+                "hier must win the mid band vs {}",
+                algo.label()
+            );
+        }
+        // tiny: flat's two legs win; huge: the chunked ring wins
+        let tiny = 64;
+        assert!(at(CommAlgo::Flat, tiny) < at(CommAlgo::Hier, tiny));
+        let huge = 32 << 20;
+        assert!(at(CommAlgo::Ring, huge) < at(CommAlgo::Hier, huge));
+        assert!(at(CommAlgo::Hier, huge) < at(CommAlgo::Tree, huge));
+        assert!(at(CommAlgo::Hier, huge) < at(CommAlgo::Flat, huge));
+        // and the wire closed form follows the topology, not just time
+        let w_one = ics.0.wire(CommAlgo::Hier, CollOp::AllReduce, 100);
+        let w_two = ics.1.wire(CommAlgo::Hier, CollOp::AllReduce, 100);
+        assert_ne!(w_one, w_two, "hier wire shape must follow the node grid");
+    }
+
+    /// Satellite: stage-aware step time — ZeRO-3's value all-gathers are
+    /// priced at the next forward's first touch. Baseline exposes them
+    /// fully; backward-fusion's drain-point release lets them hide
+    /// behind forward compute; the wire volume never moves.
+    #[test]
+    fn zero3_gathers_price_at_forward_first_touch() {
+        let m = titan_xp().with_world(4);
+        let net = zoo::mobilenet_v2();
+        let opt = OptSpec::adam();
+        let ddp = DdpSimConfig {
+            algo: CommAlgo::Ring,
+            bucket_cap_bytes: Some(1 << 20),
+            stage: ShardStage::Zero3,
+        };
+        let base = simulate_ddp(&m, &net, &opt, 32, ScheduleKind::Baseline, ddp);
+        assert!(base.gather_serial_s > 0.0, "ZeRO-3 prices per-unit gathers");
+        assert_eq!(
+            base.gather_exposed_s, base.gather_serial_s,
+            "baseline gathers inline at the touch: fully exposed"
+        );
+        let bf = simulate_ddp(&m, &net, &opt, 32, ScheduleKind::BackwardFusion, ddp);
+        assert!(
+            bf.gather_exposed_s < bf.gather_serial_s,
+            "BF's early release opens the gather/compute window: {:.3e} < {:.3e}",
+            bf.gather_exposed_s,
+            bf.gather_serial_s
+        );
+        // same wire either way — placement moves time, not bytes
+        let z1 = DdpSimConfig { stage: ShardStage::Zero1, ..ddp };
+        let z1r = simulate_ddp(&m, &net, &opt, 32, ScheduleKind::BackwardFusion, z1);
+        assert_eq!(bf.wire_per_step, z1r.wire_per_step);
+        assert_eq!(z1r.gather_serial_s, 0.0, "only ZeRO-3 defers the gather");
+    }
+
+    /// The per-unit-algorithm evaluation path agrees with the uniform
+    /// path when every unit gets the same algorithm.
+    #[test]
+    fn per_unit_algos_degenerate_to_uniform() {
+        let m = titan_xp().with_world(4);
+        let net = zoo::mobilenet_v2();
+        let opt = OptSpec::adam();
+        let ddp = DdpSimConfig {
+            algo: CommAlgo::Tree,
+            bucket_cap_bytes: Some(1 << 20),
+            stage: ShardStage::None,
+        };
+        let uniform = simulate_ddp(&m, &net, &opt, 32, ScheduleKind::BackwardFusion, ddp);
+        let units = comm_unit_elems(&net, ddp.bucket_cap_bytes);
+        let algos = vec![CommAlgo::Tree; units.len()];
+        let explicit = simulate_ddp_with_algos(
+            &m,
+            &net,
+            &opt,
+            32,
+            ScheduleKind::BackwardFusion,
+            ddp,
+            &algos,
+        );
+        assert_eq!(uniform.step_s, explicit.step_s);
+        assert_eq!(uniform.wire_per_step, explicit.wire_per_step);
     }
 
     #[test]

@@ -25,7 +25,8 @@
 //!   multiply the collective round count by the chunk factor.
 
 use optfuse::comm::{
-    wire_all_gather, wire_all_reduce, wire_reduce_scatter, CommAlgo, ShardStage, WireCost,
+    wire_all_gather, wire_all_reduce, wire_reduce_scatter, CommAlgo, ShardStage, Topology,
+    WireCost,
 };
 use optfuse::data::image_batch;
 use optfuse::ddp::{train_ddp, DdpConfig, DdpReport};
@@ -122,7 +123,7 @@ fn ring_and_tree_train_bit_identically_to_flat_at_every_world_size() {
                (schedule, cap, shard, overlap): (ScheduleKind, Option<usize>, bool, usize)|
      -> DdpReport {
         let mut cfg = DdpConfig::new(world, schedule, 3, image_batch_maker());
-        cfg.algo = algo;
+        cfg.algo = algo.into();
         cfg.bucket_cap_bytes = cap;
         cfg.shard_stage = if shard { ShardStage::Zero1 } else { ShardStage::None };
         cfg.overlap_threads = overlap;
@@ -184,22 +185,23 @@ fn wire_accounting_matches_closed_forms_exactly() {
                 // steady-state per-step accounting doesn't apply
                 continue;
             }
-            for algo in CommAlgo::ALL {
+            for algo in CommAlgo::ONE_TIER {
                 let mut cfg = DdpConfig::new(world, schedule, steps, Box::new(lane_batch));
-                cfg.algo = algo;
+                cfg.algo = algo.into();
                 cfg.bucket_cap_bytes = Some(cap);
                 cfg.shard_stage = if shard { ShardStage::Zero1 } else { ShardStage::None };
                 let r = train_ddp(|| lane_graph(11, layers), sgd_momentum, sgd_hyper(), cfg);
+                let topo = Topology::flat(world);
                 let mut per_step = WireCost::default();
                 for n in &units {
                     if shard {
-                        per_step += wire_reduce_scatter(algo, *n, world);
-                        per_step += wire_all_gather(algo, *n, world);
+                        per_step += wire_reduce_scatter(algo, *n, &topo);
+                        per_step += wire_all_gather(algo, *n, &topo);
                     } else {
-                        per_step += wire_all_reduce(algo, *n, world);
+                        per_step += wire_all_reduce(algo, *n, &topo);
                     }
                 }
-                per_step += wire_all_reduce(algo, 1, world); // loss
+                per_step += wire_all_reduce(algo, 1, &topo); // loss
                 let label = format!("{schedule:?}/{}/shard={shard}", algo.label());
                 assert_eq!(
                     r.comm_bytes,
@@ -262,7 +264,7 @@ fn memsim_predicted_algo_ranking_matches_measured() {
         let mut per_schedule = [[0usize; 3]; 3];
         for (si, schedule) in schedules.iter().enumerate() {
             let mut step_s = [0.0f64; 3];
-            for (ai, algo) in CommAlgo::ALL.iter().enumerate() {
+            for (ai, algo) in CommAlgo::ONE_TIER.iter().enumerate() {
                 let ddp =
                     DdpSimConfig { algo: *algo, bucket_cap_bytes: None, stage: ShardStage::None };
                 step_s[ai] = simulate_ddp(&m, &net, &opt, 4, *schedule, ddp).step_s;
@@ -280,7 +282,7 @@ fn memsim_predicted_algo_ranking_matches_measured() {
     let measure = |schedule: ScheduleKind, algo: CommAlgo| -> f64 {
         let one = || {
             let mut cfg = DdpConfig::new(world, schedule, steps, Box::new(lane_batch));
-            cfg.algo = algo;
+            cfg.algo = algo.into();
             if schedule == ScheduleKind::BackwardFusion {
                 cfg.overlap_threads = 2;
             }
@@ -302,7 +304,7 @@ fn memsim_predicted_algo_ranking_matches_measured() {
         let mut all_match = true;
         for (si, schedule) in schedules.iter().enumerate() {
             let mut wait_ms = [0.0f64; 3];
-            for (ai, algo) in CommAlgo::ALL.iter().enumerate() {
+            for (ai, algo) in CommAlgo::ONE_TIER.iter().enumerate() {
                 wait_ms[ai] = measure(*schedule, *algo);
             }
             if !respects_order(&predicted[0][si], &wait_ms, slack) {
@@ -335,7 +337,7 @@ fn chunked_overlap_jobs_match_unchunked_bitwise() {
         cfg.bucket_cap_bytes = Some(1 << 20); // single bucket (3 KiB)
         cfg.comm_chunk_bytes = chunk;
         cfg.overlap_threads = overlap;
-        cfg.algo = CommAlgo::Ring;
+        cfg.algo = CommAlgo::Ring.into();
         train_ddp(|| lane_graph(31, layers), sgd_momentum, sgd_hyper(), cfg)
     };
     let whole = run(None, 2);

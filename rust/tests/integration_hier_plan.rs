@@ -1,0 +1,330 @@
+//! Hierarchical-collective + per-bucket-planner acceptance suite
+//! (tier-1): the two-tier topology axis and `--algo auto`.
+//!
+//! * **Bit-identity.** `HierComm` trains bit-identically to the flat
+//!   `SharedMemComm` at worlds 2–4 — including non-divisible
+//!   ranks-per-node grids — across all three schedules and all four
+//!   shard stages, end-to-end through the executor. (Per-collective
+//!   bit-identity and grid coverage live in `comm::hier` unit tests.)
+//! * **Exact wire accounting.** A hierarchical run's measured
+//!   `CommStats` bytes and hop legs equal `steps ×` the two-tier closed
+//!   forms in `comm::algo` — the same per-message loops `HierComm`
+//!   charges — summed over the run's actual bucket layout plus the
+//!   loss reduce. Same for an `--algo auto` run: the mixed session's
+//!   totals equal the sum of each unit's *planned* algorithm's closed
+//!   form. No tolerance.
+//! * **Planner dominance.** On two Table-2 machines scaled out to a
+//!   two-tier cluster, the memsim-predicted step time of the planned
+//!   per-bucket mix is never worse than the best single global
+//!   algorithm — for baseline and backward-fusion, replicated and
+//!   ZeRO-1 — and the plan genuinely mixes algorithms across the
+//!   bucket-size crossovers.
+
+use optfuse::comm::plan::{plan_units, PlanInputs};
+use optfuse::comm::{
+    wire_all_gather, wire_all_reduce, wire_reduce_scatter, AlgoSelect, CommAlgo, ShardStage,
+    Topology, WireCost,
+};
+use optfuse::data::image_batch;
+use optfuse::ddp::{train_ddp, DdpConfig, DdpReport};
+use optfuse::graph::{Graph, ScheduleKind, Src};
+use optfuse::memsim::machines::table2_machines;
+use optfuse::memsim::spec::{LayerSpec, NetSpec, OptSpec};
+use optfuse::memsim::{
+    comm_unit_elems, simulate, simulate_ddp, simulate_ddp_with_algos, DdpSimConfig,
+};
+use optfuse::models::mlp;
+use optfuse::ops::activation::Relu;
+use optfuse::ops::dense::Linear;
+use optfuse::ops::loss::MseLoss;
+use optfuse::optim::bucket::partition_by_bytes;
+use optfuse::optim::{Hyper, Optimizer, SgdMomentum};
+use optfuse::tensor::Tensor;
+use optfuse::util::XorShiftRng;
+
+fn sgd_momentum() -> Box<dyn Optimizer> {
+    Box::new(SgdMomentum)
+}
+
+fn sgd_hyper() -> Hyper {
+    Hyper { lr: 0.05, weight_decay: 0.0, ..Hyper::default() }
+}
+
+fn image_batch_maker() -> Box<dyn Fn(usize, usize) -> Vec<Tensor> + Send + Sync> {
+    Box::new(|rank, step| {
+        let mut rng = XorShiftRng::new(((rank as u64) << 32) | step as u64);
+        image_batch(2, 3, 16, 16, 10, &mut rng)
+    })
+}
+
+fn max_param_diff(a: &[Tensor], b: &[Tensor]) -> f32 {
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| x.max_abs_diff(y))
+        .fold(0.0f32, f32::max)
+}
+
+/// Acceptance: `HierComm` ≡ flat, bit for bit, at worlds 2–4 ×
+/// schedules × shard stages — on even and ragged node grids.
+#[test]
+fn hier_trains_bit_identically_to_flat_across_schedules_stages_and_grids() {
+    let cap = Some(1 << 12);
+    let run = |world: usize,
+               rpn: usize,
+               schedule: ScheduleKind,
+               algo: CommAlgo,
+               stage: ShardStage|
+     -> DdpReport {
+        let mut cfg = DdpConfig::new(world, schedule, 3, image_batch_maker());
+        cfg.algo = algo.into();
+        cfg.ranks_per_node = rpn; // 0 on the flat reference
+        cfg.bucket_cap_bytes = cap;
+        cfg.shard_stage = stage;
+        if schedule == ScheduleKind::BackwardFusion {
+            cfg.overlap_threads = 2;
+        }
+        train_ddp(|| mlp(99), sgd_momentum, sgd_hyper(), cfg)
+    };
+    // (world, ranks-per-node): 3/2 and 4/3 are the ragged grids the
+    // tentpole demands; 4/2 is the even two-node case
+    let grids: &[(usize, usize)] = &[(2, 2), (3, 2), (4, 2), (4, 3)];
+    for schedule in ScheduleKind::ALL {
+        for stage in ShardStage::ALL {
+            for &(world, rpn) in grids {
+                let flat = run(world, 0, schedule, CommAlgo::Flat, stage);
+                let hier = run(world, rpn, schedule, CommAlgo::Hier, stage);
+                let label =
+                    format!("{schedule:?} {} world {world} rpn {rpn}", stage.label());
+                assert_eq!(flat.losses, hier.losses, "{label}: losses bit-identical");
+                assert_eq!(
+                    max_param_diff(&flat.final_params, &hier.final_params),
+                    0.0,
+                    "{label}: final params bit-identical"
+                );
+                assert_eq!(hier.reduces_per_step, flat.reduces_per_step, "{label}");
+            }
+        }
+    }
+}
+
+/// 16×16 dense lanes (1 KiB per parameter) — the same construction the
+/// comm-model suite uses, so a 1 KiB bucket cap gives one unit per
+/// layer and the closed-form expectation is assembled per collective.
+fn lane_graph(seed: u64, layers: usize) -> Graph {
+    let mut rng = XorShiftRng::new(seed);
+    let mut g = Graph::new("lanes", 2);
+    let mut prev = Src::External(0);
+    for l in 0..layers {
+        let w = g.param(&format!("w{l}"), &[16, 16], &mut rng);
+        let lin = g.push(&format!("fc{l}"), Box::new(Linear::new(false)), vec![prev], vec![w]);
+        let act = g.push(&format!("relu{l}"), Box::new(Relu), vec![Src::Node(lin)], vec![]);
+        prev = Src::Node(act);
+    }
+    let loss = g.push("mse", Box::new(MseLoss), vec![prev, Src::External(1)], vec![]);
+    g.set_loss(loss);
+    g
+}
+
+fn lane_batch(rank: usize, step: usize) -> Vec<Tensor> {
+    let mut rng = XorShiftRng::new(4000 + ((rank as u64) << 20) + step as u64);
+    vec![Tensor::randn(&[4, 16], 1.0, &mut rng), Tensor::randn(&[4, 16], 1.0, &mut rng)]
+}
+
+/// Acceptance: measured bytes × hops of a hierarchical run equal the
+/// two-tier closed forms exactly — on a ragged grid, replicated and
+/// ZeRO-1, per schedule.
+#[test]
+fn hier_wire_accounting_matches_two_tier_closed_forms_exactly() {
+    let world = 3;
+    let rpn = 2; // ragged: nodes of 2 + 1
+    let topo = Topology::two_tier(world, rpn);
+    let steps = 4;
+    let cap = 1 << 10;
+    let layers = 5;
+    let lens: Vec<usize> = {
+        let g = lane_graph(11, layers);
+        g.store
+            .params
+            .iter()
+            .map(|p| p.data.read().unwrap().value.len())
+            .collect()
+    };
+    let units: Vec<usize> = partition_by_bytes(&lens, cap)
+        .iter()
+        .map(|group| group.iter().map(|i| lens[*i]).sum())
+        .collect();
+    let schedules =
+        [ScheduleKind::Baseline, ScheduleKind::ForwardFusion, ScheduleKind::BackwardFusion];
+    for shard in [false, true] {
+        for schedule in schedules {
+            if shard && schedule == ScheduleKind::ForwardFusion {
+                // FF's end-of-run flush all-gathers under sharding —
+                // steady-state per-step accounting doesn't apply
+                continue;
+            }
+            let mut cfg = DdpConfig::new(world, schedule, steps, Box::new(lane_batch));
+            cfg.algo = CommAlgo::Hier.into();
+            cfg.ranks_per_node = rpn;
+            cfg.bucket_cap_bytes = Some(cap);
+            cfg.shard_stage = if shard { ShardStage::Zero1 } else { ShardStage::None };
+            let r = train_ddp(|| lane_graph(11, layers), sgd_momentum, sgd_hyper(), cfg);
+            let mut per_step = WireCost::default();
+            for n in &units {
+                if shard {
+                    per_step += wire_reduce_scatter(CommAlgo::Hier, *n, &topo);
+                    per_step += wire_all_gather(CommAlgo::Hier, *n, &topo);
+                } else {
+                    per_step += wire_all_reduce(CommAlgo::Hier, *n, &topo);
+                }
+            }
+            per_step += wire_all_reduce(CommAlgo::Hier, 1, &topo); // loss
+            let label = format!("{schedule:?}/hier/shard={shard}");
+            assert_eq!(
+                r.comm_bytes,
+                per_step.bytes * steps as u64,
+                "{label}: measured bytes must equal the two-tier closed form exactly"
+            );
+            assert_eq!(
+                r.comm_hops,
+                per_step.hops * steps as u64,
+                "{label}: measured hop legs must equal the two-tier closed form exactly"
+            );
+        }
+    }
+}
+
+/// Acceptance: an `--algo auto` run is bit-identical to flat, reports
+/// its plan, and its mixed session's measured wire equals the sum of
+/// each unit's *planned* algorithm's closed form plus the plan's
+/// default algorithm for the loss reduce — one accounting path across
+/// a mixed-algorithm session.
+#[test]
+fn auto_plan_runs_bit_identically_with_exact_mixed_wire_accounting() {
+    let world = 3;
+    let steps = 4;
+    let cap = 1 << 10;
+    let layers = 5;
+    let run = |algo: AlgoSelect| -> DdpReport {
+        let mut cfg = DdpConfig::new(world, ScheduleKind::Baseline, steps, Box::new(lane_batch));
+        cfg.algo = algo;
+        cfg.bucket_cap_bytes = Some(cap);
+        train_ddp(|| lane_graph(11, layers), sgd_momentum, sgd_hyper(), cfg)
+    };
+    let flat = run(AlgoSelect::Fixed(CommAlgo::Flat));
+    let auto = run(AlgoSelect::Auto);
+    assert_eq!(flat.losses, auto.losses, "auto must not change the math");
+    assert_eq!(max_param_diff(&flat.final_params, &auto.final_params), 0.0);
+    let plan = auto.plan.as_ref().expect("auto run reports its plan");
+    assert_eq!(plan.units.len(), layers, "one planned unit per 1 KiB bucket");
+    let topo = Topology::flat(world);
+    let mut per_step = WireCost::default();
+    for u in &plan.units {
+        per_step += wire_all_reduce(u.algo, u.elems, &topo);
+    }
+    per_step += wire_all_reduce(plan.default_algo, 1, &topo); // loss
+    assert_eq!(
+        auto.comm_bytes,
+        per_step.bytes * steps as u64,
+        "mixed session bytes must equal the planned per-unit closed forms"
+    );
+    assert_eq!(
+        auto.comm_hops,
+        per_step.hops * steps as u64,
+        "mixed session hop legs must equal the planned per-unit closed forms"
+    );
+}
+
+/// A memsim net whose parameter sizes straddle every algorithm
+/// crossover of a two-tier cluster: tiny, mid-band, and multi-MiB
+/// tensors (the bucket partition keeps them in separate units).
+fn mixed_size_netspec() -> NetSpec {
+    let sizes = [64usize, 4096, 1 << 16, 1 << 20];
+    NetSpec {
+        name: "mixed".into(),
+        layers: sizes
+            .iter()
+            .enumerate()
+            .map(|(i, n)| LayerSpec {
+                name: format!("l{i}"),
+                param_elems: vec![*n as u64],
+                in_elems: 64,
+                out_elems: 64,
+                flops_per_item: 2.0 * *n as f64,
+            })
+            .collect(),
+    }
+}
+
+/// Acceptance: on two Table-2 machines scaled to a 8 = 4×2 cluster,
+/// the planner-chosen per-bucket mix is never predicted slower than
+/// any single global algorithm — baseline and backward-fusion,
+/// replicated and ZeRO-1 — and the plan actually mixes algorithms.
+#[test]
+fn planned_mix_never_predicted_slower_than_any_global_algo_on_table2_machines() {
+    let net = mixed_size_netspec();
+    let opt = OptSpec::sgd_momentum();
+    let batch = 4;
+    let cap = Some(1 << 18); // 256 KiB buckets: sizes stay in separate units
+    let mut saw_mixed = false;
+    for machine in table2_machines().into_iter().take(2) {
+        let m = machine.with_topology(8, 4);
+        for schedule in [ScheduleKind::Baseline, ScheduleKind::BackwardFusion] {
+            for stage in [ShardStage::None, ShardStage::Zero1] {
+                let units = comm_unit_elems(&net, cap);
+                let compute = simulate(&m, &net, &opt, batch, schedule);
+                let bwd = if schedule == ScheduleKind::BackwardFusion {
+                    compute.backward_s
+                } else {
+                    0.0
+                };
+                let plan = plan_units(
+                    &units,
+                    &PlanInputs {
+                        ic: &m.interconnect,
+                        stage,
+                        backward_s: bwd,
+                        workers: 0,
+                        bucket_cap_bytes: cap,
+                    },
+                );
+                let auto = simulate_ddp_with_algos(
+                    &m,
+                    &net,
+                    &opt,
+                    batch,
+                    schedule,
+                    DdpSimConfig { algo: plan.default_algo, bucket_cap_bytes: cap, stage },
+                    &plan.algos(),
+                );
+                let mut distinct: Vec<CommAlgo> = plan.algos();
+                distinct.dedup();
+                if distinct.len() > 1 {
+                    saw_mixed = true;
+                }
+                for algo in CommAlgo::ALL {
+                    let fixed = simulate_ddp(
+                        &m,
+                        &net,
+                        &opt,
+                        batch,
+                        schedule,
+                        DdpSimConfig { algo, bucket_cap_bytes: cap, stage },
+                    );
+                    assert!(
+                        auto.step_s <= fixed.step_s + 1e-12,
+                        "{} {schedule:?} {}: planned {:.6e} vs global {} {:.6e}",
+                        m.name,
+                        stage.label(),
+                        auto.step_s,
+                        algo.label(),
+                        fixed.step_s
+                    );
+                }
+            }
+        }
+    }
+    assert!(
+        saw_mixed,
+        "a mixed-size bucket population on a two-tier cluster must mix algorithms"
+    );
+}
