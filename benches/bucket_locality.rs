@@ -15,6 +15,7 @@
 mod common;
 
 use optfuse::data::image_batch;
+use optfuse::exec::kernel::{KernelConfig, KernelMode};
 use optfuse::exec::{ExecConfig, Executor};
 use optfuse::graph::{Graph, ScheduleKind};
 use optfuse::optim::{self, Hyper};
@@ -34,6 +35,17 @@ fn measure(
     batch: usize,
     steps: usize,
 ) -> Measured {
+    measure_kernel(build, kind, bucket_cap_bytes, batch, steps, KernelConfig::default())
+}
+
+fn measure_kernel(
+    build: fn(u64) -> Graph,
+    kind: ScheduleKind,
+    bucket_cap_bytes: Option<usize>,
+    batch: usize,
+    steps: usize,
+    kernel: KernelConfig,
+) -> Measured {
     let mut ex = Executor::new(
         build(42),
         optim::by_name("adam").unwrap(),
@@ -43,6 +55,7 @@ fn measure(
             threads: 0,
             race_guard: true,
             bucket_cap_bytes,
+            kernel,
             ..Default::default()
         },
     )
@@ -144,5 +157,57 @@ fn main() {
             );
         }
     }
+    // ---- kernel-mode axis: scalar vs simd vs simd-mt step time per zoo
+    // model, bucketed storage, backward-fusion (the schedule the kernels
+    // were built for). This is the acceptance table of the SIMD tentpole:
+    // the speedup column is simd/simd-mt step time vs the scalar
+    // reference, and losses are asserted bit-identical across modes (the
+    // kernel-equivalence contract, live in the harness). The table lands
+    // in the CI bench-smoke artifact, so per-mode step time is diffed per
+    // PR; ≥2× for at least one model under simd-mt is the PR's bar.
+    println!("\n  kernel-mode axis (backward-fusion, 1MiB buckets, adam):\n");
+    println!(
+        "  {:<18} {:<8} {:>10} {:>10} {:>12}",
+        "model", "kernel", "opt ms", "iter ms", "vs scalar"
+    );
+    for (name, build) in zoo {
+        let mut scalar: Option<Measured> = None;
+        for mode in KernelMode::ALL {
+            let kernel = KernelConfig { mode, lanes: 8, threads: 2 };
+            let m = measure_kernel(
+                *build,
+                ScheduleKind::BackwardFusion,
+                Some(1 << 20),
+                batch,
+                steps,
+                kernel,
+            );
+            let (_, _, opt_ms) = m.report.breakdown_ms();
+            let speedup = match &scalar {
+                None => 1.0,
+                Some(s) => {
+                    assert_eq!(
+                        s.report.losses, m.report.losses,
+                        "{name}/{}: kernel modes must not change training",
+                        mode.label()
+                    );
+                    s.report.iter_ms() / m.report.iter_ms().max(1e-9)
+                }
+            };
+            println!(
+                "  {:<18} {:<8} {:>10.3} {:>10.2} {:>11.2}x",
+                name,
+                mode.label(),
+                opt_ms,
+                m.report.iter_ms(),
+                speedup
+            );
+            if scalar.is_none() {
+                scalar = Some(m);
+            }
+        }
+        println!();
+    }
+
     println!("\nbucket locality bench complete ✓ (losses bit-identical across layouts)");
 }

@@ -38,6 +38,7 @@ mod common;
 use optfuse::comm::{AlgoSelect, CommAlgo, ShardStage, WireCost};
 use optfuse::data::image_batch;
 use optfuse::ddp::{train_ddp, DdpConfig, DdpReport};
+use optfuse::exec::kernel::{KernelConfig, KernelMode};
 use optfuse::graph::ScheduleKind;
 use optfuse::memsim::{machines, stage_memory, CollOp};
 use optfuse::models;
@@ -55,6 +56,16 @@ struct Axis {
 const CAP: usize = 1 << 20;
 
 fn run(world: usize, algo: AlgoSelect, axis: &Axis, steps: usize) -> DdpReport {
+    run_kernel(world, algo, axis, steps, KernelConfig::default())
+}
+
+fn run_kernel(
+    world: usize,
+    algo: AlgoSelect,
+    axis: &Axis,
+    steps: usize,
+    kernel: KernelConfig,
+) -> DdpReport {
     train_ddp(
         || models::deep_mlp(3),
         || optim::by_name("adam").unwrap(),
@@ -70,6 +81,7 @@ fn run(world: usize, algo: AlgoSelect, axis: &Axis, steps: usize) -> DdpReport {
             comm_chunk_bytes: None,
             shard_stage: axis.stage,
             overlap_threads: axis.overlap,
+            kernel,
             load_from: None,
             save_to: None,
             local_batch_maker: Box::new(move |rank, step| {
@@ -429,6 +441,38 @@ fn main() {
             r.comm_bytes as f64 / (1 << 20) as f64,
             r.losses.last().unwrap_or(&f32::NAN)
         );
+    }
+    println!();
+
+    // ---- `--kernel` axis: the compute-kernel modes under DDP — one row
+    // per mode on the overlapped backward-fusion axis. The math must be
+    // bit-identical across modes (the kernel-equivalence contract); the
+    // iteration times land in the uploaded artifact so per-mode DDP step
+    // time is tracked per PR alongside the single-replica table in
+    // bucket_locality.
+    println!("  kernel axis (world={algo_world}, {}): compute-kernel modes", algo_axis.label);
+    println!("    kernel    iter ms   comm MiB   overlap%   loss");
+    let mut kernel_losses: Option<Vec<f32>> = None;
+    for mode in KernelMode::ALL {
+        let kernel = KernelConfig { mode, lanes: 8, threads: 2 };
+        let r = run_kernel(algo_world, CommAlgo::Flat.into(), algo_axis, steps, kernel);
+        println!(
+            "    {:<8} {:>8.2}  {:>9.2}  {:>8.0}%   {:.4}",
+            mode.label(),
+            r.iter_ms,
+            r.comm_bytes as f64 / (1 << 20) as f64,
+            r.overlap_frac * 100.0,
+            r.losses.last().unwrap_or(&f32::NAN)
+        );
+        match &kernel_losses {
+            None => kernel_losses = Some(r.losses),
+            Some(want) => assert_eq!(
+                want,
+                &r.losses,
+                "{}: kernel modes must not change the math",
+                mode.label()
+            ),
+        }
     }
     println!();
 

@@ -66,6 +66,7 @@
 use crate::checkpoint;
 use crate::comm::plan::{plan_units, MixedComm, PlanInputs, StepPlan};
 use crate::comm::{make_comm, tags, AlgoSelect, CommCtx, Communicator, ShardStage, Topology};
+use crate::exec::kernel::KernelConfig;
 use crate::exec::{ExecConfig, Executor};
 use crate::graph::{Graph, ScheduleKind};
 use crate::memsim::machines;
@@ -191,6 +192,10 @@ pub struct DdpConfig {
     /// integrated but serialized); >0 = jobs overlap backward.
     /// Ignored by the other schedules.
     pub overlap_threads: usize,
+    /// Compute-kernel selection for every replica's matmul / fused-update
+    /// hot path (`--kernel scalar|simd|simd-mt`). Bit-identical across
+    /// modes; purely a performance knob.
+    pub kernel: KernelConfig,
     /// Restore every replica from this checkpoint before step 0
     /// (re-narrowing state to each rank's shard when sharding).
     pub load_from: Option<PathBuf>,
@@ -223,6 +228,7 @@ impl DdpConfig {
             comm_chunk_bytes: None,
             shard_stage: ShardStage::None,
             overlap_threads: 0,
+            kernel: KernelConfig::default(),
             load_from: None,
             save_to: None,
             local_batch_maker,
@@ -344,6 +350,7 @@ pub fn train_ddp(
             let comm_chunk_bytes = cfg.comm_chunk_bytes;
             let stage = cfg.shard_stage;
             let overlap_threads = cfg.overlap_threads;
+            let kernel = cfg.kernel;
             let load_from = cfg.load_from.clone();
             let save_to = cfg.save_to.clone();
             scope.spawn(move || {
@@ -358,6 +365,7 @@ pub fn train_ddp(
                         threads,
                         bucket_cap_bytes,
                         comm_chunk_bytes,
+                        kernel,
                         ..Default::default()
                     },
                 )

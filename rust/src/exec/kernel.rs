@@ -1,0 +1,146 @@
+//! Kernel-mode configuration for the compute hot path.
+//!
+//! [`KernelConfig`] selects how `ops::linalg` matmuls and the fused optimizer
+//! updates execute: a scalar reference path, an 8-lane register-blocked SIMD
+//! path, or the SIMD path with row blocks split across scoped threads. All
+//! three are bit-identical by construction (see ARCHITECTURE.md, "Compute
+//! kernels"), so the mode is a pure performance knob.
+//!
+//! The active config is published process-wide by [`set_global`] (called from
+//! `Executor::new`) because the innermost kernels are reached from free
+//! functions with no config parameter. Until an executor publishes one, the
+//! default comes from the `OPTFUSE_KERNEL` environment variable (falling back
+//! to `simd`), which is how CI runs the whole test suite under each mode.
+
+use std::sync::atomic::{AtomicBool, AtomicU8, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Which compute-kernel implementation to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum KernelMode {
+    /// Plain scalar loops; the reference the other modes must bit-match.
+    Scalar = 0,
+    /// 8-lane register-blocked kernels, single threaded.
+    Simd = 1,
+    /// SIMD kernels with output blocks split across scoped threads.
+    SimdMt = 2,
+}
+
+impl KernelMode {
+    /// Every mode, in reference-first order.
+    pub const ALL: [KernelMode; 3] = [KernelMode::Scalar, KernelMode::Simd, KernelMode::SimdMt];
+
+    /// Parse a CLI / env spelling of a mode.
+    pub fn parse(s: &str) -> Option<KernelMode> {
+        match s {
+            "scalar" => Some(KernelMode::Scalar),
+            "simd" => Some(KernelMode::Simd),
+            "simd-mt" | "simd_mt" => Some(KernelMode::SimdMt),
+            _ => None,
+        }
+    }
+
+    /// Canonical CLI spelling.
+    pub fn label(self) -> &'static str {
+        match self {
+            KernelMode::Scalar => "scalar",
+            KernelMode::Simd => "simd",
+            KernelMode::SimdMt => "simd-mt",
+        }
+    }
+
+    fn from_u8(v: u8) -> KernelMode {
+        match v {
+            0 => KernelMode::Scalar,
+            1 => KernelMode::Simd,
+            _ => KernelMode::SimdMt,
+        }
+    }
+}
+
+/// Compute-kernel settings carried on `ExecConfig` / `DdpConfig`.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelConfig {
+    /// Which implementation to dispatch to.
+    pub mode: KernelMode,
+    /// SIMD tile width in f32 lanes (multiple of 8; affects only tile shape,
+    /// never per-element reduction order, so any width is bit-identical).
+    pub lanes: usize,
+    /// Worker threads for `simd-mt` block splits (ignored by other modes).
+    pub threads: usize,
+}
+
+impl Default for KernelConfig {
+    fn default() -> Self {
+        let mode = std::env::var("OPTFUSE_KERNEL")
+            .ok()
+            .and_then(|s| KernelMode::parse(&s))
+            .unwrap_or(KernelMode::Simd);
+        KernelConfig {
+            mode,
+            lanes: 8,
+            threads: 2,
+        }
+    }
+}
+
+static SET: AtomicBool = AtomicBool::new(false);
+static MODE: AtomicU8 = AtomicU8::new(KernelMode::Simd as u8);
+static LANES: AtomicUsize = AtomicUsize::new(8);
+static THREADS: AtomicUsize = AtomicUsize::new(2);
+static ENV_DEFAULT: OnceLock<KernelConfig> = OnceLock::new();
+
+/// Publish `cfg` as the process-wide kernel config.
+///
+/// The three fields are stored as independent atomics; a reader racing with a
+/// writer may observe a mixed config, which is harmless because every
+/// (mode, lanes, threads) combination produces bit-identical results.
+pub fn set_global(cfg: KernelConfig) {
+    MODE.store(cfg.mode as u8, Ordering::Relaxed);
+    LANES.store(cfg.lanes.max(8), Ordering::Relaxed);
+    THREADS.store(cfg.threads, Ordering::Relaxed);
+    SET.store(true, Ordering::Release);
+}
+
+/// The process-wide kernel config: the last [`set_global`] value, or the
+/// `OPTFUSE_KERNEL`-derived default if none was ever published.
+pub fn global() -> KernelConfig {
+    if SET.load(Ordering::Acquire) {
+        KernelConfig {
+            mode: KernelMode::from_u8(MODE.load(Ordering::Relaxed)),
+            lanes: LANES.load(Ordering::Relaxed),
+            threads: THREADS.load(Ordering::Relaxed),
+        }
+    } else {
+        *ENV_DEFAULT.get_or_init(KernelConfig::default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_labels() {
+        for m in KernelMode::ALL {
+            assert_eq!(KernelMode::parse(m.label()), Some(m));
+        }
+        assert_eq!(KernelMode::parse("simd_mt"), Some(KernelMode::SimdMt));
+        assert_eq!(KernelMode::parse("avx"), None);
+    }
+
+    #[test]
+    fn set_global_is_visible() {
+        set_global(KernelConfig {
+            mode: KernelMode::SimdMt,
+            lanes: 16,
+            threads: 3,
+        });
+        let g = global();
+        assert_eq!(g.mode, KernelMode::SimdMt);
+        assert_eq!(g.lanes, 16);
+        assert_eq!(g.threads, 3);
+        set_global(KernelConfig::default());
+    }
+}

@@ -43,6 +43,7 @@
 //! concern; every schedule arm here is algorithm-agnostic.
 
 pub mod hooks;
+pub mod kernel;
 pub mod pool;
 
 use crate::comm::{tags, CommCtx};
@@ -102,6 +103,11 @@ pub struct ExecConfig {
     /// bulk/serial by design). Chunk grids are deterministic, so
     /// chunking never changes the math.
     pub comm_chunk_bytes: Option<usize>,
+    /// Compute-kernel selection for the matmul / fused-update hot path
+    /// (`--kernel scalar|simd|simd-mt`). Published process-wide by
+    /// [`Executor::new`]; every mode is bit-identical, so this is purely
+    /// a performance knob (see [`kernel`]).
+    pub kernel: kernel::KernelConfig,
 }
 
 impl Default for ExecConfig {
@@ -113,6 +119,7 @@ impl Default for ExecConfig {
             accum_steps: 1,
             bucket_cap_bytes: None,
             comm_chunk_bytes: None,
+            kernel: kernel::KernelConfig::default(),
         }
     }
 }
@@ -223,6 +230,7 @@ impl Executor {
                 opt.name()
             );
         }
+        kernel::set_global(cfg.kernel);
         let mut graph = graph;
         if let Some(cap) = cfg.bucket_cap_bytes {
             graph.store.bucketize(cap);

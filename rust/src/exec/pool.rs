@@ -28,6 +28,36 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+/// Split `data` (a flat [rows, row_len] buffer) into contiguous row
+/// blocks and run `f(first_row, block)` for each, on scoped threads when
+/// more than one block results. This is the compute-side work splitter
+/// the `simd-mt` kernels use ([`crate::ops::linalg`]): blocks partition
+/// the *output*, never a reduction dimension, so the per-element
+/// arithmetic order — and therefore the result — is bit-identical to
+/// running `f(0, data)` on one thread. Scoped threads (not the persistent
+/// update pool) keep the borrow of `a`/`b` operands lifetime-safe; the
+/// fork cost is paid only above the kernels' size thresholds.
+pub fn run_blocks<F>(data: &mut [f32], row_len: usize, threads: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    assert!(row_len > 0, "run_blocks needs a row length");
+    assert_eq!(data.len() % row_len, 0, "data must be whole rows");
+    let rows = data.len() / row_len;
+    let t = threads.max(1).min(rows.max(1));
+    if t <= 1 {
+        f(0, data);
+        return;
+    }
+    let per_rows = (rows + t - 1) / t;
+    std::thread::scope(|s| {
+        for (bi, block) in data.chunks_mut(per_rows * row_len).enumerate() {
+            let f = &f;
+            s.spawn(move || f(bi * per_rows, block));
+        }
+    });
+}
+
 /// The schedulable unit an update job targets.
 pub enum JobTarget {
     /// One parameter in scattered storage.

@@ -13,6 +13,7 @@ use optfuse::comm::{AlgoSelect, CommAlgo, ShardStage, Topology};
 use optfuse::config::Args;
 use optfuse::data;
 use optfuse::ddp::{train_ddp, DdpConfig};
+use optfuse::exec::kernel::{KernelConfig, KernelMode};
 use optfuse::exec::{ExecConfig, Executor};
 use optfuse::graph::ScheduleKind;
 use optfuse::memsim::{self, machines, spec::OptSpec, zoo, DdpSimConfig};
@@ -74,6 +75,20 @@ fn bucket_cap_from(args: &Args) -> Option<usize> {
     }
 }
 
+/// `--kernel scalar|simd|simd-mt` plus `--lanes N` / `--kernel-threads N`;
+/// defaults come from [`KernelConfig::default`] (the `OPTFUSE_KERNEL` env
+/// var, else `simd`).
+fn kernel_from(args: &Args) -> anyhow::Result<KernelConfig> {
+    let mut cfg = KernelConfig::default();
+    if let Some(s) = args.get("kernel") {
+        cfg.mode = KernelMode::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("unknown kernel mode '{s}' (scalar|simd|simd-mt)"))?;
+    }
+    cfg.lanes = args.usize_or("lanes", cfg.lanes);
+    cfg.threads = args.usize_or("kernel-threads", cfg.threads);
+    Ok(cfg)
+}
+
 fn storage_label(cap: Option<usize>) -> String {
     match cap {
         Some(cap) => format!("bucketed({cap}B)"),
@@ -103,6 +118,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let threads = args.usize_or("threads", 4);
     let seed = args.usize_or("seed", 1) as u64;
     let bucket_cap = bucket_cap_from(args);
+    let kernel = kernel_from(args)?;
 
     let graph = models::by_name(&model, seed)
         .ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
@@ -110,11 +126,12 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("unknown optimizer '{opt_name}'"))?;
     println!(
         "training {model} ({} params, {} layers) schedule={} optimizer={opt_name} batch={batch} \
-         storage={}",
+         storage={} kernel={}",
         graph.store.num_scalars(),
         graph.num_layers(),
         schedule.label(),
-        storage_label(bucket_cap)
+        storage_label(bucket_cap),
+        kernel.mode.label()
     );
     let mut ex = Executor::new(
         graph,
@@ -125,6 +142,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             threads,
             race_guard: true,
             bucket_cap_bytes: bucket_cap,
+            kernel,
             ..Default::default()
         },
     )?;
@@ -163,19 +181,22 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         "transformer_base" => zoo::transformer_base(),
         other => anyhow::bail!("unknown sim model '{other}'"),
     };
+    let kernel = kernel_from(args)?;
     let machine = match machine_name.as_str() {
         "titan_xp" => machines::titan_xp(),
         "gtx_1080" => machines::gtx_1080(),
         "gtx_1070_maxq" => machines::gtx_1070_maxq(),
         "cpu" => machines::cpu_host(),
         other => anyhow::bail!("unknown machine '{other}'"),
-    };
+    }
+    .with_kernel_mode(kernel.mode);
     let opt = OptSpec::by_name(&opt_name)
         .ok_or_else(|| anyhow::anyhow!("unknown optimizer '{opt_name}'"))?;
     println!(
-        "simulating {model} ({:.1}M params) on {} | batch {batch} optimizer {opt_name}",
+        "simulating {model} ({:.1}M params) on {} | batch {batch} optimizer {opt_name} kernel {}",
         net.total_params() as f64 / 1e6,
-        machine.name
+        machine.name,
+        kernel.mode.label()
     );
     let base = memsim::simulate(&machine, &net, &opt, batch, ScheduleKind::Baseline);
     for kind in ScheduleKind::ALL {
@@ -405,16 +426,18 @@ fn cmd_ddp(args: &Args) -> anyhow::Result<()> {
         bucket_cap = Some(1 << 20);
         println!("(--chunk-cap needs bucketed storage; defaulting --bucket-cap to 1 MiB)");
     }
+    let kernel = kernel_from(args)?;
     println!(
         "DDP: world={world} schedule={} algo={} topology={} steps={steps} storage={} \
-         shard-stage={} overlap_threads={} chunk={:?}",
+         shard-stage={} overlap_threads={} chunk={:?} kernel={}",
         schedule.label(),
         algo.label(),
         topo.label(),
         storage_label(bucket_cap),
         stage.label(),
         overlap,
-        chunk_cap
+        chunk_cap,
+        kernel.mode.label()
     );
     let report = train_ddp(
         || models::mobilenet_v2_ish(3),
@@ -431,6 +454,7 @@ fn cmd_ddp(args: &Args) -> anyhow::Result<()> {
             comm_chunk_bytes: chunk_cap,
             shard_stage: stage,
             overlap_threads: overlap,
+            kernel,
             load_from: None,
             save_to: None,
             local_batch_maker: Box::new(move |rank, step| {

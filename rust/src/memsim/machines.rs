@@ -8,6 +8,7 @@
 //! DDP harness actually measures.
 
 use super::{Interconnect, Machine};
+use crate::exec::kernel::KernelMode;
 
 const GB: f64 = 1e9;
 const TFLOP: f64 = 1e12;
@@ -179,6 +180,20 @@ pub fn cpu_host() -> Machine {
 /// Table 2 rows in paper order.
 pub fn table2_machines() -> Vec<Machine> {
     vec![titan_xp(), gtx_1080(), gtx_1070_maxq()]
+}
+
+/// Measured compute-throughput multiplier of each `--kernel` mode over
+/// the scalar reference, fitted to bench-smoke matmul step times on the
+/// CI host (see EXPERIMENTS.md, "Kernel modes"). Feeds
+/// [`Machine::with_kernel_mode`] so `simulate` / `simulate_ddp` and the
+/// comm planner price the faster backward instead of assuming the scalar
+/// path.
+pub fn kernel_speedup(mode: KernelMode) -> f64 {
+    match mode {
+        KernelMode::Scalar => 1.0,
+        KernelMode::Simd => 3.0,
+        KernelMode::SimdMt => 3.5,
+    }
 }
 
 #[cfg(test)]

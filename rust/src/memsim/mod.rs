@@ -102,6 +102,17 @@ impl Machine {
         self.interconnect = machines::clustered(&self.interconnect, world, ranks_per_node);
         self
     }
+
+    /// This machine with its achieved compute throughput scaled by the
+    /// fitted speedup of a `--kernel` mode ([`machines::kernel_speedup`]):
+    /// the SIMD / threaded kernels raise `flops_efficiency` (capped at
+    /// peak), so `simulate` / [`simulate_ddp`] — and the comm planner
+    /// pricing drain exposure against `backward_s` — see the faster
+    /// backward instead of assuming the scalar path.
+    pub fn with_kernel_mode(mut self, mode: crate::exec::kernel::KernelMode) -> Machine {
+        self.flops_efficiency = (self.flops_efficiency * machines::kernel_speedup(mode)).min(1.0);
+        self
+    }
 }
 
 /// The replica interconnect of a [`Machine`]: a two-tier topology
@@ -904,6 +915,37 @@ mod tests {
             (s64 - s256).abs() / s64.max(s256) < 0.35,
             "saved ms should be roughly flat: {s64:.2} vs {s256:.2}"
         );
+    }
+
+    #[test]
+    fn kernel_mode_speeds_up_simulated_backward() {
+        use crate::exec::kernel::KernelMode;
+        let net = zoo::mobilenet_v2();
+        let opt = OptSpec::adam();
+        let scalar = titan_xp().with_kernel_mode(KernelMode::Scalar);
+        assert_eq!(
+            scalar.flops_efficiency,
+            titan_xp().flops_efficiency,
+            "scalar mode is the identity multiplier"
+        );
+        let base = simulate(&titan_xp(), &net, &opt, 32, ScheduleKind::Baseline);
+        let simd_m = titan_xp().with_kernel_mode(KernelMode::Simd);
+        let simd = simulate(&simd_m, &net, &opt, 32, ScheduleKind::Baseline);
+        assert!(
+            simd.backward_s < base.backward_s,
+            "simd backward {:.4} should beat scalar {:.4}",
+            simd.backward_s,
+            base.backward_s
+        );
+        let mt_m = titan_xp().with_kernel_mode(KernelMode::SimdMt);
+        let mt = simulate(&mt_m, &net, &opt, 32, ScheduleKind::Baseline);
+        assert!(
+            mt.backward_s <= simd.backward_s,
+            "simd-mt backward {:.4} should be at least as fast as simd {:.4}",
+            mt.backward_s,
+            simd.backward_s
+        );
+        assert!(mt.total_s < base.total_s, "faster kernels lower the whole step");
     }
 
     #[test]

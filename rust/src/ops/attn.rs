@@ -3,6 +3,7 @@
 //! Linear nodes, so attention itself carries no parameters).
 
 use super::linalg::softmax_rows;
+use super::simd::dot8;
 use super::{Op, OpCtx, OpGrads};
 use crate::tensor::Tensor;
 
@@ -53,11 +54,7 @@ impl Op for MultiHeadAttention {
                         }
                         let krow =
                             &k.data()[(bi * t + j) * d + hi * dh..(bi * t + j) * d + (hi + 1) * dh];
-                        let mut acc = 0.0f32;
-                        for (a, c) in qrow.iter().zip(krow.iter()) {
-                            acc += a * c;
-                        }
-                        att[i * t + j] = acc * scale;
+                        att[i * t + j] = dot8(qrow, krow) * scale;
                     }
                 }
                 softmax_rows(att, t, t);

@@ -1,40 +1,89 @@
 //! Native linear-algebra kernels. These are the CPU hot path of the
 //! engine (matmul dominates fwd/bwd time, exactly as on the paper's GPUs),
-//! so they are written cache-blocked; the perf pass iterates here.
+//! so they are written cache-blocked and register-blocked; the perf pass
+//! iterates here.
+//!
+//! Every matmul variant dispatches on [`crate::exec::kernel::KernelConfig`]:
+//! a scalar reference path, an 8-lane SIMD path built on [`super::simd::F32x8`]
+//! tiles, and a threaded path that splits non-reduction output rows across
+//! scoped workers. All three honour a pinned per-element reduction order
+//! (ascending reduction index, one mul + one add per index for `matmul_acc` /
+//! `matmul_at_acc`; the [`super::simd::dot8`] 8-partial-lane contract for
+//! `matmul_bt_acc`), so every mode, lane width, and thread count produces
+//! bit-identical output. See ARCHITECTURE.md, "Compute kernels".
+
+use super::simd::{dot8, F32x8};
+use crate::exec::kernel::{self, KernelConfig, KernelMode};
+use crate::exec::pool::run_blocks;
+
+/// Rows-per-register-block for the SIMD matmul tiles.
+const MR: usize = 4;
+/// Max 8-lane vectors per j-tile (lanes config is clamped to 8·MAX_NV).
+const MAX_NV: usize = 4;
+/// Reduction-dim cache block, sized for L1/L2 residency of the b rows.
+const KB: usize = 256;
+/// Below this many multiply-adds the scoped-thread fork costs more than it
+/// saves, so `simd-mt` falls back to the single-threaded SIMD kernel.
+const MT_MIN_MULS: usize = 8 * 1024;
 
 /// c[m,n] += a[m,k] * b[k,n]  (row-major, accumulating).
 pub fn matmul_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    matmul_acc_with(&kernel::global(), a, b, c, m, k, n);
+}
+
+/// [`matmul_acc`] with an explicit kernel config (tests sweep modes here).
+pub fn matmul_acc_with(
+    cfg: &KernelConfig,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
     assert_eq!(a.len(), m * k, "a");
     assert_eq!(b.len(), k * n, "b");
     assert_eq!(c.len(), m * n, "c");
-    // i-k-j loop order: unit-stride over b and c rows; block k for L1/L2.
-    // The k-loop is unrolled 4× so each pass over the c row retires four
-    // rank-1 updates — 4× less c-row load/store traffic, which is the
-    // bottleneck once b rows stream from L2.
-    const KB: usize = 256;
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    match cfg.mode {
+        KernelMode::Scalar => acc_scalar(a, b, c, m, k, n),
+        KernelMode::Simd => acc_simd(a, b, c, m, k, n, cfg.lanes),
+        KernelMode::SimdMt => {
+            if cfg.threads <= 1 || m < 2 || m * k * n < MT_MIN_MULS {
+                acc_simd(a, b, c, m, k, n, cfg.lanes);
+            } else {
+                let lanes = cfg.lanes;
+                run_blocks(c, n, cfg.threads, |row0, cblock| {
+                    let rows = cblock.len() / n;
+                    acc_simd(&a[row0 * k..(row0 + rows) * k], b, cblock, rows, k, n, lanes);
+                });
+            }
+        }
+    }
+}
+
+/// c[m,n] = a[m,k] * b[k,n] (overwriting).
+pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    c.iter_mut().for_each(|x| *x = 0.0);
+    matmul_acc(a, b, c, m, k, n);
+}
+
+/// Scalar reference for `matmul_acc`: i-k-j order, unit stride over the b and
+/// c rows, k blocked for cache. Per output element the reduction index kk is
+/// strictly ascending with one mul + one add each — the order the SIMD and
+/// threaded paths must reproduce (no unrolled grouping, no zero skipping:
+/// `c + 0.0` is not an identity for -0.0).
+fn acc_scalar(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     let mut k0 = 0;
     while k0 < k {
         let k1 = (k0 + KB).min(k);
         for i in 0..m {
             let arow = &a[i * k..(i + 1) * k];
             let crow = &mut c[i * n..(i + 1) * n];
-            let mut kk = k0;
-            while kk + 4 <= k1 {
-                let (a0, a1, a2, a3) = (arow[kk], arow[kk + 1], arow[kk + 2], arow[kk + 3]);
-                let b0 = &b[kk * n..(kk + 1) * n];
-                let b1 = &b[(kk + 1) * n..(kk + 2) * n];
-                let b2 = &b[(kk + 2) * n..(kk + 3) * n];
-                let b3 = &b[(kk + 3) * n..(kk + 4) * n];
-                for j in 0..n {
-                    crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
-                }
-                kk += 4;
-            }
-            for kk in kk..k1 {
+            for kk in k0..k1 {
                 let av = arow[kk];
-                if av == 0.0 {
-                    continue;
-                }
                 let brow = &b[kk * n..(kk + 1) * n];
                 for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
                     *cv += av * *bv;
@@ -45,40 +94,148 @@ pub fn matmul_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: us
     }
 }
 
-/// c[m,n] = a[m,k] * b[k,n] (overwriting).
-pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
-    c.iter_mut().for_each(|x| *x = 0.0);
-    matmul_acc(a, b, c, m, k, n);
+/// Register-blocked `matmul_acc`: MR×(nv·8) c-tiles held in `F32x8`
+/// accumulators across the k block. The tile shape changes which elements
+/// advance together, never the per-element order, so this is bit-identical
+/// to `acc_scalar` for any `lanes`.
+fn acc_simd(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, lanes: usize) {
+    let nv = (lanes / 8).clamp(1, MAX_NV);
+    let tile = nv * 8;
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + KB).min(k);
+        let mut i = 0;
+        while i < m {
+            let mr = MR.min(m - i);
+            let mut j = 0;
+            while j + tile <= n {
+                let mut acc = [[F32x8::ZERO; MAX_NV]; MR];
+                for r in 0..mr {
+                    for v in 0..nv {
+                        acc[r][v] = F32x8::load(&c[(i + r) * n + j + v * 8..]);
+                    }
+                }
+                for kk in k0..k1 {
+                    let brow = &b[kk * n..];
+                    let mut bv = [F32x8::ZERO; MAX_NV];
+                    for v in 0..nv {
+                        bv[v] = F32x8::load(&brow[j + v * 8..]);
+                    }
+                    for r in 0..mr {
+                        let av = F32x8::splat(a[(i + r) * k + kk]);
+                        for v in 0..nv {
+                            acc[r][v] = acc[r][v].add(av.mul(bv[v]));
+                        }
+                    }
+                }
+                for r in 0..mr {
+                    for v in 0..nv {
+                        acc[r][v].store(&mut c[(i + r) * n + j + v * 8..]);
+                    }
+                }
+                j += tile;
+            }
+            if j < n {
+                for r in 0..mr {
+                    let arow = &a[(i + r) * k..(i + r + 1) * k];
+                    let crow = &mut c[(i + r) * n..(i + r + 1) * n];
+                    for kk in k0..k1 {
+                        let av = arow[kk];
+                        let brow = &b[kk * n..(kk + 1) * n];
+                        for jj in j..n {
+                            crow[jj] += av * brow[jj];
+                        }
+                    }
+                }
+            }
+            i += mr;
+        }
+        k0 += KB;
+    }
 }
 
 /// c[m,n] += a[m,k] * b[n,k]^T  — i.e. B is stored row-major [n,k] and used
 /// transposed. Common in backward: dX = dY · Wᵀ.
 pub fn matmul_bt_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    matmul_bt_acc_with(&kernel::global(), a, b, c, m, k, n);
+}
+
+/// [`matmul_bt_acc`] with an explicit kernel config.
+pub fn matmul_bt_acc_with(
+    cfg: &KernelConfig,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), n * k);
     assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    match cfg.mode {
+        KernelMode::Scalar => bt_scalar(a, b, c, m, k, n),
+        KernelMode::Simd => bt_simd(a, b, c, m, k, n),
+        KernelMode::SimdMt => {
+            if cfg.threads <= 1 || m < 2 || m * k * n < MT_MIN_MULS {
+                bt_simd(a, b, c, m, k, n);
+            } else {
+                run_blocks(c, n, cfg.threads, |row0, cblock| {
+                    let rows = cblock.len() / n;
+                    bt_simd(&a[row0 * k..(row0 + rows) * k], b, cblock, rows, k, n);
+                });
+            }
+        }
+    }
+}
+
+/// Scalar reference for `matmul_bt_acc`: every output element is a [`dot8`]
+/// of an a row and a b row (8 modular partial sums, ascending-lane combine,
+/// sequential tail) — the pinned dot contract.
+fn bt_scalar(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     for i in 0..m {
         let arow = &a[i * k..(i + 1) * k];
         let crow = &mut c[i * n..(i + 1) * n];
-        for j in 0..n {
-            let brow = &b[j * k..(j + 1) * k];
-            // Dot product with 8 independent partial sums: breaks the
-            // loop-carried dependency so LLVM vectorizes to a full SIMD
-            // accumulator (one serial accumulator leaves >4x on the table).
-            let mut acc = [0.0f32; 8];
-            let chunks = k / 8;
+        for (j, cv) in crow.iter_mut().enumerate() {
+            *cv += dot8(arow, &b[j * k..(j + 1) * k]);
+        }
+    }
+}
+
+/// `matmul_bt_acc` with four output columns sharing each a-row load. Lane q
+/// of each accumulator sees exactly the kk ≡ q (mod 8) sequence [`dot8`]
+/// prescribes, so the result is bit-identical to `bt_scalar`.
+fn bt_simd(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    const JB: usize = 4;
+    let chunks = k / 8;
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        let mut j = 0;
+        while j + JB <= n {
+            let mut acc = [F32x8::ZERO; JB];
             for ch in 0..chunks {
-                let ao = &arow[ch * 8..ch * 8 + 8];
-                let bo = &brow[ch * 8..ch * 8 + 8];
-                for l in 0..8 {
-                    acc[l] += ao[l] * bo[l];
+                let av = F32x8::load(&arow[ch * 8..]);
+                for l in 0..JB {
+                    let bv = F32x8::load(&b[(j + l) * k + ch * 8..]);
+                    acc[l] = acc[l].add(av.mul(bv));
                 }
             }
-            let mut total = acc.iter().sum::<f32>();
-            for l in chunks * 8..k {
-                total += arow[l] * brow[l];
+            for l in 0..JB {
+                let brow = &b[(j + l) * k..(j + l + 1) * k];
+                let mut total = acc[l].sum();
+                for kk in chunks * 8..k {
+                    total += arow[kk] * brow[kk];
+                }
+                crow[j + l] += total;
             }
-            crow[j] += total;
+            j += JB;
+        }
+        for jj in j..n {
+            crow[jj] += dot8(arow, &b[jj * k..(jj + 1) * k]);
         }
     }
 }
@@ -86,43 +243,123 @@ pub fn matmul_bt_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n:
 /// c[k,n] += a[m,k]^T * b[m,n] — A used transposed. Common in backward:
 /// dW = Xᵀ · dY.
 pub fn matmul_at_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    matmul_at_acc_with(&kernel::global(), a, b, c, m, k, n);
+}
+
+/// [`matmul_at_acc`] with an explicit kernel config.
+pub fn matmul_at_acc_with(
+    cfg: &KernelConfig,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), m * n);
     assert_eq!(c.len(), k * n);
-    // Unroll the reduction dim (i over rows of a and b) 4×: each c-row
-    // pass retires four rank-1 updates, quartering c traffic.
-    let mut i = 0;
-    while i + 4 <= m {
-        let a0 = &a[i * k..(i + 1) * k];
-        let a1 = &a[(i + 1) * k..(i + 2) * k];
-        let a2 = &a[(i + 2) * k..(i + 3) * k];
-        let a3 = &a[(i + 3) * k..(i + 4) * k];
-        let b0 = &b[i * n..(i + 1) * n];
-        let b1 = &b[(i + 1) * n..(i + 2) * n];
-        let b2 = &b[(i + 2) * n..(i + 3) * n];
-        let b3 = &b[(i + 3) * n..(i + 4) * n];
-        for kk in 0..k {
-            let (x0, x1, x2, x3) = (a0[kk], a1[kk], a2[kk], a3[kk]);
-            let crow = &mut c[kk * n..(kk + 1) * n];
-            for j in 0..n {
-                crow[j] += x0 * b0[j] + x1 * b1[j] + x2 * b2[j] + x3 * b3[j];
+    if k == 0 || n == 0 || m == 0 {
+        return;
+    }
+    match cfg.mode {
+        KernelMode::Scalar => at_scalar(a, b, c, m, k, n),
+        KernelMode::Simd => at_simd(a, b, c, m, k, n, 0, k, cfg.lanes),
+        KernelMode::SimdMt => {
+            if cfg.threads <= 1 || k < 2 || m * k * n < MT_MIN_MULS {
+                at_simd(a, b, c, m, k, n, 0, k, cfg.lanes);
+            } else {
+                let lanes = cfg.lanes;
+                run_blocks(c, n, cfg.threads, |kk0, cblock| {
+                    let krows = cblock.len() / n;
+                    at_simd(a, b, cblock, m, k, n, kk0, krows, lanes);
+                });
             }
         }
-        i += 4;
     }
-    for i in i..m {
+}
+
+/// Scalar reference for `matmul_at_acc`: the reduction runs over rows i of a
+/// and b; per output element i is strictly ascending with one mul + one add
+/// each (no grouping, no zero skipping — same contract as `acc_scalar`).
+fn at_scalar(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    for i in 0..m {
         let arow = &a[i * k..(i + 1) * k];
         let brow = &b[i * n..(i + 1) * n];
         for (kk, av) in arow.iter().enumerate() {
             let av = *av;
-            if av == 0.0 {
-                continue;
-            }
             let crow = &mut c[kk * n..(kk + 1) * n];
             for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
                 *cv += av * *bv;
             }
         }
+    }
+}
+
+/// Register-blocked `matmul_at_acc` over the c-row block `kk0..kk0+krows`
+/// (`c` is only that block, so the threaded path can hand out disjoint row
+/// ranges). i stays innermost and ascending per element — bit-identical to
+/// `at_scalar`.
+#[allow(clippy::too_many_arguments)]
+fn at_simd(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    kk0: usize,
+    krows: usize,
+    lanes: usize,
+) {
+    let nv = (lanes / 8).clamp(1, MAX_NV);
+    let tile = nv * 8;
+    let mut r0 = 0;
+    while r0 < krows {
+        let mr = MR.min(krows - r0);
+        let mut j = 0;
+        while j + tile <= n {
+            let mut acc = [[F32x8::ZERO; MAX_NV]; MR];
+            for r in 0..mr {
+                for v in 0..nv {
+                    acc[r][v] = F32x8::load(&c[(r0 + r) * n + j + v * 8..]);
+                }
+            }
+            for i in 0..m {
+                let brow = &b[i * n..];
+                let mut bv = [F32x8::ZERO; MAX_NV];
+                for v in 0..nv {
+                    bv[v] = F32x8::load(&brow[j + v * 8..]);
+                }
+                let arow = &a[i * k..];
+                for r in 0..mr {
+                    let av = F32x8::splat(arow[kk0 + r0 + r]);
+                    for v in 0..nv {
+                        acc[r][v] = acc[r][v].add(av.mul(bv[v]));
+                    }
+                }
+            }
+            for r in 0..mr {
+                for v in 0..nv {
+                    acc[r][v].store(&mut c[(r0 + r) * n + j + v * 8..]);
+                }
+            }
+            j += tile;
+        }
+        if j < n {
+            for i in 0..m {
+                let arow = &a[i * k..];
+                let brow = &b[i * n..(i + 1) * n];
+                for r in 0..mr {
+                    let av = arow[kk0 + r0 + r];
+                    let crow = &mut c[(r0 + r) * n..(r0 + r + 1) * n];
+                    for jj in j..n {
+                        crow[jj] += av * brow[jj];
+                    }
+                }
+            }
+        }
+        r0 += mr;
     }
 }
 
@@ -328,6 +565,52 @@ mod tests {
         let mut c = vec![10.0; 4];
         matmul_acc(&a, &b, &mut c, 2, 2, 2);
         assert_eq!(c, vec![12.0; 4]);
+    }
+
+    #[test]
+    fn kernel_modes_bit_identical() {
+        // Every mode × lane width × thread count must reproduce the scalar
+        // reference bit-for-bit, including remainder tails and nonzero
+        // initial c (the accumulating contract).
+        let shapes = [
+            (1, 1, 1),
+            (3, 7, 5),
+            (4, 8, 16),
+            (5, 9, 17),
+            (13, 31, 29),
+            (16, 64, 24),
+        ];
+        let mut rng = XorShiftRng::new(99);
+        for (m, k, n) in shapes {
+            let a = rand_vec(&mut rng, m * k);
+            let b_acc = rand_vec(&mut rng, k * n);
+            let b_bt = rand_vec(&mut rng, n * k);
+            let b_at = rand_vec(&mut rng, m * n);
+            let c0_acc = rand_vec(&mut rng, m * n);
+            let c0_at = rand_vec(&mut rng, k * n);
+            let mut ref_acc = c0_acc.clone();
+            acc_scalar(&a, &b_acc, &mut ref_acc, m, k, n);
+            let mut ref_bt = c0_acc.clone();
+            bt_scalar(&a, &b_bt, &mut ref_bt, m, k, n);
+            let mut ref_at = c0_at.clone();
+            at_scalar(&a, &b_at, &mut ref_at, m, k, n);
+            for lanes in [8, 16, 32] {
+                for threads in 1..=4 {
+                    for mode in KernelMode::ALL {
+                        let cfg = KernelConfig { mode, lanes, threads };
+                        let mut c = c0_acc.clone();
+                        matmul_acc_with(&cfg, &a, &b_acc, &mut c, m, k, n);
+                        assert_eq!(c, ref_acc, "acc {mode:?} {lanes}x{threads} {m}x{k}x{n}");
+                        let mut c = c0_acc.clone();
+                        matmul_bt_acc_with(&cfg, &a, &b_bt, &mut c, m, k, n);
+                        assert_eq!(c, ref_bt, "bt {mode:?} {lanes}x{threads} {m}x{k}x{n}");
+                        let mut c = c0_at.clone();
+                        matmul_at_acc_with(&cfg, &a, &b_at, &mut c, m, k, n);
+                        assert_eq!(c, ref_at, "at {mode:?} {lanes}x{threads} {m}x{k}x{n}");
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -16,6 +16,7 @@ pub mod linalg;
 pub mod loss;
 pub mod norm;
 pub mod shape;
+pub mod simd;
 
 use crate::tensor::Tensor;
 

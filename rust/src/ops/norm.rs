@@ -2,6 +2,7 @@
 //! scale/shift BatchNorm over NCHW using batch statistics (inference-style
 //! running stats are out of scope — the paper times training iterations).
 
+use super::simd::{sum8, var_sum8};
 use super::{Op, OpCtx, OpGrads};
 use crate::tensor::Tensor;
 
@@ -36,8 +37,8 @@ impl Op for LayerNorm {
         let mut inv_std = vec![0.0f32; rows];
         for r in 0..rows {
             let row = &x.data()[r * d..(r + 1) * d];
-            let mean = row.iter().sum::<f32>() / d as f32;
-            let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+            let mean = sum8(row) / d as f32;
+            let var = var_sum8(row, mean) / d as f32;
             let is = 1.0 / (var + self.eps).sqrt();
             inv_std[r] = is;
             for i in 0..d {
@@ -142,16 +143,13 @@ impl Op for BatchNorm2d {
             let mut mean = 0.0f32;
             for b in 0..n {
                 let base = (b * c + ch) * hw;
-                mean += x.data()[base..base + hw].iter().sum::<f32>();
+                mean += sum8(&x.data()[base..base + hw]);
             }
             mean /= cnt;
             let mut var = 0.0f32;
             for b in 0..n {
                 let base = (b * c + ch) * hw;
-                var += x.data()[base..base + hw]
-                    .iter()
-                    .map(|v| (v - mean) * (v - mean))
-                    .sum::<f32>();
+                var += var_sum8(&x.data()[base..base + hw], mean);
             }
             var /= cnt;
             let is = 1.0 / (var + self.eps).sqrt();

@@ -1,0 +1,200 @@
+//! Portable wide-lane f32 primitives for the compute kernels.
+//!
+//! `F32x8` is a plain `[f32; 8]` wrapper written so the autovectorizer can
+//! lower its `add`/`mul` loops to a single SIMD instruction (AVX2 `vaddps` /
+//! `vmulps` on x86-64). There are no intrinsics and no `unsafe`; the struct is
+//! purely a register-blocking idiom, so every kernel built on it stays
+//! bit-identical to a scalar loop that performs the same multiply/add sequence
+//! in the same order (Rust never contracts `a * b + c` into an FMA).
+//!
+//! The reduction-order contract shared with `ops::linalg::matmul_bt_acc` lives
+//! in [`dot8`]: eight modular partial sums over the reduction index, lanes
+//! combined in ascending order, then a sequential tail. [`sum8`] / [`var_sum8`]
+//! apply the same contract to plain summation so `ops::norm` can reuse it.
+
+/// Eight f32 lanes accumulated together; the unit of register blocking.
+#[derive(Clone, Copy, Debug)]
+pub struct F32x8([f32; 8]);
+
+impl F32x8 {
+    /// All lanes zero.
+    pub const ZERO: F32x8 = F32x8([0.0; 8]);
+
+    /// Broadcast `v` into every lane.
+    #[inline(always)]
+    pub fn splat(v: f32) -> Self {
+        F32x8([v; 8])
+    }
+
+    /// Load the first eight elements of `s` (panics if `s.len() < 8`).
+    #[inline(always)]
+    pub fn load(s: &[f32]) -> Self {
+        let mut out = [0.0f32; 8];
+        out.copy_from_slice(&s[..8]);
+        F32x8(out)
+    }
+
+    /// Store the lanes into the first eight elements of `d`.
+    #[inline(always)]
+    pub fn store(self, d: &mut [f32]) {
+        d[..8].copy_from_slice(&self.0);
+    }
+
+    /// Lane-wise `self + o`.
+    #[inline(always)]
+    pub fn add(self, o: F32x8) -> Self {
+        let mut out = self.0;
+        for (x, y) in out.iter_mut().zip(o.0.iter()) {
+            *x += *y;
+        }
+        F32x8(out)
+    }
+
+    /// Lane-wise `self * o`.
+    #[inline(always)]
+    pub fn mul(self, o: F32x8) -> Self {
+        let mut out = self.0;
+        for (x, y) in out.iter_mut().zip(o.0.iter()) {
+            *x *= *y;
+        }
+        F32x8(out)
+    }
+
+    /// Sum of the lanes in ascending lane order (part of the reduction-order
+    /// contract: lane 0 first, lane 7 last, one add per lane).
+    #[inline(always)]
+    pub fn sum(self) -> f32 {
+        self.0.iter().sum()
+    }
+}
+
+/// Dot product of `a[..k]` and `b[..k]` under the pinned 8-partial-lane
+/// contract: lane `l` accumulates indices `kk ≡ l (mod 8)` in ascending order,
+/// lanes are summed in ascending order, and the `k % 8` tail is added
+/// sequentially. This is the exact summation order the scalar
+/// `matmul_bt_acc` reference uses, so SIMD and scalar agree bit-for-bit.
+#[inline(always)]
+pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
+    let k = a.len().min(b.len());
+    let chunks = k / 8;
+    let mut acc = F32x8::ZERO;
+    for ch in 0..chunks {
+        let av = F32x8::load(&a[ch * 8..]);
+        let bv = F32x8::load(&b[ch * 8..]);
+        acc = acc.add(av.mul(bv));
+    }
+    let mut total = acc.sum();
+    for kk in chunks * 8..k {
+        total += a[kk] * b[kk];
+    }
+    total
+}
+
+/// Sum of `x` under the same 8-partial-lane contract as [`dot8`].
+#[inline(always)]
+pub fn sum8(x: &[f32]) -> f32 {
+    let chunks = x.len() / 8;
+    let mut acc = F32x8::ZERO;
+    for ch in 0..chunks {
+        acc = acc.add(F32x8::load(&x[ch * 8..]));
+    }
+    let mut total = acc.sum();
+    for v in &x[chunks * 8..] {
+        total += *v;
+    }
+    total
+}
+
+/// Sum of squared deviations `Σ (x - mean)^2` under the [`dot8`] contract.
+#[inline(always)]
+pub fn var_sum8(x: &[f32], mean: f32) -> f32 {
+    let chunks = x.len() / 8;
+    let m = F32x8::splat(mean);
+    let mut acc = F32x8::ZERO;
+    for ch in 0..chunks {
+        let mut d = F32x8::load(&x[ch * 8..]);
+        // d = x - mean, built from lane ops to keep one sub + one mul + one
+        // add per element, matching the scalar tail below.
+        let neg = F32x8::splat(-1.0);
+        d = d.add(m.mul(neg));
+        acc = acc.add(d.mul(d));
+    }
+    let mut total = acc.sum();
+    for v in &x[chunks * 8..] {
+        let d = *v - mean;
+        total += d * d;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn serial_dot8(a: &[f32], b: &[f32]) -> f32 {
+        let k = a.len();
+        let chunks = k / 8;
+        let mut lanes = [0.0f32; 8];
+        for ch in 0..chunks {
+            for l in 0..8 {
+                lanes[l] += a[ch * 8 + l] * b[ch * 8 + l];
+            }
+        }
+        let mut total = lanes.iter().sum::<f32>();
+        for kk in chunks * 8..k {
+            total += a[kk] * b[kk];
+        }
+        total
+    }
+
+    #[test]
+    fn dot8_matches_serial_contract() {
+        for k in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 31, 100] {
+            let a: Vec<f32> = (0..k).map(|i| (i as f32 * 0.37).sin()).collect();
+            let b: Vec<f32> = (0..k).map(|i| (i as f32 * 0.11).cos()).collect();
+            assert_eq!(dot8(&a, &b), serial_dot8(&a, &b), "k={k}");
+        }
+    }
+
+    #[test]
+    fn dot8_known_values() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [4.0, 5.0, 6.0];
+        assert_eq!(dot8(&a, &b), 32.0);
+        assert_eq!(dot8(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn sum8_and_var_sum8_match_serial() {
+        for n in [0usize, 1, 7, 8, 9, 33] {
+            let x: Vec<f32> = (0..n).map(|i| (i as f32 * 0.71).sin()).collect();
+            let mut lanes = [0.0f32; 8];
+            let chunks = n / 8;
+            for ch in 0..chunks {
+                for l in 0..8 {
+                    lanes[l] += x[ch * 8 + l];
+                }
+            }
+            let mut want = lanes.iter().sum::<f32>();
+            for v in &x[chunks * 8..] {
+                want += *v;
+            }
+            assert_eq!(sum8(&x), want, "n={n}");
+
+            let mean = if n == 0 { 0.0 } else { sum8(&x) / n as f32 };
+            let mut vl = [0.0f32; 8];
+            for ch in 0..chunks {
+                for l in 0..8 {
+                    let d = x[ch * 8 + l] + mean * -1.0;
+                    vl[l] += d * d;
+                }
+            }
+            let mut vwant = vl.iter().sum::<f32>();
+            for v in &x[chunks * 8..] {
+                let d = *v - mean;
+                vwant += d * d;
+            }
+            assert_eq!(var_sum8(&x, mean), vwant, "n={n}");
+        }
+    }
+}

@@ -27,8 +27,9 @@
 //! forward/backward path never holds a parameter lock while acquiring a
 //! bucket lock. That ordering makes concurrent pool updates deadlock-free.
 
+use crate::exec::kernel;
 use crate::graph::{ParamId, ParamRef};
-use crate::optim::{Hyper, Optimizer};
+use crate::optim::{run_update_slices, Hyper, Optimizer};
 use crate::tensor::flat::FlatLayout;
 use crate::tensor::Tensor;
 use std::sync::{Arc, RwLock};
@@ -470,6 +471,7 @@ pub fn apply_bucket_update_range(
         goff + glen
     );
     let BucketData { grads, state, members, .. } = &mut *bd;
+    let cfg = kernel::global();
     for m in members.iter() {
         let Some((a, b)) = member_overlap(m, offset, len) else { continue };
         let mut pd = m.param.data.write().unwrap();
@@ -479,7 +481,7 @@ pub fn apply_bucket_update_range(
             .iter_mut()
             .map(|s| &mut s.data_mut()[a - soff..b - soff])
             .collect();
-        opt.update_slices(step, value, grad, &mut slots, hp, global_scale);
+        run_update_slices(opt, &cfg, step, value, grad, &mut slots, hp, global_scale);
     }
 }
 
@@ -518,7 +520,7 @@ pub fn apply_bucket_update_shard_resident(
     let value = values.as_mut().expect("released values").data_mut();
     let grad = grads.data_mut();
     let mut slots: Vec<&mut [f32]> = state.iter_mut().map(Tensor::data_mut).collect();
-    opt.update_slices(step, value, grad, &mut slots, hp, global_scale);
+    run_update_slices(opt, &kernel::global(), step, value, grad, &mut slots, hp, global_scale);
 }
 
 #[cfg(test)]

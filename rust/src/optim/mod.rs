@@ -17,9 +17,14 @@
 pub mod bucket;
 pub mod sched;
 
+use crate::exec::kernel::{self, KernelConfig, KernelMode};
 use crate::graph::ParamData;
 use crate::tensor::Tensor;
 use bucket::BucketViewMut;
+
+/// Below this many elements the `simd-mt` update path skips the scoped-
+/// thread fork and runs the single-threaded lane kernel instead.
+const MT_MIN_ELEMS: usize = 4096;
 
 /// Hyper-parameters shared across optimizers.
 #[derive(Debug, Clone)]
@@ -93,15 +98,43 @@ pub trait Optimizer: Send + Sync {
         global_scale: f32,
     );
 
+    /// Lane-friendly variant of [`Optimizer::update_slices`]: walks the
+    /// slices in exact chunks of 8 elements plus a remainder tail so the
+    /// autovectorizer can lower the chunk body without tail checks. The
+    /// rules are elementwise, so chunking must not (and does not) change
+    /// any per-element arithmetic — overrides are bit-identical to the
+    /// scalar kernel by construction, and the default just forwards to it.
+    fn update_slices_lanes(
+        &self,
+        step: u64,
+        value: &mut [f32],
+        grad: &mut [f32],
+        state: &mut [&mut [f32]],
+        hp: &Hyper,
+        global_scale: f32,
+    ) {
+        self.update_slices(step, value, grad, state, hp, global_scale);
+    }
+
     /// Apply one update step to a single parameter (scattered storage).
-    /// Lazily allocates the parameter's state tensors, then runs
-    /// [`Optimizer::update_slices`] — the historical per-`ParamData`
-    /// entry point, now derived from the kernel.
+    /// Lazily allocates the parameter's state tensors, then runs the
+    /// fused kernel through [`run_update_slices`] under the process-wide
+    /// kernel mode — the historical per-`ParamData` entry point, now
+    /// derived from the kernel.
     fn update(&self, step: u64, p: &mut ParamData, hp: &Hyper, global_scale: f32) {
         ensure_state(p, self.num_state());
         let ParamData { value, grad, state, .. } = p;
         let mut slots: Vec<&mut [f32]> = state.iter_mut().map(Tensor::data_mut).collect();
-        self.update_slices(step, value.data_mut(), grad.data_mut(), &mut slots, hp, global_scale);
+        run_update_slices(
+            self,
+            &kernel::global(),
+            step,
+            value.data_mut(),
+            grad.data_mut(),
+            &mut slots,
+            hp,
+            global_scale,
+        );
     }
 
     /// Apply one update step to every member of a bucket in a single
@@ -140,6 +173,7 @@ pub trait Optimizer: Send + Sync {
     /// assert_eq!(grads, [0.0, 0.0, 0.0], "grads are read and reset");
     /// ```
     fn update_bucket(&self, step: u64, b: &mut BucketViewMut<'_>, hp: &Hyper, global_scale: f32) {
+        let cfg = kernel::global();
         for m in b.members.iter_mut() {
             let g = &mut b.grads[m.offset..m.offset + m.len];
             let mut slots: Vec<&mut [f32]> = b
@@ -147,7 +181,7 @@ pub trait Optimizer: Send + Sync {
                 .iter_mut()
                 .map(|s| &mut s[m.offset..m.offset + m.len])
                 .collect();
-            self.update_slices(step, m.value, g, &mut slots, hp, global_scale);
+            run_update_slices(self, &cfg, step, m.value, g, &mut slots, hp, global_scale);
         }
     }
 
@@ -164,6 +198,62 @@ fn ensure_state(p: &mut ParamData, n: usize) {
     while p.state.len() < n {
         let shape = p.value.shape().to_vec();
         p.state.push(Tensor::zeros(&shape));
+    }
+}
+
+/// Run one fused elementwise update through the selected compute kernel:
+/// the scalar reference ([`Optimizer::update_slices`]), the 8-lane chunked
+/// kernel ([`Optimizer::update_slices_lanes`]), or — under `simd-mt` — the
+/// lane kernel over contiguous element ranges split across scoped threads.
+/// The rules are elementwise and the split never crosses an element, so
+/// every mode, lane width, and thread count is bit-identical.
+#[allow(clippy::too_many_arguments)]
+pub fn run_update_slices<O: Optimizer + ?Sized>(
+    opt: &O,
+    cfg: &KernelConfig,
+    step: u64,
+    value: &mut [f32],
+    grad: &mut [f32],
+    state: &mut [&mut [f32]],
+    hp: &Hyper,
+    global_scale: f32,
+) {
+    let n = value.len();
+    match cfg.mode {
+        KernelMode::Scalar => opt.update_slices(step, value, grad, state, hp, global_scale),
+        KernelMode::Simd => opt.update_slices_lanes(step, value, grad, state, hp, global_scale),
+        KernelMode::SimdMt => {
+            if cfg.threads <= 1 || n < MT_MIN_ELEMS {
+                opt.update_slices_lanes(step, value, grad, state, hp, global_scale);
+                return;
+            }
+            let t = cfg.threads.min(n);
+            let per = (n + t - 1) / t;
+            std::thread::scope(|s| {
+                let mut value = &mut *value;
+                let mut grad = &mut *grad;
+                let mut slabs: Vec<&mut [f32]> = state.iter_mut().map(|x| &mut x[..]).collect();
+                while !value.is_empty() {
+                    let take = per.min(value.len());
+                    let (vh, vrest) = value.split_at_mut(take);
+                    let (gh, grest) = grad.split_at_mut(take);
+                    value = vrest;
+                    grad = grest;
+                    let mut heads: Vec<&mut [f32]> = Vec::with_capacity(slabs.len());
+                    let mut rests: Vec<&mut [f32]> = Vec::with_capacity(slabs.len());
+                    for sl in slabs {
+                        let (h, r) = sl.split_at_mut(take);
+                        heads.push(h);
+                        rests.push(r);
+                    }
+                    slabs = rests;
+                    s.spawn(move || {
+                        let mut heads = heads;
+                        opt.update_slices_lanes(step, vh, gh, &mut heads, hp, global_scale);
+                    });
+                }
+            });
+        }
     }
 }
 
@@ -191,6 +281,32 @@ impl Optimizer for Sgd {
         for (v, g) in value.iter_mut().zip(grad.iter_mut()) {
             let grad = *g * gs + wd * *v;
             *v -= lr * grad;
+            *g = 0.0;
+        }
+    }
+    fn update_slices_lanes(
+        &self,
+        _step: u64,
+        value: &mut [f32],
+        grad: &mut [f32],
+        _state: &mut [&mut [f32]],
+        hp: &Hyper,
+        gs: f32,
+    ) {
+        let wd = hp.weight_decay;
+        let lr = hp.lr;
+        let mut vi = value.chunks_exact_mut(8);
+        let mut gi = grad.chunks_exact_mut(8);
+        for (v8, g8) in (&mut vi).zip(&mut gi) {
+            for (v, g) in v8.iter_mut().zip(g8.iter_mut()) {
+                let gg = *g * gs + wd * *v;
+                *v -= lr * gg;
+                *g = 0.0;
+            }
+        }
+        for (v, g) in vi.into_remainder().iter_mut().zip(gi.into_remainder().iter_mut()) {
+            let gg = *g * gs + wd * *v;
+            *v -= lr * gg;
             *g = 0.0;
         }
     }
@@ -225,6 +341,39 @@ impl Optimizer for SgdMomentum {
         for ((v, g), mm) in value.iter_mut().zip(grad.iter_mut()).zip(state[0].iter_mut()) {
             let grad = *g * gs + wd * *v;
             *mm = mu * *mm + grad;
+            *v -= lr * *mm;
+            *g = 0.0;
+        }
+    }
+    fn update_slices_lanes(
+        &self,
+        _step: u64,
+        value: &mut [f32],
+        grad: &mut [f32],
+        state: &mut [&mut [f32]],
+        hp: &Hyper,
+        gs: f32,
+    ) {
+        let (lr, mu, wd) = (hp.lr, hp.momentum, hp.weight_decay);
+        let mut vi = value.chunks_exact_mut(8);
+        let mut gi = grad.chunks_exact_mut(8);
+        let mut mi = state[0].chunks_exact_mut(8);
+        for ((v8, g8), m8) in (&mut vi).zip(&mut gi).zip(&mut mi) {
+            for ((v, g), mm) in v8.iter_mut().zip(g8.iter_mut()).zip(m8.iter_mut()) {
+                let gg = *g * gs + wd * *v;
+                *mm = mu * *mm + gg;
+                *v -= lr * *mm;
+                *g = 0.0;
+            }
+        }
+        for ((v, g), mm) in vi
+            .into_remainder()
+            .iter_mut()
+            .zip(gi.into_remainder().iter_mut())
+            .zip(mi.into_remainder().iter_mut())
+        {
+            let gg = *g * gs + wd * *v;
+            *mm = mu * *mm + gg;
             *v -= lr * *mm;
             *g = 0.0;
         }
@@ -276,6 +425,52 @@ impl Optimizer for Adam {
             *g = 0.0;
         }
     }
+    fn update_slices_lanes(
+        &self,
+        step: u64,
+        value: &mut [f32],
+        grad: &mut [f32],
+        state: &mut [&mut [f32]],
+        hp: &Hyper,
+        gs: f32,
+    ) {
+        let (lr, b1, b2, eps, wd) = (hp.lr, hp.beta1, hp.beta2, hp.eps, hp.weight_decay);
+        let bc1 = 1.0 - b1.powi(step as i32);
+        let bc2 = 1.0 - b2.powi(step as i32);
+        let (ms, vs) = state.split_at_mut(1);
+        let mut vi = value.chunks_exact_mut(8);
+        let mut gi = grad.chunks_exact_mut(8);
+        let mut mi = ms[0].chunks_exact_mut(8);
+        let mut si = vs[0].chunks_exact_mut(8);
+        for (((v8, g8), m8), s8) in (&mut vi).zip(&mut gi).zip(&mut mi).zip(&mut si) {
+            for (((v, g), mm), vv) in
+                v8.iter_mut().zip(g8.iter_mut()).zip(m8.iter_mut()).zip(s8.iter_mut())
+            {
+                let gg = *g * gs + wd * *v;
+                *mm = b1 * *mm + (1.0 - b1) * gg;
+                *vv = b2 * *vv + (1.0 - b2) * gg * gg;
+                let mhat = *mm / bc1;
+                let vhat = *vv / bc2;
+                *v -= lr * mhat / (vhat.sqrt() + eps);
+                *g = 0.0;
+            }
+        }
+        for (((v, g), mm), vv) in vi
+            .into_remainder()
+            .iter_mut()
+            .zip(gi.into_remainder().iter_mut())
+            .zip(mi.into_remainder().iter_mut())
+            .zip(si.into_remainder().iter_mut())
+        {
+            let gg = *g * gs + wd * *v;
+            *mm = b1 * *mm + (1.0 - b1) * gg;
+            *vv = b2 * *vv + (1.0 - b2) * gg * gg;
+            let mhat = *mm / bc1;
+            let vhat = *vv / bc2;
+            *v -= lr * mhat / (vhat.sqrt() + eps);
+            *g = 0.0;
+        }
+    }
     fn mem_per_elem(&self) -> (u32, u32) {
         (4, 4) // θ,g,m,v in ; θ,g,m,v out
     }
@@ -317,6 +512,54 @@ impl Optimizer for AdamW {
             *v *= 1.0 - lr * wd;
             *mm = b1 * *mm + (1.0 - b1) * grad;
             *vv = b2 * *vv + (1.0 - b2) * grad * grad;
+            let mhat = *mm / bc1;
+            let vhat = *vv / bc2;
+            *v -= lr * mhat / (vhat.sqrt() + eps);
+            *g = 0.0;
+        }
+    }
+    fn update_slices_lanes(
+        &self,
+        step: u64,
+        value: &mut [f32],
+        grad: &mut [f32],
+        state: &mut [&mut [f32]],
+        hp: &Hyper,
+        gs: f32,
+    ) {
+        let (lr, b1, b2, eps, wd) = (hp.lr, hp.beta1, hp.beta2, hp.eps, hp.weight_decay);
+        let bc1 = 1.0 - b1.powi(step as i32);
+        let bc2 = 1.0 - b2.powi(step as i32);
+        let (ms, vs) = state.split_at_mut(1);
+        let mut vi = value.chunks_exact_mut(8);
+        let mut gi = grad.chunks_exact_mut(8);
+        let mut mi = ms[0].chunks_exact_mut(8);
+        let mut si = vs[0].chunks_exact_mut(8);
+        for (((v8, g8), m8), s8) in (&mut vi).zip(&mut gi).zip(&mut mi).zip(&mut si) {
+            for (((v, g), mm), vv) in
+                v8.iter_mut().zip(g8.iter_mut()).zip(m8.iter_mut()).zip(s8.iter_mut())
+            {
+                let gg = *g * gs;
+                *v *= 1.0 - lr * wd;
+                *mm = b1 * *mm + (1.0 - b1) * gg;
+                *vv = b2 * *vv + (1.0 - b2) * gg * gg;
+                let mhat = *mm / bc1;
+                let vhat = *vv / bc2;
+                *v -= lr * mhat / (vhat.sqrt() + eps);
+                *g = 0.0;
+            }
+        }
+        for (((v, g), mm), vv) in vi
+            .into_remainder()
+            .iter_mut()
+            .zip(gi.into_remainder().iter_mut())
+            .zip(mi.into_remainder().iter_mut())
+            .zip(si.into_remainder().iter_mut())
+        {
+            let gg = *g * gs;
+            *v *= 1.0 - lr * wd;
+            *mm = b1 * *mm + (1.0 - b1) * gg;
+            *vv = b2 * *vv + (1.0 - b2) * gg * gg;
             let mhat = *mm / bc1;
             let vhat = *vv / bc2;
             *v -= lr * mhat / (vhat.sqrt() + eps);
@@ -479,6 +722,17 @@ impl<O: Optimizer> Optimizer for GlobalNormClip<O> {
         global_scale: f32,
     ) {
         self.inner.update_slices(step, value, grad, state, hp, global_scale);
+    }
+    fn update_slices_lanes(
+        &self,
+        step: u64,
+        value: &mut [f32],
+        grad: &mut [f32],
+        state: &mut [&mut [f32]],
+        hp: &Hyper,
+        global_scale: f32,
+    ) {
+        self.inner.update_slices_lanes(step, value, grad, state, hp, global_scale);
     }
     fn mem_per_elem(&self) -> (u32, u32) {
         let (r, w) = self.inner.mem_per_elem();
@@ -668,6 +922,36 @@ mod tests {
             }
             p1.grad = Tensor::from_vec(&[2], grads[..2].to_vec());
             p2.grad = Tensor::from_vec(&[3], grads[2..].to_vec());
+        }
+    }
+
+    #[test]
+    fn lanes_kernel_matches_scalar() {
+        // The 8-chunked kernels must be bit-identical to the plain loops,
+        // including the remainder tail (n = 29) and nontrivial state.
+        for name in LOCAL_OPTIMIZERS {
+            let opt = by_name(name).unwrap();
+            let hp = Hyper::default();
+            let n = 29;
+            let value: Vec<f32> = (0..n).map(|i| (i as f32 * 0.13).sin()).collect();
+            let grad: Vec<f32> = (0..n).map(|i| (i as f32 * 0.29).cos()).collect();
+            let mut v0 = value.clone();
+            let mut g0 = grad.clone();
+            let mut s0 = vec![vec![0.1f32; n]; opt.num_state()];
+            {
+                let mut slots: Vec<&mut [f32]> = s0.iter_mut().map(|s| &mut s[..]).collect();
+                opt.update_slices(2, &mut v0, &mut g0, &mut slots, &hp, 1.0);
+            }
+            let mut v1 = value.clone();
+            let mut g1 = grad.clone();
+            let mut s1 = vec![vec![0.1f32; n]; opt.num_state()];
+            {
+                let mut slots: Vec<&mut [f32]> = s1.iter_mut().map(|s| &mut s[..]).collect();
+                opt.update_slices_lanes(2, &mut v1, &mut g1, &mut slots, &hp, 1.0);
+            }
+            assert_eq!(v0, v1, "{name} values");
+            assert_eq!(g0, g1, "{name} grads");
+            assert_eq!(s0, s1, "{name} state");
         }
     }
 

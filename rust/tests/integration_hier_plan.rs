@@ -27,6 +27,7 @@ use optfuse::comm::{
 };
 use optfuse::data::image_batch;
 use optfuse::ddp::{train_ddp, DdpConfig, DdpReport};
+use optfuse::exec::kernel::{KernelConfig, KernelMode};
 use optfuse::graph::{Graph, ScheduleKind, Src};
 use optfuse::memsim::machines::table2_machines;
 use optfuse::memsim::spec::{LayerSpec, NetSpec, OptSpec};
@@ -104,6 +105,35 @@ fn hier_trains_bit_identically_to_flat_across_schedules_stages_and_grids() {
                 assert_eq!(hier.reduces_per_step, flat.reduces_per_step, "{label}");
             }
         }
+    }
+}
+
+/// Kernel-mode row over the hier grid: on the ragged 3-rank/2-per-node
+/// grid, hierarchical collectives stay bit-identical to flat when the
+/// replicas run the `simd-mt` compute kernels — the threaded matmul and
+/// fused-update splits must not interact with the two-tier reduce order.
+#[test]
+fn hier_matches_flat_bitwise_under_simd_mt_kernels() {
+    let run = |rpn: usize, algo: CommAlgo, stage: ShardStage| -> DdpReport {
+        let mut cfg = DdpConfig::new(3, ScheduleKind::BackwardFusion, 3, image_batch_maker());
+        cfg.algo = algo.into();
+        cfg.ranks_per_node = rpn;
+        cfg.bucket_cap_bytes = Some(1 << 12);
+        cfg.shard_stage = stage;
+        cfg.overlap_threads = 2;
+        cfg.kernel = KernelConfig { mode: KernelMode::SimdMt, lanes: 8, threads: 3 };
+        train_ddp(|| mlp(99), sgd_momentum, sgd_hyper(), cfg)
+    };
+    for stage in [ShardStage::None, ShardStage::Zero2] {
+        let flat = run(0, CommAlgo::Flat, stage);
+        let hier = run(2, CommAlgo::Hier, stage);
+        let label = format!("simd-mt {} world 3 rpn 2", stage.label());
+        assert_eq!(flat.losses, hier.losses, "{label}: losses bit-identical");
+        assert_eq!(
+            max_param_diff(&flat.final_params, &hier.final_params),
+            0.0,
+            "{label}: final params bit-identical"
+        );
     }
 }
 

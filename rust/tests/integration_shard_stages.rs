@@ -27,6 +27,7 @@
 use optfuse::comm::{CommAlgo, ShardStage};
 use optfuse::data::image_batch;
 use optfuse::ddp::{train_ddp, DdpConfig, DdpReport};
+use optfuse::exec::kernel::{KernelConfig, KernelMode};
 use optfuse::graph::{Graph, ScheduleKind, Src};
 use optfuse::memsim::stage_memory;
 use optfuse::models::mlp;
@@ -97,6 +98,38 @@ fn every_stage_bit_identical_to_unsharded_across_worlds_schedules_algos() {
                     );
                 }
             }
+        }
+    }
+}
+
+/// Kernel-mode axis over the stage grid: `--kernel simd` and `simd-mt`
+/// training stays bit-identical to the scalar reference kernel for every
+/// ZeRO stage (losses and final params), so the compute kernels compose
+/// with sharded arenas and overlapped reduce-then-update workers. The
+/// kernel config is process-global; concurrent tests may flip it mid-run,
+/// which is safe precisely because every mode bit-matches.
+#[test]
+fn kernel_modes_compose_with_shard_stages_bitwise() {
+    let run = |mode: KernelMode, stage: ShardStage| {
+        let mut cfg = DdpConfig::new(2, ScheduleKind::BackwardFusion, 3, image_batch_maker());
+        cfg.bucket_cap_bytes = Some(1 << 12);
+        cfg.shard_stage = stage;
+        cfg.overlap_threads = 2;
+        cfg.kernel = KernelConfig { mode, lanes: 8, threads: 3 };
+        train_ddp(|| mlp(99), sgd_momentum, sgd_hyper(), cfg)
+    };
+    for stage in ShardStage::ALL {
+        let base = run(KernelMode::Scalar, stage);
+        assert!(base.losses.iter().all(|l| l.is_finite()), "{}", stage.label());
+        for mode in [KernelMode::Simd, KernelMode::SimdMt] {
+            let r = run(mode, stage);
+            let label = format!("{} under {}", stage.label(), mode.label());
+            assert_eq!(base.losses, r.losses, "{label}: losses bit-identical");
+            assert_eq!(
+                max_param_diff(&base.final_params, &r.final_params),
+                0.0,
+                "{label}: final params bit-identical"
+            );
         }
     }
 }

@@ -1,0 +1,265 @@
+//! Kernel-equivalence harness: the contract that pins the SIMD and
+//! multi-threaded compute kernels to the scalar reference, **bit for bit**.
+//!
+//! Every `--kernel` mode must produce byte-identical results for every lane
+//! width and thread count, because the reduction order per output element is
+//! fixed by contract (ARCHITECTURE.md, "Compute kernels"). These tests sweep
+//! adversarial shapes — below one lane, exactly one lane, one past a lane,
+//! odd primes, and sizes large enough to cross the multi-thread thresholds —
+//! across every optimizer and both matmul transpose variants.
+//!
+//! The matmul / fused-update sweeps pass explicit `KernelConfig`s, so they
+//! exercise each mode regardless of the process-wide global. The end-to-end
+//! training tests go through `ExecConfig.kernel` (which publishes the global
+//! config); concurrent tests may flip the global mid-run, which is exactly
+//! the property under test — all modes bit-match, so the assertions hold no
+//! matter which kernel actually serviced a given call. CI additionally runs
+//! this whole file under `OPTFUSE_KERNEL=scalar` so the reference path gets a
+//! dedicated leg.
+
+use optfuse::exec::kernel::{KernelConfig, KernelMode};
+use optfuse::exec::{ExecConfig, Executor};
+use optfuse::graph::{Graph, ScheduleKind, Src};
+use optfuse::ops::activation::Relu;
+use optfuse::ops::dense::Linear;
+use optfuse::ops::linalg::{matmul_acc_with, matmul_at_acc_with, matmul_bt_acc_with, matmul_ref};
+use optfuse::ops::loss::MseLoss;
+use optfuse::optim::{self, run_update_slices, Hyper, Optimizer};
+use optfuse::tensor::Tensor;
+use optfuse::util::XorShiftRng;
+
+fn rand_vec(rng: &mut XorShiftRng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect()
+}
+
+fn scalar_cfg() -> KernelConfig {
+    KernelConfig { mode: KernelMode::Scalar, lanes: 8, threads: 1 }
+}
+
+/// Every non-scalar config the sweeps compare against the reference:
+/// both lane widths crossed with thread counts 1–4 (1 exercises the
+/// single-thread fallback inside `simd-mt`, 3 leaves a remainder block).
+fn sweep_cfgs() -> Vec<KernelConfig> {
+    let mut cfgs = Vec::new();
+    for mode in [KernelMode::Simd, KernelMode::SimdMt] {
+        for lanes in [8usize, 16, 32] {
+            for threads in [1usize, 2, 3, 4] {
+                cfgs.push(KernelConfig { mode, lanes, threads });
+            }
+        }
+    }
+    cfgs
+}
+
+#[test]
+fn matmul_kernels_bit_equal_to_scalar_across_shapes() {
+    // 1 = degenerate, 7/9 = one off a lane, 8 = exactly one lane,
+    // 13/29 = odd primes, 64 = crosses the simd-mt size threshold
+    // (64³ muls ≫ MT_MIN_MULS) with even and uneven row splits.
+    let sizes = [1usize, 7, 8, 9, 13, 29, 64];
+    let mut rng = XorShiftRng::new(0x51AD);
+    for &m in &sizes {
+        for &k in &sizes {
+            for &n in &sizes {
+                let a = rand_vec(&mut rng, m * k);
+                let b_acc = rand_vec(&mut rng, k * n);
+                let b_bt = rand_vec(&mut rng, n * k);
+                let b_at = rand_vec(&mut rng, m * n);
+                let c_acc0 = rand_vec(&mut rng, m * n);
+                let c_at0 = rand_vec(&mut rng, k * n);
+
+                let sc = scalar_cfg();
+                let mut r_acc = c_acc0.clone();
+                matmul_acc_with(&sc, &a, &b_acc, &mut r_acc, m, k, n);
+                let mut r_bt = c_acc0.clone();
+                matmul_bt_acc_with(&sc, &a, &b_bt, &mut r_bt, m, k, n);
+                let mut r_at = c_at0.clone();
+                matmul_at_acc_with(&sc, &a, &b_at, &mut r_at, m, k, n);
+
+                // sanity: the scalar reference is a real matmul (approximate
+                // equality only — matmul_ref uses a different summation order)
+                let plain = matmul_ref(&a, &b_acc, m, k, n);
+                for (i, (got, want)) in r_acc.iter().zip(plain.iter()).enumerate() {
+                    let want = want + c_acc0[i];
+                    assert!(
+                        (got - want).abs() <= 1e-3 * want.abs().max(1.0),
+                        "scalar acc vs naive ref at {i} ({m}x{k}x{n}): {got} vs {want}"
+                    );
+                }
+
+                for cfg in sweep_cfgs() {
+                    let mut c = c_acc0.clone();
+                    matmul_acc_with(&cfg, &a, &b_acc, &mut c, m, k, n);
+                    assert_eq!(c, r_acc, "acc {m}x{k}x{n} under {cfg:?}");
+
+                    let mut c = c_acc0.clone();
+                    matmul_bt_acc_with(&cfg, &a, &b_bt, &mut c, m, k, n);
+                    assert_eq!(c, r_bt, "bt {m}x{k}x{n} under {cfg:?}");
+
+                    let mut c = c_at0.clone();
+                    matmul_at_acc_with(&cfg, &a, &b_at, &mut c, m, k, n);
+                    assert_eq!(c, r_at, "at {m}x{k}x{n} under {cfg:?}");
+                }
+            }
+        }
+    }
+}
+
+/// Run `steps` fused update steps over an `n`-element parameter with fresh
+/// deterministic gradients each step; returns final (value, state).
+fn run_updates(
+    opt: &dyn Optimizer,
+    cfg: &KernelConfig,
+    n: usize,
+    hp: &Hyper,
+    global_scale: f32,
+    seed: u64,
+    steps: u64,
+) -> (Vec<f32>, Vec<Vec<f32>>) {
+    let mut rng = XorShiftRng::new(seed);
+    let mut value = rand_vec(&mut rng, n);
+    let mut state: Vec<Vec<f32>> = (0..opt.num_state()).map(|_| vec![0.0; n]).collect();
+    for step in 1..=steps {
+        let mut grad = rand_vec(&mut rng, n);
+        let mut slots: Vec<&mut [f32]> = state.iter_mut().map(|s| &mut s[..]).collect();
+        run_update_slices(opt, cfg, step, &mut value, &mut grad, &mut slots, hp, global_scale);
+        assert!(
+            grad.iter().all(|g| *g == 0.0),
+            "{} must reset grads (n={n}, {cfg:?})",
+            opt.name()
+        );
+    }
+    (value, state)
+}
+
+#[test]
+fn fused_updates_bit_equal_to_scalar_for_every_optimizer() {
+    // 0 = zero-length bucket range, 1/7/8/9 = lane edges, 31/100 = tails,
+    // 5000 > MT_MIN_ELEMS so simd-mt actually splits across threads.
+    let lengths = [0usize, 1, 7, 8, 9, 31, 100, 5000];
+    let hp = Hyper { lr: 0.05, ..Hyper::default() };
+    let names: Vec<&str> = optim::LOCAL_OPTIMIZERS.iter().copied().chain(["adam_clip"]).collect();
+    for name in names {
+        let opt = optim::by_name(name).unwrap();
+        let gs = if name == "adam_clip" { 0.5 } else { 1.0 };
+        for &n in &lengths {
+            let seed = 0xF00D ^ (n as u64);
+            let (rv, rs) = run_updates(&*opt, &scalar_cfg(), n, &hp, gs, seed, 3);
+            for cfg in sweep_cfgs() {
+                let (v, s) = run_updates(&*opt, &cfg, n, &hp, gs, seed, 3);
+                assert_eq!(v, rv, "{name} values n={n} under {cfg:?}");
+                assert_eq!(s, rs, "{name} state n={n} under {cfg:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn zero_sized_matmuls_are_noops() {
+    for cfg in sweep_cfgs().into_iter().chain([scalar_cfg()]) {
+        // k = 0: nothing to reduce, c must come back untouched
+        let mut c = vec![1.5f32; 6];
+        matmul_acc_with(&cfg, &[], &[], &mut c, 2, 0, 3);
+        assert_eq!(c, vec![1.5; 6], "k=0 acc must not touch c ({cfg:?})");
+        // n = 0 / m = 0: empty outputs (or nothing accumulated), no panics
+        matmul_acc_with(&cfg, &[], &[0.0; 12], &mut [], 0, 3, 4);
+        matmul_bt_acc_with(&cfg, &[1.0, 2.0], &[], &mut [], 1, 2, 0);
+        let mut c_at = vec![2.5f32; 6];
+        matmul_at_acc_with(&cfg, &[], &[], &mut c_at, 0, 2, 3);
+        assert_eq!(c_at, vec![2.5; 6], "m=0 at must not touch c ({cfg:?})");
+    }
+}
+
+/// A small MLP sized so the forward/backward matmuls cross the simd-mt
+/// work threshold (batch 8 × 32×32 weights = 8192 muls per layer matmul).
+fn mlp_graph(seed: u64, dim: usize, layers: usize) -> Graph {
+    let mut rng = XorShiftRng::new(seed);
+    let mut g = Graph::new("kernel_mlp", 2);
+    let mut cur = Src::External(0);
+    for l in 0..layers {
+        let w = g.param(&format!("w{l}"), &[dim, dim], &mut rng);
+        let lin = g.push(&format!("fc{l}"), Box::new(Linear::new(false)), vec![cur], vec![w]);
+        cur = Src::Node(lin);
+        let r = g.push(&format!("relu{l}"), Box::new(Relu), vec![cur], vec![]);
+        cur = Src::Node(r);
+    }
+    let loss = g.push("mse", Box::new(MseLoss), vec![cur, Src::External(1)], vec![]);
+    g.set_loss(loss);
+    g
+}
+
+fn run_train(
+    kernel: KernelConfig,
+    schedule: ScheduleKind,
+    bucket_cap: Option<usize>,
+    steps: usize,
+) -> (Vec<f32>, Vec<Tensor>) {
+    const DIM: usize = 32;
+    let g = mlp_graph(0xC0FFEE, DIM, 3);
+    let mut ex = Executor::new(
+        g,
+        optim::by_name("adam").unwrap(),
+        Hyper { lr: 0.01, ..Hyper::default() },
+        ExecConfig {
+            schedule,
+            threads: 2,
+            race_guard: true,
+            bucket_cap_bytes: bucket_cap,
+            kernel,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let mut drng = XorShiftRng::new(0xDA7A);
+    let x = Tensor::randn(&[8, DIM], 1.0, &mut drng);
+    let y = Tensor::randn(&[8, DIM], 1.0, &mut drng);
+    let mut losses = Vec::new();
+    for _ in 0..steps {
+        losses.push(ex.train_step(&[x.clone(), y.clone()]).loss);
+    }
+    ex.flush_pending();
+    (losses, ex.graph.store.snapshot())
+}
+
+#[test]
+fn training_bit_identical_across_kernel_modes() {
+    // kernel mode × schedule × storage: losses and every parameter must be
+    // byte-identical to the scalar run (bucketed storage routes the update
+    // through apply_bucket_update_range, scattered through Optimizer::update).
+    for schedule in ScheduleKind::ALL {
+        for cap in [None, Some(600)] {
+            let (rl, rp) = run_train(scalar_cfg(), schedule, cap, 4);
+            assert!(rl.iter().all(|l| l.is_finite()), "reference run diverged: {rl:?}");
+            for mode in [KernelMode::Simd, KernelMode::SimdMt] {
+                let cfg = KernelConfig { mode, lanes: 8, threads: 3 };
+                let (l, p) = run_train(cfg, schedule, cap, 4);
+                assert_eq!(l, rl, "losses {} cap={cap:?} {cfg:?}", schedule.label());
+                for (i, (a, b)) in rp.iter().zip(p.iter()).enumerate() {
+                    assert_eq!(
+                        a.data(),
+                        b.data(),
+                        "param {i} {} cap={cap:?} {cfg:?}",
+                        schedule.label()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_mt_training_deterministic_across_worker_counts() {
+    // The determinism regression the issue pins: the simd-mt split must not
+    // let the worker count leak into results — same model, same data, any
+    // thread count → bit-equal losses and parameters.
+    let kernel = |threads| KernelConfig { mode: KernelMode::SimdMt, lanes: 8, threads };
+    let (rl, rp) = run_train(kernel(1), ScheduleKind::BackwardFusion, Some(600), 4);
+    for threads in 2..=4 {
+        let (l, p) = run_train(kernel(threads), ScheduleKind::BackwardFusion, Some(600), 4);
+        assert_eq!(l, rl, "losses with {threads} kernel threads");
+        for (i, (a, b)) in rp.iter().zip(p.iter()).enumerate() {
+            assert_eq!(a.data(), b.data(), "param {i} with {threads} kernel threads");
+        }
+    }
+    assert!(rl.last().unwrap() < rl.first().unwrap(), "should learn");
+}
