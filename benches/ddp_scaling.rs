@@ -66,6 +66,20 @@ fn run_kernel(
     steps: usize,
     kernel: KernelConfig,
 ) -> DdpReport {
+    run_topo(world, 0, algo, axis, steps, 0, None, kernel)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_topo(
+    world: usize,
+    ranks_per_node: usize,
+    algo: AlgoSelect,
+    axis: &Axis,
+    steps: usize,
+    calibrate_steps: usize,
+    comm_chunk_bytes: Option<usize>,
+    kernel: KernelConfig,
+) -> DdpReport {
     train_ddp(
         || models::deep_mlp(3),
         || optim::by_name("adam").unwrap(),
@@ -74,11 +88,13 @@ fn run_kernel(
             world,
             schedule: axis.schedule,
             algo,
-            ranks_per_node: 0,
+            ranks_per_node,
             planner_interconnect: None,
+            calibrate_steps,
+            planner_backward_s: None,
             steps,
             bucket_cap_bytes: axis.bucket_cap,
-            comm_chunk_bytes: None,
+            comm_chunk_bytes,
             shard_stage: axis.stage,
             overlap_threads: axis.overlap,
             kernel,
@@ -299,56 +315,8 @@ fn main() {
         if fell_back { "  [degenerate fit; hand-picked preset kept]" } else { "" }
     );
     assert!(fitted.intra_lat_s > 0.0 && fitted.intra_bw > 0.0, "calibrated preset is physical");
-    let calib_json = format!(
-        "{{\n  \"schema\": \"optfuse-calibration-v1\",\n  \"world\": {},\n  \
-         \"hop_latency_us\": {:.6},\n  \"link_bw_gbps\": {:.6},\n  \"fell_back\": {}\n}}\n",
-        algo_world,
-        fitted.intra_lat_s * 1e6,
-        fitted.intra_bw / 1e9,
-        fell_back
-    );
-    let _ = std::fs::create_dir_all("bench-smoke");
-    if let Err(e) = std::fs::write("bench-smoke/calibration.json", &calib_json) {
-        println!("  (calibration artifact not written: {e})");
-    }
-    // drift check vs the committed baseline (benches/calibration_baseline.json)
-    let parse_field = |src: &str, key: &str| -> Option<f64> {
-        let at = src.find(key)?;
-        let rest = &src[at + key.len()..];
-        let rest = rest.split_once(':')?.1;
-        rest.trim_start()
-            .split(|c: char| c == ',' || c == '\n' || c == '}')
-            .next()?
-            .trim()
-            .parse()
-            .ok()
-    };
-    match std::fs::read_to_string("benches/calibration_baseline.json") {
-        Ok(base) => {
-            let checks = [
-                ("hop_latency_us", fitted.intra_lat_s * 1e6),
-                ("link_bw_gbps", fitted.intra_bw / 1e9),
-            ];
-            for (key, now) in checks {
-                let Some(was) = parse_field(&base, key) else {
-                    println!("  (calibration baseline missing '{key}'; skipping drift check)");
-                    continue;
-                };
-                let ratio = if was > 0.0 { (now / was).max(was / now) } else { f64::INFINITY };
-                if ratio > 2.0 {
-                    // `::warning::` renders as a non-blocking GitHub
-                    // annotation; locally it is just a printed line
-                    println!(
-                        "::warning title=shared_mem calibration drift::{key} drifted {ratio:.1}x \
-                         vs committed baseline ({was:.3} -> {now:.3})"
-                    );
-                } else {
-                    println!("  calibration trend: {key} {was:.3} -> {now:.3} ({ratio:.2}x)");
-                }
-            }
-        }
-        Err(e) => println!("  (no calibration baseline committed: {e})"),
-    }
+    // (the JSON artifact and the drift check move below the
+    // self-calibrated sweep so they can carry the in-run probe fits too)
     println!();
 
     // ---- `--algo auto`: the planner's per-bucket mix, measured against
@@ -390,6 +358,189 @@ fn main() {
     );
     let plan = auto.plan.as_ref().expect("auto reports its plan");
     print!("{}", plan.table());
+
+    // ---- self-calibrating `--algo auto` (the measure→fit→plan loop,
+    // closed live): at topologies 2x2 and 1x4 the calibrated auto
+    // session — probe steps, `fit_interconnect_on` over the measured
+    // blocked time, re-plan with the measured backward window, atomic
+    // mid-run routing swap — is measured min-of-3 against every uniform
+    // algorithm × chunk-cap combination on the same axis. The hard
+    // assertions stay on math (calibrated auto bit-identical to flat);
+    // a calibrated run slower than the best uniform combo prints a
+    // non-blocking `::warning::` (wallclock on a contended runner is
+    // noise, the trend lands in the artifact diff).
+    let reps = 3; // min-of-3 per the acceptance criterion
+    fn min_of(reps: usize, f: &mut dyn FnMut() -> DdpReport) -> (DdpReport, f64) {
+        let first = f();
+        let mut best = first.iter_ms;
+        for _ in 1..reps {
+            best = best.min(f().iter_ms);
+        }
+        (first, best)
+    }
+    // (label, intra µs/hop, intra GB/s, inter µs/hop, inter GB/s)
+    let mut probe_rows: Vec<(&'static str, f64, f64, f64, f64)> = Vec::new();
+    let sweep_axis = algo_axis;
+    for (topo_label, world, rpn) in [("2x2", 4usize, 2usize), ("1x4", 4, 0)] {
+        println!(
+            "  self-calibrated auto ({topo_label}, {}): min-of-{reps} vs uniform algo x chunk-cap",
+            sweep_axis.label
+        );
+        println!("    combo          iter ms");
+        let algos: &[CommAlgo] = if rpn > 0 { &CommAlgo::ALL } else { &CommAlgo::ONE_TIER };
+        let mut best_manual = f64::INFINITY;
+        let mut best_label = String::new();
+        let mut flat_ref: Option<Vec<f32>> = None;
+        for &algo in algos {
+            for chunk in [None, Some(1usize << 16)] {
+                let (r, ms) = min_of(reps, &mut || {
+                    run_topo(
+                        world,
+                        rpn,
+                        algo.into(),
+                        sweep_axis,
+                        steps,
+                        0,
+                        chunk,
+                        KernelConfig::default(),
+                    )
+                });
+                let label = format!(
+                    "{}{}",
+                    algo.label(),
+                    if chunk.is_some() { "/chunk64K" } else { "" }
+                );
+                println!("    {label:<14} {ms:>7.2}");
+                if ms < best_manual {
+                    best_manual = ms;
+                    best_label = label;
+                }
+                if algo == CommAlgo::Flat && chunk.is_none() {
+                    flat_ref = Some(r.losses);
+                }
+            }
+        }
+        let (auto_r, auto_ms) = min_of(reps, &mut || {
+            run_topo(
+                world,
+                rpn,
+                AlgoSelect::Auto,
+                sweep_axis,
+                steps,
+                2,
+                None,
+                KernelConfig::default(),
+            )
+        });
+        println!("    {:<14} {auto_ms:>7.2}   (best uniform: {best_label} {best_manual:.2} ms)", "auto+calibrate");
+        assert_eq!(
+            flat_ref.as_ref().expect("flat combo ran"),
+            &auto_r.losses,
+            "{topo_label}: self-calibrated auto must not change the math"
+        );
+        let fit = auto_r.fitted.as_ref().expect("calibrated run reports its fit");
+        probe_rows.push((
+            topo_label,
+            fit.intra_lat_s * 1e6,
+            fit.intra_bw / 1e9,
+            fit.inter_lat_s * 1e6,
+            fit.inter_bw / 1e9,
+        ));
+        if auto_ms > best_manual {
+            println!(
+                "::warning title=calibrated auto slower than uniform::{topo_label}: \
+                 auto+calibrate {auto_ms:.2} ms vs best uniform {best_label} {best_manual:.2} ms \
+                 (min-of-{reps}; contended-runner wallclock, non-blocking)"
+            );
+        }
+    }
+    // fitted-vs-preset coefficient table: the probe fits next to the
+    // hand-picked shared_mem preset they replace
+    println!("\n  fitted vs preset coefficients (probe fits; preset = shared_mem)");
+    println!("    topo   intra µs/hop  intra GB/s  inter µs/hop  inter GB/s");
+    println!(
+        "    {:<6} {:>12.2}  {:>10.2}  {:>12.2}  {:>10.2}",
+        "preset",
+        hand.intra_lat_s * 1e6,
+        hand.intra_bw / 1e9,
+        hand.intra_lat_s * 1e6,
+        hand.intra_bw / 1e9
+    );
+    for (label, ius, ibw, xus, xbw) in &probe_rows {
+        println!("    {label:<6} {ius:>12.2}  {ibw:>10.2}  {xus:>12.2}  {xbw:>10.2}");
+    }
+
+    // ---- calibration artifact (schema v2 extends optfuse-calibration-v1
+    // with the in-run probe fits) + drift check vs the committed baseline
+    let mut probes_json = String::new();
+    for (i, (label, ius, ibw, xus, xbw)) in probe_rows.iter().enumerate() {
+        probes_json.push_str(&format!(
+            "    {{ \"topology\": \"{label}\", \"intra_hop_latency_us\": {ius:.6}, \
+             \"intra_link_bw_gbps\": {ibw:.6}, \"inter_hop_latency_us\": {xus:.6}, \
+             \"inter_link_bw_gbps\": {xbw:.6} }}{}\n",
+            if i + 1 < probe_rows.len() { "," } else { "" }
+        ));
+    }
+    let calib_json = format!(
+        "{{\n  \"schema\": \"optfuse-calibration-v2\",\n  \"world\": {},\n  \
+         \"hop_latency_us\": {:.6},\n  \"link_bw_gbps\": {:.6},\n  \"fell_back\": {},\n  \
+         \"probes\": [\n{}  ]\n}}\n",
+        algo_world,
+        fitted.intra_lat_s * 1e6,
+        fitted.intra_bw / 1e9,
+        fell_back,
+        probes_json
+    );
+    let _ = std::fs::create_dir_all("bench-smoke");
+    if let Err(e) = std::fs::write("bench-smoke/calibration.json", &calib_json) {
+        println!("  (calibration artifact not written: {e})");
+    }
+    // drift check vs the committed baseline (benches/calibration_baseline.json)
+    let parse_field = |src: &str, key: &str| -> Option<f64> {
+        let at = src.find(key)?;
+        let rest = &src[at + key.len()..];
+        let rest = rest.split_once(':')?.1;
+        rest.trim_start()
+            .split(|c: char| c == ',' || c == '\n' || c == '}')
+            .next()?
+            .trim()
+            .parse()
+            .ok()
+    };
+    match std::fs::read_to_string("benches/calibration_baseline.json") {
+        Ok(base) => {
+            // the probe drift keys track the 1x4 (flat-probe) fit — the
+            // same shared-memory medium the baseline preset describes
+            let probe = probe_rows.iter().find(|r| r.0 == "1x4");
+            let mut checks = vec![
+                ("hop_latency_us", fitted.intra_lat_s * 1e6),
+                ("link_bw_gbps", fitted.intra_bw / 1e9),
+            ];
+            if let Some((_, ius, ibw, _, _)) = probe {
+                checks.push(("probe_hop_latency_us", *ius));
+                checks.push(("probe_link_bw_gbps", *ibw));
+            }
+            for (key, now) in checks {
+                let Some(was) = parse_field(&base, key) else {
+                    println!("  (calibration baseline missing '{key}'; skipping drift check)");
+                    continue;
+                };
+                let ratio = if was > 0.0 { (now / was).max(was / now) } else { f64::INFINITY };
+                if ratio > 2.0 {
+                    // `::warning::` renders as a non-blocking GitHub
+                    // annotation; locally it is just a printed line
+                    println!(
+                        "::warning title=shared_mem calibration drift::{key} drifted {ratio:.1}x \
+                         vs committed baseline ({was:.3} -> {now:.3})"
+                    );
+                } else {
+                    println!("  calibration trend: {key} {was:.3} -> {now:.3} ({ratio:.2}x)");
+                }
+            }
+        }
+        Err(e) => println!("  (no calibration baseline committed: {e})"),
+    }
+    println!();
 
     // ---- shard-stage axis: the per-stage peak-memory table, asserted
     // against memsim's closed form *exactly* (both sides sum rank 0's

@@ -304,12 +304,39 @@ fn hier_star(c: &mut WireCost, spans: &[(usize, usize)]) {
     }
 }
 
-/// The inter-node binomial tree of [`CommAlgo::Hier`]: `N − 1` full-
-/// size messages per direction (reduce and/or broadcast edges).
-fn hier_tree(c: &mut WireCost, n: usize, nodes: usize, directions: usize) {
+/// The chunk tiling of the inter-node tree payload when `HierComm`
+/// pipelines chunks through the binomial tree: `[0, n)` cut into runs
+/// of `chunk` elements (last run smaller), capped at 1024 runs so the
+/// per-chunk leg tags fit their namespace. `chunk == 0` (or `≥ n`)
+/// means whole-payload messages — the unchunked legacy shape. Shared
+/// verbatim by [`HierComm`]'s message loop and the `wire_*` closed
+/// forms, so the accounting match stays structural.
+pub(crate) fn inter_chunk_spans(n: usize, chunk: usize) -> Vec<(usize, usize)> {
+    if chunk == 0 || chunk >= n || n == 0 {
+        return vec![(0, n)];
+    }
+    let chunk = chunk.max((n + 1023) / 1024);
+    let mut out = Vec::new();
+    let mut off = 0;
+    while off < n {
+        let len = chunk.min(n - off);
+        out.push((off, len));
+        off += len;
+    }
+    out
+}
+
+/// The inter-node binomial tree of [`CommAlgo::Hier`]: `N − 1` edges
+/// per direction (reduce and/or broadcast), each moving the full
+/// payload — as one message, or pipelined as [`inter_chunk_spans`]
+/// chunk messages (same bytes, `chunks×` the legs).
+fn hier_tree(c: &mut WireCost, n: usize, nodes: usize, directions: usize, chunk: usize) {
+    let chunks = inter_chunk_spans(n, chunk);
     for _dir in 0..directions {
         for _edge in 0..nodes - 1 {
-            c.msg(n);
+            for (_, len) in &chunks {
+                c.msg(*len);
+            }
         }
     }
 }
@@ -326,6 +353,20 @@ fn node_region(topo: &Topology, spans: &[(usize, usize)], g: usize) -> (usize, u
 
 /// Closed-form wire cost of one `all_reduce_mean` of `n` f32 elements.
 pub fn wire_all_reduce(algo: CommAlgo, n: usize, topo: &Topology) -> WireCost {
+    wire_all_reduce_chunked(algo, n, topo, 0)
+}
+
+/// [`wire_all_reduce`] with the hier inter-node tree pipelined in
+/// chunks of `inter_chunk` elements (0: whole-payload messages — the
+/// other algorithms ignore the parameter). Chunking never changes the
+/// byte count, only the leg count: each tree edge's one full-size
+/// message becomes [`inter_chunk_spans`]`.len()` chunk messages.
+pub fn wire_all_reduce_chunked(
+    algo: CommAlgo,
+    n: usize,
+    topo: &Topology,
+    inter_chunk: usize,
+) -> WireCost {
     let world = topo.world;
     let (n64, w) = (n as u64, world as u64);
     match algo {
@@ -362,7 +403,7 @@ pub fn wire_all_reduce(algo: CommAlgo, n: usize, topo: &Topology) -> WireCost {
                 }
             }
             if topo.multi_node() {
-                hier_tree(&mut c, n, topo.nodes(), 2); // reduce + bcast
+                hier_tree(&mut c, n, topo.nodes(), 2, inter_chunk); // reduce + bcast
             }
             c
         }
@@ -373,6 +414,18 @@ pub fn wire_all_reduce(algo: CommAlgo, n: usize, topo: &Topology) -> WireCost {
 /// [`crate::tensor::flat::shard_span`] ownership).
 pub fn wire_reduce_scatter(algo: CommAlgo, n: usize, topo: &Topology) -> WireCost {
     wire_reduce_scatter_spans(algo, &shard_partition(n, topo.world), topo)
+}
+
+/// [`wire_reduce_scatter_spans`] with the hier inter-node tree
+/// pipelined in `inter_chunk`-element chunks (see
+/// [`wire_all_reduce_chunked`]).
+pub fn wire_reduce_scatter_spans_chunked(
+    algo: CommAlgo,
+    spans: &[(usize, usize)],
+    topo: &Topology,
+    inter_chunk: usize,
+) -> WireCost {
+    wire_rs_spans_impl(algo, spans, topo, inter_chunk)
 }
 
 /// Closed-form wire cost of one `reduce_scatter_mean_spans` over an
@@ -386,6 +439,15 @@ pub fn wire_reduce_scatter_spans(
     algo: CommAlgo,
     spans: &[(usize, usize)],
     topo: &Topology,
+) -> WireCost {
+    wire_rs_spans_impl(algo, spans, topo, 0)
+}
+
+fn wire_rs_spans_impl(
+    algo: CommAlgo,
+    spans: &[(usize, usize)],
+    topo: &Topology,
+    inter_chunk: usize,
 ) -> WireCost {
     let world = spans.len();
     debug_assert_eq!(world, topo.world, "span count must match the topology world");
@@ -423,7 +485,7 @@ pub fn wire_reduce_scatter_spans(
                 }
             }
             if topo.multi_node() {
-                hier_tree(&mut c, n, topo.nodes(), 1); // reduce only
+                hier_tree(&mut c, n, topo.nodes(), 1, inter_chunk); // reduce only
                 // root scatters each non-root leader its node's region
                 for g in 1..topo.nodes() {
                     c.msg(node_region(topo, spans, g).1);
@@ -454,6 +516,26 @@ pub fn wire_all_gather_spans(
     algo: CommAlgo,
     spans: &[(usize, usize)],
     topo: &Topology,
+) -> WireCost {
+    wire_ag_spans_impl(algo, spans, topo, 0)
+}
+
+/// [`wire_all_gather_spans`] with the hier inter-node tree pipelined in
+/// `inter_chunk`-element chunks (see [`wire_all_reduce_chunked`]).
+pub fn wire_all_gather_spans_chunked(
+    algo: CommAlgo,
+    spans: &[(usize, usize)],
+    topo: &Topology,
+    inter_chunk: usize,
+) -> WireCost {
+    wire_ag_spans_impl(algo, spans, topo, inter_chunk)
+}
+
+fn wire_ag_spans_impl(
+    algo: CommAlgo,
+    spans: &[(usize, usize)],
+    topo: &Topology,
+    inter_chunk: usize,
 ) -> WireCost {
     let world = spans.len();
     debug_assert_eq!(world, topo.world, "span count must match the topology world");
@@ -493,7 +575,7 @@ pub fn wire_all_gather_spans(
                 for g in 1..topo.nodes() {
                     c.msg(node_region(topo, spans, g).1);
                 }
-                hier_tree(&mut c, n, topo.nodes(), 1); // full broadcast
+                hier_tree(&mut c, n, topo.nodes(), 1, inter_chunk); // full broadcast
             }
             // down path within each node: local-span scatter + ring AG
             for g in 0..topo.nodes() {

@@ -34,7 +34,7 @@
 //! bytes × hops match them exactly. The single-thread ordering contract
 //! of [`super::RingComm`] applies unchanged.
 
-use super::algo::Topology;
+use super::algo::{inter_chunk_spans, Topology};
 use super::p2p::{Acct, Mailbox, MsgKey, Payload};
 use super::tree::tree_rounds;
 use super::{assert_spans_tile, mean_in_rank_order, CommStats, Communicator};
@@ -43,7 +43,11 @@ use std::sync::Arc;
 use std::time::Instant;
 
 // Leg namespaces: each phase posts on its own base so no (tag, seq,
-// leg, edge) key can collide across phases of one collective.
+// leg, edge) key can collide across phases of one collective. The tree
+// namespaces sub-divide as `round · 1024 + chunk` — the inter tree may
+// pipeline its payload as up to 1024 chunk messages per edge
+// (`inter_chunk_spans`), and ⌈log₂N⌉ < 64 rounds keeps the product
+// inside the 2¹⁶ namespace width.
 const LEG_RS: u32 = 0;
 const LEG_GATHER: u32 = 1 << 16;
 const LEG_TREE_UP: u32 = 2 << 16;
@@ -52,11 +56,22 @@ const LEG_REGION: u32 = 4 << 16;
 const LEG_SCATTER: u32 = 5 << 16;
 const LEG_AG: u32 = 6 << 16;
 
+/// Tree leg id of chunk `ci` of round `k` (see the namespace comment).
+fn tree_leg(base: u32, k: u32, ci: usize) -> u32 {
+    base + k * 1024 + ci as u32
+}
+
 /// Two-tier [`Communicator`]: ring-within-node + tree-across-nodes.
 pub struct HierComm {
     topo: Topology,
     mail: Mailbox,
     stats: Arc<CommStats>,
+    /// Pipeline the inter-node tree payload as chunk messages of at
+    /// most this many elements (0: one whole-payload message per edge —
+    /// the legacy shape). Same bytes either way; the chunks overlap the
+    /// slow tier's rounds, which is what `memsim`'s pipelined tree
+    /// pricing (`collective_chunked_s`) models.
+    inter_chunk: usize,
 }
 
 impl HierComm {
@@ -68,8 +83,14 @@ impl HierComm {
     /// [`HierComm::new`] recording into an externally shared
     /// [`CommStats`] (mixed-algorithm sessions).
     pub fn with_stats(topo: Topology, stats: Arc<CommStats>) -> Self {
+        Self::with_stats_chunked(topo, stats, 0)
+    }
+
+    /// [`HierComm::with_stats`] with the inter-node tree pipelined in
+    /// `inter_chunk`-element chunks (0 disables chunking).
+    pub fn with_stats_chunked(topo: Topology, stats: Arc<CommStats>, inter_chunk: usize) -> Self {
         assert!(topo.world > 0, "communicator needs at least one rank");
-        Self { topo, mail: Mailbox::new(topo.world), stats }
+        Self { topo, mail: Mailbox::new(topo.world), stats, inter_chunk }
     }
 
     /// The topology this communicator runs over.
@@ -192,27 +213,52 @@ impl HierComm {
         acct: &mut Acct,
     ) -> Option<Payload> {
         let nodes = self.topo.nodes();
-        let bytes = 4 * n;
+        let chunks = inter_chunk_spans(n, self.inter_chunk);
         let mut carry = payload;
         for k in 0..tree_rounds(nodes) {
             let d = 1usize << k;
             if g % (2 * d) == d {
+                // slice each origin's buffer per chunk so the edge's
+                // payload pipelines through the slow tier; the receiver
+                // reassembles byte-exactly, so the root's rank-order
+                // fold is untouched
                 let to = self.topo.node_first(g - d);
-                self.mail.post(
-                    MsgKey { tag, seq, leg: LEG_TREE_UP + k, from: rank, to },
-                    std::mem::take(&mut carry),
-                );
-                acct.sent += bytes;
-                acct.legs += 1;
+                for (ci, (off, len)) in chunks.iter().enumerate() {
+                    let part: Payload = carry
+                        .iter()
+                        .map(|(o, buf)| (*o, buf[*off..off + len].to_vec()))
+                        .collect();
+                    self.mail.post(
+                        MsgKey { tag, seq, leg: tree_leg(LEG_TREE_UP, k, ci), from: rank, to },
+                        part,
+                    );
+                    acct.sent += 4 * len;
+                    acct.legs += 1;
+                }
                 return None;
             }
             if g + d < nodes {
                 let from = self.topo.node_first(g + d);
-                let incoming =
-                    self.mail.take(MsgKey { tag, seq, leg: LEG_TREE_UP + k, from, to: rank });
+                let mut incoming: Payload = Vec::new();
+                for (ci, (off, len)) in chunks.iter().enumerate() {
+                    let part = self.mail.take(MsgKey {
+                        tag,
+                        seq,
+                        leg: tree_leg(LEG_TREE_UP, k, ci),
+                        from,
+                        to: rank,
+                    });
+                    if incoming.is_empty() {
+                        incoming = part.iter().map(|(o, _)| (*o, vec![0.0f32; n])).collect();
+                    }
+                    for (slot, (origin, chunk)) in part.into_iter().enumerate() {
+                        assert_eq!(incoming[slot].0, origin, "hier tree chunk origin order");
+                        incoming[slot].1[*off..off + len].copy_from_slice(&chunk);
+                    }
+                    acct.received += 4 * len;
+                    acct.legs += 1;
+                }
                 carry.extend(incoming);
-                acct.received += bytes;
-                acct.legs += 1;
             }
         }
         Some(carry)
@@ -232,29 +278,41 @@ impl HierComm {
         acct: &mut Acct,
     ) -> Vec<f32> {
         let nodes = self.topo.nodes();
-        let bytes = 4 * n;
+        let chunks = inter_chunk_spans(n, self.inter_chunk);
         let (result, my_round) = match result {
             Some(r) => (r, tree_rounds(nodes)),
             None => {
                 let k = g.trailing_zeros();
                 let from = self.topo.node_first(g - (1usize << k));
-                let mut msg =
-                    self.mail.take(MsgKey { tag, seq, leg: LEG_TREE_DOWN + k, from, to: rank });
-                acct.received += bytes;
-                acct.legs += 1;
-                (msg.pop().expect("hier broadcast payload").1, k)
+                let mut r = vec![0.0f32; n];
+                for (ci, (off, len)) in chunks.iter().enumerate() {
+                    let mut msg = self.mail.take(MsgKey {
+                        tag,
+                        seq,
+                        leg: tree_leg(LEG_TREE_DOWN, k, ci),
+                        from,
+                        to: rank,
+                    });
+                    r[*off..off + len]
+                        .copy_from_slice(&msg.pop().expect("hier broadcast payload").1);
+                    acct.received += 4 * len;
+                    acct.legs += 1;
+                }
+                (r, k)
             }
         };
         for j in (0..my_round).rev() {
             let child = g + (1usize << j);
             if child < nodes {
                 let to = self.topo.node_first(child);
-                self.mail.post(
-                    MsgKey { tag, seq, leg: LEG_TREE_DOWN + j, from: rank, to },
-                    vec![(rank, result.clone())],
-                );
-                acct.sent += bytes;
-                acct.legs += 1;
+                for (ci, (off, len)) in chunks.iter().enumerate() {
+                    self.mail.post(
+                        MsgKey { tag, seq, leg: tree_leg(LEG_TREE_DOWN, j, ci), from: rank, to },
+                        vec![(rank, result[*off..off + len].to_vec())],
+                    );
+                    acct.sent += 4 * len;
+                    acct.legs += 1;
+                }
             }
         }
         result
@@ -660,6 +718,81 @@ mod tests {
                 assert_eq!(hier.stats.bytes.load(Ordering::Relaxed), want.bytes, "{label}");
                 assert_eq!(hier.stats.hops.load(Ordering::Relaxed), want.hops, "{label}");
                 assert_eq!(hier.stats.rounds.load(Ordering::Relaxed), world as u64, "{label}");
+            }
+        }
+    }
+
+    /// Chunked inter-node pipelining: bit-identical to flat on every
+    /// grid, same bytes as the unchunked shape, and legs matching the
+    /// chunked closed forms exactly.
+    #[test]
+    fn chunked_tree_is_bit_identical_with_exact_chunked_accounting() {
+        use super::super::algo::{
+            wire_all_gather_spans_chunked, wire_all_reduce_chunked,
+            wire_reduce_scatter_spans_chunked,
+        };
+        for topo in grids() {
+            for inter_chunk in [3usize, 4, 64] {
+                let world = topo.world;
+                let n_ar = 10usize;
+                let hier = Arc::new(HierComm::with_stats_chunked(
+                    topo,
+                    Arc::new(CommStats::default()),
+                    inter_chunk,
+                ));
+                let flat = Arc::new(SharedMemComm::new(world));
+                let outs = Arc::new(Mutex::new(vec![(Vec::new(), Vec::new()); world]));
+                std::thread::scope(|s| {
+                    for rank in 0..world {
+                        let hier = Arc::clone(&hier);
+                        let flat = Arc::clone(&flat);
+                        let outs = Arc::clone(&outs);
+                        s.spawn(move || {
+                            let base: Vec<f32> =
+                                (0..n_ar).map(|i| (i as f32 + 0.7) * (rank as f32 - 1.3)).collect();
+                            let mut h = base.clone();
+                            hier.all_reduce_mean(rank, tags::grad(0), &mut h);
+                            let mut rs = base.clone();
+                            hier.reduce_scatter_mean(rank, tags::grad(1), &mut rs);
+                            let mut ag = vec![rank as f32; n_ar];
+                            let (off, len) =
+                                crate::tensor::flat::shard_span(n_ar, world, rank);
+                            ag[off..off + len].fill(0.25);
+                            hier.all_gather(rank, tags::value(0), &mut ag);
+                            let mut f = base.clone();
+                            flat.all_reduce_mean(rank, tags::grad(0), &mut f);
+                            outs.lock().unwrap()[rank] = (h, f);
+                        });
+                    }
+                });
+                let outs = outs.lock().unwrap();
+                for (rank, (h, f)) in outs.iter().enumerate() {
+                    for (i, (u, v)) in h.iter().zip(f.iter()).enumerate() {
+                        assert_eq!(
+                            u.to_bits(),
+                            v.to_bits(),
+                            "chunk {inter_chunk} {} rank {rank} elem {i}",
+                            topo.label()
+                        );
+                    }
+                }
+                let spans = shard_partition(n_ar, world);
+                let mut want = wire_all_reduce_chunked(CommAlgo::Hier, n_ar, &topo, inter_chunk);
+                let rs_w =
+                    wire_reduce_scatter_spans_chunked(CommAlgo::Hier, &spans, &topo, inter_chunk);
+                let ag_w =
+                    wire_all_gather_spans_chunked(CommAlgo::Hier, &spans, &topo, inter_chunk);
+                want.bytes += rs_w.bytes + ag_w.bytes;
+                want.hops += rs_w.hops + ag_w.hops;
+                let label = format!("chunk {inter_chunk} {}", topo.label());
+                assert_eq!(hier.stats.bytes.load(Ordering::Relaxed), want.bytes, "{label}");
+                assert_eq!(hier.stats.hops.load(Ordering::Relaxed), want.hops, "{label}");
+                // chunking never changes the byte count, only the legs
+                let mut whole = wire_all_reduce(CommAlgo::Hier, n_ar, &topo);
+                let rs0 = wire_reduce_scatter(CommAlgo::Hier, n_ar, &topo);
+                let ag0 = wire_all_gather(CommAlgo::Hier, n_ar, &topo);
+                whole.bytes += rs0.bytes + ag0.bytes;
+                assert_eq!(want.bytes, whole.bytes, "{label}: bytes chunk-invariant");
             }
         }
     }

@@ -59,8 +59,10 @@ pub mod ring;
 pub mod tree;
 
 pub use algo::{
-    make_comm, make_comm_shared, wire_all_gather, wire_all_gather_spans, wire_all_reduce,
-    wire_reduce_scatter, wire_reduce_scatter_spans, AlgoSelect, CommAlgo, Topology, WireCost,
+    make_comm, make_comm_shared, wire_all_gather, wire_all_gather_spans,
+    wire_all_gather_spans_chunked, wire_all_reduce, wire_all_reduce_chunked, wire_reduce_scatter,
+    wire_reduce_scatter_spans, wire_reduce_scatter_spans_chunked, AlgoSelect, CommAlgo, Topology,
+    WireCost,
 };
 pub use hier::HierComm;
 pub use plan::{MixedComm, StepPlan, UnitPlan};
@@ -100,6 +102,55 @@ impl CommStats {
         self.hops.fetch_add(hops, Ordering::Relaxed);
         self.wait_ns
             .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// A point-in-time copy of the counters — an epoch marker. Pair
+    /// with [`CommStats::delta_since`] to attribute traffic to a window
+    /// (the calibration probes use this to keep their synthetic
+    /// collectives out of the reported per-step accounting).
+    pub fn snapshot(&self) -> CommStatsSnapshot {
+        CommStatsSnapshot {
+            bytes: self.bytes.load(Ordering::Relaxed),
+            rounds: self.rounds.load(Ordering::Relaxed),
+            wait_ns: self.wait_ns.load(Ordering::Relaxed),
+            hops: self.hops.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Counter deltas accumulated since `epoch` was snapshotted. Only
+    /// meaningful while all ranks are quiescent (between barriers) —
+    /// in-flight collectives would be split across the boundary.
+    pub fn delta_since(&self, epoch: &CommStatsSnapshot) -> CommStatsSnapshot {
+        let now = self.snapshot();
+        CommStatsSnapshot {
+            bytes: now.bytes - epoch.bytes,
+            rounds: now.rounds - epoch.rounds,
+            wait_ns: now.wait_ns - epoch.wait_ns,
+            hops: now.hops - epoch.hops,
+        }
+    }
+}
+
+/// Plain-value copy of [`CommStats`] at one instant (or the difference
+/// of two instants — see [`CommStats::delta_since`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CommStatsSnapshot {
+    /// Bytes sent + received.
+    pub bytes: u64,
+    /// Collective calls (per participating rank).
+    pub rounds: u64,
+    /// Blocked nanoseconds across ranks.
+    pub wait_ns: u64,
+    /// Point-to-point legs.
+    pub hops: u64,
+}
+
+impl std::ops::AddAssign for CommStatsSnapshot {
+    fn add_assign(&mut self, rhs: Self) {
+        self.bytes += rhs.bytes;
+        self.rounds += rhs.rounds;
+        self.wait_ns += rhs.wait_ns;
+        self.hops += rhs.hops;
     }
 }
 
@@ -262,6 +313,15 @@ pub mod tags {
         (3u64 << 56) | ((slot as u64) << 40) | unit as u64
     }
 
+    /// Calibration-probe collective `k` — the synthetic warm-up
+    /// all-reduces `--calibrate` times to sample blocked time. The
+    /// namespace is deliberately unit-less ([`unit_of`] returns `None`),
+    /// so probes route to a mixed session's default algorithm and never
+    /// alias a training unit's tag sequence.
+    pub fn probe(k: usize) -> u64 {
+        (6u64 << 56) | k as u64
+    }
+
     /// The schedulable unit a tag addresses, if any — the routing key of
     /// mixed-algorithm sessions ([`crate::comm::plan::MixedComm`]). The
     /// scalar [`LOSS`] / [`NORM`] tags (and any unrecognized namespace)
@@ -364,12 +424,32 @@ pub struct CommCtx {
     /// itself is a [`MixedComm`] routing each unit's tags to its
     /// planned algorithm. `None` on fixed-algorithm runs.
     pub plan: Option<Arc<StepPlan>>,
+    /// The rank grid the run communicates over. Decides the ZeRO shard
+    /// *placement*: on a two-tier grid ownership spans are node-local
+    /// ([`crate::tensor::flat::node_local_span`]) so cross-node gathers
+    /// move each node's region over its uplink once per node; on a flat
+    /// grid this degenerates to the balanced `shard_span`.
+    pub topo: Topology,
 }
 
 impl CommCtx {
-    /// A fixed-algorithm context (no per-bucket plan).
+    /// A fixed-algorithm context (no per-bucket plan) over a flat grid.
     pub fn new(comm: Arc<dyn Communicator>, rank: usize, stage: ShardStage) -> Self {
-        Self { comm, rank, stage, plan: None }
+        let world = comm.world();
+        Self { comm, rank, stage, plan: None, topo: Topology::flat(world) }
+    }
+
+    /// This rank's owned region of a `total`-element arena under the
+    /// run's shard placement (node-local on two-tier grids).
+    pub fn placement_span(&self, total: usize) -> (usize, usize) {
+        crate::tensor::flat::node_local_span(total, self.topo.world, self.topo.rpn(), self.rank)
+    }
+
+    /// The full rank-ordered ownership partition of a `total`-element
+    /// arena under the run's shard placement — what the `_spans`
+    /// collectives are handed on the ZeRO paths.
+    pub fn placement_spans(&self, total: usize) -> Vec<(usize, usize)> {
+        crate::tensor::flat::node_local_spans(total, self.topo.world, self.topo.rpn())
     }
 }
 

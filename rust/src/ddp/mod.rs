@@ -65,7 +65,9 @@
 
 use crate::checkpoint;
 use crate::comm::plan::{plan_units, MixedComm, PlanInputs, StepPlan};
-use crate::comm::{make_comm, tags, AlgoSelect, CommCtx, Communicator, ShardStage, Topology};
+use crate::comm::{
+    make_comm, tags, AlgoSelect, CommCtx, CommStatsSnapshot, Communicator, ShardStage, Topology,
+};
 use crate::exec::kernel::KernelConfig;
 use crate::exec::{ExecConfig, Executor};
 use crate::graph::{Graph, ScheduleKind};
@@ -73,12 +75,18 @@ use crate::memsim::machines;
 use crate::memsim::Interconnect;
 use crate::optim::bucket::partition_by_bytes;
 use crate::optim::{Hyper, Optimizer};
-use crate::tensor::flat::shard_span;
+use crate::tensor::flat::node_local_span;
 use crate::tensor::Tensor;
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Barrier, Mutex};
 use std::time::{Duration, Instant};
+
+/// Probe message sizes (elements) each calibration step issues on the
+/// [`tags::probe`] namespace: one latency-dominated message and two
+/// bandwidth-dominated ones, so the least-squares fit of
+/// `wait ≈ hops·lat + bytes/bw` is conditioned on both columns.
+const PROBE_ELEMS: [usize; 3] = [64, 1 << 12, 1 << 15];
 
 /// DDP run outcome. All collective accounting (bytes, rounds, blocked
 /// time) comes from one [`crate::comm::CommStats`] — the per-step scalar
@@ -142,9 +150,16 @@ pub struct DdpReport {
     pub final_params: Vec<Tensor>,
     /// The per-bucket comm plan the run executed (`--algo auto` only):
     /// which algorithm and chunk split served each bucket, plus the
-    /// planner's predicted drain exposure. `None` on fixed-algorithm
-    /// runs.
+    /// planner's predicted drain exposure. On a calibrated run
+    /// (`calibrate_steps > 0`) this is the *re-planned* schedule the run
+    /// switched to mid-run — the one the post-calibration steps
+    /// executed. `None` on fixed-algorithm runs.
     pub plan: Option<Arc<StepPlan>>,
+    /// The interconnect model fitted from the calibration probes
+    /// (`machines::fit_interconnect` over measured `CommStats` blocked
+    /// time), shaped to the run's topology. `None` when
+    /// `calibrate_steps == 0`.
+    pub fitted: Option<Interconnect>,
 }
 
 /// Configuration of a DDP run.
@@ -171,6 +186,23 @@ pub struct DdpConfig {
     /// `ranks_per_node > 0`). A calibrated fit
     /// (`machines::fit_interconnect`) slots in here.
     pub planner_interconnect: Option<Interconnect>,
+    /// `--calibrate N`: run N warmup steps that each issue a small set
+    /// of probe collectives (on the unit-less [`tags::probe`]
+    /// namespace), fit an [`Interconnect`] to the measured `CommStats`
+    /// blocked-time deltas (`machines::fit_interconnect_on`), and — on
+    /// an `Auto` run — re-plan against the fitted model plus the
+    /// *measured* backward time and atomically swap the
+    /// [`MixedComm`] routing between steps
+    /// ([`MixedComm::install_plan`]). Probe traffic is excluded from
+    /// the reported per-step wire accounting. 0 = off.
+    pub calibrate_steps: usize,
+    /// Backward-pass seconds the `Auto` planner should assume for
+    /// drain-point overlap before any calibration has run — e.g. the
+    /// memsim pipeline estimate for a known model
+    /// (`Machine::with_kernel_mode`-scaled). `None` plans the
+    /// serialized bound; a calibrated run replaces it with the measured
+    /// backward time at the re-plan point.
+    pub planner_backward_s: Option<f64>,
     /// Steps to run.
     pub steps: usize,
     /// `Some(cap)` trains every replica on bucketed flat storage and
@@ -223,6 +255,8 @@ impl DdpConfig {
             algo: AlgoSelect::Fixed(crate::comm::CommAlgo::Flat),
             ranks_per_node: 0,
             planner_interconnect: None,
+            calibrate_steps: 0,
+            planner_backward_s: None,
             steps,
             bucket_cap_bytes: None,
             comm_chunk_bytes: None,
@@ -243,6 +277,13 @@ struct RankZero {
     /// Communicator rounds issued by the training loop alone (before
     /// flush/checkpoint collectives), snapshotted at a barrier.
     in_loop_rounds: u64,
+    /// Total traffic of the calibration probes (zero when not
+    /// calibrating) — subtracted from every reported wire figure so the
+    /// per-step accounting stays exact.
+    probe_traffic: CommStatsSnapshot,
+    /// Wallclock rank 0 spent inside probe/fit sections (subtracted
+    /// from the loop wall so `iter_ms` reflects training steps).
+    probe_wall: Duration,
     overlap_frac: f64,
     opt_state_bytes: u64,
     peak_grad_arena_bytes: u64,
@@ -275,6 +316,11 @@ pub fn train_ddp(
     // is computed once, from the store's deterministic bucket partition
     // (a throwaway `build()` supplies the parameter lengths) and the
     // interconnect model, and shared through `CommCtx::plan`.
+    // kept alongside the type-erased handle: the calibration loop's
+    // re-plan step swaps routing through `MixedComm::install_plan`, and
+    // the re-plan itself needs the unit list and planner knobs again
+    let mut mixed: Option<Arc<MixedComm>> = None;
+    let mut planner_units: Option<(Vec<usize>, usize, usize)> = None;
     let (comm, plan): (Arc<dyn Communicator>, Option<Arc<StepPlan>>) = match cfg.algo {
         AlgoSelect::Fixed(algo) => (make_comm(algo, &topo), None),
         AlgoSelect::Auto => {
@@ -318,18 +364,30 @@ pub fn train_ddp(
                 &PlanInputs {
                     ic: &ic,
                     stage: cfg.shard_stage,
-                    // live runs carry no compute estimate: plan for the
-                    // serialized bound (pure per-bucket argmin), which
-                    // the greedy guarantee makes no worse than any
-                    // global --algo whatever the real overlap window
-                    backward_s: 0.0,
+                    // the caller's compute estimate, when it has one
+                    // (memsim pipeline figure); the serialized bound
+                    // otherwise — the greedy guarantee keeps either no
+                    // worse than any global --algo, and a calibrated
+                    // run replaces this with the *measured* backward
+                    // time at the re-plan point
+                    backward_s: cfg.planner_backward_s.unwrap_or(0.0),
                     workers,
                     bucket_cap_bytes: Some(cap),
                 },
             ));
-            (Arc::new(MixedComm::from_plan(&plan)), Some(plan))
+            let session = Arc::new(MixedComm::from_plan(&plan));
+            mixed = Some(Arc::clone(&session));
+            planner_units = Some((units, cap, workers));
+            (session as Arc<dyn Communicator>, Some(plan))
         }
     };
+    let mixed = mixed; // immutable from here
+    let planner_units = Arc::new(planner_units);
+    // rank 0 publishes the calibration outcome here (fitted model plus,
+    // on Auto runs, the re-planned schedule) for the report and for the
+    // other ranks' executors to adopt between barriers.
+    let calib: Arc<Mutex<Option<(Option<Arc<StepPlan>>, Interconnect)>>> =
+        Arc::new(Mutex::new(None));
     let rank0: Arc<Mutex<Option<RankZero>>> = Arc::new(Mutex::new(None));
     let batch_maker = Arc::new(cfg.local_batch_maker);
     let sync = Arc::new(Barrier::new(world));
@@ -338,6 +396,9 @@ pub fn train_ddp(
         for rank in 0..world {
             let comm = Arc::clone(&comm);
             let plan = plan.clone();
+            let mixed = mixed.clone();
+            let planner_units = Arc::clone(&planner_units);
+            let calib = Arc::clone(&calib);
             let rank0 = Arc::clone(&rank0);
             let batch_maker = Arc::clone(&batch_maker);
             let sync = Arc::clone(&sync);
@@ -351,6 +412,7 @@ pub fn train_ddp(
             let stage = cfg.shard_stage;
             let overlap_threads = cfg.overlap_threads;
             let kernel = cfg.kernel;
+            let calibrate_steps = cfg.calibrate_steps.min(cfg.steps);
             let load_from = cfg.load_from.clone();
             let save_to = cfg.save_to.clone();
             scope.spawn(move || {
@@ -370,14 +432,20 @@ pub fn train_ddp(
                     },
                 )
                 .expect("executor");
-                ex.set_comm(CommCtx { comm: Arc::clone(&comm), rank, stage, plan });
+                ex.set_comm(CommCtx { comm: Arc::clone(&comm), rank, stage, plan, topo });
                 if let Some(path) = &load_from {
                     checkpoint::load(&mut ex, path).expect("ddp: checkpoint restore");
                     // re-apply the stage's steady-state arena layout
                     // (the file carries full-coverage tensors)
-                    ex.graph.store.apply_shard_stage(stage, world, rank);
+                    ex.graph.store.apply_shard_stage(stage, &topo, rank);
                 }
                 let mut losses = Vec::new();
+                // calibration state (rank 0 owns the measurements; every
+                // rank participates in the probe collectives/barriers)
+                let mut samples: Vec<machines::CommSample> = Vec::new();
+                let mut bwd_meas: Vec<f64> = Vec::new();
+                let mut probe_traffic = CommStatsSnapshot::default();
+                let mut probe_wall = Duration::ZERO;
                 let t_loop = Instant::now();
                 for step in 0..steps {
                     let batch = (batch_maker)(rank, step);
@@ -389,6 +457,70 @@ pub fn train_ddp(
                     if rank == 0 {
                         losses.push(lbuf[0]);
                     }
+                    if step >= calibrate_steps {
+                        continue;
+                    }
+                    // ---- measure: probe collectives on the unit-less
+                    // probe tag namespace, bracketed by barriers so the
+                    // stats deltas cover exactly one collective ----
+                    let t_probe = Instant::now();
+                    if rank == 0 {
+                        bwd_meas.push(stats.backward.as_secs_f64());
+                    }
+                    for (pi, &n) in PROBE_ELEMS.iter().enumerate() {
+                        sync.wait();
+                        let epoch = if rank == 0 { Some(comm.stats().snapshot()) } else { None };
+                        sync.wait();
+                        let mut buf = vec![1.0f32 + rank as f32; n];
+                        let k = step * PROBE_ELEMS.len() + pi;
+                        comm.all_reduce_mean(rank, tags::probe(k), &mut buf);
+                        sync.wait();
+                        if let Some(epoch) = epoch {
+                            let d = comm.stats().delta_since(&epoch);
+                            samples.push(machines::CommSample {
+                                bytes: d.bytes,
+                                hops: d.hops,
+                                wait_s: d.wait_ns as f64 / 1e9,
+                            });
+                            probe_traffic += d;
+                        }
+                    }
+                    // ---- fit → plan → swap, once, after the last
+                    // calibration step: rank 0 fits the interconnect,
+                    // re-plans with the measured backward window, and
+                    // swaps the mixed session's routing while every
+                    // rank is quiescent between the two barriers ----
+                    if step + 1 == calibrate_steps {
+                        sync.wait();
+                        if rank == 0 {
+                            let fitted = machines::fit_interconnect_on(&topo, &samples);
+                            let new_plan = planner_units.as_ref().as_ref().map(
+                                |(units, cap, workers)| {
+                                    let backward_s = bwd_meas.iter().sum::<f64>()
+                                        / bwd_meas.len().max(1) as f64;
+                                    Arc::new(plan_units(
+                                        units,
+                                        &PlanInputs {
+                                            ic: &fitted,
+                                            stage,
+                                            backward_s,
+                                            workers: *workers,
+                                            bucket_cap_bytes: Some(*cap),
+                                        },
+                                    ))
+                                },
+                            );
+                            if let (Some(mixed), Some(p)) = (&mixed, &new_plan) {
+                                mixed.install_plan(p);
+                            }
+                            *calib.lock().unwrap() = Some((new_plan, fitted));
+                        }
+                        sync.wait();
+                        if let Some((Some(p), _)) = calib.lock().unwrap().as_ref() {
+                            ex.set_plan(Arc::clone(p));
+                        }
+                    }
+                    probe_wall += t_probe.elapsed();
                 }
                 let loop_wall = t_loop.elapsed();
                 // Snapshot the training-loop round count before any
@@ -418,7 +550,7 @@ pub fn train_ddp(
                             .iter()
                             .map(|b| {
                                 let n = b.data.read().unwrap().num_elems();
-                                shard_span(n, world, rank).1
+                                node_local_span(n, topo.world, topo.rpn(), rank).1
                             })
                             .sum()
                     } else {
@@ -438,6 +570,8 @@ pub fn train_ddp(
                         losses: std::mem::take(&mut losses),
                         loop_wall,
                         in_loop_rounds,
+                        probe_traffic,
+                        probe_wall,
                         overlap_frac: if total > 0 { olap as f64 / total as f64 } else { 0.0 },
                         opt_state_bytes: peak.opt_state_bytes,
                         peak_grad_arena_bytes: peak.grad_bytes,
@@ -465,25 +599,38 @@ pub fn train_ddp(
         .unwrap()
         .take()
         .expect("rank 0 must report");
+    // Calibration outcome: the fitted model for the report, and (on an
+    // Auto run) the re-planned schedule the post-calibration steps
+    // actually executed.
+    let (replanned, fitted) = match calib.lock().unwrap().take() {
+        Some((p, ic)) => (p, Some(ic)),
+        None => (None, None),
+    };
     let stats = comm.stats();
     let denom = (world * cfg.steps.max(1)) as f64;
+    // Probe traffic rides the same shared CommStats; subtract it so the
+    // reported wire figures describe training-step collectives only.
+    let pt = rz.probe_traffic;
     DdpReport {
         world,
         steps: cfg.steps,
         losses: rz.losses,
-        iter_ms: rz.loop_wall.as_secs_f64() * 1e3 / cfg.steps.max(1) as f64,
-        comm_bytes: stats.bytes.load(Ordering::Relaxed),
-        comm_rounds: stats.rounds.load(Ordering::Relaxed),
-        comm_hops: stats.hops.load(Ordering::Relaxed),
-        reduces_per_step: rz.in_loop_rounds as f64 / denom,
-        comm_wait_ms: stats.wait_ns.load(Ordering::Relaxed) as f64 / 1e6,
+        iter_ms: rz.loop_wall.saturating_sub(rz.probe_wall).as_secs_f64() * 1e3
+            / cfg.steps.max(1) as f64,
+        comm_bytes: stats.bytes.load(Ordering::Relaxed).saturating_sub(pt.bytes),
+        comm_rounds: stats.rounds.load(Ordering::Relaxed).saturating_sub(pt.rounds),
+        comm_hops: stats.hops.load(Ordering::Relaxed).saturating_sub(pt.hops),
+        reduces_per_step: rz.in_loop_rounds.saturating_sub(pt.rounds) as f64 / denom,
+        comm_wait_ms: stats.wait_ns.load(Ordering::Relaxed).saturating_sub(pt.wait_ns) as f64
+            / 1e6,
         overlap_frac: rz.overlap_frac,
         opt_state_bytes: rz.opt_state_bytes,
         peak_grad_arena_bytes: rz.peak_grad_arena_bytes,
         peak_value_arena_bytes: rz.peak_value_arena_bytes,
         update_elems_per_step: rz.update_elems_per_step,
         final_params: rz.final_params,
-        plan: report_plan,
+        plan: replanned.or(report_plan),
+        fitted,
     }
 }
 
@@ -573,6 +720,63 @@ mod tests {
         let plan = r.plan.expect("auto run reports its plan");
         assert!(!plan.units.is_empty());
         assert!(plan.table().contains("unit"));
+    }
+
+    /// Calibrated auto run: warmup probes fit an interconnect, the run
+    /// re-plans against it mid-flight, and the math stays bit-identical
+    /// to the uncalibrated run — probes never touch model state.
+    #[test]
+    fn calibrated_auto_fits_replans_and_stays_bit_identical() {
+        let run = |calibrate_steps: usize| {
+            let mut c = cfg(ScheduleKind::BackwardFusion, 2, 4);
+            c.algo = AlgoSelect::Auto;
+            c.bucket_cap_bytes = Some(1 << 12);
+            c.calibrate_steps = calibrate_steps;
+            train_ddp(
+                || mlp(99),
+                || Box::new(SgdMomentum) as Box<dyn Optimizer>,
+                Hyper { lr: 0.05, ..Hyper::default() },
+                c,
+            )
+        };
+        let base = run(0);
+        let cal = run(2);
+        assert!(base.fitted.is_none());
+        let fit = cal.fitted.as_ref().expect("calibrated run reports the fit");
+        assert!(fit.intra_bw > 0.0 && fit.intra_lat_s >= 0.0);
+        assert_eq!(fit.world, 2);
+        assert!(cal.plan.is_some(), "calibrated auto run reports the re-planned schedule");
+        assert_eq!(cal.losses, base.losses, "probes must not perturb training");
+        for (a, b) in cal.final_params.iter().zip(base.final_params.iter()) {
+            assert_eq!(a.data(), b.data());
+        }
+    }
+
+    /// On a fixed-algorithm run calibration only measures (fit + report,
+    /// no re-plan), and the probe traffic is excluded from every
+    /// reported wire figure — the accounting matches the probe-free run
+    /// exactly.
+    #[test]
+    fn probe_traffic_is_excluded_from_reported_accounting() {
+        let run = |calibrate_steps: usize| {
+            let mut c = cfg(ScheduleKind::Baseline, 2, 3);
+            c.calibrate_steps = calibrate_steps;
+            train_ddp(
+                || mlp(99),
+                || Box::new(SgdMomentum) as Box<dyn Optimizer>,
+                Hyper { lr: 0.05, ..Hyper::default() },
+                c,
+            )
+        };
+        let base = run(0);
+        let cal = run(2);
+        assert!(cal.fitted.is_some(), "fixed-algo calibration still reports the fit");
+        assert!(cal.plan.is_none(), "no plan on fixed-algo runs");
+        assert_eq!(cal.comm_bytes, base.comm_bytes);
+        assert_eq!(cal.comm_rounds, base.comm_rounds);
+        assert_eq!(cal.comm_hops, base.comm_hops);
+        assert_eq!(cal.reduces_per_step, base.reduces_per_step);
+        assert_eq!(cal.losses, base.losses);
     }
 
     #[test]

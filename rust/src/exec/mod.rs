@@ -50,7 +50,6 @@ use crate::comm::{tags, CommCtx};
 use crate::graph::{Graph, ParamId, ScheduleKind, Src};
 use crate::ops::OpCtx;
 use crate::optim::{bucket, Hyper, Optimizer};
-use crate::tensor::flat::shard_span;
 use crate::tensor::Tensor;
 use pool::{CommChunk, CommPlan, Job, JobTarget, UpdatePool};
 use std::sync::Arc;
@@ -298,6 +297,18 @@ impl Executor {
         self.comm = Some(ctx);
     }
 
+    /// Replace the installed per-bucket comm plan mid-run — the
+    /// calibration loop's re-plan step. The collective routing itself is
+    /// swapped by `MixedComm::install_plan`; this updates the executor's
+    /// view of the plan (per-unit chunk caps). Same contract as the
+    /// routing swap: call between steps, on every rank, with the same
+    /// plan. No-op without a communicator.
+    pub fn set_plan(&mut self, plan: Arc<crate::comm::plan::StepPlan>) {
+        if let Some(ctx) = &mut self.comm {
+            ctx.plan = Some(plan);
+        }
+    }
+
     /// Number of completed update steps.
     pub fn step_count(&self) -> u64 {
         self.step
@@ -487,8 +498,13 @@ impl Executor {
                             (0, bd.num_elems()),
                             "sharded bulk reduce over narrowed grads (unit {unit})"
                         );
-                        ctx.comm
-                            .reduce_scatter_mean(ctx.rank, tags::grad(unit), bd.grads.data_mut());
+                        let spans = ctx.placement_spans(bd.num_elems());
+                        ctx.comm.reduce_scatter_mean_spans(
+                            ctx.rank,
+                            tags::grad(unit),
+                            bd.grads.data_mut(),
+                            &spans,
+                        );
                     } else {
                         ctx.comm
                             .all_reduce_mean(ctx.rank, tags::grad(unit), bd.grads.data_mut());
@@ -524,7 +540,8 @@ impl Executor {
         let Some(bs) = &self.graph.store.buckets else { return };
         for (unit, b) in bs.buckets.iter().enumerate() {
             let total = b.data.read().unwrap().num_elems();
-            let (off, len) = shard_span(total, ctx.comm.world(), ctx.rank);
+            let (off, len) = ctx.placement_span(total);
+            let spans = ctx.placement_spans(total);
             let mut gathered: Vec<Tensor> = Vec::with_capacity(slots);
             for slot in 0..slots {
                 let mut buf = vec![0.0f32; total];
@@ -536,7 +553,7 @@ impl Executor {
                             .copy_from_slice(&bd.state[slot].data()[off - soff..off - soff + len]);
                     }
                 }
-                ctx.comm.all_gather(ctx.rank, tags::state(unit, slot), &mut buf);
+                ctx.comm.all_gather_spans(ctx.rank, tags::state(unit, slot), &mut buf, &spans);
                 gathered.push(Tensor::from_vec(&[total], buf));
             }
             let mut bd = b.data.write().unwrap();
@@ -569,7 +586,8 @@ impl Executor {
         };
         let mut buf = vec![0.0f32; total];
         buf[off..off + shard_vals.len()].copy_from_slice(&shard_vals);
-        ctx.comm.all_gather(ctx.rank, tags::value(unit), &mut buf);
+        let spans = ctx.placement_spans(total);
+        ctx.comm.all_gather_spans(ctx.rank, tags::value(unit), &mut buf, &spans);
         bucket.data.write().unwrap().materialize_values(&buf);
     }
 
@@ -596,12 +614,11 @@ impl Executor {
         if !ctx.stage.shards_grads() {
             return;
         }
-        let world = ctx.comm.world();
         let Some(bs) = &self.graph.store.buckets else { return };
         for b in &bs.buckets {
             let mut bd = b.data.write().unwrap();
             let total = bd.num_elems();
-            let (off, len) = shard_span(total, world, ctx.rank);
+            let (off, len) = ctx.placement_span(total);
             if bd.grad_range == (0, total) {
                 bd.narrow_grads(off, len);
             }
@@ -903,7 +920,7 @@ impl Executor {
             let norm = match &self.comm {
                 Some(ctx) if pre_reduced && ctx.stage.sharded() => {
                     let w = ctx.comm.world();
-                    let mut part = [self.graph.store.shard_grad_sq_partial(w, ctx.rank)];
+                    let mut part = [self.graph.store.shard_grad_sq_partial(&ctx.topo, ctx.rank)];
                     ctx.comm.all_reduce_mean(ctx.rank, tags::NORM, &mut part);
                     (part[0] * w as f32).sqrt()
                 }

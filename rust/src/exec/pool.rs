@@ -21,7 +21,7 @@ use crate::optim::bucket::{
     member_overlap, BucketData, BucketRef,
 };
 use crate::optim::{Hyper, Optimizer};
-use crate::tensor::flat::{chunk_shard_spans, shard_span};
+use crate::tensor::flat::clamp_spans_to_chunk;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -199,13 +199,14 @@ fn buf_to_values(bd: &BucketData, buf: &[f32], base: usize, offset: usize, len: 
 /// replica sees all updated parameters). Collectives run lock-free
 /// (copy-out / copy-back), per the chunk-job rule in the module docs.
 fn gather_bucket_values(ctx: &CommCtx, unit: usize, bucket: &BucketRef, total: usize) {
-    let (off, len) = shard_span(total, ctx.comm.world(), ctx.rank);
+    let (off, len) = ctx.placement_span(total);
+    let spans = ctx.placement_spans(total);
     let mut buf = vec![0.0f32; total];
     {
         let bd = bucket.data.read().unwrap();
         values_to_buf(&bd, &mut buf, 0, off, len);
     }
-    ctx.comm.all_gather(ctx.rank, tags::value(unit), &mut buf);
+    ctx.comm.all_gather_spans(ctx.rank, tags::value(unit), &mut buf, &spans);
     {
         let bd = bucket.data.read().unwrap();
         buf_to_values(&bd, &buf, 0, 0, total);
@@ -269,7 +270,7 @@ pub(crate) fn run_comm_update(
                 return;
             }
             let total = bucket.data.read().unwrap().num_elems();
-            let (off, len) = shard_span(total, ctx.comm.world(), rank);
+            let (off, len) = ctx.placement_span(total);
             if do_reduce {
                 // backward re-widened any ZeRO-2/3-narrowed arena, so
                 // the reduce-scatter sees the full local gradients — a
@@ -282,8 +283,13 @@ pub(crate) fn run_comm_update(
                     (0, total),
                     "sharded reduce over narrowed grads (backward must have widened)"
                 );
-                ctx.comm
-                    .reduce_scatter_mean(rank, tags::grad(unit), bd.grads.data_mut());
+                let spans = ctx.placement_spans(total);
+                ctx.comm.reduce_scatter_mean_spans(
+                    rank,
+                    tags::grad(unit),
+                    bd.grads.data_mut(),
+                    &spans,
+                );
             }
             let shard_resident = bucket.data.read().unwrap().values.is_some();
             if shard_resident {
@@ -374,13 +380,13 @@ pub(crate) fn run_comm_chunk_update(
         apply_bucket_update_range(bucket, opt, step, hp, scale, off, len);
         return;
     }
-    let world = ctx.comm.world();
     let total = bucket.data.read().unwrap().num_elems();
-    let shard = shard_span(total, world, ctx.rank);
-    // chunk-local ownership spans: each rank's bucket-level shard
-    // clamped to the chunk ([`chunk_shard_spans`] — the spans tile the
-    // chunk, with placed empties for ranks whose shard misses it)
-    let spans = chunk_shard_spans(total, world, off, len);
+    let shard = ctx.placement_span(total);
+    // chunk-local ownership spans: each rank's bucket-level placement
+    // shard clamped to the chunk ([`clamp_spans_to_chunk`] — the spans
+    // tile the chunk, with placed empties for ranks whose shard misses
+    // it)
+    let spans = clamp_spans_to_chunk(&ctx.placement_spans(total), off, len);
     let mut buf = {
         let bd = bucket.data.read().unwrap();
         assert_eq!(
@@ -452,10 +458,9 @@ pub(crate) fn finish_chunk_job(ctx: &CommCtx, bucket: &BucketRef, remaining: &At
     if !ctx.stage.shards_grads() {
         return;
     }
-    let world = ctx.comm.world();
     let mut bd = bucket.data.write().unwrap();
     let total = bd.num_elems();
-    let (off, len) = shard_span(total, world, ctx.rank);
+    let (off, len) = ctx.placement_span(total);
     if bd.grad_range == (0, total) {
         bd.narrow_grads(off, len);
     }
@@ -580,6 +585,7 @@ mod tests {
     use super::*;
     use crate::graph::{Param, ParamData};
     use crate::optim::Sgd;
+    use crate::tensor::flat::shard_span;
     use crate::tensor::Tensor;
     use std::sync::RwLock;
 

@@ -240,17 +240,20 @@ impl ParamStore {
     }
 
     /// Narrow every bucket's optimizer-state coverage to `rank`'s ZeRO-1
-    /// shard ([`crate::tensor::flat::shard_span`]), dropping the rest of
-    /// the allocation. Used after a checkpoint restore (which imports
-    /// full, world-size-independent state) to return a sharded replica to
-    /// its 1/W footprint; existing state must cover the shard. No-op on
+    /// shard under `topo`'s placement
+    /// ([`crate::tensor::flat::node_local_span`] — the balanced
+    /// `shard_span` on a flat grid), dropping the rest of the
+    /// allocation. Used after a checkpoint restore (which imports full,
+    /// world-size-independent state) to return a sharded replica to its
+    /// 1/W footprint; existing state must cover the shard. No-op on
     /// scattered stores (sharded updates require buckets).
-    pub fn reshard_state(&self, world: usize, rank: usize) {
+    pub fn reshard_state(&self, topo: &crate::comm::Topology, rank: usize) {
         let Some(bs) = &self.buckets else { return };
         for b in &bs.buckets {
             let mut bd = b.data.write().unwrap();
             let total = bd.num_elems();
-            let (off, len) = crate::tensor::flat::shard_span(total, world, rank);
+            let (off, len) =
+                crate::tensor::flat::node_local_span(total, topo.world, topo.rpn(), rank);
             if bd.state.is_empty() {
                 bd.state_range = (off, len);
                 continue;
@@ -282,11 +285,16 @@ impl ParamStore {
     /// sharded replica to its 1/W footprint, making checkpoints
     /// *stage*-portable as well as world-size-portable. No-op for
     /// `ShardStage::None` and on scattered stores.
-    pub fn apply_shard_stage(&self, stage: crate::comm::ShardStage, world: usize, rank: usize) {
+    pub fn apply_shard_stage(
+        &self,
+        stage: crate::comm::ShardStage,
+        topo: &crate::comm::Topology,
+        rank: usize,
+    ) {
         if !stage.sharded() {
             return;
         }
-        self.reshard_state(world, rank);
+        self.reshard_state(topo, rank);
         let Some(bs) = &self.buckets else { return };
         if !stage.shards_grads() {
             return;
@@ -294,7 +302,8 @@ impl ParamStore {
         for b in &bs.buckets {
             let mut bd = b.data.write().unwrap();
             let total = bd.num_elems();
-            let (off, len) = crate::tensor::flat::shard_span(total, world, rank);
+            let (off, len) =
+                crate::tensor::flat::node_local_span(total, topo.world, topo.rpn(), rank);
             bd.widen_grads();
             bd.narrow_grads(off, len);
             if stage.shards_values() {
@@ -314,7 +323,7 @@ impl ParamStore {
     /// cross-rank reassociation is the only rounding difference.
     /// Tolerates narrowed ZeRO-2/3 arenas, whose coverage is exactly the
     /// shard being summed.
-    pub fn shard_grad_sq_partial(&self, world: usize, rank: usize) -> f32 {
+    pub fn shard_grad_sq_partial(&self, topo: &crate::comm::Topology, rank: usize) -> f32 {
         let Some(bs) = &self.buckets else {
             panic!("shard_grad_sq_partial: sharded norms require bucketed storage");
         };
@@ -322,7 +331,7 @@ impl ParamStore {
         for b in &bs.buckets {
             let bd = b.data.read().unwrap();
             let n = bd.num_elems();
-            let (off, len) = crate::tensor::flat::shard_span(n, world, rank);
+            let (off, len) = crate::tensor::flat::node_local_span(n, topo.world, topo.rpn(), rank);
             let (goff, glen) = bd.grad_range;
             assert!(
                 off >= goff && off + len <= goff + glen,

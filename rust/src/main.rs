@@ -296,7 +296,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
                     bucket_cap_bytes: cap,
                     stage,
                 };
-                let r = memsim::simulate_ddp_with_algos(
+                let r = memsim::simulate_ddp_planned(
                     &m,
                     &net,
                     &opt,
@@ -304,6 +304,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
                     kind,
                     ddp,
                     &plan.algos(),
+                    &plan.hier_chunks(),
                 );
                 let best_fixed = algos
                     .iter()
@@ -356,7 +357,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         println!("  stage   grads    values   opt-state  gather-buf");
         for stage in ShardStage::ALL {
             let units = memsim::comm_unit_elems(&net, cap);
-            let mem = memsim::stage_memory(&units, opt.state_slots as usize, stage, world);
+            let mem = memsim::stage_memory_placed(&units, opt.state_slots as usize, stage, &topo);
             println!(
                 "  {:<6} {:>7.2}  {:>7.2}  {:>9.2}  {:>9.2}",
                 stage.label(),
@@ -427,6 +428,26 @@ fn cmd_ddp(args: &Args) -> anyhow::Result<()> {
         println!("(--chunk-cap needs bucketed storage; defaulting --bucket-cap to 1 MiB)");
     }
     let kernel = kernel_from(args)?;
+    // `--calibrate [N]` = N warmup steps issue probe collectives, fit an
+    // interconnect to the measured blocked time, and (on `--algo auto`)
+    // re-plan against the fitted model + measured backward mid-run. A
+    // bare `--calibrate` probes for 2 steps.
+    let calibrate = match args.get("calibrate") {
+        Some(s) => s.parse().unwrap_or(2),
+        None => 0,
+    };
+    // The planner's a-priori interconnect: the shared-memory preset
+    // shaped to the run's topology, stated here at the CLI layer rather
+    // than defaulted deep inside `train_ddp`. A calibrated run swaps in
+    // the fitted model at the re-plan point.
+    let planner_ic = {
+        let base = machines::shared_mem(world);
+        if topo.ranks_per_node == 0 {
+            base
+        } else {
+            machines::clustered(&base, world, topo.ranks_per_node)
+        }
+    };
     println!(
         "DDP: world={world} schedule={} algo={} topology={} steps={steps} storage={} \
          shard-stage={} overlap_threads={} chunk={:?} kernel={}",
@@ -448,7 +469,9 @@ fn cmd_ddp(args: &Args) -> anyhow::Result<()> {
             schedule,
             algo,
             ranks_per_node: topo.ranks_per_node,
-            planner_interconnect: None,
+            planner_interconnect: Some(planner_ic),
+            calibrate_steps: calibrate,
+            planner_backward_s: None,
             steps,
             bucket_cap_bytes: bucket_cap,
             comm_chunk_bytes: chunk_cap,
@@ -463,6 +486,16 @@ fn cmd_ddp(args: &Args) -> anyhow::Result<()> {
             }),
         },
     );
+    if let Some(fit) = &report.fitted {
+        println!(
+            "calibration ({calibrate} probe steps): fitted intra {:.2} GB/s {:.2} µs/hop, \
+             inter {:.2} GB/s {:.2} µs/hop",
+            fit.intra_bw / 1e9,
+            fit.intra_lat_s * 1e6,
+            fit.inter_bw / 1e9,
+            fit.inter_lat_s * 1e6
+        );
+    }
     if let Some(plan) = &report.plan {
         println!("per-bucket comm plan (--algo auto):\n{}", plan.table());
     }

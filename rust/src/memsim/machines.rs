@@ -8,6 +8,7 @@
 //! DDP harness actually measures.
 
 use super::{Interconnect, Machine};
+use crate::comm::Topology;
 use crate::exec::kernel::KernelMode;
 
 const GB: f64 = 1e9;
@@ -108,6 +109,26 @@ pub fn fit_interconnect(world: usize, samples: &[CommSample]) -> Interconnect {
         return fallback;
     }
     Interconnect::one_tier(world, 1.0 / inv_bw, lat)
+}
+
+/// [`fit_interconnect`] shaped to a concrete [`Topology`]: the fitted
+/// (or fallback) coefficients describe the in-process shared-memory
+/// link, which is the *same physical medium* on both tiers of the
+/// harness's simulated grids — so on a two-tier topology they are
+/// installed on both tiers rather than inventing an unmeasured uplink.
+pub fn fit_interconnect_on(topo: &Topology, samples: &[CommSample]) -> Interconnect {
+    let flat = fit_interconnect(topo.world, samples);
+    if !topo.multi_node() {
+        return flat;
+    }
+    Interconnect::two_tier(
+        topo.world,
+        topo.ranks_per_node,
+        flat.intra_bw,
+        flat.intra_lat_s,
+        flat.intra_bw,
+        flat.intra_lat_s,
+    )
 }
 
 /// TITAN Xp + Core i9-7900X (paper Table 2 row 1).
@@ -271,6 +292,28 @@ mod tests {
         ];
         let neg = fit_interconnect(2, &negative);
         assert_eq!(neg.intra_lat_s, fb.intra_lat_s, "non-physical fit falls back");
+    }
+
+    /// On a two-tier grid the fitted shared-memory coefficients land on
+    /// both tiers (same physical medium in the in-process harness); a
+    /// flat topology reproduces `fit_interconnect` exactly.
+    #[test]
+    fn fit_on_two_tier_installs_coefficients_on_both_tiers() {
+        let (lat, bw) = (2.5e-6f64, 5.0 * GB);
+        let gen = |hops: u64, bytes: u64| CommSample {
+            bytes,
+            hops,
+            wait_s: hops as f64 * lat + bytes as f64 / bw,
+        };
+        let samples = [gen(4000, 1 << 16), gen(48, 64 << 20), gen(800, 4 << 20)];
+        let ic = fit_interconnect_on(&Topology::two_tier(4, 2), &samples);
+        assert_eq!((ic.world, ic.ranks_per_node), (4, 2));
+        assert_eq!(ic.inter_bw, ic.intra_bw);
+        assert_eq!(ic.inter_lat_s, ic.intra_lat_s);
+        let flat = fit_interconnect_on(&Topology::flat(4), &samples);
+        assert_eq!(flat.ranks_per_node, 0);
+        assert_eq!(flat.intra_bw, ic.intra_bw);
+        assert_eq!(flat.intra_lat_s, ic.intra_lat_s);
     }
 
     #[test]

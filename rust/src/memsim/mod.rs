@@ -47,12 +47,15 @@ pub mod machines;
 pub mod spec;
 pub mod zoo;
 
-use crate::comm::algo::{wire_all_gather, wire_all_reduce, wire_reduce_scatter};
+use crate::comm::algo::{
+    inter_chunk_spans, wire_all_gather_spans_chunked, wire_all_reduce_chunked,
+    wire_reduce_scatter_spans_chunked,
+};
 use crate::comm::tree::tree_rounds;
 use crate::comm::{CommAlgo, ShardStage, Topology, WireCost};
 use crate::graph::ScheduleKind;
 use crate::optim::bucket::partition_by_bytes;
-use crate::tensor::flat::shard_span;
+use crate::tensor::flat::{node_local_span, node_local_spans};
 use spec::{NetSpec, OptSpec};
 use std::collections::HashMap;
 
@@ -212,6 +215,22 @@ impl Interconnect {
     /// variants add the root's serialized span scatter/gather star; the
     /// hier variants the root's region star and the leader span stars).
     pub fn collective_s(&self, algo: CommAlgo, op: CollOp, n: usize) -> f64 {
+        self.collective_chunked_s(algo, op, n, 0)
+    }
+
+    /// [`Interconnect::collective_s`] with the hier inter-node tree
+    /// pipelined in `inter_chunk`-element chunks
+    /// (`HierComm::with_stats_chunked`): the tree's critical path drops
+    /// from `R` full-buffer hops to `(R + C − 1)` chunk hops per
+    /// direction — rounds overlap across chunks, the classic pipelined
+    /// binomial tree. The other algorithms ignore the parameter.
+    pub fn collective_chunked_s(
+        &self,
+        algo: CommAlgo,
+        op: CollOp,
+        n: usize,
+        inter_chunk: usize,
+    ) -> f64 {
         let w = self.world;
         if w <= 1 {
             return 0.0;
@@ -220,7 +239,8 @@ impl Interconnect {
         let wf = w as f64;
         let steps = wf - 1.0;
         if algo == CommAlgo::Hier {
-            return self.hier_collective_s(op, b);
+            let chunks = inter_chunk_spans(n, inter_chunk).len();
+            return self.hier_collective_s(op, b, chunks);
         }
         let (bw, lat) = self.oblivious_link();
         let r = tree_rounds(w) as f64;
@@ -242,20 +262,27 @@ impl Interconnect {
     }
 
     /// The [`CommAlgo::Hier`] critical path, mirroring the phases of
-    /// `comm::hier`: `s` = largest node size, `N` = nodes.
-    fn hier_collective_s(&self, op: CollOp, b: f64) -> f64 {
+    /// `comm::hier`: `s` = largest node size, `N` = nodes, `chunks` =
+    /// inter-tree pipeline depth (1 = whole-payload messages).
+    fn hier_collective_s(&self, op: CollOp, b: f64, chunks: usize) -> f64 {
         let topo = self.topology();
         let s = topo.rpn().min(self.world) as f64;
         let nn = topo.nodes();
         let nf = nn as f64;
+        let cf = chunks.max(1) as f64;
         let (bwi, lati) = (self.intra_bw, self.intra_lat_s);
         let (bwe, late) = (self.inter_bw, self.inter_lat_s);
         // one intra ring sweep: s−1 steps of 1/s chunks on the fast tier
         let ring1 = (s - 1.0) * (lati + (b / s) / bwi);
         // one leader star: s−1 serialized span messages totaling (1−1/s)B
         let star = (s - 1.0) * lati + (b - b / s) / bwi;
-        // one inter tree direction: ⌈log₂N⌉ full-buffer hops
-        let tree1 = if nn > 1 { tree_rounds(nn) as f64 * (late + b / bwe) } else { 0.0 };
+        // one inter tree direction: ⌈log₂N⌉ hops, pipelined over the
+        // chunk tiling — (R + C − 1) stages of 1/C-size messages
+        let tree1 = if nn > 1 {
+            (tree_rounds(nn) as f64 + cf - 1.0) * (late + (b / cf) / bwe)
+        } else {
+            0.0
+        };
         // the root's region star: N−1 serialized 1/N-size messages
         let region = if nn > 1 { (nf - 1.0) * late + (b - b / nf) / bwe } else { 0.0 };
         match op {
@@ -267,11 +294,32 @@ impl Interconnect {
     /// Exact wire accounting of one collective — the same closed forms
     /// the real communicators record into `CommStats`.
     pub fn wire(&self, algo: CommAlgo, op: CollOp, n: usize) -> WireCost {
+        self.wire_chunked(algo, op, n, 0)
+    }
+
+    /// [`Interconnect::wire`] with the hier inter-node tree pipelined in
+    /// `inter_chunk`-element chunks: same bytes, `chunks×` the tree-edge
+    /// legs (the other algorithms ignore the parameter). The sharded
+    /// collectives price the *placement* spans the harness executes —
+    /// node-local on a two-tier grid ([`node_local_spans`]), the
+    /// balanced partition on a flat one.
+    pub fn wire_chunked(
+        &self,
+        algo: CommAlgo,
+        op: CollOp,
+        n: usize,
+        inter_chunk: usize,
+    ) -> WireCost {
         let topo = self.topology();
+        let spans = || node_local_spans(n, topo.world, topo.ranks_per_node);
         match op {
-            CollOp::AllReduce => wire_all_reduce(algo, n, &topo),
-            CollOp::ReduceScatter => wire_reduce_scatter(algo, n, &topo),
-            CollOp::AllGather => wire_all_gather(algo, n, &topo),
+            CollOp::AllReduce => wire_all_reduce_chunked(algo, n, &topo, inter_chunk),
+            CollOp::ReduceScatter => {
+                wire_reduce_scatter_spans_chunked(algo, &spans(), &topo, inter_chunk)
+            }
+            CollOp::AllGather => {
+                wire_all_gather_spans_chunked(algo, &spans(), &topo, inter_chunk)
+            }
         }
     }
 }
@@ -591,10 +639,25 @@ pub fn stage_memory(
     stage: ShardStage,
     world: usize,
 ) -> StageMemory {
+    stage_memory_placed(units, state_slots, stage, &Topology::flat(world))
+}
+
+/// [`stage_memory`] under an explicit topology: on a two-tier grid the
+/// shard *placement* is node-local ([`node_local_span`] — the layout
+/// the harness executes there), so rank 0's spans follow its node's
+/// region rather than the balanced partition. A flat topology
+/// reproduces [`stage_memory`] exactly.
+pub fn stage_memory_placed(
+    units: &[usize],
+    state_slots: usize,
+    stage: ShardStage,
+    topo: &Topology,
+) -> StageMemory {
+    let world = topo.world;
     let full: u64 = units.iter().map(|n| 4 * *n as u64).sum();
     let shard0: u64 = units
         .iter()
-        .map(|n| 4 * shard_span(*n, world.max(1), 0).1 as u64)
+        .map(|n| 4 * node_local_span(*n, world.max(1), topo.ranks_per_node, 0).1 as u64)
         .sum();
     StageMemory {
         grad_bytes: if stage.shards_grads() { shard0 } else { full },
@@ -744,6 +807,28 @@ pub fn simulate_ddp_with_algos(
     ddp: DdpSimConfig,
     unit_algos: &[CommAlgo],
 ) -> DdpSimResult {
+    let chunks = vec![0usize; unit_algos.len()];
+    simulate_ddp_planned(m, net, opt, batch, schedule, ddp, unit_algos, &chunks)
+}
+
+/// [`simulate_ddp_with_algos`] with per-unit hier pipeline caps:
+/// `hier_chunks[i]` is unit `i`'s inter-node chunk element count (0 =
+/// whole-payload tree messages — what `StepPlan::hier_chunk_elems`
+/// records; non-hier units ignore it). This prices each unit with
+/// exactly the `collective_chunked_s` the planner's greedy minimized,
+/// which is what keeps "the planned mix is never predicted slower than
+/// any uniform assignment" checkable once plans pipeline the tree.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_ddp_planned(
+    m: &Machine,
+    net: &NetSpec,
+    opt: &OptSpec,
+    batch: usize,
+    schedule: ScheduleKind,
+    ddp: DdpSimConfig,
+    unit_algos: &[CommAlgo],
+    hier_chunks: &[usize],
+) -> DdpSimResult {
     // mirror the harness's own constraint (`train_ddp` rejects sharding
     // over scattered storage), so every prediction describes a run that
     // can actually be measured
@@ -755,29 +840,30 @@ pub fn simulate_ddp_with_algos(
     let ic = &m.interconnect;
     let units = comm_unit_elems(net, ddp.bucket_cap_bytes);
     assert_eq!(unit_algos.len(), units.len(), "one algorithm per collective unit");
+    assert_eq!(hier_chunks.len(), units.len(), "one pipeline cap per collective unit");
     let sharded = ddp.stage.sharded();
     let z3 = ddp.stage.shards_values();
     // drain-point collectives: AR replicated, RS+AG sharded — except
     // ZeRO-3, whose AG belongs to the next forward's first touch
     let unit_s: Vec<f64> = units
         .iter()
-        .zip(unit_algos)
-        .map(|(n, algo)| {
+        .zip(unit_algos.iter().zip(hier_chunks))
+        .map(|(n, (algo, hc))| {
             if z3 {
-                ic.collective_s(*algo, CollOp::ReduceScatter, *n)
+                ic.collective_chunked_s(*algo, CollOp::ReduceScatter, *n, *hc)
             } else if sharded {
-                ic.collective_s(*algo, CollOp::ReduceScatter, *n)
-                    + ic.collective_s(*algo, CollOp::AllGather, *n)
+                ic.collective_chunked_s(*algo, CollOp::ReduceScatter, *n, *hc)
+                    + ic.collective_chunked_s(*algo, CollOp::AllGather, *n, *hc)
             } else {
-                ic.collective_s(*algo, CollOp::AllReduce, *n)
+                ic.collective_chunked_s(*algo, CollOp::AllReduce, *n, *hc)
             }
         })
         .collect();
     let gather_s: Vec<f64> = if z3 {
         units
             .iter()
-            .zip(unit_algos)
-            .map(|(n, algo)| ic.collective_s(*algo, CollOp::AllGather, *n))
+            .zip(unit_algos.iter().zip(hier_chunks))
+            .map(|(n, (algo, hc))| ic.collective_chunked_s(*algo, CollOp::AllGather, *n, *hc))
             .collect()
     } else {
         Vec::new()
@@ -787,16 +873,16 @@ pub fn simulate_ddp_with_algos(
     let gather_serial_s: f64 = gather_s.iter().sum();
     let comm_serial_s = grad_comm + loss_s + gather_serial_s;
     let mut wire_per_step = WireCost::default();
-    for (n, algo) in units.iter().zip(unit_algos) {
+    for (n, (algo, hc)) in units.iter().zip(unit_algos.iter().zip(hier_chunks)) {
         if sharded {
-            wire_per_step += ic.wire(*algo, CollOp::ReduceScatter, *n);
-            wire_per_step += ic.wire(*algo, CollOp::AllGather, *n);
+            wire_per_step += ic.wire_chunked(*algo, CollOp::ReduceScatter, *n, *hc);
+            wire_per_step += ic.wire_chunked(*algo, CollOp::AllGather, *n, *hc);
         } else {
-            wire_per_step += ic.wire(*algo, CollOp::AllReduce, *n);
+            wire_per_step += ic.wire_chunked(*algo, CollOp::AllReduce, *n, *hc);
         }
     }
     wire_per_step += ic.wire(ddp.algo, CollOp::AllReduce, 1);
-    let memory = stage_memory(&units, opt.state_slots as usize, ddp.stage, ic.world);
+    let memory = stage_memory_placed(&units, opt.state_slots as usize, ddp.stage, &ic.topology());
 
     let (drain_exposed_s, overlap_frac) = match schedule {
         ScheduleKind::Baseline | ScheduleKind::ForwardFusion => (grad_comm + loss_s, 0.0),

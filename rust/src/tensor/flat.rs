@@ -47,28 +47,76 @@ pub fn shard_partition(len: usize, world: usize) -> Vec<(usize, usize)> {
     (0..world).map(|rank| shard_span(len, world, rank)).collect()
 }
 
+/// The contiguous region of a buffer of `len` elements owned by `rank`
+/// under *node-local* placement over a `world`-rank grid with
+/// `ranks_per_node` ranks per node: the buffer is first partitioned
+/// over the nodes (balanced, like [`shard_span`] over node indices),
+/// then each node's region over its local ranks. A rank's span
+/// therefore never straddles a node boundary, so a cross-node gather of
+/// the full buffer moves each node's region across its uplink exactly
+/// once — the Xu et al. 2020 cross-replica sharding layout. With
+/// `ranks_per_node == 0` (flat topology) or a single node this is
+/// exactly [`shard_span`]; spans always tile `[0, len)` in rank order.
+pub fn node_local_span(
+    len: usize,
+    world: usize,
+    ranks_per_node: usize,
+    rank: usize,
+) -> (usize, usize) {
+    assert!(world > 0, "node_local_span: world must be positive");
+    assert!(rank < world, "node_local_span: rank {rank} out of {world}");
+    if ranks_per_node == 0 || ranks_per_node >= world {
+        return shard_span(len, world, rank);
+    }
+    // node grid arithmetic mirrors `comm::algo::Topology` exactly
+    let nodes = (world + ranks_per_node - 1) / ranks_per_node;
+    let g = rank / ranks_per_node;
+    let first = g * ranks_per_node;
+    let size = ranks_per_node.min(world - first);
+    let (region_off, region_len) = shard_span(len, nodes, g);
+    let (local_off, local_len) = shard_span(region_len, size, rank - first);
+    (region_off + local_off, local_len)
+}
+
+/// All `world` node-local placement spans (see [`node_local_span`]), in
+/// rank order — the ownership partition the ZeRO paths hand to the
+/// span collectives on a two-tier topology.
+pub fn node_local_spans(len: usize, world: usize, ranks_per_node: usize) -> Vec<(usize, usize)> {
+    (0..world).map(|rank| node_local_span(len, world, ranks_per_node, rank)).collect()
+}
+
+/// Clamp a rank-ordered tiling partition of some arena to the chunk
+/// `[chunk_off, chunk_off + chunk_len)` and rebase to chunk-local
+/// coordinates. Because the input spans tile the arena, the clamped
+/// spans tile the chunk in rank order — ranks whose span misses the
+/// chunk get a correctly placed *empty* span at the boundary,
+/// satisfying the span-collective tiling contract
+/// ([`crate::comm::Communicator`]'s `_spans` methods).
+pub fn clamp_spans_to_chunk(
+    spans: &[(usize, usize)],
+    chunk_off: usize,
+    chunk_len: usize,
+) -> Vec<(usize, usize)> {
+    spans
+        .iter()
+        .map(|&(so, sl)| {
+            let lo = so.clamp(chunk_off, chunk_off + chunk_len);
+            let hi = (so + sl).clamp(chunk_off, chunk_off + chunk_len);
+            (lo - chunk_off, hi - lo)
+        })
+        .collect()
+}
+
 /// The chunk × shard ownership arithmetic of the chunked ZeRO
 /// collectives: each rank's bucket-level [`shard_span`] of a `total`
-/// -element arena, clamped to the chunk `[chunk_off, chunk_off +
-/// chunk_len)` and rebased to chunk-local coordinates. Because the
-/// shard partition tiles the arena, the clamped spans tile the chunk in
-/// rank order — ranks whose shard misses the chunk get a correctly
-/// placed *empty* span at the boundary, satisfying the span-collective
-/// tiling contract ([`crate::comm::Communicator`]'s `_spans` methods).
+/// -element arena, clamped to the chunk via [`clamp_spans_to_chunk`].
 pub fn chunk_shard_spans(
     total: usize,
     world: usize,
     chunk_off: usize,
     chunk_len: usize,
 ) -> Vec<(usize, usize)> {
-    (0..world)
-        .map(|rank| {
-            let (so, sl) = shard_span(total, world, rank);
-            let lo = so.clamp(chunk_off, chunk_off + chunk_len);
-            let hi = (so + sl).clamp(chunk_off, chunk_off + chunk_len);
-            (lo - chunk_off, hi - lo)
-        })
-        .collect()
+    clamp_spans_to_chunk(&shard_partition(total, world), chunk_off, chunk_len)
 }
 
 /// A contiguous packing of N member shapes: spans are tight (no padding)
@@ -243,6 +291,45 @@ mod tests {
         for (rank, span) in p.iter().enumerate() {
             assert_eq!(*span, shard_span(10, 4, rank));
         }
+    }
+
+    #[test]
+    fn node_local_spans_tile_and_respect_node_boundaries() {
+        // 10 elems, 4 ranks in nodes of 2: node regions [0,5) [5,10),
+        // members split each region — vs balanced (0,3)(3,3)(6,2)(8,2)
+        let p = node_local_spans(10, 4, 2);
+        assert_eq!(p, vec![(0, 3), (3, 2), (5, 3), (8, 2)]);
+        // flat (rpn 0) and single-node (rpn >= world) degenerate exactly
+        assert_eq!(node_local_spans(10, 4, 0), shard_partition(10, 4));
+        assert_eq!(node_local_spans(10, 4, 4), shard_partition(10, 4));
+        assert_eq!(node_local_spans(10, 4, 7), shard_partition(10, 4));
+        // ragged grid: 5 ranks in nodes of 2 → node sizes [2, 2, 1]
+        let p = node_local_spans(11, 5, 2);
+        assert_eq!(p, vec![(0, 2), (2, 2), (4, 2), (6, 2), (8, 3)]);
+        // every grid tiles contiguously in rank order
+        for (len, world, rpn) in [(10usize, 4usize, 2usize), (11, 5, 2), (3, 4, 2), (64, 6, 4)] {
+            let mut next = 0;
+            for (rank, (o, l)) in node_local_spans(len, world, rpn).iter().enumerate() {
+                assert_eq!(*o, next, "len {len} {world}x{rpn} rank {rank}");
+                assert_eq!((*o, *l), node_local_span(len, world, rpn, rank));
+                next = o + l;
+            }
+            assert_eq!(next, len);
+        }
+    }
+
+    #[test]
+    fn clamp_spans_to_chunk_rebases_any_tiling() {
+        // node-local placement ∩ chunk: same contract as the balanced
+        // chunk_shard_spans, over the placed partition
+        let placed = node_local_spans(10, 4, 2); // (0,3)(3,2)(5,3)(8,2)
+        assert_eq!(clamp_spans_to_chunk(&placed, 4, 4), vec![(0, 0), (0, 1), (1, 3), (4, 0)]);
+        let mut next = 0;
+        for (o, l) in clamp_spans_to_chunk(&placed, 2, 7) {
+            assert_eq!(o, next);
+            next = o + l;
+        }
+        assert_eq!(next, 7);
     }
 
     #[test]

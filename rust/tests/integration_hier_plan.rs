@@ -22,17 +22,18 @@
 
 use optfuse::comm::plan::{plan_units, PlanInputs};
 use optfuse::comm::{
-    wire_all_gather, wire_all_reduce, wire_reduce_scatter, AlgoSelect, CommAlgo, ShardStage,
-    Topology, WireCost,
+    tags, wire_all_gather_spans, wire_all_gather_spans_chunked, wire_all_reduce,
+    wire_all_reduce_chunked, wire_reduce_scatter_spans, wire_reduce_scatter_spans_chunked,
+    AlgoSelect, CommAlgo, CommStats, Communicator, HierComm, ShardStage, Topology, WireCost,
 };
 use optfuse::data::image_batch;
 use optfuse::ddp::{train_ddp, DdpConfig, DdpReport};
 use optfuse::exec::kernel::{KernelConfig, KernelMode};
 use optfuse::graph::{Graph, ScheduleKind, Src};
-use optfuse::memsim::machines::table2_machines;
+use optfuse::memsim::machines::{fit_interconnect_on, table2_machines, CommSample};
 use optfuse::memsim::spec::{LayerSpec, NetSpec, OptSpec};
 use optfuse::memsim::{
-    comm_unit_elems, simulate, simulate_ddp, simulate_ddp_with_algos, DdpSimConfig,
+    comm_unit_elems, simulate, simulate_ddp, simulate_ddp_planned, DdpSimConfig, Interconnect,
 };
 use optfuse::models::mlp;
 use optfuse::ops::activation::Relu;
@@ -40,8 +41,11 @@ use optfuse::ops::dense::Linear;
 use optfuse::ops::loss::MseLoss;
 use optfuse::optim::bucket::partition_by_bytes;
 use optfuse::optim::{Hyper, Optimizer, SgdMomentum};
+use optfuse::tensor::flat::node_local_spans;
 use optfuse::tensor::Tensor;
 use optfuse::util::XorShiftRng;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
 
 fn sgd_momentum() -> Box<dyn Optimizer> {
     Box::new(SgdMomentum)
@@ -161,8 +165,16 @@ fn lane_batch(rank: usize, step: usize) -> Vec<Tensor> {
 }
 
 /// Acceptance: measured bytes × hops of a hierarchical run equal the
-/// two-tier closed forms exactly — on a ragged grid, replicated and
-/// ZeRO-1, per schedule.
+/// two-tier closed forms exactly — on a ragged grid, replicated,
+/// ZeRO-1, and ZeRO-3 under node-local shard placement, per schedule.
+///
+/// The sharded arms price the *node-local* spans the executor actually
+/// uses (`node_local_spans`), not a balanced partition: the span closed
+/// forms must account every byte of the placement-aware session. ZeRO-3
+/// holds with the same `steps ×` total because a fresh run's step 0
+/// forward sees full values (no gather), steps 1.. gather at first
+/// touch, and the final `materialize_values` gather brings the per-unit
+/// all-gather count back to `steps`.
 #[test]
 fn hier_wire_accounting_matches_two_tier_closed_forms_exactly() {
     let world = 3;
@@ -185,7 +197,8 @@ fn hier_wire_accounting_matches_two_tier_closed_forms_exactly() {
         .collect();
     let schedules =
         [ScheduleKind::Baseline, ScheduleKind::ForwardFusion, ScheduleKind::BackwardFusion];
-    for shard in [false, true] {
+    for stage in [ShardStage::None, ShardStage::Zero1, ShardStage::Zero3] {
+        let shard = stage != ShardStage::None;
         for schedule in schedules {
             if shard && schedule == ScheduleKind::ForwardFusion {
                 // FF's end-of-run flush all-gathers under sharding —
@@ -196,19 +209,20 @@ fn hier_wire_accounting_matches_two_tier_closed_forms_exactly() {
             cfg.algo = CommAlgo::Hier.into();
             cfg.ranks_per_node = rpn;
             cfg.bucket_cap_bytes = Some(cap);
-            cfg.shard_stage = if shard { ShardStage::Zero1 } else { ShardStage::None };
+            cfg.shard_stage = stage;
             let r = train_ddp(|| lane_graph(11, layers), sgd_momentum, sgd_hyper(), cfg);
             let mut per_step = WireCost::default();
             for n in &units {
                 if shard {
-                    per_step += wire_reduce_scatter(CommAlgo::Hier, *n, &topo);
-                    per_step += wire_all_gather(CommAlgo::Hier, *n, &topo);
+                    let spans = node_local_spans(*n, world, rpn);
+                    per_step += wire_reduce_scatter_spans(CommAlgo::Hier, &spans, &topo);
+                    per_step += wire_all_gather_spans(CommAlgo::Hier, &spans, &topo);
                 } else {
                     per_step += wire_all_reduce(CommAlgo::Hier, *n, &topo);
                 }
             }
             per_step += wire_all_reduce(CommAlgo::Hier, 1, &topo); // loss
-            let label = format!("{schedule:?}/hier/shard={shard}");
+            let label = format!("{schedule:?}/hier/{}", stage.label());
             assert_eq!(
                 r.comm_bytes,
                 per_step.bytes * steps as u64,
@@ -317,7 +331,7 @@ fn planned_mix_never_predicted_slower_than_any_global_algo_on_table2_machines() 
                         bucket_cap_bytes: cap,
                     },
                 );
-                let auto = simulate_ddp_with_algos(
+                let auto = simulate_ddp_planned(
                     &m,
                     &net,
                     &opt,
@@ -325,6 +339,7 @@ fn planned_mix_never_predicted_slower_than_any_global_algo_on_table2_machines() 
                     schedule,
                     DdpSimConfig { algo: plan.default_algo, bucket_cap_bytes: cap, stage },
                     &plan.algos(),
+                    &plan.hier_chunks(),
                 );
                 let mut distinct: Vec<CommAlgo> = plan.algos();
                 distinct.dedup();
@@ -357,4 +372,206 @@ fn planned_mix_never_predicted_slower_than_any_global_algo_on_table2_machines() 
         saw_mixed,
         "a mixed-size bucket population on a two-tier cluster must mix algorithms"
     );
+}
+
+/// Acceptance: a chunk-pipelined `HierComm` session's measured
+/// `CommStats` equal the `wire_*_chunked` closed forms exactly —
+/// all-reduce plus the node-local span collectives the ZeRO path
+/// issues — and chunking multiplies tree-edge legs without changing a
+/// single byte on the wire.
+#[test]
+fn chunked_hier_session_matches_chunked_closed_forms_exactly() {
+    let topo = Topology::two_tier(4, 2);
+    let world = topo.world;
+    let n = 4096usize;
+    let chunk = 1000usize;
+    let spans = node_local_spans(n, world, 2);
+    let stats = Arc::new(CommStats::default());
+    let hier = Arc::new(HierComm::with_stats_chunked(topo, Arc::clone(&stats), chunk));
+    std::thread::scope(|s| {
+        for rank in 0..world {
+            let hier = Arc::clone(&hier);
+            let spans = spans.clone();
+            s.spawn(move || {
+                let mut buf: Vec<f32> = (0..n).map(|i| (rank * n + i) as f32).collect();
+                hier.all_reduce_mean(rank, tags::grad(1), &mut buf);
+                hier.reduce_scatter_mean_spans(rank, tags::grad(2), &mut buf, &spans);
+                hier.all_gather_spans(rank, tags::grad(3), &mut buf, &spans);
+            });
+        }
+    });
+    let mut expected = WireCost::default();
+    expected += wire_all_reduce_chunked(CommAlgo::Hier, n, &topo, chunk);
+    expected += wire_reduce_scatter_spans_chunked(CommAlgo::Hier, &spans, &topo, chunk);
+    expected += wire_all_gather_spans_chunked(CommAlgo::Hier, &spans, &topo, chunk);
+    assert_eq!(
+        stats.bytes.load(Ordering::Relaxed),
+        expected.bytes,
+        "chunked session bytes must equal the chunked closed forms exactly"
+    );
+    assert_eq!(
+        stats.hops.load(Ordering::Relaxed),
+        expected.hops,
+        "chunked session hop legs must equal the chunked closed forms exactly"
+    );
+    // chunking is a scheduling change, not a traffic change
+    let whole = wire_all_reduce(CommAlgo::Hier, n, &topo);
+    let chunked = wire_all_reduce_chunked(CommAlgo::Hier, n, &topo, chunk);
+    assert_eq!(chunked.bytes, whole.bytes, "chunking must not move extra bytes");
+    assert!(chunked.hops > whole.hops, "chunking splits tree legs into more messages");
+}
+
+/// Satellite: fitting is a pure function of its samples — identical
+/// measured samples produce bit-identical coefficients, exactly-linear
+/// samples recover their generating machine, and identical coefficients
+/// produce an identical plan (algo, chunking, predicted seconds).
+#[test]
+fn fit_is_deterministic_and_identical_samples_yield_identical_plans() {
+    let topo = Topology::two_tier(4, 2);
+    let (bw, lat) = (8e9f64, 2e-6f64);
+    let samples: Vec<CommSample> = [512u64, 1 << 16, 1 << 20]
+        .iter()
+        .map(|&bytes| CommSample { bytes, hops: 6, wait_s: 6.0 * lat + bytes as f64 / bw })
+        .collect();
+    let a = fit_interconnect_on(&topo, &samples);
+    let b = fit_interconnect_on(&topo, &samples);
+    for (x, y) in [
+        (a.intra_bw, b.intra_bw),
+        (a.intra_lat_s, b.intra_lat_s),
+        (a.inter_bw, b.inter_bw),
+        (a.inter_lat_s, b.inter_lat_s),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "fit must be bit-deterministic");
+    }
+    assert!((a.intra_bw - bw).abs() / bw < 1e-6, "bandwidth recovered: {}", a.intra_bw);
+    assert!((a.intra_lat_s - lat).abs() / lat < 1e-6, "latency recovered: {}", a.intra_lat_s);
+    let units = [64usize, 4096, 1 << 16, 1 << 20];
+    let plan = |ic: &Interconnect| {
+        plan_units(
+            &units,
+            &PlanInputs {
+                ic,
+                stage: ShardStage::Zero1,
+                backward_s: 1e-4,
+                workers: 2,
+                bucket_cap_bytes: Some(1 << 18),
+            },
+        )
+    };
+    let p = plan(&a);
+    let q = plan(&b);
+    assert_eq!(p.default_algo, q.default_algo, "identical fits → identical default algo");
+    for (u, v) in p.units.iter().zip(q.units.iter()) {
+        assert_eq!(u.algo, v.algo, "unit {}: algo", u.unit);
+        assert_eq!(u.chunk_elems, v.chunk_elems, "unit {}: chunk", u.unit);
+        assert_eq!(u.hier_chunk_elems, v.hier_chunk_elems, "unit {}: hier chunk", u.unit);
+        assert_eq!(
+            u.pred_comm_s.to_bits(),
+            v.pred_comm_s.to_bits(),
+            "unit {}: predicted seconds bit-identical",
+            u.unit
+        );
+    }
+}
+
+/// Satellite: the measure→fit→plan loop dominates on the *fitted*
+/// machine too — a plan drawn from self-calibrated coefficients is
+/// never predicted slower than any uniform algorithm on that machine,
+/// with chunk-aware pricing on both sides.
+#[test]
+fn calibrated_plan_never_predicted_slower_on_fitted_machines() {
+    let net = mixed_size_netspec();
+    let opt = OptSpec::sgd_momentum();
+    let batch = 4;
+    let cap = Some(1 << 18);
+    for machine in table2_machines().into_iter().take(2) {
+        let m = machine.with_topology(8, 4);
+        let topo = m.interconnect.topology();
+        let (bw, lat) = (m.interconnect.intra_bw, m.interconnect.intra_lat_s);
+        let samples: Vec<CommSample> = [512u64, 1 << 14, 1 << 18, 1 << 22]
+            .iter()
+            .map(|&bytes| CommSample { bytes, hops: 6, wait_s: 6.0 * lat + bytes as f64 / bw })
+            .collect();
+        let mut fm = m.clone();
+        fm.interconnect = fit_interconnect_on(&topo, &samples);
+        for schedule in [ScheduleKind::Baseline, ScheduleKind::BackwardFusion] {
+            for stage in [ShardStage::None, ShardStage::Zero1] {
+                let units = comm_unit_elems(&net, cap);
+                let compute = simulate(&fm, &net, &opt, batch, schedule);
+                let bwd = if schedule == ScheduleKind::BackwardFusion {
+                    compute.backward_s
+                } else {
+                    0.0
+                };
+                let plan = plan_units(
+                    &units,
+                    &PlanInputs {
+                        ic: &fm.interconnect,
+                        stage,
+                        backward_s: bwd,
+                        workers: 0,
+                        bucket_cap_bytes: cap,
+                    },
+                );
+                let auto = simulate_ddp_planned(
+                    &fm,
+                    &net,
+                    &opt,
+                    batch,
+                    schedule,
+                    DdpSimConfig { algo: plan.default_algo, bucket_cap_bytes: cap, stage },
+                    &plan.algos(),
+                    &plan.hier_chunks(),
+                );
+                for algo in CommAlgo::ALL {
+                    let fixed = simulate_ddp(
+                        &fm,
+                        &net,
+                        &opt,
+                        batch,
+                        schedule,
+                        DdpSimConfig { algo, bucket_cap_bytes: cap, stage },
+                    );
+                    assert!(
+                        auto.step_s <= fixed.step_s + 1e-12,
+                        "{} (fitted) {schedule:?} {}: planned {:.6e} vs global {} {:.6e}",
+                        fm.name,
+                        stage.label(),
+                        auto.step_s,
+                        algo.label(),
+                        fixed.step_s
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Tentpole end-to-end: a self-calibrating `--algo auto` run on a
+/// two-tier grid — probe, fit, re-plan, atomic mid-run routing swap —
+/// stays bit-identical to the flat fixed-algorithm reference and
+/// reports the fitted coefficients alongside the re-planned schedule.
+#[test]
+fn calibrated_auto_on_two_tier_grid_stays_bit_identical_to_flat() {
+    let run = |algo: AlgoSelect, rpn: usize, calibrate: usize| -> DdpReport {
+        let mut cfg = DdpConfig::new(4, ScheduleKind::BackwardFusion, 4, image_batch_maker());
+        cfg.algo = algo;
+        cfg.ranks_per_node = rpn;
+        cfg.bucket_cap_bytes = Some(1 << 12);
+        cfg.calibrate_steps = calibrate;
+        cfg.overlap_threads = 2;
+        train_ddp(|| mlp(99), sgd_momentum, sgd_hyper(), cfg)
+    };
+    let flat = run(AlgoSelect::Fixed(CommAlgo::Flat), 0, 0);
+    let auto = run(AlgoSelect::Auto, 2, 2);
+    assert_eq!(flat.losses, auto.losses, "calibration must not change the math");
+    assert_eq!(
+        max_param_diff(&flat.final_params, &auto.final_params),
+        0.0,
+        "calibrated two-tier auto must stay bit-identical to flat"
+    );
+    let fit = auto.fitted.as_ref().expect("calibrated run reports fitted coefficients");
+    assert!(fit.intra_bw > 0.0 && fit.inter_bw > 0.0);
+    assert_eq!(fit.world, 4);
+    assert!(auto.plan.is_some(), "re-planned schedule is reported");
 }
