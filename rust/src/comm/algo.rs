@@ -269,6 +269,15 @@ impl WireCost {
         self.bytes += 8 * elems as u64;
         self.hops += 2;
     }
+
+    /// Reprice this (f32-sized) cost at a different wire element width:
+    /// `bytes × elem_bytes / 4`, hops unchanged. Exact — every closed-form
+    /// byte term is a multiple of 4 per element, mirroring the rescaling
+    /// [`crate::comm::CommStats::set_elem_bytes`] applies to the measured
+    /// side, so measured == closed form holds under every dtype.
+    pub fn scaled_to(self, elem_bytes: usize) -> WireCost {
+        WireCost { bytes: self.bytes * elem_bytes as u64 / 4, hops: self.hops }
+    }
 }
 
 impl std::ops::AddAssign for WireCost {

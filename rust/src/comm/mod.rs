@@ -77,9 +77,10 @@ use std::time::Instant;
 
 /// Unified collective accounting, shared by every operation a
 /// [`Communicator`] performs.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct CommStats {
-    /// Total bytes sent + received across all ranks and collectives.
+    /// Total bytes sent + received across all ranks and collectives,
+    /// priced at [`CommStats::set_elem_bytes`]'s wire dtype.
     pub bytes: AtomicU64,
     /// Collective calls, counted once per participating rank (so one
     /// all-reduce among W ranks adds W).
@@ -92,12 +93,41 @@ pub struct CommStats {
     /// total, and a flat session 2 per rank (contribute + collect). The
     /// closed forms live in [`algo`] and are what `memsim` prices.
     pub hops: AtomicU64,
+    /// Wire bytes per element (4 = f32 — the in-memory representation
+    /// every payload actually uses; 2 models BF16 wire traffic). Every
+    /// internal byte count is a multiple of 4 per element, so the
+    /// rescaling in [`CommStats::record`] stays exact and measured
+    /// totals keep matching the dtype-aware closed forms bit-for-bit.
+    elem_bytes: AtomicU64,
+}
+
+impl Default for CommStats {
+    fn default() -> Self {
+        Self {
+            bytes: AtomicU64::new(0),
+            rounds: AtomicU64::new(0),
+            wait_ns: AtomicU64::new(0),
+            hops: AtomicU64::new(0),
+            elem_bytes: AtomicU64::new(4),
+        }
+    }
 }
 
 impl CommStats {
+    /// Set the wire dtype width this accounting prices payloads at
+    /// (4 = f32, 2 = bf16). Call before any collective runs — rescaling
+    /// applies per [`CommStats::record`] call, not retroactively.
+    pub fn set_elem_bytes(&self, eb: u64) {
+        assert!(eb == 2 || eb == 4, "wire elem bytes must be 2 (bf16) or 4 (f32)");
+        self.elem_bytes.store(eb, Ordering::Relaxed);
+    }
+
     pub(crate) fn record(&self, sent: usize, received: usize, hops: u64, t0: Instant) {
+        let eb = self.elem_bytes.load(Ordering::Relaxed);
+        // payload byte counts are f32-sized (4/element); reprice at the
+        // wire dtype — exact because every count is a multiple of 4
         self.bytes
-            .fetch_add((sent + received) as u64, Ordering::Relaxed);
+            .fetch_add((sent + received) as u64 * eb / 4, Ordering::Relaxed);
         self.rounds.fetch_add(1, Ordering::Relaxed);
         self.hops.fetch_add(hops, Ordering::Relaxed);
         self.wait_ns

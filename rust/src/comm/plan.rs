@@ -38,6 +38,7 @@ use super::hier::HierComm;
 use super::{tags, CommStats, Communicator, ShardStage};
 use crate::memsim::{drain_point, CollOp, Interconnect};
 use crate::optim::bucket::partition_by_bytes;
+use crate::tensor::dtype::Dtype;
 use std::sync::{Arc, RwLock};
 
 /// The planner's choice for one schedulable unit (bucket).
@@ -164,6 +165,11 @@ pub struct PlanInputs<'a> {
     /// The bucket cap that produced the unit list (recorded on the
     /// plan for display).
     pub bucket_cap_bytes: Option<usize>,
+    /// Wire element width the run will use: BF16 arenas put 2-byte
+    /// elements on every collective, halving the byte terms the greedy
+    /// prices (latency/hop terms are unchanged, so the best algorithm
+    /// can genuinely differ from the FP32 plan on latency-bound units).
+    pub dtype: Dtype,
 }
 
 /// Drain-time collective seconds of one unit of `n` elements: AR
@@ -176,14 +182,15 @@ fn unit_comm_s(
     stage: ShardStage,
     n: usize,
     hier_chunk: usize,
+    elem_bytes: usize,
 ) -> f64 {
     if stage.shards_values() {
-        ic.collective_chunked_s(algo, CollOp::ReduceScatter, n, hier_chunk)
+        ic.collective_chunked_s_eb(algo, CollOp::ReduceScatter, n, hier_chunk, elem_bytes)
     } else if stage.sharded() {
-        ic.collective_chunked_s(algo, CollOp::ReduceScatter, n, hier_chunk)
-            + ic.collective_chunked_s(algo, CollOp::AllGather, n, hier_chunk)
+        ic.collective_chunked_s_eb(algo, CollOp::ReduceScatter, n, hier_chunk, elem_bytes)
+            + ic.collective_chunked_s_eb(algo, CollOp::AllGather, n, hier_chunk, elem_bytes)
     } else {
-        ic.collective_chunked_s(algo, CollOp::AllReduce, n, hier_chunk)
+        ic.collective_chunked_s_eb(algo, CollOp::AllReduce, n, hier_chunk, elem_bytes)
     }
 }
 
@@ -254,10 +261,11 @@ pub fn plan_units(units: &[usize], inp: &PlanInputs) -> StepPlan {
                     vec![0usize]
                 };
                 for hc in hier_cands {
+                    let eb = inp.dtype.elem_bytes();
                     let t = if parts == 1 {
-                        unit_comm_s(inp.ic, algo, inp.stage, n, hc)
+                        unit_comm_s(inp.ic, algo, inp.stage, n, hc, eb)
                     } else {
-                        waves * unit_comm_s(inp.ic, algo, inp.stage, chunk, 0)
+                        waves * unit_comm_s(inp.ic, algo, inp.stage, chunk, 0, eb)
                     };
                     let better = match &best {
                         None => true,
@@ -525,6 +533,7 @@ mod tests {
             backward_s: 0.0,
             workers: 0,
             bucket_cap_bytes: None,
+            dtype: Dtype::F32,
         };
         let plan = plan_units(&units, &inp);
         assert_eq!(plan.units[0].algo, CommAlgo::Flat, "tiny unit: flat's two legs");
@@ -549,6 +558,7 @@ mod tests {
                     backward_s,
                     workers: 0,
                     bucket_cap_bytes: None,
+                    dtype: Dtype::F32,
                 };
                 let plan = plan_units(&units, &inp);
                 for algo in CommAlgo::ALL {
@@ -619,6 +629,7 @@ mod tests {
             backward_s: 0.0,
             workers: 0,
             bucket_cap_bytes: None,
+            dtype: Dtype::F32,
         };
         let plan = plan_units(&[1 << 16, n], &inp);
         for u in &plan.units {
@@ -706,6 +717,7 @@ mod tests {
             backward_s: 0.0,
             workers: 4,
             bucket_cap_bytes: None,
+            dtype: Dtype::F32,
         };
         let plan = plan_units(&units, &with);
         assert!(
@@ -727,6 +739,7 @@ mod tests {
             backward_s: 1e-4,
             workers: 0,
             bucket_cap_bytes: None,
+            dtype: Dtype::F32,
         };
         let (cap, plan) = plan_bucket_caps(&lens, &[1 << 10, 1 << 12, 1 << 20], &inp);
         assert!([1usize << 10, 1 << 12, 1 << 20].contains(&cap));
@@ -805,6 +818,7 @@ mod tests {
                 backward_s: 0.0,
                 workers: 0,
                 bucket_cap_bytes: Some(1 << 20),
+                dtype: Dtype::F32,
             },
         );
         assert!(plan.table().contains("unit"), "table renders");

@@ -75,6 +75,7 @@ use crate::memsim::machines;
 use crate::memsim::Interconnect;
 use crate::optim::bucket::partition_by_bytes;
 use crate::optim::{Hyper, Optimizer};
+use crate::tensor::dtype::{self, Dtype};
 use crate::tensor::flat::node_local_span;
 use crate::tensor::Tensor;
 use std::path::PathBuf;
@@ -228,6 +229,17 @@ pub struct DdpConfig {
     /// hot path (`--kernel scalar|simd|simd-mt`). Bit-identical across
     /// modes; purely a performance knob.
     pub kernel: KernelConfig,
+    /// `--grad-elim`: FORGE gradient elimination on every replica —
+    /// backward-fusion drain-point jobs consume the gradient
+    /// contribution in place and free the bucket's grad arena
+    /// ([`crate::exec::ExecConfig::grad_elim`]). Bit-identical at FP32;
+    /// a no-op outside backward-fusion / bucketed storage.
+    pub grad_elim: bool,
+    /// `--dtype`: arena storage dtype on every replica. [`Dtype::Bf16`]
+    /// halves grad/value arena residency and every collective's wire
+    /// bytes while optimizer state stays FP32 master; requires bucketed
+    /// storage.
+    pub dtype: Dtype,
     /// Restore every replica from this checkpoint before step 0
     /// (re-narrowing state to each rank's shard when sharding).
     pub load_from: Option<PathBuf>,
@@ -263,6 +275,8 @@ impl DdpConfig {
             shard_stage: ShardStage::None,
             overlap_threads: 0,
             kernel: KernelConfig::default(),
+            grad_elim: dtype::grad_elim_env_default(),
+            dtype: dtype::dtype_env_default(),
             load_from: None,
             save_to: None,
             local_batch_maker,
@@ -373,6 +387,7 @@ pub fn train_ddp(
                     backward_s: cfg.planner_backward_s.unwrap_or(0.0),
                     workers,
                     bucket_cap_bytes: Some(cap),
+                    dtype: cfg.dtype,
                 },
             ));
             let session = Arc::new(MixedComm::from_plan(&plan));
@@ -382,6 +397,10 @@ pub fn train_ddp(
         }
     };
     let mixed = mixed; // immutable from here
+    // BF16 wire accounting: the shared stats scale every recorded byte
+    // to the arena element width (2 for bf16 — exactly half of every
+    // collective's FP32 closed form)
+    comm.stats().set_elem_bytes(cfg.dtype.elem_bytes() as u64);
     let planner_units = Arc::new(planner_units);
     // rank 0 publishes the calibration outcome here (fitted model plus,
     // on Auto runs, the re-planned schedule) for the report and for the
@@ -412,6 +431,8 @@ pub fn train_ddp(
             let stage = cfg.shard_stage;
             let overlap_threads = cfg.overlap_threads;
             let kernel = cfg.kernel;
+            let grad_elim = cfg.grad_elim;
+            let dtype = cfg.dtype;
             let calibrate_steps = cfg.calibrate_steps.min(cfg.steps);
             let load_from = cfg.load_from.clone();
             let save_to = cfg.save_to.clone();
@@ -428,6 +449,8 @@ pub fn train_ddp(
                         bucket_cap_bytes,
                         comm_chunk_bytes,
                         kernel,
+                        grad_elim,
+                        dtype,
                         ..Default::default()
                     },
                 )
@@ -506,6 +529,7 @@ pub fn train_ddp(
                                             backward_s,
                                             workers: *workers,
                                             bucket_cap_bytes: Some(*cap),
+                                            dtype,
                                         },
                                     ))
                                 },

@@ -50,6 +50,7 @@ use crate::comm::{tags, CommCtx};
 use crate::graph::{Graph, ParamId, ScheduleKind, Src};
 use crate::ops::OpCtx;
 use crate::optim::{bucket, Hyper, Optimizer};
+use crate::tensor::dtype::{self, Dtype};
 use crate::tensor::Tensor;
 use pool::{CommChunk, CommPlan, Job, JobTarget, UpdatePool};
 use std::sync::Arc;
@@ -107,6 +108,21 @@ pub struct ExecConfig {
     /// [`Executor::new`]; every mode is bit-identical, so this is purely
     /// a performance knob (see [`kernel`]).
     pub kernel: kernel::KernelConfig,
+    /// FORGE-style gradient elimination (`--grad-elim`): effective under
+    /// backward-fusion with bucketed storage and no gradient
+    /// accumulation, where each bucket's drain-point job consumes the
+    /// gradient contribution in place
+    /// ([`bucket::apply_bucket_update_from_contrib`]) and frees the grad
+    /// buffer outright — steady-state grad residency 0. Other schedules
+    /// fall back to the (bit-identical) grad-arena path. Defaults from
+    /// `OPTFUSE_GRAD_ELIM`.
+    pub grad_elim: bool,
+    /// Arena dtype (`--dtype f32|bf16`): BF16 stores value/grad arenas
+    /// at bfloat16 storage precision with FP32 master optimizer state,
+    /// halving value/grad residency and wire bytes in the dtype-aware
+    /// accounting. Requires bucketed storage. Defaults from
+    /// `OPTFUSE_DTYPE`.
+    pub dtype: Dtype,
 }
 
 impl Default for ExecConfig {
@@ -119,7 +135,22 @@ impl Default for ExecConfig {
             bucket_cap_bytes: None,
             comm_chunk_bytes: None,
             kernel: kernel::KernelConfig::default(),
+            grad_elim: dtype::grad_elim_env_default(),
+            dtype: dtype::dtype_env_default(),
         }
+    }
+}
+
+impl ExecConfig {
+    /// Whether gradient elimination is actually in effect for this
+    /// configuration: requested, under backward-fusion, with bucketed
+    /// storage, and no gradient accumulation (accumulating grads across
+    /// micro-steps needs the arena to survive between backwards).
+    pub fn grad_elim_effective(&self) -> bool {
+        self.grad_elim
+            && self.schedule == ScheduleKind::BackwardFusion
+            && self.bucket_cap_bytes.is_some()
+            && self.accum_steps <= 1
     }
 }
 
@@ -230,9 +261,16 @@ impl Executor {
             );
         }
         kernel::set_global(cfg.kernel);
+        if cfg.dtype != Dtype::F32 && cfg.bucket_cap_bytes.is_none() {
+            anyhow::bail!(
+                "--dtype {} needs bucketed storage (set bucket_cap_bytes): the \
+                 arena dtype lives on the flat buckets",
+                cfg.dtype.label()
+            );
+        }
         let mut graph = graph;
         if let Some(cap) = cfg.bucket_cap_bytes {
-            graph.store.bucketize(cap);
+            graph.store.bucketize_with(cap, cfg.grad_elim_effective(), cfg.dtype);
         }
         let n_units = graph.store.num_units();
         let pool = if cfg.schedule == ScheduleKind::BackwardFusion && cfg.threads > 0 {
@@ -355,13 +393,26 @@ impl Executor {
         let hp = self.hyper_at(step);
         match &self.graph.store.buckets {
             Some(bs) => {
-                bucket::apply_bucket_update(
-                    &bs.buckets[unit],
-                    self.opt.as_ref(),
-                    step,
-                    &hp,
-                    self.global_scale,
-                );
+                // eliminating buckets consume the drained contribution in
+                // place and free the grad buffer (FORGE); same update
+                // math, so FP32 stays bit-identical to the arena path
+                if bs.buckets[unit].data.read().unwrap().elim {
+                    bucket::apply_bucket_update_from_contrib(
+                        &bs.buckets[unit],
+                        self.opt.as_ref(),
+                        step,
+                        &hp,
+                        self.global_scale,
+                    );
+                } else {
+                    bucket::apply_bucket_update(
+                        &bs.buckets[unit],
+                        self.opt.as_ref(),
+                        step,
+                        &hp,
+                        self.global_scale,
+                    );
+                }
             }
             None => {
                 let p = self.graph.store.get(unit);

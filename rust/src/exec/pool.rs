@@ -17,7 +17,7 @@
 use crate::comm::{tags, CommCtx, ShardStage};
 use crate::graph::ParamRef;
 use crate::optim::bucket::{
-    apply_bucket_update, apply_bucket_update_range, apply_bucket_update_shard_resident,
+    self, apply_bucket_update, apply_bucket_update_range, apply_bucket_update_shard_resident,
     member_overlap, BucketData, BucketRef,
 };
 use crate::optim::{Hyper, Optimizer};
@@ -158,13 +158,23 @@ impl Job {
                     self.opt.update(self.step, &mut pd, &self.hyper, self.scale);
                 }
                 JobTarget::Bucket(bucket) => {
-                    apply_bucket_update(
-                        bucket,
-                        self.opt.as_ref(),
-                        self.step,
-                        &self.hyper,
-                        self.scale,
-                    );
+                    if bucket.data.read().unwrap().elim {
+                        bucket::apply_bucket_update_from_contrib(
+                            bucket,
+                            self.opt.as_ref(),
+                            self.step,
+                            &self.hyper,
+                            self.scale,
+                        );
+                    } else {
+                        apply_bucket_update(
+                            bucket,
+                            self.opt.as_ref(),
+                            self.step,
+                            &self.hyper,
+                            self.scale,
+                        );
+                    }
                 }
             },
         }
@@ -266,7 +276,14 @@ pub(crate) fn run_comm_update(
                     ctx.comm
                         .all_reduce_mean(rank, tags::grad(unit), bd.grads.data_mut());
                 }
-                apply_bucket_update(bucket, opt, step, hp, scale);
+                if bucket.data.read().unwrap().elim {
+                    // drain-point gradient elimination: the reduced
+                    // contribution is consumed in place and the grad
+                    // buffer freed — nothing of it survives the update
+                    bucket::apply_bucket_update_from_contrib(bucket, opt, step, hp, scale);
+                } else {
+                    apply_bucket_update(bucket, opt, step, hp, scale);
+                }
                 return;
             }
             let total = bucket.data.read().unwrap().num_elems();
@@ -300,15 +317,27 @@ pub(crate) fn run_comm_update(
             match ctx.stage {
                 ShardStage::None => unreachable!("handled above"),
                 ShardStage::Zero1 => {
-                    // the complement still holds local unreduced grads
                     let mut bd = bucket.data.write().unwrap();
-                    bd.zero_grads_outside(off, len);
+                    if bd.elim {
+                        // the shard region was just consumed (reset to 0)
+                        // and the complement would only be zeroed — free
+                        // the whole buffer instead; the next backward's
+                        // widen restores the same all-zero coverage
+                        bd.eliminate_grads();
+                    } else {
+                        // the complement still holds local unreduced grads
+                        bd.zero_grads_outside(off, len);
+                    }
                 }
                 ShardStage::Zero2 | ShardStage::Zero3 => {
                     // free the complement instead (no-op when the lazy
-                    // forward-fusion path already narrowed post-reduce)
+                    // forward-fusion path already narrowed post-reduce);
+                    // eliminating buckets free the shard slice too —
+                    // residency 0 instead of 1/W
                     let mut bd = bucket.data.write().unwrap();
-                    if bd.grad_range == (0, total) {
+                    if bd.elim {
+                        bd.eliminate_grads();
+                    } else if bd.grad_range == (0, total) {
                         bd.narrow_grads(off, len);
                     }
                     if ctx.stage.shards_values() {
@@ -453,6 +482,19 @@ pub(crate) fn run_comm_chunk_update(
 /// reduce, legacy callers).
 pub(crate) fn finish_chunk_job(ctx: &CommCtx, bucket: &BucketRef, remaining: &AtomicUsize) {
     if remaining.fetch_sub(1, Ordering::AcqRel) != 1 {
+        return;
+    }
+    if bucket.data.read().unwrap().elim {
+        // gradient elimination applies at the last chunk's drain under
+        // *every* stage (including unsharded): all chunks of the bucket
+        // have consumed their contributions, so nothing survives
+        let mut bd = bucket.data.write().unwrap();
+        bd.eliminate_grads();
+        if ctx.stage.shards_values() {
+            let total = bd.num_elems();
+            let (off, len) = ctx.placement_span(total);
+            bd.release_values(off, len);
+        }
         return;
     }
     if !ctx.stage.shards_grads() {

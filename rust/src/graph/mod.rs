@@ -10,6 +10,7 @@
 
 use crate::ops::Op;
 use crate::optim::bucket::{self, BucketRef};
+use crate::tensor::dtype::Dtype;
 use crate::tensor::Tensor;
 use crate::util::XorShiftRng;
 use std::sync::{Arc, RwLock};
@@ -110,8 +111,15 @@ impl ParamStore {
     /// into the flat arenas and retiring the per-parameter allocations.
     /// Panics if already bucketed.
     pub fn bucketize(&mut self, cap_bytes: usize) {
+        self.bucketize_with(cap_bytes, false, Dtype::F32);
+    }
+
+    /// [`ParamStore::bucketize`] with the gradient-elimination flag and
+    /// arena dtype stamped on every bucket (see
+    /// [`bucket::build_buckets_with`]).
+    pub fn bucketize_with(&mut self, cap_bytes: usize, elim: bool, dtype: Dtype) {
         assert!(self.buckets.is_none(), "store already bucketized");
-        let (buckets, loc) = bucket::build_buckets(&self.params, cap_bytes);
+        let (buckets, loc) = bucket::build_buckets_with(&self.params, cap_bytes, elim, dtype);
         for p in &self.params {
             let mut pd = p.data.write().unwrap();
             // The flat arenas are authoritative from here on; empty
@@ -157,11 +165,16 @@ impl ParamStore {
                 let (bi, mi) = bs.loc[pid];
                 let mut bd = bs.buckets[bi].data.write().unwrap();
                 bd.widen_grads();
+                let dtype = bd.dtype;
                 let dst = bd.grad_slice_mut(mi);
                 assert_eq!(dst.len(), g.len(), "accum_grad: length mismatch");
                 for (d, s) in dst.iter_mut().zip(g.data().iter()) {
                     *d += *s;
                 }
+                // BF16 arenas store the accumulated gradient at storage
+                // precision — the rounding point a real half-width
+                // buffer would impose on every write.
+                dtype.round_slice(dst);
             }
             None => self.params[pid].data.write().unwrap().grad.axpy(1.0, g),
         }
@@ -358,7 +371,10 @@ impl ParamStore {
             Some(bs) => bs
                 .buckets
                 .iter()
-                .map(|b| b.data.read().unwrap().grads.len() as u64 * 4)
+                .map(|b| {
+                    let bd = b.data.read().unwrap();
+                    bd.grads.len() as u64 * bd.dtype.elem_bytes() as u64
+                })
                 .sum(),
             None => self
                 .params
@@ -373,23 +389,29 @@ impl ParamStore {
     /// (1/W once released; transiently full + one gather buffer while
     /// materialized for forward/backward).
     pub fn value_arena_bytes(&self) -> u64 {
-        let member_bytes: u64 = self
-            .params
-            .iter()
-            .map(|p| p.data.read().unwrap().value.len() as u64 * 4)
-            .sum();
-        let shard_bytes: u64 = match &self.buckets {
+        match &self.buckets {
+            // bucketed: price each member (and any shard-resident copy)
+            // at the bucket's arena dtype
             Some(bs) => bs
                 .buckets
                 .iter()
                 .map(|b| {
                     let bd = b.data.read().unwrap();
-                    bd.values.as_ref().map_or(0, |v| v.len() as u64 * 4)
+                    let eb = bd.dtype.elem_bytes() as u64;
+                    let members: u64 = bd
+                        .members
+                        .iter()
+                        .map(|m| m.param.data.read().unwrap().value.len() as u64 * eb)
+                        .sum();
+                    members + bd.values.as_ref().map_or(0, |v| v.len() as u64 * eb)
                 })
                 .sum(),
-            None => 0,
-        };
-        member_bytes + shard_bytes
+            None => self
+                .params
+                .iter()
+                .map(|p| p.data.read().unwrap().value.len() as u64 * 4)
+                .sum(),
+        }
     }
 
     /// Bytes currently allocated to optimizer state on this replica, in

@@ -20,6 +20,7 @@ use optfuse::memsim::{self, machines, spec::OptSpec, zoo, DdpSimConfig};
 use optfuse::models;
 use optfuse::optim::{self, Hyper};
 use optfuse::runtime::{default_artifacts_dir, Runtime};
+use optfuse::tensor::dtype::{self, Dtype};
 use optfuse::tensor::Tensor;
 use optfuse::train;
 use optfuse::util::XorShiftRng;
@@ -89,6 +90,18 @@ fn kernel_from(args: &Args) -> anyhow::Result<KernelConfig> {
     Ok(cfg)
 }
 
+/// `--grad-elim` flag plus `--dtype f32|bf16`; defaults come from the
+/// `OPTFUSE_GRAD_ELIM` / `OPTFUSE_DTYPE` env vars
+/// ([`dtype::grad_elim_env_default`] / [`dtype::dtype_env_default`]).
+fn precision_from(args: &Args) -> anyhow::Result<(bool, Dtype)> {
+    let grad_elim = args.flag("grad-elim") || dtype::grad_elim_env_default();
+    let dt = match args.get("dtype") {
+        Some(s) => s.parse().map_err(|e: String| anyhow::anyhow!(e))?,
+        None => dtype::dtype_env_default(),
+    };
+    Ok((grad_elim, dt))
+}
+
 fn storage_label(cap: Option<usize>) -> String {
     match cap {
         Some(cap) => format!("bucketed({cap}B)"),
@@ -119,6 +132,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let seed = args.usize_or("seed", 1) as u64;
     let bucket_cap = bucket_cap_from(args);
     let kernel = kernel_from(args)?;
+    let (grad_elim, dt) = precision_from(args)?;
 
     let graph = models::by_name(&model, seed)
         .ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
@@ -126,12 +140,14 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("unknown optimizer '{opt_name}'"))?;
     println!(
         "training {model} ({} params, {} layers) schedule={} optimizer={opt_name} batch={batch} \
-         storage={} kernel={}",
+         storage={} kernel={} dtype={} grad-elim={}",
         graph.store.num_scalars(),
         graph.num_layers(),
         schedule.label(),
         storage_label(bucket_cap),
-        kernel.mode.label()
+        kernel.mode.label(),
+        dt.label(),
+        grad_elim
     );
     let mut ex = Executor::new(
         graph,
@@ -143,6 +159,8 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             race_guard: true,
             bucket_cap_bytes: bucket_cap,
             kernel,
+            grad_elim,
+            dtype: dt,
             ..Default::default()
         },
     )?;
@@ -228,6 +246,9 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
                 "(--shard-stage prediction needs bucketed units; defaulting --bucket-cap to 1 MiB)"
             );
         }
+        // `--grad-elim` / `--dtype bf16`: the elimination and precision
+        // axes of the prediction (grad residency, wire bytes, pricing)
+        let (grad_elim, dt) = precision_from(args)?;
         // `--topology RxN`: price a two-tier cluster (the machine's own
         // link intra-node, the standard uplink across nodes)
         let topo = Topology::parse(&args.str_or("topology", "flat"), world)
@@ -253,7 +274,8 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         );
         for &algo in &algos {
             for kind in ScheduleKind::ALL {
-                let ddp = DdpSimConfig { algo, bucket_cap_bytes: cap, stage };
+                let ddp =
+                    DdpSimConfig { algo, bucket_cap_bytes: cap, stage, grad_elim, dtype: dt };
                 let r = memsim::simulate_ddp(&m, &net, &opt, batch, kind, ddp);
                 println!(
                     "  {:<5} {:<16} {:>8.2}  {:>8.2}  {:>7.2}  {:>8.0}%  {:>9.2}  {}",
@@ -289,12 +311,15 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
                         backward_s: bwd,
                         workers: 0,
                         bucket_cap_bytes: cap,
+                        dtype: dt,
                     },
                 );
                 let ddp = DdpSimConfig {
                     algo: plan.default_algo,
                     bucket_cap_bytes: cap,
                     stage,
+                    grad_elim,
+                    dtype: dt,
                 };
                 let r = memsim::simulate_ddp_planned(
                     &m,
@@ -309,8 +334,13 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
                 let best_fixed = algos
                     .iter()
                     .map(|a| {
-                        let ddp =
-                            DdpSimConfig { algo: *a, bucket_cap_bytes: cap, stage };
+                        let ddp = DdpSimConfig {
+                            algo: *a,
+                            bucket_cap_bytes: cap,
+                            stage,
+                            grad_elim,
+                            dtype: dt,
+                        };
                         memsim::simulate_ddp(&m, &net, &opt, batch, kind, ddp).step_s
                     })
                     .fold(f64::INFINITY, f64::min);
@@ -342,6 +372,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
                     backward_s: bf.backward_s,
                     workers: 0,
                     bucket_cap_bytes: cap,
+                    dtype: dt,
                 },
             );
             println!(
@@ -357,7 +388,14 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         println!("  stage   grads    values   opt-state  gather-buf");
         for stage in ShardStage::ALL {
             let units = memsim::comm_unit_elems(&net, cap);
-            let mem = memsim::stage_memory_placed(&units, opt.state_slots as usize, stage, &topo);
+            let mem = memsim::stage_memory_placed_opts(
+                &units,
+                opt.state_slots as usize,
+                stage,
+                &topo,
+                false,
+                dt,
+            );
             println!(
                 "  {:<6} {:>7.2}  {:>7.2}  {:>9.2}  {:>9.2}",
                 stage.label(),
@@ -428,6 +466,13 @@ fn cmd_ddp(args: &Args) -> anyhow::Result<()> {
         println!("(--chunk-cap needs bucketed storage; defaulting --bucket-cap to 1 MiB)");
     }
     let kernel = kernel_from(args)?;
+    // `--grad-elim` = FORGE drain-point gradient elimination (BF only);
+    // `--dtype bf16` = BF16 arenas + wire with FP32 master state
+    let (grad_elim, dt) = precision_from(args)?;
+    if dt != Dtype::F32 && bucket_cap.is_none() {
+        bucket_cap = Some(1 << 20);
+        println!("(--dtype bf16 needs bucketed storage; defaulting --bucket-cap to 1 MiB)");
+    }
     // `--calibrate [N]` = N warmup steps issue probe collectives, fit an
     // interconnect to the measured blocked time, and (on `--algo auto`)
     // re-plan against the fitted model + measured backward mid-run. A
@@ -450,7 +495,7 @@ fn cmd_ddp(args: &Args) -> anyhow::Result<()> {
     };
     println!(
         "DDP: world={world} schedule={} algo={} topology={} steps={steps} storage={} \
-         shard-stage={} overlap_threads={} chunk={:?} kernel={}",
+         shard-stage={} overlap_threads={} chunk={:?} kernel={} dtype={} grad-elim={}",
         schedule.label(),
         algo.label(),
         topo.label(),
@@ -458,7 +503,9 @@ fn cmd_ddp(args: &Args) -> anyhow::Result<()> {
         stage.label(),
         overlap,
         chunk_cap,
-        kernel.mode.label()
+        kernel.mode.label(),
+        dt.label(),
+        grad_elim
     );
     let report = train_ddp(
         || models::mobilenet_v2_ish(3),
@@ -478,6 +525,8 @@ fn cmd_ddp(args: &Args) -> anyhow::Result<()> {
             shard_stage: stage,
             overlap_threads: overlap,
             kernel,
+            grad_elim,
+            dtype: dt,
             load_from: None,
             save_to: None,
             local_batch_maker: Box::new(move |rank, step| {

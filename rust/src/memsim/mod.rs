@@ -55,6 +55,7 @@ use crate::comm::tree::tree_rounds;
 use crate::comm::{CommAlgo, ShardStage, Topology, WireCost};
 use crate::graph::ScheduleKind;
 use crate::optim::bucket::partition_by_bytes;
+use crate::tensor::dtype::Dtype;
 use crate::tensor::flat::{node_local_span, node_local_spans};
 use spec::{NetSpec, OptSpec};
 use std::collections::HashMap;
@@ -231,11 +232,26 @@ impl Interconnect {
         n: usize,
         inter_chunk: usize,
     ) -> f64 {
+        self.collective_chunked_s_eb(algo, op, n, inter_chunk, 4)
+    }
+
+    /// [`Interconnect::collective_chunked_s`] at an explicit element
+    /// width: BF16 arenas put 2-byte elements on the wire, halving every
+    /// byte term of the critical path while leaving latency terms (hop
+    /// counts) unchanged.
+    pub fn collective_chunked_s_eb(
+        &self,
+        algo: CommAlgo,
+        op: CollOp,
+        n: usize,
+        inter_chunk: usize,
+        elem_bytes: usize,
+    ) -> f64 {
         let w = self.world;
         if w <= 1 {
             return 0.0;
         }
-        let b = (4 * n) as f64;
+        let b = (elem_bytes * n) as f64;
         let wf = w as f64;
         let steps = wf - 1.0;
         if algo == CommAlgo::Hier {
@@ -608,6 +624,27 @@ pub struct DdpSimConfig {
     /// different placement), and shrinks the predicted per-replica
     /// arena residency ([`StageMemory`]).
     pub stage: ShardStage,
+    /// FORGE gradient elimination: under backward-fusion the predicted
+    /// steady-state grad residency drops to 0 (the drain-point update
+    /// consumes the contribution in place). Ignored for the other
+    /// schedules — they keep the grad arena between backward and their
+    /// update point.
+    pub grad_elim: bool,
+    /// Arena/wire dtype: BF16 halves the predicted grad/value residency
+    /// and every collective's bytes (optimizer state stays FP32 master).
+    pub dtype: Dtype,
+}
+
+impl Default for DdpSimConfig {
+    fn default() -> Self {
+        Self {
+            algo: CommAlgo::Flat,
+            bucket_cap_bytes: None,
+            stage: ShardStage::None,
+            grad_elim: false,
+            dtype: Dtype::F32,
+        }
+    }
 }
 
 /// Predicted per-replica steady-state arena residency of a DDP
@@ -653,18 +690,62 @@ pub fn stage_memory_placed(
     stage: ShardStage,
     topo: &Topology,
 ) -> StageMemory {
+    stage_memory_placed_opts(units, state_slots, stage, topo, false, Dtype::F32)
+}
+
+/// [`stage_memory`] with gradient elimination and an arena dtype — flat
+/// topology shorthand of [`stage_memory_placed_opts`].
+pub fn stage_memory_opts(
+    units: &[usize],
+    state_slots: usize,
+    stage: ShardStage,
+    world: usize,
+    grad_elim: bool,
+    dtype: Dtype,
+) -> StageMemory {
+    stage_memory_placed_opts(units, state_slots, stage, &Topology::flat(world), grad_elim, dtype)
+}
+
+/// [`stage_memory_placed`] with the gradient-elimination and dtype axes:
+/// `grad_elim` models the FORGE drain-point consumption (steady-state
+/// grad residency 0 — the caller passes `true` only when elimination is
+/// actually in effect, i.e. backward-fusion without grad accumulation),
+/// and `dtype` scales the value/grad arenas and the ZeRO-3 gather buffer
+/// to the storage element width while optimizer state stays FP32 master
+/// bytes. `(false, F32)` reproduces [`stage_memory_placed`] exactly.
+pub fn stage_memory_placed_opts(
+    units: &[usize],
+    state_slots: usize,
+    stage: ShardStage,
+    topo: &Topology,
+    grad_elim: bool,
+    dtype: Dtype,
+) -> StageMemory {
     let world = topo.world;
-    let full: u64 = units.iter().map(|n| 4 * *n as u64).sum();
+    let eb = dtype.elem_bytes() as u64;
+    let full: u64 = units.iter().map(|n| eb * *n as u64).sum();
     let shard0: u64 = units
+        .iter()
+        .map(|n| eb * node_local_span(*n, world.max(1), topo.ranks_per_node, 0).1 as u64)
+        .sum();
+    // optimizer state is FP32 master regardless of the arena dtype
+    let full_state: u64 = units.iter().map(|n| 4 * *n as u64).sum();
+    let shard0_state: u64 = units
         .iter()
         .map(|n| 4 * node_local_span(*n, world.max(1), topo.ranks_per_node, 0).1 as u64)
         .sum();
     StageMemory {
-        grad_bytes: if stage.shards_grads() { shard0 } else { full },
+        grad_bytes: if grad_elim {
+            0
+        } else if stage.shards_grads() {
+            shard0
+        } else {
+            full
+        },
         value_bytes: if stage.shards_values() { shard0 } else { full },
-        opt_state_bytes: state_slots as u64 * if stage.sharded() { shard0 } else { full },
+        opt_state_bytes: state_slots as u64 * if stage.sharded() { shard0_state } else { full_state },
         gather_buf_bytes: if stage.shards_values() {
-            units.iter().map(|n| 4 * *n as u64).max().unwrap_or(0)
+            units.iter().map(|n| eb * *n as u64).max().unwrap_or(0)
         } else {
             0
         },
@@ -843,6 +924,11 @@ pub fn simulate_ddp_planned(
     assert_eq!(hier_chunks.len(), units.len(), "one pipeline cap per collective unit");
     let sharded = ddp.stage.sharded();
     let z3 = ddp.stage.shards_values();
+    // wire element width: BF16 arenas put 2-byte elements on every
+    // collective (the shared-mem harness scales all recorded bytes the
+    // same way, loss/norm scalars included, so pricing and accounting
+    // stay byte-exact against each other)
+    let eb = ddp.dtype.elem_bytes();
     // drain-point collectives: AR replicated, RS+AG sharded — except
     // ZeRO-3, whose AG belongs to the next forward's first touch
     let unit_s: Vec<f64> = units
@@ -850,12 +936,12 @@ pub fn simulate_ddp_planned(
         .zip(unit_algos.iter().zip(hier_chunks))
         .map(|(n, (algo, hc))| {
             if z3 {
-                ic.collective_chunked_s(*algo, CollOp::ReduceScatter, *n, *hc)
+                ic.collective_chunked_s_eb(*algo, CollOp::ReduceScatter, *n, *hc, eb)
             } else if sharded {
-                ic.collective_chunked_s(*algo, CollOp::ReduceScatter, *n, *hc)
-                    + ic.collective_chunked_s(*algo, CollOp::AllGather, *n, *hc)
+                ic.collective_chunked_s_eb(*algo, CollOp::ReduceScatter, *n, *hc, eb)
+                    + ic.collective_chunked_s_eb(*algo, CollOp::AllGather, *n, *hc, eb)
             } else {
-                ic.collective_chunked_s(*algo, CollOp::AllReduce, *n, *hc)
+                ic.collective_chunked_s_eb(*algo, CollOp::AllReduce, *n, *hc, eb)
             }
         })
         .collect();
@@ -863,12 +949,14 @@ pub fn simulate_ddp_planned(
         units
             .iter()
             .zip(unit_algos.iter().zip(hier_chunks))
-            .map(|(n, (algo, hc))| ic.collective_chunked_s(*algo, CollOp::AllGather, *n, *hc))
+            .map(|(n, (algo, hc))| {
+                ic.collective_chunked_s_eb(*algo, CollOp::AllGather, *n, *hc, eb)
+            })
             .collect()
     } else {
         Vec::new()
     };
-    let loss_s = ic.collective_s(ddp.algo, CollOp::AllReduce, 1);
+    let loss_s = ic.collective_chunked_s_eb(ddp.algo, CollOp::AllReduce, 1, 0, eb);
     let grad_comm: f64 = unit_s.iter().sum();
     let gather_serial_s: f64 = gather_s.iter().sum();
     let comm_serial_s = grad_comm + loss_s + gather_serial_s;
@@ -882,7 +970,19 @@ pub fn simulate_ddp_planned(
         }
     }
     wire_per_step += ic.wire(ddp.algo, CollOp::AllReduce, 1);
-    let memory = stage_memory_placed(&units, opt.state_slots as usize, ddp.stage, &ic.topology());
+    // the harness's CommStats scales every recorded byte (collectives
+    // and scalar reduces alike) to the wire element width, so the whole
+    // closed-form sum scales too — exact because every term is a
+    // multiple of 4 bytes/element
+    wire_per_step = wire_per_step.scaled_to(eb);
+    let memory = stage_memory_placed_opts(
+        &units,
+        opt.state_slots as usize,
+        ddp.stage,
+        &ic.topology(),
+        ddp.grad_elim && schedule == ScheduleKind::BackwardFusion,
+        ddp.dtype,
+    );
 
     let (drain_exposed_s, overlap_frac) = match schedule {
         ScheduleKind::Baseline | ScheduleKind::ForwardFusion => (grad_comm + loss_s, 0.0),
@@ -1120,6 +1220,7 @@ mod tests {
             algo: CommAlgo::Ring,
             bucket_cap_bytes: Some(1 << 20),
             stage: ShardStage::Zero3,
+            ..Default::default()
         };
         let base = simulate_ddp(&m, &net, &opt, 32, ScheduleKind::Baseline, ddp);
         assert!(base.gather_serial_s > 0.0, "ZeRO-3 prices per-unit gathers");
@@ -1152,6 +1253,7 @@ mod tests {
             algo: CommAlgo::Tree,
             bucket_cap_bytes: Some(1 << 20),
             stage: ShardStage::None,
+            ..Default::default()
         };
         let uniform = simulate_ddp(&m, &net, &opt, 32, ScheduleKind::BackwardFusion, ddp);
         let units = comm_unit_elems(&net, ddp.bucket_cap_bytes);
@@ -1191,6 +1293,7 @@ mod tests {
             algo: CommAlgo::Ring,
             bucket_cap_bytes: Some(1 << 20),
             stage: ShardStage::None,
+            ..Default::default()
         };
         let base = simulate_ddp(&m, &net, &opt, 32, ScheduleKind::Baseline, ddp);
         let bf = simulate_ddp(&m, &net, &opt, 32, ScheduleKind::BackwardFusion, ddp);
@@ -1215,7 +1318,12 @@ mod tests {
         let opt = OptSpec::adam();
         let cap = Some(1 << 20);
         let unsharded =
-            DdpSimConfig { algo: CommAlgo::Ring, bucket_cap_bytes: cap, stage: ShardStage::None };
+            DdpSimConfig {
+                algo: CommAlgo::Ring,
+                bucket_cap_bytes: cap,
+                stage: ShardStage::None,
+                ..Default::default()
+            };
         let sharded = DdpSimConfig { stage: ShardStage::Zero1, ..unsharded };
         let u = simulate_ddp(&m, &net, &opt, 32, ScheduleKind::Baseline, unsharded);
         let s = simulate_ddp(&m, &net, &opt, 32, ScheduleKind::Baseline, sharded);

@@ -30,6 +30,7 @@
 use crate::exec::kernel;
 use crate::graph::{ParamId, ParamRef};
 use crate::optim::{run_update_slices, Hyper, Optimizer};
+use crate::tensor::dtype::Dtype;
 use crate::tensor::flat::FlatLayout;
 use crate::tensor::Tensor;
 use std::sync::{Arc, RwLock};
@@ -80,6 +81,16 @@ pub struct BucketData {
     pub value_range: (usize, usize),
     /// The members, ordered by ascending `offset` with tight packing.
     pub members: Vec<Member>,
+    /// Gradient elimination (FORGE-style): when set, the drain-point
+    /// update consumes the gradient contribution in place and the grad
+    /// buffer is freed outright ([`BucketData::eliminate_grads`]) rather
+    /// than narrowed — steady-state grad residency 0, beating ZeRO-2's
+    /// 1/W. Set at bucketize time only when effective (backward-fusion,
+    /// no gradient accumulation); the next backward re-widens lazily.
+    pub elim: bool,
+    /// Element dtype of the value/grad arenas (accounting + storage
+    /// rounding). Optimizer state stays FP32 master regardless.
+    pub dtype: Dtype,
 }
 
 impl BucketData {
@@ -174,6 +185,36 @@ impl BucketData {
         full[goff..goff + glen].copy_from_slice(self.grads.data());
         self.grads = Tensor::from_vec(&[total], full);
         self.grad_range = (0, total);
+    }
+
+    /// Free the gradient buffer outright — coverage `(0, 0)` — after a
+    /// drain-point update consumed it. The gradient-elimination
+    /// counterpart of [`BucketData::narrow_grads`]: instead of keeping a
+    /// 1/W shard, nothing survives the update. The next backward's
+    /// [`BucketData::widen_grads`] call restores full zeroed coverage
+    /// (widen from `(0, 0)` copies nothing).
+    pub fn eliminate_grads(&mut self) {
+        self.grads = Tensor::zeros(&[0]);
+        self.grad_range = (0, 0);
+    }
+
+    /// Round every member's value tensor (and any shard-resident value
+    /// buffer) to the bucket dtype's storage precision — a no-op at
+    /// FP32. Called after updates write new values so a BF16 arena never
+    /// holds a value outside bfloat16. The caller holds the bucket lock;
+    /// member locks are taken in member order (the lock-order contract).
+    fn round_values_to_dtype(&mut self) {
+        if self.dtype == Dtype::F32 {
+            return;
+        }
+        let dtype = self.dtype;
+        if let Some(v) = self.values.as_mut() {
+            dtype.round_slice(v.data_mut());
+        }
+        for m in &self.members {
+            let mut pd = m.param.data.write().unwrap();
+            dtype.round_slice(pd.value.data_mut());
+        }
     }
 
     /// Borrow one member's gradient region (must lie inside the current
@@ -314,6 +355,19 @@ pub fn build_buckets(
     params: &[ParamRef],
     cap_bytes: usize,
 ) -> (Vec<BucketRef>, Vec<(usize, usize)>) {
+    build_buckets_with(params, cap_bytes, false, Dtype::F32)
+}
+
+/// [`build_buckets`] with the gradient-elimination flag and arena dtype
+/// stamped on every bucket. Under BF16 the initial member values are
+/// rounded to bfloat16 storage precision, so the arena invariant (every
+/// stored value representable in the dtype) holds from step 0.
+pub fn build_buckets_with(
+    params: &[ParamRef],
+    cap_bytes: usize,
+    elim: bool,
+    dtype: Dtype,
+) -> (Vec<BucketRef>, Vec<(usize, usize)>) {
     let lens: Vec<usize> = params
         .iter()
         .map(|p| p.data.read().unwrap().value.len())
@@ -360,17 +414,20 @@ pub fn build_buckets(
             .collect();
         drop(guards);
         let total = grads.len();
-        buckets.push(Arc::new(Bucket {
-            data: RwLock::new(BucketData {
-                grads,
-                grad_range: (0, total),
-                state,
-                state_range: (0, total),
-                values: None,
-                value_range: (0, total),
-                members,
-            }),
-        }));
+        let mut bd = BucketData {
+            grads,
+            grad_range: (0, total),
+            state,
+            state_range: (0, total),
+            values: None,
+            value_range: (0, total),
+            members,
+            elim,
+            dtype,
+        };
+        bd.round_values_to_dtype();
+        bd.dtype.round_slice(bd.grads.data_mut());
+        buckets.push(Arc::new(Bucket { data: RwLock::new(bd) }));
     }
     (buckets, loc)
 }
@@ -401,6 +458,7 @@ pub fn apply_bucket_update(
     );
     assert!(bd.values.is_none(), "full bucket update over released values");
     bd.ensure_state(opt.num_state());
+    let dtype = bd.dtype;
     let BucketData { grads, state, members, .. } = &mut *bd;
     let mut guards: Vec<_> = members
         .iter()
@@ -420,6 +478,31 @@ pub fn apply_bucket_update(
             .collect(),
     };
     opt.update_bucket(step, &mut view, hp, global_scale);
+    if dtype != Dtype::F32 {
+        for m in view.members.iter_mut() {
+            dtype.round_slice(m.value);
+        }
+    }
+}
+
+/// Consume a bucket's just-reduced gradient contribution in place at
+/// the backward-fusion drain point: one fused update pass straight off
+/// the contribution, then the grad buffer is freed outright
+/// ([`BucketData::eliminate_grads`]) — the FORGE gradient-elimination
+/// step. The update math is exactly [`apply_bucket_update`] (same
+/// kernel, same order), so the FP32 path is bit-identical to the
+/// grad-arena path; the only difference is that nothing of the gradient
+/// survives the call, so per-bucket `grad_arena_bytes` reads 0 until
+/// the next backward re-widens.
+pub fn apply_bucket_update_from_contrib(
+    bucket: &Bucket,
+    opt: &dyn Optimizer,
+    step: u64,
+    hp: &Hyper,
+    global_scale: f32,
+) {
+    apply_bucket_update(bucket, opt, step, hp, global_scale);
+    bucket.data.write().unwrap().eliminate_grads();
 }
 
 /// The intersection of member `m`'s span with `[offset, offset + len)`,
@@ -470,6 +553,7 @@ pub fn apply_bucket_update_range(
         offset + len,
         goff + glen
     );
+    let dtype = bd.dtype;
     let BucketData { grads, state, members, .. } = &mut *bd;
     let cfg = kernel::global();
     for m in members.iter() {
@@ -482,6 +566,7 @@ pub fn apply_bucket_update_range(
             .map(|s| &mut s.data_mut()[a - soff..b - soff])
             .collect();
         run_update_slices(opt, &cfg, step, value, grad, &mut slots, hp, global_scale);
+        dtype.round_slice(value);
     }
 }
 
@@ -516,11 +601,13 @@ pub fn apply_bucket_update_shard_resident(
     if opt.num_state() > 0 {
         assert_eq!(bd.state_range, (off, len), "shard-resident update: state covers the shard");
     }
+    let dtype = bd.dtype;
     let BucketData { grads, state, values, .. } = &mut *bd;
     let value = values.as_mut().expect("released values").data_mut();
     let grad = grads.data_mut();
     let mut slots: Vec<&mut [f32]> = state.iter_mut().map(Tensor::data_mut).collect();
     run_update_slices(opt, &kernel::global(), step, value, grad, &mut slots, hp, global_scale);
+    dtype.round_slice(value);
 }
 
 #[cfg(test)]
@@ -718,6 +805,70 @@ mod tests {
         assert!(bd.grads.data().iter().all(|g| *g == 0.0), "shard grads reset");
         assert_eq!(bd.state_range, (2, 4));
         assert_eq!(bd.state[0].len(), 4, "state allocated shard-only");
+    }
+
+    /// Gradient elimination: a from-contrib update must leave values
+    /// bit-identical to the arena-path update, with the grad buffer
+    /// freed outright; the next widen restores full zeroed coverage.
+    #[test]
+    fn from_contrib_update_matches_arena_path_and_frees_grads() {
+        use crate::optim::Adam;
+        let grads: Vec<f32> = (1..=5).map(|i| i as f32 * 0.3).collect();
+        let mk = || {
+            let mut store = ParamStore::default();
+            store.add("a", Tensor::full(&[2], 1.0));
+            store.add("b", Tensor::full(&[3], 2.0));
+            let (buckets, _) = build_buckets(&store.params, 1 << 20);
+            buckets[0].data.write().unwrap().grads = Tensor::from_vec(&[5], grads.clone());
+            (store, buckets)
+        };
+        let hp = Hyper { lr: 0.1, weight_decay: 0.01, ..Hyper::default() };
+        let (arena_store, arena_buckets) = mk();
+        apply_bucket_update(&arena_buckets[0], &Adam, 1, &hp, 1.0);
+        let (elim_store, elim_buckets) = mk();
+        apply_bucket_update_from_contrib(&elim_buckets[0], &Adam, 1, &hp, 1.0);
+        for pid in 0..2 {
+            let a = arena_store.params[pid].data.read().unwrap();
+            let e = elim_store.params[pid].data.read().unwrap();
+            assert_eq!(a.value.data(), e.value.data(), "param {pid} bit-identical");
+        }
+        let mut bd = elim_buckets[0].data.write().unwrap();
+        assert_eq!(bd.grad_range, (0, 0), "grad buffer freed");
+        assert_eq!(bd.grads.len(), 0);
+        bd.widen_grads();
+        assert_eq!(bd.grad_range, (0, 5), "widen from empty restores coverage");
+        assert!(bd.grads.data().iter().all(|g| *g == 0.0));
+    }
+
+    /// BF16 buckets: every value written by an update is representable
+    /// in bfloat16, and initial values are rounded at bucketize.
+    #[test]
+    fn bf16_buckets_round_values_at_store_points() {
+        use crate::optim::SgdMomentum;
+        use crate::tensor::dtype::bf16_round;
+        let mut store = ParamStore::default();
+        store.add("a", Tensor::full(&[3], 0.1)); // 0.1 not bf16-representable
+        store.add("b", Tensor::full(&[5], 2.0));
+        let (buckets, _) = build_buckets_with(&store.params, 1 << 20, false, Dtype::Bf16);
+        {
+            let p0 = store.params[0].data.read().unwrap();
+            assert!(
+                p0.value.data().iter().all(|v| bf16_round(*v) == *v),
+                "initial values rounded to bf16 storage"
+            );
+            assert_eq!(p0.value.data()[0], bf16_round(0.1));
+        }
+        buckets[0].data.write().unwrap().grads =
+            Tensor::from_vec(&[8], (1..=8).map(|i| i as f32 * 0.07).collect());
+        let hp = Hyper { lr: 0.5, weight_decay: 0.0, ..Hyper::default() };
+        apply_bucket_update(&buckets[0], &SgdMomentum, 1, &hp, 1.0);
+        for p in &store.params {
+            let pd = p.data.read().unwrap();
+            assert!(
+                pd.value.data().iter().all(|v| bf16_round(*v) == *v),
+                "post-update values representable in bf16"
+            );
+        }
     }
 
     #[test]

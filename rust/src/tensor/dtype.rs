@@ -1,0 +1,149 @@
+//! Arena element dtypes: FP32 and BF16 with FP32 master state.
+//!
+//! The bucketed storage layer keeps its arenas as `Vec<f32>` under
+//! either dtype — BF16 is modelled by rounding every value to the
+//! nearest bfloat16 (round-to-nearest-even on the top 16 bits) at the
+//! points where a real BF16 arena would be written: gradient
+//! accumulation, post-update value writes, and initial bucketization.
+//! This gives bit-exact BF16 *numerics* (every stored value is
+//! representable in bfloat16) while reusing the existing flat f32
+//! layout, kernels, and collectives. Optimizer state stays FP32
+//! master copies (the IPEX fused-update pattern), so only value/grad
+//! arenas and wire bytes halve in the dtype-aware accounting
+//! ([`Dtype::elem_bytes`]).
+
+use std::str::FromStr;
+
+/// Element dtype of the value/grad arenas. Optimizer state is always
+/// FP32 master state regardless of this choice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Dtype {
+    /// 4-byte IEEE single precision — the bit-identical reference.
+    #[default]
+    F32,
+    /// 2-byte bfloat16 arenas with FP32 master optimizer state.
+    Bf16,
+}
+
+impl Dtype {
+    /// Bytes per arena/wire element under this dtype.
+    pub fn elem_bytes(self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::Bf16 => 2,
+        }
+    }
+
+    /// CLI / report label.
+    pub fn label(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::Bf16 => "bf16",
+        }
+    }
+
+    /// Round one value to this dtype's storage precision. Identity for
+    /// FP32; round-to-nearest-even bfloat16 for BF16.
+    pub fn round(self, x: f32) -> f32 {
+        match self {
+            Dtype::F32 => x,
+            Dtype::Bf16 => bf16_round(x),
+        }
+    }
+
+    /// Round a slice in place to this dtype's storage precision.
+    pub fn round_slice(self, xs: &mut [f32]) {
+        if self == Dtype::Bf16 {
+            for x in xs.iter_mut() {
+                *x = bf16_round(*x);
+            }
+        }
+    }
+}
+
+impl FromStr for Dtype {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "f32" | "fp32" => Ok(Dtype::F32),
+            "bf16" | "bfloat16" => Ok(Dtype::Bf16),
+            other => Err(format!("unknown dtype '{other}' (expected f32|bf16)")),
+        }
+    }
+}
+
+/// Round an f32 to the nearest bfloat16 (round-to-nearest-even) and
+/// widen back. NaN payloads pass through with the quiet bit kept so a
+/// NaN never rounds into infinity.
+pub fn bf16_round(x: f32) -> f32 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // keep a canonical quiet NaN representable in bf16
+        return f32::from_bits(bits | 0x0040_0000);
+    }
+    let rounded = bits.wrapping_add(0x7FFF + ((bits >> 16) & 1)) & 0xFFFF_0000;
+    f32::from_bits(rounded)
+}
+
+/// Environment default for `--grad-elim`: `OPTFUSE_GRAD_ELIM` set to
+/// `1`/`true`/`on` enables it. CLI flags override.
+pub fn grad_elim_env_default() -> bool {
+    matches!(
+        std::env::var("OPTFUSE_GRAD_ELIM").ok().as_deref(),
+        Some("1") | Some("true") | Some("on")
+    )
+}
+
+/// Environment default for `--dtype`: `OPTFUSE_DTYPE=f32|bf16`.
+/// Unset or unparsable falls back to FP32. CLI flags override.
+pub fn dtype_env_default() -> Dtype {
+    std::env::var("OPTFUSE_DTYPE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(Dtype::F32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bf16_round_is_idempotent_and_representable() {
+        for &x in &[0.0f32, -0.0, 1.0, -1.5, 3.14159, 1e-20, 1e20, 65504.0, 0.1] {
+            let r = bf16_round(x);
+            assert_eq!(bf16_round(r), r, "idempotent at {x}");
+            assert_eq!(r.to_bits() & 0xFFFF, 0, "low mantissa clear at {x}");
+        }
+    }
+
+    #[test]
+    fn bf16_round_nearest_even() {
+        // value exactly halfway between two bf16 neighbours rounds to even
+        let lo = f32::from_bits(0x3F80_0000); // 1.0
+        let hi = f32::from_bits(0x3F81_0000); // next bf16 up
+        let mid = f32::from_bits(0x3F80_8000);
+        assert_eq!(bf16_round(mid), lo, "ties to even (low bit 0)");
+        let mid2 = f32::from_bits(0x3F81_8000);
+        let hi2 = f32::from_bits(0x3F82_0000);
+        assert_eq!(bf16_round(mid2), hi2, "ties to even (low bit 1)");
+        assert!(bf16_round(f32::from_bits(0x3F80_8001)) == hi, "above tie rounds up");
+    }
+
+    #[test]
+    fn bf16_round_handles_specials() {
+        assert!(bf16_round(f32::NAN).is_nan());
+        assert_eq!(bf16_round(f32::INFINITY), f32::INFINITY);
+        assert_eq!(bf16_round(f32::NEG_INFINITY), f32::NEG_INFINITY);
+        // large-but-finite must not overflow to inf unless it rounds there
+        assert!(bf16_round(f32::MAX).is_infinite());
+    }
+
+    #[test]
+    fn dtype_parse_and_bytes() {
+        assert_eq!("f32".parse::<Dtype>().unwrap(), Dtype::F32);
+        assert_eq!("bf16".parse::<Dtype>().unwrap(), Dtype::Bf16);
+        assert!("f16".parse::<Dtype>().is_err());
+        assert_eq!(Dtype::F32.elem_bytes(), 4);
+        assert_eq!(Dtype::Bf16.elem_bytes(), 2);
+    }
+}

@@ -1,7 +1,9 @@
-//! Dense f32 host tensors. The engine is f32-only (the paper's experiments
-//! are single-precision, §C.1); shape is a small Vec<usize> in row-major
-//! (C) order.
+//! Dense f32 host tensors. The compute representation is f32 (the
+//! paper's experiments are single-precision, §C.1); shape is a small
+//! Vec<usize> in row-major (C) order. The bucketed storage layer can
+//! model BF16 arenas on top via [`dtype`] rounding.
 
+pub mod dtype;
 pub mod flat;
 
 use crate::util::XorShiftRng;

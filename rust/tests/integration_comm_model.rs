@@ -265,8 +265,12 @@ fn memsim_predicted_algo_ranking_matches_measured() {
         for (si, schedule) in schedules.iter().enumerate() {
             let mut step_s = [0.0f64; 3];
             for (ai, algo) in CommAlgo::ONE_TIER.iter().enumerate() {
-                let ddp =
-                    DdpSimConfig { algo: *algo, bucket_cap_bytes: None, stage: ShardStage::None };
+                let ddp = DdpSimConfig {
+                    algo: *algo,
+                    bucket_cap_bytes: None,
+                    stage: ShardStage::None,
+                    ..Default::default()
+                };
                 step_s[ai] = simulate_ddp(&m, &net, &opt, 4, *schedule, ddp).step_s;
             }
             per_schedule[si] = ranking(&step_s);

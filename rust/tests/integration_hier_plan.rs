@@ -41,6 +41,7 @@ use optfuse::ops::dense::Linear;
 use optfuse::ops::loss::MseLoss;
 use optfuse::optim::bucket::partition_by_bytes;
 use optfuse::optim::{Hyper, Optimizer, SgdMomentum};
+use optfuse::tensor::dtype::Dtype;
 use optfuse::tensor::flat::node_local_spans;
 use optfuse::tensor::Tensor;
 use optfuse::util::XorShiftRng;
@@ -329,6 +330,7 @@ fn planned_mix_never_predicted_slower_than_any_global_algo_on_table2_machines() 
                         backward_s: bwd,
                         workers: 0,
                         bucket_cap_bytes: cap,
+                        dtype: Dtype::F32,
                     },
                 );
                 let auto = simulate_ddp_planned(
@@ -337,7 +339,12 @@ fn planned_mix_never_predicted_slower_than_any_global_algo_on_table2_machines() 
                     &opt,
                     batch,
                     schedule,
-                    DdpSimConfig { algo: plan.default_algo, bucket_cap_bytes: cap, stage },
+                    DdpSimConfig {
+                        algo: plan.default_algo,
+                        bucket_cap_bytes: cap,
+                        stage,
+                        ..Default::default()
+                    },
                     &plan.algos(),
                     &plan.hier_chunks(),
                 );
@@ -353,7 +360,7 @@ fn planned_mix_never_predicted_slower_than_any_global_algo_on_table2_machines() 
                         &opt,
                         batch,
                         schedule,
-                        DdpSimConfig { algo, bucket_cap_bytes: cap, stage },
+                        DdpSimConfig { algo, bucket_cap_bytes: cap, stage, ..Default::default() },
                     );
                     assert!(
                         auto.step_s <= fixed.step_s + 1e-12,
@@ -455,6 +462,7 @@ fn fit_is_deterministic_and_identical_samples_yield_identical_plans() {
                 backward_s: 1e-4,
                 workers: 2,
                 bucket_cap_bytes: Some(1 << 18),
+                dtype: Dtype::F32,
             },
         )
     };
@@ -511,6 +519,7 @@ fn calibrated_plan_never_predicted_slower_on_fitted_machines() {
                         backward_s: bwd,
                         workers: 0,
                         bucket_cap_bytes: cap,
+                        dtype: Dtype::F32,
                     },
                 );
                 let auto = simulate_ddp_planned(
@@ -519,7 +528,12 @@ fn calibrated_plan_never_predicted_slower_on_fitted_machines() {
                     &opt,
                     batch,
                     schedule,
-                    DdpSimConfig { algo: plan.default_algo, bucket_cap_bytes: cap, stage },
+                    DdpSimConfig {
+                        algo: plan.default_algo,
+                        bucket_cap_bytes: cap,
+                        stage,
+                        ..Default::default()
+                    },
                     &plan.algos(),
                     &plan.hier_chunks(),
                 );
@@ -530,7 +544,7 @@ fn calibrated_plan_never_predicted_slower_on_fitted_machines() {
                         &opt,
                         batch,
                         schedule,
-                        DdpSimConfig { algo, bucket_cap_bytes: cap, stage },
+                        DdpSimConfig { algo, bucket_cap_bytes: cap, stage, ..Default::default() },
                     );
                     assert!(
                         auto.step_s <= fixed.step_s + 1e-12,

@@ -29,13 +29,14 @@ use optfuse::data::image_batch;
 use optfuse::ddp::{train_ddp, DdpConfig, DdpReport};
 use optfuse::exec::kernel::{KernelConfig, KernelMode};
 use optfuse::graph::{Graph, ScheduleKind, Src};
-use optfuse::memsim::stage_memory;
+use optfuse::memsim::{stage_memory, stage_memory_opts};
 use optfuse::models::mlp;
 use optfuse::ops::activation::Relu;
 use optfuse::ops::dense::Linear;
 use optfuse::ops::loss::MseLoss;
 use optfuse::optim::bucket::partition_by_bytes;
 use optfuse::optim::{Adam, GlobalNormClip, Hyper, Optimizer, Sgd, SgdMomentum};
+use optfuse::tensor::dtype::{grad_elim_env_default, Dtype};
 use optfuse::tensor::Tensor;
 use optfuse::util::XorShiftRng;
 
@@ -187,7 +188,12 @@ fn stage_memory_is_one_over_world_and_matches_memsim_exactly() {
         for schedule in [ScheduleKind::Baseline, ScheduleKind::BackwardFusion] {
             for stage in ShardStage::ALL {
                 let r = run(world, schedule, stage);
-                let want = stage_memory(&units, 2, stage, world); // Adam: 2 slots
+                // the OPTFUSE_GRAD_ELIM=1 CI leg eliminates the grad
+                // arena at backward-fusion drain points — the elim-aware
+                // closed form predicts those rows exactly too
+                let elim_bf =
+                    grad_elim_env_default() && schedule == ScheduleKind::BackwardFusion;
+                let want = stage_memory_opts(&units, 2, stage, world, elim_bf, Dtype::F32); // Adam: 2 slots
                 let label = format!("world {world} {schedule:?} {}", stage.label());
                 assert_eq!(
                     r.peak_grad_arena_bytes, want.grad_bytes,
@@ -203,7 +209,10 @@ fn stage_memory_is_one_over_world_and_matches_memsim_exactly() {
                 );
                 // 256-element units divide evenly by 1/2/4: the sharded
                 // components are *exactly* 1/W of the replicated bytes
-                if stage.shards_grads() {
+                // (grad arena 0 when the drain-point jobs eliminated it)
+                if elim_bf {
+                    assert_eq!(r.peak_grad_arena_bytes, 0, "{label}: eliminated grads");
+                } else if stage.shards_grads() {
                     assert_eq!(r.peak_grad_arena_bytes, total_bytes / world as u64, "{label}");
                 } else {
                     assert_eq!(r.peak_grad_arena_bytes, total_bytes, "{label}");
@@ -276,8 +285,11 @@ fn chunked_sharded_path_matches_unchunked_bitwise_under_every_stage() {
         // arenas themselves (last-chunk countdown), so the end-of-
         // backward sample — taken before any compaction could hide a
         // late release — still equals the closed form exactly, pool
-        // and inline alike (SgdMomentum: 1 state slot)
-        let want = stage_memory(&[768], 1, stage, 3);
+        // and inline alike (SgdMomentum: 1 state slot). Under the
+        // OPTFUSE_GRAD_ELIM=1 leg the last chunk's countdown eliminates
+        // the whole grad arena instead, and the elim-aware form says 0.
+        let want =
+            stage_memory_opts(&[768], 1, stage, 3, grad_elim_env_default(), Dtype::F32);
         for (r, label) in [(&chunked, "pool"), (&inline, "inline")] {
             assert_eq!(
                 r.peak_grad_arena_bytes,
@@ -463,4 +475,57 @@ fn checkpoints_are_stage_portable_both_directions() {
         assert_eq!(a.to_bits(), b.to_bits(), "none→zero3 resume step {s}: {a} vs {b}");
     }
     assert_eq!(max_param_diff(&full.final_params, &resumed.final_params), 0.0);
+}
+
+/// Gradient-elimination equivalence matrix: `--grad-elim` is
+/// bit-identical to the grad-arena path at worlds 1–4 across all three
+/// schedules and all four shard stages (the drain-point update consumes
+/// a gradient whose post-update content is all-zeros either way, so
+/// narrowing it to empty changes residency, never math), and under
+/// backward-fusion the measured peak grad-arena bytes are exactly 0 —
+/// equal to the elimination-aware `memsim::stage_memory_opts` closed
+/// form. Outside backward-fusion the flag is a documented no-op.
+#[test]
+fn grad_elim_bit_identical_and_frees_grad_arena() {
+    let layers = 5;
+    let cap = 1 << 10;
+    let lens = vec![256usize; layers]; // lane_graph: 16×16 per layer
+    let units: Vec<usize> = partition_by_bytes(&lens, cap)
+        .iter()
+        .map(|group| group.iter().map(|i| lens[*i]).sum())
+        .collect();
+    let run = |world: usize, schedule: ScheduleKind, stage: ShardStage, elim: bool| {
+        let mut cfg = DdpConfig::new(world, schedule, 3, Box::new(lane_batch));
+        cfg.bucket_cap_bytes = Some(cap);
+        cfg.shard_stage = stage;
+        cfg.grad_elim = elim;
+        if schedule == ScheduleKind::BackwardFusion {
+            cfg.overlap_threads = 2;
+        }
+        train_ddp(|| lane_graph(11, layers), adam, Hyper::default(), cfg)
+    };
+    for world in [1usize, 2, 3, 4] {
+        for schedule in ScheduleKind::ALL {
+            for stage in ShardStage::ALL {
+                let base = run(world, schedule, stage, false);
+                let elim = run(world, schedule, stage, true);
+                let label = format!("world {world} {schedule:?} {}", stage.label());
+                assert_eq!(base.losses, elim.losses, "{label}: losses bit-identical");
+                assert_eq!(
+                    max_param_diff(&base.final_params, &elim.final_params),
+                    0.0,
+                    "{label}: final params bit-identical"
+                );
+                let elim_bf = schedule == ScheduleKind::BackwardFusion;
+                let want = stage_memory_opts(&units, 2, stage, world, elim_bf, Dtype::F32);
+                assert_eq!(
+                    elim.peak_grad_arena_bytes, want.grad_bytes,
+                    "{label}: measured grad peak == elim-aware memsim"
+                );
+                if elim_bf {
+                    assert_eq!(elim.peak_grad_arena_bytes, 0, "{label}: grad arena eliminated");
+                }
+            }
+        }
+    }
 }
