@@ -114,6 +114,8 @@ fn run_topo(
             kernel,
             grad_elim,
             dtype,
+            pipeline_stages: 1,
+            micro_batches: 1,
             load_from: None,
             save_to: None,
             local_batch_maker: Box::new(move |rank, step| {
@@ -778,6 +780,116 @@ fn main() {
     }
     if let Err(e) = std::fs::write("bench-smoke/bf16_convergence.txt", &conv_table) {
         println!("  (bf16 convergence artifact not written: {e})");
+    }
+    println!();
+
+    // ---- DP×PP axis: 1F1B pipeline grids over the p2p mailbox. Each
+    // row runs an S-stage × dp-chain grid with M micro-batches and
+    // compares the measured worst-stage bubble against the balanced
+    // closed form `(S−1)/(M+S−1)` (`memsim::pipeline_bubble_fracs`);
+    // the math is asserted bit-identical to the single-stage run with
+    // the same micro-batched accumulation, and the activation p2p leg
+    // is asserted to equal `memsim::pipeline_act_bytes` exactly. Rows
+    // land in bench-smoke/pipeline_bubbles.txt so the bubble trend is
+    // tracked per PR next to the convergence table (wallclock bubbles
+    // on a contended runner are noise, so the fraction columns are a
+    // reported trend, not a gate).
+    let pipe_grids: &[(usize, u64, usize)] =
+        if smoke { &[(2, 2, 1), (3, 4, 1)] } else { &[(2, 1, 1), (2, 2, 2), (2, 4, 1), (3, 4, 1)] };
+    let run_pipe = |stages: usize, micro: u64, dp: usize, algo: AlgoSelect| {
+        let mut cfg = DdpConfig::new(
+            dp,
+            ScheduleKind::BackwardFusion,
+            steps,
+            Box::new(move |rank, step| {
+                let mut rng = XorShiftRng::new(((rank as u64) << 32) | step as u64);
+                image_batch(4, 3, 16, 16, 10, &mut rng)
+            }),
+        );
+        cfg.pipeline_stages = stages;
+        cfg.micro_batches = micro;
+        cfg.bucket_cap_bytes = Some(CAP);
+        cfg.grad_elim = false;
+        cfg.dtype = Dtype::F32;
+        cfg.algo = algo;
+        train_ddp(|| models::deep_mlp(3), || optim::by_name("adam").unwrap(), Hyper::default(), cfg)
+    };
+    println!("  DP×PP axis (deep_mlp, bf/bucketed): 1F1B grids, measured vs predicted bubble");
+    println!("    S  M  dp   iter ms   act KiB   msgs   pred worst%   meas worst%");
+    let mut pipe_table = String::from(
+        "1F1B pipeline bubbles (deep_mlp, backward-fusion, bucketed)\n\
+         predicted = balanced closed form (S-1)/(M+S-1); measured = worst per-stage\n\
+         activation-blocked share on chain 0 (contended-runner wallclock: trend, not gate)\n\
+         S  M  dp   act KiB   msgs   predicted   measured\n",
+    );
+    for &(stages, micro, dp) in pipe_grids {
+        let reference = run_pipe(1, micro, dp, CommAlgo::Flat.into());
+        let r = run_pipe(stages, micro, dp, CommAlgo::Flat.into());
+        assert_eq!(
+            reference.losses, r.losses,
+            "S={stages} M={micro} dp={dp}: pipelining must not change the math"
+        );
+        // exact activation accounting against the memsim closed form,
+        // boundary shapes taken from the graph's own cut choice
+        let g = models::deep_mlp(3);
+        let ext_shapes: Vec<Vec<usize>> = vec![vec![4, 3, 16, 16], vec![4]];
+        let cuts = g.pipeline_cuts(stages, &ext_shapes);
+        let micro_ext: Vec<Vec<usize>> = ext_shapes
+            .iter()
+            .map(|sh| {
+                let mut sh = sh.clone();
+                sh[0] /= micro as usize;
+                sh
+            })
+            .collect();
+        let node_shapes = g.infer_shapes(&micro_ext);
+        let boundary: Vec<usize> = cuts.iter().map(|&c| node_shapes[c].iter().product()).collect();
+        let want_bytes =
+            optfuse::memsim::pipeline_act_bytes(&boundary, micro as usize, dp) * steps as u64;
+        assert_eq!(
+            r.act_bytes, want_bytes,
+            "S={stages} M={micro} dp={dp}: activation bytes must equal memsim's closed form"
+        );
+        let balanced = vec![1.0f64; stages];
+        let predicted = optfuse::memsim::pipeline_bubble_fracs(&balanced, micro as usize)
+            .iter()
+            .fold(0.0f64, |a, &b| a.max(b));
+        let measured = r.bubble_frac.iter().fold(0.0f64, |a, &b| a.max(b));
+        println!(
+            "    {stages}  {micro}  {dp:>2}  {:>8.2}  {:>8.1}  {:>5}  {:>10.1}%  {:>10.1}%",
+            r.iter_ms,
+            r.act_bytes as f64 / 1024.0,
+            r.act_msgs,
+            predicted * 100.0,
+            measured * 100.0
+        );
+        pipe_table.push_str(&format!(
+            "{stages}  {micro}  {dp:>2}  {:>8.1}  {:>5}  {:>9.1}%  {:>8.1}%\n",
+            r.act_bytes as f64 / 1024.0,
+            r.act_msgs,
+            predicted * 100.0,
+            measured * 100.0
+        ));
+    }
+    // `--algo auto` composes with the pipeline axis: per-stage plans,
+    // same math, iteration time reported next to flat for the trend
+    let pipe_flat = run_pipe(2, 2, 2, CommAlgo::Flat.into());
+    let pipe_auto = run_pipe(2, 2, 2, AlgoSelect::Auto);
+    assert_eq!(
+        pipe_flat.losses, pipe_auto.losses,
+        "pipelined auto must not change the math"
+    );
+    assert!(pipe_auto.plan.is_some(), "pipelined auto reports stage 0's plan");
+    println!(
+        "    auto vs flat at S=2 M=2 dp=2: {:.2} ms vs {:.2} ms (math bit-identical)",
+        pipe_auto.iter_ms, pipe_flat.iter_ms
+    );
+    pipe_table.push_str(&format!(
+        "auto S=2 M=2 dp=2: {:.2} ms vs flat {:.2} ms\n",
+        pipe_auto.iter_ms, pipe_flat.iter_ms
+    ));
+    if let Err(e) = std::fs::write("bench-smoke/pipeline_bubbles.txt", &pipe_table) {
+        println!("  (pipeline bubble artifact not written: {e})");
     }
     println!();
 

@@ -65,6 +65,7 @@ pub use algo::{
     WireCost,
 };
 pub use hier::HierComm;
+pub use p2p::ActNet;
 pub use plan::{MixedComm, StepPlan, UnitPlan};
 pub use ring::RingComm;
 pub use tree::TreeComm;
@@ -99,6 +100,16 @@ pub struct CommStats {
     /// rescaling in [`CommStats::record`] stays exact and measured
     /// totals keep matching the dtype-aware closed forms bit-for-bit.
     elem_bytes: AtomicU64,
+    /// Point-to-point payload bytes (the pipeline activation exchange),
+    /// counted at both endpoints of every message — a separate leg from
+    /// the collective `bytes` so collective wire accounting stays exact.
+    /// Never rescaled by the wire dtype: activation payloads cross the
+    /// boundary as exact f32 words regardless of the arena dtype (the
+    /// bit-identity contract of pipelined training).
+    pub p2p_bytes: AtomicU64,
+    /// Point-to-point messages, counted at each endpoint (one post +
+    /// one take per message → 2 per in-flight activation tensor).
+    pub p2p_msgs: AtomicU64,
 }
 
 impl Default for CommStats {
@@ -109,6 +120,8 @@ impl Default for CommStats {
             wait_ns: AtomicU64::new(0),
             hops: AtomicU64::new(0),
             elem_bytes: AtomicU64::new(4),
+            p2p_bytes: AtomicU64::new(0),
+            p2p_msgs: AtomicU64::new(0),
         }
     }
 }
@@ -132,6 +145,22 @@ impl CommStats {
         self.hops.fetch_add(hops, Ordering::Relaxed);
         self.wait_ns
             .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Record one endpoint of a point-to-point message (`bytes` of
+    /// payload). Called once by the sender at post and once by the
+    /// receiver at take, so a delivered message contributes `2×bytes`
+    /// to [`CommStats::p2p_bytes`] and 2 to [`CommStats::p2p_msgs`] —
+    /// the same both-endpoints convention the collective `bytes` leg
+    /// uses.
+    pub fn record_p2p(&self, bytes: u64) {
+        self.p2p_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.p2p_msgs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Current `(bytes, messages)` totals of the p2p leg.
+    pub fn p2p(&self) -> (u64, u64) {
+        (self.p2p_bytes.load(Ordering::Relaxed), self.p2p_msgs.load(Ordering::Relaxed))
     }
 
     /// A point-in-time copy of the counters — an epoch marker. Pair
@@ -341,6 +370,21 @@ pub mod tags {
     /// (checkpoint gather).
     pub fn state(unit: usize, slot: usize) -> u64 {
         (3u64 << 56) | ((slot as u64) << 40) | unit as u64
+    }
+
+    /// Forward activation message crossing pipeline-stage boundary
+    /// `boundary` (between stage `boundary` and stage `boundary + 1`).
+    /// Deliberately unit-less ([`unit_of`] returns `None`): activation
+    /// traffic rides a dedicated bounded mailbox, never a collective
+    /// session, and must not alias any training unit's tag sequence.
+    pub fn act_fwd(boundary: usize) -> u64 {
+        (7u64 << 56) | boundary as u64
+    }
+
+    /// Backward activation-gradient message crossing pipeline-stage
+    /// boundary `boundary` (stage `boundary + 1` back to `boundary`).
+    pub fn act_bwd(boundary: usize) -> u64 {
+        (8u64 << 56) | boundary as u64
     }
 
     /// Calibration-probe collective `k` — the synthetic warm-up
@@ -830,6 +874,9 @@ mod tests {
         assert_eq!(tags::unit_of(tags::state(6, 1)), Some(6));
         assert_eq!(tags::unit_of(tags::LOSS), None);
         assert_eq!(tags::unit_of(tags::NORM), None);
+        // activation traffic never routes to a collective session
+        assert_eq!(tags::unit_of(tags::act_fwd(2)), None);
+        assert_eq!(tags::unit_of(tags::act_bwd(0)), None);
     }
 
     #[test]

@@ -22,8 +22,9 @@
 //! [`crate::comm`] module docs — wire-byte accounting still charges only
 //! the bytes the real algorithm would move per hop).
 
+use super::CommStats;
 use std::collections::HashMap;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Address of one in-flight message: collective instance (`tag`, `seq`),
 /// algorithm step (`leg`), and directed edge (`from` → `to`).
@@ -64,22 +65,43 @@ struct Inner {
     /// with a tag on one rank exchanges messages with the k-th on every
     /// other rank, whatever the thread interleaving.
     next_seq: Vec<HashMap<u64, u64>>,
+    /// Messages currently buffered per directed `(from, to)` edge —
+    /// the backpressure meter of a bounded mailbox.
+    in_flight: HashMap<(usize, usize), usize>,
 }
 
 /// The shared in-memory "network" of one ring or tree communicator.
 pub(crate) struct Mailbox {
     inner: Mutex<Inner>,
     ready: Condvar,
+    /// Queue-depth cap per directed edge; 0 = unbounded (the collective
+    /// algorithms rely on non-blocking posts for deadlock freedom).
+    capacity: usize,
+    space: Condvar,
 }
 
 impl Mailbox {
     pub fn new(world: usize) -> Self {
+        Self::with_capacity(world, 0)
+    }
+
+    /// A mailbox whose per-edge queue depth is capped at `capacity`
+    /// messages: a post to a full edge blocks until the receiver takes
+    /// one. Large-payload traffic (pipeline activations) uses this so a
+    /// fast sender can't buffer an unbounded number of in-flight
+    /// micro-batches; the collective algorithms keep `capacity == 0`
+    /// (unbounded) because their deadlock-freedom argument depends on
+    /// posts never blocking.
+    pub fn with_capacity(world: usize, capacity: usize) -> Self {
         Self {
             inner: Mutex::new(Inner {
                 slots: HashMap::new(),
                 next_seq: (0..world).map(|_| HashMap::new()).collect(),
+                in_flight: HashMap::new(),
             }),
             ready: Condvar::new(),
+            capacity,
+            space: Condvar::new(),
         }
     }
 
@@ -95,9 +117,22 @@ impl Mailbox {
         s
     }
 
-    /// Non-blocking send: deposit `payload` for the receiver of `key`.
+    /// Send: deposit `payload` for the receiver of `key`. Non-blocking
+    /// on an unbounded mailbox; on a bounded one ([`with_capacity`]) the
+    /// call blocks while the directed `(from, to)` edge already holds
+    /// `capacity` undelivered messages — backpressure for large-payload
+    /// traffic.
+    ///
+    /// [`with_capacity`]: Mailbox::with_capacity
     pub fn post(&self, key: MsgKey, payload: Payload) {
+        let edge = (key.from, key.to);
         let mut inner = self.inner.lock().unwrap();
+        if self.capacity > 0 {
+            while inner.in_flight.get(&edge).copied().unwrap_or(0) >= self.capacity {
+                inner = self.space.wait(inner).unwrap();
+            }
+        }
+        *inner.in_flight.entry(edge).or_insert(0) += 1;
         let prev = inner.slots.insert(key, payload);
         assert!(prev.is_none(), "p2p: duplicate message for {key:?}");
         drop(inner);
@@ -110,10 +145,112 @@ impl Mailbox {
         let mut inner = self.inner.lock().unwrap();
         loop {
             if let Some(p) = inner.slots.remove(&key) {
+                let edge = (key.from, key.to);
+                let n = inner.in_flight.get_mut(&edge).expect("p2p: take without post");
+                *n -= 1;
+                drop(inner);
+                if self.capacity > 0 {
+                    self.space.notify_all();
+                }
                 return p;
             }
             inner = self.ready.wait(inner).unwrap();
         }
+    }
+
+    /// Messages currently buffered on the directed edge `from → to`
+    /// (test/diagnostic hook for the backpressure contract).
+    #[cfg(test)]
+    pub fn edge_depth(&self, from: usize, to: usize) -> usize {
+        self.inner.lock().unwrap().in_flight.get(&(from, to)).copied().unwrap_or(0)
+    }
+}
+
+/// The activation-exchange network of a pipeline: a bounded [`Mailbox`]
+/// carrying whole activation (and activation-gradient) tensors between
+/// adjacent stages, addressed by `(tag, step, micro)` instead of the
+/// collective sequence counter.
+///
+/// Two deliberate differences from the collective substrate:
+///
+/// - **Backpressure.** Activations are orders of magnitude larger than
+///   gradient chunks, so the mailbox is capacity-bounded per directed
+///   edge ([`Mailbox::with_capacity`]): a stage that races ahead blocks
+///   in [`ActNet::send`] instead of buffering an unbounded number of
+///   in-flight micro-batches. 1F1B keeps at most `S` micro-batches in
+///   flight per chain, so any capacity ≥ `S + 1` cannot deadlock.
+/// - **Deterministic addressing.** The sequence number is computed as
+///   `step · micro_batches + micro`, not drawn from a shared counter —
+///   sender and receiver sit on different ranks and must derive the
+///   same key independently.
+///
+/// Wire accounting goes to the dedicated [`CommStats`] p2p leg
+/// ([`CommStats::record_p2p`]) at both endpoints, mirroring the
+/// both-endpoints convention of the collective `bytes` leg. Payloads
+/// always cross as exact `f32` — activation traffic is never rounded to
+/// the arena dtype, which is what keeps pipelined training bit-identical
+/// to the single-process reference — so the p2p leg is charged exactly
+/// `4 · elems` per endpoint, never dtype-rescaled.
+pub struct ActNet {
+    mailbox: Mailbox,
+    stats: Arc<CommStats>,
+    /// Micro-batches per step — the stride of the `(step, micro)` →
+    /// `seq` map.
+    micro: u64,
+}
+
+impl ActNet {
+    /// A network for `world` ranks exchanging `micro` micro-batches per
+    /// step, with per-edge queue depth capped at `capacity` messages
+    /// (0 = unbounded; pipelines pass ≥ stages + 1).
+    pub fn new(world: usize, capacity: usize, micro: u64, stats: Arc<CommStats>) -> Self {
+        Self { mailbox: Mailbox::with_capacity(world, capacity), stats, micro: micro.max(1) }
+    }
+
+    fn key(&self, tag: u64, step: u64, micro: u64, from: usize, to: usize) -> MsgKey {
+        MsgKey { tag, seq: step * self.micro + micro, leg: 0, from, to }
+    }
+
+    /// Send one tensor (`shape`, `data`) along `from → to` for
+    /// micro-batch `micro` of step `step`. Blocks while the edge is at
+    /// capacity. The shape rides in the payload as zero-length
+    /// per-dimension entries, so accounted bytes are exactly
+    /// `4 · data.len()` per endpoint.
+    pub fn send(
+        &self,
+        tag: u64,
+        step: u64,
+        micro: u64,
+        from: usize,
+        to: usize,
+        shape: &[usize],
+        data: Vec<f32>,
+    ) {
+        self.stats.record_p2p(4 * data.len() as u64);
+        let mut payload: Payload = Vec::with_capacity(1 + shape.len());
+        payload.push((from, data));
+        for &d in shape {
+            payload.push((d, Vec::new()));
+        }
+        self.mailbox.post(self.key(tag, step, micro, from, to), payload);
+    }
+
+    /// Blocking receive of the tensor sent by the matching
+    /// [`ActNet::send`]; returns `(shape, data)`.
+    pub fn recv(
+        &self,
+        tag: u64,
+        step: u64,
+        micro: u64,
+        from: usize,
+        to: usize,
+    ) -> (Vec<usize>, Vec<f32>) {
+        let payload = self.mailbox.take(self.key(tag, step, micro, from, to));
+        let mut it = payload.into_iter();
+        let (_, data) = it.next().expect("p2p: empty activation payload");
+        let shape: Vec<usize> = it.map(|(d, _)| d).collect();
+        self.stats.record_p2p(4 * data.len() as u64);
+        (shape, data)
     }
 }
 
@@ -170,5 +307,86 @@ mod tests {
         let m = Mailbox::new(2);
         m.post(key(0, 0, 1), vec![]);
         m.post(key(0, 0, 1), vec![]);
+    }
+
+    #[test]
+    fn bounded_post_blocks_until_take() {
+        let m = Arc::new(Mailbox::with_capacity(2, 2));
+        m.post(key(0, 0, 1), vec![(0, vec![1.0])]);
+        m.post(key(1, 0, 1), vec![(0, vec![2.0])]);
+        assert_eq!(m.edge_depth(0, 1), 2);
+        // the third post on the full 0→1 edge must block until a take
+        // frees a slot
+        let m2 = Arc::clone(&m);
+        let posted = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let posted2 = Arc::clone(&posted);
+        let h = std::thread::spawn(move || {
+            m2.post(key(2, 0, 1), vec![(0, vec![3.0])]);
+            posted2.store(true, std::sync::atomic::Ordering::SeqCst);
+        });
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert!(
+            !posted.load(std::sync::atomic::Ordering::SeqCst),
+            "post over capacity must block"
+        );
+        assert_eq!(m.take(key(0, 0, 1))[0].1, vec![1.0]);
+        h.join().unwrap();
+        assert!(posted.load(std::sync::atomic::Ordering::SeqCst));
+        assert_eq!(m.take(key(1, 0, 1))[0].1, vec![2.0]);
+        assert_eq!(m.take(key(2, 0, 1))[0].1, vec![3.0]);
+        assert_eq!(m.edge_depth(0, 1), 0);
+    }
+
+    #[test]
+    fn actnet_roundtrip_shapes_and_accounting() {
+        let stats = Arc::new(CommStats::default());
+        let net = ActNet::new(2, 3, 4, Arc::clone(&stats));
+        // distinct (tag, step, micro) triples never collide, whatever
+        // the send order
+        net.send(super::super::tags::act_fwd(0), 0, 1, 0, 1, &[2, 3], vec![1.0; 6]);
+        net.send(super::super::tags::act_fwd(0), 0, 0, 0, 1, vec![4].as_slice(), vec![2.0; 4]);
+        net.send(super::super::tags::act_bwd(0), 0, 0, 1, 0, &[4], vec![3.0; 4]);
+        let (shape, data) = net.recv(super::super::tags::act_fwd(0), 0, 0, 0, 1);
+        assert_eq!(shape, vec![4]);
+        assert_eq!(data, vec![2.0; 4]);
+        let (shape, data) = net.recv(super::super::tags::act_fwd(0), 0, 1, 0, 1);
+        assert_eq!(shape, vec![2, 3]);
+        assert_eq!(data, vec![1.0; 6]);
+        let (shape, data) = net.recv(super::super::tags::act_bwd(0), 0, 0, 1, 0);
+        assert_eq!(shape, vec![4]);
+        assert_eq!(data, vec![3.0; 4]);
+        // both-endpoints accounting: each message charges 4·elems at
+        // send and again at recv, one msg count per endpoint
+        let (bytes, msgs) = stats.p2p();
+        assert_eq!(bytes, 2 * 4 * (6 + 4 + 4) as u64);
+        assert_eq!(msgs, 6);
+    }
+
+    #[test]
+    fn actnet_seq_separates_steps() {
+        // step 1 micro 0 and step 0 micro 4 must not alias even though
+        // 1·4 + 0 == 0·4 + 4 would collide if the stride were wrong —
+        // micro < micro_batches by contract, so the map is injective
+        let stats = Arc::new(CommStats::default());
+        let net = ActNet::new(2, 0, 4, stats);
+        net.send(super::super::tags::act_fwd(0), 1, 0, 0, 1, &[1], vec![10.0]);
+        net.send(super::super::tags::act_fwd(0), 0, 3, 0, 1, &[1], vec![20.0]);
+        assert_eq!(net.recv(super::super::tags::act_fwd(0), 0, 3, 0, 1).1, vec![20.0]);
+        assert_eq!(net.recv(super::super::tags::act_fwd(0), 1, 0, 0, 1).1, vec![10.0]);
+    }
+
+    #[test]
+    fn bounded_capacity_is_per_edge() {
+        // a full 0→1 edge must not backpressure the 1→0 or 0→2 edges
+        let m = Mailbox::with_capacity(3, 1);
+        m.post(key(0, 0, 1), vec![(0, vec![1.0])]);
+        m.post(key(0, 1, 0), vec![(1, vec![2.0])]);
+        m.post(key(0, 0, 2), vec![(0, vec![3.0])]);
+        assert_eq!(m.edge_depth(0, 1), 1);
+        assert_eq!(m.edge_depth(1, 0), 1);
+        assert_eq!(m.edge_depth(0, 2), 1);
+        assert_eq!(m.take(key(0, 0, 1))[0].1, vec![1.0]);
+        assert_eq!(m.take(key(0, 1, 0))[0].1, vec![2.0]);
+        assert_eq!(m.take(key(0, 0, 2))[0].1, vec![3.0]);
     }
 }

@@ -392,12 +392,21 @@ impl MixedComm {
     }
 
     fn with_keys(topo: &Topology, unit_key: Vec<BackingKey>, default_algo: CommAlgo) -> Self {
+        Self::with_keys_stats(topo, unit_key, default_algo, Arc::new(CommStats::default()))
+    }
+
+    fn with_keys_stats(
+        topo: &Topology,
+        unit_key: Vec<BackingKey>,
+        default_algo: CommAlgo,
+        stats: Arc<CommStats>,
+    ) -> Self {
         let me = Self {
             world: topo.world,
             topo: *topo,
             routing: RwLock::new(Routing { default_algo, unit_key }),
             backings: RwLock::new(Vec::new()),
-            stats: Arc::new(CommStats::default()),
+            stats,
         };
         me.ensure_routable();
         me
@@ -405,7 +414,15 @@ impl MixedComm {
 
     /// The session a plan resolves to.
     pub fn from_plan(plan: &StepPlan) -> Self {
-        Self::with_keys(&plan.topo, Self::plan_keys(plan), plan.default_algo)
+        Self::from_plan_shared(plan, Arc::new(CommStats::default()))
+    }
+
+    /// [`MixedComm::from_plan`] recording into a caller-supplied stats
+    /// sink — the pipeline path, where every stage's replica group and
+    /// the activation mailbox share one [`CommStats`] so the report
+    /// keeps a single accounting path across the whole S×DP grid.
+    pub fn from_plan_shared(plan: &StepPlan, stats: Arc<CommStats>) -> Self {
+        Self::with_keys_stats(&plan.topo, Self::plan_keys(plan), plan.default_algo, stats)
     }
 
     fn plan_keys(plan: &StepPlan) -> Vec<BackingKey> {

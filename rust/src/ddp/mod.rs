@@ -66,10 +66,11 @@
 use crate::checkpoint;
 use crate::comm::plan::{plan_units, MixedComm, PlanInputs, StepPlan};
 use crate::comm::{
-    make_comm, tags, AlgoSelect, CommCtx, CommStatsSnapshot, Communicator, ShardStage, Topology,
+    make_comm, make_comm_shared, tags, ActNet, AlgoSelect, CommCtx, CommStats, CommStatsSnapshot,
+    Communicator, ShardStage, Topology,
 };
 use crate::exec::kernel::KernelConfig;
-use crate::exec::{ExecConfig, Executor};
+use crate::exec::{ExecConfig, Executor, PipelineCtx};
 use crate::graph::{Graph, ScheduleKind};
 use crate::memsim::machines;
 use crate::memsim::Interconnect;
@@ -161,6 +162,24 @@ pub struct DdpReport {
     /// time), shaped to the run's topology. `None` when
     /// `calibrate_steps == 0`.
     pub fitted: Option<Interconnect>,
+    /// Pipeline stages the run executed (1 = pure DP).
+    pub pipeline_stages: usize,
+    /// 1F1B micro-batches per step (pipeline path; 1 otherwise).
+    pub micro_batches: u64,
+    /// Measured per-stage bubble fraction on chain 0: the share of each
+    /// stage's step span blocked on boundary activation exchange
+    /// ([`crate::exec::StepStats::p2p_wait`] over the step wallclock
+    /// that contains it, summed over steps) — always in [0, 1), what
+    /// `memsim::pipeline_bubble_fracs` predicts. Empty on
+    /// non-pipelined runs.
+    pub bubble_frac: Vec<f64>,
+    /// Activation bytes through the `CommStats` p2p leg across the run
+    /// (both endpoints, forward + backward payloads; exact f32 — never
+    /// dtype-rescaled). 0 on non-pipelined runs.
+    pub act_bytes: u64,
+    /// Activation messages through the p2p leg (one post + one take
+    /// record each). 0 on non-pipelined runs.
+    pub act_msgs: u64,
 }
 
 /// Configuration of a DDP run.
@@ -240,6 +259,18 @@ pub struct DdpConfig {
     /// bytes while optimizer state stays FP32 master; requires bucketed
     /// storage.
     pub dtype: Dtype,
+    /// `--pipeline-stages S`: partition the model into S contiguous
+    /// pipeline stages ([`crate::graph::Graph::pipeline_cuts`]) and run
+    /// the 1F1B schedule over the p2p mailbox, with `world` data-parallel
+    /// chains per stage (total threads = `S × world`). 1 = pure DP.
+    pub pipeline_stages: usize,
+    /// `--micro-batches M`: 1F1B micro-batches per step on the pipeline
+    /// path. Each rank's local batch row-splits into M equal
+    /// micro-batches; gradients fold in fixed micro order, so the run
+    /// stays bit-identical to a single process doing the same
+    /// micro-batched accumulation. `pipeline_stages == 1 && M > 1` runs
+    /// the micro-batched schedule without stage boundaries.
+    pub micro_batches: u64,
     /// Restore every replica from this checkpoint before step 0
     /// (re-narrowing state to each rank's shard when sharding).
     pub load_from: Option<PathBuf>,
@@ -277,6 +308,8 @@ impl DdpConfig {
             kernel: KernelConfig::default(),
             grad_elim: dtype::grad_elim_env_default(),
             dtype: dtype::dtype_env_default(),
+            pipeline_stages: 1,
+            micro_batches: 1,
             load_from: None,
             save_to: None,
             local_batch_maker,
@@ -314,6 +347,9 @@ pub fn train_ddp(
     hyper: Hyper,
     cfg: DdpConfig,
 ) -> DdpReport {
+    if cfg.pipeline_stages > 1 || cfg.micro_batches > 1 {
+        return train_pipeline(build, make_opt, hyper, cfg);
+    }
     let world = cfg.world;
     assert!(world >= 1, "DDP needs at least one replica");
     assert!(
@@ -655,6 +691,412 @@ pub fn train_ddp(
         final_params: rz.final_params,
         plan: replanned.or(report_plan),
         fitted,
+        pipeline_stages: 1,
+        micro_batches: 1,
+        bubble_frac: Vec::new(),
+        act_bytes: 0,
+        act_msgs: 0,
+    }
+}
+
+/// Row-split each external tensor of a rank's batch into `m` equal
+/// micro-batches (fixed micro order — the accumulation order the
+/// bit-identity contract pins), appending the placeholder tensor every
+/// stage graph expects in its extra recv-activation external slot.
+fn split_micros(batch: &[Tensor], m: u64) -> Vec<Vec<Tensor>> {
+    let m = m.max(1) as usize;
+    let mut out: Vec<Vec<Tensor>> = (0..m).map(|_| Vec::with_capacity(batch.len() + 1)).collect();
+    for t in batch {
+        let shape = t.shape();
+        assert!(
+            !shape.is_empty() && shape[0] % m == 0,
+            "pipeline: batch dim {} must divide evenly by --micro-batches {m}",
+            shape.first().copied().unwrap_or(0)
+        );
+        let rows = shape[0] / m;
+        let stride: usize = shape[1..].iter().product::<usize>().max(1);
+        let mut sub_shape = shape.to_vec();
+        sub_shape[0] = rows;
+        for (i, chunk) in t.data().chunks(rows * stride).enumerate() {
+            out[i].push(Tensor::from_vec(&sub_shape, chunk.to_vec()));
+        }
+    }
+    for micros in &mut out {
+        micros.push(Tensor::zeros(&[1]));
+    }
+    out
+}
+
+/// What the chain-0 rank of each stage measured, published for the
+/// report: accumulated activation-blocked time and accumulated step
+/// span (the span includes the blocked time, so wait/span is the
+/// measured bubble), plus the stage's final parameter snapshot (stage
+/// order concatenates to the full model's pid order).
+#[derive(Default)]
+struct StageLeader {
+    wait_s: f64,
+    span_s: f64,
+    params: Vec<Tensor>,
+}
+
+/// Run a DP×PP grid: `cfg.pipeline_stages` pipeline stages × `cfg.world`
+/// data-parallel chains, `cfg.micro_batches` 1F1B micro-batches per
+/// step. Each stage's replica group meets through its own communicator
+/// (DP collectives and ZeRO shards stay within the group); boundary
+/// activations/activation-grads cross stages as tagged p2p messages
+/// over one bounded [`ActNet`]. Every communicator and the mailbox
+/// share a single [`CommStats`], so the report's accounting stays one
+/// path. Dispatched from [`train_ddp`] when `pipeline_stages > 1` or
+/// `micro_batches > 1`.
+fn train_pipeline(
+    build: impl Fn() -> Graph,
+    make_opt: impl Fn() -> Box<dyn Optimizer>,
+    hyper: Hyper,
+    cfg: DdpConfig,
+) -> DdpReport {
+    let stages = cfg.pipeline_stages.max(1);
+    let dp = cfg.world;
+    let micro = cfg.micro_batches.max(1);
+    assert!(dp >= 1, "DDP needs at least one replica chain");
+    assert!(
+        !cfg.shard_stage.sharded() || cfg.bucket_cap_bytes.is_some(),
+        "shard stages require bucketed storage: set bucket_cap_bytes (--bucket-cap)"
+    );
+    assert_eq!(
+        cfg.calibrate_steps, 0,
+        "pipeline runs do not calibrate: probe collectives would interleave \
+         with in-flight 1F1B activation traffic"
+    );
+    assert_eq!(
+        cfg.ranks_per_node, 0,
+        "pipeline stages compose with flat DP replica groups \
+         (two-tier topology within a stage is not wired up)"
+    );
+    // one accounting path for every stage's collectives and the
+    // activation mailbox
+    let stats = Arc::new(CommStats::default());
+    stats.set_elem_bytes(cfg.dtype.elem_bytes() as u64);
+    let stage_topo = Topology::flat(dp);
+    // cut chooser: balance per-stage FLOPs on the full unit graph,
+    // shapes taken from a sample batch
+    let cuts = {
+        let probe = build();
+        let sample = (cfg.local_batch_maker)(0, 0);
+        let ext_shapes: Vec<Vec<usize>> = sample.iter().map(|t| t.shape().to_vec()).collect();
+        probe.pipeline_cuts(stages, &ext_shapes)
+    };
+    // per-stage communicators over the shared stats; `--algo auto`
+    // resolves one plan per stage from that stage's own bucket partition
+    let mut stage_plans: Vec<Option<Arc<StepPlan>>> = vec![None; stages];
+    let stage_comms: Vec<Arc<dyn Communicator>> = match cfg.algo {
+        AlgoSelect::Fixed(algo) => (0..stages)
+            .map(|_| make_comm_shared(algo, &stage_topo, Arc::clone(&stats)))
+            .collect(),
+        AlgoSelect::Auto => {
+            let cap = cfg.bucket_cap_bytes.expect(
+                "--algo auto plans per bucket and requires bucketed storage \
+                 (set bucket_cap_bytes / --bucket-cap)",
+            );
+            let ic = cfg
+                .planner_interconnect
+                .clone()
+                .unwrap_or_else(|| machines::shared_mem(dp));
+            assert_eq!(
+                ic.topology(),
+                stage_topo,
+                "planner interconnect must match the stage replica group"
+            );
+            let workers = if cfg.schedule == ScheduleKind::BackwardFusion {
+                cfg.overlap_threads
+            } else {
+                0
+            };
+            (0..stages)
+                .map(|s| {
+                    let (g, _) = build().into_stage(&cuts, s);
+                    let lens: Vec<usize> = g
+                        .store
+                        .params
+                        .iter()
+                        .map(|p| p.data.read().unwrap().value.len())
+                        .collect();
+                    let units: Vec<usize> = partition_by_bytes(&lens, cap)
+                        .iter()
+                        .map(|group| group.iter().map(|i| lens[*i]).sum())
+                        .collect();
+                    let plan = Arc::new(plan_units(
+                        &units,
+                        &PlanInputs {
+                            ic: &ic,
+                            stage: cfg.shard_stage,
+                            backward_s: cfg.planner_backward_s.unwrap_or(0.0),
+                            workers,
+                            bucket_cap_bytes: Some(cap),
+                            dtype: cfg.dtype,
+                        },
+                    ));
+                    let session =
+                        Arc::new(MixedComm::from_plan_shared(&plan, Arc::clone(&stats)));
+                    stage_plans[s] = Some(plan);
+                    session as Arc<dyn Communicator>
+                })
+                .collect()
+        }
+    };
+    let stage_plans = stage_plans; // immutable from here
+    // the activation network: one bounded mailbox over the whole grid,
+    // queue depth S+1 per leg (enough for every in-flight 1F1B
+    // micro-batch plus one — backpressure, not deadlock)
+    let net = Arc::new(ActNet::new(stages * dp, stages + 1, micro, Arc::clone(&stats)));
+    let leaders: Arc<Mutex<Vec<Option<StageLeader>>>> =
+        Arc::new(Mutex::new((0..stages).map(|_| None).collect()));
+    let ckpt_parts: Arc<Mutex<Vec<Option<Vec<(String, Tensor, Vec<Tensor>)>>>>> =
+        Arc::new(Mutex::new((0..stages).map(|_| None).collect()));
+    let losses_out: Arc<Mutex<Vec<f32>>> = Arc::new(Mutex::new(Vec::new()));
+    let rank0: Arc<Mutex<Option<RankZero>>> = Arc::new(Mutex::new(None));
+    let batch_maker = Arc::new(cfg.local_batch_maker);
+    let sync = Arc::new(Barrier::new(stages * dp));
+    std::thread::scope(|scope| {
+        for s in 0..stages {
+            for d in 0..dp {
+                let comm = Arc::clone(&stage_comms[s]);
+                let plan = stage_plans[s].clone();
+                let net = Arc::clone(&net);
+                let leaders = Arc::clone(&leaders);
+                let ckpt_parts = Arc::clone(&ckpt_parts);
+                let losses_out = Arc::clone(&losses_out);
+                let rank0 = Arc::clone(&rank0);
+                let batch_maker = Arc::clone(&batch_maker);
+                let sync = Arc::clone(&sync);
+                let (graph, info) = build().into_stage(&cuts, s);
+                let opt = make_opt();
+                let hyper = hyper.clone();
+                let schedule = cfg.schedule;
+                let steps = cfg.steps;
+                let bucket_cap_bytes = cfg.bucket_cap_bytes;
+                let comm_chunk_bytes = cfg.comm_chunk_bytes;
+                let shard = cfg.shard_stage;
+                let overlap_threads = cfg.overlap_threads;
+                let kernel = cfg.kernel;
+                let grad_elim = cfg.grad_elim;
+                let dtype = cfg.dtype;
+                let load_from = cfg.load_from.clone();
+                let save_to = cfg.save_to.clone();
+                scope.spawn(move || {
+                    let threads = if schedule == ScheduleKind::BackwardFusion {
+                        overlap_threads
+                    } else {
+                        0
+                    };
+                    let mut ex = Executor::new(
+                        graph,
+                        opt,
+                        hyper,
+                        ExecConfig {
+                            schedule,
+                            threads,
+                            bucket_cap_bytes,
+                            comm_chunk_bytes,
+                            kernel,
+                            grad_elim,
+                            dtype,
+                            micro_batches: micro,
+                            ..Default::default()
+                        },
+                    )
+                    .expect("executor");
+                    if dp > 1 {
+                        ex.set_comm(CommCtx {
+                            comm: Arc::clone(&comm),
+                            rank: d,
+                            stage: shard,
+                            plan,
+                            topo: stage_topo,
+                        });
+                    }
+                    if let Some(path) = &load_from {
+                        // the merged file names every stage's params;
+                        // each stage restores its slice by name
+                        checkpoint::load_subset(&mut ex, path)
+                            .expect("ddp: pipeline checkpoint restore");
+                        ex.graph.store.apply_shard_stage(shard, &stage_topo, d);
+                    }
+                    let pipe = PipelineCtx {
+                        net,
+                        stage: s,
+                        stages,
+                        dp,
+                        dp_index: d,
+                        recv_ext: info.recv_ext,
+                        send_node: info.send_node,
+                    };
+                    let mut losses = Vec::new();
+                    let mut wait_s = 0.0f64;
+                    let mut span_s = 0.0f64;
+                    let t_loop = Instant::now();
+                    for step in 0..steps {
+                        let batch = (batch_maker)(d, step);
+                        let micros = split_micros(&batch, micro);
+                        let st = ex.pipeline_step(&micros, &pipe);
+                        span_s += (st.forward + st.backward + st.optimizer).as_secs_f64();
+                        wait_s += st.p2p_wait.as_secs_f64();
+                        if s + 1 == stages {
+                            // global loss = mean over the last stage's
+                            // chain shards, like the DP path
+                            let mut lbuf = [st.loss];
+                            if dp > 1 {
+                                comm.all_reduce_mean(d, tags::LOSS, &mut lbuf);
+                            }
+                            if d == 0 {
+                                losses.push(lbuf[0]);
+                            }
+                        }
+                    }
+                    let loop_wall = t_loop.elapsed();
+                    sync.wait();
+                    let in_loop_rounds = if s == 0 && d == 0 {
+                        comm.stats().rounds.load(Ordering::Relaxed)
+                    } else {
+                        0
+                    };
+                    sync.wait();
+                    // FF flush is collective under sharding: every rank
+                    // of a stage group flushes together
+                    ex.flush_pending();
+                    let footprint = if s == 0 && d == 0 {
+                        let store = &ex.graph.store;
+                        let update_elems_per_step: usize = if shard.sharded() {
+                            store
+                                .buckets
+                                .as_ref()
+                                .expect("sharding implies buckets")
+                                .buckets
+                                .iter()
+                                .map(|b| {
+                                    let n = b.data.read().unwrap().num_elems();
+                                    node_local_span(n, stage_topo.world, stage_topo.rpn(), d).1
+                                })
+                                .sum()
+                        } else {
+                            store.num_scalars()
+                        };
+                        Some((ex.arena_peak, update_elems_per_step))
+                    } else {
+                        None
+                    };
+                    ex.materialize_values();
+                    if s + 1 == stages && d == 0 {
+                        *losses_out.lock().unwrap() = std::mem::take(&mut losses);
+                    }
+                    if d == 0 {
+                        leaders.lock().unwrap()[s] = Some(StageLeader {
+                            wait_s,
+                            span_s,
+                            params: ex.graph.store.snapshot(),
+                        });
+                    }
+                    if let Some((peak, update_elems_per_step)) = footprint {
+                        let (olap, total) = (ex.overlapped_job_ns, ex.total_job_ns);
+                        *rank0.lock().unwrap() = Some(RankZero {
+                            losses: Vec::new(),
+                            loop_wall,
+                            in_loop_rounds,
+                            probe_traffic: CommStatsSnapshot::default(),
+                            probe_wall: Duration::ZERO,
+                            overlap_frac: if total > 0 {
+                                olap as f64 / total as f64
+                            } else {
+                                0.0
+                            },
+                            opt_state_bytes: peak.opt_state_bytes,
+                            peak_grad_arena_bytes: peak.grad_bytes,
+                            peak_value_arena_bytes: peak.value_bytes,
+                            update_elems_per_step,
+                            final_params: Vec::new(),
+                        });
+                    }
+                    if save_to.is_some() {
+                        // gather sharded state to full coverage (a
+                        // collective within the stage group), then stage
+                        // leaders export their slice and one rank writes
+                        // the merged, layout-portable file
+                        ex.prepare_checkpoint();
+                        if d == 0 {
+                            ckpt_parts.lock().unwrap()[s] = Some(ex.export_entries());
+                        }
+                        sync.wait();
+                        if s == 0 && d == 0 {
+                            let parts: Vec<(String, Tensor, Vec<Tensor>)> = ckpt_parts
+                                .lock()
+                                .unwrap()
+                                .iter_mut()
+                                .map(|p| p.take().expect("every stage leader exported"))
+                                .reduce(|mut a, mut b| {
+                                    a.append(&mut b);
+                                    a
+                                })
+                                .unwrap_or_default();
+                            checkpoint::save_parts(
+                                ex.step_count(),
+                                &parts,
+                                save_to.as_ref().expect("checked above"),
+                            )
+                            .expect("ddp: pipeline checkpoint save");
+                        }
+                    }
+                });
+            }
+        }
+    });
+    let rz = rank0.lock().unwrap().take().expect("stage-0 chain-0 rank must report");
+    let mut leaders = leaders.lock().unwrap();
+    let bubble_frac: Vec<f64> = leaders
+        .iter()
+        .map(|l| {
+            let l = l.as_ref().expect("every stage leader reported");
+            // span_s already contains the blocked time (p2p_wait is a
+            // subset of the fwd/bwd wallclock), so wait over span is the
+            // measured analogue of the closed form's 1 − t/span,
+            // bounded in [0, 1)
+            if l.span_s > 0.0 {
+                l.wait_s / l.span_s
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    // stage order *is* pid order (Graph::into_stage keeps ascending
+    // parameter ids), so concatenating stage snapshots reassembles the
+    // full model's parameter list
+    let final_params: Vec<Tensor> = leaders
+        .iter_mut()
+        .flat_map(|l| std::mem::take(&mut l.as_mut().expect("leader").params))
+        .collect();
+    let (act_bytes, act_msgs) = stats.p2p();
+    let denom = (stages * dp * cfg.steps.max(1)) as f64;
+    DdpReport {
+        world: dp,
+        steps: cfg.steps,
+        losses: std::mem::take(&mut losses_out.lock().unwrap()),
+        iter_ms: rz.loop_wall.as_secs_f64() * 1e3 / cfg.steps.max(1) as f64,
+        comm_bytes: stats.bytes.load(Ordering::Relaxed),
+        comm_rounds: stats.rounds.load(Ordering::Relaxed),
+        comm_hops: stats.hops.load(Ordering::Relaxed),
+        reduces_per_step: rz.in_loop_rounds as f64 / denom,
+        comm_wait_ms: stats.wait_ns.load(Ordering::Relaxed) as f64 / 1e6,
+        overlap_frac: rz.overlap_frac,
+        opt_state_bytes: rz.opt_state_bytes,
+        peak_grad_arena_bytes: rz.peak_grad_arena_bytes,
+        peak_value_arena_bytes: rz.peak_value_arena_bytes,
+        update_elems_per_step: rz.update_elems_per_step,
+        final_params,
+        plan: stage_plans.first().cloned().flatten(),
+        fitted: None,
+        pipeline_stages: stages,
+        micro_batches: micro,
+        bubble_frac,
+        act_bytes,
+        act_msgs,
     }
 }
 
@@ -801,6 +1243,56 @@ mod tests {
         assert_eq!(cal.comm_hops, base.comm_hops);
         assert_eq!(cal.reduces_per_step, base.reduces_per_step);
         assert_eq!(cal.losses, base.losses);
+    }
+
+    /// Smoke: a 2-stage × 2-chain 1F1B grid trains, exchanges
+    /// activations through the p2p leg, and reports per-stage bubbles.
+    /// (Bit-identity and exact byte accounting live in
+    /// `rust/tests/integration_pipeline.rs`.)
+    #[test]
+    fn pipeline_grid_trains_and_accounts() {
+        let mut c = cfg(ScheduleKind::BackwardFusion, 2, 3);
+        c.pipeline_stages = 2;
+        c.micro_batches = 2;
+        let r = train_ddp(
+            || mlp(99),
+            || Box::new(SgdMomentum) as Box<dyn Optimizer>,
+            Hyper { lr: 0.05, ..Hyper::default() },
+            c,
+        );
+        assert_eq!((r.pipeline_stages, r.micro_batches), (2, 2));
+        assert_eq!(r.losses.len(), 3);
+        assert!(r.losses.iter().all(|l| l.is_finite()));
+        assert!(r.act_bytes > 0 && r.act_msgs > 0, "activations crossed the boundary");
+        assert_eq!(r.bubble_frac.len(), 2);
+        assert!(r.bubble_frac.iter().all(|f| (0.0..=1.0).contains(f)));
+        assert!(!r.final_params.is_empty());
+    }
+
+    /// A 2-stage pipeline equals the single-stage run with the same
+    /// micro-batching, bitwise — the stage boundary only moves exact
+    /// f32 payloads.
+    #[test]
+    fn pipeline_matches_single_stage_reference() {
+        let run = |stages: usize| {
+            let mut c = cfg(ScheduleKind::BackwardFusion, 1, 4);
+            c.pipeline_stages = stages;
+            c.micro_batches = 2;
+            train_ddp(
+                || mlp(99),
+                || Box::new(SgdMomentum) as Box<dyn Optimizer>,
+                Hyper { lr: 0.05, ..Hyper::default() },
+                c,
+            )
+        };
+        let a = run(2);
+        let b = run(1);
+        assert_eq!(a.losses, b.losses, "losses bit-identical across layouts");
+        assert_eq!(a.final_params.len(), b.final_params.len());
+        for (x, y) in a.final_params.iter().zip(b.final_params.iter()) {
+            assert_eq!(x.data(), y.data(), "params bit-identical across layouts");
+        }
+        assert_eq!(b.act_bytes, 0, "a single stage moves no activations");
     }
 
     #[test]

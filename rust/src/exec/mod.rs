@@ -46,7 +46,7 @@ pub mod hooks;
 pub mod kernel;
 pub mod pool;
 
-use crate::comm::{tags, CommCtx};
+use crate::comm::{tags, ActNet, CommCtx};
 use crate::graph::{Graph, ParamId, ScheduleKind, Src};
 use crate::ops::OpCtx;
 use crate::optim::{bucket, Hyper, Optimizer};
@@ -86,6 +86,19 @@ pub struct ExecConfig {
     /// Gradient accumulation: updates fire only every `accum_steps`
     /// micro-steps (grads keep accumulating in between). 1 = every step.
     pub accum_steps: u64,
+    /// Pipeline micro-batches per step (`--micro-batches`): the 1F1B
+    /// schedule of [`Executor::pipeline_step`] splits each step's batch
+    /// into this many micro-batches whose gradients accumulate in fixed
+    /// micro order before the single end-of-step update. Unlike
+    /// `accum_steps > 1`, micro-batching does **not** gate
+    /// `--grad-elim`: the drain point fires only on the last
+    /// micro-batch's backward, where it sees the final accumulated
+    /// contribution ([`ParamStore::accum_grad`] re-widens an eliminated
+    /// arena between micro-backwards), so elimination stays effective.
+    /// Ignored by [`Executor::train_step`]. 1 = no micro-batching.
+    ///
+    /// [`ParamStore::accum_grad`]: crate::graph::ParamStore::accum_grad
+    pub micro_batches: u64,
     /// `Some(cap)` switches the store to bucketed flat storage with at
     /// most `cap` bytes of gradient payload per bucket; `None` keeps the
     /// scattered per-parameter layout.
@@ -132,6 +145,7 @@ impl Default for ExecConfig {
             threads: 0,
             race_guard: true,
             accum_steps: 1,
+            micro_batches: 1,
             bucket_cap_bytes: None,
             comm_chunk_bytes: None,
             kernel: kernel::KernelConfig::default(),
@@ -152,6 +166,32 @@ impl ExecConfig {
             && self.bucket_cap_bytes.is_some()
             && self.accum_steps <= 1
     }
+
+    /// A human-readable note when `--grad-elim` was requested but is not
+    /// in effect, naming the gate that disarmed it. Deliberately silent
+    /// about `micro_batches`: pipeline micro-batching keeps elimination
+    /// effective (the drain fires on the last micro-batch, after the
+    /// full accumulation — see [`ExecConfig::micro_batches`]); only
+    /// *plain* gradient accumulation (`accum_steps > 1`) gates it, since
+    /// its arena must survive across whole backward passes between
+    /// update boundaries.
+    pub fn grad_elim_gate_note(&self) -> Option<String> {
+        if !self.grad_elim || self.grad_elim_effective() {
+            return None;
+        }
+        let why = if self.schedule != ScheduleKind::BackwardFusion {
+            format!("schedule is {} (needs backward-fusion)", self.schedule.label())
+        } else if self.bucket_cap_bytes.is_none() {
+            "storage is scattered (needs bucket_cap_bytes)".to_string()
+        } else {
+            format!(
+                "accum_steps = {} (plain gradient accumulation keeps the grad \
+                 arena alive between backwards; micro-batching would not)",
+                self.accum_steps
+            )
+        };
+        Some(format!("--grad-elim requested but inactive: {why}"))
+    }
 }
 
 /// Per-step measurements (the paper's Fig. 3 breakdown).
@@ -171,12 +211,54 @@ pub struct StepStats {
     /// Update worker busy time that overlapped backward (BF, threads>0),
     /// or inline update time inside backward (BF, threads=0).
     pub opt_in_backward: Duration,
+    /// Pipeline only: time this rank spent blocked on activation
+    /// exchange — forward/backward boundary receives plus bounded-send
+    /// backpressure ([`crate::comm::ActNet`]). This is the measured
+    /// per-stage pipeline *bubble* (warmup/cooldown idle shows up as
+    /// recv waits), kept out of `CommStats::wait_ns` so the calibration
+    /// fit never sees activation stalls. Subset of `forward` +
+    /// `backward`. Zero outside [`Executor::pipeline_step`].
+    pub p2p_wait: Duration,
 }
 
 impl StepStats {
     /// Total wallclock of the step across all three stages.
     pub fn total(&self) -> Duration {
         self.forward + self.backward + self.optimizer
+    }
+}
+
+/// One rank's view of a pipeline-parallel grid: which stage it runs,
+/// where it sits in the stage's replica group, and the boundary wiring
+/// of its stage graph ([`crate::graph::StageInfo`]). Ranks are laid out
+/// in contiguous stage blocks — stage `s`, data-parallel index `d` is
+/// global rank `s·dp + d` — so the pipeline *chain* for dp index `d` is
+/// the rank set `{s·dp + d : s < stages}` and the activation messages
+/// of different chains never share a mailbox edge.
+pub struct PipelineCtx {
+    /// The activation-exchange network shared by every rank of the grid.
+    pub net: Arc<ActNet>,
+    /// This rank's pipeline stage (0-based).
+    pub stage: usize,
+    /// Total pipeline stages `S`.
+    pub stages: usize,
+    /// Replica-group (data-parallel) width of each stage.
+    pub dp: usize,
+    /// This rank's index within its stage's replica group — its chain id.
+    pub dp_index: usize,
+    /// External slot the incoming boundary activation is injected into
+    /// (`None` on stage 0) — [`crate::graph::StageInfo::recv_ext`].
+    pub recv_ext: Option<usize>,
+    /// Stage-local node whose output crosses the outgoing boundary
+    /// (`None` on the last stage) —
+    /// [`crate::graph::StageInfo::send_node`].
+    pub send_node: Option<usize>,
+}
+
+impl PipelineCtx {
+    /// Global rank of `stage` within this rank's chain.
+    fn rank(&self, stage: usize) -> usize {
+        stage * self.dp + self.dp_index
     }
 }
 
@@ -805,138 +887,10 @@ impl Executor {
         let n = self.graph.nodes.len();
         let mut grads: Vec<Option<Tensor>> = (0..n).map(|_| None).collect();
         grads[loss_node] = Some(Tensor::from_vec(&[1], vec![1.0]));
-        let mut opt_in_bwd = Duration::ZERO;
-        for i in (0..n).rev() {
-            let Some(gout) = grads[i].take() else { continue };
-            // Buggy ordering for the §B.2 demonstration: update params
-            // whose grad will complete at this node BEFORE the node's
-            // backward consumes their old value.
-            if bf && !self.cfg.race_guard {
-                let pids: Vec<ParamId> = self.graph.nodes[i].params.clone();
-                for pid in pids {
-                    self.counters.refcount_ops += 1;
-                    let unit = self.graph.store.unit_of(pid);
-                    self.count[unit] -= 1;
-                    if self.count[unit] == 0 && self.is_update_step(this_step) {
-                        // NOTE: grad not yet accumulated for this node —
-                        // the update consumes stale grads AND clobbers θ
-                        // before ∂L/∂x is computed. Deliberately wrong.
-                        opt_in_bwd += self.update_unit_inline(unit, this_step);
-                    }
-                }
-            }
-
-            let node = &self.graph.nodes[i];
-            let input_refs: Vec<&Tensor> = node
-                .inputs
-                .iter()
-                .map(|s| match s {
-                    Src::Node(id) => acts[*id].as_ref().expect("alive"),
-                    Src::External(e) => &externals[*e],
-                })
-                .collect();
-            let guards: Vec<_> = node
-                .params
-                .iter()
-                .map(|p| self.graph.store.get(*p).data.read().unwrap())
-                .collect();
-            let param_refs: Vec<&Tensor> = guards.iter().map(|g| &g.value).collect();
-            let og = node.op.backward(&gout, &input_refs, &param_refs, &ctxs[i]);
-            drop(guards);
-
-            // scatter input grads
-            for (k, src) in self.graph.nodes[i].inputs.iter().enumerate() {
-                if let (Src::Node(dst), Some(g)) = (src, og.inputs.get(k).and_then(|x| x.as_ref()))
-                {
-                    match &mut grads[*dst] {
-                        Some(acc) => acc.axpy(1.0, g),
-                        slot @ None => *slot = Some(g.clone()),
-                    }
-                }
-            }
-            // accumulate param grads (into the flat bucket arena when
-            // bucketed — same axpy, same order, bit-identical)
-            let pids: Vec<ParamId> = self.graph.nodes[i].params.clone();
-            for (k, pid) in pids.iter().enumerate() {
-                self.graph.store.accum_grad(*pid, &og.params[k]);
-            }
-            // Alg. 3 (correct ordering): refcount after this node's
-            // backward has consumed the old value. A bucket fires only
-            // when the counts of *all* its members have drained, so the
-            // §B.2 guard extends to buckets unchanged.
-            if bf && self.cfg.race_guard {
-                let boundary = self.is_update_step(this_step);
-                for pid in pids {
-                    self.counters.refcount_ops += 1;
-                    let unit = self.graph.store.unit_of(pid);
-                    self.count[unit] -= 1;
-                    if self.count[unit] == 0 && boundary {
-                        // `Some` only under DDP with chunked overlap on
-                        let chunks = self.comm_chunks_of(unit);
-                        if let Some(pool) = &self.pool {
-                            // one job per chunk when chunking is active
-                            // (the unit's collective splits so it starts
-                            // overlapping backward sooner and spreads
-                            // over workers), else one whole-unit job.
-                            // Chunk jobs share a completion countdown so
-                            // the last chunk's drain performs the
-                            // ZeRO-2/3 release mid-backward
-                            // (`pool::finish_chunk_job`).
-                            let (job_chunks, countdown) = match chunks {
-                                Some(cs) => {
-                                    let n = cs.len();
-                                    let cd = std::sync::atomic::AtomicUsize::new(n);
-                                    (
-                                        cs.into_iter().map(Some).collect::<Vec<_>>(),
-                                        Some(Arc::new(cd)),
-                                    )
-                                }
-                                None => (vec![None], None),
-                            };
-                            let ctx = self.comm.as_ref().cloned();
-                            for chunk in job_chunks {
-                                pool.submit(Job {
-                                    target: self.job_target(unit),
-                                    opt: Arc::clone(&self.opt),
-                                    hyper: self.hyper_at(this_step),
-                                    step: this_step,
-                                    scale: self.global_scale,
-                                    comm: ctx.as_ref().map(|ctx| CommPlan {
-                                        ctx: ctx.clone(),
-                                        unit,
-                                        chunk,
-                                        remaining: countdown.clone(),
-                                    }),
-                                });
-                                self.counters.updates_dispatched += 1;
-                            }
-                        } else if let Some(chunks) = chunks {
-                            opt_in_bwd +=
-                                self.comm_update_unit_chunked(unit, this_step, &chunks);
-                        } else if self.comm.is_some() {
-                            // schedule-integrated reduce: the collective
-                            // fires at the drain point, inline
-                            opt_in_bwd += self.comm_update_unit(unit, this_step, true);
-                        } else {
-                            opt_in_bwd += self.update_unit_inline(unit, this_step);
-                        }
-                    }
-                }
-            }
-        }
-        if let Some(pool) = &self.pool {
-            // job execution time before this instant ran while backward
-            // was still producing gradients for later units
-            let bwd_compute_end = Instant::now();
-            pool.wait_all();
-            opt_in_bwd += pool.take_busy();
-            for (start, end) in pool.take_spans() {
-                let capped = if end < bwd_compute_end { end } else { bwd_compute_end };
-                self.total_job_ns += end.duration_since(start).as_nanos() as u64;
-                self.overlapped_job_ns +=
-                    capped.saturating_duration_since(start).as_nanos() as u64;
-            }
-        }
+        let allow_updates = self.is_update_step(this_step);
+        let (mut opt_in_bwd, _) =
+            self.backward_walk(externals, &acts, &ctxs, &mut grads, this_step, allow_updates, None);
+        opt_in_bwd += self.drain_pool_overlap();
         // Backward-fusion update boundary: every unit's drain work —
         // whole-bucket job or last chunk job — has completed here, so
         // ZeRO-2/3 arenas must already be narrowed *mid-step*, before
@@ -1031,6 +985,447 @@ impl Executor {
         stats
     }
 
+    /// One 1F1B pipelined training step over `micros.len()` micro-
+    /// batches. The executor must hold a *stage graph*
+    /// ([`crate::graph::Graph::into_stage`]) whose boundary wiring is
+    /// described by `pipe`; `micros[m]` is micro-batch `m`'s full
+    /// external list (the original graph's externals plus a placeholder
+    /// in the recv slot, which this method overwrites with the received
+    /// boundary activation).
+    ///
+    /// Schedule per stage `s` of `S` over `M` micro-batches:
+    /// `min(S−1−s, M)` warmup forwards, then strict 1F1B alternation
+    /// (forward micro `f`, backward micro `b`) until every backward has
+    /// run. Activations cross boundary `b` as [`tags::act_fwd`]
+    /// messages, activation gradients return as [`tags::act_bwd`];
+    /// receives block on the bounded [`ActNet`], and the blocked time is
+    /// recorded as [`StepStats::p2p_wait`] — the measured bubble.
+    ///
+    /// Gradients accumulate **raw** (summed) across micro-backwards in
+    /// fixed micro order — the same convention as `accum_steps`
+    /// accumulation — and every update fires once, at the last
+    /// micro-batch: backward-fusion's refcount drains are gated to the
+    /// final micro-backward (where the drain sees the fully accumulated
+    /// contribution, so `--grad-elim` stays effective under
+    /// micro-batching), baseline updates in its standalone stage, and
+    /// forward-fusion reduces at end-of-step and applies lazily during
+    /// the next step's micro-0 forward. The reported loss is the mean
+    /// over micro losses (last stage; `NaN` elsewhere — the stage has no
+    /// loss node).
+    ///
+    /// With a [`CommCtx`] installed the updates reduce across the
+    /// *stage's* replica group exactly as in `train_step` — DP×ZeRO
+    /// composes per stage. Restrictions: `accum_steps` must be 1
+    /// (micro-batching subsumes it) and global-information optimizers
+    /// are rejected (per-stage updates cannot see a global norm).
+    pub fn pipeline_step(&mut self, micros: &[Vec<Tensor>], pipe: &PipelineCtx) -> StepStats {
+        let m_total = micros.len();
+        assert!(m_total >= 1, "pipeline_step: need at least one micro-batch");
+        assert_eq!(
+            self.cfg.accum_steps, 1,
+            "pipeline_step: accum_steps must be 1 (micro-batches subsume accumulation)"
+        );
+        assert!(
+            !self.opt.needs_global(),
+            "pipeline_step: optimizer '{}' needs global information, which per-stage \
+             updates cannot assemble",
+            self.opt.name()
+        );
+        assert!(pipe.stage < pipe.stages, "pipeline_step: stage out of range");
+        let mut stats = StepStats::default();
+        let bf = self.cfg.schedule == ScheduleKind::BackwardFusion;
+        let this_step = self.step + 1;
+        // message addressing: every stage enters the step with the same
+        // completed-step counter, so (step_key, micro) pairs match up
+        // across ranks without any shared counter
+        let step_key = self.step;
+
+        let mut saved: Vec<Option<(Vec<Tensor>, Vec<Option<Tensor>>, Vec<OpCtx>)>> =
+            (0..m_total).map(|_| None).collect();
+        let mut loss_sum = 0.0f64;
+        let warmup = (pipe.stages - 1 - pipe.stage).min(m_total);
+        let mut fwd_done = 0usize;
+        let mut bwd_done = 0usize;
+        for _ in 0..warmup {
+            saved[fwd_done] =
+                Some(self.pipeline_forward_micro(micros, fwd_done, pipe, step_key, &mut stats, &mut loss_sum));
+            fwd_done += 1;
+        }
+        while bwd_done < m_total {
+            if fwd_done < m_total {
+                saved[fwd_done] = Some(self.pipeline_forward_micro(
+                    micros,
+                    fwd_done,
+                    pipe,
+                    step_key,
+                    &mut stats,
+                    &mut loss_sum,
+                ));
+                fwd_done += 1;
+            }
+            let entry = saved[bwd_done].take().expect("1F1B: forward before backward");
+            self.pipeline_backward_micro(entry, bwd_done, m_total, pipe, step_key, this_step, &mut stats);
+            bwd_done += 1;
+        }
+        let t_drain = Instant::now();
+        stats.opt_in_backward += self.drain_pool_overlap();
+        if bf {
+            // every drain fired on the last micro-backward: ZeRO-2/3
+            // arenas are already narrowed here, mid-step
+            self.sample_arena_peak();
+            debug_assert!(self.count.iter().all(|c| *c == 0), "all counts drained");
+        }
+        stats.backward += t_drain.elapsed();
+
+        self.step = this_step;
+        match self.cfg.schedule {
+            ScheduleKind::Baseline => {
+                let t2 = Instant::now();
+                if self.comm.is_some() {
+                    for unit in 0..self.graph.store.num_units() {
+                        self.comm_update_unit(unit, this_step, true);
+                    }
+                } else {
+                    for unit in 0..self.graph.store.num_units() {
+                        self.update_unit_inline(unit, this_step);
+                    }
+                }
+                stats.optimizer = t2.elapsed();
+            }
+            ScheduleKind::ForwardFusion => {
+                if self.comm.is_some() {
+                    self.comm_reduce_all_grads();
+                }
+                self.has_pending = true;
+                self.updated.iter_mut().for_each(|f| *f = false);
+            }
+            ScheduleKind::BackwardFusion => {}
+        }
+        self.sharded_compact();
+        self.sample_arena_peak();
+        if self.graph.loss_node.is_some() {
+            let loss = (loss_sum / m_total as f64) as f32;
+            stats.loss = loss;
+            self.last_loss = loss;
+        } else {
+            stats.loss = f32::NAN;
+        }
+        stats
+    }
+
+    /// Forward of micro-batch `m` on this pipeline stage: receive the
+    /// boundary activation (stages > 0), run the stage forward (with FF
+    /// lazy updates firing during micro 0 only — `has_pending` drops
+    /// after micro 0's flush, so later micros read the same updated
+    /// values), accumulate the micro loss (last stage), and ship the
+    /// outgoing boundary activation. Returns what backward needs.
+    fn pipeline_forward_micro(
+        &mut self,
+        micros: &[Vec<Tensor>],
+        m: usize,
+        pipe: &PipelineCtx,
+        step_key: u64,
+        stats: &mut StepStats,
+        loss_sum: &mut f64,
+    ) -> (Vec<Tensor>, Vec<Option<Tensor>>, Vec<OpCtx>) {
+        let t0 = Instant::now();
+        let s = pipe.stage;
+        let mut externals = micros[m].to_vec();
+        if let Some(re) = pipe.recv_ext {
+            let tw = Instant::now();
+            let (shape, data) = pipe.net.recv(
+                tags::act_fwd(s - 1),
+                step_key,
+                m as u64,
+                pipe.rank(s - 1),
+                pipe.rank(s),
+            );
+            stats.p2p_wait += tw.elapsed();
+            externals[re] = Tensor::from_vec(&shape, data);
+        }
+        let (acts, ctxs, opt_fwd) = self.forward_pass(&externals, true);
+        stats.opt_in_forward += opt_fwd;
+        if m == 0 && self.cfg.schedule == ScheduleKind::ForwardFusion && self.has_pending {
+            // flush units this stage's forward never touches (same
+            // position as train_step's post-forward flush; micro 1+
+            // must read fully updated values)
+            let step = self.step;
+            for unit in 0..self.graph.store.num_units() {
+                if !self.updated[unit] {
+                    stats.opt_in_forward += self.ff_update_unit(unit, step);
+                    self.updated[unit] = true;
+                }
+            }
+            self.has_pending = false;
+        }
+        if let Some(l) = self.graph.loss_node {
+            *loss_sum += acts[l].as_ref().expect("loss act").data()[0] as f64;
+        }
+        if let Some(sn) = pipe.send_node {
+            let t = acts[sn].as_ref().expect("boundary act");
+            let tw = Instant::now();
+            pipe.net.send(
+                tags::act_fwd(s),
+                step_key,
+                m as u64,
+                pipe.rank(s),
+                pipe.rank(s + 1),
+                t.shape(),
+                t.data().to_vec(),
+            );
+            stats.p2p_wait += tw.elapsed();
+        }
+        stats.forward += t0.elapsed();
+        (externals, acts, ctxs)
+    }
+
+    /// Backward of micro-batch `m`: seed ∂L (last stage) or receive the
+    /// boundary activation gradient, run the stage's backward walk with
+    /// drain firing gated to the last micro-batch, and ship the captured
+    /// incoming-boundary gradient upstream.
+    #[allow(clippy::too_many_arguments)]
+    fn pipeline_backward_micro(
+        &mut self,
+        entry: (Vec<Tensor>, Vec<Option<Tensor>>, Vec<OpCtx>),
+        m: usize,
+        m_total: usize,
+        pipe: &PipelineCtx,
+        step_key: u64,
+        this_step: u64,
+        stats: &mut StepStats,
+    ) {
+        let t0 = Instant::now();
+        let s = pipe.stage;
+        let (externals, acts, ctxs) = entry;
+        let n = self.graph.nodes.len();
+        let mut grads: Vec<Option<Tensor>> = (0..n).map(|_| None).collect();
+        if let Some(l) = self.graph.loss_node {
+            // raw seed per micro: micro grads sum, exactly like
+            // accum_steps accumulation
+            grads[l] = Some(Tensor::from_vec(&[1], vec![1.0]));
+        }
+        if let Some(sn) = pipe.send_node {
+            let tw = Instant::now();
+            let (shape, data) = pipe.net.recv(
+                tags::act_bwd(s),
+                step_key,
+                m as u64,
+                pipe.rank(s + 1),
+                pipe.rank(s),
+            );
+            stats.p2p_wait += tw.elapsed();
+            grads[sn] = Some(Tensor::from_vec(&shape, data));
+        }
+        let allow_updates = m + 1 == m_total;
+        let (opt_bwd, captured) = self.backward_walk(
+            &externals,
+            &acts,
+            &ctxs,
+            &mut grads,
+            this_step,
+            allow_updates,
+            pipe.recv_ext,
+        );
+        stats.opt_in_backward += opt_bwd;
+        if pipe.recv_ext.is_some() {
+            let g = captured.expect("pipeline: boundary activation has no consumers");
+            let shape = g.shape().to_vec();
+            let tw = Instant::now();
+            pipe.net.send(
+                tags::act_bwd(s - 1),
+                step_key,
+                m as u64,
+                pipe.rank(s),
+                pipe.rank(s - 1),
+                &shape,
+                g.into_vec(),
+            );
+            stats.p2p_wait += tw.elapsed();
+        }
+        stats.backward += t0.elapsed();
+    }
+
+    /// The reverse node walk of one backward pass: compute each node's
+    /// backward, scatter input grads, accumulate parameter grads, and
+    /// run the backward-fusion drain machinery. Factored out of
+    /// [`Executor::train_step`] so the pipeline's per-micro-batch
+    /// backwards reuse the *same* drain state machine.
+    ///
+    /// `allow_updates` gates drain-point firing (and the standalone-arm
+    /// boundary in the caller): `train_step` passes its gradient-
+    /// accumulation boundary; the 1F1B schedule passes `true` only on
+    /// the **last** micro-batch, where the refcounts drain onto the
+    /// fully accumulated gradients. Refcounts still tick on every
+    /// micro-backward — they transiently hit 0 at micro boundaries —
+    /// but a suppressed drain leaves the accumulated gradient in place
+    /// for the next micro-forward to re-count.
+    ///
+    /// `capture_ext`: collect ∂L/∂(external `e`) — the activation
+    /// gradient a pipeline stage sends back across its incoming
+    /// boundary. Accumulated over every consumer of that external in
+    /// reverse node order (the same association the node-grad scatter
+    /// uses), returned as the second tuple element.
+    #[allow(clippy::too_many_arguments)]
+    fn backward_walk(
+        &mut self,
+        externals: &[Tensor],
+        acts: &[Option<Tensor>],
+        ctxs: &[OpCtx],
+        grads: &mut [Option<Tensor>],
+        this_step: u64,
+        allow_updates: bool,
+        capture_ext: Option<usize>,
+    ) -> (Duration, Option<Tensor>) {
+        let bf = self.cfg.schedule == ScheduleKind::BackwardFusion;
+        let n = self.graph.nodes.len();
+        let mut opt_in_bwd = Duration::ZERO;
+        let mut captured: Option<Tensor> = None;
+        for i in (0..n).rev() {
+            let Some(gout) = grads[i].take() else { continue };
+            // Buggy ordering for the §B.2 demonstration: update params
+            // whose grad will complete at this node BEFORE the node's
+            // backward consumes their old value.
+            if bf && !self.cfg.race_guard {
+                let pids: Vec<ParamId> = self.graph.nodes[i].params.clone();
+                for pid in pids {
+                    self.counters.refcount_ops += 1;
+                    let unit = self.graph.store.unit_of(pid);
+                    self.count[unit] -= 1;
+                    if self.count[unit] == 0 && allow_updates {
+                        // NOTE: grad not yet accumulated for this node —
+                        // the update consumes stale grads AND clobbers θ
+                        // before ∂L/∂x is computed. Deliberately wrong.
+                        opt_in_bwd += self.update_unit_inline(unit, this_step);
+                    }
+                }
+            }
+
+            let node = &self.graph.nodes[i];
+            let input_refs: Vec<&Tensor> = node
+                .inputs
+                .iter()
+                .map(|s| match s {
+                    Src::Node(id) => acts[*id].as_ref().expect("alive"),
+                    Src::External(e) => &externals[*e],
+                })
+                .collect();
+            let guards: Vec<_> = node
+                .params
+                .iter()
+                .map(|p| self.graph.store.get(*p).data.read().unwrap())
+                .collect();
+            let param_refs: Vec<&Tensor> = guards.iter().map(|g| &g.value).collect();
+            let og = node.op.backward(&gout, &input_refs, &param_refs, &ctxs[i]);
+            drop(guards);
+
+            // scatter input grads (and capture the boundary external's)
+            for (k, src) in self.graph.nodes[i].inputs.iter().enumerate() {
+                match (src, og.inputs.get(k).and_then(|x| x.as_ref())) {
+                    (Src::Node(dst), Some(g)) => match &mut grads[*dst] {
+                        Some(acc) => acc.axpy(1.0, g),
+                        slot @ None => *slot = Some(g.clone()),
+                    },
+                    (Src::External(e), Some(g)) if capture_ext == Some(*e) => {
+                        match &mut captured {
+                            Some(acc) => acc.axpy(1.0, g),
+                            slot @ None => *slot = Some(g.clone()),
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            // accumulate param grads (into the flat bucket arena when
+            // bucketed — same axpy, same order, bit-identical)
+            let pids: Vec<ParamId> = self.graph.nodes[i].params.clone();
+            for (k, pid) in pids.iter().enumerate() {
+                self.graph.store.accum_grad(*pid, &og.params[k]);
+            }
+            // Alg. 3 (correct ordering): refcount after this node's
+            // backward has consumed the old value. A bucket fires only
+            // when the counts of *all* its members have drained, so the
+            // §B.2 guard extends to buckets unchanged.
+            if bf && self.cfg.race_guard {
+                for pid in pids {
+                    self.counters.refcount_ops += 1;
+                    let unit = self.graph.store.unit_of(pid);
+                    self.count[unit] -= 1;
+                    if self.count[unit] == 0 && allow_updates {
+                        // `Some` only under DDP with chunked overlap on
+                        let chunks = self.comm_chunks_of(unit);
+                        if let Some(pool) = &self.pool {
+                            // one job per chunk when chunking is active
+                            // (the unit's collective splits so it starts
+                            // overlapping backward sooner and spreads
+                            // over workers), else one whole-unit job.
+                            // Chunk jobs share a completion countdown so
+                            // the last chunk's drain performs the
+                            // ZeRO-2/3 release mid-backward
+                            // (`pool::finish_chunk_job`).
+                            let (job_chunks, countdown) = match chunks {
+                                Some(cs) => {
+                                    let n = cs.len();
+                                    let cd = std::sync::atomic::AtomicUsize::new(n);
+                                    (
+                                        cs.into_iter().map(Some).collect::<Vec<_>>(),
+                                        Some(Arc::new(cd)),
+                                    )
+                                }
+                                None => (vec![None], None),
+                            };
+                            let ctx = self.comm.as_ref().cloned();
+                            for chunk in job_chunks {
+                                pool.submit(Job {
+                                    target: self.job_target(unit),
+                                    opt: Arc::clone(&self.opt),
+                                    hyper: self.hyper_at(this_step),
+                                    step: this_step,
+                                    scale: self.global_scale,
+                                    comm: ctx.as_ref().map(|ctx| CommPlan {
+                                        ctx: ctx.clone(),
+                                        unit,
+                                        chunk,
+                                        remaining: countdown.clone(),
+                                    }),
+                                });
+                                self.counters.updates_dispatched += 1;
+                            }
+                        } else if let Some(chunks) = chunks {
+                            opt_in_bwd +=
+                                self.comm_update_unit_chunked(unit, this_step, &chunks);
+                        } else if self.comm.is_some() {
+                            // schedule-integrated reduce: the collective
+                            // fires at the drain point, inline
+                            opt_in_bwd += self.comm_update_unit(unit, this_step, true);
+                        } else {
+                            opt_in_bwd += self.update_unit_inline(unit, this_step);
+                        }
+                    }
+                }
+            }
+        }
+        (opt_in_bwd, captured)
+    }
+
+    /// Wait out the update pool and fold its busy time / overlap spans
+    /// into the step accounting. Job execution time before this
+    /// instant ran while backward was still producing gradients for
+    /// later units — the measured overlap of the paper's Fig. 1d.
+    fn drain_pool_overlap(&mut self) -> Duration {
+        let mut opt_in_bwd = Duration::ZERO;
+        if let Some(pool) = &self.pool {
+            let bwd_compute_end = Instant::now();
+            pool.wait_all();
+            opt_in_bwd += pool.take_busy();
+            for (start, end) in pool.take_spans() {
+                let capped = if end < bwd_compute_end { end } else { bwd_compute_end };
+                self.total_job_ns += end.duration_since(start).as_nanos() as u64;
+                self.overlapped_job_ns +=
+                    capped.saturating_duration_since(start).as_nanos() as u64;
+            }
+        }
+        opt_in_bwd
+    }
+
     /// Fold the store's current arena residency into the step-boundary
     /// high-water marks ([`ArenaPeak`]).
     fn sample_arena_peak(&mut self) {
@@ -1066,6 +1461,25 @@ impl Executor {
             // the peaks so `DdpReport` sees the post-flush residency
             self.sample_arena_peak();
         }
+    }
+
+    /// Export every parameter as a `(name, value, optimizer-state)`
+    /// entry — the per-stage half of a merged pipeline checkpoint
+    /// ([`crate::checkpoint::save_parts`]). Mirrors
+    /// [`crate::checkpoint::save`]: FF pending updates are flushed first
+    /// so the entries are schedule-independent; ZeRO-sharded runs call
+    /// [`Executor::prepare_checkpoint`] before exporting, exactly as the
+    /// single-file save path does.
+    pub fn export_entries(&mut self) -> Vec<(String, Tensor, Vec<Tensor>)> {
+        self.flush_pending();
+        (0..self.graph.store.len())
+            .map(|pid| {
+                let state = self.graph.store.export_state(pid);
+                let p = self.graph.store.get(pid);
+                let pd = p.data.read().unwrap();
+                (pd.name.clone(), pd.value.clone(), state)
+            })
+            .collect()
     }
 
     /// Pure forward evaluation (no updates, no bookkeeping).
@@ -1446,6 +1860,172 @@ mod tests {
         let d = data(6);
         ex.train_step(&d);
         assert_eq!(ex.counters.updates_dispatched, 2, "one dispatch per bucket");
+    }
+
+    /// Split each external's rows into `m` contiguous micro-batches and
+    /// append the stage recv-slot placeholder.
+    fn micros_of(d: &[Tensor], m: usize) -> Vec<Vec<Tensor>> {
+        let rows = d[0].shape()[0];
+        assert_eq!(rows % m, 0, "test data must split evenly");
+        let rm = rows / m;
+        (0..m)
+            .map(|k| {
+                let mut v: Vec<Tensor> = d
+                    .iter()
+                    .map(|t| {
+                        let c = t.shape()[1];
+                        Tensor::from_vec(&[rm, c], t.data()[k * rm * c..(k + 1) * rm * c].to_vec())
+                    })
+                    .collect();
+                v.push(Tensor::zeros(&[1]));
+                v
+            })
+            .collect()
+    }
+
+    fn single_stage_pipe(micro: u64) -> PipelineCtx {
+        let stats = Arc::new(crate::comm::CommStats::default());
+        PipelineCtx {
+            net: Arc::new(ActNet::new(1, 2, micro, stats)),
+            stage: 0,
+            stages: 1,
+            dp: 1,
+            dp_index: 0,
+            recv_ext: None,
+            send_node: None,
+        }
+    }
+
+    /// S=1, M=1 `pipeline_step` is the same computation as `train_step`
+    /// — losses and parameters bit-identical, under every schedule.
+    #[test]
+    fn pipeline_single_stage_matches_train_step() {
+        for kind in ScheduleKind::ALL {
+            let d = data(5);
+            let cfg = ExecConfig {
+                schedule: kind,
+                bucket_cap_bytes: Some(600),
+                ..Default::default()
+            };
+            let mut exr =
+                Executor::new(mlp_graph(77, 3), Box::new(SgdMomentum), Hyper::default(), cfg.clone())
+                    .unwrap();
+            let (sg, info) = mlp_graph(77, 3).into_stage(&[], 0);
+            let mut exp =
+                Executor::new(sg, Box::new(SgdMomentum), Hyper::default(), cfg).unwrap();
+            let mut pipe = single_stage_pipe(1);
+            pipe.recv_ext = info.recv_ext;
+            pipe.send_node = info.send_node;
+            let micros = micros_of(&d, 1);
+            for step in 0..5 {
+                let a = exr.train_step(&d).loss;
+                let b = exp.pipeline_step(&micros, &pipe).loss;
+                assert_eq!(a, b, "{kind:?} step {step}");
+            }
+            exr.flush_pending();
+            exp.flush_pending();
+            for (i, (a, b)) in exr
+                .graph
+                .store
+                .snapshot()
+                .iter()
+                .zip(exp.graph.store.snapshot().iter())
+                .enumerate()
+            {
+                assert_eq!(a.max_abs_diff(b), 0.0, "{kind:?} param {i}");
+            }
+        }
+    }
+
+    /// Two pipeline stages over the activation network train
+    /// bit-identically to the single-stage run with the same
+    /// micro-batches — the 1F1B drain gating and boundary grads are
+    /// exact.
+    #[test]
+    fn pipeline_two_stage_matches_single_stage() {
+        let d = data(5);
+        let micros = micros_of(&d, 2);
+        let reference = {
+            let (sg, info) = mlp_graph(77, 3).into_stage(&[], 0);
+            let cfg = ExecConfig {
+                schedule: ScheduleKind::BackwardFusion,
+                bucket_cap_bytes: Some(600),
+                ..Default::default()
+            };
+            let mut ex = Executor::new(sg, Box::new(SgdMomentum), Hyper::default(), cfg).unwrap();
+            let mut pipe = single_stage_pipe(2);
+            pipe.recv_ext = info.recv_ext;
+            pipe.send_node = info.send_node;
+            for _ in 0..4 {
+                ex.pipeline_step(&micros, &pipe);
+            }
+            ex.flush_pending();
+            ex.graph.store.snapshot()
+        };
+        let shapes: Vec<Vec<usize>> = d.iter().map(|t| t.shape().to_vec()).collect();
+        let cuts = mlp_graph(77, 3).pipeline_cuts(2, &shapes);
+        let stats = Arc::new(crate::comm::CommStats::default());
+        let net = Arc::new(ActNet::new(2, 3, 2, stats));
+        let snaps: Vec<Vec<Tensor>> = std::thread::scope(|sc| {
+            let handles: Vec<_> = (0..2usize)
+                .map(|s| {
+                    let net = Arc::clone(&net);
+                    let cuts = cuts.clone();
+                    let micros = micros.clone();
+                    sc.spawn(move || {
+                        let (sg, info) = mlp_graph(77, 3).into_stage(&cuts, s);
+                        let cfg = ExecConfig {
+                            schedule: ScheduleKind::BackwardFusion,
+                            bucket_cap_bytes: Some(600),
+                            ..Default::default()
+                        };
+                        let mut ex =
+                            Executor::new(sg, Box::new(SgdMomentum), Hyper::default(), cfg)
+                                .unwrap();
+                        let pipe = PipelineCtx {
+                            net,
+                            stage: s,
+                            stages: 2,
+                            dp: 1,
+                            dp_index: 0,
+                            recv_ext: info.recv_ext,
+                            send_node: info.send_node,
+                        };
+                        for _ in 0..4 {
+                            ex.pipeline_step(&micros, &pipe);
+                        }
+                        ex.flush_pending();
+                        ex.graph.store.snapshot()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        // stage order concatenates back to original pid order
+        let merged: Vec<Tensor> = snaps.into_iter().flatten().collect();
+        assert_eq!(merged.len(), reference.len());
+        for (i, (a, b)) in reference.iter().zip(merged.iter()).enumerate() {
+            assert_eq!(a.max_abs_diff(b), 0.0, "param {i} bit-identical across S=2");
+        }
+    }
+
+    /// The grad-elim gate: plain accumulation disarms it (with a note);
+    /// pipeline micro-batching does not.
+    #[test]
+    fn grad_elim_gate_accum_only() {
+        let base = ExecConfig {
+            schedule: ScheduleKind::BackwardFusion,
+            bucket_cap_bytes: Some(600),
+            grad_elim: true,
+            dtype: crate::tensor::dtype::Dtype::F32,
+            ..Default::default()
+        };
+        let accum = ExecConfig { accum_steps: 3, ..base.clone() };
+        assert!(!accum.grad_elim_effective());
+        assert!(accum.grad_elim_gate_note().unwrap().contains("accum_steps"));
+        let micro = ExecConfig { micro_batches: 4, ..base };
+        assert!(micro.grad_elim_effective(), "micro-batching must not gate elimination");
+        assert!(micro.grad_elim_gate_note().is_none());
     }
 
     #[test]

@@ -645,6 +645,255 @@ impl Graph {
         total
     }
 
+    /// Per-node forward FLOPs for given external input shapes, floored
+    /// at 1 so cost-free ops (activations, reshapes) still carry
+    /// schedulable weight in the pipeline cut chooser.
+    pub fn node_flops(&self, ext_shapes: &[Vec<usize>]) -> Vec<u64> {
+        let shapes = self.infer_shapes(ext_shapes);
+        self.nodes
+            .iter()
+            .map(|node| {
+                let in_shapes: Vec<&[usize]> = node
+                    .inputs
+                    .iter()
+                    .map(|s| match s {
+                        Src::Node(n) => shapes[*n].as_slice(),
+                        Src::External(e) => ext_shapes[*e].as_slice(),
+                    })
+                    .collect();
+                let p_shapes: Vec<Vec<usize>> = node
+                    .params
+                    .iter()
+                    .map(|p| self.store.get(*p).data.read().unwrap().value.shape().to_vec())
+                    .collect();
+                let p_refs: Vec<&[usize]> = p_shapes.iter().map(|v| v.as_slice()).collect();
+                node.op.flops(&in_shapes, &p_refs).max(1)
+            })
+            .collect()
+    }
+
+    /// True when a pipeline cut after node `c` is valid: exactly one
+    /// producer at or before `c` feeds any node after `c` (the single
+    /// activation tensor that crosses the boundary), no parameter is
+    /// used on both sides (cross-stage weight tying cannot be expressed
+    /// — each stage owns its params), and the loss sits after the cut
+    /// (only the last stage computes it).
+    fn cut_valid(&self, c: usize) -> bool {
+        let mut crossing: Option<NodeId> = None;
+        for node in &self.nodes[c + 1..] {
+            for src in &node.inputs {
+                if let Src::Node(j) = src {
+                    if *j <= c {
+                        match crossing {
+                            None => crossing = Some(*j),
+                            Some(k) if k == *j => {}
+                            Some(_) => return false,
+                        }
+                    }
+                }
+            }
+        }
+        if crossing.is_none() {
+            return false;
+        }
+        for uses in self.param_uses() {
+            if uses.iter().any(|&n| n <= c) && uses.iter().any(|&n| n > c) {
+                return false;
+            }
+        }
+        match self.loss_node {
+            Some(l) => l > c,
+            None => true,
+        }
+    }
+
+    /// Choose `stages - 1` pipeline cut points (node indices; stage `s`
+    /// owns nodes `(cuts[s-1], cuts[s]]`) balancing per-stage forward
+    /// FLOPs: among all valid cut combinations ([`Graph::cut_valid`]),
+    /// minimize the maximum per-stage FLOP sum — the same per-unit cost
+    /// model memsim prices, so the chooser and the simulator agree on
+    /// what "balanced" means. Exhaustive DP over valid cut positions
+    /// (graphs here are layer-sequential; the valid-cut set is small).
+    ///
+    /// Panics when the graph does not admit `stages` stages.
+    pub fn pipeline_cuts(&self, stages: usize, ext_shapes: &[Vec<usize>]) -> Vec<usize> {
+        assert!(stages >= 1, "pipeline_cuts: need at least one stage");
+        if stages == 1 {
+            return Vec::new();
+        }
+        let n = self.nodes.len();
+        let cost = self.node_flops(ext_shapes);
+        let mut prefix = vec![0u64; n + 1];
+        for i in 0..n {
+            prefix[i + 1] = prefix[i] + cost[i];
+        }
+        let seg = |a: usize, b: usize| prefix[b] - prefix[a]; // nodes [a, b)
+        let valid: Vec<usize> = (0..n.saturating_sub(1)).filter(|&c| self.cut_valid(c)).collect();
+        assert!(
+            valid.len() >= stages - 1,
+            "pipeline_cuts: graph '{}' admits only {} cut points, need {} for {} stages",
+            self.name,
+            valid.len(),
+            stages - 1,
+            stages
+        );
+        // dp[k][i]: minimal max-stage cost using k cuts, the last at
+        // valid[i]; parent pointers reconstruct the argmin.
+        let m = valid.len();
+        let mut dp = vec![vec![u64::MAX; m]; stages - 1];
+        let mut par = vec![vec![usize::MAX; m]; stages - 1];
+        for (i, &c) in valid.iter().enumerate() {
+            dp[0][i] = seg(0, c + 1);
+        }
+        for k in 1..stages - 1 {
+            for (i, &c) in valid.iter().enumerate() {
+                for j in 0..i {
+                    if dp[k - 1][j] == u64::MAX || valid[j] >= c {
+                        continue;
+                    }
+                    let v = dp[k - 1][j].max(seg(valid[j] + 1, c + 1));
+                    if v < dp[k][i] {
+                        dp[k][i] = v;
+                        par[k][i] = j;
+                    }
+                }
+            }
+        }
+        let mut best = u64::MAX;
+        let mut last = usize::MAX;
+        for (i, &c) in valid.iter().enumerate() {
+            if dp[stages - 2][i] == u64::MAX {
+                continue;
+            }
+            let v = dp[stages - 2][i].max(seg(c + 1, n));
+            if v < best {
+                best = v;
+                last = i;
+            }
+        }
+        assert!(last != usize::MAX, "pipeline_cuts: no feasible cut combination");
+        let mut cuts = Vec::with_capacity(stages - 1);
+        let mut i = last;
+        for k in (0..stages - 1).rev() {
+            cuts.push(valid[i]);
+            i = par[k][i];
+        }
+        cuts.reverse();
+        cuts
+    }
+
+    /// Carve stage `stage` out of this graph under `cuts`
+    /// ([`Graph::pipeline_cuts`]), consuming the graph (ops are not
+    /// clonable; each rank builds the full graph and keeps only its
+    /// slice). The stage graph:
+    ///
+    /// - owns nodes `(cuts[stage-1], cuts[stage]]`, re-indexed from 0;
+    /// - keeps the full graph's external-input positions and appends
+    ///   **one extra external slot** that the incoming boundary
+    ///   activation is injected into ([`StageInfo::recv_ext`], `Some`
+    ///   for stages > 0) — every stage's `num_externals` is the full
+    ///   graph's plus one, so callers pass the full external list every
+    ///   micro-batch plus a placeholder in the recv slot;
+    /// - holds exactly the parameters its nodes use, pushed in
+    ///   ascending original-id order as the **same** shared [`ParamRef`]
+    ///   cells (checkpoint identity is by name; stage order concatenates
+    ///   back to the original id order because stages are contiguous
+    ///   node ranges);
+    /// - carries the loss node only on the last stage.
+    pub fn into_stage(self, cuts: &[usize], stage: usize) -> (Graph, StageInfo) {
+        let stages = cuts.len() + 1;
+        assert!(stage < stages, "into_stage: stage {stage} of {stages}");
+        assert!(
+            self.store.buckets.is_none(),
+            "into_stage: carve stages before bucketize()"
+        );
+        let n = self.nodes.len();
+        let start = if stage == 0 { 0 } else { cuts[stage - 1] + 1 };
+        let end = if stage == stages - 1 { n } else { cuts[stage] + 1 };
+        assert!(start < end, "into_stage: empty stage {stage}");
+
+        // outgoing boundary producer (local id), before nodes move
+        let send_node = if stage == stages - 1 {
+            None
+        } else {
+            let c = cuts[stage];
+            let mut owner: Option<NodeId> = None;
+            for node in &self.nodes[c + 1..] {
+                for src in &node.inputs {
+                    if let Src::Node(j) = src {
+                        if *j <= c {
+                            assert!(
+                                owner.is_none() || owner == Some(*j),
+                                "into_stage: multiple activations cross cut {c}"
+                            );
+                            owner = Some(*j);
+                        }
+                    }
+                }
+            }
+            let j = owner.expect("into_stage: nothing crosses the cut");
+            assert!(j >= start, "into_stage: cut {c} crossed from before stage {stage}");
+            Some(j - start)
+        };
+
+        // parameters this stage touches, ascending original id; assert
+        // no parameter is shared with another stage
+        let uses = self.param_uses();
+        let mut pid_map = vec![usize::MAX; self.store.len()];
+        let mut stage_params: Vec<ParamRef> = Vec::new();
+        for (pid, u) in uses.iter().enumerate() {
+            let inside = u.iter().any(|&nid| nid >= start && nid < end);
+            if !inside {
+                continue;
+            }
+            assert!(
+                u.iter().all(|&nid| nid >= start && nid < end),
+                "into_stage: parameter {pid} used across stage boundaries"
+            );
+            pid_map[pid] = stage_params.len();
+            stage_params.push(Arc::clone(&self.store.params[pid]));
+        }
+
+        let recv_ext = if stage == 0 { None } else { Some(self.num_externals) };
+        let mut nodes = Vec::with_capacity(end - start);
+        for (off, node) in self.nodes.into_iter().enumerate().skip(start).take(end - start) {
+            let inputs = node
+                .inputs
+                .into_iter()
+                .map(|src| match src {
+                    Src::Node(j) if j >= start => Src::Node(j - start),
+                    Src::Node(_) => Src::External(
+                        recv_ext.expect("into_stage: stage 0 cannot receive activations"),
+                    ),
+                    Src::External(e) => Src::External(e),
+                })
+                .collect();
+            let params = node.params.iter().map(|p| pid_map[*p]).collect();
+            nodes.push(Node { op: node.op, inputs, params, label: node.label });
+            let _ = off;
+        }
+
+        let loss_node = self.loss_node.and_then(|l| {
+            if l >= start && l < end {
+                Some(l - start)
+            } else {
+                None
+            }
+        });
+        if stage == stages - 1 {
+            assert!(loss_node.is_some(), "into_stage: last stage must own the loss");
+        }
+
+        let g = Graph {
+            nodes,
+            store: ParamStore { params: stage_params, buckets: None },
+            loss_node,
+            num_externals: self.num_externals + 1,
+            name: format!("{}@stage{}/{}", self.name, stage, stages),
+        };
+        (g, StageInfo { recv_ext, send_node })
+    }
+
     /// Shape-infer every node output from external shapes.
     pub fn infer_shapes(&self, ext_shapes: &[Vec<usize>]) -> Vec<Vec<usize>> {
         let mut shapes: Vec<Vec<usize>> = Vec::with_capacity(self.nodes.len());
@@ -667,6 +916,17 @@ impl Graph {
         }
         shapes
     }
+}
+
+/// Boundary wiring of one pipeline stage ([`Graph::into_stage`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageInfo {
+    /// External slot the incoming boundary activation is injected into
+    /// (`None` on stage 0). Always `full_graph.num_externals` when set.
+    pub recv_ext: Option<usize>,
+    /// Stage-local node whose output crosses the outgoing boundary
+    /// (`None` on the last stage).
+    pub send_node: Option<NodeId>,
 }
 
 /// The three execution schedules of the paper (Fig. 1 b/c/d).
@@ -777,6 +1037,64 @@ mod tests {
         let g = tiny_graph();
         assert_eq!(g.store.num_scalars(), 4 * 8 + 8 * 2);
         assert!((g.avg_params_per_layer() - 24.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pipeline_cuts_are_valid_and_balanced() {
+        let g = tiny_graph();
+        let shapes = vec![vec![3, 4], vec![3, 2]];
+        // every inter-node gap in the chain graph is a valid cut
+        assert!(g.cut_valid(0));
+        assert!(g.cut_valid(1));
+        assert!(g.cut_valid(2));
+        let cuts = g.pipeline_cuts(2, &shapes);
+        assert_eq!(cuts.len(), 1);
+        // fc1 (3×4×8 matmul) outweighs fc2 (3×8×2) + mse, so the
+        // FLOP-balancing cut lands right after fc1's relu at the latest
+        let flops = g.node_flops(&shapes);
+        let total: u64 = flops.iter().sum();
+        let left: u64 = flops[..=cuts[0]].iter().sum();
+        let span = left.max(total - left);
+        for c in [0usize, 1, 2] {
+            let l: u64 = flops[..=c].iter().sum();
+            assert!(span <= l.max(total - l), "cut {c} would balance better");
+        }
+        let cuts3 = g.pipeline_cuts(3, &shapes);
+        assert_eq!(cuts3.len(), 2);
+        assert!(cuts3[0] < cuts3[1]);
+    }
+
+    #[test]
+    fn into_stage_rewires_boundary() {
+        let g = tiny_graph();
+        let cuts = vec![1usize]; // stage 0 = {fc1, relu}, stage 1 = {fc2, mse}
+        let g2 = tiny_graph();
+        let (s0, i0) = g.into_stage(&cuts, 0);
+        let (s1, i1) = g2.into_stage(&cuts, 1);
+        assert_eq!(i0.recv_ext, None);
+        assert_eq!(i0.send_node, Some(1)); // relu, locally re-indexed
+        assert_eq!(i1.recv_ext, Some(2)); // full graph had 2 externals
+        assert_eq!(i1.send_node, None);
+        assert_eq!(s0.nodes.len(), 2);
+        assert_eq!(s1.nodes.len(), 2);
+        assert_eq!(s0.num_externals, 3);
+        assert_eq!(s1.num_externals, 3);
+        assert_eq!(s0.loss_node, None);
+        assert_eq!(s1.loss_node, Some(1));
+        // stage 1's fc2 reads the injected activation slot
+        assert_eq!(s1.nodes[0].inputs, vec![Src::External(2)]);
+        // stage stores hold the original Arc cells, one param each
+        assert_eq!(s0.store.len(), 1);
+        assert_eq!(s1.store.len(), 1);
+        assert_eq!(s0.store.get(0).data.read().unwrap().name, "w1");
+        assert_eq!(s1.store.get(0).data.read().unwrap().name, "w2");
+    }
+
+    #[test]
+    #[should_panic(expected = "admits only")]
+    fn pipeline_cuts_rejects_too_many_stages() {
+        let g = tiny_graph();
+        g.pipeline_cuts(9, &[vec![3, 4], vec![3, 2]]);
     }
 
     #[test]

@@ -226,6 +226,66 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             base.total_s / r.total_s
         );
     }
+    // `--pipeline-stages S` (× `--micro-batches M`, `--world dp`): the
+    // DP×PP plan table — 1F1B span, predicted per-stage bubble
+    // fractions, and exact activation wire bytes per step, from the
+    // memsim closed forms the measured `DdpReport` bubbles must track
+    let pstages = args.usize_or("pipeline-stages", 1);
+    if pstages > 1 {
+        let micro = args.usize_or("micro-batches", 4).max(1);
+        let dp = args.usize_or("world", 1).max(1);
+        let (grad_elim, dt) = precision_from(args)?;
+        let pshard = shard_stage_from(args)?;
+        let mut pcap = bucket_cap_from(args);
+        if pshard.sharded() && pcap.is_none() {
+            pcap = Some(1 << 20);
+            println!(
+                "(--shard-stage prediction needs bucketed units; defaulting --bucket-cap to 1 MiB)"
+            );
+        }
+        let palgo: CommAlgo = match args.str_or("algo", "flat").as_str() {
+            "all" | "auto" => CommAlgo::Flat,
+            a => a.parse().map_err(|e: String| anyhow::anyhow!(e))?,
+        };
+        let ddp =
+            DdpSimConfig { algo: palgo, bucket_cap_bytes: pcap, stage: pshard, grad_elim, dtype: dt };
+        let kind = ScheduleKind::BackwardFusion;
+        println!(
+            "\nDP×PP prediction ({}, dp={dp}, algo={}): 1F1B span / step, worst-stage bubble, \
+             activation wire",
+            kind.label(),
+            palgo.label()
+        );
+        println!("    S    M    span ms    step ms   bubble(max)    act KiB");
+        let mut micros: Vec<usize> = vec![1, 2, 4, micro];
+        micros.sort_unstable();
+        micros.dedup();
+        for s in 1..=pstages {
+            for &m_micro in &micros {
+                let p = memsim::simulate_pipeline(
+                    &machine, &net, &opt, batch, kind, ddp, s, m_micro, dp,
+                );
+                let worst = p.bubble.iter().cloned().fold(0.0, f64::max);
+                println!(
+                    "  {s:>3} {m_micro:>4} {:>10.2} {:>10.2} {:>12.1}% {:>10.1}",
+                    p.span_s * 1e3,
+                    p.step_s * 1e3,
+                    worst * 100.0,
+                    p.act_bytes as f64 / 1024.0
+                );
+            }
+        }
+        let p = memsim::simulate_pipeline(&machine, &net, &opt, batch, kind, ddp, pstages, micro, dp);
+        let busy: Vec<String> = p.per_stage_s.iter().map(|t| format!("{:.2}", t * 1e3)).collect();
+        let bub: Vec<String> = p.bubble.iter().map(|f| format!("{:.1}%", f * 100.0)).collect();
+        println!(
+            "  S={pstages} M={micro}: cuts after layers {:?} | per-stage busy ms [{}] | \
+             per-stage bubble [{}]",
+            p.cuts,
+            busy.join(", "),
+            bub.join(", ")
+        );
+    }
     // --world W > 1: the cluster-scaling prediction (memsim comm model)
     let world = args.usize_or("world", 1);
     if world > 1 {
@@ -473,6 +533,12 @@ fn cmd_ddp(args: &Args) -> anyhow::Result<()> {
         bucket_cap = Some(1 << 20);
         println!("(--dtype bf16 needs bucketed storage; defaulting --bucket-cap to 1 MiB)");
     }
+    // `--pipeline-stages S` × `--micro-batches M` = 1F1B pipeline
+    // parallelism over the p2p mailbox; `--world` becomes the
+    // data-parallel width of each stage's replica group (total threads
+    // S × world). The local batch must divide evenly by M.
+    let pstages = args.usize_or("pipeline-stages", 1).max(1);
+    let micro = args.usize_or("micro-batches", 1).max(1) as u64;
     // `--calibrate [N]` = N warmup steps issue probe collectives, fit an
     // interconnect to the measured blocked time, and (on `--algo auto`)
     // re-plan against the fitted model + measured backward mid-run. A
@@ -495,7 +561,8 @@ fn cmd_ddp(args: &Args) -> anyhow::Result<()> {
     };
     println!(
         "DDP: world={world} schedule={} algo={} topology={} steps={steps} storage={} \
-         shard-stage={} overlap_threads={} chunk={:?} kernel={} dtype={} grad-elim={}",
+         shard-stage={} overlap_threads={} chunk={:?} kernel={} dtype={} grad-elim={} \
+         pipeline={pstages}x{micro}",
         schedule.label(),
         algo.label(),
         topo.label(),
@@ -507,6 +574,19 @@ fn cmd_ddp(args: &Args) -> anyhow::Result<()> {
         dt.label(),
         grad_elim
     );
+    // surface the precision gate the executor would apply silently
+    // (e.g. --grad-elim outside backward-fusion / without buckets)
+    let gate_probe = ExecConfig {
+        schedule,
+        bucket_cap_bytes: bucket_cap,
+        grad_elim,
+        dtype: dt,
+        micro_batches: micro,
+        ..Default::default()
+    };
+    if let Some(note) = gate_probe.grad_elim_gate_note() {
+        println!("note: {note}");
+    }
     let report = train_ddp(
         || models::mobilenet_v2_ish(3),
         || optim::by_name("adam").unwrap(),
@@ -527,6 +607,8 @@ fn cmd_ddp(args: &Args) -> anyhow::Result<()> {
             kernel,
             grad_elim,
             dtype: dt,
+            pipeline_stages: pstages,
+            micro_batches: micro,
             load_from: None,
             save_to: None,
             local_batch_maker: Box::new(move |rank, step| {
@@ -568,6 +650,19 @@ fn cmd_ddp(args: &Args) -> anyhow::Result<()> {
         report.peak_value_arena_bytes as f64 / 1024.0,
         report.opt_state_bytes as f64 / 1024.0
     );
+    if report.pipeline_stages > 1 || report.micro_batches > 1 {
+        let bub: Vec<String> =
+            report.bubble_frac.iter().map(|f| format!("{:.1}%", f * 100.0)).collect();
+        println!(
+            "pipeline: {} stages × {} micro-batches | measured per-stage bubble [{}] | \
+             activation p2p {:.1} KiB, {} msgs",
+            report.pipeline_stages,
+            report.micro_batches,
+            bub.join(", "),
+            report.act_bytes as f64 / 1024.0,
+            report.act_msgs
+        );
+    }
     Ok(())
 }
 

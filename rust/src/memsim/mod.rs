@@ -1022,12 +1022,252 @@ pub fn theoretical_speedup(b: f64, t_grad: f64, t_opt: f64, t_saved: f64) -> f64
     (b * t_grad + t_opt) / (b * t_grad + t_opt - t_saved)
 }
 
+/// 1F1B makespan of a pipeline whose stage `i` needs `stage_s[i]`
+/// seconds of busy time for the whole step (all `micro` micro-batches).
+/// The slowest stage's per-micro slot paces every stage, and the
+/// schedule stretches over `micro + S − 1` such slots (warmup fill +
+/// steady state + cooldown drain).
+pub fn pipeline_span_s(stage_s: &[f64], micro: usize) -> f64 {
+    if stage_s.is_empty() {
+        return 0.0;
+    }
+    let m = micro.max(1) as f64;
+    let slot = stage_s.iter().fold(0.0f64, |a, &t| a.max(t)) / m;
+    (m + stage_s.len() as f64 - 1.0) * slot
+}
+
+/// Per-stage idle ("bubble") fraction of the 1F1B span: `1 − t_i/span`.
+/// Balanced stages all sit at the classic `(S−1)/(M+S−1)`; a single
+/// stage has no bubble by construction. This is the closed form the
+/// measured `DdpReport::bubble_frac` must track.
+pub fn pipeline_bubble_fracs(stage_s: &[f64], micro: usize) -> Vec<f64> {
+    let span = pipeline_span_s(stage_s, micro);
+    stage_s
+        .iter()
+        .map(|&t| if span > 0.0 { (1.0 - t / span).max(0.0) } else { 0.0 })
+        .collect()
+}
+
+/// Exact bytes the `CommStats` p2p leg records for activation exchange
+/// in one pipelined step. `boundary_elems[b]` is the f32 element count
+/// of one micro-batch's activation at boundary `b`; each boundary moves
+/// it forward and backward per micro-batch, and `ActNet` records the
+/// payload at both endpoints — `2 dirs × 2 ends × 4 bytes = 16` bytes
+/// per element per micro per DP chain. Activations ride the wire as
+/// exact f32 even under `--dtype bf16` (bit-identity over compression),
+/// so no element-width rescale applies here.
+pub fn pipeline_act_bytes(boundary_elems: &[usize], micro: usize, dp: usize) -> u64 {
+    let m = micro.max(1) as u64;
+    boundary_elems.iter().map(|&e| 16 * e as u64 * m * dp as u64).sum()
+}
+
+/// Message-count companion of [`pipeline_act_bytes`]: one send record
+/// and one recv record per direction per micro-batch per boundary per
+/// DP chain.
+pub fn pipeline_act_msgs(boundaries: usize, micro: usize, dp: usize) -> u64 {
+    4 * boundaries as u64 * micro.max(1) as u64 * dp as u64
+}
+
+/// Contiguous split of `net.layers` into `stages` groups minimizing the
+/// maximum per-stage forward FLOPs — the same min-max objective
+/// `Graph::pipeline_cuts` applies to the real unit graph. Returns the
+/// layer index at which each stage after the first begins
+/// (`stages − 1` entries, strictly increasing).
+pub fn pipeline_layer_cuts(net: &NetSpec, stages: usize) -> Vec<usize> {
+    let l = net.layers.len();
+    assert!(stages >= 1, "pipeline_layer_cuts: need at least one stage");
+    assert!(
+        stages <= l,
+        "pipeline_layer_cuts: net '{}' has {l} layers, cannot form {stages} stages",
+        net.name
+    );
+    if stages == 1 {
+        return Vec::new();
+    }
+    let w: Vec<f64> = net.layers.iter().map(|x| x.flops_per_item.max(1.0)).collect();
+    let mut prefix = vec![0.0f64; l + 1];
+    for i in 0..l {
+        prefix[i + 1] = prefix[i] + w[i];
+    }
+    let seg = |a: usize, b: usize| prefix[b] - prefix[a]; // layers [a, b)
+    // dp[k][i]: best max-stage cost over splits of the first i layers
+    // into k stages; par[k][i] the split point achieving it
+    let mut dp = vec![vec![f64::INFINITY; l + 1]; stages + 1];
+    let mut par = vec![vec![0usize; l + 1]; stages + 1];
+    for i in 1..=l {
+        dp[1][i] = seg(0, i);
+    }
+    for k in 2..=stages {
+        for i in k..=l {
+            for j in (k - 1)..i {
+                let c = dp[k - 1][j].max(seg(j, i));
+                if c < dp[k][i] {
+                    dp[k][i] = c;
+                    par[k][i] = j;
+                }
+            }
+        }
+    }
+    let mut cuts = vec![0usize; stages - 1];
+    let mut i = l;
+    for k in (2..=stages).rev() {
+        let j = par[k][i];
+        cuts[k - 2] = j;
+        i = j;
+    }
+    cuts
+}
+
+/// Predicted behaviour of a DP×PP grid — the `simulate` CLI's plan
+/// table row and the reference the measured bubble fractions are
+/// checked against.
+#[derive(Debug, Clone)]
+pub struct PipelineSim {
+    /// Layer index at which each stage after the first begins.
+    pub cuts: Vec<usize>,
+    /// Per-stage busy time for the whole step, seconds (compute plus
+    /// exposed DP comm within the stage's replica group).
+    pub per_stage_s: Vec<f64>,
+    /// 1F1B makespan over the grid's critical chain.
+    pub span_s: f64,
+    /// Per-stage predicted bubble fractions (`1 − busy/span`).
+    pub bubble: Vec<f64>,
+    /// Exact activation bytes the p2p leg will record per step.
+    pub act_bytes: u64,
+    /// Predicted step time: span plus exposed activation exchange.
+    pub step_s: f64,
+}
+
+/// Price one training step of `net` on an `S × dp` pipeline grid with
+/// `micro` 1F1B micro-batches per step. Stages are cut by
+/// [`pipeline_layer_cuts`]; each stage's busy time is the existing
+/// single-replica / DDP prediction on its layer slice (DP collectives
+/// run within the stage's replica group, so the interconnect is resized
+/// to `world = dp`); the 1F1B bubble and the activation-exchange wire
+/// bytes come from the closed forms above.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_pipeline(
+    m: &Machine,
+    net: &NetSpec,
+    opt: &OptSpec,
+    batch: usize,
+    schedule: ScheduleKind,
+    ddp: DdpSimConfig,
+    stages: usize,
+    micro: usize,
+    dp: usize,
+) -> PipelineSim {
+    assert!(stages >= 1 && micro >= 1 && dp >= 1);
+    let cuts = pipeline_layer_cuts(net, stages);
+    let md = m.clone().with_world(dp);
+    let mut bounds = Vec::with_capacity(stages + 1);
+    bounds.push(0);
+    bounds.extend(cuts.iter().copied());
+    bounds.push(net.layers.len());
+    let micro_rows = (batch / micro).max(1);
+    let mut per_stage_s = Vec::with_capacity(stages);
+    let mut boundary_elems = Vec::with_capacity(stages.saturating_sub(1));
+    for s in 0..stages {
+        let sub = NetSpec {
+            name: format!("{}@stage{}/{}", net.name, s, stages),
+            layers: net.layers[bounds[s]..bounds[s + 1]].to_vec(),
+        };
+        let t = if dp > 1 {
+            simulate_ddp(&md, &sub, opt, batch, schedule, ddp).step_s
+        } else {
+            simulate(&md, &sub, opt, batch, schedule).total_s
+        };
+        per_stage_s.push(t);
+        if s + 1 < stages {
+            boundary_elems
+                .push(net.layers[bounds[s + 1] - 1].out_elems as usize * micro_rows);
+        }
+    }
+    let span_s = pipeline_span_s(&per_stage_s, micro);
+    let bubble = pipeline_bubble_fracs(&per_stage_s, micro);
+    let act_bytes = pipeline_act_bytes(&boundary_elems, micro, dp);
+    // exposed activation exchange on the critical chain: each boundary
+    // moves its payload once per direction per micro over the fast
+    // intra-tier link (activations stay f32 on the wire)
+    let (bw, lat) = (md.interconnect.intra_bw, md.interconnect.intra_lat_s);
+    let act_s: f64 = boundary_elems
+        .iter()
+        .map(|&e| 2.0 * micro as f64 * (lat + 4.0 * e as f64 / bw))
+        .sum();
+    PipelineSim { cuts, per_stage_s, span_s, bubble, act_bytes, step_s: span_s + act_s }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::memsim::machines::titan_xp;
     use crate::memsim::spec::OptSpec;
     use crate::memsim::zoo;
+
+    #[test]
+    fn pipeline_bubble_closed_form() {
+        // balanced stages all sit at (S−1)/(M+S−1)
+        let b = pipeline_bubble_fracs(&[1.0, 1.0, 1.0], 4);
+        for f in &b {
+            assert!((f - 2.0 / 6.0).abs() < 1e-12, "balanced bubble: {f}");
+        }
+        // a single stage never bubbles
+        assert_eq!(pipeline_bubble_fracs(&[2.5], 4), vec![0.0]);
+        // the slowest stage of an imbalanced split idles least
+        let b2 = pipeline_bubble_fracs(&[1.0, 2.0], 2);
+        assert!(b2[1] < b2[0], "slow stage bubbles less: {b2:?}");
+        // span = slowest per-micro slot × (M + S − 1)
+        assert!((pipeline_span_s(&[1.0, 2.0], 2) - 3.0).abs() < 1e-12);
+        // more micro-batches amortize the fill/drain bubble away
+        let few = pipeline_bubble_fracs(&[1.0, 1.0], 1)[0];
+        let many = pipeline_bubble_fracs(&[1.0, 1.0], 16)[0];
+        assert!(many < few, "bubble shrinks with M: {many} < {few}");
+    }
+
+    #[test]
+    fn pipeline_act_accounting_closed_form() {
+        // 16 bytes per element per micro per chain: 2 dirs × 2 ends × 4B
+        assert_eq!(pipeline_act_bytes(&[10, 3], 4, 2), 16 * 13 * 4 * 2);
+        assert_eq!(pipeline_act_msgs(2, 4, 2), 4 * 2 * 4 * 2);
+        assert_eq!(pipeline_act_bytes(&[], 4, 2), 0, "S=1 moves nothing");
+    }
+
+    #[test]
+    fn pipeline_layer_cuts_balance_flops() {
+        let net = zoo::resnet18();
+        let cuts = pipeline_layer_cuts(&net, 3);
+        assert_eq!(cuts.len(), 2);
+        assert!(cuts[0] < cuts[1] && cuts[1] < net.layers.len());
+        // min-max split never exceeds the trivial "everything on one
+        // stage" bound and beats the worst single layer only if possible
+        let w: Vec<f64> = net.layers.iter().map(|l| l.flops_per_item.max(1.0)).collect();
+        let total: f64 = w.iter().sum();
+        let seg_max = |a: usize, b: usize| w[a..b].iter().sum::<f64>();
+        let bounds = [0, cuts[0], cuts[1], net.layers.len()];
+        let worst = (0..3).map(|s| seg_max(bounds[s], bounds[s + 1])).fold(0.0, f64::max);
+        assert!(worst < total, "3-way cut beats the 1-stage bound");
+    }
+
+    #[test]
+    fn pipeline_sim_predicts_grid() {
+        let m = titan_xp();
+        let net = zoo::resnet18();
+        let opt = OptSpec::adamw();
+        let ddp = DdpSimConfig::default();
+        let p = simulate_pipeline(&m, &net, &opt, 32, ScheduleKind::BackwardFusion, ddp, 2, 4, 1);
+        assert_eq!(p.per_stage_s.len(), 2);
+        assert_eq!(p.bubble.len(), 2);
+        assert!(p.span_s > 0.0 && p.step_s >= p.span_s);
+        assert!(p.bubble.iter().all(|f| (0.0..1.0).contains(f)));
+        assert!(p.act_bytes > 0, "a 2-stage cut crosses at least one boundary");
+        // S=1 degenerates to the plain simulation with zero bubble
+        let p1 = simulate_pipeline(&m, &net, &opt, 32, ScheduleKind::BackwardFusion, ddp, 1, 4, 1);
+        assert_eq!(p1.bubble, vec![0.0]);
+        assert_eq!(p1.act_bytes, 0);
+        // more micro-batches shrink the predicted span
+        let p8 = simulate_pipeline(&m, &net, &opt, 32, ScheduleKind::BackwardFusion, ddp, 2, 8, 1);
+        assert!(p8.span_s < p.span_s, "M=8 span {} < M=4 span {}", p8.span_s, p.span_s);
+    }
 
     #[test]
     fn cache_lru_evicts_oldest() {

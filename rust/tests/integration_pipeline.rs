@@ -1,0 +1,467 @@
+//! Pipeline model-parallelism acceptance suite (tier-1): the 1F1B
+//! micro-batch schedule over the p2p mailbox, composed with the DP×ZeRO
+//! axis.
+//!
+//! * **Bit-identity.** At every tested grid — S ∈ {2, 3} stages ×
+//!   M ∈ {1, 2, 4} micro-batches × schedule × ZeRO stage × {f32, bf16}
+//!   — pipelined training is bit-identical to the single-stage (S = 1)
+//!   run with the same micro-batched accumulation, and the DP×PP grid
+//!   is bit-identical to a single process on the concatenated batch.
+//! * **Exact activation accounting.** The `CommStats` p2p leg records
+//!   exactly `memsim::pipeline_act_bytes` / `pipeline_act_msgs` per
+//!   step: 16 bytes per boundary element per micro-batch per DP chain
+//!   (2 directions × 2 endpoints × exact f32), never dtype-rescaled.
+//! * **Bubble shape.** Measured per-stage bubble fractions land in the
+//!   closed form's range ([`memsim::pipeline_bubble_fracs`]): one
+//!   fraction per stage, each in [0, 1), and S = 1 reports none.
+//! * **Checkpoint portability.** A merged checkpoint saved by an S = 2
+//!   grid resumes bit-identically at S = 1, at S = 3, and loads into a
+//!   plain single-process executor (the merged file is byte-compatible
+//!   with `checkpoint::save`).
+//! * **`--algo auto`.** Each stage's replica group resolves its own
+//!   per-bucket plan and the mixed sessions stay bit-identical to flat.
+//!
+//! `OPTFUSE_PIPELINE` (the dedicated CI leg sets `2`) widens the grids:
+//! DP chains on every matrix leg and the image-scale `mlp` probe model.
+
+use optfuse::checkpoint;
+use optfuse::comm::{AlgoSelect, CommAlgo, ShardStage};
+use optfuse::data::image_batch;
+use optfuse::ddp::{single_process_iter_ms, train_ddp, DdpConfig, DdpReport};
+use optfuse::exec::{ExecConfig, Executor};
+use optfuse::graph::{Graph, ScheduleKind, Src};
+use optfuse::memsim;
+use optfuse::models::mlp;
+use optfuse::ops::activation::Relu;
+use optfuse::ops::dense::Linear;
+use optfuse::ops::loss::MseLoss;
+use optfuse::optim::{Adam, Hyper, Optimizer, SgdMomentum};
+use optfuse::tensor::dtype::Dtype;
+use optfuse::tensor::Tensor;
+use optfuse::util::XorShiftRng;
+
+/// Widened grids on the dedicated CI leg (`OPTFUSE_PIPELINE=2`).
+fn wide() -> bool {
+    std::env::var("OPTFUSE_PIPELINE").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
+
+/// A deep 16-wide Linear/Relu lane stack with an MSE head: plenty of
+/// valid cut points for 3 stages, 4 batch rows so every M ∈ {1, 2, 4}
+/// divides evenly, and power-of-two shapes so DP's rank-order
+/// mean-reduce reproduces a single process bit-for-bit.
+fn lane_graph(layers: usize, seed: u64) -> Graph {
+    let mut rng = XorShiftRng::new(seed);
+    let mut g = Graph::new("lanes", 2);
+    let mut prev = Src::External(0);
+    for l in 0..layers {
+        let w = g.param(&format!("fc{l}.w"), &[16, 16], &mut rng);
+        let lin = g.push(&format!("fc{l}"), Box::new(Linear::new(false)), vec![prev], vec![w]);
+        let act = g.push(&format!("relu{l}"), Box::new(Relu), vec![Src::Node(lin)], vec![]);
+        prev = Src::Node(act);
+    }
+    let loss = g.push("mse", Box::new(MseLoss), vec![prev, Src::External(1)], vec![]);
+    g.set_loss(loss);
+    g
+}
+
+fn lane_batch(rank: usize, step: usize) -> Vec<Tensor> {
+    let mut rng = XorShiftRng::new(9000 + ((rank as u64) << 20) + step as u64);
+    vec![Tensor::randn(&[4, 16], 1.0, &mut rng), Tensor::randn(&[4, 16], 1.0, &mut rng)]
+}
+
+fn sgd_momentum() -> Box<dyn Optimizer> {
+    Box::new(SgdMomentum)
+}
+
+fn adam() -> Box<dyn Optimizer> {
+    Box::new(Adam)
+}
+
+fn sgd_hyper() -> Hyper {
+    Hyper { lr: 0.05, weight_decay: 0.0, ..Hyper::default() }
+}
+
+fn max_param_diff(a: &[Tensor], b: &[Tensor]) -> f32 {
+    assert_eq!(a.len(), b.len(), "param count must agree");
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| x.max_abs_diff(y))
+        .fold(0.0f32, f32::max)
+}
+
+/// One pinned-axes pipelined run on the lane model.
+#[allow(clippy::too_many_arguments)]
+fn run_lanes(
+    stages: usize,
+    micro: u64,
+    world: usize,
+    schedule: ScheduleKind,
+    shard: ShardStage,
+    dtype: Dtype,
+    steps: usize,
+    load: Option<std::path::PathBuf>,
+    save: Option<std::path::PathBuf>,
+    step_offset: usize,
+) -> DdpReport {
+    let mut cfg = DdpConfig::new(
+        world,
+        schedule,
+        steps,
+        Box::new(move |rank, step| lane_batch(rank, step + step_offset)),
+    );
+    cfg.pipeline_stages = stages;
+    cfg.micro_batches = micro;
+    cfg.shard_stage = shard;
+    cfg.dtype = dtype;
+    cfg.grad_elim = false;
+    if shard.sharded() || dtype == Dtype::Bf16 {
+        cfg.bucket_cap_bytes = Some(1 << 10);
+    }
+    cfg.load_from = load;
+    cfg.save_to = save;
+    train_ddp(|| lane_graph(6, 17), sgd_momentum, sgd_hyper(), cfg)
+}
+
+fn assert_bit_identical(a: &DdpReport, b: &DdpReport, what: &str) {
+    assert_eq!(a.losses.len(), b.losses.len(), "{what}: step counts");
+    for (s, (x, y)) in a.losses.iter().zip(b.losses.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: loss step {s}: {x} vs {y}");
+    }
+    assert_eq!(max_param_diff(&a.final_params, &b.final_params), 0.0, "{what}: final params");
+}
+
+/// The signature invariant of the tentpole: every S > 1 grid is
+/// bit-identical to the S = 1 run with the same micro-batched
+/// accumulation, across schedules × ZeRO stages × {f32, bf16}.
+#[test]
+fn pipeline_matrix_is_bit_identical_to_single_stage() {
+    let steps = 3;
+    let worlds: &[usize] = if wide() { &[1, 2] } else { &[1] };
+    for &world in worlds {
+        for schedule in [ScheduleKind::Baseline, ScheduleKind::BackwardFusion] {
+            for (shard, dtype) in [
+                (ShardStage::None, Dtype::F32),
+                (ShardStage::Zero1, Dtype::F32),
+                (ShardStage::None, Dtype::Bf16),
+            ] {
+                // ZeRO needs a replica group to shard over
+                if shard.sharded() && world == 1 {
+                    continue;
+                }
+                for micro in [1u64, 2, 4] {
+                    let reference = run_lanes(
+                        1, micro, world, schedule, shard, dtype, steps, None, None, 0,
+                    );
+                    assert_eq!(reference.pipeline_stages, 1);
+                    assert_eq!(reference.act_bytes, 0, "S=1 exchanges no boundary activations");
+                    for stages in [2usize, 3] {
+                        let r = run_lanes(
+                            stages, micro, world, schedule, shard, dtype, steps, None, None, 0,
+                        );
+                        let what = format!(
+                            "S={stages} M={micro} dp={world} {schedule:?} {shard:?} {dtype:?}"
+                        );
+                        assert_eq!(r.pipeline_stages, stages, "{what}");
+                        assert_eq!(r.micro_batches, micro, "{what}");
+                        assert_bit_identical(&reference, &r, &what);
+                        assert!(r.act_bytes > 0, "{what}: boundary traffic recorded");
+                        assert_eq!(
+                            r.bubble_frac.len(),
+                            stages,
+                            "{what}: one measured bubble per stage"
+                        );
+                        assert!(
+                            r.bubble_frac.iter().all(|b| (0.0..1.0).contains(b)),
+                            "{what}: bubbles in [0,1): {:?}",
+                            r.bubble_frac
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// DP×PP composition against ground truth: a 2-stage × 2-chain grid
+/// (M = 1 so accumulation orders coincide) is bit-identical to one
+/// process training on the rank-concatenated batch.
+#[test]
+fn dp_pp_grid_matches_single_process_bitwise() {
+    let steps = 4;
+    let world = 2;
+    let concat = |step: usize| {
+        let per_rank: Vec<Vec<Tensor>> = (0..world).map(|r| lane_batch(r, step)).collect();
+        (0..2)
+            .map(|e| {
+                let mut data = Vec::new();
+                for b in &per_rank {
+                    data.extend_from_slice(b[e].data());
+                }
+                Tensor::from_vec(&[world * 4, 16], data)
+            })
+            .collect::<Vec<Tensor>>()
+    };
+    for schedule in [ScheduleKind::Baseline, ScheduleKind::BackwardFusion] {
+        let grid = run_lanes(
+            2, 1, world, schedule, ShardStage::None, Dtype::F32, steps, None, None, 0,
+        );
+        let (_, single_losses) =
+            single_process_iter_ms(|| lane_graph(6, 17), sgd_momentum, sgd_hyper(), steps, concat);
+        for (s, (a, b)) in grid.losses.iter().zip(single_losses.iter()).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{schedule:?} step {s}: grid {a} vs single process {b}"
+            );
+        }
+    }
+}
+
+/// Exact activation byte/message accounting: the run's p2p leg equals
+/// the `memsim` closed forms computed from the graph's own cut choice
+/// and shape inference — per boundary, per micro-batch, per DP chain,
+/// per step, with zero slack.
+#[test]
+fn activation_p2p_accounting_is_exact() {
+    let steps = 3;
+    let grids: &[(usize, u64, usize)] =
+        if wide() { &[(2, 2, 2), (3, 4, 1), (2, 4, 2), (3, 1, 2)] } else { &[(2, 2, 2), (3, 4, 1)] };
+    for &(stages, micro, dp) in grids {
+        let g = lane_graph(6, 17);
+        let sample = lane_batch(0, 0);
+        let ext_shapes: Vec<Vec<usize>> = sample.iter().map(|t| t.shape().to_vec()).collect();
+        let cuts = g.pipeline_cuts(stages, &ext_shapes);
+        assert_eq!(cuts.len(), stages - 1);
+        // per-micro shapes: the batch dim row-splits by M
+        let micro_ext: Vec<Vec<usize>> = ext_shapes
+            .iter()
+            .map(|sh| {
+                let mut sh = sh.clone();
+                sh[0] /= micro as usize;
+                sh
+            })
+            .collect();
+        let node_shapes = g.infer_shapes(&micro_ext);
+        // a valid cut's boundary activation is the cut node's own output
+        // (anything later crossing would be a second crosser)
+        let boundary_elems: Vec<usize> =
+            cuts.iter().map(|&c| node_shapes[c].iter().product()).collect();
+        let want_bytes =
+            memsim::pipeline_act_bytes(&boundary_elems, micro as usize, dp) * steps as u64;
+        let want_msgs =
+            memsim::pipeline_act_msgs(cuts.len(), micro as usize, dp) * steps as u64;
+        let r = run_lanes(
+            stages,
+            micro,
+            dp,
+            ScheduleKind::BackwardFusion,
+            ShardStage::None,
+            Dtype::F32,
+            steps,
+            None,
+            None,
+            0,
+        );
+        assert_eq!(
+            r.act_bytes, want_bytes,
+            "S={stages} M={micro} dp={dp}: activation bytes must match the closed form exactly"
+        );
+        assert_eq!(
+            r.act_msgs, want_msgs,
+            "S={stages} M={micro} dp={dp}: activation messages must match the closed form exactly"
+        );
+    }
+}
+
+/// Activation traffic is exact f32 on the wire — switching the arena
+/// dtype to bf16 halves the collective bytes (pinned elsewhere) but
+/// must not change a single activation byte.
+#[test]
+fn activation_bytes_are_never_dtype_rescaled() {
+    let run = |dtype: Dtype| {
+        run_lanes(
+            2, 2, 1, ScheduleKind::BackwardFusion, ShardStage::None, dtype, 3, None, None, 0,
+        )
+    };
+    let f32_run = run(Dtype::F32);
+    let bf16_run = run(Dtype::Bf16);
+    assert!(f32_run.act_bytes > 0);
+    assert_eq!(
+        f32_run.act_bytes, bf16_run.act_bytes,
+        "boundary activations cross as exact f32 regardless of arena dtype"
+    );
+    assert_eq!(f32_run.act_msgs, bf16_run.act_msgs);
+}
+
+/// The measured bubble agrees with the closed form's shape: S = 1
+/// reports no bubbles, and on a pipelined grid every stage's measured
+/// fraction lands in the predicted [0, 1) band. The balanced-pipeline
+/// prediction `(S−1)/(M+S−1)` shrinking with M is pinned analytically
+/// (wallclock on a tiny model is too noisy to gate on in CI).
+#[test]
+fn measured_bubbles_land_in_closed_form_band() {
+    let single = run_lanes(
+        1, 2, 1, ScheduleKind::BackwardFusion, ShardStage::None, Dtype::F32, 3, None, None, 0,
+    );
+    assert!(single.bubble_frac.is_empty(), "S=1 has no pipeline bubbles");
+    let r = run_lanes(
+        2, 4, 1, ScheduleKind::BackwardFusion, ShardStage::None, Dtype::F32, 3, None, None, 0,
+    );
+    assert_eq!(r.bubble_frac.len(), 2);
+    assert!(r.bubble_frac.iter().all(|b| (0.0..1.0).contains(b)), "{:?}", r.bubble_frac);
+    // the closed form the report is measured against
+    let balanced = memsim::pipeline_bubble_fracs(&[1.0, 1.0], 4);
+    assert!((balanced[0] - 1.0 / 5.0).abs() < 1e-12);
+    for m in [1usize, 2, 4, 8] {
+        let frac = memsim::pipeline_bubble_fracs(&[1.0, 1.0], m)[0];
+        assert!((frac - 1.0 / (m as f64 + 1.0)).abs() < 1e-12, "balanced S=2 M={m}");
+    }
+}
+
+/// Checkpoint portability across pipeline layouts: a merged file saved
+/// by an S = 2 grid resumes bit-identically at S = 1 and S = 3, and is
+/// byte-compatible with the plain single-process loader.
+#[test]
+fn pipeline_checkpoints_are_stage_layout_portable() {
+    let dir = std::env::temp_dir().join("optfuse_pipeline_ckpt_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("s2m2.ckpt");
+    let micro = 2;
+    let sched = ScheduleKind::BackwardFusion;
+
+    // uninterrupted reference: 4 steps at S = 2
+    let full = run_lanes(
+        2, micro, 1, sched, ShardStage::None, Dtype::F32, 4, None, None, 0,
+    );
+    // first half, saving the merged checkpoint at step 2
+    let first = run_lanes(
+        2, micro, 1, sched, ShardStage::None, Dtype::F32, 2, None, Some(path.clone()), 0,
+    );
+    assert_eq!(&full.losses[..2], first.losses.as_slice());
+
+    for stages in [1usize, 2, 3] {
+        let resumed = run_lanes(
+            stages,
+            micro,
+            1,
+            sched,
+            ShardStage::None,
+            Dtype::F32,
+            2,
+            Some(path.clone()),
+            None,
+            2,
+        );
+        assert_eq!(
+            &full.losses[2..],
+            resumed.losses.as_slice(),
+            "resume at S={stages} must continue bit-identically"
+        );
+        assert_eq!(
+            max_param_diff(&full.final_params, &resumed.final_params),
+            0.0,
+            "resume at S={stages}: final params bit-identical"
+        );
+    }
+
+    // the merged file is a plain checkpoint: the strict single-process
+    // loader accepts it (names and order reassemble the full model)
+    let mut single = Executor::new(
+        lane_graph(6, 17),
+        sgd_momentum(),
+        sgd_hyper(),
+        ExecConfig { schedule: ScheduleKind::Baseline, ..Default::default() },
+    )
+    .unwrap();
+    let step = checkpoint::load(&mut single, &path).expect("merged file loads strictly");
+    assert_eq!(step, 2);
+}
+
+/// `--algo auto` composes with pipelining: each stage's replica group
+/// resolves a per-bucket plan from its own partition, trains through
+/// the mixed sessions bit-identically to flat, and reports the plan.
+#[test]
+fn auto_algo_plans_per_stage_and_stays_bit_identical() {
+    let run = |algo: AlgoSelect| {
+        let mut cfg = DdpConfig::new(2, ScheduleKind::BackwardFusion, 3, Box::new(lane_batch));
+        cfg.pipeline_stages = 2;
+        cfg.micro_batches = 2;
+        cfg.algo = algo;
+        cfg.bucket_cap_bytes = Some(1 << 10);
+        cfg.dtype = Dtype::F32;
+        cfg.grad_elim = false;
+        train_ddp(|| lane_graph(6, 17), sgd_momentum, sgd_hyper(), cfg)
+    };
+    let flat = run(AlgoSelect::Fixed(CommAlgo::Flat));
+    let auto = run(AlgoSelect::Auto);
+    assert_bit_identical(&flat, &auto, "auto vs flat at S=2 M=2 dp=2");
+    let plan = auto.plan.expect("auto pipeline run reports stage 0's plan");
+    assert!(!plan.units.is_empty());
+    assert_eq!(flat.act_bytes, auto.act_bytes, "routing never touches the activation leg");
+}
+
+/// The `--grad-elim` × micro-batching gate lift: micro-batched
+/// accumulation keeps elimination effective (the drain fires on the
+/// last micro-backward), only plain `accum_steps > 1` gates it — and
+/// elimination stays bit-identical on a pipelined grid.
+#[test]
+fn grad_elim_composes_with_micro_batching() {
+    let cfg = ExecConfig {
+        schedule: ScheduleKind::BackwardFusion,
+        bucket_cap_bytes: Some(1 << 10),
+        grad_elim: true,
+        micro_batches: 4,
+        dtype: Dtype::F32,
+        ..Default::default()
+    };
+    assert!(cfg.grad_elim_effective(), "micro-batching must not gate elimination");
+    assert!(cfg.grad_elim_gate_note().is_none());
+    let gated = ExecConfig { accum_steps: 2, micro_batches: 1, ..cfg.clone() };
+    assert!(!gated.grad_elim_effective());
+    let note = gated.grad_elim_gate_note().expect("accumulation gates elimination");
+    assert!(note.contains("accum_steps"), "gate note names the culprit: {note}");
+
+    let run = |grad_elim: bool| {
+        let mut cfg = DdpConfig::new(1, ScheduleKind::BackwardFusion, 3, Box::new(lane_batch));
+        cfg.pipeline_stages = 2;
+        cfg.micro_batches = 2;
+        cfg.bucket_cap_bytes = Some(1 << 10);
+        cfg.dtype = Dtype::F32;
+        cfg.grad_elim = grad_elim;
+        train_ddp(|| lane_graph(6, 17), adam, Hyper::default(), cfg)
+    };
+    let kept = run(false);
+    let elim = run(true);
+    assert_bit_identical(&kept, &elim, "grad-elim on a pipelined micro-batched grid");
+}
+
+/// Image-scale probe (widened leg only): the mlp model through an
+/// S = 2 × dp = 2 grid with ZeRO-1 + bf16 stays bit-identical to its
+/// single-stage reference.
+#[test]
+fn image_model_grid_matches_single_stage() {
+    if !wide() {
+        return;
+    }
+    let run = |stages: usize| {
+        let mut cfg = DdpConfig::new(
+            2,
+            ScheduleKind::BackwardFusion,
+            3,
+            Box::new(|rank, step| {
+                let mut rng = XorShiftRng::new(((rank as u64) << 32) | step as u64);
+                image_batch(4, 3, 16, 16, 10, &mut rng)
+            }),
+        );
+        cfg.pipeline_stages = stages;
+        cfg.micro_batches = 2;
+        cfg.bucket_cap_bytes = Some(1 << 12);
+        cfg.shard_stage = ShardStage::Zero1;
+        cfg.dtype = Dtype::Bf16;
+        cfg.grad_elim = false;
+        train_ddp(|| mlp(99), sgd_momentum, sgd_hyper(), cfg)
+    };
+    let reference = run(1);
+    let grid = run(2);
+    assert_bit_identical(&reference, &grid, "mlp S=2 M=2 dp=2 zero1 bf16");
+}
