@@ -39,11 +39,15 @@ use optfuse::comm::{AlgoSelect, CommAlgo, ShardStage, WireCost};
 use optfuse::data::image_batch;
 use optfuse::ddp::{train_ddp, DdpConfig, DdpReport};
 use optfuse::exec::kernel::{KernelConfig, KernelMode};
-use optfuse::graph::{Graph, ScheduleKind};
+use optfuse::graph::{Graph, ScheduleKind, Src};
 use optfuse::memsim::{machines, stage_memory, stage_memory_opts, CollOp};
 use optfuse::models;
+use optfuse::ops::activation::Relu;
+use optfuse::ops::dense::Linear;
+use optfuse::ops::loss::MseLoss;
 use optfuse::optim::{self, Hyper};
 use optfuse::tensor::dtype::Dtype;
+use optfuse::tensor::Tensor;
 use optfuse::util::XorShiftRng;
 
 struct Axis {
@@ -116,6 +120,7 @@ fn run_topo(
             dtype,
             pipeline_stages: 1,
             micro_batches: 1,
+            tensor_parallel: 1,
             load_from: None,
             save_to: None,
             local_batch_maker: Box::new(move |rank, step| {
@@ -890,6 +895,139 @@ fn main() {
     ));
     if let Err(e) = std::fs::write("bench-smoke/pipeline_bubbles.txt", &pipe_table) {
         println!("  (pipeline bubble artifact not written: {e})");
+    }
+    println!();
+
+    // ---- 3D DP×PP×TP axis: Megatron column/row splits over the p2p
+    // mailbox, composed with pipeline stages and DP chains. The probe
+    // model is a column/row pair stack with the hidden waist at exactly
+    // T, so every rank's shard is one column wide and the rank-ordered
+    // fold reproduces the unsplit matmul's accumulation order — each
+    // grid row is asserted bit-identical to the T=1 run of the same
+    // model, and the S=1 rows assert the tp fold leg against
+    // `memsim::tp_act_bytes` / `tp_act_msgs` exactly (fold elements
+    // derived from the graph's own `tp_partition` sync points). Rows
+    // land in bench-smoke/tp_scaling.txt so the fold-traffic trend is
+    // tracked per PR next to the bubble table.
+    fn tp_pairs_model(hidden: usize) -> Graph {
+        let mut rng = XorShiftRng::new(77);
+        let mut g = Graph::new("tp-pairs", 2);
+        let mut prev = Src::External(0);
+        for l in 0..3 {
+            let w1 = g.param(&format!("pair{l}.col.w"), &[16, hidden], &mut rng);
+            let col = g.push(
+                &format!("pair{l}.col"),
+                Box::new(Linear::new(false)),
+                vec![prev],
+                vec![w1],
+            );
+            let act =
+                g.push(&format!("pair{l}.relu"), Box::new(Relu), vec![Src::Node(col)], vec![]);
+            let w2 = g.param(&format!("pair{l}.row.w"), &[hidden, 16], &mut rng);
+            let row = g.push(
+                &format!("pair{l}.row"),
+                Box::new(Linear::new(false)),
+                vec![Src::Node(act)],
+                vec![w2],
+            );
+            prev = Src::Node(row);
+        }
+        let loss = g.push("mse", Box::new(MseLoss), vec![prev, Src::External(1)], vec![]);
+        g.set_loss(loss);
+        g
+    }
+    let run_tp = |t: usize, hidden: usize, stages: usize, micro: u64, dp: usize| {
+        let mut cfg = DdpConfig::new(
+            dp,
+            ScheduleKind::BackwardFusion,
+            steps,
+            Box::new(move |rank, step| {
+                let mut rng = XorShiftRng::new(31_000 + ((rank as u64) << 20) + step as u64);
+                vec![Tensor::randn(&[4, 16], 1.0, &mut rng), Tensor::randn(&[4, 16], 1.0, &mut rng)]
+            }),
+        );
+        cfg.tensor_parallel = t;
+        cfg.pipeline_stages = stages;
+        cfg.micro_batches = micro;
+        cfg.grad_elim = false;
+        cfg.dtype = Dtype::F32;
+        train_ddp(
+            move || tp_pairs_model(hidden),
+            || optim::by_name("adam").unwrap(),
+            Hyper::default(),
+            cfg,
+        )
+    };
+    let tp_grids: &[(usize, usize, u64, usize)] = if smoke {
+        &[(2, 1, 1, 1), (2, 2, 2, 1)]
+    } else {
+        &[(2, 1, 1, 1), (4, 1, 1, 1), (2, 2, 2, 1), (2, 2, 2, 2), (4, 1, 2, 2)]
+    };
+    println!("  DP×PP×TP axis (pair-stack probe, hidden = T): measured vs closed-form fold leg");
+    println!("    T  S  M  dp   iter ms   tp KiB   msgs   closed-form KiB");
+    let mut tp_table = String::from(
+        "3D DP×PP×TP fold traffic (column/row pair stack, hidden = T, backward-fusion)\n\
+         bit-identity vs the T=1 run asserted per row; S=1 rows asserted equal to the\n\
+         memsim::tp_act_bytes / tp_act_msgs closed forms (exact f32 wire, per fold, per\n\
+         micro-batch, per DP chain)\n\
+         T  S  M  dp   tp KiB   msgs   closed-form KiB\n",
+    );
+    for &(t, stages, micro, dp) in tp_grids {
+        let reference = run_tp(1, t, stages, micro, dp);
+        let r = run_tp(t, t, stages, micro, dp);
+        assert_eq!(
+            reference.losses, r.losses,
+            "T={t} S={stages} M={micro} dp={dp}: tensor parallelism must not change the math"
+        );
+        assert!(r.tp_bytes > 0, "T={t}: fold traffic recorded");
+        // S=1: fold elements from the graph's own partition sync points
+        let closed_bytes = if stages == 1 {
+            let (pg, info) = tp_pairs_model(t).tp_partition(t, 0, None);
+            let micro_ext = vec![vec![4 / micro as usize, 16], vec![4 / micro as usize, 16]];
+            let shapes = pg.infer_shapes(&micro_ext);
+            let mut sync_elems: Vec<usize> = Vec::new();
+            for &(row, _) in &info.fwd_sync {
+                sync_elems.push(shapes[row].iter().product());
+            }
+            for &col in &info.bwd_sync {
+                sync_elems.push(match pg.nodes[col].inputs[0] {
+                    Src::Node(p) => shapes[p].iter().product(),
+                    Src::External(e) => micro_ext[e].iter().product(),
+                });
+            }
+            let want_bytes =
+                optfuse::memsim::tp_act_bytes(&sync_elems, t, micro as usize, dp) * steps as u64;
+            let want_msgs =
+                optfuse::memsim::tp_act_msgs(sync_elems.len(), t, micro as usize, dp)
+                    * steps as u64;
+            assert_eq!(
+                r.tp_bytes, want_bytes,
+                "T={t} M={micro} dp={dp}: fold bytes must equal memsim's closed form"
+            );
+            assert_eq!(
+                r.tp_msgs, want_msgs,
+                "T={t} M={micro} dp={dp}: fold messages must equal memsim's closed form"
+            );
+            want_bytes
+        } else {
+            0 // S>1 cut placement owns the split; exactness pinned in tests
+        };
+        println!(
+            "    {t}  {stages}  {micro}  {dp:>2}  {:>8.2}  {:>7.1}  {:>5}  {:>15.1}",
+            r.iter_ms,
+            r.tp_bytes as f64 / 1024.0,
+            r.tp_msgs,
+            closed_bytes as f64 / 1024.0
+        );
+        tp_table.push_str(&format!(
+            "{t}  {stages}  {micro}  {dp:>2}  {:>7.1}  {:>5}  {:>15.1}\n",
+            r.tp_bytes as f64 / 1024.0,
+            r.tp_msgs,
+            closed_bytes as f64 / 1024.0
+        ));
+    }
+    if let Err(e) = std::fs::write("bench-smoke/tp_scaling.txt", &tp_table) {
+        println!("  (tp scaling artifact not written: {e})");
     }
     println!();
 

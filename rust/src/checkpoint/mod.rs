@@ -156,14 +156,13 @@ pub fn save_parts(
     Ok(())
 }
 
-/// Restore the executor's parameters *by name* from a checkpoint that
-/// may hold a superset in any order — the pipeline-stage load path:
-/// each stage executor owns a contiguous slice of the full model, and
-/// the merged checkpoint names every parameter of every stage. Every
-/// parameter of `ex` must be present in the file (missing names fail
-/// fast); file entries with no matching parameter are ignored. Returns
-/// the restored step count.
-pub fn load_subset(ex: &mut Executor, path: impl AsRef<Path>) -> Result<u64> {
+/// Parse a checkpoint into `(step, entries)` without touching any
+/// executor — `(name, value, optimizer-state)` triples in file order.
+/// The tensor-parallel load path reads the full-tensor entries once,
+/// applies them to the stage graph, and only then slices per TP rank
+/// (`Graph::tp_partition`), honoring the load-before-resharding
+/// contract.
+pub fn read_entries(path: impl AsRef<Path>) -> Result<(u64, Vec<(String, Tensor, Vec<Tensor>)>)> {
     let mut r = std::io::BufReader::new(
         std::fs::File::open(path.as_ref())
             .with_context(|| format!("opening {:?}", path.as_ref()))?,
@@ -179,7 +178,7 @@ pub fn load_subset(ex: &mut Executor, path: impl AsRef<Path>) -> Result<u64> {
     }
     let step = read_u64(&mut r)?;
     let n = read_u32(&mut r)? as usize;
-    let mut by_name: HashMap<String, (Tensor, Vec<Tensor>)> = HashMap::with_capacity(n);
+    let mut entries = Vec::with_capacity(n);
     for _ in 0..n {
         let name_len = read_u32(&mut r)? as usize;
         let mut name = vec![0u8; name_len];
@@ -189,8 +188,61 @@ pub fn load_subset(ex: &mut Executor, path: impl AsRef<Path>) -> Result<u64> {
         let n_state = read_u32(&mut r)? as usize;
         let state: Vec<Tensor> =
             (0..n_state).map(|_| read_tensor(&mut r)).collect::<Result<_>>()?;
-        by_name.insert(name, (value, state));
+        entries.push((name, value, state));
     }
+    Ok((step, entries))
+}
+
+/// Restore a *scattered-layout* graph's parameters by name from
+/// pre-parsed entries ([`read_entries`]) that may hold a superset in
+/// any order. Every graph parameter must be present (missing names fail
+/// fast); extra entries are ignored. The pre-`Executor` half of
+/// [`load_subset`]: TP runs call it on the stage graph *before*
+/// `tp_partition` slices values and state.
+pub fn apply_entries(
+    graph: &crate::graph::Graph,
+    entries: &[(String, Tensor, Vec<Tensor>)],
+) -> Result<()> {
+    assert!(
+        graph.store.buckets.is_none(),
+        "apply_entries targets a scattered store (load before bucketize)"
+    );
+    let by_name: HashMap<&str, (&Tensor, &Vec<Tensor>)> =
+        entries.iter().map(|(n, v, s)| (n.as_str(), (v, s))).collect();
+    for pid in 0..graph.store.len() {
+        let p = graph.store.get(pid);
+        let mut pd = p.data.write().unwrap();
+        let (value, state) = by_name
+            .get(pd.name.as_str())
+            .ok_or_else(|| anyhow::anyhow!("checkpoint is missing param '{}'", pd.name))?;
+        if value.shape() != pd.value.shape() {
+            bail!("shape mismatch for '{}'", pd.name);
+        }
+        for (slot, s) in state.iter().enumerate() {
+            if s.len() != value.len() {
+                bail!("state slot {slot} size mismatch for '{}'", pd.name);
+            }
+        }
+        pd.value = (*value).clone();
+        pd.state = (*state).clone();
+        pd.grad = Tensor::zeros(pd.value.shape());
+    }
+    Ok(())
+}
+
+/// Restore the executor's parameters *by name* from a checkpoint that
+/// may hold a superset in any order — the pipeline-stage load path:
+/// each stage executor owns a contiguous slice of the full model, and
+/// the merged checkpoint names every parameter of every stage. Every
+/// parameter of `ex` must be present in the file (missing names fail
+/// fast); file entries with no matching parameter are ignored. Returns
+/// the restored step count.
+pub fn load_subset(ex: &mut Executor, path: impl AsRef<Path>) -> Result<u64> {
+    let (step, entries) = read_entries(path)?;
+    let mut by_name: HashMap<String, (Tensor, Vec<Tensor>)> = entries
+        .into_iter()
+        .map(|(n, v, s)| (n, (v, s)))
+        .collect();
     for pid in 0..ex.graph.store.len() {
         let (state, want_len) = {
             let p = ex.graph.store.get(pid);

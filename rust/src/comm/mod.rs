@@ -110,6 +110,15 @@ pub struct CommStats {
     /// Point-to-point messages, counted at each endpoint (one post +
     /// one take per message → 2 per in-flight activation tensor).
     pub p2p_msgs: AtomicU64,
+    /// Tensor-parallel activation all-reduce bytes (the [`tags::tp`]
+    /// leg): partial-output exchanges between TP ranks of one layer,
+    /// counted at both endpoints like the p2p leg. Never rescaled by
+    /// the wire dtype — TP partial sums cross as exact f32 words so
+    /// the rank-ordered fold stays bit-identical to the unsplit matmul.
+    pub tp_bytes: AtomicU64,
+    /// Tensor-parallel messages, counted at each endpoint (one post +
+    /// one take per delivered partial → 2 per peer per sync point).
+    pub tp_msgs: AtomicU64,
 }
 
 impl Default for CommStats {
@@ -122,6 +131,8 @@ impl Default for CommStats {
             elem_bytes: AtomicU64::new(4),
             p2p_bytes: AtomicU64::new(0),
             p2p_msgs: AtomicU64::new(0),
+            tp_bytes: AtomicU64::new(0),
+            tp_msgs: AtomicU64::new(0),
         }
     }
 }
@@ -161,6 +172,20 @@ impl CommStats {
     /// Current `(bytes, messages)` totals of the p2p leg.
     pub fn p2p(&self) -> (u64, u64) {
         (self.p2p_bytes.load(Ordering::Relaxed), self.p2p_msgs.load(Ordering::Relaxed))
+    }
+
+    /// Record one endpoint of a tensor-parallel partial-output message.
+    /// Same both-endpoints convention as [`CommStats::record_p2p`]: a
+    /// delivered partial contributes `2×bytes` to
+    /// [`CommStats::tp_bytes`] and 2 to [`CommStats::tp_msgs`].
+    pub fn record_tp(&self, bytes: u64) {
+        self.tp_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.tp_msgs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Current `(bytes, messages)` totals of the tensor-parallel leg.
+    pub fn tp(&self) -> (u64, u64) {
+        (self.tp_bytes.load(Ordering::Relaxed), self.tp_msgs.load(Ordering::Relaxed))
     }
 
     /// A point-in-time copy of the counters — an epoch marker. Pair
@@ -385,6 +410,21 @@ pub mod tags {
     /// boundary `boundary` (stage `boundary + 1` back to `boundary`).
     pub fn act_bwd(boundary: usize) -> u64 {
         (8u64 << 56) | boundary as u64
+    }
+
+    /// Tag-namespace prefix of the tensor-parallel leg — the routing
+    /// key [`crate::comm::p2p::ActNet`] uses to account TP traffic on
+    /// [`super::CommStats::tp_bytes`] instead of the pipeline p2p leg.
+    pub const TP_PREFIX: u64 = 9;
+
+    /// Tensor-parallel partial-output exchange at sync point `point`
+    /// (an even/odd encoding of the layer's node id × forward/backward
+    /// direction — see `exec`'s TP fold). Deliberately unit-less
+    /// ([`unit_of`] returns `None`): TP partials ride the bounded p2p
+    /// mailbox between the ranks of one TP group, never a collective
+    /// session, and must not alias any training unit's tag sequence.
+    pub fn tp(point: usize) -> u64 {
+        (TP_PREFIX << 56) | point as u64
     }
 
     /// Calibration-probe collective `k` — the synthetic warm-up
@@ -877,6 +917,8 @@ mod tests {
         // activation traffic never routes to a collective session
         assert_eq!(tags::unit_of(tags::act_fwd(2)), None);
         assert_eq!(tags::unit_of(tags::act_bwd(0)), None);
+        assert_eq!(tags::unit_of(tags::tp(0)), None);
+        assert_eq!(tags::unit_of(tags::tp(11)), None);
     }
 
     #[test]

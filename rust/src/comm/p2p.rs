@@ -211,6 +211,20 @@ impl ActNet {
         MsgKey { tag, seq: step * self.micro + micro, leg: 0, from, to }
     }
 
+    /// Charge one endpoint of a message to the right [`CommStats`] leg:
+    /// [`tags::tp`]-namespace tags go to the tensor-parallel leg, every
+    /// other tag (the pipeline activation exchange) to the p2p leg.
+    /// Both legs carry exact f32 payloads, so neither is dtype-rescaled.
+    ///
+    /// [`tags::tp`]: super::tags::tp
+    fn account(&self, tag: u64, bytes: u64) {
+        if tag >> 56 == super::tags::TP_PREFIX {
+            self.stats.record_tp(bytes);
+        } else {
+            self.stats.record_p2p(bytes);
+        }
+    }
+
     /// Send one tensor (`shape`, `data`) along `from → to` for
     /// micro-batch `micro` of step `step`. Blocks while the edge is at
     /// capacity. The shape rides in the payload as zero-length
@@ -226,7 +240,7 @@ impl ActNet {
         shape: &[usize],
         data: Vec<f32>,
     ) {
-        self.stats.record_p2p(4 * data.len() as u64);
+        self.account(tag, 4 * data.len() as u64);
         let mut payload: Payload = Vec::with_capacity(1 + shape.len());
         payload.push((from, data));
         for &d in shape {
@@ -249,8 +263,59 @@ impl ActNet {
         let mut it = payload.into_iter();
         let (_, data) = it.next().expect("p2p: empty activation payload");
         let shape: Vec<usize> = it.map(|(d, _)| d).collect();
-        self.stats.record_p2p(4 * data.len() as u64);
+        self.account(tag, 4 * data.len() as u64);
         (shape, data)
+    }
+
+    /// Rank-ordered all-reduce (sum) of `data` among the TP group
+    /// `group` (global ranks in ascending TP-rank order; `index` is this
+    /// rank's position). Every member posts its partial to every peer,
+    /// then folds all `|group|` partials **in TP-rank order** — the same
+    /// sequential-fold contract as `mean_in_rank_order`, minus the 1/W
+    /// scale (TP partial outputs sum, they don't average). With
+    /// width-1 shards each rank contributes exactly one product term,
+    /// so the fold reproduces the unsplit matmul's ascending-k
+    /// accumulation bit-for-bit.
+    ///
+    /// Traffic is accounted on the [`CommStats`] tensor-parallel leg
+    /// (the tag must be in the [`tags::tp`] namespace): `4·len` bytes
+    /// per endpoint per message → `8·len·T·(T−1)` bytes and
+    /// `2·T·(T−1)` message records per sync event across the group.
+    ///
+    /// [`tags::tp`]: super::tags::tp
+    pub fn all_reduce_sum_ranked(
+        &self,
+        tag: u64,
+        step: u64,
+        group: &[usize],
+        index: usize,
+        data: &mut [f32],
+    ) {
+        debug_assert_eq!(tag >> 56, super::tags::TP_PREFIX, "TP fold requires a tags::tp tag");
+        let me = group[index];
+        let shape = [data.len()];
+        for (u, &peer) in group.iter().enumerate() {
+            if u != index {
+                self.send(tag, step, 0, me, peer, &shape, data.to_vec());
+            }
+        }
+        let mut acc: Option<Vec<f32>> = None;
+        for (u, &peer) in group.iter().enumerate() {
+            let part: Vec<f32> = if u == index {
+                data.to_vec()
+            } else {
+                self.recv(tag, step, 0, peer, me).1
+            };
+            match &mut acc {
+                None => acc = Some(part),
+                Some(a) => {
+                    for (x, p) in a.iter_mut().zip(part.iter()) {
+                        *x += p;
+                    }
+                }
+            }
+        }
+        data.copy_from_slice(&acc.expect("TP group must be non-empty"));
     }
 }
 
@@ -373,6 +438,54 @@ mod tests {
         net.send(super::super::tags::act_fwd(0), 0, 3, 0, 1, &[1], vec![20.0]);
         assert_eq!(net.recv(super::super::tags::act_fwd(0), 0, 3, 0, 1).1, vec![20.0]);
         assert_eq!(net.recv(super::super::tags::act_fwd(0), 1, 0, 0, 1).1, vec![10.0]);
+    }
+
+    #[test]
+    fn tp_all_reduce_folds_in_rank_order_and_accounts_on_tp_leg() {
+        let stats = Arc::new(CommStats::default());
+        let t = 3usize;
+        // a non-trivial group: TP ranks 0..3 living at global ranks 2,5,8
+        let group = vec![2usize, 5, 8];
+        let net = Arc::new(ActNet::new(9, 4, 1, Arc::clone(&stats)));
+        let partials = [vec![1.0f32, 1e-8], vec![-1.0, 2e-8], vec![3.0, 4e-8]];
+        let mut handles = Vec::new();
+        for (i, p) in partials.iter().enumerate() {
+            let net = Arc::clone(&net);
+            let group = group.clone();
+            let mut buf = p.clone();
+            handles.push(std::thread::spawn(move || {
+                net.all_reduce_sum_ranked(super::super::tags::tp(7), 0, &group, i, &mut buf);
+                buf
+            }));
+        }
+        let results: Vec<Vec<f32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // sequential fold in TP-rank order, no scaling
+        let expect = vec![(1.0f32 + -1.0) + 3.0, (1e-8f32 + 2e-8) + 4e-8];
+        for r in &results {
+            assert_eq!(r, &expect, "every TP rank must hold the rank-ordered sum");
+        }
+        // exact closed-form accounting: T(T−1) messages of 2 elems,
+        // charged 4·elems at each endpoint on the TP leg only
+        let (bytes, msgs) = stats.tp();
+        assert_eq!(bytes, (8 * 2 * t * (t - 1)) as u64);
+        assert_eq!(msgs, (2 * t * (t - 1)) as u64);
+        assert_eq!(stats.p2p(), (0, 0), "TP traffic must not leak onto the p2p leg");
+        // the TP leg is never dtype-rescaled: payloads are exact f32
+        stats.set_elem_bytes(2);
+        let net2 = ActNet::new(2, 2, 1, Arc::clone(&stats));
+        let g2 = [0usize, 1];
+        let s2 = Arc::clone(&stats);
+        let n2 = Arc::new(net2);
+        let n2b = Arc::clone(&n2);
+        let h = std::thread::spawn(move || {
+            let mut b = vec![1.0f32; 5];
+            n2b.all_reduce_sum_ranked(super::super::tags::tp(0), 0, &g2, 1, &mut b);
+        });
+        let mut b = vec![2.0f32; 5];
+        n2.all_reduce_sum_ranked(super::super::tags::tp(0), 0, &g2, 0, &mut b);
+        h.join().unwrap();
+        let (bytes2, _) = s2.tp();
+        assert_eq!(bytes2 - bytes, 8 * 5 * 2 * 1);
     }
 
     #[test]

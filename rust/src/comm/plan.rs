@@ -36,7 +36,7 @@
 use super::algo::{make_comm_shared, CommAlgo, Topology};
 use super::hier::HierComm;
 use super::{tags, CommStats, Communicator, ShardStage};
-use crate::memsim::{drain_point, CollOp, Interconnect};
+use crate::memsim::{drain_point, tp_collective_s, CollOp, Interconnect};
 use crate::optim::bucket::partition_by_bytes;
 use crate::tensor::dtype::Dtype;
 use std::sync::{Arc, RwLock};
@@ -60,6 +60,12 @@ pub struct UnitPlan {
     /// collective call (`HierComm::with_stats_chunked`); `None` sends
     /// whole messages. Only ever `Some` when `algo` is `Hier`.
     pub hier_chunk_elems: Option<usize>,
+    /// Tensor-parallel degree the planner assigned this unit (layer):
+    /// its gradient collective runs on a 1/tp bucket shard while one
+    /// activation fold per direction rides the tp leg
+    /// ([`crate::memsim::tp_collective_s`]). 1 unless the caller offered
+    /// [`PlanInputs::tp_degrees`] candidates.
+    pub tp: usize,
     /// Predicted drain-time comm seconds for this unit under the choice.
     pub pred_comm_s: f64,
 }
@@ -114,7 +120,7 @@ impl StepPlan {
 
     /// Human-readable plan rows for the CLI / bench tables.
     pub fn table(&self) -> String {
-        let mut out = String::from("  unit     elems  algo  chunk  hchunk      pred ms\n");
+        let mut out = String::from("  unit     elems  algo  tp  chunk  hchunk      pred ms\n");
         for u in &self.units {
             let chunk = match u.chunk_elems {
                 Some(c) => format!("{c}"),
@@ -125,10 +131,11 @@ impl StepPlan {
                 None => "-".to_string(),
             };
             out.push_str(&format!(
-                "  {:>4}  {:>8}  {:<5} {:>6}  {:>6}  {:>9.4}\n",
+                "  {:>4}  {:>8}  {:<5} {:>3} {:>6}  {:>6}  {:>9.4}\n",
                 u.unit,
                 u.elems,
                 u.algo.label(),
+                u.tp,
                 chunk,
                 hchunk,
                 u.pred_comm_s * 1e3
@@ -170,6 +177,19 @@ pub struct PlanInputs<'a> {
     /// prices (latency/hop terms are unchanged, so the best algorithm
     /// can genuinely differ from the FP32 plan on latency-bound units).
     pub dtype: Dtype,
+    /// Candidate tensor-parallel degrees the planner may assign *per
+    /// unit* (layer), jointly with the algorithm and chunk split: a
+    /// degree `t` shrinks the unit's gradient collective to a 1/t
+    /// bucket shard but adds one activation fold per direction on the
+    /// tp leg ([`crate::memsim::tp_collective_s`] prices it). Empty =
+    /// the TP axis is fixed outside the planner (every unit plans at
+    /// degree 1 — e.g. a live run whose buckets are already TP shards).
+    pub tp_degrees: &'a [usize],
+    /// Per-unit activation element counts (the row-linear output each
+    /// TP fold of that unit moves). Units beyond the slice price a
+    /// zero-element fold, which makes larger degrees free there — so
+    /// supply this whenever `tp_degrees` is non-empty.
+    pub tp_act_elems: &'a [usize],
 }
 
 /// Drain-time collective seconds of one unit of `n` elements: AR
@@ -241,57 +261,77 @@ pub fn plan_units(units: &[usize], inp: &PlanInputs) -> StepPlan {
     let mut chosen: Vec<Option<UnitPlan>> = (0..u).map(|_| None).collect();
     let mut finish = 0.0f64;
     let mut hidden = 0.0f64;
+    // TP candidate degrees (empty = the axis is fixed, plan at 1). The
+    // joint (algo × chunk × tp) minimization per unit keeps the greedy
+    // dominance argument intact: tp only changes this unit's own cost —
+    // a smaller gradient shard vs. the activation folds it buys — so the
+    // per-unit argmin still dominates every fixed (algo, tp) assignment.
+    let tp_cands: Vec<usize> =
+        if inp.tp_degrees.is_empty() { vec![1] } else { inp.tp_degrees.to_vec() };
     for i in (0..u).rev() {
-        let n = units[i];
+        let full_n = units[i];
+        let act = inp.tp_act_elems.get(i).copied().unwrap_or(0);
         let drain = drain_point(bwd, u, i);
         let start = drain.max(finish);
-        let mut best: Option<(f64, CommAlgo, Option<usize>, Option<usize>)> = None;
-        for &algo in &candidates {
-            for parts in chunk_splits(n, inp.workers) {
-                let chunk = (n + parts - 1) / parts;
-                let workers = inp.workers.max(1);
-                let waves = (((parts + workers - 1) / workers).max(1)) as f64;
-                // the inter-node pipeline only applies to a whole-bucket
-                // hierarchical collective: executor chunk jobs already
-                // split the message, and non-hier shapes have no tree
-                // phase to pipeline
-                let hier_cands = if algo == CommAlgo::Hier && parts == 1 {
-                    hier_chunk_candidates(n)
-                } else {
-                    vec![0usize]
-                };
-                for hc in hier_cands {
-                    let eb = inp.dtype.elem_bytes();
-                    let t = if parts == 1 {
-                        unit_comm_s(inp.ic, algo, inp.stage, n, hc, eb)
+        let mut best: Option<(f64, CommAlgo, Option<usize>, Option<usize>, usize)> = None;
+        for &tp in &tp_cands {
+            let tp = tp.max(1);
+            // per-rank bucket shard: the fused drain reduces 1/tp of the
+            // unit; one forward + one backward fold per step ride the tp
+            // leg at the unit's activation width
+            let n = (full_n + tp - 1) / tp;
+            let fold_s = 2.0 * tp_collective_s(inp.ic, act, tp);
+            for &algo in &candidates {
+                for parts in chunk_splits(n, inp.workers) {
+                    let chunk = (n + parts - 1) / parts;
+                    let workers = inp.workers.max(1);
+                    let waves = (((parts + workers - 1) / workers).max(1)) as f64;
+                    // the inter-node pipeline only applies to a whole-bucket
+                    // hierarchical collective: executor chunk jobs already
+                    // split the message, and non-hier shapes have no tree
+                    // phase to pipeline
+                    let hier_cands = if algo == CommAlgo::Hier && parts == 1 {
+                        hier_chunk_candidates(n)
                     } else {
-                        waves * unit_comm_s(inp.ic, algo, inp.stage, chunk, 0, eb)
+                        vec![0usize]
                     };
-                    let better = match &best {
-                        None => true,
-                        Some((bt, _, _, _)) => t < *bt,
-                    };
-                    if better {
-                        best = Some((
-                            t,
-                            algo,
-                            if parts == 1 { None } else { Some(chunk) },
-                            if hc == 0 { None } else { Some(hc) },
-                        ));
+                    for hc in hier_cands {
+                        let eb = inp.dtype.elem_bytes();
+                        let t = fold_s
+                            + if parts == 1 {
+                                unit_comm_s(inp.ic, algo, inp.stage, n, hc, eb)
+                            } else {
+                                waves * unit_comm_s(inp.ic, algo, inp.stage, chunk, 0, eb)
+                            };
+                        let better = match &best {
+                            None => true,
+                            Some((bt, _, _, _, _)) => t < *bt,
+                        };
+                        if better {
+                            best = Some((
+                                t,
+                                algo,
+                                if parts == 1 { None } else { Some(chunk) },
+                                if hc == 0 { None } else { Some(hc) },
+                                tp,
+                            ));
+                        }
                     }
                 }
             }
         }
-        let (t, algo, chunk_elems, hier_chunk_elems) = best.expect("at least one candidate");
+        let (t, algo, chunk_elems, hier_chunk_elems, tp) =
+            best.expect("at least one candidate");
         let fin = start + t;
         hidden += bwd.min(fin) - bwd.min(start);
         finish = fin;
         chosen[i] = Some(UnitPlan {
             unit: i,
-            elems: n,
+            elems: full_n,
             algo,
             chunk_elems,
             hier_chunk_elems,
+            tp,
             pred_comm_s: t,
         });
     }
@@ -551,9 +591,12 @@ mod tests {
             workers: 0,
             bucket_cap_bytes: None,
             dtype: Dtype::F32,
+            tp_degrees: &[],
+            tp_act_elems: &[],
         };
         let plan = plan_units(&units, &inp);
         assert_eq!(plan.units[0].algo, CommAlgo::Flat, "tiny unit: flat's two legs");
+        assert!(plan.units.iter().all(|u| u.tp == 1), "no TP candidates offered");
         assert_eq!(plan.units[1].algo, CommAlgo::Hier, "mid unit: two-tier composition");
         assert_eq!(plan.units[2].algo, CommAlgo::Ring, "huge unit: chunked ring");
         assert_eq!(plan.default_algo, CommAlgo::Flat, "scalar reduces: flat");
@@ -576,18 +619,71 @@ mod tests {
                     workers: 0,
                     bucket_cap_bytes: None,
                     dtype: Dtype::F32,
+                    tp_degrees: &[],
+                    tp_act_elems: &[],
                 };
                 let plan = plan_units(&units, &inp);
                 for algo in CommAlgo::ALL {
                     let t: Vec<f64> = units
                         .iter()
-                        .map(|n| unit_comm_s(&ic, algo, stage, *n, 0))
+                        .map(|n| unit_comm_s(&ic, algo, stage, *n, 0, 4))
                         .collect();
                     let (finish, _) = drain_pipeline(backward_s, &t);
                     let exposed = (finish - backward_s).max(0.0);
                     assert!(
                         plan.pred_exposed_s <= exposed + 1e-12,
                         "{stage:?} bwd={backward_s}: plan {:.3e} vs uniform {} {:.3e}",
+                        plan.pred_exposed_s,
+                        algo.label(),
+                        exposed
+                    );
+                }
+            }
+        }
+    }
+
+    /// Joint (TP degree × algo) acceptance: on a two-tier grid the
+    /// greedy plan with per-layer TP candidates is never predicted
+    /// slower than ANY uniform (algo, tp) assignment — the TP fold cost
+    /// (two activation all-reduces per unit) is priced against the
+    /// 1/T-sized gradient collective it buys.
+    #[test]
+    fn plan_with_tp_never_predicted_slower_than_any_uniform_algo_tp() {
+        let ic = clustered(&pcie_x16(1), 8, 4);
+        let units = vec![1 << 12, 1 << 16, 1 << 20, 1 << 18];
+        // per-layer activation elems folded per TP sync (2 syncs priced)
+        let acts = vec![1 << 8, 1 << 10, 1 << 12, 1 << 10];
+        let degrees = [1usize, 2, 4];
+        for backward_s in [0.0, 1e-4, 5e-3] {
+            let inp = PlanInputs {
+                ic: &ic,
+                stage: ShardStage::None,
+                backward_s,
+                workers: 0,
+                bucket_cap_bytes: None,
+                dtype: Dtype::F32,
+                tp_degrees: &degrees,
+                tp_act_elems: &acts,
+            };
+            let plan = plan_units(&units, &inp);
+            for u in &plan.units {
+                assert!(degrees.contains(&u.tp), "chosen degree from the candidate set");
+            }
+            for algo in CommAlgo::ALL {
+                for &tp in &degrees {
+                    let t: Vec<f64> = units
+                        .iter()
+                        .zip(acts.iter())
+                        .map(|(n, a)| {
+                            2.0 * tp_collective_s(&ic, *a, tp)
+                                + unit_comm_s(&ic, algo, ShardStage::None, (n + tp - 1) / tp, 0, 4)
+                        })
+                        .collect();
+                    let (finish, _) = drain_pipeline(backward_s, &t);
+                    let exposed = (finish - backward_s).max(0.0);
+                    assert!(
+                        plan.pred_exposed_s <= exposed + 1e-12,
+                        "bwd={backward_s}: plan {:.3e} vs uniform ({}, tp={tp}) {:.3e}",
                         plan.pred_exposed_s,
                         algo.label(),
                         exposed
@@ -629,12 +725,12 @@ mod tests {
         // added latency, which the planner correctly never picks)
         let ic = clustered(&pcie_x16(1), 16, 4);
         let n = 32 << 20;
-        let whole = unit_comm_s(&ic, CommAlgo::Hier, ShardStage::None, n, 0);
-        let piped = unit_comm_s(&ic, CommAlgo::Hier, ShardStage::None, n, n / 8);
+        let whole = unit_comm_s(&ic, CommAlgo::Hier, ShardStage::None, n, 0, 4);
+        let piped = unit_comm_s(&ic, CommAlgo::Hier, ShardStage::None, n, n / 8, 4);
         assert!(piped < whole, "pipelined {piped:.3e} vs whole {whole:.3e}");
-        let tiny = unit_comm_s(&ic, CommAlgo::Hier, ShardStage::None, 64, 0);
+        let tiny = unit_comm_s(&ic, CommAlgo::Hier, ShardStage::None, 64, 0, 4);
         // 64 elems: no candidate survives the floor, so pricing matches
-        let tiny_c = unit_comm_s(&ic, CommAlgo::Hier, ShardStage::None, 64, 32);
+        let tiny_c = unit_comm_s(&ic, CommAlgo::Hier, ShardStage::None, 64, 32, 4);
         assert!(tiny_c >= tiny, "latency-bound chunking never priced cheaper");
         // forced-Hier candidate set: restrict by planning a unit the
         // planner already routes to hier (mid-size band from the
@@ -647,13 +743,15 @@ mod tests {
             workers: 0,
             bucket_cap_bytes: None,
             dtype: Dtype::F32,
+            tp_degrees: &[],
+            tp_act_elems: &[],
         };
         let plan = plan_units(&[1 << 16, n], &inp);
         for u in &plan.units {
             if u.algo != CommAlgo::Hier {
                 assert_eq!(u.hier_chunk_elems, None, "cap only ever set on hier");
             } else {
-                let base = unit_comm_s(&ic, CommAlgo::Hier, ShardStage::None, u.elems, 0);
+                let base = unit_comm_s(&ic, CommAlgo::Hier, ShardStage::None, u.elems, 0, 4);
                 assert!(u.pred_comm_s <= base + 1e-15, "cap never prices worse than whole");
             }
         }
@@ -706,6 +804,7 @@ mod tests {
                 algo: CommAlgo::Ring,
                 chunk_elems: None,
                 hier_chunk_elems: None,
+                tp: 1,
                 pred_comm_s: 0.0,
             }],
             default_algo: CommAlgo::Flat,
@@ -735,6 +834,8 @@ mod tests {
             workers: 4,
             bucket_cap_bytes: None,
             dtype: Dtype::F32,
+            tp_degrees: &[],
+            tp_act_elems: &[],
         };
         let plan = plan_units(&units, &with);
         assert!(
@@ -757,6 +858,8 @@ mod tests {
             workers: 0,
             bucket_cap_bytes: None,
             dtype: Dtype::F32,
+            tp_degrees: &[],
+            tp_act_elems: &[],
         };
         let (cap, plan) = plan_bucket_caps(&lens, &[1 << 10, 1 << 12, 1 << 20], &inp);
         assert!([1usize << 10, 1 << 12, 1 << 20].contains(&cap));
@@ -836,6 +939,8 @@ mod tests {
                 workers: 0,
                 bucket_cap_bytes: Some(1 << 20),
                 dtype: Dtype::F32,
+                tp_degrees: &[],
+                tp_act_elems: &[],
             },
         );
         assert!(plan.table().contains("unit"), "table renders");

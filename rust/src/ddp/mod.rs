@@ -70,8 +70,8 @@ use crate::comm::{
     Communicator, ShardStage, Topology,
 };
 use crate::exec::kernel::KernelConfig;
-use crate::exec::{ExecConfig, Executor, PipelineCtx};
-use crate::graph::{Graph, ScheduleKind};
+use crate::exec::{ExecConfig, Executor, PipelineCtx, TpCtx};
+use crate::graph::{Graph, ScheduleKind, TpShard};
 use crate::memsim::machines;
 use crate::memsim::Interconnect;
 use crate::optim::bucket::partition_by_bytes;
@@ -180,6 +180,16 @@ pub struct DdpReport {
     /// Activation messages through the p2p leg (one post + one take
     /// record each). 0 on non-pipelined runs.
     pub act_msgs: u64,
+    /// Tensor-parallel group width the run executed (1 = no TP).
+    pub tensor_parallel: usize,
+    /// Bytes through the `CommStats` tp leg across the run — the
+    /// partial-sum fold traffic of every TP all-reduce, both endpoints
+    /// (exact f32 payloads, never dtype-rescaled; the closed form is
+    /// `memsim::tp_act_bytes`). 0 when `tensor_parallel == 1`.
+    pub tp_bytes: u64,
+    /// Messages through the tp leg (one post + one take record per
+    /// peer-to-peer fold payload). 0 when `tensor_parallel == 1`.
+    pub tp_msgs: u64,
 }
 
 /// Configuration of a DDP run.
@@ -271,6 +281,17 @@ pub struct DdpConfig {
     /// micro-batched accumulation. `pipeline_stages == 1 && M > 1` runs
     /// the micro-batched schedule without stage boundaries.
     pub micro_batches: u64,
+    /// `--tensor-parallel T`: Megatron-style tensor model parallelism —
+    /// each pairable linear→elementwise→linear block splits
+    /// column-then-row across T ranks
+    /// ([`crate::graph::Graph::tp_partition`]), and the partial outputs
+    /// fold with one rank-ordered all-reduce per pair per direction on
+    /// the [`tags::tp`] leg of the p2p mailbox. Composes with the full
+    /// grid — total threads = `pipeline_stages × T × world`, each
+    /// (stage, tp) slot keeping its own DP replica group — and the
+    /// fixed fold order keeps the math bit-identical to the T=1
+    /// reference wherever the split widths permit. 1 = off.
+    pub tensor_parallel: usize,
     /// Restore every replica from this checkpoint before step 0
     /// (re-narrowing state to each rank's shard when sharding).
     pub load_from: Option<PathBuf>,
@@ -310,9 +331,36 @@ impl DdpConfig {
             dtype: dtype::dtype_env_default(),
             pipeline_stages: 1,
             micro_batches: 1,
+            tensor_parallel: 1,
             load_from: None,
             save_to: None,
             local_batch_maker,
+        }
+    }
+
+    /// `--calibrate` composes with the flat DP path only: on a gridded
+    /// run (pipeline stages, micro-batches, or tensor parallelism) the
+    /// probe collectives would interleave with in-flight 1F1B
+    /// activation and TP fold traffic on the shared mailbox, corrupting
+    /// the blocked-time deltas the fit reads. Instead of asserting, the
+    /// grid path *skips* calibration and explains itself: `Some(note)`
+    /// when the gate engages (the run proceeds with `calibrate_steps`
+    /// treated as 0 and reports `fitted: None`; `main` prints the
+    /// note), `None` when calibration runs or was never requested. Same
+    /// contract as `ExecConfig::grad_elim_gate_note`.
+    pub fn calibrate_gate_note(&self) -> Option<String> {
+        let gridded =
+            self.pipeline_stages > 1 || self.micro_batches > 1 || self.tensor_parallel > 1;
+        if gridded && self.calibrate_steps > 0 {
+            Some(format!(
+                "calibrate: skipped ({} probe steps requested) — probe collectives would \
+                 interleave with in-flight 1F1B activation / TP fold traffic on the shared \
+                 mailbox; calibrate on the flat DP layout and pass the fit via the planner \
+                 interconnect instead",
+                self.calibrate_steps
+            ))
+        } else {
+            None
         }
     }
 }
@@ -347,7 +395,7 @@ pub fn train_ddp(
     hyper: Hyper,
     cfg: DdpConfig,
 ) -> DdpReport {
-    if cfg.pipeline_stages > 1 || cfg.micro_batches > 1 {
+    if cfg.pipeline_stages > 1 || cfg.micro_batches > 1 || cfg.tensor_parallel > 1 {
         return train_pipeline(build, make_opt, hyper, cfg);
     }
     let world = cfg.world;
@@ -424,6 +472,10 @@ pub fn train_ddp(
                     workers,
                     bucket_cap_bytes: Some(cap),
                     dtype: cfg.dtype,
+                    // buckets are already laid out at the run's fixed TP
+                    // degree: nothing for the planner to choose here
+                    tp_degrees: &[],
+                    tp_act_elems: &[],
                 },
             ));
             let session = Arc::new(MixedComm::from_plan(&plan));
@@ -566,6 +618,8 @@ pub fn train_ddp(
                                             workers: *workers,
                                             bucket_cap_bytes: Some(*cap),
                                             dtype,
+                                            tp_degrees: &[],
+                                            tp_act_elems: &[],
                                         },
                                     ))
                                 },
@@ -696,6 +750,9 @@ pub fn train_ddp(
         bubble_frac: Vec::new(),
         act_bytes: 0,
         act_msgs: 0,
+        tensor_parallel: 1,
+        tp_bytes: 0,
+        tp_msgs: 0,
     }
 }
 
@@ -730,24 +787,38 @@ fn split_micros(batch: &[Tensor], m: u64) -> Vec<Vec<Tensor>> {
 /// What the chain-0 rank of each stage measured, published for the
 /// report: accumulated activation-blocked time and accumulated step
 /// span (the span includes the blocked time, so wait/span is the
-/// measured bubble), plus the stage's final parameter snapshot (stage
-/// order concatenates to the full model's pid order).
+/// measured bubble).
 #[derive(Default)]
 struct StageLeader {
     wait_s: f64,
     span_s: f64,
-    params: Vec<Tensor>,
 }
 
-/// Run a DP×PP grid: `cfg.pipeline_stages` pipeline stages × `cfg.world`
+/// One (stage, tp)-slot chain-0 export, published for the cross-TP
+/// merge after the thread scope joins: the slot's shard layout
+/// ([`TpInfo::shards`](crate::graph::TpInfo)), its final parameter
+/// snapshot, and — when saving — its checkpoint entries. Merging the
+/// `t` slots of a stage with [`TpShard::merge`] reassembles the full
+/// tensors (TP-rank order is the slice order), and stage order *is*
+/// pid order, so the concatenation rebuilds the full model.
+struct TpPart {
+    shards: Vec<TpShard>,
+    params: Vec<Tensor>,
+    entries: Option<Vec<(String, Tensor, Vec<Tensor>)>>,
+}
+
+/// Run a DP×PP×TP grid: `cfg.pipeline_stages` pipeline stages ×
+/// `cfg.tensor_parallel` tensor-parallel slots per stage × `cfg.world`
 /// data-parallel chains, `cfg.micro_batches` 1F1B micro-batches per
-/// step. Each stage's replica group meets through its own communicator
-/// (DP collectives and ZeRO shards stay within the group); boundary
-/// activations/activation-grads cross stages as tagged p2p messages
-/// over one bounded [`ActNet`]. Every communicator and the mailbox
-/// share a single [`CommStats`], so the report's accounting stays one
-/// path. Dispatched from [`train_ddp`] when `pipeline_stages > 1` or
-/// `micro_batches > 1`.
+/// step. Each (stage, tp) slot's replica group meets through its own
+/// communicator (DP collectives and ZeRO shards stay within the slot);
+/// boundary activations/activation-grads cross stages — and TP
+/// partial-sum folds cross the slots of a stage — as tagged p2p
+/// messages over one bounded [`ActNet`]. Every communicator and the
+/// mailbox share a single [`CommStats`], so the report's accounting
+/// stays one path. Dispatched from [`train_ddp`] when
+/// `pipeline_stages > 1`, `micro_batches > 1`, or
+/// `tensor_parallel > 1`.
 fn train_pipeline(
     build: impl Fn() -> Graph,
     make_opt: impl Fn() -> Box<dyn Optimizer>,
@@ -755,6 +826,7 @@ fn train_pipeline(
     cfg: DdpConfig,
 ) -> DdpReport {
     let stages = cfg.pipeline_stages.max(1);
+    let tpn = cfg.tensor_parallel.max(1);
     let dp = cfg.world;
     let micro = cfg.micro_batches.max(1);
     assert!(dp >= 1, "DDP needs at least one replica chain");
@@ -762,18 +834,19 @@ fn train_pipeline(
         !cfg.shard_stage.sharded() || cfg.bucket_cap_bytes.is_some(),
         "shard stages require bucketed storage: set bucket_cap_bytes (--bucket-cap)"
     );
-    assert_eq!(
-        cfg.calibrate_steps, 0,
-        "pipeline runs do not calibrate: probe collectives would interleave \
-         with in-flight 1F1B activation traffic"
-    );
+    // `--calibrate` is *gated*, not asserted, on the grid path: probe
+    // collectives would interleave with in-flight 1F1B activation / TP
+    // fold traffic, so the run proceeds with calibration skipped and
+    // `fitted: None` (see [`DdpConfig::calibrate_gate_note`], printed
+    // by `main`).
+    debug_assert!(cfg.calibrate_steps == 0 || cfg.calibrate_gate_note().is_some());
     assert_eq!(
         cfg.ranks_per_node, 0,
         "pipeline stages compose with flat DP replica groups \
          (two-tier topology within a stage is not wired up)"
     );
-    // one accounting path for every stage's collectives and the
-    // activation mailbox
+    // one accounting path for every slot's collectives, the activation
+    // mailbox, and the TP fold leg
     let stats = Arc::new(CommStats::default());
     stats.set_elem_bytes(cfg.dtype.elem_bytes() as u64);
     let stage_topo = Topology::flat(dp);
@@ -785,13 +858,19 @@ fn train_pipeline(
         let ext_shapes: Vec<Vec<usize>> = sample.iter().map(|t| t.shape().to_vec()).collect();
         probe.pipeline_cuts(stages, &ext_shapes)
     };
-    // per-stage communicators over the shared stats; `--algo auto`
-    // resolves one plan per stage from that stage's own bucket partition
+    // per-(stage, tp) communicators over the shared stats; `--algo
+    // auto` resolves one plan per stage from the stage's TP-rank-0
+    // partition (every TP rank's shard lengths are identical — shards
+    // are 1/T slices of the same tensors), shared by the stage's T
+    // MixedComm sessions
     let mut stage_plans: Vec<Option<Arc<StepPlan>>> = vec![None; stages];
-    let stage_comms: Vec<Arc<dyn Communicator>> = match cfg.algo {
-        AlgoSelect::Fixed(algo) => (0..stages)
-            .map(|_| make_comm_shared(algo, &stage_topo, Arc::clone(&stats)))
-            .collect(),
+    let mut stage_comms: Vec<Arc<dyn Communicator>> = Vec::with_capacity(stages * tpn);
+    match cfg.algo {
+        AlgoSelect::Fixed(algo) => {
+            for _ in 0..stages * tpn {
+                stage_comms.push(make_comm_shared(algo, &stage_topo, Arc::clone(&stats)));
+            }
+        }
         AlgoSelect::Auto => {
             let cap = cfg.bucket_cap_bytes.expect(
                 "--algo auto plans per bucket and requires bucketed storage \
@@ -811,245 +890,279 @@ fn train_pipeline(
             } else {
                 0
             };
-            (0..stages)
-                .map(|s| {
-                    let (g, _) = build().into_stage(&cuts, s);
-                    let lens: Vec<usize> = g
-                        .store
-                        .params
-                        .iter()
-                        .map(|p| p.data.read().unwrap().value.len())
-                        .collect();
-                    let units: Vec<usize> = partition_by_bytes(&lens, cap)
-                        .iter()
-                        .map(|group| group.iter().map(|i| lens[*i]).sum())
-                        .collect();
-                    let plan = Arc::new(plan_units(
-                        &units,
-                        &PlanInputs {
-                            ic: &ic,
-                            stage: cfg.shard_stage,
-                            backward_s: cfg.planner_backward_s.unwrap_or(0.0),
-                            workers,
-                            bucket_cap_bytes: Some(cap),
-                            dtype: cfg.dtype,
-                        },
-                    ));
-                    let session =
-                        Arc::new(MixedComm::from_plan_shared(&plan, Arc::clone(&stats)));
-                    stage_plans[s] = Some(plan);
-                    session as Arc<dyn Communicator>
-                })
-                .collect()
+            for s in 0..stages {
+                let (g, sinfo) = build().into_stage(&cuts, s);
+                let (g, _) = g.tp_partition(tpn, 0, sinfo.recv_ext);
+                let lens: Vec<usize> = g
+                    .store
+                    .params
+                    .iter()
+                    .map(|p| p.data.read().unwrap().value.len())
+                    .collect();
+                let units: Vec<usize> = partition_by_bytes(&lens, cap)
+                    .iter()
+                    .map(|group| group.iter().map(|i| lens[*i]).sum())
+                    .collect();
+                let plan = Arc::new(plan_units(
+                    &units,
+                    &PlanInputs {
+                        ic: &ic,
+                        stage: cfg.shard_stage,
+                        backward_s: cfg.planner_backward_s.unwrap_or(0.0),
+                        workers,
+                        bucket_cap_bytes: Some(cap),
+                        dtype: cfg.dtype,
+                        // the run's TP degree is fixed and the buckets
+                        // above are already its shards: nothing left
+                        // for the planner to choose on this axis
+                        tp_degrees: &[],
+                        tp_act_elems: &[],
+                    },
+                ));
+                for _ in 0..tpn {
+                    stage_comms.push(Arc::new(MixedComm::from_plan_shared(
+                        &plan,
+                        Arc::clone(&stats),
+                    )) as Arc<dyn Communicator>);
+                }
+                stage_plans[s] = Some(plan);
+            }
         }
     };
-    let stage_plans = stage_plans; // immutable from here
-    // the activation network: one bounded mailbox over the whole grid,
-    // queue depth S+1 per leg (enough for every in-flight 1F1B
-    // micro-batch plus one — backpressure, not deadlock)
-    let net = Arc::new(ActNet::new(stages * dp, stages + 1, micro, Arc::clone(&stats)));
+    let stage_comms = stage_comms; // immutable from here
+    let stage_plans = stage_plans;
+    // TP load path: parse the checkpoint once up front — full tensors
+    // under original names — and apply it to each slot's stage graph
+    // *before* `tp_partition` slices values and state (the
+    // load-before-resharding contract keeps the file TP-layout-,
+    // world-size-, and stage-portable)
+    let ckpt_in = cfg
+        .load_from
+        .as_ref()
+        .map(|p| checkpoint::read_entries(p).expect("ddp: pipeline checkpoint restore"));
+    // the activation network: one bounded mailbox over the whole
+    // S×T×dp grid, queue depth S+1 per leg (enough for every in-flight
+    // 1F1B micro-batch plus one — backpressure, not deadlock; a TP fold
+    // keeps at most 2 messages in flight per edge, which the same bound
+    // covers)
+    let net = Arc::new(ActNet::new(stages * tpn * dp, stages + 1, micro, Arc::clone(&stats)));
     let leaders: Arc<Mutex<Vec<Option<StageLeader>>>> =
         Arc::new(Mutex::new((0..stages).map(|_| None).collect()));
-    let ckpt_parts: Arc<Mutex<Vec<Option<Vec<(String, Tensor, Vec<Tensor>)>>>>> =
-        Arc::new(Mutex::new((0..stages).map(|_| None).collect()));
+    let tp_parts: Arc<Mutex<Vec<Option<TpPart>>>> =
+        Arc::new(Mutex::new((0..stages * tpn).map(|_| None).collect()));
     let losses_out: Arc<Mutex<Vec<f32>>> = Arc::new(Mutex::new(Vec::new()));
     let rank0: Arc<Mutex<Option<RankZero>>> = Arc::new(Mutex::new(None));
+    let saved_step: Arc<Mutex<u64>> = Arc::new(Mutex::new(0));
+    let save_path = cfg.save_to.clone();
     let batch_maker = Arc::new(cfg.local_batch_maker);
-    let sync = Arc::new(Barrier::new(stages * dp));
+    let sync = Arc::new(Barrier::new(stages * tpn * dp));
     std::thread::scope(|scope| {
         for s in 0..stages {
-            for d in 0..dp {
-                let comm = Arc::clone(&stage_comms[s]);
-                let plan = stage_plans[s].clone();
-                let net = Arc::clone(&net);
-                let leaders = Arc::clone(&leaders);
-                let ckpt_parts = Arc::clone(&ckpt_parts);
-                let losses_out = Arc::clone(&losses_out);
-                let rank0 = Arc::clone(&rank0);
-                let batch_maker = Arc::clone(&batch_maker);
-                let sync = Arc::clone(&sync);
-                let (graph, info) = build().into_stage(&cuts, s);
-                let opt = make_opt();
-                let hyper = hyper.clone();
-                let schedule = cfg.schedule;
-                let steps = cfg.steps;
-                let bucket_cap_bytes = cfg.bucket_cap_bytes;
-                let comm_chunk_bytes = cfg.comm_chunk_bytes;
-                let shard = cfg.shard_stage;
-                let overlap_threads = cfg.overlap_threads;
-                let kernel = cfg.kernel;
-                let grad_elim = cfg.grad_elim;
-                let dtype = cfg.dtype;
-                let load_from = cfg.load_from.clone();
-                let save_to = cfg.save_to.clone();
-                scope.spawn(move || {
-                    let threads = if schedule == ScheduleKind::BackwardFusion {
-                        overlap_threads
-                    } else {
-                        0
-                    };
-                    let mut ex = Executor::new(
-                        graph,
-                        opt,
-                        hyper,
-                        ExecConfig {
-                            schedule,
-                            threads,
-                            bucket_cap_bytes,
-                            comm_chunk_bytes,
-                            kernel,
-                            grad_elim,
-                            dtype,
-                            micro_batches: micro,
-                            ..Default::default()
-                        },
-                    )
-                    .expect("executor");
-                    if dp > 1 {
-                        ex.set_comm(CommCtx {
-                            comm: Arc::clone(&comm),
-                            rank: d,
-                            stage: shard,
-                            plan,
-                            topo: stage_topo,
-                        });
-                    }
-                    if let Some(path) = &load_from {
-                        // the merged file names every stage's params;
-                        // each stage restores its slice by name
-                        checkpoint::load_subset(&mut ex, path)
+            for t in 0..tpn {
+                for d in 0..dp {
+                    let comm = Arc::clone(&stage_comms[s * tpn + t]);
+                    let plan = stage_plans[s].clone();
+                    let net = Arc::clone(&net);
+                    let leaders = Arc::clone(&leaders);
+                    let tp_parts = Arc::clone(&tp_parts);
+                    let losses_out = Arc::clone(&losses_out);
+                    let rank0 = Arc::clone(&rank0);
+                    let saved_step = Arc::clone(&saved_step);
+                    let batch_maker = Arc::clone(&batch_maker);
+                    let sync = Arc::clone(&sync);
+                    let (graph, info) = build().into_stage(&cuts, s);
+                    // restore full tensors before the TP slice (no-op
+                    // when not loading); the merged file names every
+                    // stage's params and each stage applies its slice
+                    let loaded_step = ckpt_in.as_ref().map(|(step, entries)| {
+                        checkpoint::apply_entries(&graph, entries)
                             .expect("ddp: pipeline checkpoint restore");
-                        ex.graph.store.apply_shard_stage(shard, &stage_topo, d);
-                    }
-                    let pipe = PipelineCtx {
-                        net,
-                        stage: s,
-                        stages,
-                        dp,
-                        dp_index: d,
-                        recv_ext: info.recv_ext,
-                        send_node: info.send_node,
-                    };
-                    let mut losses = Vec::new();
-                    let mut wait_s = 0.0f64;
-                    let mut span_s = 0.0f64;
-                    let t_loop = Instant::now();
-                    for step in 0..steps {
-                        let batch = (batch_maker)(d, step);
-                        let micros = split_micros(&batch, micro);
-                        let st = ex.pipeline_step(&micros, &pipe);
-                        span_s += (st.forward + st.backward + st.optimizer).as_secs_f64();
-                        wait_s += st.p2p_wait.as_secs_f64();
-                        if s + 1 == stages {
-                            // global loss = mean over the last stage's
-                            // chain shards, like the DP path
-                            let mut lbuf = [st.loss];
-                            if dp > 1 {
-                                comm.all_reduce_mean(d, tags::LOSS, &mut lbuf);
-                            }
-                            if d == 0 {
-                                losses.push(lbuf[0]);
-                            }
-                        }
-                    }
-                    let loop_wall = t_loop.elapsed();
-                    sync.wait();
-                    let in_loop_rounds = if s == 0 && d == 0 {
-                        comm.stats().rounds.load(Ordering::Relaxed)
-                    } else {
-                        0
-                    };
-                    sync.wait();
-                    // FF flush is collective under sharding: every rank
-                    // of a stage group flushes together
-                    ex.flush_pending();
-                    let footprint = if s == 0 && d == 0 {
-                        let store = &ex.graph.store;
-                        let update_elems_per_step: usize = if shard.sharded() {
-                            store
-                                .buckets
-                                .as_ref()
-                                .expect("sharding implies buckets")
-                                .buckets
-                                .iter()
-                                .map(|b| {
-                                    let n = b.data.read().unwrap().num_elems();
-                                    node_local_span(n, stage_topo.world, stage_topo.rpn(), d).1
-                                })
-                                .sum()
+                        *step
+                    });
+                    let (graph, tpinfo) = graph.tp_partition(tpn, t, info.recv_ext);
+                    let opt = make_opt();
+                    let hyper = hyper.clone();
+                    let schedule = cfg.schedule;
+                    let steps = cfg.steps;
+                    let bucket_cap_bytes = cfg.bucket_cap_bytes;
+                    let comm_chunk_bytes = cfg.comm_chunk_bytes;
+                    let shard = cfg.shard_stage;
+                    let overlap_threads = cfg.overlap_threads;
+                    let kernel = cfg.kernel;
+                    let grad_elim = cfg.grad_elim;
+                    let dtype = cfg.dtype;
+                    let saving = cfg.save_to.is_some();
+                    scope.spawn(move || {
+                        let threads = if schedule == ScheduleKind::BackwardFusion {
+                            overlap_threads
                         } else {
-                            store.num_scalars()
+                            0
                         };
-                        Some((ex.arena_peak, update_elems_per_step))
-                    } else {
-                        None
-                    };
-                    ex.materialize_values();
-                    if s + 1 == stages && d == 0 {
-                        *losses_out.lock().unwrap() = std::mem::take(&mut losses);
-                    }
-                    if d == 0 {
-                        leaders.lock().unwrap()[s] = Some(StageLeader {
-                            wait_s,
-                            span_s,
-                            params: ex.graph.store.snapshot(),
-                        });
-                    }
-                    if let Some((peak, update_elems_per_step)) = footprint {
-                        let (olap, total) = (ex.overlapped_job_ns, ex.total_job_ns);
-                        *rank0.lock().unwrap() = Some(RankZero {
-                            losses: Vec::new(),
-                            loop_wall,
-                            in_loop_rounds,
-                            probe_traffic: CommStatsSnapshot::default(),
-                            probe_wall: Duration::ZERO,
-                            overlap_frac: if total > 0 {
-                                olap as f64 / total as f64
-                            } else {
-                                0.0
+                        let mut ex = Executor::new(
+                            graph,
+                            opt,
+                            hyper,
+                            ExecConfig {
+                                schedule,
+                                threads,
+                                bucket_cap_bytes,
+                                comm_chunk_bytes,
+                                kernel,
+                                grad_elim,
+                                dtype,
+                                micro_batches: micro,
+                                ..Default::default()
                             },
-                            opt_state_bytes: peak.opt_state_bytes,
-                            peak_grad_arena_bytes: peak.grad_bytes,
-                            peak_value_arena_bytes: peak.value_bytes,
-                            update_elems_per_step,
-                            final_params: Vec::new(),
-                        });
-                    }
-                    if save_to.is_some() {
-                        // gather sharded state to full coverage (a
-                        // collective within the stage group), then stage
-                        // leaders export their slice and one rank writes
-                        // the merged, layout-portable file
-                        ex.prepare_checkpoint();
-                        if d == 0 {
-                            ckpt_parts.lock().unwrap()[s] = Some(ex.export_entries());
+                        )
+                        .expect("executor");
+                        if dp > 1 {
+                            ex.set_comm(CommCtx {
+                                comm: Arc::clone(&comm),
+                                rank: d,
+                                stage: shard,
+                                plan,
+                                topo: stage_topo,
+                            });
                         }
+                        if let Some(step) = loaded_step {
+                            ex.set_step(step);
+                            // re-apply the slot's steady-state arena
+                            // layout (the restore put full-coverage
+                            // shard tensors everywhere)
+                            ex.graph.store.apply_shard_stage(shard, &stage_topo, d);
+                        }
+                        if tpn > 1 {
+                            let group: Vec<usize> =
+                                (0..tpn).map(|u| (s * tpn + u) * dp + d).collect();
+                            ex.set_tp(TpCtx::new(
+                                Arc::clone(&net),
+                                group,
+                                t,
+                                tpinfo.clone(),
+                            ));
+                        }
+                        let pipe = PipelineCtx {
+                            net,
+                            stage: s,
+                            stages,
+                            dp,
+                            dp_index: d,
+                            recv_ext: info.recv_ext,
+                            send_node: info.send_node,
+                            tp: tpn,
+                            tp_index: t,
+                        };
+                        let mut losses = Vec::new();
+                        let mut wait_s = 0.0f64;
+                        let mut span_s = 0.0f64;
+                        let t_loop = Instant::now();
+                        for step in 0..steps {
+                            let batch = (batch_maker)(d, step);
+                            let micros = split_micros(&batch, micro);
+                            let st = ex.pipeline_step(&micros, &pipe);
+                            span_s += (st.forward + st.backward + st.optimizer).as_secs_f64();
+                            wait_s += st.p2p_wait.as_secs_f64();
+                            if s + 1 == stages {
+                                // global loss = mean over the last
+                                // stage's chain shards, like the DP
+                                // path; every TP slot computes the same
+                                // full (folded) loss, so slot 0
+                                // publishes
+                                let mut lbuf = [st.loss];
+                                if dp > 1 {
+                                    comm.all_reduce_mean(d, tags::LOSS, &mut lbuf);
+                                }
+                                if t == 0 && d == 0 {
+                                    losses.push(lbuf[0]);
+                                }
+                            }
+                        }
+                        let loop_wall = t_loop.elapsed();
                         sync.wait();
-                        if s == 0 && d == 0 {
-                            let parts: Vec<(String, Tensor, Vec<Tensor>)> = ckpt_parts
-                                .lock()
-                                .unwrap()
-                                .iter_mut()
-                                .map(|p| p.take().expect("every stage leader exported"))
-                                .reduce(|mut a, mut b| {
-                                    a.append(&mut b);
-                                    a
-                                })
-                                .unwrap_or_default();
-                            checkpoint::save_parts(
-                                ex.step_count(),
-                                &parts,
-                                save_to.as_ref().expect("checked above"),
-                            )
-                            .expect("ddp: pipeline checkpoint save");
+                        let in_loop_rounds = if s == 0 && t == 0 && d == 0 {
+                            comm.stats().rounds.load(Ordering::Relaxed)
+                        } else {
+                            0
+                        };
+                        sync.wait();
+                        // FF flush is collective under sharding: every
+                        // rank of a slot group flushes together
+                        ex.flush_pending();
+                        let footprint = if s == 0 && t == 0 && d == 0 {
+                            let store = &ex.graph.store;
+                            let update_elems_per_step: usize = if shard.sharded() {
+                                store
+                                    .buckets
+                                    .as_ref()
+                                    .expect("sharding implies buckets")
+                                    .buckets
+                                    .iter()
+                                    .map(|b| {
+                                        let n = b.data.read().unwrap().num_elems();
+                                        node_local_span(n, stage_topo.world, stage_topo.rpn(), d)
+                                            .1
+                                    })
+                                    .sum()
+                            } else {
+                                store.num_scalars()
+                            };
+                            Some((ex.arena_peak, update_elems_per_step))
+                        } else {
+                            None
+                        };
+                        ex.materialize_values();
+                        if s + 1 == stages && t == 0 && d == 0 {
+                            *losses_out.lock().unwrap() = std::mem::take(&mut losses);
                         }
-                    }
-                });
+                        if t == 0 && d == 0 {
+                            leaders.lock().unwrap()[s] = Some(StageLeader { wait_s, span_s });
+                        }
+                        if let Some((peak, update_elems_per_step)) = footprint {
+                            let (olap, total) = (ex.overlapped_job_ns, ex.total_job_ns);
+                            *saved_step.lock().unwrap() = ex.step_count();
+                            *rank0.lock().unwrap() = Some(RankZero {
+                                losses: Vec::new(),
+                                loop_wall,
+                                in_loop_rounds,
+                                probe_traffic: CommStatsSnapshot::default(),
+                                probe_wall: Duration::ZERO,
+                                overlap_frac: if total > 0 {
+                                    olap as f64 / total as f64
+                                } else {
+                                    0.0
+                                },
+                                opt_state_bytes: peak.opt_state_bytes,
+                                peak_grad_arena_bytes: peak.grad_bytes,
+                                peak_value_arena_bytes: peak.value_bytes,
+                                update_elems_per_step,
+                                final_params: Vec::new(),
+                            });
+                        }
+                        if saving {
+                            // gather sharded state to full coverage (a
+                            // collective within the slot group) before
+                            // chain 0 exports its shard entries
+                            ex.prepare_checkpoint();
+                        }
+                        if d == 0 {
+                            // chain 0 of every (stage, tp) slot exports
+                            // its snapshot (+ checkpoint entries when
+                            // saving); the cross-TP merge runs after
+                            // the scope joins
+                            let entries = if saving { Some(ex.export_entries()) } else { None };
+                            tp_parts.lock().unwrap()[s * tpn + t] = Some(TpPart {
+                                shards: tpinfo.shards,
+                                params: ex.graph.store.snapshot(),
+                                entries,
+                            });
+                        }
+                    });
+                }
             }
         }
     });
     let rz = rank0.lock().unwrap().take().expect("stage-0 chain-0 rank must report");
-    let mut leaders = leaders.lock().unwrap();
+    let leaders = leaders.lock().unwrap();
     let bubble_frac: Vec<f64> = leaders
         .iter()
         .map(|l| {
@@ -1065,15 +1178,51 @@ fn train_pipeline(
             }
         })
         .collect();
-    // stage order *is* pid order (Graph::into_stage keeps ascending
-    // parameter ids), so concatenating stage snapshots reassembles the
-    // full model's parameter list
-    let final_params: Vec<Tensor> = leaders
-        .iter_mut()
-        .flat_map(|l| std::mem::take(&mut l.as_mut().expect("leader").params))
-        .collect();
+    // Reassemble the full model: within each stage, merge the T TP
+    // slots' shards back to full tensors ([`TpShard::merge`], TP-rank
+    // order = slice order); across stages, stage order *is* pid order
+    // (`Graph::into_stage` keeps ascending parameter ids), so
+    // concatenation rebuilds the full parameter list — and, when
+    // saving, the full-named entry list `save_parts` writes as a
+    // layout-portable file.
+    let mut tp_parts = tp_parts.lock().unwrap();
+    let mut final_params: Vec<Tensor> = Vec::new();
+    let mut ckpt_entries: Vec<(String, Tensor, Vec<Tensor>)> = Vec::new();
+    for s in 0..stages {
+        let parts: Vec<TpPart> = (0..tpn)
+            .map(|t| tp_parts[s * tpn + t].take().expect("every (stage, tp) chain-0 exported"))
+            .collect();
+        let shards = &parts[0].shards;
+        for (i, kind) in shards.iter().enumerate() {
+            let views: Vec<&Tensor> = parts.iter().map(|p| &p.params[i]).collect();
+            final_params.push(kind.merge(&views));
+        }
+        if save_path.is_some() {
+            let n_entries = parts[0].entries.as_ref().expect("saving slot exported").len();
+            for i in 0..n_entries {
+                let first = &parts[0].entries.as_ref().expect("checked")[i];
+                let values: Vec<&Tensor> =
+                    parts.iter().map(|p| &p.entries.as_ref().expect("checked")[i].1).collect();
+                let state: Vec<Tensor> = (0..first.2.len())
+                    .map(|k| {
+                        let sv: Vec<&Tensor> = parts
+                            .iter()
+                            .map(|p| &p.entries.as_ref().expect("checked")[i].2[k])
+                            .collect();
+                        shards[i].merge(&sv)
+                    })
+                    .collect();
+                ckpt_entries.push((first.0.clone(), shards[i].merge(&values), state));
+            }
+        }
+    }
+    if let Some(path) = &save_path {
+        checkpoint::save_parts(*saved_step.lock().unwrap(), &ckpt_entries, path)
+            .expect("ddp: pipeline checkpoint save");
+    }
     let (act_bytes, act_msgs) = stats.p2p();
-    let denom = (stages * dp * cfg.steps.max(1)) as f64;
+    let (tp_bytes, tp_msgs) = stats.tp();
+    let denom = (stages * tpn * dp * cfg.steps.max(1)) as f64;
     DdpReport {
         world: dp,
         steps: cfg.steps,
@@ -1097,6 +1246,9 @@ fn train_pipeline(
         bubble_frac,
         act_bytes,
         act_msgs,
+        tensor_parallel: tpn,
+        tp_bytes,
+        tp_msgs,
     }
 }
 

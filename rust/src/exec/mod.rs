@@ -47,7 +47,7 @@ pub mod kernel;
 pub mod pool;
 
 use crate::comm::{tags, ActNet, CommCtx};
-use crate::graph::{Graph, ParamId, ScheduleKind, Src};
+use crate::graph::{Graph, ParamId, ScheduleKind, Src, TpInfo};
 use crate::ops::OpCtx;
 use crate::optim::{bucket, Hyper, Optimizer};
 use crate::tensor::dtype::{self, Dtype};
@@ -253,12 +253,58 @@ pub struct PipelineCtx {
     /// (`None` on the last stage) —
     /// [`crate::graph::StageInfo::send_node`].
     pub send_node: Option<usize>,
+    /// Tensor-parallel group width `T` of every stage (1 = no TP). With
+    /// TP the grid layout is `(s·T + t)·dp + d`: stage blocks of `T·dp`
+    /// ranks, TP blocks of `dp` ranks inside them, so a pipeline chain
+    /// is the fixed-`(t, d)` rank set and activation messages still
+    /// never share a mailbox edge across chains.
+    pub tp: usize,
+    /// This rank's TP index `t` within its stage.
+    pub tp_index: usize,
 }
 
 impl PipelineCtx {
     /// Global rank of `stage` within this rank's chain.
     fn rank(&self, stage: usize) -> usize {
-        stage * self.dp + self.dp_index
+        (stage * self.tp + self.tp_index) * self.dp + self.dp_index
+    }
+}
+
+/// One rank's tensor-parallel wiring: the TP group it folds partial
+/// outputs with, and the sync points of its sharded stage graph
+/// ([`crate::graph::Graph::tp_partition`]). Folds ride the same bounded
+/// [`ActNet`] mailbox as pipeline activations, on the dedicated
+/// [`tags::tp`] namespace, summed **in TP-rank order** (the
+/// `mean_of_ranked`-style fold-order contract, minus the 1/W scale).
+///
+/// [`tags::tp`]: crate::comm::tags::tp
+pub struct TpCtx {
+    /// The grid's shared activation/TP exchange network.
+    pub net: Arc<ActNet>,
+    /// Global ranks of this TP group, ascending TP-rank order.
+    pub group: Vec<usize>,
+    /// This rank's position in `group`.
+    pub index: usize,
+    /// Sync points + shard layout of this rank's stage graph.
+    pub info: TpInfo,
+    /// Monotonic fold-event counter — every group member executes the
+    /// identical schedule, so counters advance in lockstep and the
+    /// (tag, seq) mailbox keys pair up without any shared state.
+    seq: std::cell::Cell<u64>,
+}
+
+impl TpCtx {
+    /// Wrap the partition wiring for one rank of a TP group.
+    pub fn new(net: Arc<ActNet>, group: Vec<usize>, index: usize, info: TpInfo) -> Self {
+        assert_eq!(group.len(), info.degree, "TP group width must match the partition degree");
+        assert_eq!(info.index, index, "TP rank must match the partition index");
+        Self { net, group, index, info, seq: std::cell::Cell::new(0) }
+    }
+
+    fn next_seq(&self) -> u64 {
+        let s = self.seq.get();
+        self.seq.set(s + 1);
+        s
     }
 }
 
@@ -310,6 +356,11 @@ pub struct Executor {
     /// through the communicator at the points where they would update
     /// (see [`Executor::set_comm`]).
     comm: Option<CommCtx>,
+    /// Tensor-parallel participation: when set, forward folds each
+    /// row-parallel linear's partial output (then adds its deferred
+    /// bias) and backward folds each column-parallel linear's partial
+    /// `dX` across the TP group (see [`Executor::set_tp`]).
+    tp: Option<TpCtx>,
     /// Nanoseconds of pool-job *execution* (reduce + update, queue wait
     /// excluded) that ran while the backward node loop was still
     /// executing — the overlap the paper's Fig. 1d promises, measured.
@@ -375,6 +426,7 @@ impl Executor {
             last_loss: f32::NAN,
             lr_schedule: None,
             comm: None,
+            tp: None,
             overlapped_job_ns: 0,
             total_job_ns: 0,
             arena_peak: ArenaPeak::default(),
@@ -415,6 +467,17 @@ impl Executor {
             );
         }
         self.comm = Some(ctx);
+    }
+
+    /// Join a tensor-parallel group: every forward pass now folds the
+    /// partial outputs at the partition's sync points
+    /// ([`crate::graph::TpInfo::fwd_sync`]) and every backward folds the
+    /// column linears' partial `dX` ([`crate::graph::TpInfo::bwd_sync`]),
+    /// rank-ordered sums over the p2p mailbox. The fold runs for eval
+    /// forwards too — a sharded graph's activations are only meaningful
+    /// post-fold.
+    pub fn set_tp(&mut self, ctx: TpCtx) {
+        self.tp = Some(ctx);
     }
 
     /// Replace the installed per-bucket comm plan mid-run — the
@@ -847,6 +910,33 @@ impl Executor {
             let out = node.op.forward(&input_refs, &param_refs, &mut ctxs[i]);
             drop(guards);
             acts[i] = Some(out);
+            // TP forward sync: a row-parallel linear's output is a
+            // partial sum — fold it across the TP group (rank-ordered,
+            // exact f32 wire) before any consumer reads it, then add
+            // the deferred bias so the order is full-sum-then-bias
+            // (what the unsplit reference computes).
+            if let Some(tp) = &self.tp {
+                if let Some(&(_, bias)) = tp.info.fwd_sync.iter().find(|(nid, _)| *nid == i) {
+                    let a = acts[i].as_mut().expect("just set");
+                    let seq = tp.next_seq();
+                    tp.net.all_reduce_sum_ranked(
+                        tags::tp(2 * i),
+                        seq,
+                        &tp.group,
+                        tp.index,
+                        a.data_mut(),
+                    );
+                    if let Some(pid) = bias {
+                        let guard = self.graph.store.get(pid).data.read().unwrap();
+                        let b = guard.value.data();
+                        for row in a.data_mut().chunks_mut(b.len()) {
+                            for (v, bb) in row.iter_mut().zip(b.iter()) {
+                                *v += *bb;
+                            }
+                        }
+                    }
+                }
+            }
         }
         (acts, ctxs, opt_in_fwd)
     }
@@ -1315,8 +1405,27 @@ impl Executor {
                 .map(|p| self.graph.store.get(*p).data.read().unwrap())
                 .collect();
             let param_refs: Vec<&Tensor> = guards.iter().map(|g| &g.value).collect();
-            let og = node.op.backward(&gout, &input_refs, &param_refs, &ctxs[i]);
+            let mut og = node.op.backward(&gout, &input_refs, &param_refs, &ctxs[i]);
             drop(guards);
+
+            // TP backward sync: a column-parallel linear's dX only sums
+            // over this rank's column shard of W — fold the partials
+            // across the TP group before the gradient scatters upstream
+            // (dW/db stay local: they are exact on the shard).
+            if let Some(tp) = &self.tp {
+                if tp.info.bwd_sync.contains(&i) {
+                    if let Some(g) = og.inputs.get_mut(0).and_then(|x| x.as_mut()) {
+                        let seq = tp.next_seq();
+                        tp.net.all_reduce_sum_ranked(
+                            tags::tp(2 * i + 1),
+                            seq,
+                            &tp.group,
+                            tp.index,
+                            g.data_mut(),
+                        );
+                    }
+                }
+            }
 
             // scatter input grads (and capture the boundary external's)
             for (k, src) in self.graph.nodes[i].inputs.iter().enumerate() {
@@ -1893,6 +2002,8 @@ mod tests {
             dp_index: 0,
             recv_ext: None,
             send_node: None,
+            tp: 1,
+            tp_index: 0,
         }
     }
 
@@ -1990,6 +2101,8 @@ mod tests {
                             dp_index: 0,
                             recv_ext: info.recv_ext,
                             send_node: info.send_node,
+                            tp: 1,
+                            tp_index: 0,
                         };
                         for _ in 0..4 {
                             ex.pipeline_step(&micros, &pipe);

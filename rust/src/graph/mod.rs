@@ -894,6 +894,182 @@ impl Graph {
         (g, StageInfo { recv_ext, send_node })
     }
 
+    /// All valid pipeline cut points of this graph (see
+    /// [`Graph::cut_valid`]) — the feasible set both the FLOP-balanced
+    /// chooser and memsim's priced chooser optimize over.
+    pub fn valid_cuts(&self) -> Vec<usize> {
+        (0..self.nodes.len().saturating_sub(1)).filter(|&c| self.cut_valid(c)).collect()
+    }
+
+    /// The unique producer whose activation crosses a cut after node
+    /// `c`, or `None` if the cut is invalid / nothing crosses. The
+    /// crossing tensor's shape (× 4 bytes) is what a priced cut chooser
+    /// charges per boundary per micro-batch.
+    pub fn cut_crossing(&self, c: usize) -> Option<NodeId> {
+        let mut crossing: Option<NodeId> = None;
+        for node in &self.nodes[c + 1..] {
+            for src in &node.inputs {
+                if let Src::Node(j) = src {
+                    if *j <= c {
+                        match crossing {
+                            None => crossing = Some(*j),
+                            Some(k) if k == *j => {}
+                            Some(_) => return None,
+                        }
+                    }
+                }
+            }
+        }
+        crossing
+    }
+
+    /// Megatron-style tensor-parallel partition of this (stage) graph
+    /// for TP rank `tp_index` of `t`, consuming the graph. Returns the
+    /// sharded graph plus the sync-point wiring ([`TpInfo`]).
+    ///
+    /// The transform scans for *pairable* linears: a first `linear`
+    /// whose 2-D weight `[in, h]` (with `t | h`) feeds — through a chain
+    /// of single-consumer elementwise ops (`relu`/`relu6`/`sigmoid`/
+    /// `gelu`) — a second `linear` with weight `[h, out]`. The first
+    /// splits **column-parallel** (weight keeps every row, holds columns
+    /// `[i·h/t, (i+1)·h/t)`; its bias slices the same range), the chain
+    /// runs on the shard width, and the second splits **row-parallel**
+    /// (weight holds the matching row block). Each rank's row-linear
+    /// output is a *partial sum* of the full output; one rank-ordered
+    /// all-reduce over the [`crate::comm::tags::tp`] leg
+    /// ([`TpInfo::fwd_sync`]) folds the partials, and in backward one
+    /// all-reduce folds the column linear's partial `dX`
+    /// ([`TpInfo::bwd_sync`]). A biased row linear is swapped to the
+    /// deferred-bias op so the executor adds `b` *after* the fold
+    /// (full-sum-then-bias is the order the unsplit reference uses).
+    ///
+    /// Parameters outside pairs stay replicated: every TP rank computes
+    /// identical activations there, so gradients — and updates — match
+    /// without any communication. `pd.value` and any loaded `pd.state`
+    /// are sliced in place (load checkpoints *before* partitioning, the
+    /// same before-resharding contract as [`ParamStore::import_state`]);
+    /// grads are re-zeroed at the shard shape, so the fused
+    /// `update_slices` drain runs on 1/t of each split parameter.
+    pub fn tp_partition(
+        mut self,
+        t: usize,
+        tp_index: usize,
+        recv_ext: Option<usize>,
+    ) -> (Graph, TpInfo) {
+        assert!(t >= 1 && tp_index < t, "tp_partition: rank {tp_index} of {t}");
+        assert!(self.store.buckets.is_none(), "tp_partition: partition before bucketize()");
+        let n_params = self.store.len();
+        let mut info = TpInfo {
+            degree: t,
+            index: tp_index,
+            fwd_sync: Vec::new(),
+            bwd_sync: Vec::new(),
+            shards: vec![TpShard::Replicated; n_params],
+        };
+        if t == 1 {
+            return (self, info);
+        }
+
+        const CHAIN_OPS: [&str; 4] = ["relu", "relu6", "sigmoid", "gelu"];
+        let consumers = self.consumers();
+        let uses = self.param_uses();
+        let shape_of = |store: &ParamStore, pid: ParamId| -> Vec<usize> {
+            store.get(pid).data.read().unwrap().value.shape().to_vec()
+        };
+        let sole_use = |pid: ParamId, nid: NodeId| uses[pid] == [nid];
+
+        let mut pairs: Vec<(NodeId, NodeId)> = Vec::new(); // (col linear, row linear)
+        let mut i = 0;
+        'scan: while i + 1 < self.nodes.len() {
+            let col = i;
+            i += 1;
+            let cn = &self.nodes[col];
+            if cn.op.name() != "linear" || cn.params.is_empty() {
+                continue;
+            }
+            let w1 = shape_of(&self.store, cn.params[0]);
+            if w1.len() != 2 || w1[1] % t != 0 || w1[1] < t {
+                continue;
+            }
+            if !cn.params.iter().all(|&p| sole_use(p, col)) {
+                continue;
+            }
+            // follow the single-consumer elementwise chain
+            let mut cur = col;
+            loop {
+                if consumers[cur].len() != 1 {
+                    continue 'scan;
+                }
+                let next = consumers[cur][0];
+                let nx = &self.nodes[next];
+                if nx.inputs.len() != 1 || nx.inputs[0] != Src::Node(cur) {
+                    continue 'scan;
+                }
+                if nx.op.name() == "linear" {
+                    if nx.params.is_empty() || !nx.params.iter().all(|&p| sole_use(p, next)) {
+                        continue 'scan;
+                    }
+                    let w2 = shape_of(&self.store, nx.params[0]);
+                    if w2.len() != 2 || w2[0] != w1[1] {
+                        continue 'scan;
+                    }
+                    pairs.push((col, next));
+                    i = next + 1;
+                    continue 'scan;
+                }
+                if !CHAIN_OPS.contains(&nx.op.name()) || !nx.params.is_empty() {
+                    continue 'scan;
+                }
+                cur = next;
+            }
+        }
+
+        for (col, row) in pairs {
+            // column-parallel first linear: weight keeps rows, slices
+            // columns; bias slices the same column range
+            let w1 = self.nodes[col].params[0];
+            info.shards[w1] = TpShard::Cols { full: shape_of(&self.store, w1) };
+            if let Some(&b1) = self.nodes[col].params.get(1) {
+                info.shards[b1] = TpShard::Rows { full: shape_of(&self.store, b1) };
+            }
+            // row-parallel second linear: weight holds the row block;
+            // bias (if any) stays replicated and defers to the fold
+            let w2 = self.nodes[row].params[0];
+            info.shards[w2] = TpShard::Rows { full: shape_of(&self.store, w2) };
+            let row_bias = self.nodes[row].params.get(1).copied();
+            if row_bias.is_some() {
+                self.nodes[row].op = Box::new(crate::ops::dense::Linear::deferred_bias());
+            }
+            info.fwd_sync.push((row, row_bias));
+            // the column linear's dX is a partial sum too — fold it iff
+            // anything upstream consumes that gradient (an earlier node,
+            // or the pipeline boundary via the captured recv external)
+            let needs_dx = match self.nodes[col].inputs[0] {
+                Src::Node(_) => true,
+                Src::External(e) => Some(e) == recv_ext,
+            };
+            if needs_dx {
+                info.bwd_sync.push(col);
+            }
+        }
+
+        // slice the sharded params' value + loaded state, re-zero grads
+        for pid in 0..n_params {
+            let kind = info.shards[pid].clone();
+            if kind == TpShard::Replicated {
+                continue;
+            }
+            let cell = &self.store.params[pid];
+            let mut pd = cell.data.write().unwrap();
+            pd.value = kind.slice(&pd.value, t, tp_index);
+            pd.state = pd.state.iter().map(|s| kind.slice(s, t, tp_index)).collect();
+            pd.grad = Tensor::zeros(pd.value.shape());
+        }
+
+        self.name = format!("{}@tp{}/{}", self.name, tp_index, t);
+        (self, info)
+    }
+
     /// Shape-infer every node output from external shapes.
     pub fn infer_shapes(&self, ext_shapes: &[Vec<usize>]) -> Vec<Vec<usize>> {
         let mut shapes: Vec<Vec<usize>> = Vec::with_capacity(self.nodes.len());
@@ -927,6 +1103,110 @@ pub struct StageInfo {
     /// Stage-local node whose output crosses the outgoing boundary
     /// (`None` on the last stage).
     pub send_node: Option<NodeId>,
+}
+
+/// Sync-point wiring and shard layout of one TP rank's graph
+/// ([`Graph::tp_partition`]).
+#[derive(Debug, Clone, Default)]
+pub struct TpInfo {
+    /// TP group width `t` (1 = no tensor parallelism).
+    pub degree: usize,
+    /// This rank's position in the TP group.
+    pub index: usize,
+    /// Row-parallel linear nodes whose partial outputs fold in forward,
+    /// each with the deferred-bias param to add *after* the fold.
+    pub fwd_sync: Vec<(NodeId, Option<ParamId>)>,
+    /// Column-parallel linear nodes whose partial `dX` folds in
+    /// backward.
+    pub bwd_sync: Vec<NodeId>,
+    /// Per-param shard layout, indexed by this graph's [`ParamId`]s —
+    /// the merge key for TP-layout-portable checkpoints.
+    pub shards: Vec<TpShard>,
+}
+
+impl TpInfo {
+    /// True when this rank participates in at least one TP fold.
+    pub fn is_split(&self) -> bool {
+        !self.fwd_sync.is_empty()
+    }
+}
+
+/// How one parameter of a TP rank's graph relates to the full tensor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TpShard {
+    /// Full tensor on every TP rank (identical grads, no comm).
+    Replicated,
+    /// Column shard of a 2-D weight `[r, c]`: rank `i` of `t` holds
+    /// columns `[i·c/t, (i+1)·c/t)` of every row.
+    Cols {
+        /// The unsharded shape.
+        full: Vec<usize>,
+    },
+    /// Contiguous axis-0 chunk (row-split weight `[h, out]` or a
+    /// column-linear bias `[h]`): rank `i` of `t` holds rows
+    /// `[i·h/t, (i+1)·h/t)`.
+    Rows {
+        /// The unsharded shape.
+        full: Vec<usize>,
+    },
+}
+
+impl TpShard {
+    /// Rank `idx`-of-`t`'s shard of the full tensor.
+    pub fn slice(&self, full: &Tensor, t: usize, idx: usize) -> Tensor {
+        match self {
+            TpShard::Replicated => full.clone(),
+            TpShard::Cols { .. } => {
+                let (r, c) = (full.shape()[0], full.shape()[1]);
+                assert_eq!(c % t, 0, "TP column shard: {t} ∤ {c}");
+                let w = c / t;
+                let mut out = Vec::with_capacity(r * w);
+                for row in 0..r {
+                    out.extend_from_slice(&full.data()[row * c + idx * w..row * c + (idx + 1) * w]);
+                }
+                Tensor::from_vec(&[r, w], out)
+            }
+            TpShard::Rows { .. } => {
+                let h = full.shape()[0];
+                assert_eq!(h % t, 0, "TP row shard: {t} ∤ {h}");
+                let rest: usize = full.shape()[1..].iter().product();
+                let w = h / t;
+                let data = full.data()[idx * w * rest..(idx + 1) * w * rest].to_vec();
+                let mut shape = full.shape().to_vec();
+                shape[0] = w;
+                Tensor::from_vec(&shape, data)
+            }
+        }
+    }
+
+    /// Reassemble the full tensor from all `t` ranks' shards (in TP-rank
+    /// order) — the checkpoint-merge inverse of [`TpShard::slice`].
+    pub fn merge(&self, parts: &[&Tensor]) -> Tensor {
+        match self {
+            TpShard::Replicated => parts[0].clone(),
+            TpShard::Cols { full } => {
+                let (r, c) = (full[0], full[1]);
+                let w = c / parts.len();
+                let mut out = vec![0.0f32; r * c];
+                for (i, p) in parts.iter().enumerate() {
+                    assert_eq!(p.shape(), &[r, w], "TP column merge: shard shape mismatch");
+                    for row in 0..r {
+                        out[row * c + i * w..row * c + (i + 1) * w]
+                            .copy_from_slice(&p.data()[row * w..(row + 1) * w]);
+                    }
+                }
+                Tensor::from_vec(full, out)
+            }
+            TpShard::Rows { full } => {
+                let mut out = Vec::with_capacity(full.iter().product());
+                for p in parts {
+                    out.extend_from_slice(p.data());
+                }
+                assert_eq!(out.len(), full.iter().product::<usize>(), "TP row merge: size");
+                Tensor::from_vec(full, out)
+            }
+        }
+    }
 }
 
 /// The three execution schedules of the paper (Fig. 1 b/c/d).

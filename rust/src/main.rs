@@ -285,6 +285,28 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             busy.join(", "),
             bub.join(", ")
         );
+        // the comm-priced cut search is exhaustive over contiguous
+        // splits; only run it where the candidate count stays sane
+        let cut_combos = (0..pstages.saturating_sub(1)).try_fold(1u64, |acc, k| {
+            acc.checked_mul((net.layers.len() - 1 - k) as u64)
+                .map(|v| v / (k as u64 + 1))
+                .filter(|&v| v < 2_000_000)
+        });
+        if pstages > 1 && cut_combos.is_some() {
+            let priced = memsim::priced_pipeline_cuts(
+                &machine, &net, &opt, batch, kind, ddp, pstages, micro, dp,
+            );
+            let pr = memsim::simulate_pipeline_with_cuts(
+                &machine, &net, &opt, batch, kind, ddp, &priced, micro, dp,
+            );
+            println!(
+                "  comm-priced cuts after layers {:?}: step {:.2} ms \
+                 (flop-balanced {:.2} ms)",
+                priced,
+                pr.step_s * 1e3,
+                p.step_s * 1e3
+            );
+        }
     }
     // --world W > 1: the cluster-scaling prediction (memsim comm model)
     let world = args.usize_or("world", 1);
@@ -356,6 +378,20 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         // above so the comparison is apples to apples
         if auto {
             let units = memsim::comm_unit_elems(&net, cap);
+            // `--tensor-parallel T`: offer the planner per-layer TP
+            // degrees (powers of two up to T) priced jointly with the
+            // collective algo + chunking — the 3D plan table's tp column
+            let tpn = args.usize_or("tensor-parallel", 1).max(1);
+            let tp_cands: Vec<usize> = {
+                let mut v = vec![1usize];
+                let mut t = 2;
+                while t <= tpn {
+                    v.push(t);
+                    t *= 2;
+                }
+                v
+            };
+            let tp_acts = memsim::comm_unit_act_elems(&net, cap, batch);
             for kind in ScheduleKind::ALL {
                 let compute = memsim::simulate(&m, &net, &opt, batch, kind);
                 let bwd = if kind == ScheduleKind::BackwardFusion {
@@ -372,6 +408,8 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
                         workers: 0,
                         bucket_cap_bytes: cap,
                         dtype: dt,
+                        tp_degrees: if tpn > 1 { &tp_cands } else { &[] },
+                        tp_act_elems: &tp_acts,
                     },
                 );
                 let ddp = DdpSimConfig {
@@ -412,6 +450,29 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
                 );
                 if kind == ScheduleKind::BackwardFusion {
                     print!("{}", plan.table());
+                    if tpn > 1 {
+                        let fold_s: f64 = plan
+                            .units
+                            .iter()
+                            .zip(&tp_acts)
+                            .map(|(u, &a)| {
+                                2.0 * memsim::tp_collective_s(&m.interconnect, a, u.tp)
+                            })
+                            .sum();
+                        let tp_bytes: u64 = plan
+                            .units
+                            .iter()
+                            .zip(&tp_acts)
+                            .map(|(u, &a)| memsim::tp_act_bytes(&[a], u.tp, 1, world))
+                            .sum();
+                        println!(
+                            "  3D plan (TP candidates {tp_cands:?}): per-layer degrees in the \
+                             tp column; predicted fold {:.2} ms/step, tp wire {:.1} KiB/step \
+                             across {world} DP chains",
+                            fold_s * 1e3,
+                            tp_bytes as f64 / 1024.0
+                        );
+                    }
                 }
             }
             // the planner's bucket-cap search: sweep candidate caps
@@ -433,6 +494,8 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
                     workers: 0,
                     bucket_cap_bytes: cap,
                     dtype: dt,
+                    tp_degrees: &[],
+                    tp_act_elems: &[],
                 },
             );
             println!(
@@ -539,6 +602,10 @@ fn cmd_ddp(args: &Args) -> anyhow::Result<()> {
     // S × world). The local batch must divide evenly by M.
     let pstages = args.usize_or("pipeline-stages", 1).max(1);
     let micro = args.usize_or("micro-batches", 1).max(1) as u64;
+    // `--tensor-parallel T` = Megatron-style column/row splits of the
+    // model's dense pairs, one activation fold per direction on the tp
+    // leg; composes with DP × ZeRO × PP (total threads S × T × world)
+    let tpn = args.usize_or("tensor-parallel", 1).max(1);
     // `--calibrate [N]` = N warmup steps issue probe collectives, fit an
     // interconnect to the measured blocked time, and (on `--algo auto`)
     // re-plan against the fitted model + measured backward mid-run. A
@@ -562,7 +629,7 @@ fn cmd_ddp(args: &Args) -> anyhow::Result<()> {
     println!(
         "DDP: world={world} schedule={} algo={} topology={} steps={steps} storage={} \
          shard-stage={} overlap_threads={} chunk={:?} kernel={} dtype={} grad-elim={} \
-         pipeline={pstages}x{micro}",
+         pipeline={pstages}x{micro} tp={tpn}",
         schedule.label(),
         algo.label(),
         topo.label(),
@@ -587,35 +654,41 @@ fn cmd_ddp(args: &Args) -> anyhow::Result<()> {
     if let Some(note) = gate_probe.grad_elim_gate_note() {
         println!("note: {note}");
     }
+    let cfg = DdpConfig {
+        world,
+        schedule,
+        algo,
+        ranks_per_node: topo.ranks_per_node,
+        planner_interconnect: Some(planner_ic),
+        calibrate_steps: calibrate,
+        planner_backward_s: None,
+        steps,
+        bucket_cap_bytes: bucket_cap,
+        comm_chunk_bytes: chunk_cap,
+        shard_stage: stage,
+        overlap_threads: overlap,
+        kernel,
+        grad_elim,
+        dtype: dt,
+        pipeline_stages: pstages,
+        micro_batches: micro,
+        tensor_parallel: tpn,
+        load_from: None,
+        save_to: None,
+        local_batch_maker: Box::new(move |rank, step| {
+            let mut rng = XorShiftRng::new(((rank as u64) << 32) | step as u64);
+            data::image_batch(batch, 3, 16, 16, 10, &mut rng)
+        }),
+    };
+    // surface the grid's calibrate gate the trainer would apply silently
+    if let Some(note) = cfg.calibrate_gate_note() {
+        println!("note: {note}");
+    }
     let report = train_ddp(
         || models::mobilenet_v2_ish(3),
         || optim::by_name("adam").unwrap(),
         Hyper::default(),
-        DdpConfig {
-            world,
-            schedule,
-            algo,
-            ranks_per_node: topo.ranks_per_node,
-            planner_interconnect: Some(planner_ic),
-            calibrate_steps: calibrate,
-            planner_backward_s: None,
-            steps,
-            bucket_cap_bytes: bucket_cap,
-            comm_chunk_bytes: chunk_cap,
-            shard_stage: stage,
-            overlap_threads: overlap,
-            kernel,
-            grad_elim,
-            dtype: dt,
-            pipeline_stages: pstages,
-            micro_batches: micro,
-            load_from: None,
-            save_to: None,
-            local_batch_maker: Box::new(move |rank, step| {
-                let mut rng = XorShiftRng::new(((rank as u64) << 32) | step as u64);
-                data::image_batch(batch, 3, 16, 16, 10, &mut rng)
-            }),
-        },
+        cfg,
     );
     if let Some(fit) = &report.fitted {
         println!(
@@ -661,6 +734,15 @@ fn cmd_ddp(args: &Args) -> anyhow::Result<()> {
             bub.join(", "),
             report.act_bytes as f64 / 1024.0,
             report.act_msgs
+        );
+    }
+    if report.tensor_parallel > 1 {
+        println!(
+            "tensor-parallel: {} ranks per group | activation folds {:.1} KiB, {} msgs \
+             (exact f32 wire; closed form memsim::tp_act_bytes)",
+            report.tensor_parallel,
+            report.tp_bytes as f64 / 1024.0,
+            report.tp_msgs
         );
     }
     Ok(())

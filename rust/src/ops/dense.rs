@@ -8,11 +8,24 @@ use crate::tensor::Tensor;
 /// Params: [W] or [W, b].
 pub struct Linear {
     pub has_bias: bool,
+    /// Tensor-parallel row-split mode: the forward skips the `+ b`
+    /// even though the bias param exists (and `backward` still emits
+    /// `db`). The executor adds the bias *after* folding the TP ranks'
+    /// partial outputs, so the addition order is full-sum-then-bias —
+    /// `(p0 + b) + p1` and `(p0 + p1) + b` differ in f32, and only the
+    /// latter matches the unsplit reference bit-for-bit.
+    pub defer_bias: bool,
 }
 
 impl Linear {
     pub fn new(has_bias: bool) -> Self {
-        Self { has_bias }
+        Self { has_bias, defer_bias: false }
+    }
+
+    /// A biased linear whose forward defers the bias addition to the
+    /// TP fold point (see [`Linear::defer_bias`]).
+    pub fn deferred_bias() -> Self {
+        Self { has_bias: true, defer_bias: true }
     }
 }
 
@@ -38,7 +51,7 @@ impl Op for Linear {
         assert_eq!(w.shape()[0], in_dim);
         let mut y = vec![0.0f32; rows * out_dim];
         matmul(x.data(), w.data(), &mut y, rows, in_dim, out_dim);
-        if self.has_bias {
+        if self.has_bias && !self.defer_bias {
             let b = params[1].data();
             for r in 0..rows {
                 let row = &mut y[r * out_dim..(r + 1) * out_dim];
@@ -151,6 +164,21 @@ mod tests {
         let op = Linear::new(true);
         assert!(op.backward_reads_param(0));
         assert!(!op.backward_reads_param(1));
+    }
+
+    #[test]
+    fn deferred_bias_skips_forward_add_but_keeps_db() {
+        let x = Tensor::from_vec(&[1, 2], vec![1.0, 2.0]);
+        let w = Tensor::from_vec(&[2, 3], vec![1.0, 0.0, 1.0, 0.0, 1.0, 1.0]);
+        let b = Tensor::from_vec(&[3], vec![0.5, 0.5, 0.5]);
+        let op = Linear::deferred_bias();
+        let mut ctx = OpCtx::default();
+        let y = op.forward(&[&x], &[&w, &b], &mut ctx);
+        assert_eq!(y.data(), &[1.0, 2.0, 3.0], "deferred bias must not be added in forward");
+        let g = Tensor::from_vec(&[1, 3], vec![1.0, 2.0, 3.0]);
+        let grads = op.backward(&g, &[&x], &[&w, &b], &ctx);
+        // db = column sums of grad_out — identical to the eager-bias op
+        assert_eq!(grads.params[1].data(), &[1.0, 2.0, 3.0]);
     }
 
     #[test]

@@ -331,6 +331,8 @@ fn planned_mix_never_predicted_slower_than_any_global_algo_on_table2_machines() 
                         workers: 0,
                         bucket_cap_bytes: cap,
                         dtype: Dtype::F32,
+                        tp_degrees: &[],
+                        tp_act_elems: &[],
                     },
                 );
                 let auto = simulate_ddp_planned(
@@ -463,6 +465,8 @@ fn fit_is_deterministic_and_identical_samples_yield_identical_plans() {
                 workers: 2,
                 bucket_cap_bytes: Some(1 << 18),
                 dtype: Dtype::F32,
+                tp_degrees: &[],
+                tp_act_elems: &[],
             },
         )
     };
@@ -520,6 +524,8 @@ fn calibrated_plan_never_predicted_slower_on_fitted_machines() {
                         workers: 0,
                         bucket_cap_bytes: cap,
                         dtype: Dtype::F32,
+                        tp_degrees: &[],
+                        tp_act_elems: &[],
                     },
                 );
                 let auto = simulate_ddp_planned(

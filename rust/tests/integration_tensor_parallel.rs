@@ -1,0 +1,464 @@
+//! Tensor model-parallelism acceptance suite (tier-1): Megatron-style
+//! column/row splits over the p2p mailbox, composed with the full
+//! DP × ZeRO × PP grid.
+//!
+//! * **Bit-identity.** At every tested grid — T ∈ {2, 4} × schedule ×
+//!   ZeRO stage × {f32, bf16} × S ∈ {1, 2} — TP training is
+//!   bit-identical to the T = 1 run of the same model. The probe models
+//!   put the pair hidden width at exactly T, so each rank's shard is
+//!   one column wide and the rank-ordered fold reproduces the unsplit
+//!   matmul's ascending-k accumulation bit-for-bit (the fold-order
+//!   contract `ActNet::all_reduce_sum_ranked` pins).
+//! * **Exact TP wire accounting.** The `CommStats` tp leg records
+//!   exactly `memsim::tp_act_bytes` / `tp_act_msgs` per step — derived
+//!   in-test from the graph's own `tp_partition` sync points and shape
+//!   inference — and is never dtype-rescaled.
+//! * **Checkpoint layout portability.** A merged checkpoint saved by a
+//!   T = 2 run resumes at T ∈ {1, 2, 4}: T = 2 continues bit-identically
+//!   to the uninterrupted run, and the T = 1 / T = 4 resumes agree with
+//!   each other bitwise (width-1 folds and the unsplit matmul share one
+//!   accumulation order; width-2 shards legitimately group differently).
+//! * **Calibrate gate.** `--calibrate` on any grid (PP, micro-batched,
+//!   or TP) is skipped with a named note instead of interleaving probe
+//!   collectives with in-flight mailbox traffic, and the gated run is
+//!   bit-identical to the same run with no calibration requested.
+//!
+//! `OPTFUSE_TP` (the dedicated CI leg sets `2`) widens the grids with
+//! DP chains and the deeper composition legs.
+
+use optfuse::checkpoint;
+use optfuse::comm::ShardStage;
+use optfuse::ddp::{train_ddp, DdpConfig, DdpReport};
+use optfuse::exec::{ExecConfig, Executor};
+use optfuse::graph::{Graph, ScheduleKind, Src};
+use optfuse::memsim;
+use optfuse::ops::activation::Relu;
+use optfuse::ops::dense::Linear;
+use optfuse::ops::loss::MseLoss;
+use optfuse::optim::{Hyper, Optimizer, SgdMomentum};
+use optfuse::tensor::Tensor;
+use optfuse::tensor::dtype::Dtype;
+use optfuse::util::XorShiftRng;
+
+/// Widened grids on the dedicated CI leg (`OPTFUSE_TP=2`).
+fn wide() -> bool {
+    std::env::var("OPTFUSE_TP").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
+
+/// A stack of `pairs` column/row linear pairs with `hidden`-wide waists
+/// and an MSE head: exactly the shape `tp_partition` splits. Pair 0
+/// carries biases on both linears (exercising the column-bias shard and
+/// the deferred row bias); with `hidden == T` every rank's shard is one
+/// column wide, which is what makes the TP fold bitwise-exact against
+/// the unsplit reference. 4 batch rows so M ∈ {1, 2, 4} divide evenly.
+fn pair_graph(hidden: usize, pairs: usize, seed: u64) -> Graph {
+    let mut rng = XorShiftRng::new(seed);
+    let mut g = Graph::new("tp-pairs", 2);
+    let mut prev = Src::External(0);
+    for l in 0..pairs {
+        let biased = l == 0;
+        let w1 = g.param(&format!("pair{l}.col.w"), &[16, hidden], &mut rng);
+        let mut col_params = vec![w1];
+        if biased {
+            col_params.push(g.param(&format!("pair{l}.col.b"), &[hidden], &mut rng));
+        }
+        let col =
+            g.push(&format!("pair{l}.col"), Box::new(Linear::new(biased)), vec![prev], col_params);
+        let act = g.push(&format!("pair{l}.relu"), Box::new(Relu), vec![Src::Node(col)], vec![]);
+        let w2 = g.param(&format!("pair{l}.row.w"), &[hidden, 16], &mut rng);
+        let mut row_params = vec![w2];
+        if biased {
+            row_params.push(g.param(&format!("pair{l}.row.b"), &[16], &mut rng));
+        }
+        let row = g.push(
+            &format!("pair{l}.row"),
+            Box::new(Linear::new(biased)),
+            vec![Src::Node(act)],
+            row_params,
+        );
+        prev = Src::Node(row);
+    }
+    let loss = g.push("mse", Box::new(MseLoss), vec![prev, Src::External(1)], vec![]);
+    g.set_loss(loss);
+    g
+}
+
+fn pair_batch(rank: usize, step: usize) -> Vec<Tensor> {
+    let mut rng = XorShiftRng::new(4200 + ((rank as u64) << 20) + step as u64);
+    vec![Tensor::randn(&[4, 16], 1.0, &mut rng), Tensor::randn(&[4, 16], 1.0, &mut rng)]
+}
+
+fn sgd_momentum() -> Box<dyn Optimizer> {
+    Box::new(SgdMomentum)
+}
+
+fn sgd_hyper() -> Hyper {
+    Hyper { lr: 0.05, weight_decay: 0.0, ..Hyper::default() }
+}
+
+fn max_param_diff(a: &[Tensor], b: &[Tensor]) -> f32 {
+    assert_eq!(a.len(), b.len(), "param count must agree");
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| x.max_abs_diff(y))
+        .fold(0.0f32, f32::max)
+}
+
+/// One pinned-axes TP run on the pair model.
+#[allow(clippy::too_many_arguments)]
+fn run_pairs(
+    hidden: usize,
+    pairs: usize,
+    tp: usize,
+    stages: usize,
+    micro: u64,
+    world: usize,
+    schedule: ScheduleKind,
+    shard: ShardStage,
+    dtype: Dtype,
+    steps: usize,
+    load: Option<std::path::PathBuf>,
+    save: Option<std::path::PathBuf>,
+    step_offset: usize,
+) -> DdpReport {
+    let mut cfg = DdpConfig::new(
+        world,
+        schedule,
+        steps,
+        Box::new(move |rank, step| pair_batch(rank, step + step_offset)),
+    );
+    cfg.tensor_parallel = tp;
+    cfg.pipeline_stages = stages;
+    cfg.micro_batches = micro;
+    cfg.shard_stage = shard;
+    cfg.dtype = dtype;
+    cfg.grad_elim = false;
+    if shard.sharded() || dtype == Dtype::Bf16 {
+        cfg.bucket_cap_bytes = Some(1 << 10);
+    }
+    cfg.load_from = load;
+    cfg.save_to = save;
+    train_ddp(move || pair_graph(hidden, pairs, 31), sgd_momentum, sgd_hyper(), cfg)
+}
+
+fn assert_bit_identical(a: &DdpReport, b: &DdpReport, what: &str) {
+    assert_eq!(a.losses.len(), b.losses.len(), "{what}: step counts");
+    for (s, (x, y)) in a.losses.iter().zip(b.losses.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: loss step {s}: {x} vs {y}");
+    }
+    assert_eq!(max_param_diff(&a.final_params, &b.final_params), 0.0, "{what}: final params");
+}
+
+/// The tentpole's signature invariant: every TP degree with width-1
+/// shards trains bit-identically to the unsplit T = 1 run, across
+/// schedules × ZeRO stages × {f32, bf16} × pipeline stages.
+#[test]
+fn tp_matrix_is_bit_identical_to_unsplit() {
+    let steps = 3;
+    let pairs = 3;
+    for t in [2usize, 4] {
+        for schedule in [ScheduleKind::Baseline, ScheduleKind::BackwardFusion] {
+            for (shard, dtype, world) in [
+                (ShardStage::None, Dtype::F32, 1),
+                (ShardStage::Zero1, Dtype::F32, 2),
+                (ShardStage::None, Dtype::Bf16, 1),
+            ] {
+                let world = if wide() { world.max(2) } else { world };
+                for stages in [1usize, 2] {
+                    let micro = if stages > 1 { 2 } else { 1 };
+                    let reference = run_pairs(
+                        t, pairs, 1, stages, micro, world, schedule, shard, dtype, steps, None,
+                        None, 0,
+                    );
+                    assert_eq!(reference.tensor_parallel, 1);
+                    assert_eq!(reference.tp_bytes, 0, "T=1 folds nothing");
+                    let r = run_pairs(
+                        t, pairs, t, stages, micro, world, schedule, shard, dtype, steps, None,
+                        None, 0,
+                    );
+                    let what = format!(
+                        "T={t} S={stages} M={micro} dp={world} {schedule:?} {shard:?} {dtype:?}"
+                    );
+                    assert_eq!(r.tensor_parallel, t, "{what}");
+                    assert_bit_identical(&reference, &r, &what);
+                    assert!(r.tp_bytes > 0, "{what}: fold traffic recorded");
+                    assert!(r.tp_msgs > 0, "{what}");
+                }
+            }
+        }
+    }
+}
+
+/// Full 3D composition: a DP×PP×TP grid trains bit-identically to the
+/// plain single-axis reference, and both DP chains' TP groups fold
+/// independently (traffic scales with dp).
+#[test]
+fn dp_pp_tp_grid_composes_bitwise() {
+    let steps = 3;
+    let grids: &[(usize, u64, usize)] =
+        if wide() { &[(2, 2, 2), (1, 1, 2), (2, 4, 1)] } else { &[(2, 2, 2)] };
+    for &(stages, micro, dp) in grids {
+        let reference = run_pairs(
+            2,
+            4,
+            1,
+            stages,
+            micro,
+            dp,
+            ScheduleKind::BackwardFusion,
+            ShardStage::None,
+            Dtype::F32,
+            steps,
+            None,
+            None,
+            0,
+        );
+        let grid = run_pairs(
+            2,
+            4,
+            2,
+            stages,
+            micro,
+            dp,
+            ScheduleKind::BackwardFusion,
+            ShardStage::None,
+            Dtype::F32,
+            steps,
+            None,
+            None,
+            0,
+        );
+        let what = format!("S={stages} M={micro} dp={dp} T=2");
+        assert_bit_identical(&reference, &grid, &what);
+        if dp > 1 {
+            // the dp=1 twin of the same grid folds half the traffic
+            let solo = run_pairs(
+                2,
+                4,
+                2,
+                stages,
+                micro,
+                1,
+                ScheduleKind::BackwardFusion,
+                ShardStage::None,
+                Dtype::F32,
+                steps,
+                None,
+                None,
+                0,
+            );
+            assert_eq!(grid.tp_bytes, dp as u64 * solo.tp_bytes, "{what}: per-chain folds");
+            assert_eq!(grid.tp_msgs, dp as u64 * solo.tp_msgs, "{what}");
+        }
+    }
+}
+
+/// Exact TP wire accounting: the run's tp leg equals the memsim closed
+/// forms computed from the graph's own `tp_partition` sync points and
+/// shape inference — per fold, per micro-batch, per DP chain, per step,
+/// with zero slack — and never rescales with the arena dtype.
+#[test]
+fn tp_wire_accounting_is_exact() {
+    let steps = 3;
+    let pairs = 3;
+    let grids: &[(usize, u64, usize)] =
+        if wide() { &[(2, 1, 1), (2, 2, 2), (4, 4, 1), (4, 1, 2)] } else { &[(2, 2, 1), (4, 1, 1)] };
+    for &(t, micro, dp) in grids {
+        // derive the sync structure the executor will run from the same
+        // transform it applies (S = 1: whole graph, no recv external)
+        let (pg, info) = pair_graph(t, pairs, 31).tp_partition(t, 0, None);
+        assert!(info.is_split(), "the pair model must actually split");
+        assert_eq!(info.fwd_sync.len(), pairs, "one forward fold per row linear");
+        assert_eq!(
+            info.bwd_sync.len(),
+            pairs - 1,
+            "pair 0 reads the external input: its dX is never consumed"
+        );
+        let micro_ext: Vec<Vec<usize>> = pair_batch(0, 0)
+            .iter()
+            .map(|b| {
+                let mut sh = b.shape().to_vec();
+                sh[0] /= micro as usize;
+                sh
+            })
+            .collect();
+        let shapes = pg.infer_shapes(&micro_ext);
+        let mut sync_elems: Vec<usize> = Vec::new();
+        for &(row, _) in &info.fwd_sync {
+            sync_elems.push(shapes[row].iter().product());
+        }
+        for &col in &info.bwd_sync {
+            let e: usize = match pg.nodes[col].inputs[0] {
+                Src::Node(p) => shapes[p].iter().product(),
+                Src::External(e) => micro_ext[e].iter().product(),
+            };
+            sync_elems.push(e);
+        }
+        let want_bytes =
+            memsim::tp_act_bytes(&sync_elems, t, micro as usize, dp) * steps as u64;
+        let want_msgs =
+            memsim::tp_act_msgs(sync_elems.len(), t, micro as usize, dp) * steps as u64;
+        let r = run_pairs(
+            t,
+            pairs,
+            t,
+            1,
+            micro,
+            dp,
+            ScheduleKind::BackwardFusion,
+            ShardStage::None,
+            Dtype::F32,
+            steps,
+            None,
+            None,
+            0,
+        );
+        assert_eq!(
+            r.tp_bytes, want_bytes,
+            "T={t} M={micro} dp={dp}: tp bytes must match the closed form exactly"
+        );
+        assert_eq!(
+            r.tp_msgs, want_msgs,
+            "T={t} M={micro} dp={dp}: tp messages must match the closed form exactly"
+        );
+    }
+    // partials cross as exact f32 regardless of arena dtype
+    let f32_run = run_pairs(
+        2, pairs, 2, 1, 1, 1, ScheduleKind::BackwardFusion, ShardStage::None, Dtype::F32, steps,
+        None, None, 0,
+    );
+    let bf16_run = run_pairs(
+        2, pairs, 2, 1, 1, 1, ScheduleKind::BackwardFusion, ShardStage::None, Dtype::Bf16, steps,
+        None, None, 0,
+    );
+    assert!(f32_run.tp_bytes > 0);
+    assert_eq!(f32_run.tp_bytes, bf16_run.tp_bytes, "tp leg is never dtype-rescaled");
+    assert_eq!(f32_run.tp_msgs, bf16_run.tp_msgs);
+}
+
+/// Checkpoint portability across TP layouts: a merged file saved by a
+/// T = 2 run (hidden 4 → width-2 shards) resumes at T ∈ {1, 2, 4}.
+/// T = 2 continues the uninterrupted run bit-for-bit; the T = 1 and
+/// T = 4 resumes agree with each other bitwise (one-column folds share
+/// the unsplit matmul's accumulation order), while T = 2's width-2
+/// grouping is its own — equally valid — bracketing.
+#[test]
+fn tp_checkpoints_are_layout_portable() {
+    let dir = std::env::temp_dir().join("optfuse_tp_ckpt_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("t2.ckpt");
+    let sched = ScheduleKind::BackwardFusion;
+    let (hidden, pairs) = (4, 3);
+
+    // uninterrupted reference: 4 steps at T = 2
+    let full = run_pairs(
+        hidden, pairs, 2, 1, 1, 1, sched, ShardStage::None, Dtype::F32, 4, None, None, 0,
+    );
+    // first half, saving the merged checkpoint at step 2
+    let first = run_pairs(
+        hidden,
+        pairs,
+        2,
+        1,
+        1,
+        1,
+        sched,
+        ShardStage::None,
+        Dtype::F32,
+        2,
+        None,
+        Some(path.clone()),
+        0,
+    );
+    assert_eq!(&full.losses[..2], first.losses.as_slice());
+
+    let resume = |t: usize| {
+        run_pairs(
+            hidden,
+            pairs,
+            t,
+            1,
+            1,
+            1,
+            sched,
+            ShardStage::None,
+            Dtype::F32,
+            2,
+            Some(path.clone()),
+            None,
+            2,
+        )
+    };
+    let back_t2 = resume(2);
+    assert_eq!(
+        &full.losses[2..],
+        back_t2.losses.as_slice(),
+        "resume at T=2 must continue bit-identically"
+    );
+    assert_eq!(
+        max_param_diff(&full.final_params, &back_t2.final_params),
+        0.0,
+        "resume at T=2: final params bit-identical"
+    );
+    let back_t1 = resume(1);
+    let back_t4 = resume(4);
+    for (s, (a, b)) in back_t1.losses.iter().zip(back_t4.losses.iter()).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "step {s}: T=1 and T=4 resumes share one accumulation order: {a} vs {b}"
+        );
+    }
+    assert_eq!(
+        max_param_diff(&back_t1.final_params, &back_t4.final_params),
+        0.0,
+        "T=1 and T=4 resumes: final params bit-identical"
+    );
+
+    // the merged file holds full tensors under the original parameter
+    // names: the strict single-process loader accepts it as-is
+    let mut single = Executor::new(
+        pair_graph(hidden, pairs, 31),
+        sgd_momentum(),
+        sgd_hyper(),
+        ExecConfig { schedule: ScheduleKind::Baseline, ..Default::default() },
+    )
+    .unwrap();
+    let step = checkpoint::load(&mut single, &path).expect("merged file loads strictly");
+    assert_eq!(step, 2);
+}
+
+/// Satellite: `--calibrate` on a grid (PP / micro-batched / TP) is
+/// gated with a named explanation instead of interleaving probe
+/// collectives with mailbox traffic — the note names the probe count
+/// and the reason, no fit is reported, and the gated run is
+/// bit-identical to the same run with no calibration requested.
+#[test]
+fn calibrate_gates_on_grids_with_named_note() {
+    let mk = |calibrate: usize, tp: usize, stages: usize| {
+        let mut cfg = DdpConfig::new(2, ScheduleKind::BackwardFusion, 3, Box::new(pair_batch));
+        cfg.tensor_parallel = tp;
+        cfg.pipeline_stages = stages;
+        cfg.micro_batches = if stages > 1 { 2 } else { 1 };
+        cfg.calibrate_steps = calibrate;
+        cfg
+    };
+    // the gate note fires for every grid axis, never for flat DP
+    for (tp, stages) in [(2, 1), (1, 2), (2, 2)] {
+        let note = mk(2, tp, stages)
+            .calibrate_gate_note()
+            .unwrap_or_else(|| panic!("tp={tp} S={stages}: grid calibration must be gated"));
+        assert!(note.contains("calibrate"), "note names the gated knob: {note}");
+        assert!(note.contains("2 probe steps"), "note names the probe count: {note}");
+    }
+    assert!(mk(0, 2, 2).calibrate_gate_note().is_none(), "nothing requested, nothing gated");
+    assert!(mk(2, 1, 1).calibrate_gate_note().is_none(), "flat DP calibration stays live");
+
+    let run = |calibrate: usize| {
+        train_ddp(|| pair_graph(2, 3, 31), sgd_momentum, sgd_hyper(), mk(calibrate, 2, 1))
+    };
+    let plain = run(0);
+    let gated = run(2);
+    assert!(gated.fitted.is_none(), "a gated run reports no fit");
+    assert_bit_identical(&plain, &gated, "calibrate gate leaves training untouched");
+}
